@@ -1,0 +1,143 @@
+//! End-to-end cluster deployment — the paper's §7.3 "Cluster Deployment"
+//! (Table 2), and the repo's **end-to-end validation driver**: 110 VMs
+//! (64 producers running the six paper workloads under harvesters, 46
+//! consumers running YCSB at 10/30/50% remote), the broker predicting
+//! availability with the AOT PJRT artifacts when built, real AES/SHA on
+//! every remote op, and the full lease lifecycle.
+//!
+//! Run: `cargo run --release --example cluster_deploy [-- --quick]`
+//! Results are recorded in EXPERIMENTS.md §Table 2.
+
+use memtrade::core::SimTime;
+use memtrade::metrics::{ms, pct, Table};
+use memtrade::sim::cluster::{ClusterSim, ClusterSimConfig, ConsumerMode};
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let (n_producers, n_consumers, minutes) = if quick { (16, 12, 4) } else { (64, 46, 20) };
+    println!(
+        "== Memtrade cluster deployment: {n_producers} producers + {n_consumers} consumers, {minutes} simulated minutes =="
+    );
+
+    let mut table = Table::new(vec![
+        "consumers",
+        "remote %",
+        "avg w/o Memtrade",
+        "avg w/ Memtrade",
+        "improvement",
+        "p99 w/o",
+        "p99 w/",
+    ]);
+
+    let mut producer_table: Option<Table> = None;
+
+    for remote in [0.10, 0.30, 0.50] {
+        let run = |mode: ConsumerMode| -> ClusterSim {
+            let cfg = ClusterSimConfig {
+                n_producers,
+                n_consumers,
+                remote_fraction: remote,
+                mode,
+                n_keys: if quick { 4_000 } else { 20_000 },
+                value_size: 1024,
+                ops_per_epoch: if quick { 80 } else { 200 },
+                page_bytes: if quick { 32 << 20 } else { 8 << 20 },
+                seed: 99,
+                harvest: true,
+                use_pjrt: true,
+            };
+            let mut sim = ClusterSim::new(cfg);
+            sim.bootstrap();
+            sim.run(SimTime::from_mins(minutes));
+            sim
+        };
+        let with = run(ConsumerMode::Secure);
+        let without = run(ConsumerMode::NoMemtrade);
+        table.row(vec![
+            format!("{n_consumers} x YCSB/Redis"),
+            pct(remote),
+            ms(without.consumer_mean_latency()),
+            ms(with.consumer_mean_latency()),
+            format!(
+                "{:.1}x",
+                without.consumer_mean_latency() / with.consumer_mean_latency().max(1.0)
+            ),
+            ms(without.consumer_p99_latency()),
+            ms(with.consumer_p99_latency()),
+        ]);
+
+        // Producer-side impact, measured once (harvester always on).
+        if producer_table.is_none() {
+            let mut pt = Table::new(vec!["producer app", "baseline", "under harvest", "impact"]);
+            let mut by_kind: std::collections::BTreeMap<&str, (f64, f64, u32)> =
+                Default::default();
+            for p in &with.producers {
+                let entry = by_kind
+                    .entry(p.app.model.kind.name())
+                    .or_insert((p.app.model.base_latency_us, 0.0, 0));
+                entry.2 += 1;
+            }
+            // Re-measure steady-state producer latency from the sim run.
+            for p in &with.producers {
+                let kind = p.app.model.kind.name();
+                let e = by_kind.get_mut(kind).unwrap();
+                // The app's last-epoch mean comes from re-running an epoch.
+                e.1 += p.app.model.base_latency_us; // placeholder; refined below
+            }
+            for (kind, (base, _sum, _n)) in &by_kind {
+                // Measure impact precisely: one dedicated producer run.
+                use memtrade::core::config::HarvesterConfig;
+                use memtrade::core::ProducerId;
+                use memtrade::mem::SwapDevice;
+                use memtrade::producer::Producer;
+                use memtrade::workload::apps::{AppKind, AppModel, AppRunner};
+                let k = AppKind::ALL
+                    .iter()
+                    .find(|k| k.name() == *kind)
+                    .copied()
+                    .unwrap();
+                let app = AppRunner::new(
+                    AppModel::preset(k),
+                    if quick { 32 << 20 } else { 8 << 20 },
+                    SwapDevice::Ssd,
+                    Some(SimTime::from_mins(5)),
+                    3,
+                );
+                let mut p =
+                    Producer::new(ProducerId(1), app, HarvesterConfig::default(), 64 << 20);
+                let epoch = SimTime::from_secs(5);
+                let epochs: u64 = if quick { 240 } else { 720 };
+                let mut sum = 0.0;
+                let mut n = 0u64;
+                for e in 1..=epochs {
+                    let lat = p.tick(SimTime::from_micros(e * epoch.as_micros()), epoch);
+                    if e > epochs / 2 {
+                        sum += lat;
+                        n += 1;
+                    }
+                }
+                let under = sum / n as f64;
+                pt.row(vec![
+                    kind.to_string(),
+                    ms(*base),
+                    ms(under),
+                    pct((under / base - 1.0).max(0.0)),
+                ]);
+            }
+            producer_table = Some(pt);
+        }
+
+        println!(
+            "  [{}% remote] leased {:.1} GB across producers; predictor backend: {}",
+            (remote * 100.0) as u32,
+            with.leased_bytes() as f64 / (1u64 << 30) as f64,
+            if with.broker.predictor.is_pjrt() { "PJRT" } else { "fallback" },
+        );
+    }
+
+    println!("\nTable 2a — consumer latencies (paper: 1.6-2.8x improvement):");
+    table.print();
+    println!("\nTable 2b — producer impact (paper: 0.0-2.1% degradation):");
+    producer_table.unwrap().print();
+    println!("\ncluster_deploy OK");
+}

@@ -1,0 +1,81 @@
+//! Market simulation example — paper §7.4 (Fig 12 & Fig 13): 10,000
+//! consumers with MemCachier-style MRCs trade against trace-driven
+//! supply under the three pricing strategies, with the price search
+//! evaluated through the AOT demand artifact when built.
+//!
+//! Run: `cargo run --release --example market_sim [-- --quick]`
+
+use memtrade::broker::pricing::PricingStrategy;
+use memtrade::core::Money;
+use memtrade::metrics::{pct, Table};
+use memtrade::sim::market::{MarketSim, MarketSimConfig};
+use memtrade::workload::cluster_trace::{ClusterTrace, MachineClass};
+use memtrade::workload::memcachier::MrcLibrary;
+use memtrade::workload::spot::SpotPriceSeries;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let n = if quick { 2_000 } else { 10_000 };
+    let steps = if quick { 144 } else { 576 };
+    println!("== Memtrade market: {n} consumers, {steps} five-minute steps ==\n");
+
+    let spot = SpotPriceSeries::r3_large(steps, 43);
+    // Supply from Google-trace idle memory, 5 GB per unit (§7.4).
+    let trace = ClusterTrace::generate(MachineClass::Google, 200, steps, 288, 45);
+    let supply: Vec<f64> = (0..steps)
+        .map(|t| trace.machines.iter().map(|m| (1.0 - m.mem[t]).max(0.0)).sum::<f64>() * 5.0)
+        .collect();
+
+    let lib = MrcLibrary::paper_population(7);
+    let mut table = Table::new(vec![
+        "strategy",
+        "mean price ($/slab·h)",
+        "total revenue ($)",
+        "mean utilization",
+        "rel. hit gain",
+        "consumer saving vs spot",
+    ]);
+    for (name, strategy) in [
+        ("fixed (1/4 spot)", PricingStrategy::FixedFraction),
+        ("max volume", PricingStrategy::MaxVolume),
+        ("max revenue", PricingStrategy::MaxRevenue),
+    ] {
+        let cfg = MarketSimConfig {
+            n_consumers: n,
+            strategy,
+            seed: 23,
+            max_slabs: 64,
+            eviction_probability: 0.0,
+        };
+        let mut sim = MarketSim::new(cfg, &lib, Money::from_dollars(0.00001));
+        let mut revenue = 0.0;
+        let mut price_sum = 0.0;
+        let mut util_sum = 0.0;
+        let mut hit_sum = 0.0;
+        let mut save_sum = 0.0;
+        for t in 0..steps {
+            let s = sim.step(supply[t], &spot, t);
+            revenue += s.revenue;
+            price_sum += s.price_per_slab_hour;
+            util_sum += s.utilization;
+            hit_sum += s.rel_hit_improvement;
+            save_sum += s.cost_saving_vs_spot;
+        }
+        table.row(vec![
+            name.to_string(),
+            format!("{:.7}", price_sum / steps as f64),
+            format!("{revenue:.2}"),
+            pct(util_sum / steps as f64),
+            pct(hit_sum / steps as f64),
+            pct(save_sum / steps as f64),
+        ]);
+        println!(
+            "  {name}: demand engine epochs={} (PJRT evaluated when artifacts present)",
+            sim.pricing.epochs
+        );
+    }
+    println!();
+    table.print();
+    println!("\n(paper §7.4: >16% relative hit-ratio gain; consumer cost ~82% below spot;\n cluster utilization raised toward ~98% under local-search pricing)\n");
+    println!("market_sim OK");
+}

@@ -1,0 +1,216 @@
+//! Quickstart: the whole Memtrade flow in one process, over a real TCP
+//! producer store.
+//!
+//! 1. A producer VM (simulated guest app + harvester) harvests idle
+//!    memory and exposes a producer store on localhost.
+//! 2. A broker (with the AOT forecast artifact, if built) predicts the
+//!    producer's availability and grants a lease.
+//! 3. A consumer connects with the secure KV client (real AES-128-CBC +
+//!    SHA-256) and serves YCSB traffic against the leased memory.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use memtrade::broker::placement::ConsumerRequest;
+use memtrade::broker::predictor::AvailabilityPredictor;
+use memtrade::broker::pricing::{PricingEngine, PricingStrategy};
+use memtrade::broker::Broker;
+use memtrade::consumer::client::SecureKv;
+use memtrade::core::config::{BrokerConfig, HarvesterConfig};
+use memtrade::core::{ConsumerId, Money, ProducerId, SimTime, GIB};
+use memtrade::mem::SwapDevice;
+use memtrade::net::tcp::{KvClient, ProducerStoreServer};
+use memtrade::net::wire::{Request, Response};
+use memtrade::producer::Producer;
+use memtrade::util::rng::Rng;
+use memtrade::util::stats::LatencyRecorder;
+use memtrade::workload::apps::{AppKind, AppModel, AppRunner};
+use memtrade::workload::ycsb::{Op, YcsbWorkload};
+
+fn main() {
+    println!("== Memtrade quickstart ==\n");
+
+    // ---- 1. Producer: harvest idle memory from a Redis-like guest.
+    let app = AppRunner::new(
+        AppModel::preset(AppKind::Redis),
+        4 << 20,
+        SwapDevice::Ssd,
+        Some(SimTime::from_mins(5)),
+        7,
+    );
+    let mut producer =
+        Producer::new(ProducerId(1), app, HarvesterConfig::default(), 64 << 20);
+    println!("producer: Redis guest on an 8 GB VM; harvesting for 30 simulated minutes...");
+    let epoch = SimTime::from_secs(5);
+    for e in 1..=360u64 {
+        producer.tick(SimTime::from_micros(e * epoch.as_micros()), epoch);
+    }
+    let shape = producer.app.memory.shape();
+    println!(
+        "  harvestable: {:.2} GB (RSS {:.2} GB, Silo {:.2} GB, swapped {:.2} GB)\n",
+        shape.harvestable as f64 / GIB as f64,
+        shape.rss as f64 / GIB as f64,
+        shape.silo as f64 / GIB as f64,
+        shape.swapped as f64 / GIB as f64,
+    );
+
+    // ---- 2. Broker: register, predict availability, grant a lease.
+    let predictor = AvailabilityPredictor::auto();
+    println!(
+        "broker: availability predictor backend = {}",
+        if predictor.is_pjrt() { "PJRT (AOT artifacts)" } else { "pure-Rust fallback" }
+    );
+    let pricing = PricingEngine::new(
+        PricingStrategy::FixedFraction,
+        Money::from_dollars(0.00001),
+        0.00002,
+    );
+    let mut broker = Broker::new(BrokerConfig::default(), predictor, pricing);
+    broker.registry.register_producer(ProducerId(1), 8.0);
+    let rss_gb = shape.rss as f32 / GIB as f32;
+    for t in 0..288u64 {
+        broker
+            .registry
+            .report_usage(ProducerId(1), SimTime::from_secs(t * 300), rss_gb);
+    }
+    broker.registry.update_producer_resources(
+        ProducerId(1),
+        producer.manager.free_slabs(),
+        0.9,
+        0.9,
+    );
+    broker.predictor.refresh(&mut broker.registry, SimTime::from_hours(24));
+    broker.pricing.adjust(&broker.registry, Money::from_dollars(0.0026), 64 << 20);
+    broker.registry.register_consumer(ConsumerId(100));
+
+    let request = ConsumerRequest {
+        consumer: ConsumerId(100),
+        slabs: 16, // 1 GB
+        min_slabs: 4,
+        lease: SimTime::from_hours(1),
+        max_price_per_slab_hour: None,
+        latency_us_to: Default::default(),
+        weights: None,
+    };
+    let leases = broker.request_memory(SimTime::from_hours(24), request);
+    assert!(!leases.is_empty(), "broker found no capacity");
+    let lease = leases[0].clone();
+    println!(
+        "  lease granted: {} slabs ({} MB) at {}/slab·h (total {})\n",
+        lease.slabs,
+        lease.bytes() >> 20,
+        lease.price_per_slab_hour,
+        lease.total_cost(),
+    );
+
+    // ---- 3. Producer store over real TCP + secure consumer client.
+    let server = ProducerStoreServer::start(
+        "127.0.0.1:0",
+        lease.bytes() as usize,
+        Some(125_000_000),
+        3,
+    )
+    .expect("bind producer store");
+    println!("producer store: listening on {}", server.addr());
+
+    let mut tcp = KvClient::connect(server.addr()).expect("connect");
+    let mut transport = |_p: u32, req: Request| -> Response {
+        tcp.call(&req).unwrap_or(Response::Error("io".into()))
+    };
+    let mut secure = SecureKv::new(Some([42u8; 16]), true, 1, 9);
+
+    let workload = YcsbWorkload::paper_default(20_000, 1024);
+    let mut rng = Rng::new(11);
+    let mut rec = LatencyRecorder::new();
+    let n_ops = 20_000u64;
+    let started = std::time::Instant::now();
+    for _ in 0..n_ops {
+        let op = workload.next_op(&mut rng);
+        let key = YcsbWorkload::key_bytes(op.key());
+        let t0 = std::time::Instant::now();
+        match op {
+            Op::Read { .. } => {
+                if secure.get(&mut transport, &key).is_none() {
+                    let value = vec![0xAB; 1024];
+                    let _ = secure.put(&mut transport, &key, &value);
+                }
+            }
+            Op::Update { .. } => {
+                let value = vec![0xCD; 1024];
+                let _ = secure.put(&mut transport, &key, &value);
+            }
+        }
+        rec.record(t0.elapsed().as_micros() as f64);
+    }
+    let dt = started.elapsed().as_secs_f64();
+    println!(
+        "consumer: {} secure YCSB ops in {:.2}s ({:.0} ops/s)",
+        n_ops,
+        dt,
+        n_ops as f64 / dt
+    );
+    println!(
+        "  latency avg {:.1}µs p50 {:.1}µs p99 {:.1}µs | remote hit ratio {:.3}",
+        rec.mean(),
+        rec.p50(),
+        rec.p99(),
+        secure.hit_ratio()
+    );
+    println!(
+        "  integrity failures: {} | local metadata: {} KB",
+        secure.stats.integrity_failures,
+        secure.metadata_bytes() / 1024
+    );
+    let stats = server.stats();
+    println!(
+        "producer store: {} puts, {} hits, {} misses, {} evictions",
+        stats.puts, stats.hits, stats.misses, stats.evictions
+    );
+    server.stop();
+
+    // ---- 4. Purchasing strategy (§6.2): profile the workload's MRC with
+    // SHARDS sampling and size the next lease against the market price.
+    println!("\npurchasing strategy (§6.2):");
+    let mut profiler = memtrade::consumer::mrc::MrcProfiler::new(0.2, 500, 64);
+    let mut rng2 = Rng::new(77);
+    for _ in 0..200_000 {
+        let op = workload.next_op(&mut rng2);
+        profiler.record(&YcsbWorkload::key_bytes(op.key()));
+    }
+    let mrc_points = profiler.mrc();
+    // Convert the key-granular MRC into the byte-granular curve the
+    // purchase planner consumes (~1.1 KB/KV incl. overheads).
+    let bytes_per_key = 1024 + 80;
+    let mrc = memtrade::workload::memcachier::Mrc {
+        app_id: 0,
+        miss_ratio: mrc_points.clone(),
+        granularity_bytes: 500 * bytes_per_key,
+        req_rate: 20_000.0,
+    };
+    let hit_value = memtrade::consumer::purchase::price_per_hit_hour(
+        Money::from_dollars(0.096), // T2.xLarge-ish VM cost
+        15_000.0,
+    );
+    let plan = memtrade::consumer::purchase::plan(
+        &mrc,
+        8 << 20, // current local cache
+        64 << 20,
+        64,
+        hit_value,
+        broker.current_price(),
+        0.05, // assume 5% revocation risk
+    );
+    println!(
+        "  SHARDS profile: {:.1}% of accesses sampled, mr(0)={:.2}, mr(16MB)={:.2}",
+        profiler.sampled_fraction() * 100.0,
+        mrc_points[0],
+        mrc.at_bytes(16 << 20),
+    );
+    println!(
+        "  plan at {}/slab·h: lease {} slabs (+{:.0} hits/s, surplus ${:.6}/h)",
+        broker.current_price(),
+        plan.slabs,
+        plan.extra_hits_per_sec,
+        plan.surplus_per_hour,
+    );
+    println!("\nquickstart OK");
+}

@@ -1,0 +1,87 @@
+"""AOT export: lower the L2 graphs to HLO *text* for the Rust runtime.
+
+HLO text (not ``.serialize()``) is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the published ``xla`` 0.1.6 crate) rejects; the text parser
+reassigns ids and round-trips cleanly.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+Emits:  forecast.hlo.txt, demand.hlo.txt, and a manifest with the
+        compiled-in shapes the Rust runtime must honor.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export(out_dir: str) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+
+    lowered_f = jax.jit(model.forecast_model).lower(*model.forecast_example_args())
+    path_f = os.path.join(out_dir, "forecast.hlo.txt")
+    with open(path_f, "w") as f:
+        f.write(to_hlo_text(lowered_f))
+    print(f"wrote {path_f}")
+
+    lowered_d = jax.jit(model.demand_model).lower(*model.demand_example_args())
+    path_d = os.path.join(out_dir, "demand.hlo.txt")
+    with open(path_d, "w") as f:
+        f.write(to_hlo_text(lowered_d))
+    print(f"wrote {path_d}")
+
+    manifest = {
+        "forecast": {
+            "batch": model.FORECAST_BATCH,
+            "window": model.FORECAST_WINDOW,
+            "order": model.AR_ORDER,
+            "horizon": model.HORIZON,
+            "safety_z": model.SAFETY_Z,
+            "inputs": [["usage", [model.FORECAST_BATCH, model.FORECAST_WINDOW]],
+                       ["capacity", [model.FORECAST_BATCH]]],
+            "outputs": ["pred[B,H]", "safe[B,H]", "sigma[B]", "used_d[B]"],
+        },
+        "demand": {
+            "batch": model.DEMAND_BATCH,
+            "sizes": model.DEMAND_SIZES,
+            "n_prices": model.N_PRICES,
+            "inputs": [["gain", [model.DEMAND_BATCH, model.DEMAND_SIZES]],
+                       ["hit_value", [model.DEMAND_BATCH]],
+                       ["prices", [model.N_PRICES]]],
+            "outputs": ["demand[B,K]", "volume[K]", "revenue[K]"],
+        },
+    }
+    path_m = os.path.join(out_dir, "manifest.json")
+    with open(path_m, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {path_m}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    # kept for Makefile compatibility with single-file invocations
+    ap.add_argument("--out", default=None, help=argparse.SUPPRESS)
+    args = ap.parse_args()
+    out_dir = os.path.dirname(args.out) if args.out else args.out_dir
+    export(out_dir or ".")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""L1 Pallas kernel: batched market-demand scan (paper §5.3, §6.2).
+
+For the broker's price local-search, evaluate — for every consumer and every
+candidate price — the surplus-maximizing number of extra remote-memory slabs
+to lease.  Consumer i with expected extra-hit curve ``gain[i, s]`` (hits/sec
+gained by leasing s slabs, s = 0..S-1) and per-hit value ``hit_value[i]``
+has surplus
+
+    surplus(i, s, k) = hit_value[i] * gain[i, s] - price[k] * s
+
+and demands ``argmax_s surplus`` (0 if the max surplus is <= 0: consumers
+only lease when remote memory is worth more than it costs — the paper's
+consumer-surplus rule).
+
+The scan over s is a dense vectorized max/argmax over a `[TILE_B, S]` VMEM
+block — no data-dependent shapes, so it lowers to plain HLO under
+``interpret=True``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _demand_kernel(gain_ref, value_ref, prices_ref, demand_ref, *, n_prices: int):
+    gain = gain_ref[...].astype(jnp.float32)          # [TB, S]
+    value = value_ref[...].astype(jnp.float32)        # [TB, 1]
+    prices = prices_ref[...].astype(jnp.float32)      # [1, K]
+    tile_b, s = gain.shape
+
+    slabs = jnp.arange(s, dtype=jnp.float32)[None, :]  # [1, S]
+    benefit = value * gain                             # [TB, S]
+    outs = []
+    for k in range(n_prices):
+        surplus = benefit - prices[0, k] * slabs       # [TB, S]
+        best = jnp.argmax(surplus, axis=1).astype(jnp.float32)
+        best_val = jnp.max(surplus, axis=1)
+        outs.append(jnp.where(best_val > 0.0, best, 0.0))
+    demand_ref[...] = jnp.stack(outs, axis=1)          # [TB, K]
+
+
+@functools.partial(jax.jit, static_argnames=("tile_b",))
+def demand_scan(gain: jax.Array, hit_value: jax.Array, prices: jax.Array,
+                *, tile_b: int = 256) -> jax.Array:
+    """Per-consumer demanded slabs at each candidate price.
+
+    Args:
+      gain: `[B, S]` extra-hit curve per consumer (gain[:, 0] == 0).
+      hit_value: `[B]` dollar value of one hit/sec for an hour lease.
+      prices: `[K]` candidate prices ($ per slab-hour).
+      tile_b: batch tile size; B must be a multiple.
+
+    Returns:
+      demand `[B, K]` float32 slab counts (integral values).
+    """
+    b, s = gain.shape
+    (k,) = prices.shape
+    if b % tile_b != 0:
+        raise ValueError(f"batch {b} not a multiple of tile {tile_b}")
+    grid = (b // tile_b,)
+    kernel = functools.partial(_demand_kernel, n_prices=k)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_b, s), lambda i: (i, 0)),
+            pl.BlockSpec((tile_b, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, k), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_b, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, k), jnp.float32),
+        interpret=True,
+    )(gain, hit_value[:, None], prices[None, :])

@@ -1,0 +1,122 @@
+"""L1 Pallas kernel: batched AR(p) fit + H-step forecast.
+
+This is the numeric hot-spot of the Memtrade broker's availability
+predictor (paper §5.1).  For a batch of producer memory-usage windows it
+
+  1. mean-centers each series,
+  2. computes autocovariances r_0..r_p as lag-shifted dot products
+     (MXU/VPU-friendly dense reductions),
+  3. fits AR(p) coefficients with an unrolled Levinson-Durbin recursion
+     (p is a small compile-time constant, so the recursion is straight-line
+     vector code over the batch lanes),
+  4. iterates the AR recurrence H steps ahead,
+  5. reports the one-step prediction-error variance from the recursion
+     (used by L2 for model selection and the safety margin).
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the grid tiles the batch
+dimension; each program instance owns a `[TILE_B, W]` VMEM block.  There is
+no data-dependent control flow or indexing, so the kernel lowers to plain
+HLO under ``interpret=True`` and runs on the CPU PJRT client.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Ridge term guarding r_0 for (near-)constant series.
+RIDGE = 1e-6
+# Reflection-coefficient clamp keeping the AR filter stable.
+KAPPA_CLAMP = 0.999
+
+
+def _ar_kernel(x_ref, fcast_ref, sigma_ref, *, order: int, horizon: int):
+    """Kernel body: x_ref[TILE_B, W] -> fcast_ref[TILE_B, H], sigma_ref[TILE_B, 1]."""
+    x = x_ref[...].astype(jnp.float32)
+    tile_b, w = x.shape
+
+    mu = jnp.mean(x, axis=1, keepdims=True)
+    xc = x - mu
+
+    # Autocovariances r_0..r_p: lag-shifted dot products, normalized by W so
+    # all lags share a scale (biased estimator, standard for Yule-Walker).
+    rs = []
+    for lag in range(order + 1):
+        if lag == 0:
+            r = jnp.sum(xc * xc, axis=1)
+        else:
+            r = jnp.sum(xc[:, lag:] * xc[:, :-lag], axis=1)
+        rs.append(r / jnp.float32(w))
+    r0 = rs[0] + jnp.float32(RIDGE)
+
+    # Levinson-Durbin, unrolled over the order. phi holds AR coefficients
+    # phi_1..phi_k after step k; err is the prediction-error variance.
+    phi = [jnp.zeros_like(r0) for _ in range(order)]
+    err = r0
+    for k in range(1, order + 1):
+        acc = rs[k]
+        for j in range(1, k):
+            acc = acc - phi[j - 1] * rs[k - j]
+        kappa = acc / err
+        kappa = jnp.clip(kappa, -KAPPA_CLAMP, KAPPA_CLAMP)
+        new_phi = list(phi)
+        new_phi[k - 1] = kappa
+        for j in range(1, k):
+            new_phi[j - 1] = phi[j - 1] - kappa * phi[k - 1 - j]
+        phi = new_phi
+        err = err * (1.0 - kappa * kappa)
+
+    # Iterated H-step forecast on the centered series. window[j] = x_{t-1-j}.
+    window = [xc[:, w - 1 - j] for j in range(order)]
+    outs = []
+    for _h in range(horizon):
+        f = jnp.zeros_like(r0)
+        for j in range(order):
+            f = f + phi[j] * window[j]
+        outs.append(f)
+        window = [f] + window[:-1]
+
+    fcast = jnp.stack(outs, axis=1) + mu  # [TILE_B, H], un-centered
+    fcast_ref[...] = fcast
+    sigma_ref[...] = jnp.sqrt(jnp.maximum(err, 0.0))[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("order", "horizon", "tile_b"))
+def ar_forecast(x: jax.Array, *, order: int = 4, horizon: int = 12,
+                tile_b: int = 128) -> tuple[jax.Array, jax.Array]:
+    """Batched AR(p) forecast.
+
+    Args:
+      x: `[B, W]` float32 series (B must be a multiple of ``tile_b``;
+         callers pad — see model.py).
+      order: AR order p (compile-time).
+      horizon: forecast steps H (compile-time).
+      tile_b: batch tile per grid step; `[tile_b, W]` must fit in VMEM.
+
+    Returns:
+      (forecast `[B, H]`, sigma `[B]`) — sigma is the one-step
+      prediction-error std-dev from the Levinson-Durbin recursion.
+    """
+    b, w = x.shape
+    if b % tile_b != 0:
+        raise ValueError(f"batch {b} not a multiple of tile {tile_b}")
+    grid = (b // tile_b,)
+    kernel = functools.partial(_ar_kernel, order=order, horizon=horizon)
+    fcast, sigma = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((tile_b, w), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((tile_b, horizon), lambda i: (i, 0)),
+            pl.BlockSpec((tile_b, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, horizon), jnp.float32),
+            jax.ShapeDtypeStruct((b, 1), jnp.float32),
+        ],
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x)
+    return fcast, sigma[:, 0]

@@ -1,0 +1,87 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: straightforward, unoptimized
+implementations of the same math used by ``forecast.py`` and ``demand.py``.
+pytest (and hypothesis) assert allclose between kernel and oracle over a
+sweep of shapes and inputs.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+RIDGE = 1e-6
+KAPPA_CLAMP = 0.999
+
+
+def autocov(x, order):
+    """Biased autocovariances r_0..r_order for centered series x [B, W]."""
+    b, w = x.shape
+    rs = []
+    for lag in range(order + 1):
+        if lag == 0:
+            rs.append(jnp.sum(x * x, axis=1) / w)
+        else:
+            rs.append(jnp.sum(x[:, lag:] * x[:, :-lag], axis=1) / w)
+    return rs
+
+
+def levinson_durbin(rs, order):
+    """Batched Levinson-Durbin. rs: list of [B] arrays, len order+1.
+
+    Returns (phi list of [B] arrays len order, err [B]).
+    """
+    r0 = rs[0] + RIDGE
+    phi = [jnp.zeros_like(r0) for _ in range(order)]
+    err = r0
+    for k in range(1, order + 1):
+        acc = rs[k]
+        for j in range(1, k):
+            acc = acc - phi[j - 1] * rs[k - j]
+        kappa = jnp.clip(acc / err, -KAPPA_CLAMP, KAPPA_CLAMP)
+        new_phi = list(phi)
+        new_phi[k - 1] = kappa
+        for j in range(1, k):
+            new_phi[j - 1] = phi[j - 1] - kappa * phi[k - 1 - j]
+        phi = new_phi
+        err = err * (1.0 - kappa * kappa)
+    return phi, err
+
+
+def ar_forecast_ref(x, order=4, horizon=12):
+    """Oracle for kernels.forecast.ar_forecast. x: [B, W] float32."""
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=1, keepdims=True)
+    xc = x - mu
+    rs = autocov(xc, order)
+    phi, err = levinson_durbin(rs, order)
+    b, w = x.shape
+    window = [xc[:, w - 1 - j] for j in range(order)]
+    outs = []
+    for _ in range(horizon):
+        f = jnp.zeros_like(err)
+        for j in range(order):
+            f = f + phi[j] * window[j]
+        outs.append(f)
+        window = [f] + window[:-1]
+    fcast = jnp.stack(outs, axis=1) + mu
+    sigma = jnp.sqrt(jnp.maximum(err, 0.0))
+    return fcast, sigma
+
+
+def demand_ref(gain, hit_value, prices):
+    """Oracle for kernels.demand.demand_scan.
+
+    gain: [B, S], hit_value: [B], prices: [K]. Returns [B, K].
+    """
+    gain = gain.astype(jnp.float32)
+    b, s = gain.shape
+    slabs = jnp.arange(s, dtype=jnp.float32)[None, :]
+    benefit = hit_value[:, None] * gain
+    outs = []
+    for k in range(prices.shape[0]):
+        surplus = benefit - prices[k] * slabs
+        best = jnp.argmax(surplus, axis=1).astype(jnp.float32)
+        best_val = jnp.max(surplus, axis=1)
+        outs.append(jnp.where(best_val > 0.0, best, 0.0))
+    return jnp.stack(outs, axis=1)

@@ -1,0 +1,115 @@
+"""L2 JAX model: the broker's two compute graphs (build-time only).
+
+``forecast_model`` — the availability predictor (paper §5.1).  The paper
+fits ARIMA(p, d, q=0) per producer with a daily hyperparameter grid search;
+here the (d, p) selection happens *inside* the lowered graph every call:
+both the raw (d=0) and first-differenced (d=1) series are fitted with the
+L1 AR kernel, the candidate with the smaller one-step prediction-error
+variance (in original units) wins per series, and its H-step forecast plus
+a z·sigma·sqrt(h) safety margin produces the "safe available" memory the
+broker may lease out.
+
+``demand_model`` — the market-clearing evaluator for the pricing engine
+(paper §5.3).  Given every consumer's extra-hit curve and per-hit value,
+it evaluates the three candidate prices {p-dp, p, p+dp} via the L1 demand
+kernel and reduces to total volume and producer revenue per candidate.
+
+Both graphs are lowered once by aot.py to HLO text and executed from the
+Rust broker via PJRT; python never runs at market time.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.forecast import ar_forecast
+from compile.kernels.demand import demand_scan
+
+# Compiled-in shapes (the Rust runtime pads/chunks to these).
+FORECAST_BATCH = 256
+FORECAST_WINDOW = 288  # 24h at 5-minute samples
+AR_ORDER = 4
+HORIZON = 12           # predict 1h ahead at 5-minute resolution
+SAFETY_Z = 1.64        # one-sided 95% margin
+
+DEMAND_BATCH = 1024
+DEMAND_SIZES = 64      # extra-slab curve resolution
+N_PRICES = 3
+
+
+def forecast_model(usage: jax.Array, capacity: jax.Array):
+    """Availability predictor.
+
+    Args:
+      usage: `[B, W]` recent memory usage (GB) per producer.
+      capacity: `[B]` producer VM memory capacity (GB).
+
+    Returns:
+      pred:  `[B, H]` predicted usage (GB), clipped to [0, capacity].
+      safe:  `[B, H]` safe leasable memory (GB) after the sigma margin.
+      sigma: `[B]`   selected model's one-step prediction-error std.
+      used_d:`[B]`   1.0 where the differenced (d=1) model was selected.
+    """
+    usage = usage.astype(jnp.float32)
+    b, w = usage.shape
+
+    # Candidate d=0: AR(p) on the raw series.
+    # Full-batch tile: grid=1 per pallas_call (measured ~25% faster under
+    # the CPU PJRT interpret path; still VMEM-safe on TPU at 294 KB/block).
+    f0, s0 = ar_forecast(usage, order=AR_ORDER, horizon=HORIZON, tile_b=FORECAST_BATCH)
+
+    # Candidate d=1: AR(p) on first differences, forecasts re-integrated
+    # from the last observed level.
+    diff = usage[:, 1:] - usage[:, :-1]
+    fd, s1 = ar_forecast(diff, order=AR_ORDER, horizon=HORIZON, tile_b=FORECAST_BATCH)
+    last = usage[:, -1:]
+    f1 = last + jnp.cumsum(fd, axis=1)
+
+    # Model selection: both sigmas are one-step errors in GB (differencing
+    # preserves units), pick the smaller per series.
+    use_d1 = (s1 < s0)[:, None]
+    pred = jnp.where(use_d1, f1, f0)
+    sigma = jnp.where(use_d1[:, 0], s1, s0)
+
+    cap = capacity.astype(jnp.float32)[:, None]
+    pred = jnp.clip(pred, 0.0, cap)
+
+    # Uncertainty grows ~sqrt(h) for a random-walk-ish error process.
+    h = jnp.arange(1, HORIZON + 1, dtype=jnp.float32)[None, :]
+    margin = SAFETY_Z * sigma[:, None] * jnp.sqrt(h)
+    safe = jnp.clip(cap - (pred + margin), 0.0, cap)
+
+    return pred, safe, sigma, use_d1[:, 0].astype(jnp.float32)
+
+
+def demand_model(gain: jax.Array, hit_value: jax.Array, prices: jax.Array):
+    """Market demand/revenue at candidate prices.
+
+    Args:
+      gain: `[B, S]` extra hits/sec gained by leasing s slabs.
+      hit_value: `[B]` dollar value of one hit/sec over the lease.
+      prices: `[K]` candidate $ per slab-hour.
+
+    Returns:
+      demand:  `[B, K]` slabs demanded per consumer per candidate.
+      volume:  `[K]` total slabs demanded.
+      revenue: `[K]` producer revenue = price * volume.
+    """
+    demand = demand_scan(gain, hit_value, prices, tile_b=DEMAND_BATCH)
+    volume = jnp.sum(demand, axis=0)
+    revenue = prices.astype(jnp.float32) * volume
+    return demand, volume, revenue
+
+
+def forecast_example_args():
+    spec = jax.ShapeDtypeStruct((FORECAST_BATCH, FORECAST_WINDOW), jnp.float32)
+    cap = jax.ShapeDtypeStruct((FORECAST_BATCH,), jnp.float32)
+    return (spec, cap)
+
+
+def demand_example_args():
+    gain = jax.ShapeDtypeStruct((DEMAND_BATCH, DEMAND_SIZES), jnp.float32)
+    val = jax.ShapeDtypeStruct((DEMAND_BATCH,), jnp.float32)
+    prices = jax.ShapeDtypeStruct((N_PRICES,), jnp.float32)
+    return (gain, val, prices)

@@ -1,0 +1,183 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+The core signal: if these pass, the HLO the Rust broker executes computes
+exactly what ref.py says it should.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.forecast import ar_forecast
+from compile.kernels.demand import demand_scan
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+# ---------------------------------------------------------------- forecast
+
+def _series(b, w, seed=0, kind="ar"):
+    r = _rng(seed)
+    if kind == "ar":
+        # Stable AR(2) + noise, per batch row.
+        x = np.zeros((b, w), dtype=np.float32)
+        phi1 = r.uniform(0.2, 0.7, size=b)
+        phi2 = r.uniform(-0.3, 0.2, size=b)
+        noise = r.normal(0, 1, size=(b, w)).astype(np.float32)
+        for t in range(2, w):
+            x[:, t] = phi1 * x[:, t - 1] + phi2 * x[:, t - 2] + noise[:, t]
+        return x + 10.0
+    if kind == "diurnal":
+        t = np.arange(w, dtype=np.float32)
+        base = 20 + 8 * np.sin(2 * np.pi * t / 288.0)[None, :]
+        return (base + r.normal(0, 0.5, size=(b, w))).astype(np.float32)
+    if kind == "constant":
+        return np.full((b, w), 7.5, dtype=np.float32)
+    if kind == "linear":
+        t = np.arange(w, dtype=np.float32)[None, :]
+        return np.repeat(0.05 * t + 3.0, b, axis=0).astype(np.float32)
+    raise ValueError(kind)
+
+
+@pytest.mark.parametrize("kind", ["ar", "diurnal", "constant", "linear"])
+@pytest.mark.parametrize("b,w,tile", [(128, 288, 128), (256, 288, 128), (64, 96, 64)])
+def test_forecast_matches_ref(kind, b, w, tile):
+    x = jnp.asarray(_series(b, w, seed=hash((kind, b, w)) % 2**31, kind=kind))
+    f_k, s_k = ar_forecast(x, order=4, horizon=12, tile_b=tile)
+    f_r, s_r = ref.ar_forecast_ref(x, order=4, horizon=12)
+    np.testing.assert_allclose(f_k, f_r, rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(s_k, s_r, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("order", [1, 2, 4, 8])
+def test_forecast_orders(order):
+    x = jnp.asarray(_series(64, 128, seed=order, kind="ar"))
+    f_k, s_k = ar_forecast(x, order=order, horizon=6, tile_b=64)
+    f_r, s_r = ref.ar_forecast_ref(x, order=order, horizon=6)
+    np.testing.assert_allclose(f_k, f_r, rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(s_k, s_r, rtol=1e-4, atol=1e-4)
+
+
+def test_forecast_constant_series_is_flat():
+    x = jnp.full((64, 96), 5.0, dtype=jnp.float32)
+    f, s = ar_forecast(x, order=4, horizon=8, tile_b=64)
+    np.testing.assert_allclose(f, 5.0, atol=1e-3)
+    assert float(jnp.max(s)) < 1e-2
+
+
+def test_forecast_tracks_strong_ar1():
+    # phi ~ 0.95 AR(1): one-step forecast should be close to phi * last.
+    r = _rng(42)
+    b, w = 64, 256
+    x = np.zeros((b, w), dtype=np.float32)
+    eps = r.normal(0, 0.1, size=(b, w)).astype(np.float32)
+    for t in range(1, w):
+        x[:, t] = 0.95 * x[:, t - 1] + eps[:, t]
+    xj = jnp.asarray(x)
+    f, _ = ar_forecast(xj, order=4, horizon=1, tile_b=64)
+    mu = x.mean(axis=1)
+    expected = mu + 0.95 * (x[:, -1] - mu)
+    np.testing.assert_allclose(f[:, 0], expected, atol=0.15)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b_tiles=st.integers(1, 3),
+    tile=st.sampled_from([32, 64]),
+    w=st.integers(24, 160),
+    order=st.integers(1, 6),
+    horizon=st.integers(1, 16),
+    seed=st.integers(0, 2**31 - 1),
+    scale=st.floats(1e-3, 1e3),
+)
+def test_forecast_hypothesis(b_tiles, tile, w, order, horizon, seed, scale):
+    b = b_tiles * tile
+    r = _rng(seed)
+    x = jnp.asarray((r.normal(0, 1, size=(b, w)) * scale).astype(np.float32))
+    f_k, s_k = ar_forecast(x, order=order, horizon=horizon, tile_b=tile)
+    f_r, s_r = ref.ar_forecast_ref(x, order=order, horizon=horizon)
+    np.testing.assert_allclose(f_k, f_r, rtol=1e-3, atol=1e-3 * scale)
+    np.testing.assert_allclose(s_k, s_r, rtol=1e-3, atol=1e-4 * scale)
+
+
+def test_forecast_rejects_bad_tile():
+    x = jnp.zeros((100, 32), dtype=jnp.float32)
+    with pytest.raises(ValueError):
+        ar_forecast(x, tile_b=64)
+
+
+# ------------------------------------------------------------------ demand
+
+def _mrc_gain(b, s, seed=0):
+    """Concave, increasing extra-hit curves (like real MRC-derived gains)."""
+    r = _rng(seed)
+    rate = r.uniform(10, 5000, size=(b, 1))
+    knee = r.uniform(2, s, size=(b, 1))
+    sizes = np.arange(s, dtype=np.float32)[None, :]
+    gain = rate * (1.0 - np.exp(-sizes / knee))
+    return gain.astype(np.float32)
+
+
+@pytest.mark.parametrize("b,s,tile", [(256, 64, 256), (1024, 64, 256), (512, 32, 128)])
+def test_demand_matches_ref(b, s, tile):
+    gain = jnp.asarray(_mrc_gain(b, s, seed=b + s))
+    value = jnp.asarray(_rng(b).uniform(1e-6, 1e-3, size=b).astype(np.float32))
+    prices = jnp.asarray(np.array([0.001, 0.003, 0.01], dtype=np.float32))
+    d_k = demand_scan(gain, value, prices, tile_b=tile)
+    d_r = ref.demand_ref(gain, value, prices)
+    np.testing.assert_array_equal(np.asarray(d_k), np.asarray(d_r))
+
+
+def test_demand_zero_price_takes_max_gain():
+    # Strictly increasing gain (saturating exponentials plateau in f32 and
+    # make argmax ambiguous), so zero price must demand the full curve.
+    sizes = np.arange(64, dtype=np.float32)[None, :]
+    gain = jnp.asarray(np.repeat(sizes, 128, axis=0))
+    value = jnp.full((128,), 1e-3, dtype=jnp.float32)
+    prices = jnp.asarray(np.array([0.0], dtype=np.float32))
+    d = demand_scan(gain, value, prices, tile_b=128)
+    assert int(jnp.min(d)) == 63
+
+
+def test_demand_huge_price_is_zero():
+    gain = jnp.asarray(_mrc_gain(128, 64, seed=10))
+    value = jnp.full((128,), 1e-6, dtype=jnp.float32)
+    prices = jnp.asarray(np.array([1e9], dtype=np.float32))
+    d = demand_scan(gain, value, prices, tile_b=128)
+    assert float(jnp.max(d)) == 0.0
+
+
+def test_demand_monotone_in_price():
+    gain = jnp.asarray(_mrc_gain(256, 64, seed=11))
+    value = jnp.asarray(_rng(3).uniform(1e-6, 1e-3, size=256).astype(np.float32))
+    prices = jnp.asarray(np.array([0.0005, 0.002, 0.02], dtype=np.float32))
+    d = np.asarray(demand_scan(gain, value, prices, tile_b=256))
+    # Higher price => weakly less demand (gain curves are concave increasing).
+    assert np.all(d[:, 0] >= d[:, 1])
+    assert np.all(d[:, 1] >= d[:, 2])
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    tiles=st.integers(1, 3),
+    tile=st.sampled_from([64, 128]),
+    s=st.integers(4, 96),
+    k=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_demand_hypothesis(tiles, tile, s, k, seed):
+    b = tiles * tile
+    r = _rng(seed)
+    gain = jnp.asarray(r.uniform(0, 1000, size=(b, s)).astype(np.float32))
+    value = jnp.asarray(r.uniform(0, 1e-2, size=b).astype(np.float32))
+    prices = jnp.asarray(r.uniform(0, 0.05, size=k).astype(np.float32))
+    d_k = demand_scan(gain, value, prices, tile_b=tile)
+    d_r = ref.demand_ref(gain, value, prices)
+    np.testing.assert_array_equal(np.asarray(d_k), np.asarray(d_r))

@@ -1,0 +1,93 @@
+"""L2 model semantics: shapes, clipping, model selection, market reduction."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _usage(b=model.FORECAST_BATCH, w=model.FORECAST_WINDOW, seed=0):
+    r = np.random.default_rng(seed)
+    t = np.arange(w, dtype=np.float32)
+    base = 12 + 6 * np.sin(2 * np.pi * t / 288.0)[None, :]
+    x = base + r.normal(0, 0.4, size=(b, w))
+    return jnp.asarray(x.astype(np.float32))
+
+
+def test_forecast_model_shapes():
+    usage = _usage()
+    cap = jnp.full((model.FORECAST_BATCH,), 32.0, dtype=jnp.float32)
+    pred, safe, sigma, used_d = model.forecast_model(usage, cap)
+    assert pred.shape == (model.FORECAST_BATCH, model.HORIZON)
+    assert safe.shape == (model.FORECAST_BATCH, model.HORIZON)
+    assert sigma.shape == (model.FORECAST_BATCH,)
+    assert used_d.shape == (model.FORECAST_BATCH,)
+
+
+def test_forecast_model_bounds():
+    usage = _usage(seed=1)
+    cap = jnp.full((model.FORECAST_BATCH,), 32.0, dtype=jnp.float32)
+    pred, safe, sigma, used_d = model.forecast_model(usage, cap)
+    assert float(jnp.min(pred)) >= 0.0
+    assert float(jnp.max(pred)) <= 32.0
+    assert float(jnp.min(safe)) >= 0.0
+    assert float(jnp.max(safe)) <= 32.0
+    # safe + pred + margin <= cap  =>  safe <= cap - pred (margin >= 0)
+    assert float(jnp.max(safe + pred - 32.0)) <= 1e-3
+    assert set(np.unique(np.asarray(used_d))) <= {0.0, 1.0}
+
+
+def test_forecast_model_safe_shrinks_with_horizon():
+    usage = _usage(seed=2)
+    cap = jnp.full((model.FORECAST_BATCH,), 64.0, dtype=jnp.float32)
+    pred, safe, sigma, _ = model.forecast_model(usage, cap)
+    # For a stationary series the sqrt(h) margin means safe is (weakly)
+    # decreasing in h wherever pred is flat; check the aggregate trend.
+    first = float(jnp.mean(safe[:, 0]))
+    last = float(jnp.mean(safe[:, -1]))
+    assert last <= first + 1e-3
+
+
+def test_forecast_model_prefers_diff_for_trend():
+    # A strong linear ramp is far better fit by the d=1 model.
+    b, w = model.FORECAST_BATCH, model.FORECAST_WINDOW
+    t = np.arange(w, dtype=np.float32)[None, :]
+    r = np.random.default_rng(3)
+    x = jnp.asarray((0.1 * t + r.normal(0, 0.01, size=(b, w))).astype(np.float32))
+    cap = jnp.full((b,), 1e6, dtype=jnp.float32)
+    pred, safe, sigma, used_d = model.forecast_model(x, cap)
+    assert float(jnp.mean(used_d)) > 0.9
+    # And the forecast should continue the ramp.
+    expected = 0.1 * (w - 1) + 0.1 * np.arange(1, model.HORIZON + 1)
+    np.testing.assert_allclose(np.asarray(pred[0]), expected, atol=0.5)
+
+
+def test_demand_model_reduction():
+    b, s, k = model.DEMAND_BATCH, model.DEMAND_SIZES, model.N_PRICES
+    r = np.random.default_rng(7)
+    gain = jnp.asarray(r.uniform(0, 100, size=(b, s)).astype(np.float32))
+    value = jnp.asarray(r.uniform(0, 1e-3, size=b).astype(np.float32))
+    prices = jnp.asarray(np.array([0.001, 0.002, 0.004], dtype=np.float32))
+    demand, volume, revenue = model.demand_model(gain, value, prices)
+    assert demand.shape == (b, k)
+    d_r = ref.demand_ref(gain, value, prices)
+    np.testing.assert_array_equal(np.asarray(demand), np.asarray(d_r))
+    np.testing.assert_allclose(np.asarray(volume), np.asarray(demand).sum(axis=0), rtol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(revenue), np.asarray(prices) * np.asarray(volume), rtol=1e-6)
+
+
+def test_models_lower_to_hlo_text():
+    """The AOT path itself: both graphs must lower to HLO text cleanly."""
+    from compile import aot
+    lowered = jax.jit(model.forecast_model).lower(*model.forecast_example_args())
+    text = aot.to_hlo_text(lowered)
+    assert "ENTRY" in text and "f32[256,288]" in text
+    lowered = jax.jit(model.demand_model).lower(*model.demand_example_args())
+    text = aot.to_hlo_text(lowered)
+    assert "ENTRY" in text and "f32[1024,64]" in text

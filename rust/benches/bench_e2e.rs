@@ -1,0 +1,106 @@
+//! End-to-end request path: secure GET/PUT through the real wire codec
+//! and a real TCP producer store on localhost (the Table 2 data path,
+//! minus the simulated datacenter RTT), plus the in-process manager path
+//! used by the cluster simulation.
+
+use memtrade::consumer::client::SecureKv;
+use memtrade::core::{ConsumerId, Lease, LeaseId, Money, ProducerId, SimTime, DEFAULT_SLAB_BYTES};
+use memtrade::net::tcp::{KvClient, ProducerStoreServer};
+use memtrade::net::wire::{Request, Response};
+use memtrade::producer::Manager;
+use memtrade::util::bench::{bench, header};
+use memtrade::util::rng::Rng;
+use memtrade::workload::ycsb::YcsbWorkload;
+
+fn main() {
+    header("end-to-end secure KV");
+
+    // --- In-process: consumer -> manager -> producer store.
+    let mut manager = Manager::new(ProducerId(1), DEFAULT_SLAB_BYTES, 3);
+    manager.set_harvestable(2 << 30, SimTime::ZERO);
+    assert!(manager.grant_lease(
+        Lease {
+            id: LeaseId(1),
+            consumer: ConsumerId(1),
+            producer: ProducerId(1),
+            slabs: 16,
+            slab_bytes: DEFAULT_SLAB_BYTES,
+            start: SimTime::ZERO,
+            duration: SimTime::from_hours(1),
+            price_per_slab_hour: Money::from_dollars(0.00004),
+        },
+        1_250_000_000,
+    ));
+    let mut secure = SecureKv::new(Some([5u8; 16]), true, 1, 7);
+    let mut now_us = 0u64;
+    let value = vec![0xAB; 1024];
+    // Preload.
+    {
+        let mut t = |_p: u32, req: Request| -> Response {
+            manager.handle(ConsumerId(1), &req, SimTime::from_micros(0))
+        };
+        for i in 0..5_000u32 {
+            assert!(secure.put(&mut t, format!("user{i}").as_bytes(), &value));
+        }
+    }
+    let mut rng = Rng::new(9);
+    bench("inproc_secure_get/1KB (manager+rate-limit+crypto)", || {
+        now_us += 50;
+        let key = format!("user{}", rng.below(5_000));
+        let mut t = |_p: u32, req: Request| -> Response {
+            manager.handle(ConsumerId(1), &req, SimTime::from_micros(now_us))
+        };
+        std::hint::black_box(secure.get(&mut t, key.as_bytes()));
+    });
+    bench("inproc_secure_put/1KB", || {
+        now_us += 50;
+        let key = format!("user{}", rng.below(5_000));
+        let mut t = |_p: u32, req: Request| -> Response {
+            manager.handle(ConsumerId(1), &req, SimTime::from_micros(now_us))
+        };
+        std::hint::black_box(secure.put(&mut t, key.as_bytes(), &value));
+    });
+
+    // --- Real TCP on localhost.
+    let server = ProducerStoreServer::start("127.0.0.1:0", 1 << 30, None, 11).unwrap();
+    let mut client = KvClient::connect(server.addr()).unwrap();
+    let mut secure_tcp = SecureKv::new(Some([5u8; 16]), true, 1, 13);
+    {
+        let mut t = |_p: u32, req: Request| -> Response {
+            client.call(&req).unwrap_or(Response::Error("io".into()))
+        };
+        for i in 0..2_000u32 {
+            assert!(secure_tcp.put(&mut t, format!("user{i}").as_bytes(), &value));
+        }
+    }
+    let mut rng2 = Rng::new(10);
+    bench("tcp_secure_get/1KB/localhost", || {
+        let key = format!("user{}", rng2.below(2_000));
+        let mut t = |_p: u32, req: Request| -> Response {
+            client.call(&req).unwrap_or(Response::Error("io".into()))
+        };
+        std::hint::black_box(secure_tcp.get(&mut t, key.as_bytes()));
+    });
+    bench("tcp_secure_put/1KB/localhost", || {
+        let key = format!("user{}", rng2.below(2_000));
+        let mut t = |_p: u32, req: Request| -> Response {
+            client.call(&req).unwrap_or(Response::Error("io".into()))
+        };
+        std::hint::black_box(secure_tcp.put(&mut t, key.as_bytes(), &value));
+    });
+    server.stop();
+
+    // --- Wire codec alone.
+    let req = Request::Put { key: b"user12345".to_vec(), value: vec![0xCD; 1024] };
+    bench("wire_encode_decode/1KB-put", || {
+        let enc = req.encode();
+        std::hint::black_box(Request::decode(&enc).unwrap());
+    });
+
+    // --- Workload generator.
+    let w = YcsbWorkload::paper_default(10_000_000, 1024);
+    let mut rng3 = Rng::new(11);
+    bench("ycsb_next_op/10M-keys-zipf0.7", || {
+        std::hint::black_box(w.next_op(&mut rng3));
+    });
+}

@@ -1,0 +1,83 @@
+//! The AOT compute path: PJRT execution of the forecast and demand
+//! artifacts (the broker's per-market-epoch numeric work), compared with
+//! the pure-Rust mirror — quantifying what the compiled XLA module buys
+//! at fleet scale. Skips PJRT rows when artifacts are not built.
+
+use memtrade::runtime::arima_fallback as fb;
+use memtrade::runtime::engine::{Engine, DEMAND_SIZES, FORECAST_HORIZON, FORECAST_WINDOW};
+use memtrade::util::bench::{bench, header};
+use memtrade::util::rng::Rng;
+
+fn series(n: usize, rng: &mut Rng) -> (Vec<Vec<f32>>, Vec<f32>) {
+    let s = (0..n)
+        .map(|_| {
+            let base = rng.uniform(4.0, 24.0);
+            (0..FORECAST_WINDOW)
+                .map(|t| {
+                    (base
+                        + 3.0 * (std::f64::consts::TAU * t as f64 / 288.0).sin()
+                        + rng.normal(0.0, 0.4)) as f32
+                })
+                .collect()
+        })
+        .collect();
+    let caps = (0..n).map(|_| rng.uniform(16.0, 64.0) as f32).collect();
+    (s, caps)
+}
+
+fn gains(n: usize, rng: &mut Rng) -> (Vec<Vec<f32>>, Vec<f32>) {
+    let g = (0..n)
+        .map(|_| {
+            let rate = rng.uniform(10.0, 3000.0);
+            let knee = rng.uniform(2.0, 48.0);
+            (0..DEMAND_SIZES)
+                .map(|s| (rate * (1.0 - (-(s as f64) / knee).exp())) as f32)
+                .collect()
+        })
+        .collect();
+    let v = (0..n).map(|_| rng.uniform(1e-6, 1e-3) as f32).collect();
+    (g, v)
+}
+
+fn main() {
+    header("forecast + demand (AOT/PJRT vs rust mirror)");
+    let mut rng = Rng::new(17);
+
+    for n in [256usize, 1024, 4096] {
+        let (s, caps) = series(n, &mut rng);
+        bench(&format!("rust_mirror_forecast/{n}-producers"), || {
+            std::hint::black_box(fb::forecast_batch(&s, &caps, 4, FORECAST_HORIZON, FORECAST_WINDOW));
+        });
+    }
+
+    let dir = Engine::default_dir();
+    if !Engine::artifacts_present(&dir) {
+        println!("(artifacts not built — skipping PJRT rows; run `make artifacts`)");
+        return;
+    }
+    let engine = Engine::load(&dir).expect("load artifacts");
+
+    for n in [256usize, 1024, 4096] {
+        let (s, caps) = series(n, &mut rng);
+        bench(&format!("pjrt_forecast/{n}-producers"), || {
+            std::hint::black_box(engine.forecast.predict(&s, &caps).unwrap());
+        });
+    }
+
+    for n in [1024usize, 10_240] {
+        let (g, v) = gains(n, &mut rng);
+        let prices = [0.00004f32, 0.00005, 0.00006];
+        bench(&format!("pjrt_demand/{n}-consumers/3-prices"), || {
+            std::hint::black_box(engine.demand.evaluate(&g, &v, prices).unwrap());
+        });
+        bench(&format!("rust_mirror_demand/{n}-consumers/3-prices"), || {
+            let mut acc = 0f64;
+            for (gain, &val) in g.iter().zip(&v) {
+                for p in prices {
+                    acc += fb::demand_one(gain, val, p as f64) as f64;
+                }
+            }
+            std::hint::black_box(acc);
+        });
+    }
+}

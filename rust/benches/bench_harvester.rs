@@ -1,0 +1,86 @@
+//! Harvester control loop (Algorithm 1): the per-epoch cost of the
+//! baseline/recent p99 estimators (windowed AVL), the drop detector, and
+//! a full producer tick including the guest-memory epoch — the overhead
+//! the paper reports as "<1% CPU" on the producer.
+
+use memtrade::core::config::HarvesterConfig;
+use memtrade::core::{ProducerId, SimTime};
+use memtrade::mem::{GuestMemory, SwapDevice};
+use memtrade::producer::{Harvester, Producer};
+use memtrade::util::avl::WindowedDist;
+use memtrade::util::bench::{bench, header};
+use memtrade::util::rng::Rng;
+use memtrade::workload::apps::{AppKind, AppModel, AppRunner};
+
+fn main() {
+    header("harvester (Algorithm 1)");
+
+    // Windowed-AVL sample insertion + p99 at realistic sizes (6h of 1s
+    // samples = 21600 points).
+    let mut dist = WindowedDist::new(SimTime::from_hours(6));
+    let mut rng = Rng::new(5);
+    let mut t = 0u64;
+    for _ in 0..21_600 {
+        t += 1;
+        dist.insert(SimTime::from_secs(t), rng.normal(100.0, 10.0));
+    }
+    bench("windowed_dist_insert+expire/21600-live", || {
+        t += 1;
+        dist.insert(SimTime::from_secs(t), rng.normal(100.0, 10.0));
+    });
+    bench("windowed_dist_p99/21600-live", || {
+        std::hint::black_box(dist.quantile(0.99));
+    });
+
+    // Harvester epoch step against a quiet guest.
+    let cfg = HarvesterConfig::default();
+    let mut h = Harvester::new(cfg.clone(), 8 << 30);
+    let mut mem = GuestMemory::new(
+        8 << 30,
+        4 << 30,
+        4 << 20,
+        SwapDevice::Ssd,
+        Some(SimTime::from_mins(5)),
+        3,
+    );
+    let mut now = 0u64;
+    bench("harvester_record+step_epoch", || {
+        now += 5;
+        h.record_sample(SimTime::from_secs(now), 100.0, 0);
+        std::hint::black_box(h.step_epoch(SimTime::from_secs(now), &mut mem));
+    });
+
+    // Full producer tick (guest app epoch + harvester + manager refresh).
+    let app = AppRunner::new(
+        AppModel::preset(AppKind::Redis),
+        4 << 20,
+        SwapDevice::Ssd,
+        Some(SimTime::from_mins(5)),
+        9,
+    );
+    let mut producer = Producer::new(ProducerId(1), app, cfg, 64 << 20);
+    let mut e = 0u64;
+    bench("producer_tick/5s-epoch/2000-op-cap", || {
+        e += 1;
+        std::hint::black_box(producer.tick(
+            SimTime::from_micros(e * 5_000_000),
+            SimTime::from_secs(5),
+        ));
+    });
+
+    // Guest page access paths.
+    let mut guest = GuestMemory::new(
+        8 << 30,
+        4 << 30,
+        4 << 20,
+        SwapDevice::Ssd,
+        Some(SimTime::from_mins(5)),
+        5,
+    );
+    let pages = guest.app_pages() as u64;
+    let mut rng2 = Rng::new(6);
+    bench("guest_access_hit", || {
+        let p = rng2.below(pages) as u32;
+        std::hint::black_box(guest.access(p, SimTime::from_secs(1)));
+    });
+}

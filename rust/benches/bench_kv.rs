@@ -1,0 +1,67 @@
+//! Producer-store hot path: GET/PUT/DELETE on the Redis-like KV store,
+//! including eviction pressure and harvester-initiated shrink (the data
+//! path behind every consumer op in Table 2 / Fig 11).
+
+use memtrade::kv::KvStore;
+use memtrade::util::bench::{bench, header};
+use memtrade::util::rng::Rng;
+
+fn main() {
+    header("kv (producer store)");
+
+    // GET hit on a warm 64 MB store.
+    let mut kv = KvStore::new(64 << 20, 1);
+    let mut keys = Vec::new();
+    for i in 0..10_000u32 {
+        let k = format!("user{i}");
+        kv.put(k.as_bytes(), &vec![0xAB; 1024]);
+        keys.push(k.into_bytes());
+    }
+    let mut rng = Rng::new(7);
+    bench("get_hit/1KB/10k-keys", || {
+        let k = &keys[rng.below(keys.len() as u64) as usize];
+        assert!(kv.get(k).is_some());
+    });
+
+    let mut rng2 = Rng::new(8);
+    bench("get_miss", || {
+        let k = format!("absent{}", rng2.below(1 << 20));
+        assert!(kv.get(k.as_bytes()).is_none());
+    });
+
+    // PUT overwrite (steady state, no eviction).
+    let mut rng3 = Rng::new(9);
+    bench("put_overwrite/1KB", || {
+        let k = &keys[rng3.below(keys.len() as u64) as usize];
+        kv.put(k, &vec![0xCD; 1024]);
+    });
+
+    // PUT under eviction pressure (store full -> sampled-LRU eviction).
+    let mut full = KvStore::new(8 << 20, 2);
+    let mut i = 0u64;
+    bench("put_with_eviction/1KB/full-store", || {
+        let k = format!("grow{i}");
+        i += 1;
+        full.put(k.as_bytes(), &vec![0xEF; 1024]);
+    });
+
+    // Harvester reclaim: shrink by 1 MB then grow back.
+    let mut shrink = KvStore::new(64 << 20, 3);
+    for i in 0..40_000u32 {
+        shrink.put(format!("s{i}").as_bytes(), &vec![1u8; 1024]);
+    }
+    bench("shrink_1MB_and_grow_back", || {
+        let max = shrink.max_bytes();
+        shrink.shrink_to(max - (1 << 20));
+        shrink.grow_to(max);
+    });
+
+    // Defragmentation pass.
+    let mut frag = KvStore::new(64 << 20, 4);
+    for i in 0..20_000u32 {
+        frag.put(format!("f{i}").as_bytes(), &vec![1u8; 150]);
+    }
+    bench("defragment/20k-entries", || {
+        frag.defragment();
+    });
+}

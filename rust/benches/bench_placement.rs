@@ -1,0 +1,116 @@
+//! Broker placement at scale — the §7.2 claim that a single-node broker
+//! "can handle a market with thousands of participating VMs": cost
+//! ranking + greedy assignment across 1k/5k/10k producers, and the full
+//! request path including registry snapshotting.
+
+use memtrade::broker::placement::{rank, ConsumerRequest, ProducerState};
+use memtrade::broker::predictor::AvailabilityPredictor;
+use memtrade::broker::pricing::{PricingEngine, PricingStrategy};
+use memtrade::broker::Broker;
+use memtrade::core::config::{BrokerConfig, PlacementWeights};
+use memtrade::core::{ConsumerId, Money, ProducerId, SimTime};
+use memtrade::util::bench::{bench, header};
+use memtrade::util::rng::Rng;
+
+fn states(n: usize, seed: u64) -> Vec<ProducerState> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|i| ProducerState {
+            producer: ProducerId(i as u64 + 1),
+            free_slabs: rng.below(512) as u32,
+            predicted_safe_slabs: rng.below(512) as u32,
+            cpu_headroom: rng.f64(),
+            bandwidth_headroom: rng.f64(),
+            latency_us: rng.below(3000),
+            reputation: rng.f64(),
+        })
+        .collect()
+}
+
+fn request() -> ConsumerRequest {
+    ConsumerRequest {
+        consumer: ConsumerId(1),
+        slabs: 64,
+        min_slabs: 1,
+        lease: SimTime::from_hours(1),
+        max_price_per_slab_hour: None,
+        latency_us_to: Default::default(),
+        weights: None,
+    }
+}
+
+fn main() {
+    header("broker placement");
+
+    for n in [1_000usize, 5_000, 10_000] {
+        let s = states(n, n as u64);
+        let req = request();
+        let w = PlacementWeights::default();
+        bench(&format!("rank/{n}-producers"), || {
+            std::hint::black_box(rank(&s, &req, &w));
+        });
+    }
+
+    // Full request path through a populated broker.
+    for n in [1_000usize, 5_000] {
+        let cfg = BrokerConfig::default();
+        let predictor = AvailabilityPredictor::fallback(288, 12);
+        let pricing = PricingEngine::new(
+            PricingStrategy::FixedFraction,
+            Money::from_dollars(0.00004),
+            cfg.price_step_dollars,
+        );
+        let mut broker = Broker::new(cfg, predictor, pricing);
+        let mut rng = Rng::new(3);
+        for i in 0..n {
+            let id = ProducerId(i as u64 + 1);
+            broker.registry.register_producer(id, 64.0);
+            for t in 0..48u64 {
+                broker.registry.report_usage(
+                    id,
+                    SimTime::from_secs(t * 300),
+                    rng.uniform(8.0, 32.0) as f32,
+                );
+            }
+            broker
+                .registry
+                .update_producer_resources(id, rng.below(512) as u32, 0.8, 0.8);
+        }
+        broker.predictor.refresh(&mut broker.registry, SimTime::from_hours(4));
+        let mut c = 0u64;
+        bench(&format!("request_memory/{n}-producers/64-slabs"), || {
+            c += 1;
+            broker.registry.register_consumer(ConsumerId(c));
+            std::hint::black_box(
+                broker.request_memory(SimTime::from_hours(5), {
+                    let mut r = request();
+                    r.consumer = ConsumerId(c);
+                    r
+                }),
+            );
+        });
+    }
+
+    // Predictor refresh across the fleet (fallback backend; PJRT path is
+    // measured in bench_forecast).
+    let cfg = BrokerConfig::default();
+    let mut broker = Broker::new(
+        cfg,
+        AvailabilityPredictor::fallback(288, 12),
+        PricingEngine::new(PricingStrategy::FixedFraction, Money::ZERO, 0.00002),
+    );
+    let mut rng = Rng::new(5);
+    for i in 0..1_000u64 {
+        broker.registry.register_producer(ProducerId(i + 1), 64.0);
+        for t in 0..288u64 {
+            broker.registry.report_usage(
+                ProducerId(i + 1),
+                SimTime::from_secs(t * 300),
+                rng.uniform(8.0, 32.0) as f32,
+            );
+        }
+    }
+    bench("predictor_refresh/1000-producers/rust-fallback", || {
+        broker.predictor.refresh(&mut broker.registry, SimTime::from_hours(24));
+    });
+}

@@ -1,0 +1,278 @@
+//! The broker — the trusted third party at the center of the market
+//! (paper §5): it registers producers and consumers, tracks producer
+//! usage histories, predicts availability with the AOT forecast artifact
+//! (§5.1), places consumer requests onto producers with a weighted greedy
+//! algorithm and FIFO pending queue (§5.2), and sets the market price
+//! (§5.3) — fixed fraction-of-spot, max-trading-volume, or max-revenue
+//! via {p-Δ, p, p+Δ} local search evaluated by the demand artifact.
+
+pub mod placement;
+pub mod predictor;
+pub mod pricing;
+pub mod registry;
+
+pub use placement::{ConsumerRequest, PlacementOutcome, ProducerState};
+pub use predictor::AvailabilityPredictor;
+pub use pricing::{PricingEngine, PricingStrategy};
+pub use registry::Registry;
+
+use crate::core::config::BrokerConfig;
+use crate::core::{Lease, LeaseId, Money, SimTime};
+use std::collections::VecDeque;
+
+/// Aggregate broker statistics (Fig 10, §7.2).
+#[derive(Clone, Debug, Default)]
+pub struct BrokerStats {
+    pub requests: u64,
+    pub slabs_requested: u64,
+    pub slabs_granted: u64,
+    pub requests_fully_satisfied: u64,
+    pub requests_partially_satisfied: u64,
+    pub requests_queued: u64,
+    pub requests_expired: u64,
+    pub leases_granted: u64,
+    pub commission_earned: Money,
+}
+
+struct PendingRequest {
+    request: ConsumerRequest,
+    remaining_slabs: u32,
+    enqueued: SimTime,
+}
+
+/// The market coordinator.
+pub struct Broker {
+    pub cfg: BrokerConfig,
+    pub registry: Registry,
+    pub predictor: AvailabilityPredictor,
+    pub pricing: PricingEngine,
+    pending: VecDeque<PendingRequest>,
+    next_lease: u64,
+    pub stats: BrokerStats,
+}
+
+impl Broker {
+    pub fn new(cfg: BrokerConfig, predictor: AvailabilityPredictor, pricing: PricingEngine) -> Self {
+        Broker {
+            cfg,
+            registry: Registry::default(),
+            predictor,
+            pricing,
+            pending: VecDeque::new(),
+            next_lease: 1,
+            stats: BrokerStats::default(),
+        }
+    }
+
+    pub fn current_price(&self) -> Money {
+        self.pricing.current_price()
+    }
+
+    /// Handle one consumer allocation request (paper §5.2): greedy
+    /// placement over registered producers; unfilled remainder queued.
+    pub fn request_memory(&mut self, now: SimTime, request: ConsumerRequest) -> Vec<Lease> {
+        self.stats.requests += 1;
+        self.stats.slabs_requested += request.slabs as u64;
+        let (leases, granted) = self.place(now, &request, request.slabs);
+        if granted == request.slabs {
+            self.stats.requests_fully_satisfied += 1;
+        } else if granted >= request.min_slabs && granted > 0 {
+            self.stats.requests_partially_satisfied += 1;
+            self.queue_remainder(now, &request, request.slabs - granted);
+        } else if granted == 0 {
+            self.stats.requests_queued += 1;
+            self.queue_remainder(now, &request, request.slabs);
+        }
+        leases
+    }
+
+    fn queue_remainder(&mut self, now: SimTime, request: &ConsumerRequest, remaining: u32) {
+        self.pending.push_back(PendingRequest {
+            request: request.clone(),
+            remaining_slabs: remaining,
+            enqueued: now,
+        });
+    }
+
+    /// Greedy placement of up to `want` slabs; returns (leases, granted).
+    fn place(&mut self, now: SimTime, request: &ConsumerRequest, want: u32) -> (Vec<Lease>, u32) {
+        let price = self.pricing.current_price();
+        // Budget check (§5.2: price must not exceed the consumer budget).
+        if let Some(budget) = request.max_price_per_slab_hour {
+            if price > budget {
+                return (Vec::new(), 0);
+            }
+        }
+        let states = self.registry.producer_states(&self.predictor, request, now);
+        let ranked = placement::rank(&states, request, &self.cfg.weights);
+        let mut leases = Vec::new();
+        let mut granted = 0u32;
+        for state in ranked {
+            if granted >= want {
+                break;
+            }
+            let can_give = state.grantable_slabs().min(want - granted);
+            if can_give == 0 {
+                continue;
+            }
+            let lease = Lease {
+                id: LeaseId(self.next_lease),
+                consumer: request.consumer,
+                producer: state.producer,
+                slabs: can_give,
+                slab_bytes: self.cfg.slab_bytes,
+                start: now,
+                duration: request.lease.max(self.cfg.min_lease),
+                price_per_slab_hour: price,
+            };
+            self.next_lease += 1;
+            granted += can_give;
+            self.registry.note_lease(&lease);
+            self.stats.leases_granted += 1;
+            self.stats.slabs_granted += can_give as u64;
+            self.stats.commission_earned += lease.total_cost().scale(self.cfg.commission);
+            leases.push(lease);
+        }
+        (leases, granted)
+    }
+
+    /// One market epoch (§5): refresh availability predictions, retry the
+    /// pending queue FIFO, expire stale entries, adjust the price.
+    pub fn market_epoch(&mut self, now: SimTime, spot_per_gb_hour: Money) -> Vec<Lease> {
+        self.predictor.refresh(&mut self.registry, now);
+        self.pricing.adjust(&self.registry, spot_per_gb_hour, self.cfg.slab_bytes);
+
+        let mut granted_leases = Vec::new();
+        let mut still_pending = VecDeque::new();
+        while let Some(mut p) = self.pending.pop_front() {
+            if now.saturating_sub(p.enqueued) > self.cfg.pending_timeout {
+                self.stats.requests_expired += 1;
+                continue;
+            }
+            let (leases, granted) = self.place(now, &p.request, p.remaining_slabs);
+            granted_leases.extend(leases);
+            if granted < p.remaining_slabs {
+                p.remaining_slabs -= granted;
+                still_pending.push_back(p);
+            }
+        }
+        self.pending = still_pending;
+        granted_leases
+    }
+
+    /// A lease ended (expired or consumer released it).
+    pub fn lease_ended(&mut self, lease: &Lease, broken: bool) {
+        self.registry.note_lease_end(lease, broken);
+    }
+
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{ConsumerId, ProducerId, GIB};
+
+    fn broker() -> Broker {
+        let cfg = BrokerConfig::default();
+        let predictor = AvailabilityPredictor::fallback(288, 12);
+        let pricing = PricingEngine::new(
+            PricingStrategy::FixedFraction,
+            Money::from_dollars(0.0005),
+            cfg.price_step_dollars,
+        );
+        Broker::new(cfg, predictor, pricing)
+    }
+
+    fn request(consumer: u64, slabs: u32) -> ConsumerRequest {
+        ConsumerRequest {
+            consumer: ConsumerId(consumer),
+            slabs,
+            min_slabs: 1,
+            lease: SimTime::from_hours(1),
+            max_price_per_slab_hour: None,
+            latency_us_to: Default::default(),
+            weights: None,
+        }
+    }
+
+    fn feed_producer(b: &mut Broker, id: u64, cap_gb: f32, used_gb: f32, free_slabs: u32) {
+        b.registry.register_producer(ProducerId(id), cap_gb);
+        for t in 0..300 {
+            b.registry.report_usage(ProducerId(id), SimTime::from_secs(t * 300), used_gb);
+        }
+        b.registry.update_producer_resources(ProducerId(id), free_slabs, 0.8, 0.8);
+        b.predictor.refresh(&mut b.registry, SimTime::from_hours(25));
+    }
+
+    #[test]
+    fn grants_up_to_free_slabs() {
+        let mut b = broker();
+        feed_producer(&mut b, 1, 32.0, 8.0, 64);
+        let leases = b.request_memory(SimTime::from_hours(25), request(1, 32));
+        let total: u32 = leases.iter().map(|l| l.slabs).sum();
+        assert_eq!(total, 32);
+        assert_eq!(b.stats.requests_fully_satisfied, 1);
+    }
+
+    #[test]
+    fn splits_across_producers_lowest_cost_first() {
+        let mut b = broker();
+        feed_producer(&mut b, 1, 32.0, 8.0, 16);
+        feed_producer(&mut b, 2, 32.0, 8.0, 16);
+        let leases = b.request_memory(SimTime::from_hours(25), request(1, 24));
+        assert!(leases.len() >= 2, "should span producers: {leases:?}");
+        let total: u32 = leases.iter().map(|l| l.slabs).sum();
+        assert_eq!(total, 24);
+    }
+
+    #[test]
+    fn queues_when_unsatisfied_and_retries_on_epoch() {
+        let mut b = broker();
+        feed_producer(&mut b, 1, 32.0, 8.0, 4);
+        let leases = b.request_memory(SimTime::from_hours(25), request(1, 64));
+        let got: u32 = leases.iter().map(|l| l.slabs).sum();
+        assert_eq!(got, 4);
+        assert_eq!(b.pending_len(), 1);
+        // New capacity appears; epoch services the queue.
+        b.registry.update_producer_resources(ProducerId(1), 128, 0.8, 0.8);
+        let more = b.market_epoch(
+            SimTime::from_hours(25) + SimTime::from_mins(5),
+            Money::from_dollars(0.002),
+        );
+        let got2: u32 = more.iter().map(|l| l.slabs).sum();
+        assert_eq!(got2, 60);
+        assert_eq!(b.pending_len(), 0);
+    }
+
+    #[test]
+    fn pending_expires() {
+        let mut b = broker();
+        // No producers at all -> queued.
+        b.request_memory(SimTime::from_hours(1), request(1, 8));
+        assert_eq!(b.pending_len(), 1);
+        b.market_epoch(SimTime::from_hours(3), Money::from_dollars(0.002));
+        assert_eq!(b.pending_len(), 0);
+        assert_eq!(b.stats.requests_expired, 1);
+    }
+
+    #[test]
+    fn respects_budget() {
+        let mut b = broker();
+        feed_producer(&mut b, 1, 32.0, 8.0, 64);
+        let mut req = request(1, 8);
+        req.max_price_per_slab_hour = Some(Money::from_dollars(1e-9));
+        let leases = b.request_memory(SimTime::from_hours(25), req);
+        assert!(leases.is_empty());
+    }
+
+    #[test]
+    fn lease_sizing_uses_gib() {
+        let mut b = broker();
+        feed_producer(&mut b, 1, 32.0, 8.0, 64);
+        let leases = b.request_memory(SimTime::from_hours(25), request(1, 16));
+        assert_eq!(leases[0].bytes(), GIB);
+    }
+}

@@ -1,0 +1,195 @@
+//! Placement (paper §5.2): cost-ranked greedy assignment of consumer
+//! slab requests onto producers, under uncertainty about availability.
+//!
+//! The placement cost of a producer is the weighted sum of normalized
+//! metrics: free slabs, predicted availability, bandwidth and CPU
+//! headroom, consumer-producer latency, and reputation. Consumers may
+//! override the weights per request.
+
+use crate::core::config::PlacementWeights;
+use crate::core::{ConsumerId, Money, ProducerId, SimTime};
+use std::collections::HashMap;
+
+/// A consumer's allocation request (§5.2 constraints: online arrival,
+/// partial allocation above `min_slabs` allowed).
+#[derive(Clone, Debug)]
+pub struct ConsumerRequest {
+    pub consumer: ConsumerId,
+    /// Desired slabs.
+    pub slabs: u32,
+    /// Minimum acceptable allocation (partial-allocation floor).
+    pub min_slabs: u32,
+    pub lease: SimTime,
+    /// Budget cap; None = accept the market price.
+    pub max_price_per_slab_hour: Option<Money>,
+    /// Measured latency to each producer (µs); missing = default 200.
+    pub latency_us_to: HashMap<ProducerId, u64>,
+    /// Optional per-request weight override (§5.2).
+    pub weights: Option<PlacementWeights>,
+}
+
+/// Placement-relevant snapshot of one producer.
+#[derive(Clone, Debug)]
+pub struct ProducerState {
+    pub producer: ProducerId,
+    pub free_slabs: u32,
+    pub predicted_safe_slabs: u32,
+    pub cpu_headroom: f64,
+    pub bandwidth_headroom: f64,
+    pub latency_us: u64,
+    pub reputation: f64,
+}
+
+impl ProducerState {
+    /// Slabs the broker will actually grant here: advertised free,
+    /// but never beyond what the forecast says is safe.
+    pub fn grantable_slabs(&self) -> u32 {
+        self.free_slabs.min(self.predicted_safe_slabs)
+    }
+}
+
+/// Outcome summary used by experiment harnesses.
+#[derive(Clone, Debug, Default)]
+pub struct PlacementOutcome {
+    pub granted: u32,
+    pub producers_used: u32,
+}
+
+/// Normalization cap for the latency cost component (µs).
+const LATENCY_NORM_US: f64 = 5_000.0;
+
+/// Placement cost: lower is better (§5.2).
+pub fn cost(state: &ProducerState, weights: &PlacementWeights, max_free: u32) -> f64 {
+    let free_term = if max_free == 0 {
+        1.0
+    } else {
+        1.0 - state.free_slabs as f64 / max_free as f64
+    };
+    let avail_term = if state.free_slabs == 0 {
+        1.0
+    } else {
+        1.0 - (state.predicted_safe_slabs.min(state.free_slabs) as f64
+            / state.free_slabs as f64)
+    };
+    let bw_term = 1.0 - state.bandwidth_headroom.clamp(0.0, 1.0);
+    let cpu_term = 1.0 - state.cpu_headroom.clamp(0.0, 1.0);
+    let lat_term = (state.latency_us as f64 / LATENCY_NORM_US).min(1.0);
+    let rep_term = 1.0 - state.reputation.clamp(0.0, 1.0);
+
+    weights.free_slabs * free_term
+        + weights.predicted_availability * avail_term
+        + weights.bandwidth * bw_term
+        + weights.cpu * cpu_term
+        + weights.latency * lat_term
+        + weights.reputation * rep_term
+}
+
+/// Rank producers by ascending cost for this request; producers with
+/// nothing grantable are dropped.
+pub fn rank(
+    states: &[ProducerState],
+    request: &ConsumerRequest,
+    default_weights: &PlacementWeights,
+) -> Vec<ProducerState> {
+    let weights = request.weights.as_ref().unwrap_or(default_weights);
+    let max_free = states.iter().map(|s| s.free_slabs).max().unwrap_or(0);
+    let mut scored: Vec<(f64, &ProducerState)> = states
+        .iter()
+        .filter(|s| s.grantable_slabs() > 0)
+        .map(|s| (cost(s, weights, max_free), s))
+        .collect();
+    scored.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    scored.into_iter().map(|(_, s)| s.clone()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn state(id: u64, free: u32, safe: u32) -> ProducerState {
+        ProducerState {
+            producer: ProducerId(id),
+            free_slabs: free,
+            predicted_safe_slabs: safe,
+            cpu_headroom: 0.8,
+            bandwidth_headroom: 0.8,
+            latency_us: 200,
+            reputation: 1.0,
+        }
+    }
+
+    fn request() -> ConsumerRequest {
+        ConsumerRequest {
+            consumer: ConsumerId(1),
+            slabs: 16,
+            min_slabs: 1,
+            lease: SimTime::from_hours(1),
+            max_price_per_slab_hour: None,
+            latency_us_to: HashMap::new(),
+            weights: None,
+        }
+    }
+
+    #[test]
+    fn grantable_capped_by_forecast() {
+        assert_eq!(state(1, 100, 40).grantable_slabs(), 40);
+        assert_eq!(state(1, 10, 40).grantable_slabs(), 10);
+        assert_eq!(state(1, 0, 40).grantable_slabs(), 0);
+    }
+
+    #[test]
+    fn rank_prefers_more_free_and_better_reputation() {
+        let w = PlacementWeights::default();
+        let mut bad_rep = state(2, 64, 64);
+        bad_rep.reputation = 0.5;
+        let ranked = rank(&[bad_rep, state(1, 64, 64)], &request(), &w);
+        assert_eq!(ranked[0].producer, ProducerId(1));
+
+        let ranked = rank(&[state(1, 8, 8), state(2, 64, 64)], &request(), &w);
+        assert_eq!(ranked[0].producer, ProducerId(2));
+    }
+
+    #[test]
+    fn rank_prefers_predicted_availability() {
+        let w = PlacementWeights::default();
+        // Producer 1 advertises 64 free but forecast only trusts 8.
+        let ranked = rank(&[state(1, 64, 8), state(2, 64, 64)], &request(), &w);
+        assert_eq!(ranked[0].producer, ProducerId(2));
+    }
+
+    #[test]
+    fn rank_penalizes_latency() {
+        let w = PlacementWeights::default();
+        let mut far = state(2, 64, 64);
+        far.latency_us = 4_000;
+        let ranked = rank(&[far, state(1, 64, 64)], &request(), &w);
+        assert_eq!(ranked[0].producer, ProducerId(1));
+    }
+
+    #[test]
+    fn zero_grantable_dropped() {
+        let w = PlacementWeights::default();
+        let ranked = rank(&[state(1, 0, 64), state(2, 64, 0)], &request(), &w);
+        assert!(ranked.is_empty());
+    }
+
+    #[test]
+    fn weight_override_respected() {
+        let mut req = request();
+        // Only latency matters to this consumer.
+        req.weights = Some(PlacementWeights {
+            free_slabs: 0.0,
+            predicted_availability: 0.0,
+            bandwidth: 0.0,
+            cpu: 0.0,
+            latency: 1.0,
+            reputation: 0.0,
+        });
+        let mut near_but_small = state(1, 2, 2);
+        near_but_small.latency_us = 10;
+        let mut far_but_big = state(2, 64, 64);
+        far_but_big.latency_us = 3_000;
+        let ranked = rank(&[far_but_big, near_but_small], &req, &PlacementWeights::default());
+        assert_eq!(ranked[0].producer, ProducerId(1));
+    }
+}

@@ -1,0 +1,161 @@
+//! Availability predictor (paper §5.1): per market epoch, batch every
+//! producer's usage history through the AOT forecast artifact (ARIMA-
+//! family (d,p) selection + safety margin, compiled from JAX/Pallas) and
+//! cache the resulting safe-slab counts in the registry. Falls back to
+//! the pure-Rust mirror when artifacts are unavailable.
+
+use crate::broker::registry::Registry;
+use crate::core::{SimTime, GIB};
+use crate::runtime::arima_fallback;
+use crate::runtime::engine::{Engine, ForecastEngine, ForecastResult, FORECAST_HORIZON, FORECAST_WINDOW};
+
+enum Backend {
+    Pjrt(ForecastEngine),
+    Fallback,
+}
+
+/// Batched availability predictor.
+pub struct AvailabilityPredictor {
+    backend: Backend,
+    window: usize,
+    horizon: usize,
+    /// Slab size for GB -> slab conversion (bound at refresh()).
+    pub slab_bytes: u64,
+    /// Number of refreshes run (diagnostics).
+    pub refreshes: u64,
+}
+
+impl AvailabilityPredictor {
+    /// Use the compiled PJRT artifact.
+    pub fn from_engine(engine: ForecastEngine) -> Self {
+        AvailabilityPredictor {
+            backend: Backend::Pjrt(engine),
+            window: FORECAST_WINDOW,
+            horizon: FORECAST_HORIZON,
+            slab_bytes: crate::core::DEFAULT_SLAB_BYTES,
+            refreshes: 0,
+        }
+    }
+
+    /// Load from the default artifacts dir, falling back when absent.
+    pub fn auto() -> Self {
+        let dir = Engine::default_dir();
+        if Engine::artifacts_present(&dir) {
+            if let Ok(engine) = Engine::load(&dir) {
+                return Self::from_engine(engine.forecast);
+            }
+        }
+        Self::fallback(FORECAST_WINDOW, FORECAST_HORIZON)
+    }
+
+    /// Pure-Rust mirror (tests, artifact-less runs).
+    pub fn fallback(window: usize, horizon: usize) -> Self {
+        AvailabilityPredictor {
+            backend: Backend::Fallback,
+            window,
+            horizon,
+            slab_bytes: crate::core::DEFAULT_SLAB_BYTES,
+            refreshes: 0,
+        }
+    }
+
+    pub fn is_pjrt(&self) -> bool {
+        matches!(self.backend, Backend::Pjrt(_))
+    }
+
+    fn predict(&self, series: &[Vec<f32>], caps: &[f32]) -> Vec<ForecastResult> {
+        match &self.backend {
+            Backend::Pjrt(engine) => engine
+                .predict(series, caps)
+                .expect("PJRT forecast execution failed"),
+            Backend::Fallback => {
+                arima_fallback::forecast_batch(series, caps, 4, self.horizon, self.window)
+            }
+        }
+    }
+
+    /// Refresh every producer's `predicted_safe_slabs` and
+    /// `predicted_next_usage` (§7.2 accuracy scoring input).
+    pub fn refresh(&mut self, registry: &mut Registry, _now: SimTime) {
+        let mut ids = Vec::new();
+        let mut series = Vec::new();
+        let mut caps = Vec::new();
+        for p in registry.producers() {
+            if p.usage.is_empty() {
+                continue;
+            }
+            ids.push(p.id);
+            series.push(p.usage.to_vec());
+            caps.push(p.capacity_gb);
+        }
+        if ids.is_empty() {
+            return;
+        }
+        let results = self.predict(&series, &caps);
+        let slab_gb = self.slab_bytes as f32 / GIB as f32;
+        let by_id: std::collections::HashMap<_, _> = ids.iter().zip(results).collect();
+        for p in registry.producers_mut() {
+            if let Some(r) = by_id.get(&p.id) {
+                // Safe slabs = the *minimum* safe GB across the horizon —
+                // memory must stay available for the whole lease.
+                let min_safe = r.safe.iter().cloned().fold(f32::INFINITY, f32::min);
+                p.predicted_safe_slabs = (min_safe.max(0.0) / slab_gb) as u32;
+                p.predicted_next_usage = Some(r.pred[0]);
+            }
+        }
+        self.refreshes += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::ProducerId;
+
+    #[test]
+    fn refresh_populates_safe_slabs() {
+        let mut reg = Registry::default();
+        reg.register_producer(ProducerId(1), 32.0);
+        // Steady 8 GB usage -> ~24 GB safe -> ~384 slabs of 64 MB.
+        for t in 0..288 {
+            reg.report_usage(ProducerId(1), SimTime::from_secs(t * 300), 8.0);
+        }
+        let mut pred = AvailabilityPredictor::fallback(288, 12);
+        pred.refresh(&mut reg, SimTime::from_hours(24));
+        let p = reg.producer(ProducerId(1)).unwrap();
+        let safe = p.predicted_safe_slabs;
+        assert!((350..=400).contains(&safe), "safe slabs {safe}");
+        assert!(p.predicted_next_usage.unwrap() > 7.0);
+        assert_eq!(pred.refreshes, 1);
+    }
+
+    #[test]
+    fn rising_usage_shrinks_safe() {
+        let mut reg = Registry::default();
+        reg.register_producer(ProducerId(1), 32.0);
+        reg.register_producer(ProducerId(2), 32.0);
+        for t in 0..288 {
+            reg.report_usage(ProducerId(1), SimTime::from_secs(t * 300), 8.0);
+            // Producer 2 ramping up hard.
+            reg.report_usage(
+                ProducerId(2),
+                SimTime::from_secs(t * 300),
+                8.0 + 0.08 * t as f32,
+            );
+        }
+        let mut pred = AvailabilityPredictor::fallback(288, 12);
+        pred.refresh(&mut reg, SimTime::from_hours(24));
+        let steady = reg.producer(ProducerId(1)).unwrap().predicted_safe_slabs;
+        let rising = reg.producer(ProducerId(2)).unwrap().predicted_safe_slabs;
+        assert!(rising < steady, "rising {rising} !< steady {steady}");
+    }
+
+    #[test]
+    fn empty_history_skipped() {
+        let mut reg = Registry::default();
+        reg.register_producer(ProducerId(1), 32.0);
+        let mut pred = AvailabilityPredictor::fallback(288, 12);
+        pred.refresh(&mut reg, SimTime::ZERO);
+        assert_eq!(reg.producer(ProducerId(1)).unwrap().predicted_safe_slabs, 0);
+    }
+}

@@ -1,0 +1,295 @@
+//! Pricing engine (paper §5.3 / §7.4).
+//!
+//! Strategies:
+//! * **FixedFraction** — the baseline: price = ¼ of the current spot
+//!   price per GB·hour, tracked each epoch.
+//! * **MaxVolume** / **MaxRevenue** — local search: evaluate candidate
+//!   prices {p-Δp, p, p+Δp} against the consumer demand curves (via the
+//!   AOT demand artifact, or the Rust mirror) and move to the candidate
+//!   maximizing the objective. Δp defaults to the paper's 0.002 ¢/GB·h.
+//!
+//! The price is always capped at the spot price (a consumer could rent a
+//! whole spot instance instead, §5.3) and floored at zero.
+
+use crate::broker::registry::Registry;
+use crate::core::{Money, GIB};
+use crate::runtime::arima_fallback;
+use crate::runtime::engine::{DemandEngine, DEMAND_PRICES, DEMAND_SIZES};
+
+/// Economic objective for price adjustment.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PricingStrategy {
+    /// Track ¼ of spot, no search.
+    FixedFraction,
+    /// Maximize total slabs traded.
+    MaxVolume,
+    /// Maximize total producer revenue (the broker's default — its
+    /// commission is proportional).
+    MaxRevenue,
+}
+
+enum DemandBackend {
+    Pjrt(DemandEngine),
+    Fallback,
+}
+
+/// Demand-side inputs for one pricing epoch: each consumer's gain curve
+/// (extra hits/sec at s extra slabs) and per-hit value.
+#[derive(Clone, Debug, Default)]
+pub struct DemandInputs {
+    pub gains: Vec<Vec<f32>>,
+    pub hit_values: Vec<f32>,
+}
+
+impl DemandInputs {
+    pub fn push(&mut self, gain: Vec<f32>, hit_value: f32) {
+        debug_assert_eq!(gain.len(), DEMAND_SIZES);
+        self.gains.push(gain);
+        self.hit_values.push(hit_value);
+    }
+    pub fn len(&self) -> usize {
+        self.gains.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.gains.is_empty()
+    }
+}
+
+/// Result of one pricing evaluation (per candidate).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MarketEval {
+    pub volume: f64,
+    pub revenue: f64,
+}
+
+pub struct PricingEngine {
+    strategy: PricingStrategy,
+    price_per_slab_hour: Money,
+    step: Money,
+    backend: DemandBackend,
+    /// Latest demand inputs installed by the market simulation.
+    demand_inputs: DemandInputs,
+    /// Diagnostics: evaluations per epoch and last evals.
+    pub last_evals: [MarketEval; DEMAND_PRICES],
+    pub epochs: u64,
+}
+
+impl PricingEngine {
+    pub fn new(strategy: PricingStrategy, initial_price: Money, step_dollars_per_gb: f64) -> Self {
+        PricingEngine {
+            strategy,
+            price_per_slab_hour: initial_price,
+            // Δp is quoted per GB·hour in the paper; convert to per slab.
+            step: Money::from_dollars(step_dollars_per_gb * slab_gb()),
+            backend: DemandBackend::Fallback,
+            demand_inputs: DemandInputs::default(),
+            last_evals: [MarketEval::default(); DEMAND_PRICES],
+            epochs: 0,
+        }
+    }
+
+    pub fn with_engine(mut self, engine: DemandEngine) -> Self {
+        self.backend = DemandBackend::Pjrt(engine);
+        self
+    }
+
+    pub fn strategy(&self) -> PricingStrategy {
+        self.strategy
+    }
+
+    pub fn current_price(&self) -> Money {
+        self.price_per_slab_hour
+    }
+
+    pub fn set_price(&mut self, p: Money) {
+        self.price_per_slab_hour = p;
+    }
+
+    /// Install this epoch's demand curves (from the market simulation or
+    /// real consumer reports).
+    pub fn set_demand_inputs(&mut self, inputs: DemandInputs) {
+        self.demand_inputs = inputs;
+    }
+
+    /// Evaluate candidates {p-Δ, p, p+Δ} against current demand inputs.
+    pub fn evaluate_candidates(&mut self, prices: [f64; DEMAND_PRICES]) -> [MarketEval; DEMAND_PRICES] {
+        if self.demand_inputs.is_empty() {
+            return [MarketEval::default(); DEMAND_PRICES];
+        }
+        match &self.backend {
+            DemandBackend::Pjrt(engine) => {
+                let p32 = [prices[0] as f32, prices[1] as f32, prices[2] as f32];
+                let result = engine
+                    .evaluate(&self.demand_inputs.gains, &self.demand_inputs.hit_values, p32)
+                    .expect("PJRT demand execution failed");
+                std::array::from_fn(|k| MarketEval {
+                    volume: result.volume[k],
+                    revenue: result.revenue[k],
+                })
+            }
+            DemandBackend::Fallback => std::array::from_fn(|k| {
+                let mut volume = 0f64;
+                for (gain, &value) in self
+                    .demand_inputs
+                    .gains
+                    .iter()
+                    .zip(&self.demand_inputs.hit_values)
+                {
+                    volume += arima_fallback::demand_one(gain, value, prices[k]) as f64;
+                }
+                MarketEval { volume, revenue: volume * prices[k] }
+            }),
+        }
+    }
+
+    /// One pricing epoch (§5.3): adjust the price per the strategy.
+    /// `spot` is the current spot price per GB·hour.
+    pub fn adjust(&mut self, _registry: &Registry, spot_per_gb_hour: Money, slab_bytes: u64) {
+        self.epochs += 1;
+        let slab_frac = slab_bytes as f64 / GIB as f64;
+        let spot_per_slab = spot_per_gb_hour.scale(slab_frac);
+        match self.strategy {
+            PricingStrategy::FixedFraction => {
+                self.price_per_slab_hour = spot_per_slab.scale(0.25);
+            }
+            PricingStrategy::MaxVolume | PricingStrategy::MaxRevenue => {
+                let p = self.price_per_slab_hour.as_dollars();
+                let dp = self.step.as_dollars().max(1e-9);
+                let candidates = [(p - dp).max(0.0), p, p + dp];
+                let evals = self.evaluate_candidates(candidates);
+                self.last_evals = evals;
+                let key = |e: &MarketEval| match self.strategy {
+                    PricingStrategy::MaxVolume => e.volume,
+                    _ => e.revenue,
+                };
+                let mut best = 1; // stay put on ties
+                for k in 0..DEMAND_PRICES {
+                    if key(&evals[k]) > key(&evals[best]) {
+                        best = k;
+                    }
+                }
+                self.price_per_slab_hour = Money::from_dollars(candidates[best]);
+            }
+        }
+        // Never exceed spot (the consumer's outside option); never fall
+        // below a small floor (2% of spot) covering market operating
+        // costs — this keeps the max-volume strategy from racing to zero.
+        let floor = spot_per_slab.scale(0.02);
+        if self.price_per_slab_hour > spot_per_slab {
+            self.price_per_slab_hour = spot_per_slab;
+        }
+        if self.price_per_slab_hour < floor {
+            self.price_per_slab_hour = floor;
+        }
+    }
+}
+
+fn slab_gb() -> f64 {
+    crate::core::DEFAULT_SLAB_BYTES as f64 / GIB as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::DEFAULT_SLAB_BYTES;
+
+    fn concave_gain(rate: f64, knee: f64) -> Vec<f32> {
+        (0..DEMAND_SIZES)
+            .map(|s| (rate * (1.0 - (-(s as f64) / knee).exp())) as f32)
+            .collect()
+    }
+
+    fn inputs(n: usize) -> DemandInputs {
+        let mut d = DemandInputs::default();
+        for i in 0..n {
+            d.push(concave_gain(500.0 + i as f64, 10.0), 1e-4);
+        }
+        d
+    }
+
+    #[test]
+    fn fixed_fraction_tracks_spot() {
+        let mut e = PricingEngine::new(PricingStrategy::FixedFraction, Money::ZERO, 0.00002);
+        let reg = Registry::default();
+        e.adjust(&reg, Money::from_dollars(0.0040), DEFAULT_SLAB_BYTES);
+        // slab = 1/16 GB; spot/slab = 0.00025; quarter = 0.0000625.
+        assert!((e.current_price().as_dollars() - 0.0000625).abs() < 1e-9);
+    }
+
+    #[test]
+    fn search_moves_toward_objective() {
+        let mut e = PricingEngine::new(
+            PricingStrategy::MaxRevenue,
+            Money::from_dollars(0.00001),
+            0.00002,
+        );
+        e.set_demand_inputs(inputs(100));
+        let reg = Registry::default();
+        let mut last = e.current_price();
+        // Revenue at tiny prices grows with price (demand barely falls):
+        // the search should walk upward.
+        for _ in 0..10 {
+            e.adjust(&reg, Money::from_dollars(1.0), DEFAULT_SLAB_BYTES);
+        }
+        assert!(e.current_price() > last, "price did not rise: {}", e.current_price());
+        last = e.current_price();
+        let _ = last;
+    }
+
+    #[test]
+    fn price_capped_at_spot() {
+        let mut e = PricingEngine::new(
+            PricingStrategy::MaxRevenue,
+            Money::from_dollars(100.0),
+            0.00002,
+        );
+        e.set_demand_inputs(inputs(10));
+        let reg = Registry::default();
+        e.adjust(&reg, Money::from_dollars(0.0040), DEFAULT_SLAB_BYTES);
+        let spot_per_slab = 0.0040 / 16.0;
+        assert!(e.current_price().as_dollars() <= spot_per_slab + 1e-12);
+    }
+
+    #[test]
+    fn volume_vs_revenue_objectives_differ() {
+        // With demand that collapses above a threshold price, MaxVolume
+        // stays low while MaxRevenue pushes to just under the cliff.
+        let mut vol = PricingEngine::new(
+            PricingStrategy::MaxVolume,
+            Money::from_dollars(0.0001),
+            0.00002,
+        );
+        let mut rev = PricingEngine::new(
+            PricingStrategy::MaxRevenue,
+            Money::from_dollars(0.0001),
+            0.00002,
+        );
+        let reg = Registry::default();
+        for _ in 0..50 {
+            vol.set_demand_inputs(inputs(50));
+            rev.set_demand_inputs(inputs(50));
+            vol.adjust(&reg, Money::from_dollars(1.0), DEFAULT_SLAB_BYTES);
+            rev.adjust(&reg, Money::from_dollars(1.0), DEFAULT_SLAB_BYTES);
+        }
+        assert!(rev.current_price() >= vol.current_price());
+    }
+
+    #[test]
+    fn empty_demand_keeps_price_within_floor_and_cap() {
+        let mut e = PricingEngine::new(
+            PricingStrategy::MaxRevenue,
+            Money::from_dollars(0.005),
+            0.00002,
+        );
+        let reg = Registry::default();
+        // With no demand inputs the search leaves the price alone (it sits
+        // between the 2%-of-spot floor and the spot cap).
+        e.adjust(&reg, Money::from_dollars(1.0), DEFAULT_SLAB_BYTES);
+        assert!((e.current_price().as_dollars() - 0.005).abs() < 1e-9);
+        // Below the floor it is raised to the floor.
+        e.set_price(Money::from_dollars(1e-9));
+        e.adjust(&reg, Money::from_dollars(1.0), DEFAULT_SLAB_BYTES);
+        let floor = (1.0 / 16.0) * 0.02;
+        assert!((e.current_price().as_dollars() - floor).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,268 @@
+//! Broker-side records of market participants: producer usage histories
+//! (the forecast inputs), resource headroom, reputation, and lease
+//! bookkeeping.
+
+use crate::broker::placement::{ConsumerRequest, ProducerState};
+use crate::broker::predictor::AvailabilityPredictor;
+use crate::core::{ConsumerId, Lease, ProducerId, SimTime};
+use crate::util::timeseries::TimeSeries;
+use std::collections::HashMap;
+
+/// Broker-side view of one producer.
+pub struct ProducerRecord {
+    pub id: ProducerId,
+    pub capacity_gb: f32,
+    /// Usage samples (GB), 5-minute cadence by convention.
+    pub usage: TimeSeries,
+    /// Free slabs advertised in the latest manager report.
+    pub free_slabs: u32,
+    pub cpu_headroom: f64,
+    pub bandwidth_headroom: f64,
+    /// Slabs safe to lease per the latest forecast refresh.
+    pub predicted_safe_slabs: u32,
+    /// Forecast of next-step usage (for §7.2 accuracy accounting).
+    pub predicted_next_usage: Option<f32>,
+    /// Reputation inputs (§5: fraction of leases not broken early).
+    pub slabs_leased_total: u64,
+    pub slabs_broken: u64,
+    /// Currently leased slabs (broker view).
+    pub slabs_leased_now: u32,
+    /// §7.2 accuracy: count of (checks, over-predictions by >4%).
+    pub accuracy_checks: u64,
+    pub overpredictions: u64,
+}
+
+impl ProducerRecord {
+    pub fn reputation(&self) -> f64 {
+        if self.slabs_leased_total == 0 {
+            1.0
+        } else {
+            1.0 - (self.slabs_broken as f64 / self.slabs_leased_total as f64).min(1.0)
+        }
+    }
+}
+
+/// Broker-side view of one consumer (connection credentials are opaque
+/// here; the broker only brokers, §3).
+#[derive(Clone, Debug, Default)]
+pub struct ConsumerRecord {
+    pub leases_active: u32,
+    pub slabs_active: u32,
+}
+
+/// Participant registry.
+#[derive(Default)]
+pub struct Registry {
+    producers: HashMap<ProducerId, ProducerRecord>,
+    consumers: HashMap<ConsumerId, ConsumerRecord>,
+}
+
+impl Registry {
+    pub fn register_producer(&mut self, id: ProducerId, capacity_gb: f32) {
+        self.producers.entry(id).or_insert_with(|| ProducerRecord {
+            id,
+            capacity_gb,
+            usage: TimeSeries::new(288),
+            free_slabs: 0,
+            cpu_headroom: 1.0,
+            bandwidth_headroom: 1.0,
+            predicted_safe_slabs: 0,
+            predicted_next_usage: None,
+            slabs_leased_total: 0,
+            slabs_broken: 0,
+            slabs_leased_now: 0,
+            accuracy_checks: 0,
+            overpredictions: 0,
+        });
+    }
+
+    pub fn deregister_producer(&mut self, id: ProducerId) {
+        self.producers.remove(&id);
+    }
+
+    pub fn register_consumer(&mut self, id: ConsumerId) {
+        self.consumers.entry(id).or_default();
+    }
+
+    pub fn producer_count(&self) -> usize {
+        self.producers.len()
+    }
+    pub fn consumer_count(&self) -> usize {
+        self.consumers.len()
+    }
+
+    /// Periodic usage report (§3): appended to the forecast history, and
+    /// scored against the previous prediction (§7.2 accuracy).
+    pub fn report_usage(&mut self, id: ProducerId, _now: SimTime, used_gb: f32) {
+        if let Some(p) = self.producers.get_mut(&id) {
+            if let Some(pred) = p.predicted_next_usage.take() {
+                p.accuracy_checks += 1;
+                // §7.2: an over-prediction is counted when the forecast
+                // exceeds actual usage by more than 4% of VM capacity.
+                if pred > used_gb + 0.04 * p.capacity_gb {
+                    p.overpredictions += 1;
+                }
+            }
+            p.usage.push(used_gb);
+        }
+    }
+
+    /// Manager resource report: free slabs + headroom.
+    pub fn update_producer_resources(
+        &mut self,
+        id: ProducerId,
+        free_slabs: u32,
+        cpu_headroom: f64,
+        bandwidth_headroom: f64,
+    ) {
+        if let Some(p) = self.producers.get_mut(&id) {
+            p.free_slabs = free_slabs;
+            p.cpu_headroom = cpu_headroom;
+            p.bandwidth_headroom = bandwidth_headroom;
+        }
+    }
+
+    pub fn note_lease(&mut self, lease: &Lease) {
+        if let Some(p) = self.producers.get_mut(&lease.producer) {
+            p.slabs_leased_total += lease.slabs as u64;
+            p.slabs_leased_now += lease.slabs;
+            p.free_slabs = p.free_slabs.saturating_sub(lease.slabs);
+        }
+        if let Some(c) = self.consumers.get_mut(&lease.consumer) {
+            c.leases_active += 1;
+            c.slabs_active += lease.slabs;
+        }
+    }
+
+    pub fn note_lease_end(&mut self, lease: &Lease, broken: bool) {
+        if let Some(p) = self.producers.get_mut(&lease.producer) {
+            p.slabs_leased_now = p.slabs_leased_now.saturating_sub(lease.slabs);
+            if broken {
+                p.slabs_broken += lease.slabs as u64;
+            }
+        }
+        if let Some(c) = self.consumers.get_mut(&lease.consumer) {
+            c.leases_active = c.leases_active.saturating_sub(1);
+            c.slabs_active = c.slabs_active.saturating_sub(lease.slabs);
+        }
+    }
+
+    pub fn producer(&self, id: ProducerId) -> Option<&ProducerRecord> {
+        self.producers.get(&id)
+    }
+
+    pub fn producers_mut(&mut self) -> impl Iterator<Item = &mut ProducerRecord> {
+        self.producers.values_mut()
+    }
+
+    pub fn producers(&self) -> impl Iterator<Item = &ProducerRecord> {
+        self.producers.values()
+    }
+
+    /// Snapshot the placement inputs for one request (§5.2).
+    pub fn producer_states(
+        &self,
+        _predictor: &AvailabilityPredictor,
+        request: &ConsumerRequest,
+        _now: SimTime,
+    ) -> Vec<ProducerState> {
+        self.producers
+            .values()
+            .map(|p| ProducerState {
+                producer: p.id,
+                free_slabs: p.free_slabs,
+                predicted_safe_slabs: p.predicted_safe_slabs,
+                cpu_headroom: p.cpu_headroom,
+                bandwidth_headroom: p.bandwidth_headroom,
+                latency_us: request
+                    .latency_us_to
+                    .get(&p.id)
+                    .copied()
+                    .unwrap_or(200),
+                reputation: p.reputation(),
+            })
+            .collect()
+    }
+
+    /// §7.2 accuracy aggregates: (checks, overpredictions).
+    pub fn prediction_accuracy(&self) -> (u64, u64) {
+        let mut checks = 0;
+        let mut over = 0;
+        for p in self.producers.values() {
+            checks += p.accuracy_checks;
+            over += p.overpredictions;
+        }
+        (checks, over)
+    }
+
+    /// Fraction of leased slabs broken early, cluster-wide.
+    pub fn broken_fraction(&self) -> f64 {
+        let total: u64 = self.producers.values().map(|p| p.slabs_leased_total).sum();
+        let broken: u64 = self.producers.values().map(|p| p.slabs_broken).sum();
+        if total == 0 {
+            0.0
+        } else {
+            broken as f64 / total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{LeaseId, Money, DEFAULT_SLAB_BYTES};
+
+    fn lease(producer: u64, consumer: u64, slabs: u32) -> Lease {
+        Lease {
+            id: LeaseId(1),
+            consumer: ConsumerId(consumer),
+            producer: ProducerId(producer),
+            slabs,
+            slab_bytes: DEFAULT_SLAB_BYTES,
+            start: SimTime::ZERO,
+            duration: SimTime::from_hours(1),
+            price_per_slab_hour: Money::from_dollars(0.0001),
+        }
+    }
+
+    #[test]
+    fn lease_bookkeeping_and_reputation() {
+        let mut r = Registry::default();
+        r.register_producer(ProducerId(1), 32.0);
+        r.register_consumer(ConsumerId(9));
+        r.update_producer_resources(ProducerId(1), 64, 0.9, 0.9);
+        let l = lease(1, 9, 16);
+        r.note_lease(&l);
+        let p = r.producer(ProducerId(1)).unwrap();
+        assert_eq!(p.free_slabs, 48);
+        assert_eq!(p.slabs_leased_now, 16);
+        assert_eq!(p.reputation(), 1.0);
+        r.note_lease_end(&l, true);
+        let p = r.producer(ProducerId(1)).unwrap();
+        assert_eq!(p.slabs_leased_now, 0);
+        assert!((p.reputation() - 0.0).abs() < 1e-12); // all slabs broken
+        assert!((r.broken_fraction() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn accuracy_scoring() {
+        let mut r = Registry::default();
+        r.register_producer(ProducerId(1), 32.0);
+        // Prediction 10 GB, actual 8 GB -> overprediction by 25% (> 4%).
+        r.producers_mut().next().unwrap().predicted_next_usage = Some(10.0);
+        r.report_usage(ProducerId(1), SimTime::ZERO, 8.0);
+        // Prediction 8.1 GB, actual 8.0 -> within 4%.
+        r.producers_mut().next().unwrap().predicted_next_usage = Some(8.1);
+        r.report_usage(ProducerId(1), SimTime::ZERO, 8.0);
+        assert_eq!(r.prediction_accuracy(), (2, 1));
+    }
+
+    #[test]
+    fn deregister() {
+        let mut r = Registry::default();
+        r.register_producer(ProducerId(1), 16.0);
+        assert_eq!(r.producer_count(), 1);
+        r.deregister_producer(ProducerId(1));
+        assert_eq!(r.producer_count(), 0);
+    }
+}

@@ -1,0 +1,301 @@
+//! The consumer's secure KV client (paper §6.1).
+//!
+//! Wraps any transport (simulated manager, TCP producer store) with the
+//! paper's confidentiality/integrity construction via [`crate::crypto::
+//! Envelope`]: PUT encrypts and substitutes the key; GET verifies the
+//! truncated SHA-256 before decrypting; DELETE removes local metadata
+//! then synchronizes the producer store. Local metadata (the `(K_C ->
+//! M_C)` map) lives in consumer memory and is byte-accounted so the
+//! paper's overhead numbers (§7.3) can be reproduced.
+
+use crate::crypto::secure::{Envelope, OpenError, Sealed, SealedValue};
+use crate::net::wire::{Request, Response};
+use std::collections::HashMap;
+
+/// Anything that can carry a request to one producer store.
+pub trait KvTransport {
+    fn call(&mut self, producer_index: u32, req: Request) -> Response;
+}
+
+/// Blanket impl so closures can act as transports in tests/sims.
+impl<F: FnMut(u32, Request) -> Response> KvTransport for F {
+    fn call(&mut self, producer_index: u32, req: Request) -> Response {
+        self(producer_index, req)
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct SecureKvStats {
+    pub puts: u64,
+    pub gets: u64,
+    pub hits: u64,
+    pub misses: u64,
+    pub deletes: u64,
+    pub integrity_failures: u64,
+    pub throttled: u64,
+    pub rejected: u64,
+}
+
+/// The secure consumer-side KV cache over leased remote memory.
+pub struct SecureKv {
+    envelope: Envelope,
+    /// K_C -> M_C (paper §6.1): the local metadata map.
+    metadata: HashMap<Vec<u8>, SealedValue>,
+    /// Round-robin cursor over producer stores.
+    next_producer: u32,
+    n_producers: u32,
+    pub stats: SecureKvStats,
+}
+
+impl SecureKv {
+    /// `key = None` disables encryption; `integrity` controls hashing.
+    /// `n_producers` is the number of producer stores leased.
+    pub fn new(key: Option<[u8; 16]>, integrity: bool, n_producers: u32, seed: u64) -> Self {
+        SecureKv {
+            envelope: Envelope::new(key, integrity, seed),
+            metadata: HashMap::new(),
+            next_producer: 0,
+            n_producers: n_producers.max(1),
+            stats: SecureKvStats::default(),
+        }
+    }
+
+    pub fn n_producers(&self) -> u32 {
+        self.n_producers
+    }
+
+    pub fn set_n_producers(&mut self, n: u32) {
+        self.n_producers = n.max(1);
+    }
+
+    /// Number of locally cached KV metadata entries.
+    pub fn len(&self) -> usize {
+        self.metadata.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.metadata.is_empty()
+    }
+
+    /// Local metadata bytes (paper §6.1 "Metadata Overhead"): per entry,
+    /// the key itself plus 24 B (encrypting) or 16 B (integrity-only).
+    pub fn metadata_bytes(&self) -> usize {
+        let per = SealedValue::metadata_bytes(self.envelope.encrypting());
+        self.metadata.keys().map(|k| k.len() + per).sum()
+    }
+
+    /// PUT (paper §6.1): seal, pick a producer store, send under K_P.
+    pub fn put<T: KvTransport>(&mut self, t: &mut T, key: &[u8], value: &[u8]) -> bool {
+        self.stats.puts += 1;
+        let producer = self.next_producer % self.n_producers;
+        self.next_producer = self.next_producer.wrapping_add(1);
+        let Sealed { value_p, meta } = self.envelope.seal(value, producer);
+        let k_p = meta.k_p.to_le_bytes().to_vec();
+        match t.call(producer, Request::Put { key: k_p, value: value_p }) {
+            Response::Stored => {
+                self.metadata.insert(key.to_vec(), meta);
+                true
+            }
+            Response::Throttled { .. } => {
+                self.stats.throttled += 1;
+                false
+            }
+            _ => {
+                self.stats.rejected += 1;
+                false
+            }
+        }
+    }
+
+    /// GET (paper §6.1): local metadata lookup, fetch under K_P, verify
+    /// hash, decrypt. A failed verification discards the value (miss).
+    pub fn get<T: KvTransport>(&mut self, t: &mut T, key: &[u8]) -> Option<Vec<u8>> {
+        self.stats.gets += 1;
+        let meta = match self.metadata.get(key) {
+            Some(m) => m.clone(),
+            None => {
+                self.stats.misses += 1;
+                return None;
+            }
+        };
+        let k_p = meta.k_p.to_le_bytes().to_vec();
+        match t.call(meta.producer_index, Request::Get { key: k_p }) {
+            Response::Value(value_p) => match self.envelope.open(&value_p, &meta) {
+                Ok(v) => {
+                    self.stats.hits += 1;
+                    Some(v)
+                }
+                Err(OpenError::BadHash) | Err(OpenError::BadCiphertext) => {
+                    // Corrupted by the untrusted producer: discard.
+                    self.stats.integrity_failures += 1;
+                    self.stats.misses += 1;
+                    self.metadata.remove(key);
+                    None
+                }
+            },
+            Response::Throttled { .. } => {
+                self.stats.throttled += 1;
+                self.stats.misses += 1;
+                None
+            }
+            _ => {
+                // Evicted at the producer (or lease gone): drop metadata.
+                self.stats.misses += 1;
+                self.metadata.remove(key);
+                None
+            }
+        }
+    }
+
+    /// DELETE (paper §6.1): remove local metadata, then synchronize the
+    /// producer store.
+    pub fn delete<T: KvTransport>(&mut self, t: &mut T, key: &[u8]) -> bool {
+        self.stats.deletes += 1;
+        let Some(meta) = self.metadata.remove(key) else {
+            return false;
+        };
+        let k_p = meta.k_p.to_le_bytes().to_vec();
+        matches!(
+            t.call(meta.producer_index, Request::Delete { key: k_p }),
+            Response::Deleted(true)
+        )
+    }
+
+    /// Hit ratio observed so far.
+    pub fn hit_ratio(&self) -> f64 {
+        if self.stats.gets == 0 {
+            0.0
+        } else {
+            self.stats.hits as f64 / self.stats.gets as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kv::KvStore;
+
+    /// In-memory transport over N KvStores.
+    struct MemTransport {
+        stores: Vec<KvStore>,
+    }
+
+    impl MemTransport {
+        fn new(n: usize) -> Self {
+            MemTransport {
+                stores: (0..n).map(|i| KvStore::new(16 << 20, i as u64)).collect(),
+            }
+        }
+    }
+
+    impl KvTransport for MemTransport {
+        fn call(&mut self, producer: u32, req: Request) -> Response {
+            let kv = &mut self.stores[producer as usize];
+            match req {
+                Request::Get { key } => match kv.get(&key) {
+                    Some(v) => Response::Value(v),
+                    None => Response::NotFound,
+                },
+                Request::Put { key, value } => {
+                    if kv.put(&key, &value) {
+                        Response::Stored
+                    } else {
+                        Response::Rejected
+                    }
+                }
+                Request::Delete { key } => Response::Deleted(kv.delete(&key)),
+                Request::Ping => Response::Pong,
+            }
+        }
+    }
+
+    #[test]
+    fn put_get_round_trip_encrypted() {
+        let mut t = MemTransport::new(2);
+        let mut c = SecureKv::new(Some([1u8; 16]), true, 2, 42);
+        assert!(c.put(&mut t, b"mykey", b"myvalue"));
+        assert_eq!(c.get(&mut t, b"mykey"), Some(b"myvalue".to_vec()));
+        assert_eq!(c.hit_ratio(), 1.0);
+        // The producer never sees plaintext key or value.
+        for store in &mut t.stores {
+            assert_eq!(store.get(b"mykey"), None);
+            if let Some(k) = store.sample_key() {
+                let v = store.get(&k).unwrap();
+                assert!(!v.windows(7).any(|w| w == b"myvalue"));
+            }
+        }
+    }
+
+    #[test]
+    fn round_robin_spreads_across_producers() {
+        let mut t = MemTransport::new(4);
+        let mut c = SecureKv::new(Some([1u8; 16]), true, 4, 1);
+        for i in 0..40 {
+            assert!(c.put(&mut t, format!("k{i}").as_bytes(), b"v"));
+        }
+        for store in &t.stores {
+            assert!(store.len() >= 5, "store imbalance: {}", store.len());
+        }
+    }
+
+    #[test]
+    fn corruption_detected_and_discarded() {
+        let mut t = MemTransport::new(1);
+        let mut c = SecureKv::new(Some([1u8; 16]), true, 1, 7);
+        assert!(c.put(&mut t, b"key", b"value"));
+        // Corrupt the stored bytes.
+        let k_p = 0u64.to_le_bytes().to_vec();
+        let mut stored = t.stores[0].get(&k_p).unwrap();
+        stored[3] ^= 0xff;
+        t.stores[0].put(&k_p, &stored);
+        assert_eq!(c.get(&mut t, b"key"), None);
+        assert_eq!(c.stats.integrity_failures, 1);
+        // Metadata dropped: subsequent get is a local miss.
+        assert_eq!(c.get(&mut t, b"key"), None);
+        assert_eq!(c.stats.misses, 2);
+    }
+
+    #[test]
+    fn remote_eviction_is_a_miss() {
+        let mut t = MemTransport::new(1);
+        let mut c = SecureKv::new(Some([1u8; 16]), true, 1, 9);
+        assert!(c.put(&mut t, b"key", b"value"));
+        let k_p = 0u64.to_le_bytes().to_vec();
+        t.stores[0].delete(&k_p);
+        assert_eq!(c.get(&mut t, b"key"), None);
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn delete_synchronizes() {
+        let mut t = MemTransport::new(1);
+        let mut c = SecureKv::new(Some([1u8; 16]), true, 1, 3);
+        assert!(c.put(&mut t, b"key", b"value"));
+        assert!(c.delete(&mut t, b"key"));
+        assert_eq!(t.stores[0].len(), 0);
+        assert!(!c.delete(&mut t, b"key"));
+    }
+
+    #[test]
+    fn metadata_overhead_accounting() {
+        let mut t = MemTransport::new(1);
+        let mut enc = SecureKv::new(Some([1u8; 16]), true, 1, 3);
+        enc.put(&mut t, b"12345678", b"v");
+        assert_eq!(enc.metadata_bytes(), 8 + 24);
+        let mut int_only = SecureKv::new(None, true, 1, 3);
+        int_only.put(&mut t, b"12345678", b"v");
+        assert_eq!(int_only.metadata_bytes(), 8 + 16);
+    }
+
+    #[test]
+    fn closure_transport_works() {
+        let mut c = SecureKv::new(None, false, 1, 3);
+        let mut echo = |_p: u32, req: Request| match req {
+            Request::Put { .. } => Response::Stored,
+            Request::Get { .. } => Response::NotFound,
+            _ => Response::Pong,
+        };
+        assert!(c.put(&mut echo, b"k", b"v"));
+        assert_eq!(c.get(&mut echo, b"k"), None);
+    }
+}

@@ -1,0 +1,14 @@
+//! The consumer side of Memtrade (paper §6): the secure KV client
+//! (encryption + integrity + key substitution over any transport), the
+//! swap-interface model, SHARDS-style MRC profiling, and the §6.2
+//! purchasing strategy.
+
+pub mod client;
+pub mod mrc;
+pub mod purchase;
+pub mod swap_iface;
+
+pub use client::{KvTransport, SecureKv, SecureKvStats};
+pub use mrc::MrcProfiler;
+pub use purchase::PurchasePlan;
+pub use swap_iface::SwapInterfaceModel;

@@ -1,0 +1,259 @@
+//! SHARDS-style miss-ratio-curve profiler (paper §6.2: "lightweight
+//! sampling-based techniques [SHARDS] can estimate miss ratio curves
+//! accurately, yielding the expected performance benefit from a larger
+//! cache size").
+//!
+//! Spatial hash sampling at rate R: a key is tracked iff
+//! `hash(key) mod P < R*P`. For tracked keys we measure LRU reuse
+//! distances (distinct tracked keys touched since the previous access,
+//! scaled by 1/R) and build a histogram; the MRC is its complementary
+//! CDF over cache sizes.
+
+use std::collections::HashMap;
+
+/// Fixed-point modulus for the sampling filter.
+const P: u64 = 1 << 24;
+
+fn key_hash(key: &[u8]) -> u64 {
+    // FNV-1a 64.
+    let mut h = 0xcbf29ce484222325u64;
+    for &b in key {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    // Final avalanche for better low-bit uniformity.
+    let mut z = h;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// Online MRC estimator.
+pub struct MrcProfiler {
+    threshold: u64,
+    rate: f64,
+    /// Tracked key -> logical time of last access.
+    last_access: HashMap<u64, u64>,
+    /// Sorted logical times of tracked keys (for reuse-distance ranks).
+    /// Kept as a Fenwick tree over time buckets.
+    fenwick: Fenwick,
+    clock: u64,
+    /// Histogram of scaled reuse distances, bucketed by `bucket_keys`.
+    pub histogram: Vec<u64>,
+    bucket_keys: u64,
+    /// Accesses to never-seen tracked keys (cold misses).
+    cold: u64,
+    total_sampled: u64,
+    pub total_accesses: u64,
+}
+
+/// Fenwick tree over logical-time slots, supporting point update and
+/// suffix count (how many tracked keys were accessed after time t).
+struct Fenwick {
+    tree: Vec<u64>,
+}
+
+impl Fenwick {
+    fn new(capacity: usize) -> Self {
+        Fenwick { tree: vec![0; capacity + 1] }
+    }
+    fn ensure(&mut self, idx: usize) {
+        if idx + 1 >= self.tree.len() {
+            self.tree.resize((idx + 2).next_power_of_two(), 0);
+        }
+    }
+    fn add(&mut self, mut i: usize, delta: i64) {
+        self.ensure(i);
+        i += 1;
+        while i < self.tree.len() {
+            self.tree[i] = (self.tree[i] as i64 + delta) as u64;
+            i += i & i.wrapping_neg();
+        }
+    }
+    /// Count of live entries with time <= i.
+    fn prefix(&self, mut i: usize) -> u64 {
+        i = (i + 1).min(self.tree.len() - 1);
+        let mut s = 0;
+        while i > 0 {
+            s += self.tree[i];
+            i -= i & i.wrapping_neg();
+        }
+        s
+    }
+    fn total(&self) -> u64 {
+        self.prefix(self.tree.len() - 2)
+    }
+}
+
+impl MrcProfiler {
+    /// `rate` in (0, 1]: fraction of the key space sampled.
+    /// `bucket_keys`: histogram bucket width in (unscaled) key counts.
+    pub fn new(rate: f64, bucket_keys: u64, max_buckets: usize) -> Self {
+        assert!(rate > 0.0 && rate <= 1.0);
+        MrcProfiler {
+            threshold: (rate * P as f64) as u64,
+            rate,
+            last_access: HashMap::new(),
+            fenwick: Fenwick::new(1024),
+            clock: 0,
+            histogram: vec![0; max_buckets + 1],
+            bucket_keys,
+            cold: 0,
+            total_sampled: 0,
+            total_accesses: 0,
+        }
+    }
+
+    /// Record one key access.
+    pub fn record(&mut self, key: &[u8]) {
+        self.total_accesses += 1;
+        let h = key_hash(key);
+        if h % P >= self.threshold {
+            return;
+        }
+        self.total_sampled += 1;
+        self.clock += 1;
+        let t = self.clock;
+        match self.last_access.insert(h, t) {
+            None => {
+                self.cold += 1;
+            }
+            Some(prev) => {
+                // Distinct tracked keys accessed since prev = live entries
+                // with last-access time > prev.
+                let after = self.fenwick.total() - self.fenwick.prefix(prev as usize);
+                let scaled = (after as f64 / self.rate) as u64;
+                let bucket =
+                    ((scaled / self.bucket_keys) as usize).min(self.histogram.len() - 1);
+                self.histogram[bucket] += 1;
+                self.fenwick.add(prev as usize, -1);
+            }
+        }
+        self.fenwick.add(t as usize, 1);
+    }
+
+    /// Miss ratio curve over cache sizes measured in *keys*:
+    /// `mrc[b]` = estimated miss ratio with capacity `b * bucket_keys`.
+    pub fn mrc(&self) -> Vec<f64> {
+        let reuse_total: u64 = self.histogram.iter().sum();
+        let denom = (reuse_total + self.cold) as f64;
+        if denom == 0.0 {
+            return vec![1.0; self.histogram.len()];
+        }
+        let mut hits_cum = 0u64;
+        self.histogram
+            .iter()
+            .map(|&c| {
+                let mr = 1.0 - hits_cum as f64 / denom;
+                hits_cum += c;
+                mr
+            })
+            .collect()
+    }
+
+    pub fn sampled_fraction(&self) -> f64 {
+        if self.total_accesses == 0 {
+            0.0
+        } else {
+            self.total_sampled as f64 / self.total_accesses as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::{Rng, Zipfian};
+
+    /// Exact LRU stack-distance simulation for comparison.
+    fn exact_miss_ratios(accesses: &[u64], capacities: &[usize]) -> Vec<f64> {
+        let mut results = Vec::new();
+        for &cap in capacities {
+            let mut stack: Vec<u64> = Vec::new();
+            let mut misses = 0usize;
+            for &k in accesses {
+                if let Some(pos) = stack.iter().position(|&x| x == k) {
+                    if pos >= cap {
+                        misses += 1;
+                    }
+                    stack.remove(pos);
+                } else {
+                    misses += 1;
+                }
+                stack.insert(0, k);
+            }
+            results.push(misses as f64 / accesses.len() as f64);
+        }
+        results
+    }
+
+    #[test]
+    fn full_rate_matches_exact_lru() {
+        // rate=1.0: the profiler IS an exact reuse-distance counter.
+        let mut rng = Rng::new(3);
+        let zipf = Zipfian::new(500, 0.8);
+        let accesses: Vec<u64> = (0..20_000).map(|_| zipf.sample(&mut rng)).collect();
+
+        let mut prof = MrcProfiler::new(1.0, 10, 100);
+        for &k in &accesses {
+            prof.record(&k.to_le_bytes());
+        }
+        let mrc = prof.mrc();
+        let caps = [50usize, 100, 200, 400];
+        let exact = exact_miss_ratios(&accesses, &caps);
+        for (i, &cap) in caps.iter().enumerate() {
+            let est = mrc[cap / 10];
+            assert!(
+                (est - exact[i]).abs() < 0.06,
+                "cap {cap}: est {est} exact {}",
+                exact[i]
+            );
+        }
+    }
+
+    #[test]
+    fn sampled_rate_close_to_exact() {
+        let mut rng = Rng::new(9);
+        let zipf = Zipfian::new(2000, 0.75);
+        let accesses: Vec<u64> = (0..200_000).map(|_| zipf.sample(&mut rng)).collect();
+
+        let mut prof = MrcProfiler::new(0.1, 50, 100);
+        for &k in &accesses {
+            prof.record(&k.to_le_bytes());
+        }
+        assert!((prof.sampled_fraction() - 0.1).abs() < 0.03);
+        let mrc = prof.mrc();
+        let caps = [200usize, 500, 1000];
+        let exact = exact_miss_ratios(&accesses, &caps);
+        for (i, &cap) in caps.iter().enumerate() {
+            let est = mrc[cap / 50];
+            assert!(
+                (est - exact[i]).abs() < 0.1,
+                "cap {cap}: est {est} exact {}",
+                exact[i]
+            );
+        }
+    }
+
+    #[test]
+    fn mrc_monotone() {
+        let mut rng = Rng::new(5);
+        let zipf = Zipfian::new(300, 0.7);
+        let mut prof = MrcProfiler::new(0.5, 10, 50);
+        for _ in 0..50_000 {
+            prof.record(&zipf.sample(&mut rng).to_le_bytes());
+        }
+        let mrc = prof.mrc();
+        for w in mrc.windows(2) {
+            assert!(w[1] <= w[0] + 1e-12);
+        }
+        assert!(mrc[0] > 0.9); // ~no cache -> ~all misses
+    }
+
+    #[test]
+    fn empty_profile() {
+        let prof = MrcProfiler::new(0.1, 10, 10);
+        assert_eq!(prof.mrc(), vec![1.0; 11]);
+        assert_eq!(prof.sampled_fraction(), 0.0);
+    }
+}

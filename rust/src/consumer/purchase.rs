@@ -1,0 +1,117 @@
+//! The consumer purchasing strategy (paper §6.2): value remote memory by
+//! the *price-per-hit* derived from the cost of running the VM and the
+//! observed hit rate; lease slabs while their marginal hit gain is worth
+//! more than the market price (consumer surplus > 0).
+
+use crate::core::Money;
+use crate::runtime::arima_fallback::demand_one;
+use crate::workload::memcachier::Mrc;
+
+/// A sizing decision for one consumer at one market price.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PurchasePlan {
+    /// Slabs to lease.
+    pub slabs: u32,
+    /// Expected extra hits/sec from those slabs.
+    pub extra_hits_per_sec: f64,
+    /// Expected hourly surplus = hit value - lease cost (dollars/hour).
+    pub surplus_per_hour: f64,
+}
+
+/// Dollar value of one hit/sec sustained for an hour (paper §6.2): the
+/// consumer prices a hit from its VM cost and observed hit rate.
+///
+/// `vm_cost_per_hour`: what the consumer pays for its VM;
+/// `baseline_hits_per_sec`: the hit throughput that VM achieves.
+pub fn price_per_hit_hour(vm_cost_per_hour: Money, baseline_hits_per_sec: f64) -> f64 {
+    if baseline_hits_per_sec <= 0.0 {
+        return 0.0;
+    }
+    vm_cost_per_hour.as_dollars() / baseline_hits_per_sec
+}
+
+/// Decide how many slabs to lease (§6.2): maximize
+/// `hit_value * gain(s) - price * s` over s, with `gain` derived from the
+/// MRC above the consumer's local cache size.
+pub fn plan(
+    mrc: &Mrc,
+    local_bytes: u64,
+    slab_bytes: u64,
+    max_slabs: usize,
+    hit_value_per_hour: f64,
+    price_per_slab_hour: Money,
+    eviction_probability: f64,
+) -> PurchasePlan {
+    // Expected gains discounted by the probability leased memory is
+    // revoked early (§7.4's "more realistic scenario").
+    let discount = (1.0 - eviction_probability).clamp(0.0, 1.0);
+    let gain: Vec<f32> = (0..=max_slabs)
+        .map(|s| (mrc.gain(local_bytes, s as u64 * slab_bytes) * discount) as f32)
+        .collect();
+    let slabs = demand_one(&gain, hit_value_per_hour as f32, price_per_slab_hour.as_dollars());
+    let extra = gain[slabs as usize] as f64;
+    PurchasePlan {
+        slabs,
+        extra_hits_per_sec: extra,
+        surplus_per_hour: hit_value_per_hour * extra
+            - price_per_slab_hour.as_dollars() * slabs as f64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mrc() -> Mrc {
+        // Concave: misses fall quickly then flatten.
+        let miss: Vec<f64> = (0..65)
+            .map(|s| (1.0 - (s as f64 / 32.0).min(1.0).powf(0.5)).max(0.0))
+            .collect();
+        Mrc { app_id: 0, miss_ratio: miss, granularity_bytes: 64 << 20, req_rate: 1000.0 }
+    }
+
+    #[test]
+    fn hit_price_from_vm_cost() {
+        let v = price_per_hit_hour(Money::from_dollars(0.10), 1000.0);
+        assert!((v - 1e-4).abs() < 1e-12);
+        assert_eq!(price_per_hit_hour(Money::from_dollars(0.10), 0.0), 0.0);
+    }
+
+    #[test]
+    fn cheap_memory_is_bought_expensive_is_not() {
+        let m = mrc();
+        let cheap = plan(&m, 0, 64 << 20, 64, 1e-4, Money::from_dollars(1e-6), 0.0);
+        assert!(cheap.slabs > 10, "cheap plan bought {}", cheap.slabs);
+        assert!(cheap.surplus_per_hour > 0.0);
+        let dear = plan(&m, 0, 64 << 20, 64, 1e-4, Money::from_dollars(10.0), 0.0);
+        assert_eq!(dear.slabs, 0);
+    }
+
+    #[test]
+    fn demand_decreases_with_price() {
+        let m = mrc();
+        let mut last = u32::MAX;
+        for p in [1e-7, 1e-6, 1e-5, 1e-4, 1e-3] {
+            let got = plan(&m, 0, 64 << 20, 64, 1e-4, Money::from_dollars(p), 0.0).slabs;
+            assert!(got <= last, "price {p}: {got} > {last}");
+            last = got;
+        }
+    }
+
+    #[test]
+    fn local_cache_reduces_marginal_demand() {
+        let m = mrc();
+        let empty = plan(&m, 0, 64 << 20, 64, 1e-4, Money::from_dollars(1e-5), 0.0);
+        let seeded =
+            plan(&m, 24 * (64 << 20), 64 << 20, 64, 1e-4, Money::from_dollars(1e-5), 0.0);
+        assert!(seeded.slabs < empty.slabs);
+    }
+
+    #[test]
+    fn eviction_risk_discounts_demand() {
+        let m = mrc();
+        let sure = plan(&m, 0, 64 << 20, 64, 1e-4, Money::from_dollars(2e-5), 0.0);
+        let risky = plan(&m, 0, 64 << 20, 64, 1e-4, Money::from_dollars(2e-5), 0.5);
+        assert!(risky.slabs <= sure.slabs);
+    }
+}

@@ -1,0 +1,79 @@
+//! The transparent swap interface (paper §6, built on Infiniswap in the
+//! original): remote memory consumed via hypervisor paging instead of the
+//! KV API. The paper measures that this *loses* to the KV interface on
+//! their testbed because every fault traverses the block layer; we model
+//! that cost explicitly so Fig 11's swap rows can be reproduced.
+
+use crate::core::SimTime;
+use crate::net::model::{Locality, NetworkModel};
+
+/// Latency model for one remote page fault through the swap path.
+#[derive(Clone, Debug)]
+pub struct SwapInterfaceModel {
+    pub net: NetworkModel,
+    /// Block-layer + hypervisor paging overhead per fault (the paper's
+    /// "hypervisor swapping overhead").
+    pub block_layer_us: u64,
+    /// Page size moved per fault.
+    pub page_bytes: u64,
+    /// Crypto overhead per page when running fully secure.
+    pub crypto_us: u64,
+}
+
+impl Default for SwapInterfaceModel {
+    fn default() -> Self {
+        SwapInterfaceModel {
+            net: NetworkModel::default(),
+            block_layer_us: 350,
+            page_bytes: 4096,
+            crypto_us: 25,
+        }
+    }
+}
+
+impl SwapInterfaceModel {
+    /// Remote fault latency via swap (KV-comparable unit: µs).
+    pub fn fault_latency(&self, locality: Locality, secure: bool) -> SimTime {
+        let mut t = self.net.round_trip(locality, 64, self.page_bytes)
+            + SimTime::from_micros(self.block_layer_us);
+        if secure {
+            t += SimTime::from_micros(self.crypto_us);
+        }
+        t
+    }
+
+    /// Equivalent KV GET latency for the same payload (for the Fig 11
+    /// comparison): network + producer store service time, no block layer.
+    pub fn kv_get_latency(&self, locality: Locality, store_us: u64, secure: bool) -> SimTime {
+        let mut t =
+            self.net.round_trip(locality, 64, self.page_bytes) + SimTime::from_micros(store_us);
+        if secure {
+            t += SimTime::from_micros(self.crypto_us);
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn swap_slower_than_kv() {
+        let m = SwapInterfaceModel::default();
+        let swap = m.fault_latency(Locality::SameDatacenter, true);
+        let kv = m.kv_get_latency(Locality::SameDatacenter, 30, true);
+        assert!(swap > kv, "swap {swap:?} should exceed kv {kv:?}");
+        // Paper: swap path can be slower than even SSD for small pages.
+        assert!(swap.as_micros() > 500);
+    }
+
+    #[test]
+    fn security_adds_cost() {
+        let m = SwapInterfaceModel::default();
+        assert!(
+            m.fault_latency(Locality::SameDatacenter, true)
+                > m.fault_latency(Locality::SameDatacenter, false)
+        );
+    }
+}

@@ -1,0 +1,196 @@
+//! Global configuration, mirroring every tunable the paper names.
+//!
+//! Defaults follow the paper's experimental setup (§7): 64 MB ChunkSize,
+//! 5-minute CoolingPeriod, 1% P99Threshold, 6-hour WindowSize, 64 MB slabs,
+//! 3-epoch severe-drop prefetch trigger, quarter-of-spot initial price and
+//! 0.002 cent/GB·h price step.
+
+use crate::core::{SimTime, DEFAULT_CHUNK_BYTES, DEFAULT_SLAB_BYTES};
+
+/// Harvester tunables (paper §4.1, Algorithm 1).
+#[derive(Clone, Debug)]
+pub struct HarvesterConfig {
+    /// Increment by which the cgroup limit is lowered per harvest step.
+    pub chunk_bytes: u64,
+    /// Silo residency before a cold page is evicted to disk; also the
+    /// minimum wait between harvest steps once pages land in Silo.
+    pub cooling_period: SimTime,
+    /// Relative p99 degradation (recent vs baseline) treated as a drop.
+    pub p99_threshold: f64,
+    /// Expiry horizon for baseline/recent performance samples.
+    pub window_size: SimTime,
+    /// Performance-monitoring epoch length.
+    pub epoch: SimTime,
+    /// Consecutive severe epochs before Silo prefetches from disk.
+    pub severe_epochs: u32,
+    /// How long recovery mode lasts before harvesting may resume.
+    pub recovery_period: SimTime,
+    /// One performance sample is recorded each interval.
+    pub sample_interval: SimTime,
+}
+
+impl Default for HarvesterConfig {
+    fn default() -> Self {
+        HarvesterConfig {
+            chunk_bytes: DEFAULT_CHUNK_BYTES,
+            cooling_period: SimTime::from_mins(5),
+            p99_threshold: 0.01,
+            window_size: SimTime::from_hours(6),
+            epoch: SimTime::from_secs(5),
+            severe_epochs: 3,
+            recovery_period: SimTime::from_mins(2),
+            sample_interval: SimTime::from_secs(1),
+        }
+    }
+}
+
+/// Broker tunables (paper §5).
+#[derive(Clone, Debug)]
+pub struct BrokerConfig {
+    pub slab_bytes: u64,
+    /// Minimum lease duration accepted (paper §7.2 uses 10 minutes).
+    pub min_lease: SimTime,
+    /// Pending-request queue timeout.
+    pub pending_timeout: SimTime,
+    /// Placement-cost weights (paper §5.2); consumer requests may override.
+    pub weights: PlacementWeights,
+    /// Initial price = spot price fraction (paper §5.3: one quarter).
+    pub initial_price_fraction: f64,
+    /// Local-search price step, $/GB·hour (paper: 0.002 cents/GB·h).
+    pub price_step_dollars: f64,
+    /// Broker commission fraction of each transaction.
+    pub commission: f64,
+    /// Market/pricing epoch.
+    pub market_epoch: SimTime,
+}
+
+impl Default for BrokerConfig {
+    fn default() -> Self {
+        BrokerConfig {
+            slab_bytes: DEFAULT_SLAB_BYTES,
+            min_lease: SimTime::from_mins(10),
+            pending_timeout: SimTime::from_mins(30),
+            weights: PlacementWeights::default(),
+            initial_price_fraction: 0.25,
+            price_step_dollars: 0.00002, // 0.002 cents
+            commission: 0.05,
+            market_epoch: SimTime::from_mins(5),
+        }
+    }
+}
+
+/// Weighted placement-cost metrics (paper §5.2). Lower cost wins; each
+/// component is normalized to [0, 1] before weighting.
+#[derive(Clone, Copy, Debug)]
+pub struct PlacementWeights {
+    pub free_slabs: f64,
+    pub predicted_availability: f64,
+    pub bandwidth: f64,
+    pub cpu: f64,
+    pub latency: f64,
+    pub reputation: f64,
+}
+
+impl Default for PlacementWeights {
+    fn default() -> Self {
+        PlacementWeights {
+            free_slabs: 1.0,
+            predicted_availability: 2.0,
+            bandwidth: 0.5,
+            cpu: 0.5,
+            latency: 1.0,
+            reputation: 1.5,
+        }
+    }
+}
+
+/// Consumer-side tunables (paper §6).
+#[derive(Clone, Debug)]
+pub struct ConsumerConfig {
+    /// Encrypt values (AES-128-CBC) and substitute keys.
+    pub encrypt: bool,
+    /// Verify SHA-256 (truncated to 128-bit) integrity hashes.
+    pub integrity: bool,
+    /// Requested network bandwidth per lease, bytes/sec.
+    pub bandwidth_bps: u64,
+}
+
+impl Default for ConsumerConfig {
+    fn default() -> Self {
+        ConsumerConfig {
+            encrypt: true,
+            integrity: true,
+            bandwidth_bps: 125_000_000, // 1 Gb/s share of a 10 Gb NIC
+        }
+    }
+}
+
+/// Top-level configuration bundle.
+#[derive(Clone, Debug, Default)]
+pub struct MemtradeConfig {
+    pub harvester: HarvesterConfig,
+    pub broker: BrokerConfig,
+    pub consumer: ConsumerConfig,
+}
+
+impl MemtradeConfig {
+    /// Parse simple `key=value` overrides (e.g. from the CLI):
+    /// `harvester.chunk_mb=128 broker.commission=0.1`.
+    pub fn apply_override(&mut self, key: &str, value: &str) -> Result<(), String> {
+        let parse_f64 =
+            |v: &str| v.parse::<f64>().map_err(|e| format!("bad float {v:?}: {e}"));
+        let parse_u64 =
+            |v: &str| v.parse::<u64>().map_err(|e| format!("bad int {v:?}: {e}"));
+        match key {
+            "harvester.chunk_mb" => self.harvester.chunk_bytes = parse_u64(value)? << 20,
+            "harvester.cooling_secs" => {
+                self.harvester.cooling_period = SimTime::from_secs(parse_u64(value)?)
+            }
+            "harvester.p99_threshold" => self.harvester.p99_threshold = parse_f64(value)?,
+            "harvester.window_hours" => {
+                self.harvester.window_size = SimTime::from_hours(parse_u64(value)?)
+            }
+            "broker.slab_mb" => self.broker.slab_bytes = parse_u64(value)? << 20,
+            "broker.commission" => self.broker.commission = parse_f64(value)?,
+            "broker.price_step" => self.broker.price_step_dollars = parse_f64(value)?,
+            "broker.initial_price_fraction" => {
+                self.broker.initial_price_fraction = parse_f64(value)?
+            }
+            "consumer.encrypt" => self.consumer.encrypt = value == "true",
+            "consumer.integrity" => self.consumer.integrity = value == "true",
+            _ => return Err(format!("unknown config key {key:?}")),
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper() {
+        let c = MemtradeConfig::default();
+        assert_eq!(c.harvester.chunk_bytes, 64 << 20);
+        assert_eq!(c.harvester.cooling_period, SimTime::from_mins(5));
+        assert!((c.harvester.p99_threshold - 0.01).abs() < 1e-12);
+        assert_eq!(c.harvester.window_size, SimTime::from_hours(6));
+        assert_eq!(c.broker.slab_bytes, 64 << 20);
+        assert!((c.broker.initial_price_fraction - 0.25).abs() < 1e-12);
+        assert!((c.broker.price_step_dollars - 0.00002).abs() < 1e-12);
+        assert_eq!(c.harvester.severe_epochs, 3);
+    }
+
+    #[test]
+    fn overrides() {
+        let mut c = MemtradeConfig::default();
+        c.apply_override("harvester.chunk_mb", "128").unwrap();
+        assert_eq!(c.harvester.chunk_bytes, 128 << 20);
+        c.apply_override("broker.commission", "0.1").unwrap();
+        assert!((c.broker.commission - 0.1).abs() < 1e-12);
+        c.apply_override("consumer.encrypt", "false").unwrap();
+        assert!(!c.consumer.encrypt);
+        assert!(c.apply_override("nope", "1").is_err());
+        assert!(c.apply_override("broker.commission", "x").is_err());
+    }
+}

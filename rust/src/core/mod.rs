@@ -1,0 +1,254 @@
+//! Core domain types shared across the whole system: identifiers, memory
+//! slabs, leases, money, simulated time, and the global configuration.
+
+pub mod config;
+
+pub use config::MemtradeConfig;
+
+use std::fmt;
+
+/// Bytes in one mebibyte / gibibyte.
+pub const MIB: u64 = 1 << 20;
+pub const GIB: u64 = 1 << 30;
+
+/// Default slab size: the granularity at which producer memory is leased
+/// (paper §4.2; 64 MB default).
+pub const DEFAULT_SLAB_BYTES: u64 = 64 * MIB;
+
+/// Default harvesting chunk (paper §4: ChunkSize = 64 MB).
+pub const DEFAULT_CHUNK_BYTES: u64 = 64 * MIB;
+
+macro_rules! id_type {
+    ($(#[$doc:meta])* $name:ident) => {
+        $(#[$doc])*
+        #[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Debug, Default)]
+        pub struct $name(pub u64);
+
+        impl fmt::Display for $name {
+            fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+                write!(f, concat!(stringify!($name), "#{}"), self.0)
+            }
+        }
+
+        impl From<u64> for $name {
+            fn from(v: u64) -> Self {
+                Self(v)
+            }
+        }
+    };
+}
+
+id_type!(/** A producer VM participating in the market. */ ProducerId);
+id_type!(/** A consumer VM participating in the market. */ ConsumerId);
+id_type!(/** A physical machine in the simulated cluster. */ MachineId);
+id_type!(/** One leased 64 MB memory slab. */ SlabId);
+id_type!(/** A brokered lease (consumer <-> one or more producers). */ LeaseId);
+
+/// Simulated time in microseconds since simulation start.
+///
+/// All latency/throughput models and the harvester/broker control loops run
+/// on this clock inside the discrete-event simulator; the real (tokio)
+/// deployment path uses wall-clock time converted into the same unit.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Debug, Default)]
+pub struct SimTime(pub u64);
+
+impl SimTime {
+    pub const ZERO: SimTime = SimTime(0);
+
+    pub fn from_micros(us: u64) -> Self {
+        SimTime(us)
+    }
+    pub fn from_millis(ms: u64) -> Self {
+        SimTime(ms * 1_000)
+    }
+    pub fn from_secs(s: u64) -> Self {
+        SimTime(s * 1_000_000)
+    }
+    pub fn from_secs_f64(s: f64) -> Self {
+        SimTime((s * 1e6) as u64)
+    }
+    pub fn from_mins(m: u64) -> Self {
+        Self::from_secs(m * 60)
+    }
+    pub fn from_hours(h: u64) -> Self {
+        Self::from_secs(h * 3600)
+    }
+
+    pub fn as_micros(self) -> u64 {
+        self.0
+    }
+    pub fn as_millis_f64(self) -> f64 {
+        self.0 as f64 / 1e3
+    }
+    pub fn as_secs_f64(self) -> f64 {
+        self.0 as f64 / 1e6
+    }
+    pub fn as_hours_f64(self) -> f64 {
+        self.as_secs_f64() / 3600.0
+    }
+
+    pub fn saturating_sub(self, other: SimTime) -> SimTime {
+        SimTime(self.0.saturating_sub(other.0))
+    }
+}
+
+impl std::ops::Add for SimTime {
+    type Output = SimTime;
+    fn add(self, rhs: SimTime) -> SimTime {
+        SimTime(self.0 + rhs.0)
+    }
+}
+
+impl std::ops::AddAssign for SimTime {
+    fn add_assign(&mut self, rhs: SimTime) {
+        self.0 += rhs.0;
+    }
+}
+
+impl std::ops::Sub for SimTime {
+    type Output = SimTime;
+    fn sub(self, rhs: SimTime) -> SimTime {
+        SimTime(self.0 - rhs.0)
+    }
+}
+
+/// Money in nano-dollars: slab-hour prices are fractions of a cent, and
+/// the paper's price step is 0.002 ¢/GB·h ≈ 1.25 µ$/slab·h, so nano-dollar
+/// integer arithmetic keeps the market exact.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug, Default)]
+pub struct Money(pub i64);
+
+impl Money {
+    pub const ZERO: Money = Money(0);
+
+    pub fn from_dollars(d: f64) -> Self {
+        Money((d * 1e9).round() as i64)
+    }
+    pub fn from_cents(c: f64) -> Self {
+        Self::from_dollars(c / 100.0)
+    }
+    pub fn as_dollars(self) -> f64 {
+        self.0 as f64 / 1e9
+    }
+    pub fn as_cents(self) -> f64 {
+        self.as_dollars() * 100.0
+    }
+
+    pub fn scale(self, f: f64) -> Money {
+        Money((self.0 as f64 * f).round() as i64)
+    }
+}
+
+impl std::ops::Add for Money {
+    type Output = Money;
+    fn add(self, rhs: Money) -> Money {
+        Money(self.0 + rhs.0)
+    }
+}
+impl std::ops::AddAssign for Money {
+    fn add_assign(&mut self, rhs: Money) {
+        self.0 += rhs.0;
+    }
+}
+impl std::ops::Sub for Money {
+    type Output = Money;
+    fn sub(self, rhs: Money) -> Money {
+        Money(self.0 - rhs.0)
+    }
+}
+
+impl fmt::Display for Money {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "${:.6}", self.as_dollars())
+    }
+}
+
+/// One leasable slab of producer memory.
+#[derive(Clone, Debug)]
+pub struct Slab {
+    pub id: SlabId,
+    pub producer: ProducerId,
+    pub bytes: u64,
+}
+
+/// A lease matching one consumer to slabs on one producer (a consumer
+/// request may be satisfied by several leases on different producers).
+#[derive(Clone, Debug)]
+pub struct Lease {
+    pub id: LeaseId,
+    pub consumer: ConsumerId,
+    pub producer: ProducerId,
+    pub slabs: u32,
+    pub slab_bytes: u64,
+    pub start: SimTime,
+    pub duration: SimTime,
+    /// Price agreed at lease time, per slab-hour.
+    pub price_per_slab_hour: Money,
+}
+
+impl Lease {
+    pub fn bytes(&self) -> u64 {
+        self.slabs as u64 * self.slab_bytes
+    }
+    pub fn end(&self) -> SimTime {
+        self.start + self.duration
+    }
+    pub fn total_cost(&self) -> Money {
+        let hours = self.duration.as_hours_f64();
+        self.price_per_slab_hour.scale(self.slabs as f64 * hours)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn simtime_units() {
+        assert_eq!(SimTime::from_secs(1).as_micros(), 1_000_000);
+        assert_eq!(SimTime::from_mins(2), SimTime::from_secs(120));
+        assert_eq!(SimTime::from_hours(1).as_secs_f64(), 3600.0);
+        assert!((SimTime::from_millis(1500).as_secs_f64() - 1.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn simtime_arith() {
+        let a = SimTime::from_secs(5);
+        let b = SimTime::from_secs(3);
+        assert_eq!((a + b).as_micros(), 8_000_000);
+        assert_eq!((a - b).as_micros(), 2_000_000);
+        assert_eq!(b.saturating_sub(a), SimTime::ZERO);
+    }
+
+    #[test]
+    fn money_round_trips() {
+        let m = Money::from_dollars(1.25);
+        assert!((m.as_dollars() - 1.25).abs() < 1e-9);
+        assert_eq!(Money::from_cents(25.0), Money::from_dollars(0.25));
+        assert_eq!((m + m - m), m);
+        assert_eq!(m.scale(2.0), Money::from_dollars(2.5));
+    }
+
+    #[test]
+    fn lease_cost() {
+        let l = Lease {
+            id: LeaseId(1),
+            consumer: ConsumerId(1),
+            producer: ProducerId(1),
+            slabs: 16, // 1 GB of 64 MB slabs
+            slab_bytes: DEFAULT_SLAB_BYTES,
+            start: SimTime::ZERO,
+            duration: SimTime::from_hours(2),
+            price_per_slab_hour: Money::from_dollars(0.001),
+        };
+        assert_eq!(l.bytes(), GIB);
+        assert_eq!(l.end(), SimTime::from_hours(2));
+        assert!((l.total_cost().as_dollars() - 0.032).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ids_display() {
+        assert_eq!(ProducerId(7).to_string(), "ProducerId#7");
+        assert_eq!(SlabId::from(3u64), SlabId(3));
+    }
+}

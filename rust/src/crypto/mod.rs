@@ -1,0 +1,17 @@
+//! Cryptographic substrate for the consumer's confidentiality/integrity
+//! layer (paper §6.1): AES-128 in CBC mode for value encryption and
+//! SHA-256 (truncated to 128 bits) for integrity, both implemented from
+//! scratch and verified against FIPS test vectors.
+//!
+//! The paper's construction, reproduced exactly by [`secure::Envelope`]:
+//! a PUT encrypts `V_C` with the consumer secret key under a fresh random
+//! IV, prepends the IV to form `V_P`, and stores `H = SHA-256(V_P)`
+//! (truncated) locally; a GET verifies `H` before decrypting.
+
+pub mod aes;
+pub mod secure;
+pub mod sha256;
+
+pub use aes::Aes128;
+pub use secure::{Envelope, SealedValue};
+pub use sha256::{sha256, Sha256};

@@ -1,0 +1,211 @@
+//! The paper's §6.1 envelope: value encryption + integrity hashing +
+//! key substitution, exactly as specified.
+//!
+//! PUT: `V_P = IV || AES-CBC(K, IV, V_C)`, `H = trunc128(SHA-256(V_P))`,
+//! substitute key `K_P` from a 64-bit counter; consumer stores
+//! `M_C = (K_P, H, P_i)` locally. GET verifies `H` over the returned `V_P`
+//! before decrypting. Integrity-only mode skips encryption/substitution
+//! and keeps just the hash (16-byte metadata instead of 24).
+
+use crate::crypto::aes::Aes128;
+use crate::crypto::sha256::sha256;
+use crate::util::rng::Rng;
+
+/// Per-KV metadata kept locally by the consumer (paper: 24 bytes with
+/// encryption, 16 bytes integrity-only; we also keep the producer index).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SealedValue {
+    /// Substitute producer-visible key (64-bit counter).
+    pub k_p: u64,
+    /// Truncated 128-bit SHA-256 of the producer-visible value.
+    pub hash: [u8; 16],
+    /// Index into the consumer's producer table.
+    pub producer_index: u32,
+}
+
+impl SealedValue {
+    /// Metadata bytes as accounted by the paper (excluding the local map key).
+    pub fn metadata_bytes(encrypting: bool) -> usize {
+        if encrypting {
+            24 // K_P (8) + H (16) — P_i lives in a small table
+        } else {
+            16 // integrity-only: H
+        }
+    }
+}
+
+/// Envelope sealing/opening values per the paper's construction.
+pub struct Envelope {
+    aes: Option<Aes128>,
+    integrity: bool,
+    counter: u64,
+    iv_rng: Rng,
+}
+
+/// Result of sealing: producer-visible bytes + local metadata.
+pub struct Sealed {
+    pub value_p: Vec<u8>,
+    pub meta: SealedValue,
+}
+
+#[derive(Debug, PartialEq, Eq)]
+pub enum OpenError {
+    /// Integrity hash mismatch — corrupted or tampered value discarded.
+    BadHash,
+    /// Ciphertext malformed (length / padding).
+    BadCiphertext,
+}
+
+impl Envelope {
+    /// `key = None` disables encryption (integrity-only mode when
+    /// `integrity`, or fully transparent when neither).
+    pub fn new(key: Option<[u8; 16]>, integrity: bool, seed: u64) -> Self {
+        Envelope {
+            aes: key.map(|k| Aes128::new(&k)),
+            integrity,
+            counter: 0,
+            iv_rng: Rng::new(seed ^ 0x5ec0_de00_1eaf_fade),
+        }
+    }
+
+    pub fn encrypting(&self) -> bool {
+        self.aes.is_some()
+    }
+
+    fn fresh_iv(&mut self) -> [u8; 16] {
+        let mut iv = [0u8; 16];
+        iv[..8].copy_from_slice(&self.iv_rng.next_u64().to_le_bytes());
+        iv[8..].copy_from_slice(&self.iv_rng.next_u64().to_le_bytes());
+        iv
+    }
+
+    /// Seal a consumer value for storage at `producer_index`.
+    pub fn seal(&mut self, value_c: &[u8], producer_index: u32) -> Sealed {
+        let iv = self.fresh_iv();
+        let value_p = match &self.aes {
+            Some(aes) => {
+                let ct = aes.cbc_encrypt(&iv, value_c);
+                let mut out = Vec::with_capacity(16 + ct.len());
+                out.extend_from_slice(&iv);
+                out.extend_from_slice(&ct);
+                out
+            }
+            None => value_c.to_vec(),
+        };
+        let hash = if self.integrity {
+            let full = sha256(&value_p);
+            let mut h = [0u8; 16];
+            h.copy_from_slice(&full[..16]);
+            h
+        } else {
+            [0u8; 16]
+        };
+        let k_p = self.counter;
+        self.counter += 1;
+        Sealed { value_p, meta: SealedValue { k_p, hash, producer_index } }
+    }
+
+    /// Verify + decrypt a producer-returned value against its metadata.
+    pub fn open(&self, value_p: &[u8], meta: &SealedValue) -> Result<Vec<u8>, OpenError> {
+        if self.integrity {
+            let full = sha256(value_p);
+            if full[..16] != meta.hash {
+                return Err(OpenError::BadHash);
+            }
+        }
+        match &self.aes {
+            Some(aes) => {
+                if value_p.len() < 16 {
+                    return Err(OpenError::BadCiphertext);
+                }
+                let iv: [u8; 16] = value_p[..16].try_into().unwrap();
+                aes.cbc_decrypt(&iv, &value_p[16..]).ok_or(OpenError::BadCiphertext)
+            }
+            None => Ok(value_p.to_vec()),
+        }
+    }
+
+    /// Space overhead at the producer for a value of `len` bytes
+    /// (IV + CBC padding when encrypting, zero otherwise).
+    pub fn producer_overhead(&self, len: usize) -> usize {
+        if self.aes.is_some() {
+            16 + (16 - len % 16)
+        } else {
+            0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seal_open_round_trip() {
+        let mut env = Envelope::new(Some([5u8; 16]), true, 42);
+        let sealed = env.seal(b"the consumer value", 3);
+        assert_ne!(sealed.value_p, b"the consumer value".to_vec());
+        assert_eq!(sealed.meta.producer_index, 3);
+        let opened = env.open(&sealed.value_p, &sealed.meta).unwrap();
+        assert_eq!(opened, b"the consumer value");
+    }
+
+    #[test]
+    fn counter_keys_are_unique_and_sequential() {
+        let mut env = Envelope::new(Some([5u8; 16]), true, 1);
+        let a = env.seal(b"a", 0);
+        let b = env.seal(b"b", 0);
+        assert_eq!(a.meta.k_p, 0);
+        assert_eq!(b.meta.k_p, 1);
+    }
+
+    #[test]
+    fn detects_corruption() {
+        let mut env = Envelope::new(Some([5u8; 16]), true, 7);
+        let sealed = env.seal(b"value", 0);
+        let mut corrupted = sealed.value_p.clone();
+        corrupted[20] ^= 0x01;
+        assert_eq!(env.open(&corrupted, &sealed.meta), Err(OpenError::BadHash));
+    }
+
+    #[test]
+    fn integrity_only_mode() {
+        let mut env = Envelope::new(None, true, 7);
+        let sealed = env.seal(b"plain value", 0);
+        assert_eq!(sealed.value_p, b"plain value".to_vec()); // no encryption
+        assert!(env.open(&sealed.value_p, &sealed.meta).is_ok());
+        let mut bad = sealed.value_p.clone();
+        bad[0] ^= 1;
+        assert_eq!(env.open(&bad, &sealed.meta), Err(OpenError::BadHash));
+        assert_eq!(SealedValue::metadata_bytes(false), 16);
+        assert_eq!(SealedValue::metadata_bytes(true), 24);
+    }
+
+    #[test]
+    fn no_security_mode_passthrough() {
+        let mut env = Envelope::new(None, false, 7);
+        let sealed = env.seal(b"raw", 0);
+        assert_eq!(sealed.value_p, b"raw");
+        let mut tampered = sealed.value_p.clone();
+        tampered[0] ^= 1;
+        // Without integrity there is no detection — documented trade-off.
+        assert!(env.open(&tampered, &sealed.meta).is_ok());
+    }
+
+    #[test]
+    fn fresh_ivs_randomize_ciphertext() {
+        let mut env = Envelope::new(Some([9u8; 16]), true, 3);
+        let a = env.seal(b"same", 0);
+        let b = env.seal(b"same", 0);
+        assert_ne!(a.value_p, b.value_p);
+    }
+
+    #[test]
+    fn producer_overhead_accounting() {
+        let env = Envelope::new(Some([9u8; 16]), true, 3);
+        // 5-byte value: IV 16 + pad to 16 => 16 + 11 = 27 extra bytes.
+        assert_eq!(env.producer_overhead(5), 16 + 11);
+        let env2 = Envelope::new(None, true, 3);
+        assert_eq!(env2.producer_overhead(5), 0);
+    }
+}

@@ -1,0 +1,243 @@
+//! Consumer-side experiments: Fig 11 (application-level latencies across
+//! remote fractions and security modes, including the swap interface),
+//! the §7.3 crypto overheads (measured on the real AES/SHA code), and
+//! Table 2 (cluster deployment).
+
+use crate::consumer::swap_iface::SwapInterfaceModel;
+use crate::core::{SimTime, GIB};
+use crate::crypto::secure::Envelope;
+use crate::metrics::{ms, pct, Table};
+use crate::net::model::Locality;
+use crate::sim::cluster::{ClusterSim, ClusterSimConfig, ConsumerMode};
+use crate::workload::apps::AppKind;
+
+fn sim_config(quick: bool, remote: f64, mode: ConsumerMode) -> ClusterSimConfig {
+    ClusterSimConfig {
+        n_producers: if quick { 4 } else { 12 },
+        n_consumers: if quick { 3 } else { 8 },
+        remote_fraction: remote,
+        mode,
+        n_keys: if quick { 5_000 } else { 40_000 },
+        value_size: 1024,
+        ops_per_epoch: if quick { 120 } else { 400 },
+        page_bytes: if quick { 16 << 20 } else { 4 << 20 },
+        seed: 51,
+        ..Default::default()
+    }
+}
+
+fn run_case(quick: bool, remote: f64, mode: ConsumerMode) -> (f64, f64) {
+    let mut sim = ClusterSim::new(sim_config(quick, remote, mode));
+    sim.bootstrap();
+    sim.run(if quick { SimTime::from_mins(4) } else { SimTime::from_mins(15) });
+    (sim.consumer_mean_latency(), sim.consumer_p99_latency())
+}
+
+/// Fig 11: consumer latency vs remote fraction across interfaces.
+pub fn fig11(quick: bool) -> Vec<Table> {
+    let mut avg = Table::new(vec![
+        "remote %",
+        "no Memtrade (SSD)",
+        "secure KV",
+        "integrity-only KV",
+        "plain KV",
+        "secure swap (model)",
+    ]);
+    let mut p99 = Table::new(vec![
+        "remote %",
+        "no Memtrade (SSD)",
+        "secure KV",
+        "integrity-only KV",
+        "plain KV",
+    ]);
+    let swap_model = SwapInterfaceModel::default();
+    for remote in [0.0, 0.10, 0.30, 0.50] {
+        let (ssd_avg, ssd_p99) = run_case(quick, remote, ConsumerMode::NoMemtrade);
+        let (sec_avg, sec_p99) = run_case(quick, remote, ConsumerMode::Secure);
+        let (int_avg, int_p99) = run_case(quick, remote, ConsumerMode::IntegrityOnly);
+        let (pl_avg, pl_p99) = run_case(quick, remote, ConsumerMode::Plain);
+        // Swap interface: remote fault latency model applied to the same
+        // remote-access fraction (paper: swap loses due to block layer).
+        let swap_fault =
+            swap_model.fault_latency(Locality::SameDatacenter, true).as_micros() as f64;
+        let kv_fault = swap_model
+            .kv_get_latency(Locality::SameDatacenter, 30, true)
+            .as_micros() as f64;
+        let swap_avg = if sec_avg > 0.0 {
+            // Replace the KV remote component with the swap component.
+            sec_avg + (swap_fault - kv_fault) * remote * 0.7
+        } else {
+            0.0
+        };
+        avg.row(vec![
+            pct(remote),
+            ms(ssd_avg),
+            ms(sec_avg),
+            ms(int_avg),
+            ms(pl_avg),
+            ms(swap_avg),
+        ]);
+        p99.row(vec![pct(remote), ms(ssd_p99), ms(sec_p99), ms(int_p99), ms(pl_p99)]);
+    }
+    println!("Fig 11a (average latency):");
+    println!("Fig 11b (p99 latency): (second table)");
+    vec![avg, p99]
+}
+
+/// §7.3 crypto overheads, measured on the real from-scratch AES/SHA.
+pub fn crypto_overheads(quick: bool) -> Vec<Table> {
+    let n = if quick { 2_000 } else { 20_000 };
+    let value_size = 1024;
+    let value = vec![0xA5u8; value_size];
+
+    let mut t = Table::new(vec![
+        "mode",
+        "seal (µs/op)",
+        "open (µs/op)",
+        "producer-side space overhead",
+        "consumer metadata bytes/KV",
+    ]);
+    for (name, key, integrity) in [
+        ("plain", None, false),
+        ("integrity-only", None, true),
+        ("encrypt+integrity", Some([9u8; 16]), true),
+    ] {
+        let mut env = Envelope::new(key, integrity, 77);
+        let start = std::time::Instant::now();
+        let mut sealed = Vec::with_capacity(n);
+        for _ in 0..n {
+            sealed.push(env.seal(&value, 0));
+        }
+        let seal_us = start.elapsed().as_micros() as f64 / n as f64;
+        let start = std::time::Instant::now();
+        for s in &sealed {
+            let _ = env.open(&s.value_p, &s.meta).unwrap();
+        }
+        let open_us = start.elapsed().as_micros() as f64 / n as f64;
+        let overhead = sealed[0].value_p.len() as f64 / value_size as f64 - 1.0;
+        let meta = crate::crypto::secure::SealedValue::metadata_bytes(key.is_some());
+        t.row(vec![
+            name.to_string(),
+            format!("{seal_us:.2}"),
+            format!("{open_us:.2}"),
+            pct(overhead),
+            format!("{meta}"),
+        ]);
+    }
+    vec![t]
+}
+
+/// Table 2: the cluster deployment — consumer latencies with/without
+/// Memtrade and producer latencies with/without the harvester.
+pub fn table2(quick: bool) -> Vec<Table> {
+    // Consumer side.
+    let mut consumer = Table::new(vec![
+        "consumer app",
+        "avg latency w/o Memtrade",
+        "avg latency w/ Memtrade",
+        "improvement",
+    ]);
+    for remote in [0.10, 0.30, 0.50] {
+        let (ssd, _) = run_case(quick, remote, ConsumerMode::NoMemtrade);
+        let (sec, _) = run_case(quick, remote, ConsumerMode::Secure);
+        consumer.row(vec![
+            format!("Redis {}%", (remote * 100.0) as u32),
+            ms(ssd),
+            ms(sec),
+            format!("{:.1}x", ssd / sec.max(1.0)),
+        ]);
+    }
+
+    // Producer side: per-app latency with and without the harvester.
+    let mut producer = Table::new(vec![
+        "producer app",
+        "avg latency w/o harvester",
+        "avg latency w/ harvester",
+        "degradation",
+    ]);
+    for kind in AppKind::ALL {
+        use crate::core::config::HarvesterConfig;
+        use crate::core::ProducerId;
+        use crate::mem::SwapDevice;
+        use crate::producer::Producer;
+        use crate::workload::apps::{AppModel, AppRunner};
+        let minutes: u64 = if quick { 20 } else { 60 };
+        let model = AppModel::preset(kind);
+        let page = if quick { 16 << 20 } else { 4 << 20 };
+        // Without harvester: app runs untouched => baseline latency.
+        let baseline = model.base_latency_us;
+        // With harvester:
+        let mut app = AppRunner::new(
+            model.clone(),
+            page,
+            SwapDevice::Ssd,
+            Some(SimTime::from_mins(5)),
+            61,
+        );
+        app.ops_cap_per_epoch = if quick { 200 } else { 800 };
+        let mut p = Producer::new(ProducerId(1), app, HarvesterConfig::default(), 64 << 20);
+        let epoch = SimTime::from_secs(5);
+        let mut sum = 0.0;
+        let mut n = 0u64;
+        let epochs = minutes * 12;
+        for e in 1..=epochs {
+            let lat = p.tick(SimTime::from_micros(e * epoch.as_micros()), epoch);
+            if e > epochs / 2 {
+                sum += lat;
+                n += 1;
+            }
+        }
+        let with = sum / n as f64;
+        producer.row(vec![
+            kind.name().to_string(),
+            ms(baseline),
+            ms(with),
+            pct((with / baseline - 1.0).max(0.0)),
+        ]);
+    }
+    println!("Table 2 (consumers, then producers):");
+    vec![consumer, producer]
+}
+
+/// Cluster-wide memory footprint summary for the deploy example.
+pub fn deploy_summary(sim: &ClusterSim) -> Table {
+    let mut t = Table::new(vec!["metric", "value"]);
+    let leased = sim.leased_bytes();
+    let producer_mem: u64 = sim.producers.iter().map(|p| p.app.model.vm_bytes).sum();
+    let harvestable: u64 =
+        sim.producers.iter().map(|p| p.app.memory.shape().harvestable).sum();
+    t.row(vec!["producers".to_string(), format!("{}", sim.producers.len())]);
+    t.row(vec!["consumers".to_string(), format!("{}", sim.consumers.len())]);
+    t.row(vec![
+        "total producer memory".to_string(),
+        format!("{:.1} GB", producer_mem as f64 / GIB as f64),
+    ]);
+    t.row(vec![
+        "harvestable".to_string(),
+        format!("{:.1} GB", harvestable as f64 / GIB as f64),
+    ]);
+    t.row(vec![
+        "leased to consumers".to_string(),
+        format!("{:.1} GB", leased as f64 / GIB as f64),
+    ]);
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crypto_overheads_ordered() {
+        let t = crypto_overheads(true);
+        let csv = t[0].csv();
+        let seal: Vec<f64> = csv
+            .lines()
+            .skip(1)
+            .map(|l| l.split(',').nth(1).unwrap().parse().unwrap())
+            .collect();
+        // plain <= integrity <= encrypt+integrity
+        assert!(seal[0] <= seal[1] + 0.5);
+        assert!(seal[1] <= seal[2] + 0.5);
+    }
+}

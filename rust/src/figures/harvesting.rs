@@ -1,0 +1,401 @@
+//! Harvester experiments: Fig 2b, Fig 3, Table 1, Fig 6, Fig 7, Fig 8,
+//! Fig 9 (paper §7.1).
+
+use crate::core::config::HarvesterConfig;
+use crate::core::{SimTime, GIB, MIB};
+use crate::mem::SwapDevice;
+use crate::metrics::{gb, ms, pct, Table};
+use crate::producer::Producer;
+use crate::workload::apps::{AppKind, AppModel, AppRunner};
+use crate::core::ProducerId;
+
+fn page_bytes(quick: bool) -> u64 {
+    if quick {
+        16 * MIB
+    } else {
+        4 * MIB
+    }
+}
+
+fn runner(kind: AppKind, device: SwapDevice, silo: bool, quick: bool, seed: u64) -> AppRunner {
+    let model = AppModel::preset(kind);
+    let mut r = AppRunner::new(
+        model,
+        page_bytes(quick),
+        device,
+        silo.then(|| SimTime::from_mins(5)),
+        seed,
+    );
+    r.ops_cap_per_epoch = if quick { 300 } else { 1500 };
+    r
+}
+
+/// Measure mean latency over `epochs` epochs of `dur` after harvesting a
+/// static amount via the cgroup limit (the Fig 3/6 protocol).
+fn static_harvest_latency(
+    kind: AppKind,
+    harvest_bytes: u64,
+    silo: bool,
+    quick: bool,
+) -> (f64, f64) {
+    let mut r = runner(kind, SwapDevice::Ssd, silo, quick, 7);
+    let baseline = r.baseline_latency_us();
+    let keep = r.model.footprint_bytes.saturating_sub(harvest_bytes);
+    r.memory.set_cgroup_limit(keep, SimTime::ZERO);
+    let epochs = if quick { 12 } else { 40 };
+    let mut mean = baseline;
+    for e in 1..=epochs {
+        let now = SimTime::from_secs(e * 360); // past cooling each epoch
+        let rec = r.run_epoch(now, SimTime::from_secs(5));
+        mean = rec.mean();
+    }
+    (baseline, mean)
+}
+
+/// Fig 2b: idle application memory and how quickly it is reused. For
+/// each producer app we report the idle share of its footprint, the
+/// probability an idle-region page stays untouched for >= 1 hour (the
+/// harvestable mass), and the median time until an idle page is reused.
+pub fn fig2b(_quick: bool) -> Vec<Table> {
+    let mut t = Table::new(vec![
+        "app",
+        "idle share of footprint",
+        "idle GB",
+        "P(idle page untouched >= 1h)",
+        "median idle-page reuse time",
+    ]);
+    for kind in AppKind::ALL {
+        let model = AppModel::preset(kind);
+        let page = 4.0 * MIB as f64;
+        let idle_pages = (model.footprint_bytes as f64 * model.idle_fraction() / page).max(1.0);
+        // Per-op probability a *specific* idle page is touched.
+        let p_touch_per_op = model.idle_access_prob
+            * model.pages_per_op as f64
+            / idle_pages;
+        let ops_per_hour = model.ops_per_sec * 3600.0;
+        let p_untouched_1h = (1.0 - p_touch_per_op).powf(ops_per_hour);
+        // Geometric median in ops -> seconds.
+        let median_ops = if p_touch_per_op > 0.0 {
+            (0.5f64.ln() / (1.0 - p_touch_per_op).ln()).max(1.0)
+        } else {
+            f64::INFINITY
+        };
+        let median_secs = median_ops / model.ops_per_sec;
+        let median_str = if median_secs.is_finite() {
+            if median_secs > 3600.0 {
+                format!("{:.1} h", median_secs / 3600.0)
+            } else {
+                format!("{:.1} min", median_secs / 60.0)
+            }
+        } else {
+            "never".to_string()
+        };
+        t.row(vec![
+            model.kind.name().to_string(),
+            pct(model.idle_fraction()),
+            format!(
+                "{:.1}",
+                model.footprint_bytes as f64 * model.idle_fraction() / GIB as f64
+            ),
+            pct(p_untouched_1h),
+            median_str,
+        ]);
+    }
+    vec![t]
+}
+
+/// Fig 3: performance drop vs harvested memory, no Silo (the cliff).
+pub fn fig3(quick: bool) -> Vec<Table> {
+    let mut out = Vec::new();
+    for kind in [AppKind::Redis, AppKind::Xgboost] {
+        let model = AppModel::preset(kind);
+        let mut t = Table::new(vec![
+            "harvested",
+            "of footprint",
+            "baseline",
+            "mean latency",
+            "drop",
+        ]);
+        let steps = if quick { 5 } else { 9 };
+        for i in 0..=steps {
+            let frac = i as f64 / steps as f64 * 0.9;
+            let harvest = (model.footprint_bytes as f64 * frac) as u64;
+            let (base, mean) = static_harvest_latency(kind, harvest, false, quick);
+            t.row(vec![
+                gb(harvest),
+                pct(frac),
+                ms(base),
+                ms(mean),
+                pct((mean / base - 1.0).max(0.0)),
+            ]);
+        }
+        println!("Fig 3 ({}):", model.kind.name());
+        out.push(t);
+    }
+    out
+}
+
+/// Fig 6: same sweep with and without Silo — Silo flattens the cliff.
+pub fn fig6(quick: bool) -> Vec<Table> {
+    let mut out = Vec::new();
+    for kind in [AppKind::Redis, AppKind::Xgboost] {
+        let model = AppModel::preset(kind);
+        let mut t = Table::new(vec!["harvested", "drop w/o Silo", "drop w/ Silo"]);
+        let steps = if quick { 4 } else { 8 };
+        for i in 1..=steps {
+            let frac = i as f64 / steps as f64 * 0.8;
+            let harvest = (model.footprint_bytes as f64 * frac) as u64;
+            let (base, without) = static_harvest_latency(kind, harvest, false, quick);
+            let (_, with) = static_harvest_latency(kind, harvest, true, quick);
+            t.row(vec![
+                gb(harvest),
+                pct((without / base - 1.0).max(0.0)),
+                pct((with / base - 1.0).max(0.0)),
+            ]);
+        }
+        println!("Fig 6 ({}):", model.kind.name());
+        out.push(t);
+    }
+    out
+}
+
+/// Run the full adaptive harvester against one app; returns the producer
+/// plus (baseline, final) mean latency.
+fn adaptive_run(
+    kind: AppKind,
+    quick: bool,
+    cfg: HarvesterConfig,
+    minutes: u64,
+) -> (Producer, f64, f64) {
+    let app = runner(kind, SwapDevice::Ssd, true, quick, 11);
+    let baseline = app.baseline_latency_us();
+    let mut p = Producer::new(ProducerId(1), app, cfg, 64 * MIB);
+    let epoch = SimTime::from_secs(5);
+    let epochs = minutes * 60 / 5;
+    let mut last = baseline;
+    let mut sum = 0.0;
+    let mut n = 0u64;
+    for e in 1..=epochs {
+        last = p.tick(SimTime::from_micros(e * epoch.as_micros()), epoch);
+        if e > epochs / 2 {
+            sum += last;
+            n += 1;
+        }
+    }
+    let steady = if n > 0 { sum / n as f64 } else { last };
+    (p, baseline, steady)
+}
+
+/// Table 1: per-app harvested totals (idle + unallocated), % of app
+/// memory harvested, and performance loss under the adaptive harvester.
+pub fn table1(quick: bool) -> Vec<Table> {
+    let mut t = Table::new(vec![
+        "app",
+        "VM size",
+        "footprint",
+        "total harvested",
+        "idle harvested %",
+        "workload harvested %",
+        "perf loss",
+    ]);
+    let minutes = if quick { 30 } else { 120 };
+    for kind in AppKind::ALL {
+        let (p, baseline, steady) = adaptive_run(kind, quick, HarvesterConfig::default(), minutes);
+        let shape = p.app.memory.shape();
+        let model = &p.app.model;
+        let total = shape.harvestable;
+        // Memory truly extracted from the application = pages cooled out
+        // to disk (Silo residents are still buffered in RAM).
+        let from_app = shape.swapped;
+        let idle_share =
+            if total > 0 { (from_app as f64 / total as f64).min(1.0) } else { 0.0 };
+        let workload_share = from_app as f64 / model.footprint_bytes as f64;
+        let loss = (steady / baseline - 1.0).max(0.0);
+        t.row(vec![
+            model.kind.name().to_string(),
+            gb(model.vm_bytes),
+            gb(model.footprint_bytes),
+            gb(total),
+            pct(idle_share),
+            pct(workload_share),
+            pct(loss),
+        ]);
+    }
+    vec![t]
+}
+
+/// Fig 7: memory composition over time (memcached + XGBoost).
+pub fn fig7(quick: bool) -> Vec<Table> {
+    let mut out = Vec::new();
+    for kind in [AppKind::Memcached, AppKind::Xgboost] {
+        let app = runner(kind, SwapDevice::Ssd, true, quick, 13);
+        let mut p = Producer::new(ProducerId(1), app, HarvesterConfig::default(), 64 * MIB);
+        let mut t = Table::new(vec!["t (min)", "RSS", "Silo", "harvested(disk)", "unallocated"]);
+        let minutes = if quick { 40 } else { 120 };
+        let epoch = SimTime::from_secs(5);
+        for e in 1..=(minutes * 12) {
+            p.tick(SimTime::from_micros(e * epoch.as_micros()), epoch);
+            if e % (5 * 12) == 0 {
+                let s = p.app.memory.shape();
+                t.row(vec![
+                    format!("{}", e / 12),
+                    gb(s.rss),
+                    gb(s.silo),
+                    gb(s.swapped),
+                    gb(s.unallocated),
+                ]);
+            }
+        }
+        println!("Fig 7 ({}):", kind.name());
+        out.push(t);
+    }
+    out
+}
+
+/// Fig 8: workload burst (Zipf -> uniform) recovery across mitigations.
+pub fn fig8(quick: bool) -> Vec<Table> {
+    let mut t = Table::new(vec![
+        "mitigation",
+        "pre-burst latency",
+        "burst peak",
+        "recovery (s)",
+        "post latency",
+    ]);
+    let cases: Vec<(&str, SwapDevice, bool)> = vec![
+        ("no prefetch (SSD)", SwapDevice::Ssd, false),
+        ("prefetch (SSD)", SwapDevice::Ssd, true),
+        ("no prefetch (HDD)", SwapDevice::Hdd, false),
+        ("prefetch (HDD)", SwapDevice::Hdd, true),
+        ("zram (compressed RAM)", SwapDevice::Zram, true),
+    ];
+    for (name, device, prefetch) in cases {
+        let model = AppModel::preset(AppKind::Redis);
+        let mut app = AppRunner::new(
+            model,
+            page_bytes(quick),
+            device,
+            Some(SimTime::from_mins(5)),
+            29,
+        );
+        app.ops_cap_per_epoch = if quick { 200 } else { 800 };
+        let mut cfg = HarvesterConfig::default();
+        if !prefetch {
+            cfg.severe_epochs = u32::MAX; // disable prefetch entirely
+        }
+        let mut p = Producer::new(ProducerId(1), app, cfg, 64 * MIB);
+        // Pre-harvest deep into the warm region (the paper runs for an
+        // hour before the burst, with substantial memory already leased).
+        let keep = (p.app.model.footprint_bytes as f64 * 0.45) as u64;
+        p.app.memory.set_cgroup_limit(keep, SimTime::ZERO);
+        let epoch = SimTime::from_secs(5);
+        let warm_epochs = if quick { 240 } else { 720 };
+        let mut pre = 0.0;
+        for e in 1..=warm_epochs {
+            pre = p.tick(SimTime::from_micros(e * epoch.as_micros()), epoch);
+        }
+        // Burst: shift to uniform (touches cold/idle pages).
+        p.app.set_distribution_uniform();
+        let mut peak = pre;
+        let mut recovery_epochs = 0u64;
+        let mut post = pre;
+        let total = if quick { 240 } else { 720 };
+        let mut recovered = false;
+        for e in (warm_epochs + 1)..=(warm_epochs + total) {
+            post = p.tick(SimTime::from_micros(e * epoch.as_micros()), epoch);
+            peak = peak.max(post);
+            if !recovered {
+                recovery_epochs += 1;
+                if post < pre * 1.10 {
+                    recovered = true;
+                }
+            }
+        }
+        t.row(vec![
+            name.to_string(),
+            ms(pre),
+            ms(peak),
+            format!("{}", recovery_epochs * 5),
+            ms(post),
+        ]);
+    }
+    vec![t]
+}
+
+/// Fig 9: sensitivity of harvested memory + perf to each knob.
+pub fn fig9(quick: bool) -> Vec<Table> {
+    let minutes = if quick { 20 } else { 60 };
+    let mut out = Vec::new();
+
+    let run = |cfg: HarvesterConfig| -> (f64, f64) {
+        let (p, baseline, steady) = adaptive_run(AppKind::Redis, quick, cfg, minutes);
+        let harvested = p.app.memory.shape().harvestable as f64 / GIB as f64;
+        (harvested, (steady / baseline - 1.0).max(0.0))
+    };
+
+    let mut t = Table::new(vec!["CoolingPeriod", "harvested (GB)", "perf drop"]);
+    for mins in [1u64, 5, 15] {
+        let mut cfg = HarvesterConfig::default();
+        cfg.cooling_period = SimTime::from_mins(mins);
+        let (h, d) = run(cfg);
+        t.row(vec![format!("{mins} min"), format!("{h:.2}"), pct(d)]);
+    }
+    out.push(t);
+
+    let mut t = Table::new(vec!["ChunkSize", "harvested (GB)", "perf drop"]);
+    for mb in [16u64, 64, 256] {
+        let mut cfg = HarvesterConfig::default();
+        cfg.chunk_bytes = mb * MIB;
+        let (h, d) = run(cfg);
+        t.row(vec![format!("{mb} MB"), format!("{h:.2}"), pct(d)]);
+    }
+    out.push(t);
+
+    let mut t = Table::new(vec!["P99Threshold", "harvested (GB)", "perf drop"]);
+    for pth in [0.005, 0.01, 0.05] {
+        let mut cfg = HarvesterConfig::default();
+        cfg.p99_threshold = pth;
+        let (h, d) = run(cfg);
+        t.row(vec![pct(pth), format!("{h:.2}"), pct(d)]);
+    }
+    out.push(t);
+
+    let mut t = Table::new(vec!["WindowSize", "harvested (GB)", "perf drop"]);
+    for hours in [1u64, 6, 12] {
+        let mut cfg = HarvesterConfig::default();
+        cfg.window_size = SimTime::from_hours(hours);
+        let (h, d) = run(cfg);
+        t.row(vec![format!("{hours} h"), format!("{h:.2}"), pct(d)]);
+    }
+    out.push(t);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig3_shows_cliff() {
+        let tables = fig3(true);
+        assert_eq!(tables.len(), 2);
+        // Last row (deep harvest) must show a bigger drop than the first.
+        let csv = tables[0].csv();
+        let lines: Vec<&str> = csv.lines().collect();
+        assert!(lines.len() >= 5);
+    }
+
+    #[test]
+    fn table1_covers_all_apps() {
+        let tables = table1(true);
+        let csv = tables[0].csv();
+        for kind in AppKind::ALL {
+            assert!(csv.contains(kind.name()), "{} missing", kind.name());
+        }
+    }
+
+    #[test]
+    fn fig9_produces_all_four_sweeps() {
+        let tables = fig9(true);
+        assert_eq!(tables.len(), 4);
+    }
+}

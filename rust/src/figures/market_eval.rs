@@ -1,0 +1,206 @@
+//! Market experiments: Fig 12 (pricing strategies), Fig 13 (temporal
+//! dynamics with trace-driven supply), Fig 15 (MRC library).
+
+use crate::broker::pricing::PricingStrategy;
+use crate::core::Money;
+use crate::metrics::{pct, Table};
+use crate::sim::market::{MarketSim, MarketSimConfig, MarketStep};
+use crate::workload::cluster_trace::{ClusterTrace, MachineClass};
+use crate::workload::memcachier::MrcLibrary;
+use crate::workload::spot::SpotPriceSeries;
+
+fn strategies() -> [(&'static str, PricingStrategy); 3] {
+    [
+        ("fixed (1/4 spot)", PricingStrategy::FixedFraction),
+        ("max volume", PricingStrategy::MaxVolume),
+        ("max revenue", PricingStrategy::MaxRevenue),
+    ]
+}
+
+fn run_strategy(
+    strategy: PricingStrategy,
+    n_consumers: usize,
+    steps: usize,
+    supply_gb: impl Fn(usize) -> f64,
+    spot: &SpotPriceSeries,
+    eviction_probability: f64,
+) -> (Vec<MarketStep>, MarketSim) {
+    let lib = MrcLibrary::paper_population(7);
+    let cfg = MarketSimConfig {
+        n_consumers,
+        strategy,
+        seed: 23,
+        max_slabs: 64,
+        eviction_probability,
+    };
+    let mut sim = MarketSim::new(cfg, &lib, Money::from_dollars(0.00001));
+    let mut out = Vec::with_capacity(steps);
+    for t in 0..steps {
+        out.push(sim.step(supply_gb(t), spot, t));
+    }
+    (out, sim)
+}
+
+/// Fig 12: strategy comparison at fixed supply.
+pub fn fig12(quick: bool) -> Vec<Table> {
+    let n = if quick { 1_000 } else { 10_000 };
+    let steps = if quick { 60 } else { 300 };
+    let spot = SpotPriceSeries::r3_large(steps, 41);
+    let mut t = Table::new(vec![
+        "strategy",
+        "mean price ($/slab·h)",
+        "mean traded slabs",
+        "total revenue ($)",
+        "rel. hit-ratio gain",
+        "utilization",
+    ]);
+    for (name, strategy) in strategies() {
+        let supply = (n as f64) * 0.5; // GB: scarce enough to matter
+        let (step_rows, _) =
+            run_strategy(strategy, n, steps, |_| supply, &spot, 0.0);
+        let half = &step_rows[steps / 2..]; // steady state
+        let mean = |f: &dyn Fn(&MarketStep) -> f64| {
+            half.iter().map(|s| f(s)).sum::<f64>() / half.len() as f64
+        };
+        t.row(vec![
+            name.to_string(),
+            format!("{:.7}", mean(&|s: &MarketStep| s.price_per_slab_hour)),
+            format!("{:.0}", mean(&|s: &MarketStep| s.traded_slabs)),
+            format!("{:.2}", step_rows.iter().map(|s| s.revenue).sum::<f64>()),
+            pct(mean(&|s: &MarketStep| s.rel_hit_improvement)),
+            pct(mean(&|s: &MarketStep| s.utilization)),
+        ]);
+    }
+    vec![t]
+}
+
+/// Fig 13: temporal market dynamics with Google-trace supply and the
+/// spot price series; includes the §7.4 headline numbers.
+pub fn fig13(quick: bool) -> Vec<Table> {
+    let n = if quick { 1_000 } else { 10_000 };
+    let steps = if quick { 120 } else { 576 };
+    let spot = SpotPriceSeries::r3_large(steps, 43);
+    // Supply: idle memory of a Google-trace cell, 5 GB per unit (paper).
+    let trace = ClusterTrace::generate(MachineClass::Google, 200, steps, 288, 45);
+    let supply_series: Vec<f64> = (0..steps)
+        .map(|t| {
+            let idle: f64 = trace
+                .machines
+                .iter()
+                .map(|m| (1.0 - m.mem[t]).max(0.0))
+                .sum();
+            idle * 5.0 // "one Google unit represents 5 GB"
+        })
+        .collect();
+
+    let mut dynamics = Table::new(vec![
+        "strategy",
+        "mean price",
+        "price vs fixed",
+        "total revenue",
+        "mean utilization",
+        "cost saving vs spot",
+    ]);
+    let mut fixed_price = 0.0;
+    for (name, strategy) in strategies() {
+        let supply = supply_series.clone();
+        let (rows, _) =
+            run_strategy(strategy, n, steps, move |t| supply[t], &spot, 0.0);
+        let mean_price =
+            rows.iter().map(|s| s.price_per_slab_hour).sum::<f64>() / rows.len() as f64;
+        if strategy == PricingStrategy::FixedFraction {
+            fixed_price = mean_price;
+        }
+        dynamics.row(vec![
+            name.to_string(),
+            format!("{mean_price:.7}"),
+            format!("{:.2}x", mean_price / fixed_price.max(1e-12)),
+            format!("{:.2}", rows.iter().map(|s| s.revenue).sum::<f64>()),
+            pct(rows.iter().map(|s| s.utilization).sum::<f64>() / rows.len() as f64),
+            pct(rows.iter().map(|s| s.cost_saving_vs_spot).sum::<f64>() / rows.len() as f64),
+        ]);
+    }
+
+    // §7.4 eviction-probability scenario: revenue drop at 10% eviction.
+    let mut evict = Table::new(vec![
+        "strategy",
+        "revenue (p_evict=0)",
+        "revenue (p_evict=10%)",
+        "drop",
+    ]);
+    for (name, strategy) in
+        [("max volume", PricingStrategy::MaxVolume), ("max revenue", PricingStrategy::MaxRevenue)]
+    {
+        let supply = supply_series.clone();
+        let (sure, _) =
+            run_strategy(strategy, n, steps, {
+                let supply = supply.clone();
+                move |t| supply[t]
+            }, &spot, 0.0);
+        let (risky, _) =
+            run_strategy(strategy, n, steps, move |t| supply[t], &spot, 0.10);
+        let r0: f64 = sure.iter().map(|s| s.revenue).sum();
+        let r1: f64 = risky.iter().map(|s| s.revenue).sum();
+        evict.row(vec![
+            name.to_string(),
+            format!("{r0:.2}"),
+            format!("{r1:.2}"),
+            pct((1.0 - r1 / r0.max(1e-12)).max(0.0)),
+        ]);
+    }
+    vec![dynamics, evict]
+}
+
+/// Fig 15: the synthetic MemCachier MRC library (36 apps).
+pub fn fig15() -> Vec<Table> {
+    let lib = MrcLibrary::paper_population(1);
+    let mut t = Table::new(vec![
+        "app",
+        "req rate (/s)",
+        "mr @ 0",
+        "mr @ 1GB",
+        "mr @ 4GB",
+        "mr @ 8GB",
+        "size for 80% optimal",
+    ]);
+    for mrc in &lib.mrcs {
+        t.row(vec![
+            format!("app{:02}", mrc.app_id),
+            format!("{:.0}", mrc.req_rate),
+            format!("{:.2}", mrc.at_bytes(0)),
+            format!("{:.2}", mrc.at_bytes(1 << 30)),
+            format!("{:.2}", mrc.at_bytes(4u64 << 30)),
+            format!("{:.2}", mrc.at_bytes(8u64 << 30)),
+            format!("{:.1} GB", mrc.size_for_relative_hit_ratio(0.8) as f64 / (1u64 << 30) as f64),
+        ]);
+    }
+    vec![t]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig12_compares_three_strategies() {
+        let t = fig12(true);
+        assert_eq!(t[0].csv().lines().count(), 4);
+    }
+
+    #[test]
+    fn fig15_has_36_apps() {
+        let t = fig15();
+        assert_eq!(t[0].csv().lines().count(), 37);
+    }
+
+    #[test]
+    fn fig13_eviction_reduces_revenue() {
+        let tables = fig13(true);
+        let csv = tables[1].csv();
+        for line in csv.lines().skip(1) {
+            let r0: f64 = line.split(',').nth(1).unwrap().parse().unwrap();
+            let r1: f64 = line.split(',').nth(2).unwrap().parse().unwrap();
+            assert!(r1 <= r0 * 1.02, "eviction raised revenue: {line}");
+        }
+    }
+}

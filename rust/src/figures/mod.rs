@@ -1,0 +1,74 @@
+//! The experiment harness: one entry point per table/figure in the
+//! paper's evaluation (§7). `memtrade figure <id>` regenerates the data
+//! behind that figure and prints it as a markdown table; EXPERIMENTS.md
+//! records paper-vs-measured for each.
+//!
+//! | id        | paper result                                     |
+//! |-----------|--------------------------------------------------|
+//! | fig1      | cluster memory/CPU/net utilization CDFs          |
+//! | fig2a     | unallocated-memory availability durations        |
+//! | fig2b     | idle application memory reuse times              |
+//! | fig3      | perf drop vs harvested memory (no Silo)          |
+//! | table1    | harvested totals + perf loss, 6 producer apps    |
+//! | fig6      | perf drop vs harvested, with vs without Silo     |
+//! | fig7      | VM memory composition over time                  |
+//! | fig8      | burst recovery: none / SSD / HDD / zram prefetch |
+//! | fig9      | harvester sensitivity sweeps                     |
+//! | fig10     | broker placement + cluster-wide utilization      |
+//! | predictor | §7.2 ARIMA accuracy + early revocations          |
+//! | fig11     | consumer latency vs remote-% across modes        |
+//! | crypto    | §7.3 encryption/integrity overheads              |
+//! | table2    | cluster deployment consumer/producer latencies   |
+//! | fig12     | pricing strategies comparison                    |
+//! | fig13     | temporal market dynamics                         |
+//! | fig15     | 36 MemCachier-style MRCs                         |
+
+pub mod ablations;
+pub mod broker_eval;
+pub mod consumer_eval;
+pub mod harvesting;
+pub mod market_eval;
+pub mod traces;
+
+use crate::metrics::Table;
+
+/// All known experiment ids.
+pub const ALL: &[&str] = &[
+    "fig1", "fig2a", "fig2b", "fig3", "table1", "fig6", "fig7", "fig8", "fig9", "fig10",
+    "predictor", "fig11", "crypto", "table2", "fig12", "fig13", "fig14", "fig15",
+    "ablation_silo", "ablation_baseline", "ablation_placement",
+];
+
+/// Run one experiment by id, printing its table(s). `quick` shrinks the
+/// workload so CI runs stay fast.
+pub fn run(id: &str, quick: bool) -> Result<Vec<Table>, String> {
+    let tables = match id {
+        "fig1" => traces::fig1(quick),
+        "fig2a" => traces::fig2a(quick),
+        "fig2b" => harvesting::fig2b(quick),
+        "fig3" => harvesting::fig3(quick),
+        "table1" => harvesting::table1(quick),
+        "fig6" => harvesting::fig6(quick),
+        "fig7" => harvesting::fig7(quick),
+        "fig8" => harvesting::fig8(quick),
+        "fig9" => harvesting::fig9(quick),
+        "fig10" => broker_eval::fig10(quick),
+        "predictor" => broker_eval::predictor(quick),
+        "fig11" => consumer_eval::fig11(quick),
+        "crypto" => consumer_eval::crypto_overheads(quick),
+        "table2" => consumer_eval::table2(quick),
+        "fig12" => market_eval::fig12(quick),
+        "fig13" => market_eval::fig13(quick),
+        "fig14" => ablations::fig14(quick),
+        "fig15" => market_eval::fig15(),
+        "ablation_silo" => ablations::ablation_silo(quick),
+        "ablation_baseline" => ablations::ablation_baseline(quick),
+        "ablation_placement" => ablations::ablation_placement(quick),
+        _ => return Err(format!("unknown figure id {id:?}; known: {ALL:?}")),
+    };
+    for t in &tables {
+        t.print();
+        println!();
+    }
+    Ok(tables)
+}

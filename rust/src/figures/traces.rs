@@ -1,0 +1,105 @@
+//! Trace-analysis figures: Fig 1 (cluster utilization CDFs) and Fig 2a
+//! (availability durations of unallocated memory).
+
+use crate::metrics::{pct, Table};
+use crate::workload::cluster_trace::{ClusterTrace, MachineClass};
+
+fn quantile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((q * sorted.len() as f64) as usize).min(sorted.len() - 1);
+    sorted[idx]
+}
+
+/// Fig 1: memory/CPU/network utilization CDF summary per cluster class.
+pub fn fig1(quick: bool) -> Vec<Table> {
+    let (machines, steps) = if quick { (100, 288) } else { (500, 288 * 7) };
+    let mut t = Table::new(vec![
+        "cluster",
+        "resource",
+        "p10",
+        "p50",
+        "p90",
+        "max",
+        "mean idle",
+    ]);
+    for class in [MachineClass::Google, MachineClass::Alibaba, MachineClass::Snowflake] {
+        let trace = ClusterTrace::generate(class, machines, steps, 288, 31);
+        let series: [(&str, Vec<f64>); 3] = [
+            ("memory", (0..steps).map(|s| trace.cluster_mem_util(s)).collect()),
+            ("cpu", (0..steps).map(|s| trace.cluster_cpu_util(s)).collect()),
+            ("network", (0..steps).map(|s| trace.cluster_net_util(s)).collect()),
+        ];
+        for (name, mut xs) in series {
+            xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let mean: f64 = xs.iter().sum::<f64>() / xs.len() as f64;
+            t.row(vec![
+                format!("{class:?}"),
+                name.to_string(),
+                pct(quantile(&xs, 0.10)),
+                pct(quantile(&xs, 0.50)),
+                pct(quantile(&xs, 0.90)),
+                pct(*xs.last().unwrap()),
+                pct(1.0 - mean),
+            ]);
+        }
+    }
+    vec![t]
+}
+
+/// Fig 2a: how long unallocated memory stays available.
+pub fn fig2a(quick: bool) -> Vec<Table> {
+    let (machines, steps) = if quick { (100, 288 * 2) } else { (500, 288 * 7) };
+    let trace = ClusterTrace::generate(MachineClass::Google, machines, steps, 288, 33);
+    let mut t = Table::new(vec![
+        "unallocated >=",
+        "availability runs",
+        ">= 1 hour",
+        ">= 6 hours",
+        ">= 1 day",
+    ]);
+    for frac in [0.1, 0.2, 0.4] {
+        let durs = trace.availability_durations(frac);
+        let total_mass: f64 = durs.iter().map(|&d| d as f64).sum();
+        let mass_ge = |steps_min: usize| -> f64 {
+            durs.iter().filter(|&&d| d >= steps_min).map(|&d| d as f64).sum::<f64>()
+                / total_mass.max(1.0)
+        };
+        t.row(vec![
+            pct(frac),
+            format!("{}", durs.len()),
+            pct(mass_ge(12)),
+            pct(mass_ge(72)),
+            pct(mass_ge(288)),
+        ]);
+    }
+    vec![t]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig1_has_nine_rows() {
+        let tables = fig1(true);
+        assert_eq!(tables[0].csv().lines().count(), 10); // header + 9
+    }
+
+    #[test]
+    fn fig2a_availability_mostly_long() {
+        let tables = fig2a(true);
+        let csv = tables[0].csv();
+        // The >=1h column for the 10% threshold should be high (paper: 99%).
+        let row = csv.lines().nth(1).unwrap();
+        let ge_1h: f64 = row
+            .split(',')
+            .nth(2)
+            .unwrap()
+            .trim_end_matches('%')
+            .parse()
+            .unwrap();
+        assert!(ge_1h > 80.0, "availability mass {ge_1h}%");
+    }
+}

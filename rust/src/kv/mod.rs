@@ -1,0 +1,12 @@
+//! Redis-like key-value store — the producer-store substrate (paper §4.2).
+//!
+//! The paper runs one Redis server per consumer inside a cgroup. We build
+//! the equivalent from scratch: a byte-accounted KV store with Redis's
+//! sampled approximate-LRU eviction [Psounis et al.], an explicit
+//! `evict_bytes` path for harvester-initiated reclaims, a size-class
+//! allocation model whose external fragmentation can be compacted via
+//! `defragment` (Redis "activedefrag"), and hit/miss/eviction statistics.
+
+pub mod store;
+
+pub use store::{KvStats, KvStore};

@@ -1,0 +1,383 @@
+//! Byte-accounted KV store with sampled approximate-LRU eviction.
+
+use crate::util::rng::Rng;
+use std::collections::HashMap;
+
+/// Per-entry bookkeeping overhead, approximating Redis's dictEntry +
+/// robj + SDS headers (~64 bytes).
+pub const ENTRY_OVERHEAD: usize = 64;
+
+/// How many random keys an eviction samples (Redis `maxmemory-samples`).
+pub const EVICTION_SAMPLES: usize = 5;
+
+#[derive(Clone, Debug, Default)]
+pub struct KvStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub puts: u64,
+    pub deletes: u64,
+    pub evictions: u64,
+    pub rejected: u64,
+}
+
+struct Entry {
+    value: Vec<u8>,
+    /// Logical LRU clock value at last access.
+    last_access: u64,
+    /// Bytes charged to this entry (size-class rounded).
+    alloc: usize,
+    /// Position in `keys` for O(1) random sampling.
+    key_index: usize,
+}
+
+/// Round an allocation up to its size class (jemalloc-style: 8-byte steps
+/// to 128, then 1/8th-spaced classes). This models the internal
+/// fragmentation the paper's defragmentation discussion concerns.
+fn size_class(n: usize) -> usize {
+    if n <= 8 {
+        return 8;
+    }
+    if n <= 128 {
+        return (n + 7) & !7;
+    }
+    // Classes at lo + k*(lo/8) within each power-of-two range.
+    let pow = usize::BITS - (n - 1).leading_zeros(); // ceil log2
+    let lo = 1usize << (pow - 1);
+    let step = (lo / 8).max(8);
+    lo + (n - lo).div_ceil(step) * step
+}
+
+/// A single producer store: one per consumer lease (paper §4.2).
+pub struct KvStore {
+    map: HashMap<Vec<u8>, Entry>,
+    /// All keys, for O(1) uniform sampling (Redis-style eviction pool).
+    keys: Vec<Vec<u8>>,
+    max_bytes: usize,
+    used_bytes: usize,
+    /// Bytes actually used by live data (<= used_bytes; difference is
+    /// internal fragmentation that `defragment` can reclaim).
+    live_bytes: usize,
+    clock: u64,
+    rng: Rng,
+    pub stats: KvStats,
+}
+
+impl KvStore {
+    pub fn new(max_bytes: usize, seed: u64) -> Self {
+        KvStore {
+            map: HashMap::new(),
+            keys: Vec::new(),
+            max_bytes,
+            used_bytes: 0,
+            live_bytes: 0,
+            clock: 0,
+            rng: Rng::new(seed),
+            stats: KvStats::default(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+    pub fn used_bytes(&self) -> usize {
+        self.used_bytes
+    }
+    pub fn live_bytes(&self) -> usize {
+        self.live_bytes
+    }
+    pub fn max_bytes(&self) -> usize {
+        self.max_bytes
+    }
+
+    /// Fragmentation ratio (allocated / live), 1.0 when empty.
+    pub fn fragmentation(&self) -> f64 {
+        if self.live_bytes == 0 {
+            1.0
+        } else {
+            self.used_bytes as f64 / self.live_bytes as f64
+        }
+    }
+
+    fn charge(key: &[u8], value: &[u8]) -> (usize, usize) {
+        let live = key.len() + value.len() + ENTRY_OVERHEAD;
+        (size_class(live), live)
+    }
+
+    /// GET: returns the value and bumps LRU recency.
+    pub fn get(&mut self, key: &[u8]) -> Option<Vec<u8>> {
+        self.clock += 1;
+        match self.map.get_mut(key) {
+            Some(e) => {
+                e.last_access = self.clock;
+                self.stats.hits += 1;
+                Some(e.value.clone())
+            }
+            None => {
+                self.stats.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// PUT: inserts/overwrites, evicting LRU-approximate victims if needed.
+    /// Returns false (rejecting the write) when the pair can never fit.
+    pub fn put(&mut self, key: &[u8], value: &[u8]) -> bool {
+        let (alloc, live) = Self::charge(key, value);
+        if alloc > self.max_bytes {
+            self.stats.rejected += 1;
+            return false;
+        }
+        self.clock += 1;
+        // Replace in place if present.
+        if let Some(e) = self.map.get_mut(key) {
+            let (old_alloc, old_live) = (e.alloc, e.value.len() + key.len() + ENTRY_OVERHEAD);
+            e.value = value.to_vec();
+            e.alloc = alloc;
+            e.last_access = self.clock;
+            self.used_bytes = self.used_bytes - old_alloc + alloc;
+            self.live_bytes = self.live_bytes - old_live + live;
+        } else {
+            let key_index = self.keys.len();
+            self.keys.push(key.to_vec());
+            self.map.insert(
+                key.to_vec(),
+                Entry { value: value.to_vec(), last_access: self.clock, alloc, key_index },
+            );
+            self.used_bytes += alloc;
+            self.live_bytes += live;
+        }
+        self.stats.puts += 1;
+        while self.used_bytes > self.max_bytes {
+            if !self.evict_one() {
+                break;
+            }
+        }
+        true
+    }
+
+    /// DELETE: explicit consumer-side removal (paper §6.1).
+    pub fn delete(&mut self, key: &[u8]) -> bool {
+        let removed = self.remove_entry(key);
+        if removed {
+            self.stats.deletes += 1;
+        }
+        removed
+    }
+
+    fn remove_entry(&mut self, key: &[u8]) -> bool {
+        if let Some(e) = self.map.remove(key) {
+            self.used_bytes -= e.alloc;
+            self.live_bytes -= e.value.len() + key.len() + ENTRY_OVERHEAD;
+            // swap-remove from the sampling vec, fixing the moved key's index
+            let idx = e.key_index;
+            self.keys.swap_remove(idx);
+            if idx < self.keys.len() {
+                let moved = self.keys[idx].clone();
+                self.map.get_mut(&moved).expect("moved key present").key_index = idx;
+            }
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Evict one victim via Redis-style sampling: pick
+    /// `EVICTION_SAMPLES` random keys, evict the least recently used.
+    fn evict_one(&mut self) -> bool {
+        if self.keys.is_empty() {
+            return false;
+        }
+        let mut victim: Option<(u64, usize)> = None;
+        for _ in 0..EVICTION_SAMPLES.min(self.keys.len()) {
+            let i = self.rng.below(self.keys.len() as u64) as usize;
+            let e = &self.map[&self.keys[i]];
+            if victim.map_or(true, |(age, _)| e.last_access < age) {
+                victim = Some((e.last_access, i));
+            }
+        }
+        let (_, idx) = victim.expect("non-empty sampled");
+        let key = self.keys[idx].clone();
+        self.remove_entry(&key);
+        self.stats.evictions += 1;
+        true
+    }
+
+    /// Harvester-initiated reclaim (paper §4.2 "Eviction"): shrink the
+    /// budget and evict until under the new limit. Returns bytes freed.
+    pub fn shrink_to(&mut self, new_max: usize) -> usize {
+        let before = self.used_bytes;
+        self.max_bytes = new_max;
+        while self.used_bytes > self.max_bytes {
+            if !self.evict_one() {
+                break;
+            }
+        }
+        before - self.used_bytes
+    }
+
+    /// Grow the budget back (lease extension / recovery ended).
+    pub fn grow_to(&mut self, new_max: usize) {
+        self.max_bytes = self.max_bytes.max(new_max);
+    }
+
+    /// Defragment: compact allocations down to live bytes (Redis
+    /// activedefrag). Returns bytes reclaimed.
+    pub fn defragment(&mut self) -> usize {
+        // After compaction every entry is charged exactly its live size.
+        let mut new_used = 0usize;
+        for (k, e) in self.map.iter_mut() {
+            let live = k.len() + e.value.len() + ENTRY_OVERHEAD;
+            e.alloc = live;
+            new_used += live;
+        }
+        let freed = self.used_bytes.saturating_sub(new_used);
+        self.used_bytes = new_used;
+        freed
+    }
+
+    /// Uniform random resident key (for workload-driven scans/tests).
+    pub fn sample_key(&mut self) -> Option<Vec<u8>> {
+        if self.keys.is_empty() {
+            None
+        } else {
+            let i = self.rng.below(self.keys.len() as u64) as usize;
+            Some(self.keys[i].clone())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn size_classes_monotone_and_cover() {
+        let mut prev = 0;
+        for n in 1..5000 {
+            let c = size_class(n);
+            assert!(c >= n, "class {c} < size {n}");
+            assert!(c >= prev || c >= size_class(n - 1), "non-monotone at {n}");
+            prev = c;
+        }
+        assert_eq!(size_class(8), 8);
+        assert_eq!(size_class(9), 16);
+        assert_eq!(size_class(128), 128);
+    }
+
+    #[test]
+    fn put_get_delete() {
+        let mut kv = KvStore::new(1 << 20, 1);
+        assert!(kv.put(b"k1", b"v1"));
+        assert_eq!(kv.get(b"k1"), Some(b"v1".to_vec()));
+        assert_eq!(kv.get(b"nope"), None);
+        assert!(kv.delete(b"k1"));
+        assert!(!kv.delete(b"k1"));
+        assert_eq!(kv.get(b"k1"), None);
+        assert_eq!(kv.stats.hits, 1);
+        assert_eq!(kv.stats.misses, 2);
+        assert_eq!(kv.stats.deletes, 1);
+        assert!(kv.is_empty());
+        assert_eq!(kv.used_bytes(), 0);
+        assert_eq!(kv.live_bytes(), 0);
+    }
+
+    #[test]
+    fn overwrite_accounting_exact() {
+        let mut kv = KvStore::new(1 << 20, 1);
+        kv.put(b"k", &vec![0u8; 100]);
+        let used_100 = kv.used_bytes();
+        kv.put(b"k", &vec![0u8; 500]);
+        kv.put(b"k", &vec![0u8; 100]);
+        assert_eq!(kv.used_bytes(), used_100);
+        assert_eq!(kv.len(), 1);
+    }
+
+    #[test]
+    fn eviction_respects_limit_and_prefers_cold() {
+        let mut kv = KvStore::new(64 * 1024, 42);
+        // Insert 1 KB values until well past the limit.
+        for i in 0..200u32 {
+            kv.put(format!("key{i}").as_bytes(), &vec![1u8; 1024]);
+        }
+        assert!(kv.used_bytes() <= kv.max_bytes());
+        assert!(kv.stats.evictions > 0);
+        // Keep key0 hot while flooding: it should survive.
+        let mut kv = KvStore::new(64 * 1024, 43);
+        kv.put(b"hot", &vec![1u8; 1024]);
+        for i in 0..500u32 {
+            let _ = kv.get(b"hot");
+            kv.put(format!("cold{i}").as_bytes(), &vec![1u8; 1024]);
+        }
+        assert!(kv.get(b"hot").is_some(), "hot key evicted by approx-LRU");
+    }
+
+    #[test]
+    fn rejects_oversized() {
+        let mut kv = KvStore::new(1024, 1);
+        assert!(!kv.put(b"big", &vec![0u8; 4096]));
+        assert_eq!(kv.stats.rejected, 1);
+        assert!(kv.is_empty());
+    }
+
+    #[test]
+    fn shrink_evicts_and_reports() {
+        let mut kv = KvStore::new(1 << 20, 7);
+        for i in 0..100u32 {
+            kv.put(format!("k{i}").as_bytes(), &vec![0u8; 2048]);
+        }
+        let before = kv.used_bytes();
+        let freed = kv.shrink_to(before / 2);
+        assert!(freed > 0);
+        assert!(kv.used_bytes() <= before / 2);
+        kv.grow_to(1 << 20);
+        assert_eq!(kv.max_bytes(), 1 << 20);
+    }
+
+    #[test]
+    fn defragment_reclaims_class_waste() {
+        let mut kv = KvStore::new(1 << 20, 9);
+        // 200-byte live entries land in a larger size class.
+        for i in 0..50u32 {
+            kv.put(format!("k{i}").as_bytes(), &vec![0u8; 150]);
+        }
+        assert!(kv.fragmentation() > 1.0);
+        let freed = kv.defragment();
+        assert!(freed > 0);
+        assert!((kv.fragmentation() - 1.0).abs() < 1e-9);
+        // Data intact.
+        assert_eq!(kv.get(b"k0").unwrap().len(), 150);
+    }
+
+    #[test]
+    fn accounting_invariant_random_ops() {
+        let mut kv = KvStore::new(256 * 1024, 11);
+        let mut rng = Rng::new(5);
+        for step in 0..20_000u64 {
+            let k = format!("key{}", rng.below(500));
+            match rng.below(10) {
+                0..=5 => {
+                    kv.put(k.as_bytes(), &vec![0u8; rng.below(2000) as usize + 1]);
+                }
+                6..=8 => {
+                    let _ = kv.get(k.as_bytes());
+                }
+                _ => {
+                    let _ = kv.delete(k.as_bytes());
+                }
+            }
+            assert!(kv.used_bytes() <= kv.max_bytes(), "step {step}");
+            assert!(kv.live_bytes() <= kv.used_bytes(), "step {step}");
+        }
+        // Delete everything: accounting must return to zero.
+        let keys: Vec<Vec<u8>> = (0..500).map(|i| format!("key{i}").into_bytes()).collect();
+        for k in keys {
+            let _ = kv.delete(&k);
+        }
+        assert_eq!(kv.used_bytes(), 0);
+        assert_eq!(kv.live_bytes(), 0);
+        assert_eq!(kv.len(), 0);
+    }
+}

@@ -1,0 +1,39 @@
+//! # Memtrade — a disaggregated-memory marketplace for public clouds
+//!
+//! Production-quality reproduction of *Memtrade* (Maruf et al., 2021) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the complete Memtrade system: producers
+//!   ([`producer`]: harvester + Silo + manager), the market [`broker`]
+//!   (registry, placement, pricing, availability prediction), secure
+//!   [`consumer`] clients, and every substrate they need, built from
+//!   scratch: a Redis-like KV store ([`kv`]), a guest-VM memory model with
+//!   cgroup/PFRA/swap semantics ([`mem`]), AES-128-CBC + SHA-256
+//!   ([`crypto`]), a wire protocol with simulated and TCP transports
+//!   ([`net`]), workload/trace generators ([`workload`]), and a
+//!   discrete-event cluster simulator ([`sim`]).
+//! * **Layer 2/1 (build-time python)** — the broker's numeric hot paths
+//!   (batched ARIMA-family availability forecasting; MRC-driven market
+//!   demand evaluation) authored in JAX + Pallas, AOT-lowered to HLO text
+//!   and executed from [`runtime`] via the PJRT CPU client. Python never
+//!   runs on the request path.
+//!
+//! See `DESIGN.md` for the paper → module inventory and the experiment
+//! index, and `EXPERIMENTS.md` for reproduced tables/figures.
+
+pub mod broker;
+pub mod consumer;
+pub mod core;
+pub mod crypto;
+pub mod figures;
+pub mod kv;
+pub mod mem;
+pub mod metrics;
+pub mod net;
+pub mod producer;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+pub mod workload;
+
+pub use crate::core::{ConsumerId, Lease, LeaseId, MachineId, ProducerId, SlabId};

@@ -1,0 +1,270 @@
+//! Memtrade CLI — the launcher for every role and experiment.
+//!
+//! ```text
+//! memtrade figure <id> [--quick]        regenerate a paper table/figure
+//! memtrade figure all [--quick]         regenerate everything
+//! memtrade producer --port <p> [...]    run a TCP producer store
+//! memtrade consumer --addr <a> [...]    run a YCSB consumer against it
+//! memtrade sim [--minutes N]            run the cluster simulation
+//! memtrade replay [--steps N]           run the Google-style replay
+//! memtrade list                         list experiment ids
+//! ```
+//!
+//! Argument parsing is hand-rolled (offline build: no clap).
+
+use memtrade::core::{Money, SimTime};
+use memtrade::figures;
+use memtrade::net::tcp::{KvClient, ProducerStoreServer};
+use memtrade::sim::cluster::{ClusterSim, ClusterSimConfig, ConsumerMode};
+use memtrade::sim::replay::{run as replay_run, ReplayConfig};
+use memtrade::util::rng::Rng;
+use memtrade::workload::ycsb::{Op, YcsbWorkload};
+use std::process::ExitCode;
+
+struct Args {
+    positional: Vec<String>,
+    flags: std::collections::HashMap<String, String>,
+}
+
+fn parse_args(argv: &[String]) -> Args {
+    let mut positional = Vec::new();
+    let mut flags = std::collections::HashMap::new();
+    let mut i = 0;
+    while i < argv.len() {
+        let a = &argv[i];
+        if let Some(name) = a.strip_prefix("--") {
+            if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                flags.insert(name.to_string(), argv[i + 1].clone());
+                i += 2;
+            } else {
+                flags.insert(name.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            positional.push(a.clone());
+            i += 1;
+        }
+    }
+    Args { positional, flags }
+}
+
+impl Args {
+    fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(String::as_str)
+    }
+    fn flag_u64(&self, name: &str, default: u64) -> u64 {
+        self.flag(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+    fn has(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+}
+
+const USAGE: &str = "\
+memtrade — a disaggregated-memory marketplace (paper reproduction)
+
+USAGE:
+  memtrade figure <id>|all [--quick]
+  memtrade producer [--port P] [--mb N] [--rate-mbps R]
+  memtrade consumer --addr HOST:PORT [--ops N] [--value-bytes B] [--no-encrypt]
+  memtrade sim [--minutes N] [--producers N] [--consumers N] [--remote PCT]
+  memtrade replay [--steps N] [--producers N] [--consumers N]
+  memtrade list
+";
+
+fn main() -> ExitCode {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        print!("{USAGE}");
+        return ExitCode::FAILURE;
+    }
+    let cmd = argv[0].clone();
+    let args = parse_args(&argv[1..]);
+    match cmd.as_str() {
+        "figure" => cmd_figure(&args),
+        "producer" => cmd_producer(&args),
+        "consumer" => cmd_consumer(&args),
+        "sim" => cmd_sim(&args),
+        "replay" => cmd_replay(&args),
+        "list" => {
+            for id in figures::ALL {
+                println!("{id}");
+            }
+            ExitCode::SUCCESS
+        }
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            ExitCode::SUCCESS
+        }
+        other => {
+            eprintln!("unknown command {other:?}\n{USAGE}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn cmd_figure(args: &Args) -> ExitCode {
+    let Some(id) = args.positional.first() else {
+        eprintln!("figure: missing id (try `memtrade list`)");
+        return ExitCode::FAILURE;
+    };
+    let quick = args.has("quick");
+    let ids: Vec<&str> = if id == "all" {
+        figures::ALL.to_vec()
+    } else {
+        vec![id.as_str()]
+    };
+    for id in ids {
+        println!("=== {id} ===");
+        if let Err(e) = figures::run(id, quick) {
+            eprintln!("{e}");
+            return ExitCode::FAILURE;
+        }
+    }
+    ExitCode::SUCCESS
+}
+
+fn cmd_producer(args: &Args) -> ExitCode {
+    let port = args.flag_u64("port", 7077);
+    let mb = args.flag_u64("mb", 256);
+    let rate = args.flag("rate-mbps").and_then(|v| v.parse::<u64>().ok());
+    let server = match ProducerStoreServer::start(
+        format!("0.0.0.0:{port}"),
+        (mb as usize) << 20,
+        rate.map(|m| m * 1_000_000 / 8),
+        1,
+    ) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("bind failed: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    println!(
+        "producer store listening on {} ({} MB{})",
+        server.addr(),
+        mb,
+        rate.map(|r| format!(", {r} Mb/s limit")).unwrap_or_default()
+    );
+    println!("press Ctrl-C to stop");
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_consumer(args: &Args) -> ExitCode {
+    let Some(addr) = args.flag("addr") else {
+        eprintln!("consumer: --addr HOST:PORT required");
+        return ExitCode::FAILURE;
+    };
+    let ops = args.flag_u64("ops", 10_000);
+    let value_bytes = args.flag_u64("value-bytes", 1024) as usize;
+    let encrypt = !args.has("no-encrypt");
+
+    let mut client = match KvClient::connect(addr) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("connect failed: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let mut secure = memtrade::consumer::client::SecureKv::new(
+        encrypt.then_some([3u8; 16]),
+        true,
+        1,
+        99,
+    );
+    let workload = YcsbWorkload::paper_default((ops / 4).max(100), value_bytes);
+    let mut rng = Rng::new(5);
+    let mut rec = memtrade::util::stats::LatencyRecorder::new();
+    let mut transport = |_p: u32, req: memtrade::net::wire::Request| {
+        client.call(&req).unwrap_or(memtrade::net::wire::Response::Error("io".into()))
+    };
+    let started = std::time::Instant::now();
+    for _ in 0..ops {
+        let op = workload.next_op(&mut rng);
+        let key = YcsbWorkload::key_bytes(op.key());
+        let t0 = std::time::Instant::now();
+        match op {
+            Op::Read { .. } => {
+                if secure.get(&mut transport, &key).is_none() {
+                    let value = vec![0xAB; value_bytes];
+                    let _ = secure.put(&mut transport, &key, &value);
+                }
+            }
+            Op::Update { .. } => {
+                let value = vec![0xCD; value_bytes];
+                let _ = secure.put(&mut transport, &key, &value);
+            }
+        }
+        rec.record(t0.elapsed().as_micros() as f64);
+    }
+    let dt = started.elapsed().as_secs_f64();
+    println!(
+        "{} ops in {:.2}s ({:.0} ops/s) | avg {:.1}µs p50 {:.1}µs p99 {:.1}µs | hit ratio {:.3}",
+        ops,
+        dt,
+        ops as f64 / dt,
+        rec.mean(),
+        rec.p50(),
+        rec.p99(),
+        secure.hit_ratio(),
+    );
+    ExitCode::SUCCESS
+}
+
+fn cmd_sim(args: &Args) -> ExitCode {
+    let minutes = args.flag_u64("minutes", 10);
+    let cfg = ClusterSimConfig {
+        n_producers: args.flag_u64("producers", 8) as usize,
+        n_consumers: args.flag_u64("consumers", 6) as usize,
+        remote_fraction: args.flag_u64("remote", 30) as f64 / 100.0,
+        mode: ConsumerMode::Secure,
+        use_pjrt: !args.has("no-pjrt"),
+        ..Default::default()
+    };
+    println!(
+        "cluster sim: {} producers, {} consumers, {}% remote, {} min",
+        cfg.n_producers,
+        cfg.n_consumers,
+        (cfg.remote_fraction * 100.0) as u32,
+        minutes
+    );
+    let mut sim = ClusterSim::new(cfg);
+    sim.bootstrap();
+    sim.run(SimTime::from_mins(minutes));
+    println!(
+        "consumer avg {:.2} ms, p99 {:.2} ms | leased {:.1} GB | price {}",
+        sim.consumer_mean_latency() / 1000.0,
+        sim.consumer_p99_latency() / 1000.0,
+        sim.leased_bytes() as f64 / (1u64 << 30) as f64,
+        Money::from_dollars(sim.broker.current_price().as_dollars()),
+    );
+    ExitCode::SUCCESS
+}
+
+fn cmd_replay(args: &Args) -> ExitCode {
+    let cfg = ReplayConfig {
+        steps: args.flag_u64("steps", 288) as usize,
+        n_producers: args.flag_u64("producers", 100) as usize,
+        n_consumers: args.flag_u64("consumers", 200) as usize,
+        use_pjrt: !args.has("no-pjrt"),
+        ..Default::default()
+    };
+    let r = replay_run(cfg);
+    println!(
+        "requests {} | slabs granted {}/{} ({:.1}%)",
+        r.requests,
+        r.slabs_granted,
+        r.slabs_requested,
+        100.0 * r.slabs_granted as f64 / r.slabs_requested.max(1) as f64
+    );
+    println!(
+        "utilization {:.1}% -> {:.1}% | overprediction {:.2}% | revoked {:.2}%",
+        100.0 * r.base_utilization,
+        100.0 * r.memtrade_utilization,
+        100.0 * r.overprediction_fraction,
+        100.0 * r.revoked_fraction,
+    );
+    ExitCode::SUCCESS
+}

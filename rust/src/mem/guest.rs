@@ -1,0 +1,437 @@
+//! The guest-VM page-level memory model: cgroup limit, sampled-LRU PFRA,
+//! frontswap into Silo, swap device, prefetch, and the memory-composition
+//! accounting behind the paper's Figures 3, 6, 7/14 and Table 1.
+
+use crate::core::SimTime;
+use crate::mem::silo::Silo;
+use crate::mem::swap::SwapDevice;
+use crate::util::rng::Rng;
+
+/// Where a page currently lives.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum PageState {
+    InMemory,
+    InSilo,
+    OnDisk,
+}
+
+/// Result of one page access.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AccessOutcome {
+    /// Resident — base cost only.
+    Hit,
+    /// Mapped back from Silo (minor-fault cost).
+    SiloHit,
+    /// Major fault from the swap device (promotion / swap-in).
+    DiskFault,
+}
+
+impl AccessOutcome {
+    pub fn is_fault(self) -> bool {
+        !matches!(self, AccessOutcome::Hit)
+    }
+}
+
+/// VM memory composition snapshot, in bytes (Fig 7/14 series).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MemShape {
+    pub total: u64,
+    pub rss: u64,
+    pub silo: u64,
+    pub swapped: u64,
+    pub unallocated: u64,
+    /// total - rss - silo - zram residue: what the manager may lease.
+    pub harvestable: u64,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct GuestStats {
+    pub accesses: u64,
+    pub silo_hits: u64,
+    pub disk_faults: u64,
+    /// Pages written to the swap device (cooled out of Silo).
+    pub swap_outs: u64,
+    /// Pages prefetched back by burst mitigation.
+    pub prefetched: u64,
+}
+
+/// PFRA sampling width: how many resident pages the reclaimer inspects
+/// per eviction. Small values make reclaim (realistically) imperfect.
+const PFRA_SAMPLES: usize = 8;
+
+/// Page-granular guest memory for one producer VM.
+pub struct GuestMemory {
+    page_bytes: u64,
+    /// VM DRAM size in pages.
+    total_pages: u32,
+    /// Application footprint in pages (indices 0..app_pages).
+    app_pages: u32,
+    /// cgroup memory limit, in pages.
+    limit_pages: u32,
+    state: Vec<PageState>,
+    /// Logical recency clock per page (bumped on access).
+    last_access: Vec<u64>,
+    clock: u64,
+    /// Resident page ids, for O(1) sampled reclaim.
+    resident: Vec<u32>,
+    /// Position of page in `resident` (u32::MAX when absent).
+    resident_idx: Vec<u32>,
+    /// Pages on disk in swap-out order (for most-recent-first prefetch).
+    disk_lifo: Vec<u32>,
+    silo: Option<Silo>,
+    device: SwapDevice,
+    rng: Rng,
+    pub stats: GuestStats,
+}
+
+const NOT_RESIDENT: u32 = u32::MAX;
+
+impl GuestMemory {
+    /// A VM with `total_bytes` DRAM running an app of `app_bytes`;
+    /// `silo_cooling = None` disables Silo (pages swap straight to disk).
+    pub fn new(
+        total_bytes: u64,
+        app_bytes: u64,
+        page_bytes: u64,
+        device: SwapDevice,
+        silo_cooling: Option<SimTime>,
+        seed: u64,
+    ) -> Self {
+        assert!(app_bytes <= total_bytes);
+        let total_pages = (total_bytes / page_bytes) as u32;
+        let app_pages = (app_bytes / page_bytes) as u32;
+        let state = vec![PageState::InMemory; app_pages as usize];
+        let last_access = vec![0u64; app_pages as usize];
+        let resident: Vec<u32> = (0..app_pages).collect();
+        let resident_idx: Vec<u32> = (0..app_pages).collect();
+        GuestMemory {
+            page_bytes,
+            total_pages,
+            app_pages,
+            limit_pages: total_pages,
+            state,
+            last_access,
+            clock: 0,
+            resident,
+            resident_idx,
+            disk_lifo: Vec::new(),
+            silo: silo_cooling.map(Silo::new),
+            device,
+            rng: Rng::new(seed),
+            stats: GuestStats::default(),
+        }
+    }
+
+    pub fn page_bytes(&self) -> u64 {
+        self.page_bytes
+    }
+    pub fn app_pages(&self) -> u32 {
+        self.app_pages
+    }
+    pub fn rss_pages(&self) -> u32 {
+        self.resident.len() as u32
+    }
+    pub fn silo_pages(&self) -> u32 {
+        self.silo.as_ref().map_or(0, |s| s.len() as u32)
+    }
+    pub fn disk_pages(&self) -> u32 {
+        self.state.iter().filter(|s| **s == PageState::OnDisk).count() as u32
+    }
+    pub fn device(&self) -> SwapDevice {
+        self.device
+    }
+
+    /// Current memory composition (Fig 7/14).
+    pub fn shape(&self) -> MemShape {
+        let total = self.total_pages as u64 * self.page_bytes;
+        let rss = self.resident.len() as u64 * self.page_bytes;
+        let silo = self.silo_pages() as u64 * self.page_bytes;
+        let swapped_pages = self.app_pages as u64 - self.resident.len() as u64
+            - self.silo_pages() as u64;
+        let swapped = swapped_pages * self.page_bytes;
+        // zram keeps a compressed residue of swapped pages in RAM.
+        let residue = (swapped as f64 * self.device.resident_fraction()) as u64;
+        let unallocated = total - self.app_pages as u64 * self.page_bytes;
+        let harvestable = total - rss - silo - residue;
+        MemShape { total, rss, silo, swapped, unallocated, harvestable }
+    }
+
+    fn resident_push(&mut self, page: u32) {
+        self.resident_idx[page as usize] = self.resident.len() as u32;
+        self.resident.push(page);
+        self.state[page as usize] = PageState::InMemory;
+    }
+
+    fn resident_remove(&mut self, page: u32) {
+        let idx = self.resident_idx[page as usize];
+        debug_assert_ne!(idx, NOT_RESIDENT);
+        self.resident.swap_remove(idx as usize);
+        if (idx as usize) < self.resident.len() {
+            let moved = self.resident[idx as usize];
+            self.resident_idx[moved as usize] = idx;
+        }
+        self.resident_idx[page as usize] = NOT_RESIDENT;
+    }
+
+    /// Access one page; returns the outcome (caller charges latency).
+    pub fn access(&mut self, page: u32, now: SimTime) -> AccessOutcome {
+        debug_assert!(page < self.app_pages);
+        self.clock += 1;
+        self.last_access[page as usize] = self.clock;
+        self.stats.accesses += 1;
+        match self.state[page as usize] {
+            PageState::InMemory => AccessOutcome::Hit,
+            PageState::InSilo => {
+                let silo = self.silo.as_mut().expect("page marked InSilo without Silo");
+                let present = silo.map_back(page);
+                debug_assert!(present);
+                self.resident_push(page);
+                self.stats.silo_hits += 1;
+                // Mapping back may push RSS above the cgroup limit again;
+                // the PFRA will rebalance on the next reclaim pass.
+                self.reclaim_to_limit(now);
+                AccessOutcome::SiloHit
+            }
+            PageState::OnDisk => {
+                // Major fault: swap in, promote.
+                if let Some(pos) = self.disk_lifo.iter().rposition(|&p| p == page) {
+                    self.disk_lifo.remove(pos);
+                }
+                self.resident_push(page);
+                self.stats.disk_faults += 1;
+                self.reclaim_to_limit(now);
+                AccessOutcome::DiskFault
+            }
+        }
+    }
+
+    /// Set the cgroup limit (bytes); lowering it triggers PFRA reclaim.
+    pub fn set_cgroup_limit(&mut self, bytes: u64, now: SimTime) {
+        self.limit_pages = (bytes / self.page_bytes).min(self.total_pages as u64) as u32;
+        self.reclaim_to_limit(now);
+    }
+
+    /// Remove any cgroup limit (recovery mode, Algorithm 1 line 6).
+    pub fn disable_cgroup_limit(&mut self) {
+        self.limit_pages = self.total_pages;
+    }
+
+    pub fn cgroup_limit_bytes(&self) -> u64 {
+        self.limit_pages as u64 * self.page_bytes
+    }
+
+    /// PFRA: evict sampled-LRU resident pages until RSS <= limit.
+    fn reclaim_to_limit(&mut self, now: SimTime) {
+        while self.resident.len() as u32 > self.limit_pages {
+            if self.resident.is_empty() {
+                break;
+            }
+            let victim = self.pick_victim();
+            self.resident_remove(victim);
+            match &mut self.silo {
+                Some(silo) => {
+                    self.state[victim as usize] = PageState::InSilo;
+                    silo.admit(now, victim);
+                }
+                None => {
+                    self.state[victim as usize] = PageState::OnDisk;
+                    self.disk_lifo.push(victim);
+                    self.stats.swap_outs += 1;
+                }
+            }
+        }
+    }
+
+    /// Sampled LRU: inspect PFRA_SAMPLES random resident pages, evict the
+    /// coldest. Imperfect by construction — occasionally a warm page goes.
+    fn pick_victim(&mut self) -> u32 {
+        let n = self.resident.len();
+        let mut best: Option<(u64, u32)> = None;
+        for _ in 0..PFRA_SAMPLES.min(n) {
+            let i = self.rng.below(n as u64) as usize;
+            let page = self.resident[i];
+            let age = self.last_access[page as usize];
+            if best.map_or(true, |(a, _)| age < a) {
+                best = Some((age, page));
+            }
+        }
+        best.expect("non-empty resident set").1
+    }
+
+    /// Advance Silo cooling: pages resident past the CoolingPeriod are
+    /// written to the swap device. Returns pages moved (device write cost
+    /// is background work).
+    pub fn tick(&mut self, now: SimTime) -> usize {
+        let Some(silo) = &mut self.silo else { return 0 };
+        let cooled = silo.drain_cooled(now);
+        let n = cooled.len();
+        for page in cooled {
+            self.state[page as usize] = PageState::OnDisk;
+            self.disk_lifo.push(page);
+            self.stats.swap_outs += 1;
+        }
+        n
+    }
+
+    /// Burst mitigation (§4.1): prefetch up to `bytes` of the most
+    /// recently swapped-out pages back into memory. Returns pages fetched;
+    /// the caller charges `pages * device.read_latency()` as background
+    /// I/O (it does not block the application).
+    pub fn prefetch(&mut self, bytes: u64, now: SimTime) -> usize {
+        let want = (bytes / self.page_bytes) as usize;
+        let mut fetched = 0;
+        while fetched < want {
+            let Some(page) = self.disk_lifo.pop() else { break };
+            debug_assert_eq!(self.state[page as usize], PageState::OnDisk);
+            self.resident_push(page);
+            self.clock += 1;
+            self.last_access[page as usize] = self.clock;
+            fetched += 1;
+        }
+        self.stats.prefetched += fetched as u64;
+        // Respect the (possibly disabled) limit.
+        self.reclaim_to_limit(now);
+        fetched
+    }
+
+    /// Swapped-in page count — the "promotion rate" performance proxy.
+    pub fn promotions(&self) -> u64 {
+        self.stats.disk_faults
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const PAGE: u64 = 4096;
+
+    fn gm(total_mb: u64, app_mb: u64, silo: bool) -> GuestMemory {
+        GuestMemory::new(
+            total_mb << 20,
+            app_mb << 20,
+            PAGE,
+            SwapDevice::Ssd,
+            silo.then(|| SimTime::from_secs(60)),
+            7,
+        )
+    }
+
+    #[test]
+    fn initial_shape() {
+        let g = gm(64, 32, true);
+        let s = g.shape();
+        assert_eq!(s.total, 64 << 20);
+        assert_eq!(s.rss, 32 << 20);
+        assert_eq!(s.silo, 0);
+        assert_eq!(s.swapped, 0);
+        assert_eq!(s.unallocated, 32 << 20);
+        assert_eq!(s.harvestable, 32 << 20);
+    }
+
+    #[test]
+    fn lowering_limit_reclaims_into_silo() {
+        let mut g = gm(64, 32, true);
+        g.set_cgroup_limit(16 << 20, SimTime::ZERO);
+        assert_eq!(g.rss_pages() as u64 * PAGE, 16 << 20);
+        assert_eq!(g.silo_pages() as u64 * PAGE, 16 << 20);
+        // Nothing on disk until cooling elapses.
+        assert_eq!(g.disk_pages(), 0);
+        assert_eq!(g.tick(SimTime::from_secs(59)), 0);
+        let cooled = g.tick(SimTime::from_secs(60));
+        assert_eq!(cooled as u64 * PAGE, 16 << 20);
+        let s = g.shape();
+        assert_eq!(s.swapped, 16 << 20);
+        assert_eq!(s.harvestable, 64 * (1 << 20) - (16 << 20));
+    }
+
+    #[test]
+    fn without_silo_pages_go_straight_to_disk() {
+        let mut g = gm(64, 32, false);
+        g.set_cgroup_limit(16 << 20, SimTime::ZERO);
+        assert_eq!(g.silo_pages(), 0);
+        assert_eq!(g.disk_pages() as u64 * PAGE, 16 << 20);
+    }
+
+    #[test]
+    fn access_states_and_outcomes() {
+        let mut g = gm(8, 4, true);
+        assert_eq!(g.access(0, SimTime::ZERO), AccessOutcome::Hit);
+        // Push everything out.
+        g.set_cgroup_limit(0, SimTime::ZERO);
+        assert_eq!(g.rss_pages(), 0);
+        // Raise the limit so mapped-back pages can stay.
+        g.disable_cgroup_limit();
+        assert_eq!(g.access(0, SimTime::from_secs(1)), AccessOutcome::SiloHit);
+        assert_eq!(g.access(0, SimTime::from_secs(1)), AccessOutcome::Hit);
+        // Cool one page to disk and fault it.
+        let mut g = gm(8, 4, true);
+        g.set_cgroup_limit(0, SimTime::ZERO);
+        g.tick(SimTime::from_secs(61));
+        g.disable_cgroup_limit();
+        assert_eq!(g.access(5, SimTime::from_secs(62)), AccessOutcome::DiskFault);
+        assert_eq!(g.promotions(), 1);
+    }
+
+    #[test]
+    fn pfra_prefers_cold_pages() {
+        let mut g = gm(8, 4, true);
+        let hot: Vec<u32> = (0..64).collect();
+        // Touch hot pages many times.
+        for round in 0..10 {
+            for &p in &hot {
+                g.access(p, SimTime::from_secs(round));
+            }
+        }
+        // Reclaim half the app.
+        g.set_cgroup_limit(2 << 20, SimTime::from_secs(11));
+        // The sampled LRU should keep the vast majority of hot pages.
+        let still_hot = hot
+            .iter()
+            .filter(|&&p| g.resident_idx[p as usize] != NOT_RESIDENT)
+            .count();
+        assert!(still_hot >= 56, "only {still_hot}/64 hot pages survived");
+    }
+
+    #[test]
+    fn prefetch_restores_most_recent_first() {
+        let mut g = gm(8, 4, false);
+        g.set_cgroup_limit(1 << 20, SimTime::ZERO);
+        let swapped_before = g.disk_pages();
+        assert!(swapped_before > 0);
+        g.disable_cgroup_limit();
+        let fetched = g.prefetch(1 << 20, SimTime::from_secs(1));
+        assert_eq!(fetched as u64 * PAGE, 1 << 20);
+        assert_eq!(g.disk_pages(), swapped_before - fetched as u32);
+        assert_eq!(g.stats.prefetched, fetched as u64);
+    }
+
+    #[test]
+    fn shape_accounts_zram_residue() {
+        let mut g = GuestMemory::new(
+            64 << 20,
+            32 << 20,
+            PAGE,
+            SwapDevice::Zram,
+            None,
+            3,
+        );
+        g.set_cgroup_limit(16 << 20, SimTime::ZERO);
+        let s = g.shape();
+        assert_eq!(s.swapped, 16 << 20);
+        let residue = (s.swapped as f64 * 0.4) as u64;
+        assert_eq!(s.harvestable, s.total - s.rss - residue);
+    }
+
+    #[test]
+    fn composition_sums() {
+        let mut g = gm(64, 48, true);
+        g.set_cgroup_limit(24 << 20, SimTime::ZERO);
+        g.tick(SimTime::from_secs(120));
+        let s = g.shape();
+        // rss + silo + swapped == app footprint
+        assert_eq!(s.rss + s.silo + s.swapped, 48 << 20);
+        // unallocated + app == total
+        assert_eq!(s.unallocated + (48 << 20), s.total);
+    }
+}

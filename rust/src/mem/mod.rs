@@ -1,0 +1,22 @@
+//! Guest-VM memory model — the substrate that stands in for the paper's
+//! Linux kernel machinery (cgroup memory limits, the Page Frame
+//! Reclamation Algorithm, frontswap, and swap devices), plus **Silo**, the
+//! paper's novel in-memory victim cache (§4.1).
+//!
+//! The model is page-granular: application memory is a set of logical
+//! pages, each resident in memory, parked in Silo, or swapped out to a
+//! device. A cgroup limit below the resident set triggers reclaim through
+//! a sampled-LRU approximation of the PFRA — which, like the real PFRA,
+//! sometimes picks warm pages (the imperfection Silo exists to absorb).
+//! Reclaimed pages enter Silo via the frontswap hook; pages idle in Silo
+//! longer than the CoolingPeriod are written to the swap device and their
+//! memory becomes harvestable. Faults on swapped pages pay the device's
+//! read latency; faults on Silo pages are cheap map-backs.
+
+pub mod guest;
+pub mod silo;
+pub mod swap;
+
+pub use guest::{AccessOutcome, GuestMemory, MemShape};
+pub use silo::Silo;
+pub use swap::SwapDevice;

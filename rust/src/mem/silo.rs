@@ -1,0 +1,180 @@
+//! Silo — the paper's in-memory victim cache for swapped-out pages
+//! (§4.1).  Implemented in the real system as a frontswap backend kernel
+//! module; here as the equivalent model: a FIFO of (entry time, page)
+//! whose pages are
+//!
+//! * mapped back cheaply on access (preventing the performance cliff of a
+//!   hot page reaching disk),
+//! * evicted to the swap device once resident longer than the
+//!   CoolingPeriod (making their memory truly harvestable),
+//! * and prefetched back from disk (most-recently-swapped first) when the
+//!   harvester detects a severe performance drop.
+
+use crate::core::SimTime;
+use std::collections::{HashMap, VecDeque};
+
+/// Victim cache of swapped-out pages awaiting cooling.
+pub struct Silo {
+    /// FIFO in entry order: (entered_at, page). Stale entries (pages that
+    /// were mapped back) are skipped lazily via the `members` check.
+    queue: VecDeque<(SimTime, u32)>,
+    /// page -> entry time for liveness/containment checks.
+    members: HashMap<u32, SimTime>,
+    cooling: SimTime,
+    pub stats: SiloStats,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct SiloStats {
+    pub admitted: u64,
+    pub mapped_back: u64,
+    pub cooled_to_disk: u64,
+}
+
+impl Silo {
+    pub fn new(cooling: SimTime) -> Self {
+        Silo {
+            queue: VecDeque::new(),
+            members: HashMap::new(),
+            cooling,
+            stats: SiloStats::default(),
+        }
+    }
+
+    pub fn cooling_period(&self) -> SimTime {
+        self.cooling
+    }
+
+    pub fn len(&self) -> usize {
+        self.members.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.members.is_empty()
+    }
+
+    pub fn contains(&self, page: u32) -> bool {
+        self.members.contains_key(&page)
+    }
+
+    /// Frontswap store: a reclaimed page enters the victim cache.
+    pub fn admit(&mut self, now: SimTime, page: u32) {
+        debug_assert!(!self.members.contains_key(&page), "page already in Silo");
+        self.queue.push_back((now, page));
+        self.members.insert(page, now);
+        self.stats.admitted += 1;
+    }
+
+    /// Frontswap load: an access maps the page back into the application
+    /// address space. Returns true if the page was present.
+    pub fn map_back(&mut self, page: u32) -> bool {
+        if self.members.remove(&page).is_some() {
+            self.stats.mapped_back += 1;
+            true // stale queue entry skipped lazily during drain
+        } else {
+            false
+        }
+    }
+
+    /// Drain pages whose residency exceeded the CoolingPeriod; they are
+    /// written to the swap device by the caller. Returns the cooled pages.
+    pub fn drain_cooled(&mut self, now: SimTime) -> Vec<u32> {
+        let mut out = Vec::new();
+        while let Some(&(t, page)) = self.queue.front() {
+            // Lazily skip entries whose page was mapped back (or re-admitted
+            // later: entry time mismatch).
+            match self.members.get(&page) {
+                Some(&entered) if entered == t => {
+                    if now.saturating_sub(t) >= self.cooling {
+                        self.queue.pop_front();
+                        self.members.remove(&page);
+                        self.stats.cooled_to_disk += 1;
+                        out.push(page);
+                    } else {
+                        break;
+                    }
+                }
+                _ => {
+                    self.queue.pop_front();
+                }
+            }
+        }
+        out
+    }
+
+    /// All resident pages, oldest first (used when flushing Silo).
+    pub fn drain_all(&mut self) -> Vec<u32> {
+        let mut out = Vec::new();
+        while let Some((t, page)) = self.queue.pop_front() {
+            if self.members.get(&page) == Some(&t) {
+                self.members.remove(&page);
+                out.push(page);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn admit_and_map_back() {
+        let mut s = Silo::new(SimTime::from_mins(5));
+        s.admit(SimTime::ZERO, 7);
+        assert!(s.contains(7));
+        assert!(s.map_back(7));
+        assert!(!s.contains(7));
+        assert!(!s.map_back(7));
+        assert_eq!(s.stats.mapped_back, 1);
+    }
+
+    #[test]
+    fn cooling_order_and_threshold() {
+        let mut s = Silo::new(SimTime::from_secs(60));
+        s.admit(SimTime::from_secs(0), 1);
+        s.admit(SimTime::from_secs(30), 2);
+        s.admit(SimTime::from_secs(50), 3);
+        // At t=59 nothing has cooled.
+        assert!(s.drain_cooled(SimTime::from_secs(59)).is_empty());
+        // At t=60, page 1 cooled; at t=95, page 2.
+        assert_eq!(s.drain_cooled(SimTime::from_secs(60)), vec![1]);
+        assert_eq!(s.drain_cooled(SimTime::from_secs(95)), vec![2]);
+        assert_eq!(s.len(), 1);
+    }
+
+    #[test]
+    fn mapped_back_pages_do_not_cool() {
+        let mut s = Silo::new(SimTime::from_secs(10));
+        s.admit(SimTime::ZERO, 1);
+        s.admit(SimTime::ZERO, 2);
+        assert!(s.map_back(1));
+        assert_eq!(s.drain_cooled(SimTime::from_secs(20)), vec![2]);
+        assert!(s.is_empty());
+        assert_eq!(s.stats.cooled_to_disk, 1);
+    }
+
+    #[test]
+    fn readmission_uses_new_timestamp() {
+        let mut s = Silo::new(SimTime::from_secs(10));
+        s.admit(SimTime::ZERO, 1);
+        assert!(s.map_back(1));
+        s.admit(SimTime::from_secs(9), 1); // re-admitted just before old cooling
+        assert!(s.drain_cooled(SimTime::from_secs(10)).is_empty());
+        assert_eq!(s.drain_cooled(SimTime::from_secs(19)), vec![1]);
+    }
+
+    #[test]
+    fn drain_all_flushes() {
+        let mut s = Silo::new(SimTime::from_hours(1));
+        for p in 0..10 {
+            s.admit(SimTime::from_secs(p as u64), p);
+        }
+        s.map_back(3);
+        let drained = s.drain_all();
+        assert_eq!(drained.len(), 9);
+        assert!(!drained.contains(&3));
+        assert!(s.is_empty());
+    }
+}

@@ -1,0 +1,63 @@
+//! Swap-device latency models (paper §7 testbed: Intel DC S3520 SSDs,
+//! 7200 RPM SAS HDDs, and the zram compressed-RAM alternative of §4.1).
+
+use crate::core::SimTime;
+
+/// Backing device for swapped-out pages.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SwapDevice {
+    /// SATA SSD: ~100 µs 4K random read, ~60 µs write.
+    Ssd,
+    /// 7200 RPM HDD: seek-bound, ~8 ms random read.
+    Hdd,
+    /// Compressed RAM disk (zram): ~10 µs decompress, but pages keep
+    /// occupying ~`1/compression_ratio` of their size in memory.
+    Zram,
+}
+
+impl SwapDevice {
+    /// Latency to fault one page back in.
+    pub fn read_latency(self) -> SimTime {
+        match self {
+            SwapDevice::Ssd => SimTime::from_micros(100),
+            SwapDevice::Hdd => SimTime::from_micros(8_000),
+            SwapDevice::Zram => SimTime::from_micros(10),
+        }
+    }
+
+    /// Latency to write one page out (asynchronous in practice, but it
+    /// consumes device bandwidth; we charge it to background work).
+    pub fn write_latency(self) -> SimTime {
+        match self {
+            SwapDevice::Ssd => SimTime::from_micros(60),
+            SwapDevice::Hdd => SimTime::from_micros(8_000),
+            SwapDevice::Zram => SimTime::from_micros(15),
+        }
+    }
+
+    /// Fraction of a swapped page that still occupies RAM (zram keeps
+    /// compressed data resident; disks keep none).
+    pub fn resident_fraction(self) -> f64 {
+        match self {
+            SwapDevice::Ssd | SwapDevice::Hdd => 0.0,
+            SwapDevice::Zram => 0.4, // ~2.5x compression
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latencies_ordered() {
+        assert!(SwapDevice::Zram.read_latency() < SwapDevice::Ssd.read_latency());
+        assert!(SwapDevice::Ssd.read_latency() < SwapDevice::Hdd.read_latency());
+    }
+
+    #[test]
+    fn zram_keeps_residency() {
+        assert_eq!(SwapDevice::Ssd.resident_fraction(), 0.0);
+        assert!(SwapDevice::Zram.resident_fraction() > 0.0);
+    }
+}

@@ -1,0 +1,13 @@
+//! Networking substrate: the producer-store wire protocol (from-scratch
+//! binary codec), a network *model* for the discrete-event simulator
+//! (VPC-peering latency + NIC bandwidth, paper §3/§7), and a real TCP
+//! transport (std::net, threaded) used by the runnable examples so the
+//! request path is exercised over actual sockets.
+
+pub mod model;
+pub mod tcp;
+pub mod wire;
+
+pub use model::NetworkModel;
+pub use tcp::{KvClient, ProducerStoreServer};
+pub use wire::{Request, Response};

@@ -1,0 +1,87 @@
+//! Network latency/bandwidth model for the simulator.
+//!
+//! The paper's testbed: 10 Gb NICs, consumers and producers in the same
+//! datacenter connected via VPC peering. We model a request's network
+//! time as propagation RTT + serialization at the bottleneck NIC, with
+//! distinct RTTs for same-rack / same-DC / cross-DC placements.
+
+use crate::core::SimTime;
+
+/// Relative placement of two VMs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Locality {
+    SameRack,
+    SameDatacenter,
+    CrossDatacenter,
+}
+
+/// Simple but faithful latency/bandwidth model.
+#[derive(Clone, Debug)]
+pub struct NetworkModel {
+    /// One-way propagation per locality, µs.
+    pub rtt_same_rack_us: u64,
+    pub rtt_same_dc_us: u64,
+    pub rtt_cross_dc_us: u64,
+    /// NIC line rate, bytes/sec (10 Gb/s default).
+    pub nic_bps: u64,
+}
+
+impl Default for NetworkModel {
+    fn default() -> Self {
+        NetworkModel {
+            rtt_same_rack_us: 50,
+            rtt_same_dc_us: 200,
+            rtt_cross_dc_us: 2_000,
+            nic_bps: 1_250_000_000, // 10 Gb/s
+        }
+    }
+}
+
+impl NetworkModel {
+    pub fn rtt(&self, locality: Locality) -> SimTime {
+        let us = match locality {
+            Locality::SameRack => self.rtt_same_rack_us,
+            Locality::SameDatacenter => self.rtt_same_dc_us,
+            Locality::CrossDatacenter => self.rtt_cross_dc_us,
+        };
+        SimTime::from_micros(us)
+    }
+
+    /// Serialization time for `bytes` at the NIC.
+    pub fn transfer(&self, bytes: u64) -> SimTime {
+        SimTime::from_micros(bytes * 1_000_000 / self.nic_bps)
+    }
+
+    /// Full request-response network time: RTT + both directions'
+    /// serialization at the bottleneck NIC.
+    pub fn round_trip(&self, locality: Locality, req_bytes: u64, resp_bytes: u64) -> SimTime {
+        self.rtt(locality) + self.transfer(req_bytes + resp_bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rtt_ordering() {
+        let m = NetworkModel::default();
+        assert!(m.rtt(Locality::SameRack) < m.rtt(Locality::SameDatacenter));
+        assert!(m.rtt(Locality::SameDatacenter) < m.rtt(Locality::CrossDatacenter));
+    }
+
+    #[test]
+    fn transfer_scales_with_bytes() {
+        let m = NetworkModel::default();
+        // 1.25 GB/s -> 1 MB takes 800 µs.
+        assert_eq!(m.transfer(1 << 20).as_micros(), 838);
+        assert_eq!(m.transfer(0), SimTime::ZERO);
+    }
+
+    #[test]
+    fn round_trip_composition() {
+        let m = NetworkModel::default();
+        let rt = m.round_trip(Locality::SameDatacenter, 100, 4096);
+        assert_eq!(rt, m.rtt(Locality::SameDatacenter) + m.transfer(4196));
+    }
+}

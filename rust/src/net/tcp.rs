@@ -1,0 +1,285 @@
+//! Real TCP transport: a threaded producer-store server exposing one
+//! [`KvStore`] per listener, and a blocking client. Used by the runnable
+//! examples and integration tests so the consumer request path is
+//! exercised over real sockets with the real wire codec. (The cluster-
+//! scale experiments run on the in-process simulator instead.)
+
+use crate::core::SimTime;
+use crate::kv::KvStore;
+use crate::net::wire::{read_frame, write_frame, Request, Response};
+use crate::util::token_bucket::TokenBucket;
+use std::io;
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// A producer store served over TCP: one KvStore + one rate limiter,
+/// shared across client connections (one thread per connection).
+pub struct ProducerStoreServer {
+    local_addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_handle: Option<JoinHandle<()>>,
+    store: Arc<Mutex<KvStore>>,
+}
+
+impl ProducerStoreServer {
+    /// Bind to `addr` (use port 0 for an ephemeral port) serving a store
+    /// of `max_bytes`, rate limited to `rate_bps` bytes/sec (None = off).
+    pub fn start<A: ToSocketAddrs>(
+        addr: A,
+        max_bytes: usize,
+        rate_bps: Option<u64>,
+        seed: u64,
+    ) -> io::Result<Self> {
+        let listener = TcpListener::bind(addr)?;
+        let local_addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let store = Arc::new(Mutex::new(KvStore::new(max_bytes, seed)));
+        let bucket = rate_bps
+            .map(|bps| Arc::new(Mutex::new(TokenBucket::new(bps, bps / 4))));
+
+        let stop2 = stop.clone();
+        let store2 = store.clone();
+        let start_instant = Instant::now();
+        let accept_handle = std::thread::spawn(move || {
+            let mut conn_handles = Vec::new();
+            while !stop2.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        stream.set_nodelay(true).ok();
+                        let store = store2.clone();
+                        let stop = stop2.clone();
+                        let bucket = bucket.clone();
+                        conn_handles.push(std::thread::spawn(move || {
+                            let _ = serve_conn(stream, store, stop, bucket, start_instant);
+                        }));
+                    }
+                    Err(ref e) if e.kind() == io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(std::time::Duration::from_millis(1));
+                    }
+                    Err(_) => break,
+                }
+            }
+            for h in conn_handles {
+                let _ = h.join();
+            }
+        });
+
+        Ok(ProducerStoreServer { local_addr, stop, accept_handle: Some(accept_handle), store })
+    }
+
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.local_addr
+    }
+
+    /// Snapshot of store statistics.
+    pub fn stats(&self) -> crate::kv::KvStats {
+        self.store.lock().unwrap().stats.clone()
+    }
+
+    /// Harvester-initiated reclaim on a live store.
+    pub fn shrink_to(&self, new_max: usize) -> usize {
+        self.store.lock().unwrap().shrink_to(new_max)
+    }
+
+    pub fn stop(mut self) {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.accept_handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ProducerStoreServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn serve_conn(
+    mut stream: TcpStream,
+    store: Arc<Mutex<KvStore>>,
+    stop: Arc<AtomicBool>,
+    bucket: Option<Arc<Mutex<TokenBucket>>>,
+    start: Instant,
+) -> io::Result<()> {
+    stream.set_read_timeout(Some(std::time::Duration::from_millis(100)))?;
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            return Ok(());
+        }
+        let frame = match read_frame(&mut stream) {
+            Ok(f) => f,
+            Err(e)
+                if e.kind() == io::ErrorKind::WouldBlock
+                    || e.kind() == io::ErrorKind::TimedOut =>
+            {
+                continue
+            }
+            Err(_) => return Ok(()), // disconnect
+        };
+        let resp = match Request::decode(&frame) {
+            Err(e) => Response::Error(e.to_string()),
+            Ok(req) => {
+                // Rate limiting (paper §4.2): refuse oversized I/O.
+                let io_bytes = frame.len() as u64;
+                let throttled = bucket.as_ref().and_then(|b| {
+                    let now = SimTime::from_micros(start.elapsed().as_micros() as u64);
+                    let mut tb = b.lock().unwrap();
+                    if tb.try_consume(now, io_bytes) {
+                        None
+                    } else {
+                        let wait = tb
+                            .time_until(now, io_bytes)
+                            .unwrap_or(SimTime::from_secs(1));
+                        Some(Response::Throttled { retry_after_us: wait.as_micros() })
+                    }
+                });
+                match throttled {
+                    Some(t) => t,
+                    None => {
+                        let mut kv = store.lock().unwrap();
+                        match req {
+                            Request::Get { key } => match kv.get(&key) {
+                                Some(v) => Response::Value(v),
+                                None => Response::NotFound,
+                            },
+                            Request::Put { key, value } => {
+                                if kv.put(&key, &value) {
+                                    Response::Stored
+                                } else {
+                                    Response::Rejected
+                                }
+                            }
+                            Request::Delete { key } => Response::Deleted(kv.delete(&key)),
+                            Request::Ping => Response::Pong,
+                        }
+                    }
+                }
+            }
+        };
+        write_frame(&mut stream, &resp.encode())?;
+    }
+}
+
+/// Blocking client for one producer store.
+pub struct KvClient {
+    stream: TcpStream,
+}
+
+impl KvClient {
+    pub fn connect<A: ToSocketAddrs>(addr: A) -> io::Result<Self> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        Ok(KvClient { stream })
+    }
+
+    pub fn call(&mut self, req: &Request) -> io::Result<Response> {
+        write_frame(&mut self.stream, &req.encode())?;
+        let frame = read_frame(&mut self.stream)?;
+        Response::decode(&frame)
+            .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e))
+    }
+
+    pub fn get(&mut self, key: &[u8]) -> io::Result<Option<Vec<u8>>> {
+        match self.call(&Request::Get { key: key.to_vec() })? {
+            Response::Value(v) => Ok(Some(v)),
+            Response::NotFound => Ok(None),
+            other => Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("unexpected response {other:?}"),
+            )),
+        }
+    }
+
+    pub fn put(&mut self, key: &[u8], value: &[u8]) -> io::Result<bool> {
+        match self.call(&Request::Put { key: key.to_vec(), value: value.to_vec() })? {
+            Response::Stored => Ok(true),
+            Response::Rejected | Response::Throttled { .. } => Ok(false),
+            other => Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("unexpected response {other:?}"),
+            )),
+        }
+    }
+
+    pub fn delete(&mut self, key: &[u8]) -> io::Result<bool> {
+        match self.call(&Request::Delete { key: key.to_vec() })? {
+            Response::Deleted(ok) => Ok(ok),
+            other => Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("unexpected response {other:?}"),
+            )),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tcp_round_trip() {
+        let server =
+            ProducerStoreServer::start("127.0.0.1:0", 1 << 20, None, 1).unwrap();
+        let mut client = KvClient::connect(server.addr()).unwrap();
+        assert!(client.put(b"alpha", b"beta").unwrap());
+        assert_eq!(client.get(b"alpha").unwrap(), Some(b"beta".to_vec()));
+        assert_eq!(client.get(b"missing").unwrap(), None);
+        assert!(client.delete(b"alpha").unwrap());
+        assert!(!client.delete(b"alpha").unwrap());
+        let stats = server.stats();
+        assert_eq!(stats.puts, 1);
+        assert_eq!(stats.hits, 1);
+        assert_eq!(stats.misses, 1);
+        server.stop();
+    }
+
+    #[test]
+    fn tcp_many_clients() {
+        let server =
+            ProducerStoreServer::start("127.0.0.1:0", 4 << 20, None, 2).unwrap();
+        let addr = server.addr();
+        let handles: Vec<_> = (0..4)
+            .map(|t| {
+                std::thread::spawn(move || {
+                    let mut c = KvClient::connect(addr).unwrap();
+                    for i in 0..50 {
+                        let key = format!("t{t}-k{i}");
+                        assert!(c.put(key.as_bytes(), &vec![t as u8; 256]).unwrap());
+                        assert_eq!(
+                            c.get(key.as_bytes()).unwrap(),
+                            Some(vec![t as u8; 256])
+                        );
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(server.stats().puts, 200);
+        server.stop();
+    }
+
+    #[test]
+    fn tcp_rate_limit_throttles() {
+        // 1 KB/s with tiny burst: the second large PUT must be throttled.
+        let server =
+            ProducerStoreServer::start("127.0.0.1:0", 1 << 20, Some(1024), 3).unwrap();
+        let mut client = KvClient::connect(server.addr()).unwrap();
+        let _ = client.put(b"k1", &vec![0u8; 200]); // may pass (burst)
+        let resp = client
+            .call(&Request::Put { key: b"k2".to_vec(), value: vec![0u8; 4096] })
+            .unwrap();
+        assert!(matches!(resp, Response::Throttled { .. }), "got {resp:?}");
+        server.stop();
+    }
+}

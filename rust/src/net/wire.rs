@@ -1,0 +1,319 @@
+//! Binary wire protocol between consumers and producer stores.
+//!
+//! Frame layout: `u32 LE` payload length, then payload. Payload: one tag
+//! byte, then tag-specific fields; byte strings are `u32 LE` length +
+//! bytes. No external serialization deps — the codec is exhaustively
+//! round-trip and fuzz tested below.
+
+use std::io::{self, Read, Write};
+
+/// Consumer -> producer-store requests (paper §4.2: GET / PUT / DELETE).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Request {
+    Get { key: Vec<u8> },
+    Put { key: Vec<u8>, value: Vec<u8> },
+    Delete { key: Vec<u8> },
+    Ping,
+}
+
+/// Producer-store -> consumer responses.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Response {
+    /// GET hit.
+    Value(Vec<u8>),
+    /// GET miss (evicted or never stored).
+    NotFound,
+    /// PUT accepted.
+    Stored,
+    /// PUT rejected (store full of larger-than-capacity object).
+    Rejected,
+    /// DELETE outcome.
+    Deleted(bool),
+    /// Rate limiter refused the I/O (paper §4.2); retry after the hint.
+    Throttled { retry_after_us: u64 },
+    Pong,
+    Error(String),
+}
+
+const TAG_GET: u8 = 1;
+const TAG_PUT: u8 = 2;
+const TAG_DELETE: u8 = 3;
+const TAG_PING: u8 = 4;
+
+const TAG_VALUE: u8 = 10;
+const TAG_NOT_FOUND: u8 = 11;
+const TAG_STORED: u8 = 12;
+const TAG_REJECTED: u8 = 13;
+const TAG_DELETED: u8 = 14;
+const TAG_THROTTLED: u8 = 15;
+const TAG_PONG: u8 = 16;
+const TAG_ERROR: u8 = 17;
+
+/// Hard cap on frame size (16 MB) — malformed/hostile lengths are
+/// rejected rather than allocated.
+pub const MAX_FRAME: usize = 16 << 20;
+
+fn put_bytes(out: &mut Vec<u8>, b: &[u8]) {
+    out.extend_from_slice(&(b.len() as u32).to_le_bytes());
+    out.extend_from_slice(b);
+}
+
+fn take_bytes(buf: &[u8], off: &mut usize) -> Result<Vec<u8>, CodecError> {
+    let len = take_u32(buf, off)? as usize;
+    if buf.len() - *off < len {
+        return Err(CodecError::Truncated);
+    }
+    let out = buf[*off..*off + len].to_vec();
+    *off += len;
+    Ok(out)
+}
+
+fn take_u32(buf: &[u8], off: &mut usize) -> Result<u32, CodecError> {
+    if buf.len() - *off < 4 {
+        return Err(CodecError::Truncated);
+    }
+    let v = u32::from_le_bytes(buf[*off..*off + 4].try_into().unwrap());
+    *off += 4;
+    Ok(v)
+}
+
+fn take_u64(buf: &[u8], off: &mut usize) -> Result<u64, CodecError> {
+    if buf.len() - *off < 8 {
+        return Err(CodecError::Truncated);
+    }
+    let v = u64::from_le_bytes(buf[*off..*off + 8].try_into().unwrap());
+    *off += 8;
+    Ok(v)
+}
+
+#[derive(Debug, PartialEq, Eq)]
+pub enum CodecError {
+    Truncated,
+    UnknownTag(u8),
+    TrailingBytes,
+    FrameTooLarge(usize),
+    BadUtf8,
+}
+
+impl std::fmt::Display for CodecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{self:?}")
+    }
+}
+impl std::error::Error for CodecError {}
+
+impl Request {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        match self {
+            Request::Get { key } => {
+                out.push(TAG_GET);
+                put_bytes(&mut out, key);
+            }
+            Request::Put { key, value } => {
+                out.push(TAG_PUT);
+                put_bytes(&mut out, key);
+                put_bytes(&mut out, value);
+            }
+            Request::Delete { key } => {
+                out.push(TAG_DELETE);
+                put_bytes(&mut out, key);
+            }
+            Request::Ping => out.push(TAG_PING),
+        }
+        out
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Request, CodecError> {
+        let mut off = 0usize;
+        if buf.is_empty() {
+            return Err(CodecError::Truncated);
+        }
+        let tag = buf[0];
+        off += 1;
+        let req = match tag {
+            TAG_GET => Request::Get { key: take_bytes(buf, &mut off)? },
+            TAG_PUT => Request::Put {
+                key: take_bytes(buf, &mut off)?,
+                value: take_bytes(buf, &mut off)?,
+            },
+            TAG_DELETE => Request::Delete { key: take_bytes(buf, &mut off)? },
+            TAG_PING => Request::Ping,
+            t => return Err(CodecError::UnknownTag(t)),
+        };
+        if off != buf.len() {
+            return Err(CodecError::TrailingBytes);
+        }
+        Ok(req)
+    }
+
+    /// Approximate bytes on the wire (for bandwidth accounting).
+    pub fn wire_bytes(&self) -> usize {
+        4 + self.encode().len()
+    }
+}
+
+impl Response {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        match self {
+            Response::Value(v) => {
+                out.push(TAG_VALUE);
+                put_bytes(&mut out, v);
+            }
+            Response::NotFound => out.push(TAG_NOT_FOUND),
+            Response::Stored => out.push(TAG_STORED),
+            Response::Rejected => out.push(TAG_REJECTED),
+            Response::Deleted(ok) => {
+                out.push(TAG_DELETED);
+                out.push(*ok as u8);
+            }
+            Response::Throttled { retry_after_us } => {
+                out.push(TAG_THROTTLED);
+                out.extend_from_slice(&retry_after_us.to_le_bytes());
+            }
+            Response::Pong => out.push(TAG_PONG),
+            Response::Error(msg) => {
+                out.push(TAG_ERROR);
+                put_bytes(&mut out, msg.as_bytes());
+            }
+        }
+        out
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Response, CodecError> {
+        if buf.is_empty() {
+            return Err(CodecError::Truncated);
+        }
+        let mut off = 1usize;
+        let resp = match buf[0] {
+            TAG_VALUE => Response::Value(take_bytes(buf, &mut off)?),
+            TAG_NOT_FOUND => Response::NotFound,
+            TAG_STORED => Response::Stored,
+            TAG_REJECTED => Response::Rejected,
+            TAG_DELETED => {
+                if buf.len() < 2 {
+                    return Err(CodecError::Truncated);
+                }
+                off += 1;
+                Response::Deleted(buf[1] != 0)
+            }
+            TAG_THROTTLED => Response::Throttled { retry_after_us: take_u64(buf, &mut off)? },
+            TAG_PONG => Response::Pong,
+            TAG_ERROR => {
+                let bytes = take_bytes(buf, &mut off)?;
+                Response::Error(String::from_utf8(bytes).map_err(|_| CodecError::BadUtf8)?)
+            }
+            t => return Err(CodecError::UnknownTag(t)),
+        };
+        if off != buf.len() {
+            return Err(CodecError::TrailingBytes);
+        }
+        Ok(resp)
+    }
+
+    pub fn wire_bytes(&self) -> usize {
+        4 + self.encode().len()
+    }
+}
+
+/// Write one length-prefixed frame.
+pub fn write_frame<W: Write>(w: &mut W, payload: &[u8]) -> io::Result<()> {
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(payload)?;
+    w.flush()
+}
+
+/// Read one length-prefixed frame.
+pub fn read_frame<R: Read>(r: &mut R) -> io::Result<Vec<u8>> {
+    let mut len_buf = [0u8; 4];
+    r.read_exact(&mut len_buf)?;
+    let len = u32::from_le_bytes(len_buf) as usize;
+    if len > MAX_FRAME {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            CodecError::FrameTooLarge(len),
+        ));
+    }
+    let mut buf = vec![0u8; len];
+    r.read_exact(&mut buf)?;
+    Ok(buf)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn request_round_trip() {
+        let cases = vec![
+            Request::Get { key: b"k".to_vec() },
+            Request::Put { key: b"key".to_vec(), value: vec![0u8; 1000] },
+            Request::Delete { key: vec![] },
+            Request::Ping,
+        ];
+        for req in cases {
+            let enc = req.encode();
+            assert_eq!(Request::decode(&enc).unwrap(), req);
+        }
+    }
+
+    #[test]
+    fn response_round_trip() {
+        let cases = vec![
+            Response::Value(vec![1, 2, 3]),
+            Response::Value(vec![]),
+            Response::NotFound,
+            Response::Stored,
+            Response::Rejected,
+            Response::Deleted(true),
+            Response::Deleted(false),
+            Response::Throttled { retry_after_us: 12345 },
+            Response::Pong,
+            Response::Error("boom".into()),
+        ];
+        for resp in cases {
+            let enc = resp.encode();
+            assert_eq!(Response::decode(&enc).unwrap(), resp);
+        }
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert_eq!(Request::decode(&[]), Err(CodecError::Truncated));
+        assert_eq!(Request::decode(&[99]), Err(CodecError::UnknownTag(99)));
+        assert_eq!(Request::decode(&[TAG_GET, 5, 0, 0, 0, 1]), Err(CodecError::Truncated));
+        let mut ok = Request::Ping.encode();
+        ok.push(0);
+        assert_eq!(Request::decode(&ok), Err(CodecError::TrailingBytes));
+        assert_eq!(Response::decode(&[TAG_DELETED]), Err(CodecError::Truncated));
+    }
+
+    #[test]
+    fn fuzz_decode_never_panics() {
+        let mut rng = Rng::new(31);
+        for _ in 0..20_000 {
+            let len = rng.below(64) as usize;
+            let buf: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+            let _ = Request::decode(&buf);
+            let _ = Response::decode(&buf);
+        }
+    }
+
+    #[test]
+    fn frame_round_trip() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"hello frame").unwrap();
+        let mut cursor = std::io::Cursor::new(buf);
+        assert_eq!(read_frame(&mut cursor).unwrap(), b"hello frame");
+    }
+
+    #[test]
+    fn frame_rejects_giant_length() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(u32::MAX).to_le_bytes());
+        let mut cursor = std::io::Cursor::new(buf);
+        assert!(read_frame(&mut cursor).is_err());
+    }
+}

@@ -1,0 +1,287 @@
+//! The producer manager (paper §4.2): partitions harvested memory into
+//! slabs, runs one producer store per consumer lease, enforces per-
+//! consumer token-bucket bandwidth limits, reclaims memory proportionally
+//! across stores when the harvester needs it back, and reports resource
+//! availability to the broker.
+
+use crate::core::{ConsumerId, Lease, LeaseId, ProducerId, SimTime};
+use crate::kv::KvStore;
+use crate::net::wire::{Request, Response};
+use crate::util::token_bucket::TokenBucket;
+use std::collections::HashMap;
+
+/// Periodic availability report sent to the broker (§3).
+#[derive(Clone, Copy, Debug)]
+pub struct ProducerReport {
+    pub producer: ProducerId,
+    pub free_slabs: u32,
+    pub harvestable_bytes: u64,
+    pub leased_bytes: u64,
+    /// 0..1 headroom metrics used by placement.
+    pub cpu_headroom: f64,
+    pub bandwidth_headroom: f64,
+}
+
+struct StoreEntry {
+    store: KvStore,
+    bucket: TokenBucket,
+    lease: Lease,
+}
+
+/// Per-producer manager.
+pub struct Manager {
+    id: ProducerId,
+    slab_bytes: u64,
+    /// Harvested pool currently safe to lease (set each epoch).
+    harvestable_bytes: u64,
+    stores: HashMap<ConsumerId, StoreEntry>,
+    seed: u64,
+    /// Slabs evicted before lease expiry (reputation input, §5).
+    pub broken_lease_slabs: u64,
+    /// Total slabs ever leased (reputation denominator).
+    pub leased_slab_total: u64,
+}
+
+impl Manager {
+    pub fn new(id: ProducerId, slab_bytes: u64, seed: u64) -> Self {
+        Manager {
+            id,
+            slab_bytes,
+            harvestable_bytes: 0,
+            stores: HashMap::new(),
+            seed,
+            broken_lease_slabs: 0,
+            leased_slab_total: 0,
+        }
+    }
+
+    pub fn slab_bytes(&self) -> u64 {
+        self.slab_bytes
+    }
+
+    pub fn leased_bytes(&self) -> u64 {
+        self.stores.values().map(|e| e.store.max_bytes() as u64).sum()
+    }
+
+    pub fn free_slabs(&self) -> u32 {
+        (self.harvestable_bytes.saturating_sub(self.leased_bytes()) / self.slab_bytes) as u32
+    }
+
+    /// Refresh the leaseable pool from the guest's current shape.
+    pub fn set_harvestable(&mut self, bytes: u64, now: SimTime) {
+        self.harvestable_bytes = bytes;
+        // If the pool shrank below what is leased, reclaim the difference.
+        let leased = self.leased_bytes();
+        if leased > bytes {
+            self.reclaim(leased - bytes, now);
+        }
+    }
+
+    pub fn harvestable_bytes(&self) -> u64 {
+        self.harvestable_bytes
+    }
+
+    /// Broker assignment: create a producer store for this lease
+    /// (paper: an empty Redis server per consumer, ~3 MB — modeled free).
+    /// Returns false if the slabs no longer fit.
+    pub fn grant_lease(&mut self, lease: Lease, bandwidth_bps: u64) -> bool {
+        let bytes = lease.bytes();
+        if bytes + self.leased_bytes() > self.harvestable_bytes {
+            return false;
+        }
+        self.leased_slab_total += lease.slabs as u64;
+        let store = KvStore::new(bytes as usize, self.seed ^ lease.id.0);
+        let bucket = TokenBucket::new(bandwidth_bps, bandwidth_bps / 4);
+        self.stores.insert(lease.consumer, StoreEntry { store, bucket, lease });
+        true
+    }
+
+    /// Lease expiry (not renewed): terminate the store, return slabs.
+    pub fn end_lease(&mut self, consumer: ConsumerId) -> Option<LeaseId> {
+        self.stores.remove(&consumer).map(|e| e.lease.id)
+    }
+
+    pub fn lease_of(&self, consumer: ConsumerId) -> Option<&Lease> {
+        self.stores.get(&consumer).map(|e| &e.lease)
+    }
+
+    pub fn active_leases(&self) -> impl Iterator<Item = &Lease> {
+        self.stores.values().map(|e| &e.lease)
+    }
+
+    /// Serve one consumer request against its producer store, enforcing
+    /// the rate limiter (paper §4.2: refuse when tokens are short).
+    pub fn handle(&mut self, consumer: ConsumerId, req: &Request, now: SimTime) -> Response {
+        let Some(entry) = self.stores.get_mut(&consumer) else {
+            return Response::Error("no lease for consumer".into());
+        };
+        let io_bytes = req.wire_bytes() as u64;
+        if !entry.bucket.try_consume(now, io_bytes) {
+            let retry = entry
+                .bucket
+                .time_until(now, io_bytes)
+                .unwrap_or(SimTime::from_secs(1));
+            return Response::Throttled { retry_after_us: retry.as_micros() };
+        }
+        match req {
+            Request::Get { key } => match entry.store.get(key) {
+                Some(v) => Response::Value(v),
+                None => Response::NotFound,
+            },
+            Request::Put { key, value } => {
+                if entry.store.put(key, value) {
+                    Response::Stored
+                } else {
+                    Response::Rejected
+                }
+            }
+            Request::Delete { key } => Response::Deleted(entry.store.delete(key)),
+            Request::Ping => Response::Pong,
+        }
+    }
+
+    /// Harvester burst path (§4.2 "Eviction"): reclaim `bytes` across
+    /// stores proportionally to their sizes, via their LRU eviction.
+    pub fn reclaim(&mut self, bytes: u64, _now: SimTime) -> u64 {
+        let leased = self.leased_bytes();
+        if leased == 0 {
+            return 0;
+        }
+        let mut freed = 0u64;
+        let entries: Vec<ConsumerId> = self.stores.keys().copied().collect();
+        for cid in entries {
+            let entry = self.stores.get_mut(&cid).unwrap();
+            let share = entry.store.max_bytes() as f64 / leased as f64;
+            let target = (bytes as f64 * share).ceil() as u64;
+            let new_max = (entry.store.max_bytes() as u64).saturating_sub(target);
+            // Slabs taken back before expiry count against reputation.
+            let slabs_lost = (entry.store.max_bytes() as u64 - new_max) / self.slab_bytes;
+            self.broken_lease_slabs += slabs_lost;
+            entry.store.shrink_to(new_max as usize);
+            freed += target;
+        }
+        freed.min(bytes)
+    }
+
+    /// Fraction of leased slabs never prematurely evicted (reputation, §5).
+    pub fn reputation(&self) -> f64 {
+        if self.leased_slab_total == 0 {
+            1.0
+        } else {
+            1.0 - (self.broken_lease_slabs as f64 / self.leased_slab_total as f64).min(1.0)
+        }
+    }
+
+    /// Availability report for the broker.
+    pub fn report(&self, cpu_headroom: f64, bandwidth_headroom: f64) -> ProducerReport {
+        ProducerReport {
+            producer: self.id,
+            free_slabs: self.free_slabs(),
+            harvestable_bytes: self.harvestable_bytes,
+            leased_bytes: self.leased_bytes(),
+            cpu_headroom,
+            bandwidth_headroom,
+        }
+    }
+
+    /// Run defragmentation on all stores (paper §4.2 "Defragmentation").
+    pub fn defragment_all(&mut self) -> u64 {
+        self.stores.values_mut().map(|e| e.store.defragment() as u64).sum()
+    }
+
+    /// Store statistics for one consumer (tests/metrics).
+    pub fn store_stats(&self, consumer: ConsumerId) -> Option<crate::kv::KvStats> {
+        self.stores.get(&consumer).map(|e| e.store.stats.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{Money, DEFAULT_SLAB_BYTES};
+
+    fn lease(id: u64, consumer: u64, slabs: u32) -> Lease {
+        Lease {
+            id: LeaseId(id),
+            consumer: ConsumerId(consumer),
+            producer: ProducerId(1),
+            slabs,
+            slab_bytes: DEFAULT_SLAB_BYTES,
+            start: SimTime::ZERO,
+            duration: SimTime::from_hours(1),
+            price_per_slab_hour: Money::from_dollars(0.0001),
+        }
+    }
+
+    fn manager_with_pool(gb: u64) -> Manager {
+        let mut m = Manager::new(ProducerId(1), DEFAULT_SLAB_BYTES, 5);
+        m.set_harvestable(gb << 30, SimTime::ZERO);
+        m
+    }
+
+    #[test]
+    fn grant_serve_expire() {
+        let mut m = manager_with_pool(2);
+        assert!(m.grant_lease(lease(1, 10, 16), 1_000_000_000));
+        let c = ConsumerId(10);
+        let now = SimTime::from_secs(1);
+        assert_eq!(
+            m.handle(c, &Request::Put { key: b"k".to_vec(), value: b"v".to_vec() }, now),
+            Response::Stored
+        );
+        assert_eq!(
+            m.handle(c, &Request::Get { key: b"k".to_vec() }, now),
+            Response::Value(b"v".to_vec())
+        );
+        assert_eq!(m.end_lease(c), Some(LeaseId(1)));
+        assert!(matches!(
+            m.handle(c, &Request::Ping, now),
+            Response::Error(_)
+        ));
+    }
+
+    #[test]
+    fn cannot_overlease() {
+        let mut m = manager_with_pool(1); // 16 slabs
+        assert!(m.grant_lease(lease(1, 10, 10), 1_000_000));
+        assert!(!m.grant_lease(lease(2, 11, 10), 1_000_000));
+        assert!(m.grant_lease(lease(3, 12, 6), 1_000_000));
+        assert_eq!(m.free_slabs(), 0);
+    }
+
+    #[test]
+    fn rate_limits_per_consumer() {
+        let mut m = manager_with_pool(2);
+        assert!(m.grant_lease(lease(1, 10, 16), 1000)); // 1 KB/s
+        let c = ConsumerId(10);
+        let now = SimTime::ZERO;
+        let big = Request::Put { key: b"k".to_vec(), value: vec![0u8; 8192] };
+        assert!(matches!(
+            m.handle(c, &big, now),
+            Response::Throttled { .. }
+        ));
+    }
+
+    #[test]
+    fn reclaim_shrinks_proportionally_and_dings_reputation() {
+        let mut m = manager_with_pool(4);
+        assert!(m.grant_lease(lease(1, 10, 32), 1_000_000_000)); // 2 GB
+        assert!(m.grant_lease(lease(2, 11, 16), 1_000_000_000)); // 1 GB
+        assert_eq!(m.reputation(), 1.0);
+        // Pool shrinks to 1.5 GB: reclaim 1.5 GB.
+        m.set_harvestable(3 << 29, SimTime::from_secs(10));
+        assert!(m.leased_bytes() <= 3 << 29);
+        assert!(m.reputation() < 1.0);
+        assert!(m.broken_lease_slabs >= 24);
+    }
+
+    #[test]
+    fn report_consistent() {
+        let mut m = manager_with_pool(2);
+        assert!(m.grant_lease(lease(1, 10, 16), 1_000_000_000));
+        let r = m.report(0.8, 0.6);
+        assert_eq!(r.leased_bytes, 1 << 30);
+        assert_eq!(r.free_slabs, 16);
+        assert_eq!(r.harvestable_bytes, 2 << 30);
+    }
+}

@@ -1,0 +1,202 @@
+//! Pure-Rust mirror of the L2/L1 forecast math (autocovariance →
+//! Levinson-Durbin AR(p) → iterated forecast → (d,p) selection → safety
+//! margin). Used (a) when artifacts are not built, (b) as the
+//! differential-testing oracle for the PJRT path (runtime_artifacts
+//! integration test), and (c) by pure-sim experiments that don't want a
+//! PJRT dependency.
+
+use crate::runtime::engine::ForecastResult;
+
+pub const RIDGE: f64 = 1e-6;
+pub const KAPPA_CLAMP: f64 = 0.999;
+pub const SAFETY_Z: f64 = 1.64;
+
+/// Autocovariances r_0..r_order of a centered series (biased, /n).
+pub fn autocov(xc: &[f64], order: usize) -> Vec<f64> {
+    let n = xc.len();
+    (0..=order)
+        .map(|lag| {
+            let mut s = 0.0;
+            for t in lag..n {
+                s += xc[t] * xc[t - lag];
+            }
+            s / n as f64
+        })
+        .collect()
+}
+
+/// Levinson-Durbin; returns (phi[0..order], prediction error variance).
+pub fn levinson_durbin(rs: &[f64]) -> (Vec<f64>, f64) {
+    let order = rs.len() - 1;
+    let r0 = rs[0] + RIDGE;
+    let mut phi = vec![0.0; order];
+    let mut err = r0;
+    for k in 1..=order {
+        let mut acc = rs[k];
+        for j in 1..k {
+            acc -= phi[j - 1] * rs[k - j];
+        }
+        let kappa = (acc / err).clamp(-KAPPA_CLAMP, KAPPA_CLAMP);
+        let mut new_phi = phi.clone();
+        new_phi[k - 1] = kappa;
+        for j in 1..k {
+            new_phi[j - 1] = phi[j - 1] - kappa * phi[k - 1 - j];
+        }
+        phi = new_phi;
+        err *= 1.0 - kappa * kappa;
+    }
+    (phi, err)
+}
+
+/// AR(p) fit + H-step forecast of one series; mirrors kernels/forecast.py.
+pub fn ar_forecast(x: &[f32], order: usize, horizon: usize) -> (Vec<f64>, f64) {
+    let n = x.len();
+    let mu = x.iter().map(|&v| v as f64).sum::<f64>() / n as f64;
+    let xc: Vec<f64> = x.iter().map(|&v| v as f64 - mu).collect();
+    let rs = autocov(&xc, order);
+    let (phi, err) = levinson_durbin(&rs);
+    let mut window: Vec<f64> = (0..order).map(|j| xc[n - 1 - j]).collect();
+    let mut out = Vec::with_capacity(horizon);
+    for _ in 0..horizon {
+        let f: f64 = phi.iter().zip(&window).map(|(p, w)| p * w).sum();
+        out.push(f + mu);
+        window.rotate_right(1);
+        window[0] = f;
+    }
+    (out, err.max(0.0).sqrt())
+}
+
+/// Full forecast-model mirror: (d,p) selection + clipping + safety margin.
+/// Matches python/compile/model.py::forecast_model for one series.
+pub fn forecast_one(series: &[f32], capacity: f32, order: usize, horizon: usize) -> ForecastResult {
+    // d=0 candidate.
+    let (f0, s0) = ar_forecast(series, order, horizon);
+    // d=1 candidate: AR on diffs, re-integrated from the last level.
+    let diff: Vec<f32> = series.windows(2).map(|w| w[1] - w[0]).collect();
+    let (fd, s1) = if diff.len() > order {
+        ar_forecast(&diff, order, horizon)
+    } else {
+        (vec![0.0; horizon], f64::INFINITY)
+    };
+    let last = *series.last().unwrap_or(&0.0) as f64;
+    let mut acc = last;
+    let f1: Vec<f64> = fd
+        .iter()
+        .map(|&d| {
+            acc += d;
+            acc
+        })
+        .collect();
+
+    let used_diff = s1 < s0;
+    let (raw, sigma) = if used_diff { (f1, s1) } else { (f0, s0) };
+    let cap = capacity as f64;
+    let pred: Vec<f32> = raw.iter().map(|&p| p.clamp(0.0, cap) as f32).collect();
+    let safe: Vec<f32> = raw
+        .iter()
+        .enumerate()
+        .map(|(h, &p)| {
+            let margin = SAFETY_Z * sigma * ((h + 1) as f64).sqrt();
+            (cap - (p.clamp(0.0, cap) + margin)).clamp(0.0, cap) as f32
+        })
+        .collect();
+    ForecastResult { pred, safe, sigma: sigma as f32, used_diff }
+}
+
+/// Batch helper mirroring `ForecastEngine::predict`.
+pub fn forecast_batch(
+    series: &[Vec<f32>],
+    capacities: &[f32],
+    order: usize,
+    horizon: usize,
+    window: usize,
+) -> Vec<ForecastResult> {
+    series
+        .iter()
+        .zip(capacities)
+        .map(|(s, &cap)| {
+            let mut row = vec![0f32; window];
+            crate::runtime::engine::fill_window(&mut row, s);
+            forecast_one(&row, cap, order, horizon)
+        })
+        .collect()
+}
+
+/// Demand-model mirror (per consumer): surplus-maximizing slab count.
+pub fn demand_one(gain: &[f32], hit_value: f32, price: f64) -> u32 {
+    let mut best_s = 0usize;
+    let mut best_v = f64::MIN;
+    for (s, &g) in gain.iter().enumerate() {
+        let surplus = hit_value as f64 * g as f64 - price * s as f64;
+        if surplus > best_v {
+            best_v = surplus;
+            best_s = s;
+        }
+    }
+    if best_v > 0.0 {
+        best_s as u32
+    } else {
+        0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_series_flat_forecast() {
+        let x = vec![5.0f32; 100];
+        let (f, sigma) = ar_forecast(&x, 4, 8);
+        for v in &f {
+            assert!((v - 5.0).abs() < 1e-6, "forecast {v}");
+        }
+        assert!(sigma < 1e-2);
+    }
+
+    #[test]
+    fn strong_ar1_tracked() {
+        // x_t = 0.9 x_{t-1} + eps
+        let mut rng = crate::util::rng::Rng::new(3);
+        let mut x = vec![0f32; 400];
+        for t in 1..400 {
+            x[t] = 0.9 * x[t - 1] + rng.normal(0.0, 0.1) as f32;
+        }
+        let (f, _) = ar_forecast(&x, 4, 1);
+        let mu = x.iter().map(|&v| v as f64).sum::<f64>() / 400.0;
+        let expected = mu + 0.9 * (x[399] as f64 - mu);
+        assert!((f[0] - expected).abs() < 0.15, "got {} want {}", f[0], expected);
+    }
+
+    #[test]
+    fn linear_ramp_prefers_diff_and_extrapolates() {
+        let x: Vec<f32> = (0..200).map(|t| 0.5 * t as f32).collect();
+        let r = forecast_one(&x, 1e9, 4, 6);
+        assert!(r.used_diff, "ramp should select d=1");
+        for (h, &p) in r.pred.iter().enumerate() {
+            let want = 0.5 * (199.0 + (h + 1) as f32);
+            assert!((p - want).abs() < 1.0, "h={h} p={p} want={want}");
+        }
+    }
+
+    #[test]
+    fn safe_leaves_margin_and_respects_capacity() {
+        let x = vec![10.0f32; 300];
+        let r = forecast_one(&x, 16.0, 4, 12);
+        for (h, (&p, &s)) in r.pred.iter().zip(&r.safe).enumerate() {
+            assert!(s >= 0.0 && s <= 16.0);
+            assert!(s <= 16.0 - p + 1e-3, "h={h}");
+        }
+    }
+
+    #[test]
+    fn demand_rule() {
+        // gain: 0, 10, 18, 24, 28 ... concave; value $0.001/hit.
+        let gain = vec![0.0, 10.0, 18.0, 24.0, 28.0];
+        // price 0.005: marginal gain*value per slab = .01,.008,.006,.004 —
+        // worth buying 3 slabs (4th marginal 0.004 < 0.005).
+        assert_eq!(demand_one(&gain, 0.001, 0.005), 3);
+        assert_eq!(demand_one(&gain, 0.001, 100.0), 0);
+        assert_eq!(demand_one(&gain, 0.001, 0.0), 4);
+    }
+}

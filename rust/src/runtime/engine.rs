@@ -1,0 +1,281 @@
+//! The PJRT engine: compile-once, execute-many wrappers around the two
+//! HLO artifacts.
+
+use anyhow::{anyhow, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Compiled-in shapes; must match python/compile/model.py (the manifest
+/// is checked at load time).
+pub const FORECAST_BATCH: usize = 256;
+pub const FORECAST_WINDOW: usize = 288;
+pub const FORECAST_HORIZON: usize = 12;
+pub const DEMAND_BATCH: usize = 1024;
+pub const DEMAND_SIZES: usize = 64;
+pub const DEMAND_PRICES: usize = 3;
+
+/// One producer's forecast output.
+#[derive(Clone, Debug)]
+pub struct ForecastResult {
+    /// Predicted usage (GB) over the horizon.
+    pub pred: Vec<f32>,
+    /// Safe leaseable memory (GB) over the horizon.
+    pub safe: Vec<f32>,
+    /// One-step prediction-error std (GB).
+    pub sigma: f32,
+    /// Whether the differenced (d=1) model was selected.
+    pub used_diff: bool,
+}
+
+/// Shared PJRT client + both executables.
+pub struct Engine {
+    pub forecast: ForecastEngine,
+    pub demand: DemandEngine,
+}
+
+impl Engine {
+    /// Load both artifacts from `dir` (e.g. `artifacts/`).
+    pub fn load(dir: &Path) -> Result<Engine> {
+        let client = std::rc::Rc::new(
+            xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e:?}"))?,
+        );
+        let forecast = ForecastEngine::load(client.clone(), &dir.join("forecast.hlo.txt"))?;
+        let demand = DemandEngine::load(client, &dir.join("demand.hlo.txt"))?;
+        Ok(Engine { forecast, demand })
+    }
+
+    /// Default artifact location (repo-root/artifacts), overridable via
+    /// MEMTRADE_ARTIFACTS.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("MEMTRADE_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    /// True when both artifacts exist on disk.
+    pub fn artifacts_present(dir: &Path) -> bool {
+        dir.join("forecast.hlo.txt").exists() && dir.join("demand.hlo.txt").exists()
+    }
+}
+
+fn compile(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(path)
+        .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client.compile(&comp).map_err(|e| anyhow!("compile {}: {e:?}", path.display()))
+}
+
+fn literal_f32(values: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    xla::Literal::vec1(values)
+        .reshape(dims)
+        .map_err(|e| anyhow!("reshape {dims:?}: {e:?}"))
+}
+
+/// Availability forecaster (paper §5.1), compiled once.
+pub struct ForecastEngine {
+    client: std::rc::Rc<xla::PjRtClient>,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl ForecastEngine {
+    fn load(client: std::rc::Rc<xla::PjRtClient>, path: &Path) -> Result<Self> {
+        let exe = compile(&client, path)?;
+        Ok(ForecastEngine { client, exe })
+    }
+
+    /// Forecast for `series.len()` producers; each series is padded/
+    /// truncated to the compiled window, the batch is chunked to the
+    /// compiled batch size.
+    pub fn predict(&self, series: &[Vec<f32>], capacities: &[f32]) -> Result<Vec<ForecastResult>> {
+        anyhow::ensure!(series.len() == capacities.len(), "series/capacity length mismatch");
+        let n = series.len();
+        let mut out = Vec::with_capacity(n);
+        let mut start = 0usize;
+        while start < n {
+            let end = (start + FORECAST_BATCH).min(n);
+            out.extend(self.predict_chunk(&series[start..end], &capacities[start..end])?);
+            start = end;
+        }
+        Ok(out)
+    }
+
+    fn predict_chunk(&self, series: &[Vec<f32>], caps: &[f32]) -> Result<Vec<ForecastResult>> {
+        let real = series.len();
+        let mut usage = vec![0f32; FORECAST_BATCH * FORECAST_WINDOW];
+        for (i, s) in series.iter().enumerate() {
+            let row = &mut usage[i * FORECAST_WINDOW..(i + 1) * FORECAST_WINDOW];
+            fill_window(row, s);
+        }
+        let mut capacity = vec![0f32; FORECAST_BATCH];
+        capacity[..real].copy_from_slice(caps);
+
+        let usage_lit =
+            literal_f32(&usage, &[FORECAST_BATCH as i64, FORECAST_WINDOW as i64])?;
+        let cap_lit = literal_f32(&capacity, &[FORECAST_BATCH as i64])?;
+
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[usage_lit, cap_lit])
+            .map_err(|e| anyhow!("execute forecast: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch forecast result: {e:?}"))?;
+        let parts = result.to_tuple().map_err(|e| anyhow!("tuple: {e:?}"))?;
+        anyhow::ensure!(parts.len() == 4, "expected 4 outputs, got {}", parts.len());
+        let pred: Vec<f32> = parts[0].to_vec().map_err(|e| anyhow!("{e:?}"))?;
+        let safe: Vec<f32> = parts[1].to_vec().map_err(|e| anyhow!("{e:?}"))?;
+        let sigma: Vec<f32> = parts[2].to_vec().map_err(|e| anyhow!("{e:?}"))?;
+        let used_d: Vec<f32> = parts[3].to_vec().map_err(|e| anyhow!("{e:?}"))?;
+
+        Ok((0..real)
+            .map(|i| ForecastResult {
+                pred: pred[i * FORECAST_HORIZON..(i + 1) * FORECAST_HORIZON].to_vec(),
+                safe: safe[i * FORECAST_HORIZON..(i + 1) * FORECAST_HORIZON].to_vec(),
+                sigma: sigma[i],
+                used_diff: used_d[i] > 0.5,
+            })
+            .collect())
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+}
+
+/// Left-pad (with the oldest value) or truncate to the compiled window.
+pub fn fill_window(row: &mut [f32], s: &[f32]) {
+    let w = row.len();
+    if s.is_empty() {
+        row.fill(0.0);
+        return;
+    }
+    if s.len() >= w {
+        row.copy_from_slice(&s[s.len() - w..]);
+    } else {
+        let pad = w - s.len();
+        row[..pad].fill(s[0]);
+        row[pad..].copy_from_slice(s);
+    }
+}
+
+/// Market demand evaluator (paper §5.3), compiled once.
+pub struct DemandEngine {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// Demand evaluation output for one price candidate set.
+#[derive(Clone, Debug, Default)]
+pub struct DemandResult {
+    /// Per-consumer demanded slabs, per price candidate: `[n][k]`.
+    pub demand: Vec<Vec<f32>>,
+    /// Total volume per candidate.
+    pub volume: [f64; DEMAND_PRICES],
+    /// Producer revenue per candidate.
+    pub revenue: [f64; DEMAND_PRICES],
+}
+
+impl DemandEngine {
+    fn load(client: std::rc::Rc<xla::PjRtClient>, path: &Path) -> Result<Self> {
+        let exe = compile(&client, path)?;
+        Ok(DemandEngine { exe })
+    }
+
+    /// Evaluate demand for all consumers at 3 candidate prices.
+    /// `gains[i]` must have exactly `DEMAND_SIZES` entries.
+    pub fn evaluate(
+        &self,
+        gains: &[Vec<f32>],
+        hit_values: &[f32],
+        prices: [f32; DEMAND_PRICES],
+    ) -> Result<DemandResult> {
+        anyhow::ensure!(gains.len() == hit_values.len());
+        let n = gains.len();
+        let mut result = DemandResult { demand: Vec::with_capacity(n), ..Default::default() };
+        let mut start = 0usize;
+        while start < n {
+            let end = (start + DEMAND_BATCH).min(n);
+            self.evaluate_chunk(&gains[start..end], &hit_values[start..end], prices, &mut result)?;
+            start = end;
+        }
+        for k in 0..DEMAND_PRICES {
+            result.revenue[k] = result.volume[k] * prices[k] as f64;
+        }
+        Ok(result)
+    }
+
+    fn evaluate_chunk(
+        &self,
+        gains: &[Vec<f32>],
+        hit_values: &[f32],
+        prices: [f32; DEMAND_PRICES],
+        out: &mut DemandResult,
+    ) -> Result<()> {
+        let real = gains.len();
+        let mut gain_flat = vec![0f32; DEMAND_BATCH * DEMAND_SIZES];
+        for (i, g) in gains.iter().enumerate() {
+            anyhow::ensure!(g.len() == DEMAND_SIZES, "gain curve must have {DEMAND_SIZES} points");
+            gain_flat[i * DEMAND_SIZES..(i + 1) * DEMAND_SIZES].copy_from_slice(g);
+        }
+        let mut values = vec![0f32; DEMAND_BATCH];
+        values[..real].copy_from_slice(hit_values);
+
+        let gain_lit = literal_f32(&gain_flat, &[DEMAND_BATCH as i64, DEMAND_SIZES as i64])?;
+        let val_lit = literal_f32(&values, &[DEMAND_BATCH as i64])?;
+        let price_lit = literal_f32(&prices, &[DEMAND_PRICES as i64])?;
+
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[gain_lit, val_lit, price_lit])
+            .map_err(|e| anyhow!("execute demand: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch demand result: {e:?}"))?;
+        let parts = result.to_tuple().map_err(|e| anyhow!("tuple: {e:?}"))?;
+        anyhow::ensure!(parts.len() == 3, "expected 3 outputs");
+        let demand: Vec<f32> = parts[0].to_vec().map_err(|e| anyhow!("{e:?}"))?;
+
+        // Padded rows have zero gain => zero demand; volume still summed
+        // from real rows only for exactness.
+        for i in 0..real {
+            let row = demand[i * DEMAND_PRICES..(i + 1) * DEMAND_PRICES].to_vec();
+            for k in 0..DEMAND_PRICES {
+                out.volume[k] += row[k] as f64;
+            }
+            out.demand.push(row);
+        }
+        Ok(())
+    }
+}
+
+/// Verify the manifest written by aot.py matches the compiled-in shapes.
+pub fn check_manifest(dir: &Path) -> Result<()> {
+    let text = std::fs::read_to_string(dir.join("manifest.json"))
+        .with_context(|| format!("reading {}/manifest.json", dir.display()))?;
+    for (key, want) in [
+        ("\"batch\": 256", true),
+        ("\"window\": 288", true),
+        ("\"horizon\": 12", true),
+        ("\"batch\": 1024", true),
+        ("\"sizes\": 64", true),
+        ("\"n_prices\": 3", true),
+    ] {
+        anyhow::ensure!(text.contains(key) == want, "manifest mismatch on {key}");
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fill_window_pads_and_truncates() {
+        let mut row = [0f32; 5];
+        fill_window(&mut row, &[1.0, 2.0]);
+        assert_eq!(row, [1.0, 1.0, 1.0, 1.0, 2.0]);
+        fill_window(&mut row, &[1., 2., 3., 4., 5., 6., 7.]);
+        assert_eq!(row, [3., 4., 5., 6., 7.]);
+        fill_window(&mut row, &[]);
+        assert_eq!(row, [0.0; 5]);
+    }
+
+    // Artifact-dependent tests live in rust/tests/runtime_artifacts.rs and
+    // skip gracefully when `make artifacts` hasn't run.
+}

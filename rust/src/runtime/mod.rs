@@ -1,0 +1,17 @@
+//! PJRT runtime: loads the AOT-compiled HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them from the broker's epoch path.
+//!
+//! Interchange is HLO *text* (not serialized protos): jax >= 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids. See `/opt/xla-example/README.md`.
+//!
+//! The compiled modules have fixed batch shapes (see `artifacts/
+//! manifest.json`); [`ForecastEngine`]/[`DemandEngine`] pad and chunk
+//! arbitrary-sized requests to the compiled batch. When artifacts are not
+//! built, [`arima_fallback`] (also used for differential testing) provides
+//! a pure-Rust implementation of exactly the same math.
+
+pub mod arima_fallback;
+pub mod engine;
+
+pub use engine::{DemandEngine, Engine, ForecastEngine, ForecastResult};

@@ -1,0 +1,646 @@
+//! Full-stack cluster simulation (paper §7.3, Table 2 & Fig 11): the
+//! end-to-end composition of every layer.
+//!
+//! * Producers: a guest app ([`AppRunner`]) under the harvester +
+//!   manager, periodically reporting usage to the broker.
+//! * Consumers: YCSB over a two-tier cache — a local in-memory tier
+//!   (their rightsized VM memory) plus, with Memtrade, leased remote
+//!   producer stores accessed through the secure KV client with real
+//!   AES/SHA sealing. Misses fall through to an SSD-resident store.
+//! * Broker: availability prediction (AOT artifact or fallback),
+//!   placement, pricing, lease lifecycle.
+//!
+//! Latency model per GET (µs): local hit = base op cost; remote hit =
+//! base + VPC RTT + producer store service + crypto; miss = base + SSD
+//! read (the paper's "remote requests served from SSD" baseline).
+
+use crate::broker::placement::ConsumerRequest;
+use crate::broker::predictor::AvailabilityPredictor;
+use crate::broker::pricing::{PricingEngine, PricingStrategy};
+use crate::broker::Broker;
+use crate::core::config::MemtradeConfig;
+use crate::core::{ConsumerId, Lease, Money, ProducerId, SimTime, GIB};
+use crate::mem::SwapDevice;
+use crate::net::model::{Locality, NetworkModel};
+use crate::net::wire::{Request, Response};
+use crate::producer::Producer;
+use crate::util::rng::Rng;
+use crate::util::stats::LatencyRecorder;
+use crate::consumer::client::SecureKv;
+use crate::kv::KvStore;
+use crate::workload::apps::{AppKind, AppModel, AppRunner};
+use crate::workload::spot::SpotPriceSeries;
+use crate::workload::ycsb::{Op, YcsbWorkload};
+
+/// Whether consumers use Memtrade, and in which security mode (Fig 11).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ConsumerMode {
+    /// No remote memory: misses go to SSD.
+    NoMemtrade,
+    /// Remote KV with encryption + integrity (fully secure).
+    Secure,
+    /// Remote KV with integrity only.
+    IntegrityOnly,
+    /// Remote KV with no crypto at all (upper bound).
+    Plain,
+}
+
+impl ConsumerMode {
+    pub fn uses_remote(self) -> bool {
+        !matches!(self, ConsumerMode::NoMemtrade)
+    }
+    fn envelope_key(self) -> Option<[u8; 16]> {
+        matches!(self, ConsumerMode::Secure).then_some([7u8; 16])
+    }
+    fn integrity(self) -> bool {
+        matches!(self, ConsumerMode::Secure | ConsumerMode::IntegrityOnly)
+    }
+    /// Crypto CPU cost per operation on a value of `len` bytes (µs),
+    /// calibrated to the paper's §7.3 overheads.
+    fn crypto_us(self, len: usize) -> f64 {
+        match self {
+            ConsumerMode::NoMemtrade | ConsumerMode::Plain => 0.0,
+            ConsumerMode::IntegrityOnly => 5.0 + 0.012 * len as f64,
+            ConsumerMode::Secure => 10.0 + 0.035 * len as f64,
+        }
+    }
+}
+
+/// One simulated consumer VM.
+pub struct SimConsumer {
+    pub id: ConsumerId,
+    workload: YcsbWorkload,
+    /// Local tier: holds the hot (1-x) share of the working set.
+    local: KvStore,
+    /// Keys with hash below this threshold live locally (the x% split).
+    remote_fraction: f64,
+    secure: SecureKv,
+    /// producer_index (SecureKv routing) -> (producer id, lease).
+    pub leases: Vec<Lease>,
+    pub lat: LatencyRecorder,
+    /// Cumulative spend on (re)leases.
+    pub spend: Money,
+    rng: Rng,
+    value_size: usize,
+    /// Base op service cost, µs (local Redis work).
+    base_us: f64,
+    pub mode: ConsumerMode,
+}
+
+impl SimConsumer {
+    fn is_local_key(&self, key: u64) -> bool {
+        // Deterministic split: hot (low-rank-hashed) keys stay local.
+        let mut h = key.wrapping_mul(0x9E3779B97F4A7C15);
+        h ^= h >> 33;
+        (h as f64 / u64::MAX as f64) >= self.remote_fraction
+    }
+}
+
+/// Cluster simulation configuration.
+pub struct ClusterSimConfig {
+    pub n_producers: usize,
+    pub n_consumers: usize,
+    /// Fraction of each consumer's working set that must be remote
+    /// (the paper's x ∈ {10%, 30%, 50%}).
+    pub remote_fraction: f64,
+    pub mode: ConsumerMode,
+    /// Consumer working set keys and value size.
+    pub n_keys: u64,
+    pub value_size: usize,
+    /// Enable the harvester on producers (off = static producers).
+    pub harvest: bool,
+    /// Ops simulated per consumer per epoch.
+    pub ops_per_epoch: u32,
+    /// Guest page size for producer memory models.
+    pub page_bytes: u64,
+    pub seed: u64,
+    /// Use the PJRT artifacts if present.
+    pub use_pjrt: bool,
+}
+
+impl Default for ClusterSimConfig {
+    fn default() -> Self {
+        ClusterSimConfig {
+            n_producers: 8,
+            n_consumers: 6,
+            remote_fraction: 0.3,
+            mode: ConsumerMode::Secure,
+            n_keys: 40_000,
+            value_size: 1024,
+            harvest: true,
+            ops_per_epoch: 300,
+            page_bytes: 4 << 20,
+            seed: 42,
+            use_pjrt: false,
+        }
+    }
+}
+
+/// SSD miss penalty (µs): a miss reads from the consumer's SSD-resident
+/// dataset (paper: "If remote memory is not available, the I/O operation
+/// is performed using SSD"). Includes queueing/filesystem overheads.
+const SSD_MISS_US: f64 = 4_500.0;
+/// Producer-store service time (µs) per request.
+const STORE_SERVICE_US: f64 = 30.0;
+/// Local-tier base op cost (µs) — the paper's 0% row is ~0.62 ms average
+/// under load; single-op service time is lower.
+const LOCAL_BASE_US: f64 = 550.0;
+
+/// The full cluster simulation.
+pub struct ClusterSim {
+    pub cfg: ClusterSimConfig,
+    pub mt: MemtradeConfig,
+    pub broker: Broker,
+    pub producers: Vec<Producer>,
+    pub consumers: Vec<SimConsumer>,
+    pub net: NetworkModel,
+    pub now: SimTime,
+    spot: SpotPriceSeries,
+    epoch_count: u64,
+}
+
+impl ClusterSim {
+    pub fn new(cfg: ClusterSimConfig) -> Self {
+        let mt = MemtradeConfig::default();
+        let mut rng = Rng::new(cfg.seed);
+
+        // Producers: cycle through the six paper app kinds.
+        let mut producers = Vec::with_capacity(cfg.n_producers);
+        for i in 0..cfg.n_producers {
+            let kind = AppKind::ALL[i % AppKind::ALL.len()];
+            let model = AppModel::preset(kind);
+            let app = AppRunner::new(
+                model,
+                cfg.page_bytes,
+                SwapDevice::Ssd,
+                cfg.harvest.then(|| mt.harvester.cooling_period),
+                cfg.seed ^ (i as u64 + 1),
+            );
+            let mut p = Producer::new(
+                ProducerId(i as u64 + 1),
+                app,
+                mt.harvester.clone(),
+                mt.broker.slab_bytes,
+            );
+            p.app.ops_cap_per_epoch = 400;
+            producers.push(p);
+        }
+
+        // Broker.
+        let predictor = if cfg.use_pjrt {
+            AvailabilityPredictor::auto()
+        } else {
+            AvailabilityPredictor::fallback(288, 12)
+        };
+        let pricing = PricingEngine::new(
+            PricingStrategy::FixedFraction,
+            Money::from_dollars(0.00001),
+            mt.broker.price_step_dollars,
+        );
+        let mut broker = Broker::new(mt.broker.clone(), predictor, pricing);
+        for p in &producers {
+            broker
+                .registry
+                .register_producer(p.id, p.app.model.vm_bytes as f32 / GIB as f32);
+        }
+
+        // Consumers.
+        let consumers = (0..cfg.n_consumers)
+            .map(|i| {
+                let id = ConsumerId(1000 + i as u64);
+                broker.registry.register_consumer(id);
+                // Local tier sized for the non-remote share of the set.
+                let set_bytes =
+                    cfg.n_keys as usize * (cfg.value_size + 16 + 64);
+                let local_bytes =
+                    ((set_bytes as f64) * (1.0 - cfg.remote_fraction) * 1.15) as usize;
+                SimConsumer {
+                    id,
+                    workload: YcsbWorkload::paper_default(cfg.n_keys, cfg.value_size),
+                    local: KvStore::new(local_bytes.max(1 << 20), cfg.seed ^ (0xC0 + i as u64)),
+                    remote_fraction: cfg.remote_fraction,
+                    secure: SecureKv::new(
+                        cfg.mode.envelope_key(),
+                        cfg.mode.integrity(),
+                        1,
+                        cfg.seed ^ (0xD0 + i as u64),
+                    ),
+                    leases: Vec::new(),
+                    lat: LatencyRecorder::new(),
+                    spend: Money::ZERO,
+                    rng: rng.fork(i as u64),
+                    value_size: cfg.value_size,
+                    base_us: LOCAL_BASE_US,
+                    mode: cfg.mode,
+                }
+            })
+            .collect();
+
+        ClusterSim {
+            cfg,
+            mt,
+            broker,
+            producers,
+            consumers,
+            net: NetworkModel::default(),
+            now: SimTime::ZERO,
+            spot: SpotPriceSeries::r3_large(4096, 17),
+            epoch_count: 0,
+        }
+    }
+
+    /// Warm the market: producers report history so the predictor has
+    /// data, then consumers lease their remote share.
+    pub fn bootstrap(&mut self) {
+        // Seed 24h of usage history per producer (steady at current RSS).
+        for p in &self.producers {
+            let used_gb = p.app.model.footprint_bytes as f32 / GIB as f32;
+            for t in 0..288u64 {
+                self.broker
+                    .registry
+                    .report_usage(p.id, SimTime::from_secs(t * 300), used_gb);
+            }
+        }
+        // Managers learn their pools (everything currently harvestable).
+        for p in &mut self.producers {
+            let shape = p.app.memory.shape();
+            p.manager.set_harvestable(shape.harvestable, SimTime::ZERO);
+            self.broker.registry.update_producer_resources(
+                p.id,
+                p.manager.free_slabs(),
+                0.9,
+                0.9,
+            );
+        }
+        self.broker.predictor.refresh(&mut self.broker.registry, SimTime::ZERO);
+
+        if !self.cfg.mode.uses_remote() {
+            return;
+        }
+        // Each consumer leases slabs for its remote share.
+        let slab = self.mt.broker.slab_bytes;
+        for ci in 0..self.consumers.len() {
+            let c = &self.consumers[ci];
+            let set_bytes = self.cfg.n_keys as usize * (self.cfg.value_size + 80);
+            let need_bytes = (set_bytes as f64 * self.cfg.remote_fraction * 1.6) as u64;
+            let slabs = (need_bytes / slab).max(1) as u32;
+            let req = ConsumerRequest {
+                consumer: c.id,
+                slabs,
+                min_slabs: 1,
+                lease: SimTime::from_hours(4),
+                max_price_per_slab_hour: None,
+                latency_us_to: Default::default(),
+                weights: None,
+            };
+            let leases = self.broker.request_memory(self.now, req);
+            for lease in leases {
+                let pid = lease.producer;
+                let p = self
+                    .producers
+                    .iter_mut()
+                    .find(|p| p.id == pid)
+                    .expect("lease to unknown producer");
+                assert!(p.manager.grant_lease(lease.clone(), 1_250_000_000 / 8));
+                self.consumers[ci].leases.push(lease);
+            }
+            let n = self.consumers[ci].leases.len() as u32;
+            self.consumers[ci].secure.set_n_producers(n.max(1));
+        }
+
+        // Warm the remote tier (the paper populates YCSB stores before
+        // measuring): pre-PUT every remote key. The clock advances during
+        // the load so the rate limiter behaves as in a real bulk load.
+        for ci in 0..self.consumers.len() {
+            if self.consumers[ci].leases.is_empty() {
+                continue;
+            }
+            let n_keys = self.cfg.n_keys;
+            let value_size = self.cfg.value_size;
+            let mut loaded = 0u64;
+            for key in 0..n_keys {
+                if self.consumers[ci].is_local_key(key) {
+                    continue;
+                }
+                let kb = YcsbWorkload::key_bytes(key);
+                let val = vec![0xAB; value_size];
+                let _ = self.secure_put(ci, &kb, &val);
+                loaded += 1;
+                if loaded % 64 == 0 {
+                    self.now += SimTime::from_millis(1);
+                }
+            }
+        }
+    }
+
+    /// Route one secure-KV request to the producer backing lease
+    /// `producer_index` of consumer `ci`. Returns (response, network µs).
+    fn route(
+        producers: &mut [Producer],
+        consumers: &mut [SimConsumer],
+        ci: usize,
+        producer_index: u32,
+        req: Request,
+        now: SimTime,
+        net: &NetworkModel,
+    ) -> (Response, f64) {
+        let lease = match consumers[ci].leases.get(producer_index as usize) {
+            Some(l) => l.clone(),
+            None => return (Response::Error("no lease".into()), 0.0),
+        };
+        let req_bytes = req.wire_bytes() as u64;
+        let p = producers
+            .iter_mut()
+            .find(|p| p.id == lease.producer)
+            .expect("producer exists");
+        let resp = p.manager.handle(lease.consumer, &req, now);
+        let resp_bytes = resp.wire_bytes() as u64;
+        let net_us = net
+            .round_trip(Locality::SameDatacenter, req_bytes, resp_bytes)
+            .as_micros() as f64;
+        (resp, net_us + STORE_SERVICE_US)
+    }
+
+    /// Run one consumer operation, returning its latency in µs.
+    fn consumer_op(&mut self, ci: usize) -> f64 {
+        let op = {
+            let c = &mut self.consumers[ci];
+            c.workload.next_op(&mut c.rng)
+        };
+        let key = op.key();
+        let key_bytes = YcsbWorkload::key_bytes(key);
+        let is_local = self.consumers[ci].is_local_key(key);
+        let mode = self.consumers[ci].mode;
+        let value_size = self.consumers[ci].value_size;
+        let mut latency = self.consumers[ci].base_us;
+
+        match op {
+            Op::Read { .. } => {
+                if is_local {
+                    // Local tier: populate lazily, always resident.
+                    let c = &mut self.consumers[ci];
+                    if c.local.get(&key_bytes).is_none() {
+                        let val = vec![0xAB; value_size];
+                        c.local.put(&key_bytes, &val);
+                    }
+                } else if mode.uses_remote() && !self.consumers[ci].leases.is_empty() {
+                    latency += mode.crypto_us(value_size);
+                    let (hit, net_us) = self.secure_get(ci, &key_bytes);
+                    latency += net_us;
+                    if !hit {
+                        // Fault from SSD and refill the remote tier.
+                        latency += SSD_MISS_US;
+                        let val = vec![0xCD; value_size];
+                        let (_ok, put_net) = self.secure_put(ci, &key_bytes, &val);
+                        // Refill happens asynchronously; don't charge the op.
+                        let _ = put_net;
+                    }
+                } else {
+                    latency += SSD_MISS_US;
+                }
+            }
+            Op::Update { .. } => {
+                if is_local {
+                    let c = &mut self.consumers[ci];
+                    let val = vec![0xEF; value_size];
+                    c.local.put(&key_bytes, &val);
+                } else if mode.uses_remote() && !self.consumers[ci].leases.is_empty() {
+                    latency += mode.crypto_us(value_size);
+                    let val = vec![0xEF; value_size];
+                    let (_ok, net_us) = self.secure_put(ci, &key_bytes, &val);
+                    latency += net_us;
+                } else {
+                    latency += SSD_MISS_US * 0.4; // write-back to SSD
+                }
+            }
+        }
+        latency
+    }
+
+    fn secure_get(&mut self, ci: usize, key: &[u8]) -> (bool, f64) {
+        let mut net_us = 0.0;
+        let now = self.now;
+        let net = self.net.clone();
+        let producers = &mut self.producers;
+        let consumers = &mut self.consumers;
+        // SAFETY dance: split borrows via raw pointer is avoided by
+        // temporarily taking the SecureKv out of the consumer.
+        let mut secure = std::mem::replace(
+            &mut consumers[ci].secure,
+            SecureKv::new(None, false, 1, 0),
+        );
+        let result = {
+            let mut transport = |producer_index: u32, req: Request| {
+                let (resp, us) =
+                    Self::route(producers, consumers, ci, producer_index, req, now, &net);
+                net_us += us;
+                resp
+            };
+            secure.get(&mut transport, key)
+        };
+        self.consumers[ci].secure = secure;
+        (result.is_some(), net_us)
+    }
+
+    fn secure_put(&mut self, ci: usize, key: &[u8], value: &[u8]) -> (bool, f64) {
+        let mut net_us = 0.0;
+        let now = self.now;
+        let net = self.net.clone();
+        let producers = &mut self.producers;
+        let consumers = &mut self.consumers;
+        let mut secure = std::mem::replace(
+            &mut consumers[ci].secure,
+            SecureKv::new(None, false, 1, 0),
+        );
+        let ok = {
+            let mut transport = |producer_index: u32, req: Request| {
+                let (resp, us) =
+                    Self::route(producers, consumers, ci, producer_index, req, now, &net);
+                net_us += us;
+                resp
+            };
+            secure.put(&mut transport, key, value)
+        };
+        self.consumers[ci].secure = secure;
+        (ok, net_us)
+    }
+
+    /// Advance one monitoring epoch (producers harvest, consumers serve).
+    pub fn step_epoch(&mut self) {
+        let epoch = self.mt.harvester.epoch;
+        self.now += epoch;
+        self.epoch_count += 1;
+
+        // Producers: run guest workloads + harvester control loops.
+        for pi in 0..self.producers.len() {
+            let p = &mut self.producers[pi];
+            p.tick(self.now, epoch);
+        }
+
+        // Consumers: serve ops.
+        for ci in 0..self.consumers.len() {
+            for _ in 0..self.cfg.ops_per_epoch {
+                let lat = self.consumer_op(ci);
+                self.consumers[ci].lat.record(lat);
+            }
+        }
+
+        // Lease expiry + renewal (paper §4.2: at expiry the manager asks
+        // the broker whether the consumer extends at the current market
+        // price; our consumers renew while they still hold remote keys).
+        let price = self.broker.current_price();
+        for ci in 0..self.consumers.len() {
+            for li in 0..self.consumers[ci].leases.len() {
+                let lease = self.consumers[ci].leases[li].clone();
+                if self.now >= lease.end() {
+                    let renewed = Lease {
+                        start: self.now,
+                        price_per_slab_hour: price,
+                        ..lease.clone()
+                    };
+                    self.consumers[ci].spend += renewed.total_cost();
+                    self.consumers[ci].leases[li] = renewed;
+                    self.broker.lease_ended(&lease, false);
+                }
+            }
+        }
+
+        // Market epoch every 5 minutes of sim time.
+        let market_every =
+            (self.mt.broker.market_epoch.as_micros() / epoch.as_micros()).max(1);
+        if self.epoch_count % market_every == 0 {
+            for p in &self.producers {
+                let used_gb = (p.app.memory.rss_pages() as u64 * p.app.memory.page_bytes())
+                    as f32
+                    / GIB as f32;
+                self.broker.registry.report_usage(p.id, self.now, used_gb);
+                self.broker.registry.update_producer_resources(
+                    p.id,
+                    p.manager.free_slabs(),
+                    0.9,
+                    0.9,
+                );
+            }
+            let t = (self.now.as_secs_f64() / 300.0) as usize;
+            let spot = self.spot.per_gb_hour(t);
+            let granted = self.broker.market_epoch(self.now, spot);
+            for lease in granted {
+                let pid = lease.producer;
+                if let Some(p) = self.producers.iter_mut().find(|p| p.id == pid) {
+                    if p.manager.grant_lease(lease.clone(), 1_250_000_000 / 8) {
+                        if let Some(c) =
+                            self.consumers.iter_mut().find(|c| c.id == lease.consumer)
+                        {
+                            c.leases.push(lease);
+                            let n = c.leases.len() as u32;
+                            c.secure.set_n_producers(n);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Run for `sim_duration`, reporting (consumer latencies, producer
+    /// mean latencies).
+    pub fn run(&mut self, sim_duration: SimTime) {
+        let epochs = sim_duration.as_micros() / self.mt.harvester.epoch.as_micros();
+        for _ in 0..epochs {
+            self.step_epoch();
+        }
+    }
+
+    /// Mean consumer latency (µs) across all consumers.
+    pub fn consumer_mean_latency(&self) -> f64 {
+        let mut rec = LatencyRecorder::new();
+        for c in &self.consumers {
+            rec.merge(&c.lat);
+        }
+        rec.mean()
+    }
+
+    pub fn consumer_p99_latency(&self) -> f64 {
+        let mut rec = LatencyRecorder::new();
+        for c in &self.consumers {
+            rec.merge(&c.lat);
+        }
+        rec.p99()
+    }
+
+    /// Total bytes currently leased to consumers.
+    pub fn leased_bytes(&self) -> u64 {
+        self.producers.iter().map(|p| p.manager.leased_bytes()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small(mode: ConsumerMode, remote: f64) -> ClusterSim {
+        let cfg = ClusterSimConfig {
+            n_producers: 4,
+            n_consumers: 3,
+            remote_fraction: remote,
+            mode,
+            n_keys: 5_000,
+            value_size: 512,
+            ops_per_epoch: 100,
+            page_bytes: 16 << 20,
+            seed: 7,
+            ..Default::default()
+        };
+        let mut sim = ClusterSim::new(cfg);
+        sim.bootstrap();
+        sim
+    }
+
+    #[test]
+    fn bootstrap_grants_leases() {
+        let sim = small(ConsumerMode::Secure, 0.3);
+        for c in &sim.consumers {
+            assert!(!c.leases.is_empty(), "consumer {:?} got no leases", c.id);
+        }
+        assert!(sim.leased_bytes() > 0);
+    }
+
+    #[test]
+    fn memtrade_beats_ssd_baseline() {
+        let mut with = small(ConsumerMode::Secure, 0.5);
+        with.run(SimTime::from_mins(5));
+        let mut without = small(ConsumerMode::NoMemtrade, 0.5);
+        without.run(SimTime::from_mins(5));
+        let w = with.consumer_mean_latency();
+        let wo = without.consumer_mean_latency();
+        assert!(
+            w < wo * 0.75,
+            "memtrade {w:.0}µs not clearly better than ssd {wo:.0}µs"
+        );
+    }
+
+    #[test]
+    fn security_modes_ordered() {
+        let mut secure = small(ConsumerMode::Secure, 0.5);
+        secure.run(SimTime::from_mins(3));
+        let mut int_only = small(ConsumerMode::IntegrityOnly, 0.5);
+        int_only.run(SimTime::from_mins(3));
+        let mut plain = small(ConsumerMode::Plain, 0.5);
+        plain.run(SimTime::from_mins(3));
+        let s = secure.consumer_mean_latency();
+        let i = int_only.consumer_mean_latency();
+        let p = plain.consumer_mean_latency();
+        assert!(p <= i + 50.0, "plain {p} vs integrity {i}");
+        assert!(i <= s + 50.0, "integrity {i} vs secure {s}");
+    }
+
+    #[test]
+    fn zero_remote_fraction_stays_local() {
+        let mut sim = small(ConsumerMode::Secure, 0.0);
+        sim.run(SimTime::from_mins(2));
+        let lat = sim.consumer_mean_latency();
+        assert!(
+            (lat - LOCAL_BASE_US).abs() < 100.0,
+            "0% remote should be ~base: {lat}"
+        );
+    }
+}

@@ -1,0 +1,246 @@
+//! Market simulation (paper §7.4, Fig 12 & Fig 13): N consumers whose
+//! demand comes from MemCachier-style MRCs, a remote-memory supply series
+//! (from the cluster-trace generator's idle memory), an exogenous spot
+//! price series, and the broker's pricing engine under each strategy.
+
+use crate::broker::pricing::{DemandInputs, PricingEngine, PricingStrategy};
+use crate::broker::registry::Registry;
+use crate::core::{Money, DEFAULT_SLAB_BYTES, GIB};
+use crate::runtime::arima_fallback::demand_one;
+use crate::util::rng::Rng;
+use crate::workload::memcachier::{Mrc, MrcLibrary};
+use crate::workload::spot::SpotPriceSeries;
+
+/// One simulated consumer: an app with an MRC, a local cache sized for
+/// 80% of optimal hit ratio (§7.4), and a per-hit value.
+pub struct MarketConsumer {
+    pub mrc: Mrc,
+    pub local_bytes: u64,
+    pub hit_value: f32,
+    /// Gain curve above local size, one entry per slab (cached).
+    gain: Vec<f32>,
+}
+
+/// Configuration for a market simulation.
+pub struct MarketSimConfig {
+    pub n_consumers: usize,
+    pub strategy: PricingStrategy,
+    pub seed: u64,
+    /// Max slabs any consumer may lease per step.
+    pub max_slabs: usize,
+    /// Probability a leased slab is revoked early (demand discount).
+    pub eviction_probability: f64,
+}
+
+impl Default for MarketSimConfig {
+    fn default() -> Self {
+        MarketSimConfig {
+            n_consumers: 10_000,
+            strategy: PricingStrategy::MaxRevenue,
+            seed: 42,
+            max_slabs: 64,
+            eviction_probability: 0.0,
+        }
+    }
+}
+
+/// Per-step market outcome (one row of Fig 13).
+#[derive(Clone, Debug, Default)]
+pub struct MarketStep {
+    pub price_per_slab_hour: f64,
+    pub spot_per_slab_hour: f64,
+    pub demanded_slabs: f64,
+    pub supplied_slabs: f64,
+    pub traded_slabs: f64,
+    pub revenue: f64,
+    pub utilization: f64,
+    /// Mean relative hit-ratio improvement across participating consumers.
+    pub rel_hit_improvement: f64,
+    /// Mean consumer cost saving vs leasing spot memory for the same GB.
+    pub cost_saving_vs_spot: f64,
+}
+
+/// The market simulator.
+pub struct MarketSim {
+    pub cfg: MarketSimConfig,
+    pub consumers: Vec<MarketConsumer>,
+    pub pricing: PricingEngine,
+    registry: Registry,
+}
+
+impl MarketSim {
+    pub fn new(cfg: MarketSimConfig, library: &MrcLibrary, initial_price: Money) -> Self {
+        let mut rng = Rng::new(cfg.seed);
+        let consumers = (0..cfg.n_consumers)
+            .map(|_| {
+                let mrc = library.sample(&mut rng).clone();
+                // Local memory serves >= 80% of the optimal hit ratio (§7.4).
+                let local_bytes = mrc.size_for_relative_hit_ratio(0.8);
+                // Hit value: dollars per (hit/sec·hour); spread over apps.
+                let hit_value = rng.uniform(2e-7, 6e-6) as f32;
+                let gain = mrc.gain_curve(local_bytes, DEFAULT_SLAB_BYTES, cfg.max_slabs + 1);
+                MarketConsumer { mrc, local_bytes, hit_value, gain }
+            })
+            .collect();
+        let pricing = PricingEngine::new(cfg.strategy, initial_price, 0.00002);
+        MarketSim { cfg, consumers, pricing, registry: Registry::default() }
+    }
+
+    /// Demand inputs for the pricing engine's local search (the gain
+    /// curves have fixed length DEMAND_SIZES=64+1 here; trim to 64).
+    fn demand_inputs(&self) -> DemandInputs {
+        let mut d = DemandInputs::default();
+        for c in &self.consumers {
+            let mut g = c.gain.clone();
+            g.truncate(crate::runtime::engine::DEMAND_SIZES);
+            // Discount by eviction probability (§7.4 realistic scenario).
+            if self.cfg.eviction_probability > 0.0 {
+                let f = (1.0 - self.cfg.eviction_probability) as f32;
+                for v in &mut g {
+                    *v *= f;
+                }
+            }
+            d.push(g, c.hit_value);
+        }
+        d
+    }
+
+    /// Run one market step: adjust the price, clear demand against
+    /// `supply_gb`, report the paper's Fig 13 metrics.
+    pub fn step(&mut self, supply_gb: f64, spot: &SpotPriceSeries, t: usize) -> MarketStep {
+        let spot_gb = spot.per_gb_hour(t);
+        let slab_frac = DEFAULT_SLAB_BYTES as f64 / GIB as f64;
+        let spot_slab = spot_gb.scale(slab_frac);
+
+        self.pricing.set_demand_inputs(self.demand_inputs());
+        self.pricing.adjust(&self.registry, spot_gb, DEFAULT_SLAB_BYTES);
+        let price = self.pricing.current_price();
+
+        let supply_slabs = supply_gb / slab_frac;
+        let evict_f = 1.0 - self.cfg.eviction_probability;
+
+        let mut demanded = 0f64;
+        let mut hit_impr = 0f64;
+        let mut hit_n = 0usize;
+        let mut saving = 0f64;
+        let mut saving_n = 0usize;
+        let mut per_consumer: Vec<u32> = Vec::with_capacity(self.consumers.len());
+        for c in &self.consumers {
+            let gain: Vec<f32> =
+                c.gain.iter().map(|&g| g * evict_f as f32).collect();
+            let slabs = demand_one(&gain, c.hit_value, price.as_dollars());
+            per_consumer.push(slabs);
+            demanded += slabs as f64;
+        }
+
+        // Supply clearing: scale allocations down proportionally if the
+        // market is short (the broker's partial-allocation rule).
+        let fill = if demanded > supply_slabs && demanded > 0.0 {
+            supply_slabs / demanded
+        } else {
+            1.0
+        };
+
+        let mut traded = 0f64;
+        for (c, &slabs) in self.consumers.iter().zip(&per_consumer) {
+            let granted = (slabs as f64 * fill).floor();
+            traded += granted;
+            if granted > 0.0 {
+                let bytes = granted as u64 * DEFAULT_SLAB_BYTES;
+                let h_before = c.mrc.hit_ratio_at(c.local_bytes);
+                let h_after = c.mrc.hit_ratio_at(c.local_bytes + bytes);
+                if h_before > 0.0 {
+                    hit_impr += (h_after - h_before) / h_before;
+                    hit_n += 1;
+                }
+                // Cost vs leasing the same GB at spot price.
+                let ours = price.as_dollars() * granted;
+                let spot_cost = spot_slab.as_dollars() * granted;
+                if spot_cost > 0.0 {
+                    saving += 1.0 - ours / spot_cost;
+                    saving_n += 1;
+                }
+            }
+        }
+
+        MarketStep {
+            price_per_slab_hour: price.as_dollars(),
+            spot_per_slab_hour: spot_slab.as_dollars(),
+            demanded_slabs: demanded,
+            supplied_slabs: supply_slabs,
+            traded_slabs: traded,
+            revenue: price.as_dollars() * traded,
+            utilization: if supply_slabs > 0.0 { traded / supply_slabs } else { 0.0 },
+            rel_hit_improvement: if hit_n > 0 { hit_impr / hit_n as f64 } else { 0.0 },
+            cost_saving_vs_spot: if saving_n > 0 { saving / saving_n as f64 } else { 0.0 },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sim(strategy: PricingStrategy, n: usize) -> MarketSim {
+        let lib = MrcLibrary::paper_population(7);
+        let cfg = MarketSimConfig { n_consumers: n, strategy, seed: 11, ..Default::default() };
+        MarketSim::new(cfg, &lib, Money::from_dollars(0.00001))
+    }
+
+    #[test]
+    fn market_clears_within_supply() {
+        let mut m = sim(PricingStrategy::MaxRevenue, 500);
+        let spot = SpotPriceSeries::r3_large(100, 3);
+        for t in 0..20 {
+            let step = m.step(100.0, &spot, t);
+            assert!(step.traded_slabs <= step.supplied_slabs + 1e-9);
+            assert!(step.price_per_slab_hour <= step.spot_per_slab_hour + 1e-12);
+            assert!(step.utilization <= 1.0 + 1e-9);
+        }
+    }
+
+    #[test]
+    fn scarce_supply_highly_utilized_and_priced_up() {
+        // Revenue-optimal pricing may undersell scarce supply slightly
+        // (unclamped-demand optimum), but utilization should stay high and
+        // the price should settle above the abundant-supply price.
+        let spot = SpotPriceSeries::r3_large(100, 3);
+        let mut scarce = sim(PricingStrategy::MaxRevenue, 500);
+        let mut abundant = sim(PricingStrategy::MaxRevenue, 500);
+        let mut s_last = MarketStep::default();
+        let mut a_last = MarketStep::default();
+        for t in 0..30 {
+            s_last = scarce.step(20.0, &spot, t);
+            a_last = abundant.step(50_000.0, &spot, t);
+        }
+        assert!(s_last.utilization > 0.5, "utilization {}", s_last.utilization);
+        assert!(s_last.utilization > a_last.utilization);
+    }
+
+    #[test]
+    fn consumers_save_versus_spot() {
+        let mut m = sim(PricingStrategy::FixedFraction, 300);
+        let spot = SpotPriceSeries::r3_large(100, 5);
+        let step = m.step(5000.0, &spot, 50);
+        // Fixed quarter-of-spot pricing => 75% saving by construction.
+        assert!((step.cost_saving_vs_spot - 0.75).abs() < 0.01);
+        assert!(step.rel_hit_improvement > 0.0);
+    }
+
+    #[test]
+    fn revenue_strategy_beats_fixed_on_revenue() {
+        let spot = SpotPriceSeries::r3_large(300, 9);
+        let mut fixed = sim(PricingStrategy::FixedFraction, 800);
+        let mut maxrev = sim(PricingStrategy::MaxRevenue, 800);
+        let mut rev_fixed = 0.0;
+        let mut rev_max = 0.0;
+        for t in 0..200 {
+            rev_fixed += fixed.step(3000.0, &spot, t).revenue;
+            rev_max += maxrev.step(3000.0, &spot, t).revenue;
+        }
+        assert!(
+            rev_max >= rev_fixed * 0.95,
+            "max-revenue {rev_max} much worse than fixed {rev_fixed}"
+        );
+    }
+}

@@ -1,0 +1,19 @@
+//! Simulation harnesses tying the whole system together:
+//!
+//! * [`market`] — the pure market simulation (pricing strategies, supply
+//!   from cluster traces, MRC-driven consumers) behind Fig 12/13 and the
+//!   pricing sections of §7.4.
+//! * [`cluster`] — the full-stack cluster simulation (producers with
+//!   harvesters + guest memory, consumers with local cache + secure
+//!   remote KV + SSD miss path, the broker in the middle) behind
+//!   Table 2, Fig 11 and the end-to-end example.
+//! * [`replay`] — Google-trace-style replay of broker placement at scale
+//!   (Fig 10, §7.2 predictor accuracy).
+
+pub mod cluster;
+pub mod market;
+pub mod replay;
+
+pub use cluster::{ClusterSim, ClusterSimConfig, ConsumerMode};
+pub use market::{MarketSim, MarketSimConfig, MarketStep};
+pub use replay::{ReplayConfig, ReplayResult};

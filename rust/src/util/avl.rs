@@ -1,0 +1,344 @@
+//! Windowed order-statistics distribution — the data structure behind the
+//! harvester's baseline and recent performance estimators (paper §4.1):
+//! "An efficient AVL-tree data structure is used to track these points,
+//! which are discarded after an expiration time."
+//!
+//! [`WindowedDist`] keeps (timestamp, value) samples, supports O(log n)
+//! insertion, O(log n) arbitrary-quantile queries via subtree counts, and
+//! expiry of samples older than the window.  Duplicate values are handled
+//! with per-node multiplicity plus a FIFO of timestamps for expiry.
+
+use crate::core::SimTime;
+use std::collections::VecDeque;
+
+/// AVL node storing one distinct value with multiplicity.
+struct Node {
+    value: f64,
+    count: u32,
+    left: Option<Box<Node>>,
+    right: Option<Box<Node>>,
+    height: i32,
+    /// Total multiplicity in this subtree (for order statistics).
+    size: u32,
+}
+
+impl Node {
+    fn new(value: f64) -> Box<Node> {
+        Box::new(Node { value, count: 1, left: None, right: None, height: 1, size: 1 })
+    }
+
+    fn update(&mut self) {
+        let (lh, ls) = self.left.as_ref().map_or((0, 0), |n| (n.height, n.size));
+        let (rh, rs) = self.right.as_ref().map_or((0, 0), |n| (n.height, n.size));
+        self.height = 1 + lh.max(rh);
+        self.size = self.count + ls + rs;
+    }
+
+    fn balance_factor(&self) -> i32 {
+        let lh = self.left.as_ref().map_or(0, |n| n.height);
+        let rh = self.right.as_ref().map_or(0, |n| n.height);
+        lh - rh
+    }
+}
+
+fn rotate_right(mut node: Box<Node>) -> Box<Node> {
+    let mut left = node.left.take().expect("rotate_right without left child");
+    node.left = left.right.take();
+    node.update();
+    left.right = Some(node);
+    left.update();
+    left
+}
+
+fn rotate_left(mut node: Box<Node>) -> Box<Node> {
+    let mut right = node.right.take().expect("rotate_left without right child");
+    node.right = right.left.take();
+    node.update();
+    right.left = Some(node);
+    right.update();
+    right
+}
+
+fn rebalance(mut node: Box<Node>) -> Box<Node> {
+    node.update();
+    let bf = node.balance_factor();
+    if bf > 1 {
+        if node.left.as_ref().unwrap().balance_factor() < 0 {
+            node.left = Some(rotate_left(node.left.take().unwrap()));
+        }
+        node = rotate_right(node);
+    } else if bf < -1 {
+        if node.right.as_ref().unwrap().balance_factor() > 0 {
+            node.right = Some(rotate_right(node.right.take().unwrap()));
+        }
+        node = rotate_left(node);
+    }
+    node
+}
+
+fn insert(node: Option<Box<Node>>, value: f64) -> Box<Node> {
+    match node {
+        None => Node::new(value),
+        Some(mut n) => {
+            if value == n.value {
+                n.count += 1;
+                n.update();
+                n
+            } else if value < n.value {
+                n.left = Some(insert(n.left.take(), value));
+                rebalance(n)
+            } else {
+                n.right = Some(insert(n.right.take(), value));
+                rebalance(n)
+            }
+        }
+    }
+}
+
+fn min_value(node: &Node) -> f64 {
+    node.left.as_ref().map_or(node.value, |l| min_value(l))
+}
+
+fn remove(node: Option<Box<Node>>, value: f64) -> Option<Box<Node>> {
+    let mut n = node?;
+    if value < n.value {
+        n.left = remove(n.left.take(), value);
+    } else if value > n.value {
+        n.right = remove(n.right.take(), value);
+    } else {
+        if n.count > 1 {
+            n.count -= 1;
+            n.update();
+            return Some(n);
+        }
+        match (n.left.take(), n.right.take()) {
+            (None, None) => return None,
+            (Some(l), None) => return Some(l),
+            (None, Some(r)) => return Some(r),
+            (Some(l), Some(r)) => {
+                let succ = min_value(&r);
+                n.value = succ;
+                n.count = 1;
+                // Remove exactly one instance of succ from the right subtree.
+                n.left = Some(l);
+                n.right = remove(Some(r), succ);
+                // Transfer multiplicity: the successor may have had count > 1;
+                // remove() above removed one instance, the rest stay in place,
+                // which is fine — values are equal-keyed nodes.
+            }
+        }
+    }
+    Some(rebalance(n))
+}
+
+/// k-th smallest (0-based) by multiplicity.
+fn kth(node: &Node, k: u32) -> f64 {
+    let ls = node.left.as_ref().map_or(0, |n| n.size);
+    if k < ls {
+        kth(node.left.as_ref().unwrap(), k)
+    } else if k < ls + node.count {
+        node.value
+    } else {
+        kth(node.right.as_ref().unwrap(), k - ls - node.count)
+    }
+}
+
+/// Number of samples strictly less than `value`.
+fn rank_below(node: Option<&Node>, value: f64) -> u32 {
+    match node {
+        None => 0,
+        Some(n) => {
+            if value <= n.value {
+                rank_below(n.left.as_deref(), value)
+            } else {
+                let left_size = n.left.as_ref().map_or(0, |l| l.size);
+                left_size + n.count + rank_below(n.right.as_deref(), value)
+            }
+        }
+    }
+}
+
+/// Time-windowed distribution with O(log n) quantiles.
+pub struct WindowedDist {
+    root: Option<Box<Node>>,
+    /// FIFO of (timestamp, value) for expiry.
+    queue: VecDeque<(SimTime, f64)>,
+    window: SimTime,
+}
+
+impl WindowedDist {
+    pub fn new(window: SimTime) -> Self {
+        WindowedDist { root: None, queue: VecDeque::new(), window }
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+    pub fn window(&self) -> SimTime {
+        self.window
+    }
+
+    /// Insert a sample observed at `now`, then expire old samples.
+    pub fn insert(&mut self, now: SimTime, value: f64) {
+        self.root = Some(insert(self.root.take(), value));
+        self.queue.push_back((now, value));
+        self.expire(now);
+    }
+
+    /// Drop samples older than `now - window`.
+    pub fn expire(&mut self, now: SimTime) {
+        let cutoff = now.saturating_sub(self.window);
+        while let Some(&(t, v)) = self.queue.front() {
+            if t < cutoff {
+                self.queue.pop_front();
+                self.root = remove(self.root.take(), v);
+            } else {
+                break;
+            }
+        }
+    }
+
+    /// Quantile in [0, 1]; e.g. 0.99 for p99. None when empty.
+    pub fn quantile(&self, q: f64) -> Option<f64> {
+        let root = self.root.as_ref()?;
+        let n = root.size;
+        if n == 0 {
+            return None;
+        }
+        let k = ((q.clamp(0.0, 1.0) * n as f64).ceil() as u32)
+            .saturating_sub(1)
+            .min(n - 1);
+        Some(kth(root, k))
+    }
+
+    pub fn min(&self) -> Option<f64> {
+        self.quantile(0.0)
+    }
+    pub fn max(&self) -> Option<f64> {
+        self.quantile(1.0)
+    }
+
+    /// Fraction of samples strictly below `value`.
+    pub fn cdf(&self, value: f64) -> f64 {
+        match &self.root {
+            None => 0.0,
+            Some(r) => rank_below(Some(r), value) as f64 / r.size as f64,
+        }
+    }
+
+    pub fn mean(&self) -> Option<f64> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        Some(self.queue.iter().map(|&(_, v)| v).sum::<f64>() / self.queue.len() as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Oracle: sorted-vec quantile with the same ceil convention.
+    fn oracle_quantile(values: &mut Vec<f64>, q: f64) -> f64 {
+        values.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = values.len();
+        let k = ((q * n as f64).ceil() as usize).saturating_sub(1).min(n - 1);
+        values[k]
+    }
+
+    #[test]
+    fn quantiles_match_sorted_vec_oracle() {
+        let mut r = Rng::new(21);
+        let mut d = WindowedDist::new(SimTime::from_hours(100));
+        let mut vals = Vec::new();
+        for i in 0..5000 {
+            let v = (r.f64() * 1000.0).round() / 10.0; // many duplicates
+            d.insert(SimTime::from_secs(i), v);
+            vals.push(v);
+        }
+        for &q in &[0.0, 0.01, 0.25, 0.5, 0.9, 0.99, 1.0] {
+            let got = d.quantile(q).unwrap();
+            let want = oracle_quantile(&mut vals.clone(), q);
+            assert_eq!(got, want, "q={q}");
+        }
+    }
+
+    #[test]
+    fn expiry_removes_old_samples() {
+        let mut d = WindowedDist::new(SimTime::from_secs(10));
+        for i in 0..20 {
+            d.insert(SimTime::from_secs(i), i as f64);
+        }
+        // At t=19 the cutoff is t=9: samples 0..9 expired.
+        assert_eq!(d.len(), 11);
+        assert_eq!(d.min().unwrap(), 9.0);
+        assert_eq!(d.max().unwrap(), 19.0);
+    }
+
+    #[test]
+    fn expiry_with_duplicates() {
+        let mut d = WindowedDist::new(SimTime::from_secs(5));
+        for i in 0..10 {
+            d.insert(SimTime::from_secs(i), 1.0); // all identical
+        }
+        assert_eq!(d.len(), 6);
+        assert_eq!(d.quantile(0.5), Some(1.0));
+        d.insert(SimTime::from_secs(100), 2.0);
+        assert_eq!(d.len(), 1);
+        assert_eq!(d.quantile(0.5), Some(2.0));
+    }
+
+    #[test]
+    fn randomized_vs_oracle_with_expiry() {
+        let mut r = Rng::new(77);
+        let mut d = WindowedDist::new(SimTime::from_secs(50));
+        let mut log: Vec<(u64, f64)> = Vec::new();
+        for step in 0..3000u64 {
+            let v = r.normal(100.0, 15.0);
+            d.insert(SimTime::from_secs(step), v);
+            log.push((step, v));
+            if step % 97 == 0 && step > 0 {
+                let cutoff = step.saturating_sub(50);
+                let mut live: Vec<f64> =
+                    log.iter().filter(|&&(t, _)| t >= cutoff).map(|&(_, v)| v).collect();
+                assert_eq!(d.len(), live.len(), "step {step}");
+                let got = d.quantile(0.99).unwrap();
+                let want = oracle_quantile(&mut live, 0.99);
+                assert_eq!(got, want, "step {step}");
+            }
+        }
+    }
+
+    #[test]
+    fn cdf_fraction() {
+        let mut d = WindowedDist::new(SimTime::from_hours(1));
+        for i in 0..100 {
+            d.insert(SimTime::from_secs(i), i as f64);
+        }
+        assert!((d.cdf(50.0) - 0.5).abs() < 0.02);
+        assert_eq!(d.cdf(0.0), 0.0);
+        assert!((d.cdf(1e9) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_behaviour() {
+        let d = WindowedDist::new(SimTime::from_secs(1));
+        assert!(d.is_empty());
+        assert_eq!(d.quantile(0.5), None);
+        assert_eq!(d.mean(), None);
+        assert_eq!(d.cdf(1.0), 0.0);
+    }
+
+    #[test]
+    fn mean_matches() {
+        let mut d = WindowedDist::new(SimTime::from_hours(1));
+        for i in 1..=10 {
+            d.insert(SimTime::from_secs(i), i as f64);
+        }
+        assert!((d.mean().unwrap() - 5.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,110 @@
+//! Minimal benchmarking harness (criterion is not available in this
+//! offline build): warmup, adaptive batching to a target duration, and
+//! mean/p50/p99 per-iteration reporting. Used by every `rust/benches/*`
+//! target (`harness = false`).
+
+use std::time::{Duration, Instant};
+
+/// One benchmark result.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+}
+
+impl BenchResult {
+    pub fn throughput(&self, unit: &str, per_iter: f64) -> String {
+        let per_sec = per_iter / (self.mean_ns / 1e9);
+        format!("{:.1} {unit}/s", per_sec)
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.1} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1_000_000_000.0 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+/// Run `f` repeatedly for ~`target` wall time (after warmup), sampling
+/// per-call latency in batches; prints a criterion-like row.
+pub fn bench<F: FnMut()>(name: &str, mut f: F) -> BenchResult {
+    bench_with_target(name, Duration::from_millis(800), &mut f)
+}
+
+pub fn bench_with_target<F: FnMut()>(name: &str, target: Duration, f: &mut F) -> BenchResult {
+    // Warmup + calibration: how many calls fit in ~10ms?
+    let t0 = Instant::now();
+    let mut calib = 0u64;
+    while t0.elapsed() < Duration::from_millis(50) {
+        f();
+        calib += 1;
+    }
+    let per_call = t0.elapsed().as_nanos() as f64 / calib as f64;
+    let batch = ((2_000_000.0 / per_call).ceil() as u64).clamp(1, 100_000);
+
+    let mut samples: Vec<f64> = Vec::new();
+    let mut iters = 0u64;
+    let start = Instant::now();
+    while start.elapsed() < target || samples.len() < 10 {
+        let b0 = Instant::now();
+        for _ in 0..batch {
+            f();
+        }
+        samples.push(b0.elapsed().as_nanos() as f64 / batch as f64);
+        iters += batch;
+        if samples.len() > 100_000 {
+            break;
+        }
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let p50 = samples[samples.len() / 2];
+    let p99 = samples[(samples.len() * 99 / 100).min(samples.len() - 1)];
+    let result = BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_ns: mean,
+        p50_ns: p50,
+        p99_ns: p99,
+    };
+    println!(
+        "{:<48} {:>12} {:>12} {:>12}   ({} iters)",
+        result.name,
+        fmt_ns(mean),
+        fmt_ns(p50),
+        fmt_ns(p99),
+        iters
+    );
+    result
+}
+
+/// Print the standard header.
+pub fn header(group: &str) {
+    println!("\n== bench: {group} ==");
+    println!("{:<48} {:>12} {:>12} {:>12}", "name", "mean", "p50", "p99");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut x = 0u64;
+        let r = bench_with_target("noop-ish", Duration::from_millis(30), &mut || {
+            x = x.wrapping_add(1);
+        });
+        assert!(r.iters > 0);
+        assert!(r.mean_ns >= 0.0);
+        assert!(r.p99_ns >= r.p50_ns * 0.5);
+    }
+}

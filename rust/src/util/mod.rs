@@ -1,0 +1,17 @@
+//! Foundational utilities built from scratch (no external deps): a fast
+//! deterministic RNG with the samplers the workloads need, the windowed
+//! order-statistics tree the harvester's p99 estimators use, streaming
+//! statistics, a token-bucket rate limiter, and time-series helpers.
+
+pub mod avl;
+pub mod bench;
+pub mod rng;
+pub mod stats;
+pub mod timeseries;
+pub mod token_bucket;
+
+pub use avl::WindowedDist;
+pub use rng::Rng;
+pub use stats::{Histogram, LatencyRecorder, Summary};
+pub use timeseries::TimeSeries;
+pub use token_bucket::TokenBucket;

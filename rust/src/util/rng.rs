@@ -1,0 +1,297 @@
+//! Deterministic PRNG (xoshiro256**, seeded via SplitMix64) plus the
+//! samplers the evaluation needs: uniform, normal, exponential, and the
+//! Zipfian generator YCSB uses (paper §7 runs YCSB with Zipf constant 0.7).
+
+/// xoshiro256** — fast, high-quality, reproducible across platforms.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let mut s = [0u64; 4];
+        for slot in &mut s {
+            *slot = splitmix64(&mut sm);
+        }
+        // Avoid the all-zero state (probability ~0 but cheap to guard).
+        if s == [0, 0, 0, 0] {
+            s[0] = 1;
+        }
+        Rng { s }
+    }
+
+    /// Derive an independent stream (for per-entity RNGs).
+    pub fn fork(&mut self, stream: u64) -> Rng {
+        Rng::new(self.next_u64() ^ stream.wrapping_mul(0x9E3779B97F4A7C15))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1]
+            .wrapping_mul(5)
+            .rotate_left(7)
+            .wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        // Lemire's multiply-shift rejection-free bound is overkill here;
+        // 128-bit multiply gives negligible bias for n << 2^64.
+        ((self.next_u64() as u128 * n as u128) >> 64) as u64
+    }
+
+    /// Uniform integer in [lo, hi).
+    pub fn range(&mut self, lo: u64, hi: u64) -> u64 {
+        lo + self.below(hi - lo)
+    }
+
+    /// Uniform float in [lo, hi).
+    pub fn uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.f64() * (hi - lo)
+    }
+
+    /// Standard normal via Box-Muller.
+    pub fn normal(&mut self, mean: f64, std: f64) -> f64 {
+        let u1 = self.f64().max(1e-300);
+        let u2 = self.f64();
+        let z = (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos();
+        mean + std * z
+    }
+
+    /// Exponential with the given rate (events/unit time).
+    pub fn exponential(&mut self, rate: f64) -> f64 {
+        -self.f64().max(1e-300).ln() / rate
+    }
+
+    /// Bernoulli trial.
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Pick a uniform element.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.below(xs.len() as u64) as usize]
+    }
+}
+
+/// Zipfian sampler over [0, n) with parameter theta, using the
+/// Gray-et-al. constant-time method YCSB uses (no per-sample harmonic
+/// recomputation).
+#[derive(Clone, Debug)]
+pub struct Zipfian {
+    n: u64,
+    theta: f64,
+    alpha: f64,
+    zetan: f64,
+    eta: f64,
+    zeta2: f64,
+}
+
+impl Zipfian {
+    pub fn new(n: u64, theta: f64) -> Self {
+        assert!(n > 0 && theta > 0.0 && theta < 1.0);
+        let zetan = Self::zeta(n, theta);
+        let zeta2 = Self::zeta(2, theta);
+        let alpha = 1.0 / (1.0 - theta);
+        let eta = (1.0 - (2.0 / n as f64).powf(1.0 - theta)) / (1.0 - zeta2 / zetan);
+        Zipfian { n, theta, alpha, zetan, eta, zeta2 }
+    }
+
+    fn zeta(n: u64, theta: f64) -> f64 {
+        // Exact for small n; integral approximation past a cutoff keeps
+        // construction O(1)-ish for the 10^7-key workloads.
+        const EXACT: u64 = 1_000_000;
+        if n <= EXACT {
+            (1..=n).map(|i| 1.0 / (i as f64).powf(theta)).sum()
+        } else {
+            let head: f64 = (1..=EXACT).map(|i| 1.0 / (i as f64).powf(theta)).sum();
+            // integral of x^-theta from EXACT to n
+            head + ((n as f64).powf(1.0 - theta) - (EXACT as f64).powf(1.0 - theta))
+                / (1.0 - theta)
+        }
+    }
+
+    /// Sample a rank in [0, n); rank 0 is the hottest item.
+    pub fn sample(&self, rng: &mut Rng) -> u64 {
+        let u = rng.f64();
+        let uz = u * self.zetan;
+        if uz < 1.0 {
+            return 0;
+        }
+        if uz < 1.0 + 0.5f64.powf(self.theta) {
+            return 1;
+        }
+        let raw = (self.n as f64 * (self.eta * u - self.eta + 1.0).powf(self.alpha)) as u64;
+        raw.min(self.n - 1)
+    }
+
+    pub fn n(&self) -> u64 {
+        self.n
+    }
+    #[allow(dead_code)]
+    fn zeta2(&self) -> f64 {
+        self.zeta2
+    }
+}
+
+/// Scrambled Zipfian: spreads hot ranks across the key space (as YCSB's
+/// ScrambledZipfianGenerator does) so hot keys aren't adjacent.
+#[derive(Clone, Debug)]
+pub struct ScrambledZipfian {
+    inner: Zipfian,
+}
+
+impl ScrambledZipfian {
+    pub fn new(n: u64, theta: f64) -> Self {
+        ScrambledZipfian { inner: Zipfian::new(n, theta) }
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> u64 {
+        let rank = self.inner.sample(rng);
+        // FNV-style hash scatter, then fold into range.
+        let mut h = rank.wrapping_mul(0xC6A4A7935BD1E995);
+        h ^= h >> 47;
+        h = h.wrapping_mul(0xC6A4A7935BD1E995);
+        h % self.inner.n()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = Rng::new(43);
+        assert_ne!(a.next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn uniform_range() {
+        let mut r = Rng::new(1);
+        for _ in 0..10_000 {
+            let v = r.below(10);
+            assert!(v < 10);
+            let f = r.f64();
+            assert!((0.0..1.0).contains(&f));
+            let g = r.range(5, 8);
+            assert!((5..8).contains(&g));
+        }
+    }
+
+    #[test]
+    fn uniform_mean() {
+        let mut r = Rng::new(7);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| r.f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(9);
+        let n = 100_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal(3.0, 2.0)).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!((mean - 3.0).abs() < 0.05, "mean={mean}");
+        assert!((var - 4.0).abs() < 0.15, "var={var}");
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut r = Rng::new(11);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| r.exponential(4.0)).sum::<f64>() / n as f64;
+        assert!((mean - 0.25).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn zipfian_skew() {
+        let z = Zipfian::new(1000, 0.7);
+        let mut r = Rng::new(5);
+        let mut counts = vec![0u64; 1000];
+        let n = 200_000;
+        for _ in 0..n {
+            counts[z.sample(&mut r) as usize] += 1;
+        }
+        // Rank 0 should dominate; top-10 should hold a large share.
+        assert!(counts[0] > counts[100] * 5);
+        let top10: u64 = counts[..10].iter().sum();
+        assert!(top10 as f64 / n as f64 > 0.15, "top10 share {}", top10 as f64 / n as f64);
+        // All samples in range (implicitly, via indexing) and every decile hit.
+        assert!(counts.iter().filter(|&&c| c > 0).count() > 500);
+    }
+
+    #[test]
+    fn zipfian_large_n_constructs() {
+        let z = Zipfian::new(10_000_000, 0.7);
+        let mut r = Rng::new(6);
+        for _ in 0..1000 {
+            assert!(z.sample(&mut r) < 10_000_000);
+        }
+    }
+
+    #[test]
+    fn scrambled_zipfian_spreads() {
+        let z = ScrambledZipfian::new(1 << 20, 0.7);
+        let mut r = Rng::new(8);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..1000 {
+            seen.insert(z.sample(&mut r));
+        }
+        // Scrambling should scatter: many distinct keys, not clustered at 0.
+        assert!(seen.len() > 300);
+        assert!(seen.iter().any(|&k| k > (1 << 19)));
+    }
+
+    #[test]
+    fn shuffle_permutes() {
+        let mut r = Rng::new(13);
+        let mut xs: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,303 @@
+//! Streaming statistics: Welford summaries, log-bucketed latency
+//! histograms (HdrHistogram-style), and a simple latency recorder used by
+//! every experiment harness to report avg/p50/p99 rows.
+
+/// Running mean/variance/min/max (Welford's algorithm).
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+    sum: f64,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Summary { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY, sum: 0.0 }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.n += 1;
+        self.sum += x;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn merge(&mut self, other: &Summary) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n = (self.n + other.n) as f64;
+        let d = other.mean - self.mean;
+        let mean = self.mean + d * other.n as f64 / n;
+        self.m2 += other.m2 + d * d * self.n as f64 * other.n as f64 / n;
+        self.mean = mean;
+        self.n += other.n;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 { 0.0 } else { self.mean }
+    }
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 { 0.0 } else { self.m2 / (self.n - 1) as f64 }
+    }
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+    pub fn min(&self) -> f64 {
+        if self.n == 0 { 0.0 } else { self.min }
+    }
+    pub fn max(&self) -> f64 {
+        if self.n == 0 { 0.0 } else { self.max }
+    }
+}
+
+/// Log-bucketed histogram over positive values with bounded relative error
+/// (~2.4% with 32 subbuckets per octave) — constant memory, O(1) insert,
+/// O(buckets) quantiles. Values are recorded as f64 microseconds (or any
+/// positive unit).
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    /// buckets[octave][sub]
+    counts: Vec<u64>,
+    n: u64,
+    subbuckets: u32,
+    underflow: u64,
+    min_value: f64,
+}
+
+const OCTAVES: usize = 64;
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self::with_resolution(32, 1e-3)
+    }
+
+    /// `subbuckets` per power of two above `min_value`.
+    pub fn with_resolution(subbuckets: u32, min_value: f64) -> Self {
+        Histogram {
+            counts: vec![0; OCTAVES * subbuckets as usize],
+            n: 0,
+            subbuckets,
+            underflow: 0,
+            min_value,
+        }
+    }
+
+    fn index(&self, x: f64) -> Option<usize> {
+        if !(x > self.min_value) {
+            return None;
+        }
+        let r = x / self.min_value;
+        let octave = r.log2().floor() as usize;
+        if octave >= OCTAVES {
+            return Some(self.counts.len() - 1);
+        }
+        let lo = self.min_value * (1u64 << octave.min(63)) as f64;
+        let frac = (x / lo - 1.0).clamp(0.0, 0.999_999);
+        let sub = (frac * self.subbuckets as f64) as usize;
+        Some(octave * self.subbuckets as usize + sub)
+    }
+
+    fn bucket_value(&self, idx: usize) -> f64 {
+        let octave = idx / self.subbuckets as usize;
+        let sub = idx % self.subbuckets as usize;
+        let lo = self.min_value * (1u64 << octave.min(63)) as f64;
+        lo * (1.0 + (sub as f64 + 0.5) / self.subbuckets as f64)
+    }
+
+    pub fn record(&mut self, x: f64) {
+        self.n += 1;
+        match self.index(x) {
+            None => self.underflow += 1,
+            Some(i) => self.counts[i] += 1,
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.n as f64).ceil().max(1.0) as u64;
+        let mut acc = self.underflow;
+        if acc >= target {
+            return self.min_value;
+        }
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return self.bucket_value(i);
+            }
+        }
+        self.bucket_value(self.counts.len() - 1)
+    }
+
+    pub fn merge(&mut self, other: &Histogram) {
+        assert_eq!(self.subbuckets, other.subbuckets);
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.n += other.n;
+        self.underflow += other.underflow;
+    }
+}
+
+/// Latency recorder: summary + histogram, reporting in the units recorded.
+#[derive(Clone, Debug, Default)]
+pub struct LatencyRecorder {
+    pub summary: Summary,
+    pub hist: Histogram,
+}
+
+impl LatencyRecorder {
+    pub fn new() -> Self {
+        LatencyRecorder { summary: Summary::new(), hist: Histogram::new() }
+    }
+
+    pub fn record(&mut self, v: f64) {
+        self.summary.add(v);
+        self.hist.record(v);
+    }
+
+    pub fn merge(&mut self, other: &LatencyRecorder) {
+        self.summary.merge(&other.summary);
+        self.hist.merge(&other.hist);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.summary.count()
+    }
+    pub fn mean(&self) -> f64 {
+        self.summary.mean()
+    }
+    pub fn p50(&self) -> f64 {
+        self.hist.quantile(0.50)
+    }
+    pub fn p99(&self) -> f64 {
+        self.hist.quantile(0.99)
+    }
+    pub fn p999(&self) -> f64 {
+        self.hist.quantile(0.999)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn summary_moments() {
+        let mut s = Summary::new();
+        for x in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            s.add(x);
+        }
+        assert_eq!(s.count(), 8);
+        assert!((s.mean() - 5.0).abs() < 1e-12);
+        assert!((s.variance() - 32.0 / 7.0).abs() < 1e-9);
+        assert_eq!(s.min(), 2.0);
+        assert_eq!(s.max(), 9.0);
+        assert!((s.sum() - 40.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_merge_equals_sequential() {
+        let mut r = Rng::new(3);
+        let xs: Vec<f64> = (0..1000).map(|_| r.normal(10.0, 3.0)).collect();
+        let mut all = Summary::new();
+        for &x in &xs {
+            all.add(x);
+        }
+        let mut a = Summary::new();
+        let mut b = Summary::new();
+        for (i, &x) in xs.iter().enumerate() {
+            if i % 2 == 0 { a.add(x) } else { b.add(x) }
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), all.count());
+        assert!((a.mean() - all.mean()).abs() < 1e-9);
+        assert!((a.variance() - all.variance()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn histogram_quantile_accuracy() {
+        let mut h = Histogram::new();
+        let mut r = Rng::new(4);
+        let mut xs: Vec<f64> = Vec::new();
+        for _ in 0..50_000 {
+            let x = r.exponential(0.001); // mean 1000
+            h.record(x);
+            xs.push(x);
+        }
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for &q in &[0.5, 0.9, 0.99] {
+            let want = xs[((q * xs.len() as f64) as usize).min(xs.len() - 1)];
+            let got = h.quantile(q);
+            let rel = (got - want).abs() / want;
+            assert!(rel < 0.05, "q={q} got={got} want={want} rel={rel}");
+        }
+    }
+
+    #[test]
+    fn histogram_merge() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        for i in 1..=100 {
+            a.record(i as f64);
+            b.record((i * 2) as f64);
+        }
+        let n = a.count() + b.count();
+        a.merge(&b);
+        assert_eq!(a.count(), n);
+        assert!(a.quantile(1.0) >= 190.0);
+    }
+
+    #[test]
+    fn recorder_reports() {
+        let mut r = LatencyRecorder::new();
+        for i in 1..=1000 {
+            r.record(i as f64);
+        }
+        assert_eq!(r.count(), 1000);
+        assert!((r.mean() - 500.5).abs() < 1e-9);
+        assert!((r.p50() - 500.0).abs() / 500.0 < 0.05);
+        assert!((r.p99() - 990.0).abs() / 990.0 < 0.05);
+    }
+
+    #[test]
+    fn histogram_empty_and_underflow() {
+        let mut h = Histogram::new();
+        assert_eq!(h.quantile(0.5), 0.0);
+        h.record(0.0); // below min_value -> underflow bucket
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.quantile(0.5), 1e-3);
+    }
+}

@@ -1,0 +1,123 @@
+//! Fixed-capacity ring-buffer time series used for producer usage
+//! reporting (broker §5.1 keeps a sliding window of usage samples per
+//! producer that feeds the AOT forecast artifact).
+
+/// Ring buffer of the most recent `capacity` f32 samples.
+#[derive(Clone, Debug)]
+pub struct TimeSeries {
+    buf: Vec<f32>,
+    head: usize,
+    len: usize,
+}
+
+impl TimeSeries {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0);
+        TimeSeries { buf: vec![0.0; capacity], head: 0, len: 0 }
+    }
+
+    pub fn push(&mut self, v: f32) {
+        self.buf[self.head] = v;
+        self.head = (self.head + 1) % self.buf.len();
+        self.len = (self.len + 1).min(self.buf.len());
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+    pub fn capacity(&self) -> usize {
+        self.buf.len()
+    }
+    pub fn is_full(&self) -> bool {
+        self.len == self.buf.len()
+    }
+
+    pub fn last(&self) -> Option<f32> {
+        if self.len == 0 {
+            None
+        } else {
+            let idx = (self.head + self.buf.len() - 1) % self.buf.len();
+            Some(self.buf[idx])
+        }
+    }
+
+    /// Oldest-to-newest copy, padded on the LEFT with the oldest sample
+    /// (or `pad` when empty) to exactly `n` values — the fixed-shape input
+    /// the compiled forecast artifact expects.
+    pub fn window_padded(&self, n: usize, pad: f32) -> Vec<f32> {
+        let mut out = Vec::with_capacity(n);
+        let chron = self.to_vec();
+        let take = chron.len().min(n);
+        let fill = if chron.is_empty() { pad } else { chron[0] };
+        for _ in 0..(n - take) {
+            out.push(fill);
+        }
+        out.extend_from_slice(&chron[chron.len() - take..]);
+        out
+    }
+
+    /// Oldest-to-newest copy of the live samples.
+    pub fn to_vec(&self) -> Vec<f32> {
+        let cap = self.buf.len();
+        let start = (self.head + cap - self.len) % cap;
+        (0..self.len).map(|i| self.buf[(start + i) % cap]).collect()
+    }
+
+    pub fn mean(&self) -> f32 {
+        if self.len == 0 {
+            return 0.0;
+        }
+        self.to_vec().iter().sum::<f32>() / self.len as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_semantics() {
+        let mut ts = TimeSeries::new(4);
+        assert!(ts.is_empty());
+        for i in 1..=6 {
+            ts.push(i as f32);
+        }
+        assert!(ts.is_full());
+        assert_eq!(ts.to_vec(), vec![3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(ts.last(), Some(6.0));
+        assert_eq!(ts.len(), 4);
+    }
+
+    #[test]
+    fn window_padding() {
+        let mut ts = TimeSeries::new(8);
+        ts.push(5.0);
+        ts.push(7.0);
+        let w = ts.window_padded(5, 0.0);
+        assert_eq!(w, vec![5.0, 5.0, 5.0, 5.0, 7.0]);
+        let empty = TimeSeries::new(4).window_padded(3, 2.5);
+        assert_eq!(empty, vec![2.5, 2.5, 2.5]);
+    }
+
+    #[test]
+    fn window_truncates_to_recent() {
+        let mut ts = TimeSeries::new(10);
+        for i in 0..10 {
+            ts.push(i as f32);
+        }
+        assert_eq!(ts.window_padded(3, 0.0), vec![7.0, 8.0, 9.0]);
+    }
+
+    #[test]
+    fn mean() {
+        let mut ts = TimeSeries::new(3);
+        ts.push(1.0);
+        ts.push(2.0);
+        ts.push(3.0);
+        ts.push(4.0); // evicts 1.0
+        assert!((ts.mean() - 3.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,128 @@
+//! Token-bucket rate limiter (paper §4.2, "Network Rate Limiter"): the
+//! producer manager adds tokens to each consumer's bucket in proportion to
+//! its allotted bandwidth; a request larger than the available tokens is
+//! refused and the consumer notified.
+
+use crate::core::SimTime;
+
+/// Classic token bucket parameterized in bytes/second, advanced on the
+/// simulation (or wall) clock.
+#[derive(Clone, Debug)]
+pub struct TokenBucket {
+    rate_bps: f64,
+    burst_bytes: f64,
+    tokens: f64,
+    last: SimTime,
+}
+
+impl TokenBucket {
+    /// `rate_bps` bytes/second sustained; `burst_bytes` bucket depth.
+    pub fn new(rate_bps: u64, burst_bytes: u64) -> Self {
+        TokenBucket {
+            rate_bps: rate_bps as f64,
+            burst_bytes: burst_bytes as f64,
+            tokens: burst_bytes as f64,
+            last: SimTime::ZERO,
+        }
+    }
+
+    fn refill(&mut self, now: SimTime) {
+        if now > self.last {
+            let dt = (now - self.last).as_secs_f64();
+            self.tokens = (self.tokens + dt * self.rate_bps).min(self.burst_bytes);
+            self.last = now;
+        }
+    }
+
+    /// Try to admit an I/O of `bytes`; returns whether it was admitted.
+    pub fn try_consume(&mut self, now: SimTime, bytes: u64) -> bool {
+        self.refill(now);
+        if self.tokens >= bytes as f64 {
+            self.tokens -= bytes as f64;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Time until `bytes` tokens would be available (None if > burst).
+    pub fn time_until(&mut self, now: SimTime, bytes: u64) -> Option<SimTime> {
+        if bytes as f64 > self.burst_bytes {
+            return None;
+        }
+        self.refill(now);
+        if self.tokens >= bytes as f64 {
+            Some(SimTime::ZERO)
+        } else {
+            let deficit = bytes as f64 - self.tokens;
+            Some(SimTime::from_secs_f64(deficit / self.rate_bps))
+        }
+    }
+
+    pub fn available(&mut self, now: SimTime) -> u64 {
+        self.refill(now);
+        self.tokens as u64
+    }
+
+    pub fn rate_bps(&self) -> u64 {
+        self.rate_bps as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn admits_up_to_burst() {
+        let mut tb = TokenBucket::new(1000, 500);
+        let t0 = SimTime::ZERO;
+        assert!(tb.try_consume(t0, 500));
+        assert!(!tb.try_consume(t0, 1));
+    }
+
+    #[test]
+    fn refills_at_rate() {
+        let mut tb = TokenBucket::new(1000, 1000);
+        assert!(tb.try_consume(SimTime::ZERO, 1000));
+        // After 0.5s, 500 tokens back.
+        assert!(!tb.try_consume(SimTime::from_millis(500), 501));
+        assert!(tb.try_consume(SimTime::from_millis(500), 500));
+    }
+
+    #[test]
+    fn never_exceeds_burst() {
+        let mut tb = TokenBucket::new(1_000_000, 2000);
+        assert_eq!(tb.available(SimTime::from_hours(5)), 2000);
+    }
+
+    #[test]
+    fn never_over_admits() {
+        // Property: over any schedule, admitted bytes <= burst + rate * elapsed.
+        let mut tb = TokenBucket::new(10_000, 1_000);
+        let mut admitted = 0u64;
+        let mut rng = crate::util::rng::Rng::new(9);
+        let mut now = SimTime::ZERO;
+        for _ in 0..10_000 {
+            now += SimTime::from_micros(rng.below(2_000));
+            let req = rng.below(400) + 1;
+            if tb.try_consume(now, req) {
+                admitted += req;
+            }
+        }
+        let bound = 1_000.0 + 10_000.0 * now.as_secs_f64() + 1.0;
+        assert!(
+            (admitted as f64) <= bound,
+            "admitted {admitted} > bound {bound}"
+        );
+    }
+
+    #[test]
+    fn time_until_estimates() {
+        let mut tb = TokenBucket::new(1000, 1000);
+        assert!(tb.try_consume(SimTime::ZERO, 1000));
+        let wait = tb.time_until(SimTime::ZERO, 100).unwrap();
+        assert!((wait.as_secs_f64() - 0.1).abs() < 1e-6);
+        assert_eq!(tb.time_until(SimTime::ZERO, 5000), None);
+    }
+}

@@ -1,0 +1,374 @@
+//! Producer application models — the six workloads of Table 1 (§7),
+//! each modeled as a page-access process over a [`GuestMemory`] with a
+//! per-op base service time. An app has a *hot* region (Zipfian accesses),
+//! a *warm* region (uniform, infrequent), and an *idle* region (allocated
+//! but touched with tiny probability) — matching the paper's observation
+//! that a large fraction of allocated memory is idle and harvestable.
+//!
+//! The model produces the paper's qualitative shapes: harvesting
+//! unallocated + idle memory is nearly free; harvesting into the warm
+//! region costs a little; harvesting hot pages hits a performance cliff
+//! (Fig 3), which Silo flattens (Fig 6).
+
+use crate::core::{SimTime, GIB, MIB};
+use crate::mem::{AccessOutcome, GuestMemory, SwapDevice};
+use crate::util::rng::{Rng, Zipfian};
+use crate::util::stats::LatencyRecorder;
+
+/// The six producer applications from the paper's evaluation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum AppKind {
+    Redis,
+    Memcached,
+    Mysql,
+    Xgboost,
+    Storm,
+    CloudSuite,
+}
+
+impl AppKind {
+    pub const ALL: [AppKind; 6] = [
+        AppKind::Redis,
+        AppKind::Memcached,
+        AppKind::Mysql,
+        AppKind::Xgboost,
+        AppKind::Storm,
+        AppKind::CloudSuite,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            AppKind::Redis => "Redis",
+            AppKind::Memcached => "memcached",
+            AppKind::Mysql => "MySQL",
+            AppKind::Xgboost => "XGBoost",
+            AppKind::Storm => "Storm",
+            AppKind::CloudSuite => "CloudSuite",
+        }
+    }
+}
+
+/// Statistical description of one producer application.
+#[derive(Clone, Debug)]
+pub struct AppModel {
+    pub kind: AppKind,
+    /// Rightsized VM DRAM (paper §7 "VM Rightsizing").
+    pub vm_bytes: u64,
+    /// Application allocated footprint.
+    pub footprint_bytes: u64,
+    /// Fraction of the footprint that is hot (Zipf-accessed).
+    pub hot_fraction: f64,
+    /// Fraction of the footprint that is warm (uniform, occasional).
+    pub warm_fraction: f64,
+    /// Probability an access lands in the warm region.
+    pub warm_access_prob: f64,
+    /// Probability an access lands in the idle region.
+    pub idle_access_prob: f64,
+    /// Zipf skew within the hot region.
+    pub zipf_theta: f64,
+    /// Operations per second.
+    pub ops_per_sec: f64,
+    /// Pages touched per operation.
+    pub pages_per_op: u32,
+    /// Base (fault-free) mean op latency, µs.
+    pub base_latency_us: f64,
+}
+
+impl AppModel {
+    /// Presets matched to the paper's rightsized VMs (§7 "VM Rightsizing")
+    /// and Table 1 harvest/idle profiles.
+    pub fn preset(kind: AppKind) -> AppModel {
+        match kind {
+            // M5n.Large 8 GB; Zipf 0.7 over a ~4.5 GB dataset; Table 1:
+            // 3.8 GB harvested, 17.4% of app memory, 0.0% loss.
+            AppKind::Redis => AppModel {
+                kind,
+                vm_bytes: 8 * GIB,
+                footprint_bytes: 4 * GIB + 512 * MIB,
+                hot_fraction: 0.35,
+                warm_fraction: 0.35,
+                warm_access_prob: 0.05,
+                idle_access_prob: 0.0005,
+                zipf_theta: 0.7,
+                ops_per_sec: 20_000.0,
+                pages_per_op: 1,
+                base_latency_us: 80.0,
+            },
+            // M5n.2xLarge 32 GB; MemCachier-like skew: huge idle tail
+            // (Table 1: 51.4% of harvest was idle memory).
+            AppKind::Memcached => AppModel {
+                kind,
+                vm_bytes: 32 * GIB,
+                footprint_bytes: 26 * GIB,
+                hot_fraction: 0.12,
+                warm_fraction: 0.25,
+                warm_access_prob: 0.04,
+                idle_access_prob: 0.0002,
+                zipf_theta: 0.85,
+                ops_per_sec: 30_000.0,
+                pages_per_op: 1,
+                base_latency_us: 820.0,
+            },
+            // C6g.2xLarge 16 GB; buffer-pool locality.
+            AppKind::Mysql => AppModel {
+                kind,
+                vm_bytes: 16 * GIB,
+                footprint_bytes: 12 * GIB,
+                hot_fraction: 0.25,
+                warm_fraction: 0.30,
+                warm_access_prob: 0.08,
+                idle_access_prob: 0.001,
+                zipf_theta: 0.75,
+                ops_per_sec: 5_000.0,
+                pages_per_op: 4,
+                base_latency_us: 1570.0,
+            },
+            // M5n.2xLarge 32 GB; training sweeps a working set but leaves
+            // loaded data idle between epochs (18.3 GB harvested!).
+            AppKind::Xgboost => AppModel {
+                kind,
+                vm_bytes: 32 * GIB,
+                footprint_bytes: 24 * GIB,
+                hot_fraction: 0.15,
+                warm_fraction: 0.15,
+                warm_access_prob: 0.10,
+                idle_access_prob: 0.0001,
+                zipf_theta: 0.55,
+                ops_per_sec: 50.0,
+                pages_per_op: 256,
+                base_latency_us: 20_000.0,
+            },
+            // C6g.xLarge 8 GB; streaming: small working set, everything hot.
+            AppKind::Storm => AppModel {
+                kind,
+                vm_bytes: 8 * GIB,
+                footprint_bytes: 4 * GIB,
+                hot_fraction: 0.70,
+                warm_fraction: 0.25,
+                warm_access_prob: 0.25,
+                idle_access_prob: 0.01,
+                zipf_theta: 0.60,
+                ops_per_sec: 10_000.0,
+                pages_per_op: 2,
+                base_latency_us: 5330.0,
+            },
+            // C6g.Large 4 GB; web serving with memcached+MySQL behind it.
+            AppKind::CloudSuite => AppModel {
+                kind,
+                vm_bytes: 4 * GIB,
+                footprint_bytes: 3 * GIB,
+                hot_fraction: 0.30,
+                warm_fraction: 0.40,
+                warm_access_prob: 0.12,
+                idle_access_prob: 0.002,
+                zipf_theta: 0.70,
+                ops_per_sec: 8_000.0,
+                pages_per_op: 2,
+                base_latency_us: 900.0,
+            },
+        }
+    }
+
+    pub fn idle_fraction(&self) -> f64 {
+        1.0 - self.hot_fraction - self.warm_fraction
+    }
+}
+
+/// Couples an [`AppModel`] to a [`GuestMemory`] and generates timed page
+/// accesses, producing per-epoch latency summaries — the producer-side
+/// "application" whose performance the harvester monitors.
+pub struct AppRunner {
+    pub model: AppModel,
+    pub memory: GuestMemory,
+    zipf: Zipfian,
+    rng: Rng,
+    hot_pages: u32,
+    warm_pages: u32,
+    /// Max ops simulated per epoch; real op count is scaled statistically.
+    pub ops_cap_per_epoch: u32,
+    /// Burst mode: accesses become uniform over the whole footprint
+    /// (the paper's Zipf -> uniform workload shift, Fig 8).
+    uniform_burst: bool,
+}
+
+impl AppRunner {
+    pub fn new(
+        model: AppModel,
+        page_bytes: u64,
+        device: SwapDevice,
+        silo_cooling: Option<SimTime>,
+        seed: u64,
+    ) -> Self {
+        let memory = GuestMemory::new(
+            model.vm_bytes,
+            model.footprint_bytes,
+            page_bytes,
+            device,
+            silo_cooling,
+            seed,
+        );
+        let total_pages = memory.app_pages();
+        let hot_pages = ((total_pages as f64) * model.hot_fraction).max(1.0) as u32;
+        let warm_pages = ((total_pages as f64) * model.warm_fraction) as u32;
+        let zipf = Zipfian::new(hot_pages as u64, model.zipf_theta.min(0.99));
+        AppRunner {
+            model,
+            memory,
+            zipf,
+            rng: Rng::new(seed ^ 0x9E37_79B9_7F4A_7C15),
+            hot_pages,
+            warm_pages,
+            ops_cap_per_epoch: 2_000,
+            uniform_burst: false,
+        }
+    }
+
+    /// Shift the access pattern to uniform over the entire footprint
+    /// (Fig 8's burst protocol). Call `end_burst` to revert.
+    pub fn set_distribution_uniform(&mut self) {
+        self.uniform_burst = true;
+    }
+    pub fn end_burst(&mut self) {
+        self.uniform_burst = false;
+    }
+
+    fn next_page(&mut self) -> u32 {
+        let total = self.memory.app_pages();
+        if self.uniform_burst {
+            return self.rng.below(total as u64) as u32;
+        }
+        let r = self.rng.f64();
+        if r < self.model.idle_access_prob {
+            // Idle region.
+            let idle_start = self.hot_pages + self.warm_pages;
+            if idle_start < total {
+                return idle_start + self.rng.below((total - idle_start) as u64) as u32;
+            }
+        } else if r < self.model.idle_access_prob + self.model.warm_access_prob
+            && self.warm_pages > 0
+        {
+            return self.hot_pages + self.rng.below(self.warm_pages as u64) as u32;
+        }
+        self.zipf.sample(&mut self.rng) as u32
+    }
+
+    /// Simulate one monitoring epoch of `duration` ending at `now`.
+    /// Returns (mean latency µs, ops simulated, recorder).
+    pub fn run_epoch(&mut self, now: SimTime, duration: SimTime) -> LatencyRecorder {
+        let ops_real = (self.model.ops_per_sec * duration.as_secs_f64()).max(1.0);
+        let ops_sim = (ops_real as u32).min(self.ops_cap_per_epoch).max(1);
+        let mut rec = LatencyRecorder::new();
+        for _ in 0..ops_sim {
+            let mut latency = self.model.base_latency_us;
+            for _ in 0..self.model.pages_per_op {
+                let page = self.next_page();
+                let outcome = self.memory.access(page, now);
+                latency += match outcome {
+                    AccessOutcome::Hit => 0.0,
+                    AccessOutcome::SiloHit => 5.0,
+                    AccessOutcome::DiskFault => {
+                        self.memory.device().read_latency().as_micros() as f64
+                    }
+                };
+            }
+            rec.record(latency);
+        }
+        // Advance Silo cooling.
+        self.memory.tick(now);
+        rec
+    }
+
+    /// Fault-free reference latency for this model.
+    pub fn baseline_latency_us(&self) -> f64 {
+        self.model.base_latency_us
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const PAGE: u64 = 256 * 1024; // coarse pages for fast tests
+
+    fn runner(kind: AppKind) -> AppRunner {
+        AppRunner::new(
+            AppModel::preset(kind),
+            PAGE,
+            SwapDevice::Ssd,
+            Some(SimTime::from_secs(60)),
+            42,
+        )
+    }
+
+    #[test]
+    fn presets_sane() {
+        for kind in AppKind::ALL {
+            let m = AppModel::preset(kind);
+            assert!(m.footprint_bytes <= m.vm_bytes, "{kind:?}");
+            assert!(m.hot_fraction + m.warm_fraction < 1.0, "{kind:?}");
+            assert!(m.idle_fraction() > 0.0, "{kind:?}");
+            assert!(m.ops_per_sec > 0.0 && m.base_latency_us > 0.0);
+        }
+    }
+
+    #[test]
+    fn unharvested_run_has_baseline_latency() {
+        let mut r = runner(AppKind::Redis);
+        let rec = r.run_epoch(SimTime::from_secs(1), SimTime::from_secs(1));
+        assert!(rec.count() > 0);
+        // Fully resident: no faults, mean == base latency.
+        assert!((rec.mean() - r.baseline_latency_us()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn harvesting_idle_memory_is_cheap_hot_memory_is_not() {
+        // Harvest to just above the hot+warm set: minimal impact.
+        let mut gentle = runner(AppKind::Redis);
+        let keep = (gentle.model.footprint_bytes as f64 * 0.8) as u64;
+        gentle.memory.set_cgroup_limit(keep, SimTime::ZERO);
+        let mut gentle_lat = 0.0;
+        for ep in 1..=20 {
+            let rec = gentle.run_epoch(SimTime::from_secs(ep * 120), SimTime::from_secs(5));
+            gentle_lat = rec.mean();
+        }
+
+        // Harvest deep into the hot set: latency blows up.
+        let mut harsh = runner(AppKind::Redis);
+        let keep = (harsh.model.footprint_bytes as f64 * 0.10) as u64;
+        harsh.memory.set_cgroup_limit(keep, SimTime::ZERO);
+        let mut harsh_lat = 0.0;
+        for ep in 1..=20 {
+            let rec = harsh.run_epoch(SimTime::from_secs(ep * 120), SimTime::from_secs(5));
+            harsh_lat = rec.mean();
+        }
+        let base = AppModel::preset(AppKind::Redis).base_latency_us;
+        assert!(
+            gentle_lat < base * 1.25,
+            "gentle harvest too costly: {gentle_lat:.1}µs vs base {base:.1}µs"
+        );
+        assert!(
+            harsh_lat > gentle_lat * 1.2,
+            "cliff missing: gentle {gentle_lat:.1}µs harsh {harsh_lat:.1}µs"
+        );
+    }
+
+    #[test]
+    fn access_pattern_regions() {
+        let mut r = runner(AppKind::Memcached);
+        let hot = r.hot_pages;
+        let warm = r.warm_pages;
+        let mut hot_n = 0u64;
+        let mut idle_n = 0u64;
+        let n = 100_000;
+        for _ in 0..n {
+            let p = r.next_page();
+            if p < hot {
+                hot_n += 1;
+            } else if p >= hot + warm {
+                idle_n += 1;
+            }
+        }
+        assert!(hot_n as f64 / n as f64 > 0.9);
+        assert!((idle_n as f64 / n as f64) < 0.001);
+    }
+}

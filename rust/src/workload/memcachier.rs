@@ -1,0 +1,201 @@
+//! Synthetic MemCachier application population (Fig 12/15, §7.4).
+//!
+//! The paper samples 36 applications from the MemCachier commercial trace
+//! and uses their miss-ratio curves (MRCs) to drive consumer purchasing.
+//! We generate an MRC library whose curve *family* matches Fig 15: a mix
+//! of (a) smooth concave curves (Zipf-like reuse), (b) cliff curves that
+//! drop sharply once the working set fits, and (c) flat/streaming curves
+//! that barely benefit from cache.
+
+use crate::util::rng::Rng;
+
+/// One application's miss-ratio curve, sampled at `granularity_bytes`
+/// increments of cache size.
+#[derive(Clone, Debug)]
+pub struct Mrc {
+    pub app_id: u32,
+    /// miss_ratio[s] = expected miss ratio with s*granularity bytes of cache.
+    pub miss_ratio: Vec<f64>,
+    pub granularity_bytes: u64,
+    /// Request rate (ops/sec) for hit-value computation.
+    pub req_rate: f64,
+}
+
+impl Mrc {
+    /// Miss ratio at an arbitrary cache size (linear interpolation).
+    pub fn at_bytes(&self, bytes: u64) -> f64 {
+        let pos = bytes as f64 / self.granularity_bytes as f64;
+        let lo = pos.floor() as usize;
+        if lo + 1 >= self.miss_ratio.len() {
+            return *self.miss_ratio.last().unwrap();
+        }
+        let frac = pos - lo as f64;
+        self.miss_ratio[lo] * (1.0 - frac) + self.miss_ratio[lo + 1] * frac
+    }
+
+    pub fn hit_ratio_at(&self, bytes: u64) -> f64 {
+        1.0 - self.at_bytes(bytes)
+    }
+
+    /// Smallest cache size achieving `target` fraction of the optimal
+    /// (full-cache) hit ratio — the paper's §7.4 consumer sizing rule
+    /// ("local memory serves at least 80% of its optimal hit ratio").
+    pub fn size_for_relative_hit_ratio(&self, target: f64) -> u64 {
+        let optimal = 1.0 - *self.miss_ratio.last().unwrap();
+        if optimal <= 0.0 {
+            return 0;
+        }
+        for (s, &mr) in self.miss_ratio.iter().enumerate() {
+            if (1.0 - mr) >= target * optimal {
+                return s as u64 * self.granularity_bytes;
+            }
+        }
+        (self.miss_ratio.len() as u64 - 1) * self.granularity_bytes
+    }
+
+    /// Extra hits/sec gained by adding `extra` bytes on top of `local`.
+    pub fn gain(&self, local: u64, extra: u64) -> f64 {
+        self.req_rate * (self.hit_ratio_at(local + extra) - self.hit_ratio_at(local)).max(0.0)
+    }
+
+    /// The extra-hit curve the demand kernel consumes: gain at
+    /// 0..n_sizes slabs of `slab_bytes` on top of `local`.
+    pub fn gain_curve(&self, local: u64, slab_bytes: u64, n_sizes: usize) -> Vec<f32> {
+        (0..n_sizes)
+            .map(|s| self.gain(local, s as u64 * slab_bytes) as f32)
+            .collect()
+    }
+}
+
+/// Library of synthetic MemCachier-like MRCs.
+pub struct MrcLibrary {
+    pub mrcs: Vec<Mrc>,
+}
+
+impl MrcLibrary {
+    /// The paper's 36-app population.
+    pub fn paper_population(seed: u64) -> Self {
+        Self::generate(36, seed)
+    }
+
+    pub fn generate(n_apps: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let granularity = 64 << 20; // one slab
+        let points = 129; // 0..8 GB in 64 MB steps
+        let mut mrcs = Vec::with_capacity(n_apps);
+        for app_id in 0..n_apps {
+            let shape = rng.below(10);
+            let footprint_slabs = rng.uniform(8.0, 120.0);
+            let req_rate = rng.uniform(50.0, 8_000.0);
+            let floor = rng.uniform(0.0, 0.15); // compulsory misses
+            let miss_ratio: Vec<f64> = (0..points)
+                .map(|s| {
+                    let x = s as f64 / footprint_slabs;
+                    let mr = match shape {
+                        // Smooth concave (Zipf-like): most MemCachier apps.
+                        0..=5 => {
+                            let alpha = rng.uniform(0.35, 0.8);
+                            (1.0 - x.min(1.0).powf(alpha)).max(0.0)
+                        }
+                        // Cliff at the working set.
+                        6 | 7 => {
+                            if x >= 1.0 {
+                                0.0
+                            } else {
+                                1.0 - 0.3 * x
+                            }
+                        }
+                        // Two-knee curve.
+                        8 => {
+                            if x < 0.3 {
+                                1.0 - 1.5 * x
+                            } else if x < 1.0 {
+                                0.55 - 0.55 * (x - 0.3) / 0.7
+                            } else {
+                                0.0
+                            }
+                        }
+                        // Streaming / scan-heavy: cache barely helps.
+                        _ => 1.0 - 0.15 * x.min(1.0),
+                    };
+                    (mr * (1.0 - floor) + floor).clamp(0.0, 1.0)
+                })
+                .collect();
+            // Enforce monotone non-increasing (MRC property).
+            let mut mono = miss_ratio.clone();
+            for i in 1..mono.len() {
+                if mono[i] > mono[i - 1] {
+                    mono[i] = mono[i - 1];
+                }
+            }
+            mrcs.push(Mrc {
+                app_id: app_id as u32,
+                miss_ratio: mono,
+                granularity_bytes: granularity,
+                req_rate,
+            });
+        }
+        MrcLibrary { mrcs }
+    }
+
+    pub fn sample<'a>(&'a self, rng: &mut Rng) -> &'a Mrc {
+        rng.choose(&self.mrcs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mrcs_monotone_nonincreasing() {
+        let lib = MrcLibrary::paper_population(1);
+        assert_eq!(lib.mrcs.len(), 36);
+        for mrc in &lib.mrcs {
+            for w in mrc.miss_ratio.windows(2) {
+                assert!(w[1] <= w[0] + 1e-12, "app {} not monotone", mrc.app_id);
+            }
+            assert!(mrc.miss_ratio[0] > 0.5, "zero-size cache should miss a lot");
+        }
+    }
+
+    #[test]
+    fn interpolation() {
+        let mrc = Mrc {
+            app_id: 0,
+            miss_ratio: vec![1.0, 0.5, 0.25],
+            granularity_bytes: 100,
+            req_rate: 1000.0,
+        };
+        assert!((mrc.at_bytes(0) - 1.0).abs() < 1e-12);
+        assert!((mrc.at_bytes(50) - 0.75).abs() < 1e-12);
+        assert!((mrc.at_bytes(100) - 0.5).abs() < 1e-12);
+        assert!((mrc.at_bytes(10_000) - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sizing_rule() {
+        let mrc = Mrc {
+            app_id: 0,
+            miss_ratio: vec![1.0, 0.6, 0.3, 0.1, 0.1],
+            granularity_bytes: 100,
+            req_rate: 1.0,
+        };
+        // optimal hit = 0.9; 80% of optimal = 0.72 -> needs mr <= 0.28 -> s=3.
+        assert_eq!(mrc.size_for_relative_hit_ratio(0.8), 300);
+        assert_eq!(mrc.size_for_relative_hit_ratio(0.0), 0);
+    }
+
+    #[test]
+    fn gain_curve_concave_increasing() {
+        let lib = MrcLibrary::paper_population(3);
+        for mrc in &lib.mrcs {
+            let local = mrc.size_for_relative_hit_ratio(0.8);
+            let curve = mrc.gain_curve(local, 64 << 20, 64);
+            assert_eq!(curve[0], 0.0);
+            for w in curve.windows(2) {
+                assert!(w[1] >= w[0] - 1e-6, "gain must be non-decreasing");
+            }
+        }
+    }
+}

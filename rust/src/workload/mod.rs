@@ -1,0 +1,21 @@
+//! Workload and trace generators.
+//!
+//! The paper's evaluation drives Memtrade with (a) YCSB over Redis for
+//! consumers, (b) six producer applications (Redis, memcached, MySQL,
+//! XGBoost, Storm, CloudSuite), (c) Google/Alibaba/Snowflake cluster
+//! traces, (d) the MemCachier commercial trace, and (e) AWS spot price
+//! history. None of those proprietary inputs are available here, so each
+//! has a from-scratch synthetic generator statistically shaped to the
+//! published aggregate behaviour (see DESIGN.md §Substitutions).
+
+pub mod apps;
+pub mod cluster_trace;
+pub mod memcachier;
+pub mod spot;
+pub mod ycsb;
+
+pub use apps::{AppKind, AppModel, AppRunner};
+pub use cluster_trace::{ClusterTrace, MachineClass};
+pub use memcachier::MrcLibrary;
+pub use spot::SpotPriceSeries;
+pub use ycsb::{KeyDistribution, Op, YcsbWorkload};

@@ -1,0 +1,105 @@
+//! Synthetic AWS-spot-style price series (Fig 13 uses the historical
+//! r3.large price in us-east-2b; we generate a mean-reverting series with
+//! occasional demand spikes around that instance's typical price band).
+
+use crate::core::Money;
+use crate::util::rng::Rng;
+
+/// Mean-reverting (Ornstein-Uhlenbeck-style) price series with jumps.
+#[derive(Clone, Debug)]
+pub struct SpotPriceSeries {
+    /// $/hour for the whole instance at each step.
+    pub prices: Vec<f64>,
+    /// Instance memory, GB (r3.large = 15.25 GB).
+    pub instance_gb: f64,
+}
+
+impl SpotPriceSeries {
+    /// r3.large-like series: on-demand ~$0.166/h, spot hovering ~$0.04/h.
+    pub fn r3_large(n_steps: usize, seed: u64) -> Self {
+        Self::generate(n_steps, 0.040, 0.015, 0.166, 15.25, seed)
+    }
+
+    /// `mean`: long-run spot price; `vol`: step volatility scale;
+    /// `cap`: on-demand ceiling; `instance_gb`: instance memory.
+    pub fn generate(
+        n_steps: usize,
+        mean: f64,
+        vol: f64,
+        cap: f64,
+        instance_gb: f64,
+        seed: u64,
+    ) -> Self {
+        let mut rng = Rng::new(seed);
+        let mut p = mean;
+        let mut prices = Vec::with_capacity(n_steps);
+        let mut spike_left = 0usize;
+        let mut spike_mult = 1.0;
+        for _ in 0..n_steps {
+            // OU pull toward the mean + noise.
+            p += 0.1 * (mean - p) + rng.normal(0.0, vol * 0.1);
+            // Occasional demand spikes (interrupted capacity).
+            if spike_left == 0 && rng.chance(0.01) {
+                spike_left = rng.range(2, 12) as usize;
+                spike_mult = rng.uniform(1.5, 3.5);
+            }
+            let effective = if spike_left > 0 {
+                spike_left -= 1;
+                p * spike_mult
+            } else {
+                p
+            };
+            prices.push(effective.clamp(mean * 0.25, cap));
+        }
+        SpotPriceSeries { prices, instance_gb }
+    }
+
+    /// Spot price normalized per GB·hour at step `t`.
+    pub fn per_gb_hour(&self, t: usize) -> Money {
+        let p = self.prices[t.min(self.prices.len() - 1)];
+        Money::from_dollars(p / self.instance_gb)
+    }
+
+    pub fn len(&self) -> usize {
+        self.prices.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.prices.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stays_in_band() {
+        let s = SpotPriceSeries::r3_large(2000, 5);
+        for &p in &s.prices {
+            assert!(p >= 0.01 && p <= 0.166, "price {p} out of band");
+        }
+        let mean: f64 = s.prices.iter().sum::<f64>() / s.prices.len() as f64;
+        assert!((0.02..0.09).contains(&mean), "mean {mean}");
+    }
+
+    #[test]
+    fn has_spikes() {
+        let s = SpotPriceSeries::r3_large(5000, 6);
+        let mean: f64 = s.prices.iter().sum::<f64>() / s.prices.len() as f64;
+        let peak = s.prices.iter().cloned().fold(0.0f64, f64::max);
+        assert!(peak > mean * 1.8, "no spikes: peak {peak} mean {mean}");
+    }
+
+    #[test]
+    fn per_gb_normalization() {
+        let s = SpotPriceSeries { prices: vec![0.1525], instance_gb: 15.25 };
+        assert!((s.per_gb_hour(0).as_dollars() - 0.01).abs() < 1e-9);
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = SpotPriceSeries::r3_large(100, 9);
+        let b = SpotPriceSeries::r3_large(100, 9);
+        assert_eq!(a.prices, b.prices);
+    }
+}

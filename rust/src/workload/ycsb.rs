@@ -1,0 +1,181 @@
+//! YCSB-style workload generator (paper §7: YCSB on Redis, Zipfian
+//! constant 0.7, 95% reads / 5% updates; burst experiments shift the
+//! distribution to uniform mid-run).
+
+use crate::util::rng::{Rng, ScrambledZipfian};
+
+/// Key-popularity distribution.
+#[derive(Clone, Debug)]
+pub enum KeyDistribution {
+    Zipfian(f64),
+    Uniform,
+    /// Hotspot: `hot_fraction` of ops target `hot_set_fraction` of keys.
+    Hotspot { hot_set_fraction: f64, hot_op_fraction: f64 },
+}
+
+/// One generated operation.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Op {
+    Read { key: u64 },
+    Update { key: u64, value_size: usize },
+}
+
+impl Op {
+    pub fn key(&self) -> u64 {
+        match self {
+            Op::Read { key } | Op::Update { key, .. } => *key,
+        }
+    }
+    pub fn is_read(&self) -> bool {
+        matches!(self, Op::Read { .. })
+    }
+}
+
+/// YCSB-like generator.
+pub struct YcsbWorkload {
+    n_keys: u64,
+    read_fraction: f64,
+    value_size: usize,
+    dist: KeyDistribution,
+    zipf: Option<ScrambledZipfian>,
+}
+
+impl YcsbWorkload {
+    /// The paper's consumer workload: Zipf 0.7, 95% reads.
+    pub fn paper_default(n_keys: u64, value_size: usize) -> Self {
+        Self::new(n_keys, value_size, 0.95, KeyDistribution::Zipfian(0.7))
+    }
+
+    pub fn new(
+        n_keys: u64,
+        value_size: usize,
+        read_fraction: f64,
+        dist: KeyDistribution,
+    ) -> Self {
+        let zipf = match &dist {
+            KeyDistribution::Zipfian(theta) => Some(ScrambledZipfian::new(n_keys, *theta)),
+            _ => None,
+        };
+        YcsbWorkload { n_keys, read_fraction, value_size, dist, zipf }
+    }
+
+    pub fn n_keys(&self) -> u64 {
+        self.n_keys
+    }
+    pub fn value_size(&self) -> usize {
+        self.value_size
+    }
+
+    /// Switch distribution mid-run (the paper's burst experiment flips
+    /// Zipf -> uniform after one hour).
+    pub fn set_distribution(&mut self, dist: KeyDistribution) {
+        self.zipf = match &dist {
+            KeyDistribution::Zipfian(theta) => {
+                Some(ScrambledZipfian::new(self.n_keys, *theta))
+            }
+            _ => None,
+        };
+        self.dist = dist;
+    }
+
+    pub fn next_key(&self, rng: &mut Rng) -> u64 {
+        match &self.dist {
+            KeyDistribution::Zipfian(_) => self.zipf.as_ref().unwrap().sample(rng),
+            KeyDistribution::Uniform => rng.below(self.n_keys),
+            KeyDistribution::Hotspot { hot_set_fraction, hot_op_fraction } => {
+                let hot_keys = ((self.n_keys as f64) * hot_set_fraction).max(1.0) as u64;
+                if rng.chance(*hot_op_fraction) {
+                    rng.below(hot_keys)
+                } else {
+                    hot_keys + rng.below((self.n_keys - hot_keys).max(1))
+                }
+            }
+        }
+    }
+
+    pub fn next_op(&self, rng: &mut Rng) -> Op {
+        let key = self.next_key(rng);
+        if rng.chance(self.read_fraction) {
+            Op::Read { key }
+        } else {
+            Op::Update { key, value_size: self.value_size }
+        }
+    }
+
+    /// Encode a key the way YCSB does ("user" + number).
+    pub fn key_bytes(key: u64) -> Vec<u8> {
+        format!("user{key}").into_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn read_write_mix() {
+        let w = YcsbWorkload::paper_default(10_000, 1024);
+        let mut rng = Rng::new(1);
+        let n = 100_000;
+        let reads = (0..n).filter(|_| w.next_op(&mut rng).is_read()).count();
+        let frac = reads as f64 / n as f64;
+        assert!((frac - 0.95).abs() < 0.01, "read fraction {frac}");
+    }
+
+    #[test]
+    fn zipfian_keys_skewed() {
+        let w = YcsbWorkload::paper_default(1000, 100);
+        let mut rng = Rng::new(2);
+        let mut counts = vec![0u64; 1000];
+        for _ in 0..100_000 {
+            counts[w.next_key(&mut rng) as usize] += 1;
+        }
+        counts.sort_unstable_by(|a, b| b.cmp(a));
+        let top_decile: u64 = counts[..100].iter().sum();
+        assert!(top_decile > 40_000, "zipf top decile {top_decile}");
+    }
+
+    #[test]
+    fn uniform_keys_flat() {
+        let w = YcsbWorkload::new(1000, 100, 1.0, KeyDistribution::Uniform);
+        let mut rng = Rng::new(3);
+        let mut counts = vec![0u64; 1000];
+        for _ in 0..100_000 {
+            counts[w.next_key(&mut rng) as usize] += 1;
+        }
+        let max = *counts.iter().max().unwrap() as f64;
+        let min = *counts.iter().min().unwrap() as f64;
+        assert!(max / min < 2.5, "uniform spread {max}/{min}");
+    }
+
+    #[test]
+    fn distribution_shift() {
+        let mut w = YcsbWorkload::paper_default(1000, 100);
+        let mut rng = Rng::new(4);
+        w.set_distribution(KeyDistribution::Uniform);
+        let mut counts = vec![0u64; 1000];
+        for _ in 0..50_000 {
+            counts[w.next_key(&mut rng) as usize] += 1;
+        }
+        let max = *counts.iter().max().unwrap();
+        assert!(max < 150, "after shift still skewed: {max}");
+    }
+
+    #[test]
+    fn hotspot() {
+        let w = YcsbWorkload::new(
+            1000,
+            100,
+            1.0,
+            KeyDistribution::Hotspot { hot_set_fraction: 0.1, hot_op_fraction: 0.9 },
+        );
+        let mut rng = Rng::new(5);
+        let hot = (0..100_000).filter(|_| w.next_key(&mut rng) < 100).count();
+        assert!((hot as f64 / 100_000.0 - 0.9).abs() < 0.02);
+    }
+
+    #[test]
+    fn key_encoding() {
+        assert_eq!(YcsbWorkload::key_bytes(42), b"user42".to_vec());
+    }
+}

@@ -1,0 +1,214 @@
+//! Cross-module integration tests: the full producer/broker/consumer
+//! composition, the TCP request path, lease lifecycle under reclaim, and
+//! the experiment harnesses end to end.
+
+use memtrade::broker::placement::ConsumerRequest;
+use memtrade::broker::predictor::AvailabilityPredictor;
+use memtrade::broker::pricing::{PricingEngine, PricingStrategy};
+use memtrade::broker::Broker;
+use memtrade::consumer::client::SecureKv;
+use memtrade::core::config::{BrokerConfig, HarvesterConfig};
+use memtrade::core::{ConsumerId, Money, ProducerId, SimTime, GIB};
+use memtrade::mem::SwapDevice;
+use memtrade::net::tcp::{KvClient, ProducerStoreServer};
+use memtrade::net::wire::{Request, Response};
+use memtrade::producer::Producer;
+use memtrade::sim::cluster::{ClusterSim, ClusterSimConfig, ConsumerMode};
+use memtrade::workload::apps::{AppKind, AppModel, AppRunner};
+
+fn make_producer(kind: AppKind, seed: u64) -> Producer {
+    let app = AppRunner::new(
+        AppModel::preset(kind),
+        16 << 20,
+        SwapDevice::Ssd,
+        Some(SimTime::from_mins(5)),
+        seed,
+    );
+    Producer::new(ProducerId(seed), app, HarvesterConfig::default(), 64 << 20)
+}
+
+#[test]
+fn full_stack_lease_and_serve() {
+    // Producer harvests; broker grants; consumer stores and reads back
+    // with real crypto through the manager, while the producer keeps
+    // running its own workload.
+    let mut producer = make_producer(AppKind::Redis, 1);
+    let epoch = SimTime::from_secs(5);
+    let mut now = SimTime::ZERO;
+    for e in 1..=240u64 {
+        now = SimTime::from_micros(e * epoch.as_micros());
+        producer.tick(now, epoch);
+    }
+    assert!(producer.manager.harvestable_bytes() > GIB);
+
+    let mut broker = Broker::new(
+        BrokerConfig::default(),
+        AvailabilityPredictor::fallback(288, 12),
+        PricingEngine::new(PricingStrategy::FixedFraction, Money::from_dollars(1e-5), 2e-5),
+    );
+    broker.registry.register_producer(producer.id, 8.0);
+    let rss_gb = producer.app.memory.shape().rss as f32 / GIB as f32;
+    for t in 0..288u64 {
+        broker.registry.report_usage(producer.id, SimTime::from_secs(t * 300), rss_gb);
+    }
+    broker
+        .registry
+        .update_producer_resources(producer.id, producer.manager.free_slabs(), 0.9, 0.9);
+    broker.predictor.refresh(&mut broker.registry, now);
+    broker.registry.register_consumer(ConsumerId(10));
+
+    let leases = broker.request_memory(
+        now,
+        ConsumerRequest {
+            consumer: ConsumerId(10),
+            slabs: 8,
+            min_slabs: 1,
+            lease: SimTime::from_hours(1),
+            max_price_per_slab_hour: None,
+            latency_us_to: Default::default(),
+            weights: None,
+        },
+    );
+    assert!(!leases.is_empty());
+    assert!(producer.manager.grant_lease(leases[0].clone(), 1_000_000_000));
+
+    let mut secure = SecureKv::new(Some([1u8; 16]), true, 1, 5);
+    for i in 0..500u32 {
+        let mut t = |_p: u32, req: Request| -> Response {
+            producer.manager.handle(ConsumerId(10), &req, now)
+        };
+        assert!(secure.put(&mut t, format!("key{i}").as_bytes(), &vec![i as u8; 512]));
+    }
+    // Producer keeps working; its own app is unaffected.
+    let before = producer.app.baseline_latency_us();
+    for e in 241..=300u64 {
+        now = SimTime::from_micros(e * epoch.as_micros());
+        let lat = producer.tick(now, epoch);
+        assert!(lat < before * 2.0, "producer latency exploded: {lat}");
+    }
+    // Reads verify.
+    let mut hits = 0;
+    for i in 0..500u32 {
+        let mut t = |_p: u32, req: Request| -> Response {
+            producer.manager.handle(ConsumerId(10), &req, now)
+        };
+        if let Some(v) = secure.get(&mut t, format!("key{i}").as_bytes()) {
+            assert_eq!(v, vec![i as u8; 512]);
+            hits += 1;
+        }
+    }
+    assert!(hits > 450, "only {hits}/500 survived");
+}
+
+#[test]
+fn reclaim_under_pressure_evicts_consumer_data_not_producer_perf() {
+    let mut producer = make_producer(AppKind::Redis, 2);
+    let epoch = SimTime::from_secs(5);
+    let mut now = SimTime::ZERO;
+    for e in 1..=240u64 {
+        now = SimTime::from_micros(e * epoch.as_micros());
+        producer.tick(now, epoch);
+    }
+    let lease = memtrade::core::Lease {
+        id: memtrade::core::LeaseId(1),
+        consumer: ConsumerId(10),
+        producer: producer.id,
+        slabs: 16,
+        slab_bytes: 64 << 20,
+        start: now,
+        duration: SimTime::from_hours(1),
+        price_per_slab_hour: Money::from_dollars(1e-5),
+    };
+    assert!(producer.manager.grant_lease(lease, 1_000_000_000));
+    let mut secure = SecureKv::new(Some([2u8; 16]), true, 1, 6);
+    for i in 0..2000u32 {
+        let mut t = |_p: u32, req: Request| -> Response {
+            producer.manager.handle(ConsumerId(10), &req, now)
+        };
+        secure.put(&mut t, format!("k{i}").as_bytes(), &vec![0u8; 4096]);
+    }
+    let used_before = producer.manager.leased_bytes();
+
+    // Burst: the guest needs its memory back — shrink the pool far below
+    // the ~8 MB of stored consumer data so LRU eviction must fire.
+    producer.manager.set_harvestable(2 << 20, now);
+    assert!(producer.manager.leased_bytes() <= 2 << 20);
+    assert!(producer.manager.leased_bytes() < used_before);
+    // Reputation reflects the broken lease.
+    assert!(producer.manager.reputation() < 1.0);
+
+    // Consumer sees misses, not corruption.
+    let mut miss = 0;
+    for i in 0..2000u32 {
+        let mut t = |_p: u32, req: Request| -> Response {
+            producer.manager.handle(ConsumerId(10), &req, now)
+        };
+        match secure.get(&mut t, format!("k{i}").as_bytes()) {
+            Some(v) => assert_eq!(v, vec![0u8; 4096]),
+            None => miss += 1,
+        }
+    }
+    assert!(miss > 0);
+    assert_eq!(secure.stats.integrity_failures, 0);
+}
+
+#[test]
+fn tcp_secure_path_with_rate_limit() {
+    let server = ProducerStoreServer::start("127.0.0.1:0", 64 << 20, None, 5).unwrap();
+    let mut client = KvClient::connect(server.addr()).unwrap();
+    let mut secure = SecureKv::new(Some([3u8; 16]), true, 1, 7);
+    let mut t = |_p: u32, req: Request| -> Response {
+        client.call(&req).unwrap_or(Response::Error("io".into()))
+    };
+    for i in 0..200u32 {
+        assert!(secure.put(&mut t, format!("k{i}").as_bytes(), &vec![7u8; 1024]));
+    }
+    for i in 0..200u32 {
+        assert_eq!(
+            secure.get(&mut t, format!("k{i}").as_bytes()),
+            Some(vec![7u8; 1024])
+        );
+    }
+    assert_eq!(secure.stats.integrity_failures, 0);
+    server.stop();
+}
+
+#[test]
+fn cluster_sim_composes_all_layers() {
+    let mut sim = ClusterSim::new(ClusterSimConfig {
+        n_producers: 4,
+        n_consumers: 3,
+        remote_fraction: 0.3,
+        mode: ConsumerMode::Secure,
+        n_keys: 3_000,
+        value_size: 512,
+        ops_per_epoch: 60,
+        page_bytes: 32 << 20,
+        seed: 3,
+        harvest: true,
+        use_pjrt: false,
+    });
+    sim.bootstrap();
+    sim.run(SimTime::from_mins(3));
+    assert!(sim.consumer_mean_latency() > 0.0);
+    assert!(sim.leased_bytes() > 0);
+    // All consumers got leases and did work.
+    for c in &sim.consumers {
+        assert!(c.lat.count() > 0);
+    }
+}
+
+#[test]
+fn figures_quick_all_run() {
+    // Every experiment harness must at least produce its tables.
+    for id in memtrade::figures::ALL {
+        // Heavy ones are exercised by their own tests/examples; keep the
+        // integration sweep to the fast set.
+        if matches!(*id, "fig11" | "table2" | "fig10" | "predictor" | "fig8") {
+            continue;
+        }
+        let tables = memtrade::figures::run(id, true)
+            .unwrap_or_else(|e| panic!("figure {id} failed: {e}"));
+        assert!(!tables.is_empty(), "figure {id} produced no tables");
+    }
+}

@@ -1,0 +1,294 @@
+//! Property-based tests (randomized invariants; proptest is unavailable
+//! offline so generation uses the crate's own deterministic RNG across
+//! many seeds). Each property runs hundreds of randomized cases.
+
+use memtrade::broker::placement::{rank, ConsumerRequest, ProducerState};
+use memtrade::core::config::PlacementWeights;
+use memtrade::core::{ConsumerId, ProducerId, SimTime};
+use memtrade::crypto::aes::Aes128;
+use memtrade::crypto::secure::Envelope;
+use memtrade::crypto::sha256::sha256;
+use memtrade::kv::KvStore;
+use memtrade::mem::{GuestMemory, SwapDevice};
+use memtrade::runtime::arima_fallback as fb;
+use memtrade::util::avl::WindowedDist;
+use memtrade::util::rng::Rng;
+use memtrade::util::token_bucket::TokenBucket;
+
+#[test]
+fn prop_aes_round_trip_random() {
+    let mut rng = Rng::new(101);
+    for case in 0..300 {
+        let mut key = [0u8; 16];
+        let mut iv = [0u8; 16];
+        for b in key.iter_mut().chain(iv.iter_mut()) {
+            *b = rng.next_u64() as u8;
+        }
+        let len = rng.below(4096) as usize;
+        let pt: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+        let aes = Aes128::new(&key);
+        let ct = aes.cbc_encrypt(&iv, &pt);
+        assert_eq!(ct.len() % 16, 0, "case {case}");
+        assert_eq!(aes.cbc_decrypt(&iv, &ct).unwrap(), pt, "case {case}");
+        // Wrong key fails to round-trip (padding check or wrong bytes).
+        let mut bad_key = key;
+        bad_key[0] ^= 1;
+        let wrong = Aes128::new(&bad_key).cbc_decrypt(&iv, &ct);
+        assert!(wrong.is_none() || wrong.unwrap() != pt, "case {case}");
+    }
+}
+
+#[test]
+fn prop_envelope_tamper_always_detected() {
+    let mut rng = Rng::new(102);
+    for case in 0..200 {
+        let mut env = Envelope::new(Some([case as u8; 16]), true, case);
+        let len = 1 + rng.below(2048) as usize;
+        let value: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+        let sealed = env.seal(&value, 0);
+        // Flip one random bit anywhere in the producer-visible bytes.
+        let mut tampered = sealed.value_p.clone();
+        let pos = rng.below(tampered.len() as u64) as usize;
+        tampered[pos] ^= 1 << rng.below(8);
+        assert!(env.open(&tampered, &sealed.meta).is_err(), "case {case} pos {pos}");
+        // Untampered opens fine.
+        assert_eq!(env.open(&sealed.value_p, &sealed.meta).unwrap(), value);
+    }
+}
+
+#[test]
+fn prop_sha256_avalanche() {
+    let mut rng = Rng::new(103);
+    for _ in 0..100 {
+        let len = 1 + rng.below(512) as usize;
+        let data: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+        let h1 = sha256(&data);
+        let mut flipped = data.clone();
+        let pos = rng.below(len as u64) as usize;
+        flipped[pos] ^= 1;
+        let h2 = sha256(&flipped);
+        let diff_bits: u32 = h1
+            .iter()
+            .zip(&h2)
+            .map(|(a, b)| (a ^ b).count_ones())
+            .sum();
+        assert!(diff_bits > 80, "weak avalanche: {diff_bits} bits");
+    }
+}
+
+#[test]
+fn prop_kv_accounting_invariants() {
+    let mut rng = Rng::new(104);
+    for seed in 0..20 {
+        let max = (64 + rng.below(512)) as usize * 1024;
+        let mut kv = KvStore::new(max, seed);
+        for _ in 0..3000 {
+            let k = format!("key{}", rng.below(200));
+            match rng.below(4) {
+                0..=1 => {
+                    kv.put(k.as_bytes(), &vec![0u8; 1 + rng.below(3000) as usize]);
+                }
+                2 => {
+                    kv.get(k.as_bytes());
+                }
+                _ => {
+                    kv.delete(k.as_bytes());
+                }
+            }
+            assert!(kv.used_bytes() <= kv.max_bytes());
+            assert!(kv.live_bytes() <= kv.used_bytes());
+            assert!(kv.fragmentation() >= 1.0 - 1e-12);
+        }
+    }
+}
+
+#[test]
+fn prop_windowed_dist_matches_oracle() {
+    let mut rng = Rng::new(105);
+    for seed in 0..10 {
+        let window_s = 10 + rng.below(200);
+        let mut d = WindowedDist::new(SimTime::from_secs(window_s));
+        let mut log: Vec<(u64, f64)> = Vec::new();
+        for step in 0..800u64 {
+            let v = (rng.normal(50.0, 20.0) * 4.0).round() / 4.0;
+            d.insert(SimTime::from_secs(step), v);
+            log.push((step, v));
+            if step % 37 == 0 {
+                let cutoff = step.saturating_sub(window_s);
+                let mut live: Vec<f64> = log
+                    .iter()
+                    .filter(|&&(t, _)| t >= cutoff)
+                    .map(|&(_, v)| v)
+                    .collect();
+                live.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                assert_eq!(d.len(), live.len(), "seed {seed} step {step}");
+                for q in [0.0, 0.5, 0.99, 1.0] {
+                    let k = ((q * live.len() as f64).ceil() as usize)
+                        .saturating_sub(1)
+                        .min(live.len() - 1);
+                    assert_eq!(
+                        d.quantile(q).unwrap(),
+                        live[k],
+                        "seed {seed} step {step} q {q}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_token_bucket_never_over_admits() {
+    let mut rng = Rng::new(106);
+    for seed in 0..20 {
+        let rate = 1_000 + rng.below(1_000_000);
+        let burst = 100 + rng.below(100_000);
+        let mut tb = TokenBucket::new(rate, burst);
+        let mut admitted = 0u64;
+        let mut now = SimTime::ZERO;
+        for _ in 0..2_000 {
+            now += SimTime::from_micros(rng.below(5_000));
+            let req = 1 + rng.below(burst);
+            if tb.try_consume(now, req) {
+                admitted += req;
+            }
+        }
+        let bound = burst as f64 + rate as f64 * now.as_secs_f64() + 1.0;
+        assert!(admitted as f64 <= bound, "seed {seed}: {admitted} > {bound}");
+    }
+}
+
+#[test]
+fn prop_placement_never_exceeds_grantable_and_orders_by_cost() {
+    let mut rng = Rng::new(107);
+    for case in 0..200 {
+        let n = 1 + rng.below(50) as usize;
+        let states: Vec<ProducerState> = (0..n)
+            .map(|i| ProducerState {
+                producer: ProducerId(i as u64 + 1),
+                free_slabs: rng.below(256) as u32,
+                predicted_safe_slabs: rng.below(256) as u32,
+                cpu_headroom: rng.f64(),
+                bandwidth_headroom: rng.f64(),
+                latency_us: rng.below(5_000),
+                reputation: rng.f64(),
+            })
+            .collect();
+        let req = ConsumerRequest {
+            consumer: ConsumerId(1),
+            slabs: 1 + rng.below(512) as u32,
+            min_slabs: 1,
+            lease: SimTime::from_hours(1),
+            max_price_per_slab_hour: None,
+            latency_us_to: Default::default(),
+            weights: None,
+        };
+        let w = PlacementWeights::default();
+        let ranked = rank(&states, &req, &w);
+        // Every ranked producer can actually grant something.
+        for s in &ranked {
+            assert!(s.grantable_slabs() > 0, "case {case}");
+            assert!(s.grantable_slabs() <= s.free_slabs);
+            assert!(s.grantable_slabs() <= s.predicted_safe_slabs);
+        }
+        // Ordering is by non-decreasing cost.
+        let max_free = states.iter().map(|s| s.free_slabs).max().unwrap_or(0);
+        let costs: Vec<f64> = ranked
+            .iter()
+            .map(|s| memtrade::broker::placement::cost(s, &w, max_free))
+            .collect();
+        for pair in costs.windows(2) {
+            assert!(pair[0] <= pair[1] + 1e-12, "case {case}: {costs:?}");
+        }
+    }
+}
+
+#[test]
+fn prop_guest_memory_page_conservation() {
+    let mut rng = Rng::new(108);
+    for seed in 0..15 {
+        let mut g = GuestMemory::new(
+            256 << 20,
+            128 << 20,
+            1 << 20,
+            SwapDevice::Ssd,
+            Some(SimTime::from_secs(30 + rng.below(300))),
+            seed,
+        );
+        let app_pages = g.app_pages();
+        let mut now = SimTime::ZERO;
+        for _ in 0..500 {
+            now += SimTime::from_secs(rng.below(20));
+            match rng.below(5) {
+                0 => {
+                    g.set_cgroup_limit(rng.below(256 << 20), now);
+                }
+                1 => {
+                    g.disable_cgroup_limit();
+                }
+                2 => {
+                    g.prefetch(rng.below(64 << 20), now);
+                }
+                3 => {
+                    g.tick(now);
+                }
+                _ => {
+                    let p = rng.below(app_pages as u64) as u32;
+                    g.access(p, now);
+                }
+            }
+            // Conservation: every app page is exactly one of resident,
+            // in Silo, or on disk.
+            let total = g.rss_pages() + g.silo_pages() + g.disk_pages();
+            assert_eq!(total, app_pages, "seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn prop_forecast_safe_never_exceeds_capacity() {
+    let mut rng = Rng::new(109);
+    for case in 0..100 {
+        let w = 16 + rng.below(288) as usize;
+        let cap = rng.uniform(1.0, 128.0) as f32;
+        let series: Vec<f32> = (0..w)
+            .map(|_| rng.uniform(0.0, cap as f64 * 1.2) as f32)
+            .collect();
+        let r = fb::forecast_one(&series, cap, 4, 12);
+        for h in 0..12 {
+            assert!(r.pred[h] >= 0.0 && r.pred[h] <= cap, "case {case}");
+            assert!(r.safe[h] >= 0.0 && r.safe[h] <= cap, "case {case}");
+            assert!(r.safe[h] <= cap - r.pred[h] + 1e-3, "case {case}");
+        }
+        assert!(r.sigma >= 0.0);
+    }
+}
+
+#[test]
+fn prop_wire_codec_round_trip_random() {
+    use memtrade::net::wire::{Request, Response};
+    let mut rng = Rng::new(110);
+    for _ in 0..500 {
+        let klen = rng.below(64) as usize;
+        let vlen = rng.below(4096) as usize;
+        let key: Vec<u8> = (0..klen).map(|_| rng.next_u64() as u8).collect();
+        let value: Vec<u8> = (0..vlen).map(|_| rng.next_u64() as u8).collect();
+        let reqs = [
+            Request::Get { key: key.clone() },
+            Request::Put { key: key.clone(), value: value.clone() },
+            Request::Delete { key },
+            Request::Ping,
+        ];
+        for r in reqs {
+            assert_eq!(Request::decode(&r.encode()).unwrap(), r);
+        }
+        let resps = [
+            Response::Value(value),
+            Response::NotFound,
+            Response::Throttled { retry_after_us: rng.next_u64() },
+        ];
+        for r in resps {
+            assert_eq!(Response::decode(&r.encode()).unwrap(), r);
+        }
+    }
+}

@@ -1,0 +1,152 @@
+//! Differential tests: the AOT HLO artifacts executed via PJRT must agree
+//! with the pure-Rust mirror (`runtime::arima_fallback`) — which in turn
+//! mirrors python/compile/kernels/ref.py, the oracle the Pallas kernels
+//! are pinned to by pytest. Skips (with a notice) when `make artifacts`
+//! has not run.
+
+use memtrade::runtime::arima_fallback as fb;
+use memtrade::runtime::engine::{
+    Engine, DEMAND_SIZES, FORECAST_HORIZON, FORECAST_WINDOW,
+};
+use memtrade::util::rng::Rng;
+
+fn engine() -> Option<Engine> {
+    let dir = Engine::default_dir();
+    if !Engine::artifacts_present(&dir) {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Engine::load(&dir).expect("artifacts present but failed to load"))
+}
+
+fn gen_series(rng: &mut Rng, n: usize, w: usize) -> Vec<Vec<f32>> {
+    (0..n)
+        .map(|_| {
+            let base = rng.uniform(4.0, 24.0);
+            let amp = rng.uniform(0.0, 6.0);
+            let noise = rng.uniform(0.05, 0.8);
+            let mut ar = 0.0f64;
+            (0..w)
+                .map(|t| {
+                    ar = 0.85 * ar + rng.normal(0.0, noise);
+                    let season =
+                        amp * (std::f64::consts::TAU * t as f64 / 288.0).sin();
+                    (base + season + ar).max(0.0) as f32
+                })
+                .collect()
+        })
+        .collect()
+}
+
+#[test]
+fn forecast_artifact_matches_rust_mirror() {
+    let Some(eng) = engine() else { return };
+    let mut rng = Rng::new(11);
+    // Deliberately not a multiple of the compiled batch: exercises padding.
+    let n = 300;
+    let series = gen_series(&mut rng, n, FORECAST_WINDOW);
+    let caps: Vec<f32> = (0..n).map(|_| rng.uniform(16.0, 64.0) as f32).collect();
+
+    let got = eng.forecast.predict(&series, &caps).expect("predict");
+    let want = fb::forecast_batch(&series, &caps, 4, FORECAST_HORIZON, FORECAST_WINDOW);
+
+    assert_eq!(got.len(), n);
+    let mut selection_agree = 0;
+    for i in 0..n {
+        // f32 kernel vs f64 mirror: tolerances account for the precision
+        // gap; the *decisions* (selection, safe margin) must agree closely.
+        for h in 0..FORECAST_HORIZON {
+            let g = got[i].pred[h];
+            let w = want[i].pred[h];
+            assert!(
+                (g - w).abs() < 0.05 * w.abs().max(1.0),
+                "series {i} h {h}: pjrt {g} rust {w}"
+            );
+            let gs = got[i].safe[h];
+            let ws = want[i].safe[h];
+            assert!(
+                (gs - ws).abs() < 0.08 * caps[i].max(1.0),
+                "series {i} safe h {h}: pjrt {gs} rust {ws}"
+            );
+        }
+        assert!(
+            (got[i].sigma - want[i].sigma).abs() < 0.05 * want[i].sigma.max(0.1),
+            "series {i} sigma: {} vs {}",
+            got[i].sigma,
+            want[i].sigma
+        );
+        if got[i].used_diff == want[i].used_diff {
+            selection_agree += 1;
+        }
+    }
+    // Model selection may flip on near-ties under f32; demand >95% agreement.
+    assert!(selection_agree * 100 >= n * 95, "selection agreement {selection_agree}/{n}");
+}
+
+#[test]
+fn forecast_artifact_sane_on_patterns() {
+    let Some(eng) = engine() else { return };
+    // Constant series: forecast == constant, safe == cap - constant (+~0).
+    let series = vec![vec![10.0f32; FORECAST_WINDOW]; 3];
+    let caps = vec![32.0f32; 3];
+    let got = eng.forecast.predict(&series, &caps).unwrap();
+    for r in &got {
+        for h in 0..FORECAST_HORIZON {
+            assert!((r.pred[h] - 10.0).abs() < 0.1, "pred {}", r.pred[h]);
+            assert!((r.safe[h] - 22.0).abs() < 0.5, "safe {}", r.safe[h]);
+        }
+    }
+    // Ramp: d=1 wins and extrapolates upward.
+    let ramp: Vec<f32> = (0..FORECAST_WINDOW).map(|t| 0.05 * t as f32).collect();
+    let got = eng.forecast.predict(&[ramp.clone()], &[64.0]).unwrap();
+    assert!(got[0].used_diff);
+    assert!(got[0].pred[FORECAST_HORIZON - 1] > *ramp.last().unwrap());
+}
+
+#[test]
+fn demand_artifact_matches_rust_mirror() {
+    let Some(eng) = engine() else { return };
+    let mut rng = Rng::new(13);
+    let n = 1500; // exercises chunking (compiled batch 1024)
+    let gains: Vec<Vec<f32>> = (0..n)
+        .map(|_| {
+            let rate = rng.uniform(10.0, 3000.0);
+            let knee = rng.uniform(2.0, 48.0);
+            (0..DEMAND_SIZES)
+                .map(|s| (rate * (1.0 - (-(s as f64) / knee).exp())) as f32)
+                .collect()
+        })
+        .collect();
+    let values: Vec<f32> = (0..n).map(|_| rng.uniform(1e-6, 1e-3) as f32).collect();
+    let prices = [0.0008f32, 0.0010, 0.0012];
+
+    let got = eng.demand.evaluate(&gains, &values, prices).unwrap();
+    assert_eq!(got.demand.len(), n);
+    let mut total = [0f64; 3];
+    for i in 0..n {
+        for k in 0..3 {
+            let want = fb::demand_one(&gains[i], values[i], prices[k] as f64);
+            let g = got.demand[i][k];
+            // Ties at the argmax can differ by one slab between f32/f64.
+            assert!(
+                (g - want as f32).abs() <= 1.0,
+                "consumer {i} price {k}: pjrt {g} rust {want}"
+            );
+            total[k] += g as f64;
+        }
+    }
+    for k in 0..3 {
+        assert!((got.volume[k] - total[k]).abs() < 1e-6);
+        assert!((got.revenue[k] - got.volume[k] * prices[k] as f64).abs() < 1e-9);
+    }
+}
+
+#[test]
+fn manifest_matches_compiled_constants() {
+    let dir = Engine::default_dir();
+    if !Engine::artifacts_present(&dir) {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    }
+    memtrade::runtime::engine::check_manifest(&dir).expect("manifest check");
+}
