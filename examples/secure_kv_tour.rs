@@ -19,7 +19,7 @@ struct EvilProducer {
 impl EvilProducer {
     fn serve(&mut self, req: Request) -> Response {
         match req {
-            Request::Get { key } => match self.store.get(&key) {
+            Request::Get { key } => match self.store.get(&key).map(<[u8]>::to_vec) {
                 Some(mut v) => {
                     if self.corrupt_values {
                         let n = v.len();
@@ -27,8 +27,10 @@ impl EvilProducer {
                     }
                     if self.replay_other {
                         if let Some(other) = self.store.sample_key() {
-                            if other != key {
-                                return Response::Value(self.store.get(&other).unwrap());
+                            if other.as_ref() != key.as_slice() {
+                                return Response::Value(
+                                    self.store.get(&other).unwrap().to_vec(),
+                                );
                             }
                         }
                     }
@@ -65,7 +67,7 @@ fn main() {
         assert!(consumer.put(&mut t, b"ssn", b"123-45-6789"));
     }
     let visible_key = producer.store.sample_key().unwrap();
-    let visible_val = producer.store.get(&visible_key).unwrap();
+    let visible_val = producer.store.get(&visible_key).unwrap().to_vec();
     println!("   producer sees key bytes: {visible_key:?} (a 64-bit counter, not 'ssn')");
     println!(
         "   producer sees value: {} bytes of ciphertext (IV || AES-CBC), plaintext absent: {}",

@@ -11,6 +11,58 @@ use memtrade::producer::Manager;
 use memtrade::util::bench::{bench, header};
 use memtrade::util::rng::Rng;
 use memtrade::workload::ycsb::YcsbWorkload;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Barrier};
+use std::time::{Duration, Instant};
+
+/// Aggregate ops/sec for `clients` concurrent TCP connections doing a
+/// 90/10 GET/PUT mix against a producer store with `n_shards` shards.
+fn tcp_hammer_ops_per_sec(n_shards: usize, clients: usize, run_for: Duration) -> f64 {
+    const KEYS: u64 = 10_000;
+    let server =
+        ProducerStoreServer::start_sharded("127.0.0.1:0", 1 << 30, None, 21, n_shards).unwrap();
+    let addr = server.addr();
+    let value = vec![0xAB_u8; 1024];
+    {
+        let mut c = KvClient::connect(addr).unwrap();
+        for i in 0..KEYS {
+            assert!(c.put(format!("user{i}").as_bytes(), &value).unwrap());
+        }
+    }
+    let stop = Arc::new(AtomicBool::new(false));
+    let barrier = Arc::new(Barrier::new(clients + 1));
+    let handles: Vec<_> = (0..clients)
+        .map(|t| {
+            let stop = stop.clone();
+            let barrier = barrier.clone();
+            let value = value.clone();
+            std::thread::spawn(move || {
+                let mut c = KvClient::connect(addr).unwrap();
+                let mut rng = Rng::new(300 + t as u64);
+                let mut ops = 0u64;
+                barrier.wait();
+                while !stop.load(Ordering::Relaxed) {
+                    let key = format!("user{}", rng.below(KEYS));
+                    if rng.below(10) < 9 {
+                        std::hint::black_box(c.get(key.as_bytes()).unwrap());
+                    } else {
+                        std::hint::black_box(c.put(key.as_bytes(), &value).unwrap());
+                    }
+                    ops += 1;
+                }
+                ops
+            })
+        })
+        .collect();
+    barrier.wait();
+    let t0 = Instant::now();
+    std::thread::sleep(run_for);
+    stop.store(true, Ordering::Relaxed);
+    let total: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    let elapsed = t0.elapsed().as_secs_f64();
+    server.stop();
+    total as f64 / elapsed
+}
 
 fn main() {
     header("end-to-end secure KV");
@@ -89,6 +141,19 @@ fn main() {
         std::hint::black_box(secure_tcp.put(&mut t, key.as_bytes(), &value));
     });
     server.stop();
+
+    // --- Multi-client TCP: single-mutex baseline vs. sharded server.
+    let clients = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .clamp(4, 8);
+    let run_for = Duration::from_millis(1200);
+    println!("\n== bench: TCP hammer (90/10 GET/PUT, 1KB, {clients} clients) ==");
+    let tcp_single = tcp_hammer_ops_per_sec(1, clients, run_for);
+    println!("{:<48} {:>14.0} ops/s", "tcp_hammer/1-shard", tcp_single);
+    let tcp_sharded = tcp_hammer_ops_per_sec(16, clients, run_for);
+    println!("{:<48} {:>14.0} ops/s", "tcp_hammer/16-shards", tcp_sharded);
+    println!("{:<48} {:>13.2}x", "speedup", tcp_sharded / tcp_single);
 
     // --- Wire codec alone.
     let req = Request::Put { key: b"user12345".to_vec(), value: vec![0xCD; 1024] };

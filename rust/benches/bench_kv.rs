@@ -1,15 +1,68 @@
 //! Producer-store hot path: GET/PUT/DELETE on the Redis-like KV store,
 //! including eviction pressure and harvester-initiated shrink (the data
-//! path behind every consumer op in Table 2 / Fig 11).
+//! path behind every consumer op in Table 2 / Fig 11), plus the
+//! multi-threaded sharded-store hammer that quantifies the win from
+//! hash-partitioning the store across independently locked shards.
+//!
+//! Emits `BENCH_kv.json` (in the crate root when run via `cargo bench`)
+//! with aggregate ops/sec for the 1-shard (single global mutex) baseline
+//! vs. the N-shard configuration, so the perf trajectory is tracked as a
+//! number across PRs.
 
-use memtrade::kv::KvStore;
+use memtrade::kv::{KvStore, ShardedKvStore};
 use memtrade::util::bench::{bench, header};
 use memtrade::util::rng::Rng;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Barrier};
+use std::time::{Duration, Instant};
+
+/// Mixed 90% GET / 10% PUT hammer over a preloaded sharded store.
+/// Returns aggregate ops/sec across `n_threads` worker threads.
+fn hammer_ops_per_sec(n_shards: usize, n_threads: usize, run_for: Duration) -> f64 {
+    const KEYS: u64 = 20_000;
+    let store = Arc::new(ShardedKvStore::new(256 << 20, n_shards, 1));
+    let value = vec![0xAB_u8; 1024];
+    for i in 0..KEYS {
+        store.put(format!("user{i}").as_bytes(), &value);
+    }
+    let stop = Arc::new(AtomicBool::new(false));
+    let barrier = Arc::new(Barrier::new(n_threads + 1));
+    let handles: Vec<_> = (0..n_threads)
+        .map(|t| {
+            let store = store.clone();
+            let stop = stop.clone();
+            let barrier = barrier.clone();
+            let value = value.clone();
+            std::thread::spawn(move || {
+                let mut rng = Rng::new(100 + t as u64);
+                let mut buf = Vec::with_capacity(2048);
+                let mut ops = 0u64;
+                barrier.wait();
+                while !stop.load(Ordering::Relaxed) {
+                    let key = format!("user{}", rng.below(KEYS));
+                    if rng.below(10) < 9 {
+                        std::hint::black_box(store.get_into(key.as_bytes(), &mut buf));
+                    } else {
+                        std::hint::black_box(store.put(key.as_bytes(), &value));
+                    }
+                    ops += 1;
+                }
+                ops
+            })
+        })
+        .collect();
+    barrier.wait();
+    let t0 = Instant::now();
+    std::thread::sleep(run_for);
+    stop.store(true, Ordering::Relaxed);
+    let total: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    total as f64 / t0.elapsed().as_secs_f64()
+}
 
 fn main() {
     header("kv (producer store)");
 
-    // GET hit on a warm 64 MB store.
+    // GET hit on a warm 64 MB store: borrow-based, no value clone.
     let mut kv = KvStore::new(64 << 20, 1);
     let mut keys = Vec::new();
     for i in 0..10_000u32 {
@@ -18,9 +71,17 @@ fn main() {
         keys.push(k.into_bytes());
     }
     let mut rng = Rng::new(7);
-    bench("get_hit/1KB/10k-keys", || {
+    let get_hit = bench("get_hit/1KB/10k-keys", || {
         let k = &keys[rng.below(keys.len() as u64) as usize];
         assert!(kv.get(k).is_some());
+    });
+
+    // GET into a reused caller buffer (the owned-copy path).
+    let mut rng_into = Rng::new(12);
+    let mut into_buf = Vec::with_capacity(2048);
+    bench("get_into/1KB/reused-buffer", || {
+        let k = &keys[rng_into.below(keys.len() as u64) as usize];
+        assert!(kv.get_into(k, &mut into_buf));
     });
 
     let mut rng2 = Rng::new(8);
@@ -29,20 +90,22 @@ fn main() {
         assert!(kv.get(k.as_bytes()).is_none());
     });
 
-    // PUT overwrite (steady state, no eviction).
+    // PUT overwrite (steady state, no eviction, value buffer reused).
     let mut rng3 = Rng::new(9);
+    let overwrite_val = vec![0xCD; 1024];
     bench("put_overwrite/1KB", || {
         let k = &keys[rng3.below(keys.len() as u64) as usize];
-        kv.put(k, &vec![0xCD; 1024]);
+        kv.put(k, &overwrite_val);
     });
 
     // PUT under eviction pressure (store full -> sampled-LRU eviction).
     let mut full = KvStore::new(8 << 20, 2);
     let mut i = 0u64;
+    let evict_val = vec![0xEF; 1024];
     bench("put_with_eviction/1KB/full-store", || {
         let k = format!("grow{i}");
         i += 1;
-        full.put(k.as_bytes(), &vec![0xEF; 1024]);
+        full.put(k.as_bytes(), &evict_val);
     });
 
     // Harvester reclaim: shrink by 1 MB then grow back.
@@ -64,4 +127,33 @@ fn main() {
     bench("defragment/20k-entries", || {
         frag.defragment();
     });
+
+    // --- Multi-threaded mixed GET/PUT: single global mutex (1 shard)
+    // vs. the sharded store. The headline number of this subsystem.
+    let threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .clamp(4, 8);
+    let shards = 16;
+    let run_for = Duration::from_millis(1500);
+    println!("\n== bench: sharded hammer (90/10 GET/PUT, 1KB, {threads} threads) ==");
+    let single = hammer_ops_per_sec(1, threads, run_for);
+    println!("{:<48} {:>14.0} ops/s", "hammer/1-shard (global mutex baseline)", single);
+    let multi = hammer_ops_per_sec(shards, threads, run_for);
+    println!("{:<48} {:>14.0} ops/s", format!("hammer/{shards}-shards"), multi);
+    println!("{:<48} {:>13.2}x", "speedup", multi / single);
+
+    let json = format!(
+        "{{\n  \"bench\": \"kv_sharded_hammer\",\n  \"threads\": {threads},\n  \
+         \"value_bytes\": 1024,\n  \"get_fraction\": 0.9,\n  \
+         \"single_shard_ops_per_sec\": {single:.0},\n  \"shards\": {shards},\n  \
+         \"sharded_ops_per_sec\": {multi:.0},\n  \"speedup\": {:.3},\n  \
+         \"get_hit_mean_ns\": {:.1}\n}}\n",
+        multi / single,
+        get_hit.mean_ns,
+    );
+    match std::fs::write("BENCH_kv.json", &json) {
+        Ok(()) => println!("\nwrote BENCH_kv.json"),
+        Err(e) => eprintln!("\ncould not write BENCH_kv.json: {e}"),
+    }
 }

@@ -193,7 +193,7 @@ mod tests {
             let kv = &mut self.stores[producer as usize];
             match req {
                 Request::Get { key } => match kv.get(&key) {
-                    Some(v) => Response::Value(v),
+                    Some(v) => Response::Value(v.to_vec()),
                     None => Response::NotFound,
                 },
                 Request::Put { key, value } => {
@@ -227,6 +227,40 @@ mod tests {
     }
 
     #[test]
+    fn secure_kv_over_sharded_store() {
+        use crate::kv::ShardedKvStore;
+        let shared = ShardedKvStore::new(16 << 20, 4, 11);
+        let mut c = SecureKv::new(Some([9u8; 16]), true, 1, 21);
+        {
+            let mut t = |_p: u32, req: Request| match req {
+                Request::Get { key } => match shared.get_owned(&key) {
+                    Some(v) => Response::Value(v),
+                    None => Response::NotFound,
+                },
+                Request::Put { key, value } => {
+                    if shared.put(&key, &value) {
+                        Response::Stored
+                    } else {
+                        Response::Rejected
+                    }
+                }
+                Request::Delete { key } => Response::Deleted(shared.delete(&key)),
+                Request::Ping => Response::Pong,
+            };
+            for i in 0..200u32 {
+                assert!(c.put(&mut t, format!("k{i}").as_bytes(), &vec![i as u8; 256]));
+            }
+            for i in 0..200u32 {
+                assert_eq!(
+                    c.get(&mut t, format!("k{i}").as_bytes()),
+                    Some(vec![i as u8; 256])
+                );
+            }
+        }
+        assert_eq!(shared.stats().puts, 200);
+    }
+
+    #[test]
     fn round_robin_spreads_across_producers() {
         let mut t = MemTransport::new(4);
         let mut c = SecureKv::new(Some([1u8; 16]), true, 4, 1);
@@ -245,7 +279,7 @@ mod tests {
         assert!(c.put(&mut t, b"key", b"value"));
         // Corrupt the stored bytes.
         let k_p = 0u64.to_le_bytes().to_vec();
-        let mut stored = t.stores[0].get(&k_p).unwrap();
+        let mut stored = t.stores[0].get(&k_p).unwrap().to_vec();
         stored[3] ^= 0xff;
         t.stores[0].put(&k_p, &stored);
         assert_eq!(c.get(&mut t, b"key"), None);

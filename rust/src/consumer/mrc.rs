@@ -15,14 +15,9 @@ use std::collections::HashMap;
 const P: u64 = 1 << 24;
 
 fn key_hash(key: &[u8]) -> u64 {
-    // FNV-1a 64.
-    let mut h = 0xcbf29ce484222325u64;
-    for &b in key {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x100000001b3);
-    }
-    // Final avalanche for better low-bit uniformity.
-    let mut z = h;
+    // Shared FNV-1a 64, plus a final avalanche for better low-bit
+    // uniformity (the sampling filter keys off the low bits).
+    let mut z = crate::util::hash::fnv1a_64(key);
     z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
     z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
     z ^ (z >> 31)

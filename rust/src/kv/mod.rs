@@ -6,7 +6,14 @@
 //! `evict_bytes` path for harvester-initiated reclaims, a size-class
 //! allocation model whose external fragmentation can be compacted via
 //! `defragment` (Redis "activedefrag"), and hit/miss/eviction statistics.
+//!
+//! Two layers: [`KvStore`] is the single-threaded core (one per shard,
+//! or standalone in the simulator); [`ShardedKvStore`] hash-partitions
+//! keys across N independently locked shards so the TCP server's
+//! connection threads never serialize on one global mutex.
 
+pub mod sharded;
 pub mod store;
 
+pub use sharded::ShardedKvStore;
 pub use store::{KvStats, KvStore};

@@ -1,0 +1,350 @@
+//! Hash-partitioned producer store: N independently locked [`KvStore`]
+//! shards behind one byte budget.
+//!
+//! The TCP producer-store server used to funnel every connection through
+//! a single `Mutex<KvStore>`; under multi-tenant traffic that one lock
+//! was the whole system's throughput ceiling. Here keys are partitioned
+//! by a 64-bit FNV-1a hash, so concurrent GET/PUT/DELETE on different
+//! shards never contend. Stats aggregate across shards, and the
+//! harvester-facing budget operations (`shrink_to` / `grow_to` /
+//! `defragment`) apply proportionally to every shard's budget.
+//!
+//! Budget semantics: the total byte budget is split across shards at
+//! construction (largest-remainder, so shard budgets always sum to the
+//! total). Eviction is per shard — a hot shard evicts while a cold one
+//! has headroom — and the largest storable pair is bounded by a *shard*
+//! budget (~total/N), not the total. That is the same trade Redis
+//! Cluster and memcached make for lock-free scaling; to keep the cap
+//! sane for small stores, construction never shards below
+//! [`MIN_SHARD_BYTES`] per shard.
+
+use super::store::{KvStats, KvStore};
+use crate::util::hash::fnv1a_64;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+/// Split `total` into `n` parts that differ by at most one byte and sum
+/// exactly to `total`.
+fn even_split(total: usize, n: usize) -> Vec<usize> {
+    let base = total / n;
+    let rem = total % n;
+    (0..n).map(|i| base + usize::from(i < rem)).collect()
+}
+
+/// Floor on the per-shard byte budget: requesting more shards than
+/// `max_bytes / MIN_SHARD_BYTES` silently uses fewer, so tiny stores
+/// don't end up with per-shard budgets (and thus max-value caps) of a
+/// few kilobytes.
+pub const MIN_SHARD_BYTES: usize = 1 << 20;
+
+/// A producer store hash-partitioned across independently locked shards.
+/// All methods take `&self`; the per-shard mutexes provide interior
+/// mutability so server connection threads can share one instance.
+pub struct ShardedKvStore {
+    shards: Vec<Mutex<KvStore>>,
+    /// Round-robin cursor so `sample_key` doesn't always drain shard 0.
+    sample_cursor: AtomicUsize,
+}
+
+impl ShardedKvStore {
+    /// `max_bytes` total budget split across `n_shards` independently
+    /// locked shards (clamped to `[1, max_bytes / MIN_SHARD_BYTES]`).
+    /// Note the largest storable key+value pair is bounded by one
+    /// shard's budget, ~`max_bytes / num_shards()`.
+    pub fn new(max_bytes: usize, n_shards: usize, seed: u64) -> Self {
+        let n = n_shards.max(1).min((max_bytes / MIN_SHARD_BYTES).max(1));
+        let shards = even_split(max_bytes, n)
+            .into_iter()
+            .enumerate()
+            .map(|(i, budget)| {
+                let shard_seed = seed ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+                Mutex::new(KvStore::new(budget, shard_seed))
+            })
+            .collect();
+        ShardedKvStore { shards, sample_cursor: AtomicUsize::new(0) }
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    fn shard(&self, key: &[u8]) -> MutexGuard<'_, KvStore> {
+        let i = (fnv1a_64(key) % self.shards.len() as u64) as usize;
+        self.shards[i].lock().unwrap()
+    }
+
+    /// PUT into the owning shard. Returns false when rejected.
+    pub fn put(&self, key: &[u8], value: &[u8]) -> bool {
+        self.shard(key).put(key, value)
+    }
+
+    /// DELETE from the owning shard.
+    pub fn delete(&self, key: &[u8]) -> bool {
+        self.shard(key).delete(key)
+    }
+
+    /// GET, applying `f` to the value borrow *under the shard lock*.
+    /// This is the server's zero-copy path: the value is encoded straight
+    /// from the store into a caller-owned output buffer, with no
+    /// intermediate allocation. Keep `f` cheap — it runs inside the lock.
+    pub fn get_with<R>(&self, key: &[u8], f: impl FnOnce(&[u8]) -> R) -> Option<R> {
+        self.shard(key).get(key).map(f)
+    }
+
+    /// GET into a reusable caller buffer (cleared first); true on hit.
+    pub fn get_into(&self, key: &[u8], out: &mut Vec<u8>) -> bool {
+        self.shard(key).get_into(key, out)
+    }
+
+    /// GET returning an owned copy (tests / non-hot-path callers).
+    pub fn get_owned(&self, key: &[u8]) -> Option<Vec<u8>> {
+        self.get_with(key, |v| v.to_vec())
+    }
+
+    /// Presence + recency bump without reading the value.
+    pub fn touch(&self, key: &[u8]) -> bool {
+        self.shard(key).touch(key)
+    }
+
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn used_bytes(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().used_bytes()).sum()
+    }
+
+    pub fn live_bytes(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().live_bytes()).sum()
+    }
+
+    /// Total byte budget (sum of shard budgets).
+    pub fn max_bytes(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().max_bytes()).sum()
+    }
+
+    /// Aggregate fragmentation ratio across shards, 1.0 when empty.
+    pub fn fragmentation(&self) -> f64 {
+        let (mut used, mut live) = (0usize, 0usize);
+        for s in &self.shards {
+            let g = s.lock().unwrap();
+            used += g.used_bytes();
+            live += g.live_bytes();
+        }
+        if live == 0 {
+            1.0
+        } else {
+            used as f64 / live as f64
+        }
+    }
+
+    /// Counters summed across all shards.
+    pub fn stats(&self) -> KvStats {
+        let mut total = KvStats::default();
+        for s in &self.shards {
+            total.merge(&s.lock().unwrap().stats);
+        }
+        total
+    }
+
+    /// Shard budgets proportional to the current ones, summing exactly to
+    /// `new_max` (largest-remainder rounding). Falls back to an even
+    /// split when the current total budget is zero — or when any
+    /// proportional share rounds to zero: a shard whose budget ever hit
+    /// zero would otherwise keep a zero share forever (0 * anything = 0)
+    /// and permanently reject its whole key range.
+    fn proportional_budgets(guards: &[MutexGuard<'_, KvStore>], new_max: usize) -> Vec<usize> {
+        let n = guards.len();
+        let total: usize = guards.iter().map(|g| g.max_bytes()).sum();
+        if total == 0 {
+            return even_split(new_max, n);
+        }
+        let mut budgets: Vec<usize> = guards
+            .iter()
+            .map(|g| ((new_max as u128 * g.max_bytes() as u128) / total as u128) as usize)
+            .collect();
+        if budgets.iter().any(|&b| b == 0) {
+            return even_split(new_max, n);
+        }
+        // Each floor loses < 1 byte, so the shortfall is < n.
+        let mut left = new_max - budgets.iter().sum::<usize>();
+        let mut i = 0;
+        while left > 0 {
+            budgets[i % n] += 1;
+            left -= 1;
+            i += 1;
+        }
+        budgets
+    }
+
+    /// Harvester-initiated reclaim: shrink the total budget to `new_max`,
+    /// distributed proportionally across shards, evicting in each shard
+    /// until it fits. Returns total bytes freed. Takes every shard lock
+    /// (in index order, the only multi-lock path — no deadlock with the
+    /// single-lock request path).
+    pub fn shrink_to(&self, new_max: usize) -> usize {
+        let mut guards: Vec<MutexGuard<'_, KvStore>> =
+            self.shards.iter().map(|s| s.lock().unwrap()).collect();
+        let budgets = Self::proportional_budgets(&guards, new_max);
+        guards.iter_mut().zip(budgets).map(|(g, b)| g.shrink_to(b)).sum()
+    }
+
+    /// Grow the total budget back toward `new_max`, proportionally per
+    /// shard (each shard keeps its budget if already larger).
+    pub fn grow_to(&self, new_max: usize) {
+        let mut guards: Vec<MutexGuard<'_, KvStore>> =
+            self.shards.iter().map(|s| s.lock().unwrap()).collect();
+        let budgets = Self::proportional_budgets(&guards, new_max);
+        for (g, b) in guards.iter_mut().zip(budgets) {
+            g.grow_to(b);
+        }
+    }
+
+    /// Defragment every shard; returns total bytes reclaimed.
+    pub fn defragment(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().defragment()).sum()
+    }
+
+    /// Uniform-ish random resident key: rotates a cursor across shards so
+    /// sampling isn't biased to shard 0, then samples within the shard.
+    pub fn sample_key(&self) -> Option<Arc<[u8]>> {
+        let n = self.shards.len();
+        let start = self.sample_cursor.fetch_add(1, Ordering::Relaxed);
+        for i in 0..n {
+            if let Some(k) = self.shards[(start + i) % n].lock().unwrap().sample_key() {
+                return Some(k);
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_ops_across_shards() {
+        let s = ShardedKvStore::new(16 << 20, 8, 1);
+        assert_eq!(s.num_shards(), 8);
+        for i in 0..1000u32 {
+            assert!(s.put(format!("key{i}").as_bytes(), format!("val{i}").as_bytes()));
+        }
+        assert_eq!(s.len(), 1000);
+        for i in 0..1000u32 {
+            assert_eq!(
+                s.get_owned(format!("key{i}").as_bytes()),
+                Some(format!("val{i}").into_bytes())
+            );
+        }
+        assert!(s.delete(b"key0"));
+        assert!(!s.delete(b"key0"));
+        assert_eq!(s.get_owned(b"key0"), None);
+        let st = s.stats();
+        assert_eq!(st.puts, 1000);
+        assert_eq!(st.hits, 1000);
+        assert_eq!(st.misses, 1);
+        assert_eq!(st.deletes, 1);
+    }
+
+    #[test]
+    fn keys_spread_over_all_shards() {
+        let s = ShardedKvStore::new(16 << 20, 8, 1);
+        for i in 0..2000u32 {
+            s.put(format!("user{i}").as_bytes(), b"v");
+        }
+        for shard in &s.shards {
+            let n = shard.lock().unwrap().len();
+            assert!(n > 100, "shard imbalance: {n} of 2000");
+        }
+    }
+
+    #[test]
+    fn budgets_sum_exactly() {
+        for n in [1, 2, 3, 7, 8, 16] {
+            let s = ShardedKvStore::new((64 << 20) + 13, n, 1);
+            assert_eq!(s.max_bytes(), (64 << 20) + 13, "n={n}");
+            assert_eq!(s.num_shards(), n, "n={n}");
+        }
+    }
+
+    #[test]
+    fn shard_count_clamped_for_small_budgets() {
+        // A 2 MB store cannot support 16 shards without collapsing the
+        // max storable pair; it gets 2.
+        let s = ShardedKvStore::new(2 << 20, 16, 1);
+        assert_eq!(s.num_shards(), 2);
+        assert_eq!(s.max_bytes(), 2 << 20);
+        // Sub-MIN_SHARD_BYTES stores degenerate to a single shard.
+        let s = ShardedKvStore::new(64 << 10, 8, 1);
+        assert_eq!(s.num_shards(), 1);
+        // A pair close to the whole small budget still fits.
+        assert!(s.put(b"big", &vec![0u8; 48 << 10]));
+    }
+
+    #[test]
+    fn get_with_runs_under_lock_and_returns_closure_result() {
+        let s = ShardedKvStore::new(1 << 20, 4, 1);
+        s.put(b"k", &[1, 2, 3]);
+        assert_eq!(s.get_with(b"k", |v| v.len()), Some(3));
+        assert_eq!(s.get_with(b"absent", |v| v.len()), None);
+        let mut out = Vec::new();
+        assert!(s.get_into(b"k", &mut out));
+        assert_eq!(out, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn shrink_to_is_cross_shard_and_exact() {
+        let s = ShardedKvStore::new(4 << 20, 4, 7);
+        for i in 0..3000u32 {
+            s.put(format!("k{i}").as_bytes(), &vec![1u8; 900]);
+        }
+        let used = s.used_bytes();
+        let freed = s.shrink_to(1 << 20);
+        assert_eq!(s.max_bytes(), 1 << 20, "shard budgets must sum to the new max");
+        assert!(s.used_bytes() <= 1 << 20);
+        assert_eq!(freed, used - s.used_bytes());
+        s.grow_to(4 << 20);
+        assert_eq!(s.max_bytes(), 4 << 20);
+    }
+
+    #[test]
+    fn shards_recover_budget_after_extreme_shrink() {
+        let s = ShardedKvStore::new(16 << 20, 8, 1);
+        // Sub-n_shards budget: some shards necessarily drop to zero.
+        s.shrink_to(4);
+        assert_eq!(s.max_bytes(), 4);
+        // Growing back must not leave zero-budget shards stranded.
+        s.grow_to(16 << 20);
+        assert_eq!(s.max_bytes(), 16 << 20);
+        for i in 0..100u32 {
+            assert!(s.put(format!("k{i}").as_bytes(), b"v"), "shard stuck at zero budget");
+        }
+        assert_eq!(s.len(), 100);
+    }
+
+    #[test]
+    fn defragment_aggregates() {
+        let s = ShardedKvStore::new(16 << 20, 4, 9);
+        for i in 0..500u32 {
+            s.put(format!("k{i}").as_bytes(), &vec![0u8; 150]);
+        }
+        assert!(s.fragmentation() > 1.0);
+        assert!(s.defragment() > 0);
+        assert!((s.fragmentation() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sample_key_finds_resident_keys() {
+        let s = ShardedKvStore::new(1 << 20, 4, 3);
+        assert!(s.sample_key().is_none());
+        s.put(b"only", b"v");
+        for _ in 0..16 {
+            assert_eq!(s.sample_key().unwrap().as_ref(), b"only");
+        }
+    }
+}

@@ -1,7 +1,14 @@
 //! Byte-accounted KV store with sampled approximate-LRU eviction.
+//!
+//! Allocation discipline (the consumer GET/PUT hot path, paper §4.2):
+//! each key's bytes are stored exactly once in a shared `Arc<[u8]>`
+//! referenced by both the map and the sampling vector; a GET hit returns
+//! a borrow (no value clone); overwrites reuse the existing value
+//! buffer; and eviction sampling never copies key bytes.
 
 use crate::util::rng::Rng;
 use std::collections::HashMap;
+use std::sync::Arc;
 
 /// Per-entry bookkeeping overhead, approximating Redis's dictEntry +
 /// robj + SDS headers (~64 bytes).
@@ -18,6 +25,18 @@ pub struct KvStats {
     pub deletes: u64,
     pub evictions: u64,
     pub rejected: u64,
+}
+
+impl KvStats {
+    /// Accumulate another store's counters (shard aggregation).
+    pub fn merge(&mut self, other: &KvStats) {
+        self.hits += other.hits;
+        self.misses += other.misses;
+        self.puts += other.puts;
+        self.deletes += other.deletes;
+        self.evictions += other.evictions;
+        self.rejected += other.rejected;
+    }
 }
 
 struct Entry {
@@ -48,10 +67,13 @@ fn size_class(n: usize) -> usize {
 }
 
 /// A single producer store: one per consumer lease (paper §4.2).
+/// Inside [`crate::kv::ShardedKvStore`], one of these backs each shard.
 pub struct KvStore {
-    map: HashMap<Vec<u8>, Entry>,
+    map: HashMap<Arc<[u8]>, Entry>,
     /// All keys, for O(1) uniform sampling (Redis-style eviction pool).
-    keys: Vec<Vec<u8>>,
+    /// Shares the `Arc<[u8]>` allocations with `map`: key bytes are
+    /// stored once.
+    keys: Vec<Arc<[u8]>>,
     max_bytes: usize,
     used_bytes: usize,
     /// Bytes actually used by live data (<= used_bytes; difference is
@@ -106,14 +128,15 @@ impl KvStore {
         (size_class(live), live)
     }
 
-    /// GET: returns the value and bumps LRU recency.
-    pub fn get(&mut self, key: &[u8]) -> Option<Vec<u8>> {
+    /// The shared GET core: advance the clock, bump recency on a hit,
+    /// and account hit/miss stats exactly once for all access variants.
+    fn lookup_hit(&mut self, key: &[u8]) -> Option<&mut Entry> {
         self.clock += 1;
         match self.map.get_mut(key) {
             Some(e) => {
                 e.last_access = self.clock;
                 self.stats.hits += 1;
-                Some(e.value.clone())
+                Some(e)
             }
             None => {
                 self.stats.misses += 1;
@@ -122,8 +145,36 @@ impl KvStore {
         }
     }
 
+    /// GET: borrows the value and bumps LRU recency. A steady-state hit
+    /// performs no clone; callers that need ownership use
+    /// [`Self::get_into`] or copy explicitly.
+    pub fn get(&mut self, key: &[u8]) -> Option<&[u8]> {
+        self.lookup_hit(key).map(|e| e.value.as_slice())
+    }
+
+    /// GET into a caller-owned buffer (cleared first, capacity reused
+    /// across calls). Returns true on a hit.
+    pub fn get_into(&mut self, key: &[u8], out: &mut Vec<u8>) -> bool {
+        match self.lookup_hit(key) {
+            Some(e) => {
+                out.clear();
+                out.extend_from_slice(&e.value);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Presence check that bumps recency (and hit/miss stats) without
+    /// touching the value bytes at all.
+    pub fn touch(&mut self, key: &[u8]) -> bool {
+        self.lookup_hit(key).is_some()
+    }
+
     /// PUT: inserts/overwrites, evicting LRU-approximate victims if needed.
     /// Returns false (rejecting the write) when the pair can never fit.
+    /// Overwrites reuse the entry's value buffer; a fresh insert stores
+    /// the key bytes once, shared between the map and the sampling vec.
     pub fn put(&mut self, key: &[u8], value: &[u8]) -> bool {
         let (alloc, live) = Self::charge(key, value);
         if alloc > self.max_bytes {
@@ -134,16 +185,25 @@ impl KvStore {
         // Replace in place if present.
         if let Some(e) = self.map.get_mut(key) {
             let (old_alloc, old_live) = (e.alloc, e.value.len() + key.len() + ENTRY_OVERHEAD);
-            e.value = value.to_vec();
+            e.value.clear();
+            e.value.extend_from_slice(value);
+            // Reuse the buffer for same-sized overwrites, but don't let a
+            // once-large value pin its peak capacity forever: the byte
+            // accounting reports `alloc` to the harvester, so real heap
+            // slack must stay bounded (<= 2x the live size).
+            if e.value.capacity() / 2 > e.value.len().max(32) {
+                e.value.shrink_to_fit();
+            }
             e.alloc = alloc;
             e.last_access = self.clock;
             self.used_bytes = self.used_bytes - old_alloc + alloc;
             self.live_bytes = self.live_bytes - old_live + live;
         } else {
+            let key_arc: Arc<[u8]> = Arc::from(key);
             let key_index = self.keys.len();
-            self.keys.push(key.to_vec());
+            self.keys.push(Arc::clone(&key_arc));
             self.map.insert(
-                key.to_vec(),
+                key_arc,
                 Entry { value: value.to_vec(), last_access: self.clock, alloc, key_index },
             );
             self.used_bytes += alloc;
@@ -171,12 +231,13 @@ impl KvStore {
         if let Some(e) = self.map.remove(key) {
             self.used_bytes -= e.alloc;
             self.live_bytes -= e.value.len() + key.len() + ENTRY_OVERHEAD;
-            // swap-remove from the sampling vec, fixing the moved key's index
+            // swap-remove from the sampling vec, fixing the moved key's
+            // index (an Arc refcount bump, not a byte copy).
             let idx = e.key_index;
             self.keys.swap_remove(idx);
             if idx < self.keys.len() {
-                let moved = self.keys[idx].clone();
-                self.map.get_mut(&moved).expect("moved key present").key_index = idx;
+                let moved = Arc::clone(&self.keys[idx]);
+                self.map.get_mut(moved.as_ref()).expect("moved key present").key_index = idx;
             }
             true
         } else {
@@ -186,6 +247,7 @@ impl KvStore {
 
     /// Evict one victim via Redis-style sampling: pick
     /// `EVICTION_SAMPLES` random keys, evict the least recently used.
+    /// Clone-free: victim selection reads through the shared key Arcs.
     fn evict_one(&mut self) -> bool {
         if self.keys.is_empty() {
             return false;
@@ -193,13 +255,13 @@ impl KvStore {
         let mut victim: Option<(u64, usize)> = None;
         for _ in 0..EVICTION_SAMPLES.min(self.keys.len()) {
             let i = self.rng.below(self.keys.len() as u64) as usize;
-            let e = &self.map[&self.keys[i]];
+            let e = &self.map[self.keys[i].as_ref()];
             if victim.map_or(true, |(age, _)| e.last_access < age) {
                 victim = Some((e.last_access, i));
             }
         }
         let (_, idx) = victim.expect("non-empty sampled");
-        let key = self.keys[idx].clone();
+        let key = Arc::clone(&self.keys[idx]);
         self.remove_entry(&key);
         self.stats.evictions += 1;
         true
@@ -239,12 +301,13 @@ impl KvStore {
     }
 
     /// Uniform random resident key (for workload-driven scans/tests).
-    pub fn sample_key(&mut self) -> Option<Vec<u8>> {
+    /// Returns a shared handle to the key bytes (refcount bump only).
+    pub fn sample_key(&mut self) -> Option<Arc<[u8]>> {
         if self.keys.is_empty() {
             None
         } else {
             let i = self.rng.below(self.keys.len() as u64) as usize;
-            Some(self.keys[i].clone())
+            Some(Arc::clone(&self.keys[i]))
         }
     }
 }
@@ -271,7 +334,7 @@ mod tests {
     fn put_get_delete() {
         let mut kv = KvStore::new(1 << 20, 1);
         assert!(kv.put(b"k1", b"v1"));
-        assert_eq!(kv.get(b"k1"), Some(b"v1".to_vec()));
+        assert_eq!(kv.get(b"k1"), Some(&b"v1"[..]));
         assert_eq!(kv.get(b"nope"), None);
         assert!(kv.delete(b"k1"));
         assert!(!kv.delete(b"k1"));
@@ -282,6 +345,40 @@ mod tests {
         assert!(kv.is_empty());
         assert_eq!(kv.used_bytes(), 0);
         assert_eq!(kv.live_bytes(), 0);
+    }
+
+    #[test]
+    fn get_into_reuses_buffer() {
+        let mut kv = KvStore::new(1 << 20, 1);
+        kv.put(b"k", &vec![7u8; 1000]);
+        let mut buf = Vec::new();
+        assert!(kv.get_into(b"k", &mut buf));
+        assert_eq!(buf.len(), 1000);
+        let cap = buf.capacity();
+        for _ in 0..100 {
+            assert!(kv.get_into(b"k", &mut buf));
+        }
+        assert_eq!(buf.capacity(), cap, "get_into reallocated a reused buffer");
+        assert!(!kv.get_into(b"absent", &mut buf));
+    }
+
+    #[test]
+    fn key_bytes_stored_once() {
+        let mut kv = KvStore::new(1 << 20, 1);
+        kv.put(b"only-key", b"v");
+        let k = kv.sample_key().unwrap();
+        // map + keys vec + our local handle = 3 owners of ONE allocation.
+        assert_eq!(Arc::strong_count(&k), 3);
+    }
+
+    #[test]
+    fn touch_bumps_recency_without_reading() {
+        let mut kv = KvStore::new(1 << 20, 1);
+        kv.put(b"k", b"v");
+        assert!(kv.touch(b"k"));
+        assert!(!kv.touch(b"absent"));
+        assert_eq!(kv.stats.hits, 1);
+        assert_eq!(kv.stats.misses, 1);
     }
 
     #[test]

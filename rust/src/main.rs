@@ -65,7 +65,7 @@ memtrade — a disaggregated-memory marketplace (paper reproduction)
 
 USAGE:
   memtrade figure <id>|all [--quick]
-  memtrade producer [--port P] [--mb N] [--rate-mbps R]
+  memtrade producer [--port P] [--mb N] [--rate-mbps R] [--shards N]
   memtrade consumer --addr HOST:PORT [--ops N] [--value-bytes B] [--no-encrypt]
   memtrade sim [--minutes N] [--producers N] [--consumers N] [--remote PCT]
   memtrade replay [--steps N] [--producers N] [--consumers N]
@@ -128,11 +128,14 @@ fn cmd_producer(args: &Args) -> ExitCode {
     let port = args.flag_u64("port", 7077);
     let mb = args.flag_u64("mb", 256);
     let rate = args.flag("rate-mbps").and_then(|v| v.parse::<u64>().ok());
-    let server = match ProducerStoreServer::start(
+    let shards = args.flag_u64("shards", 0) as usize; // 0 = auto (per core)
+    let shards = if shards == 0 { memtrade::net::tcp::default_shards() } else { shards };
+    let server = match ProducerStoreServer::start_sharded(
         format!("0.0.0.0:{port}"),
         (mb as usize) << 20,
         rate.map(|m| m * 1_000_000 / 8),
         1,
+        shards,
     ) {
         Ok(s) => s,
         Err(e) => {
@@ -140,10 +143,13 @@ fn cmd_producer(args: &Args) -> ExitCode {
             return ExitCode::FAILURE;
         }
     };
+    let n_shards = server.store().num_shards();
     println!(
-        "producer store listening on {} ({} MB{})",
+        "producer store listening on {} ({} MB, {} shards -> max ~{} MB/object{})",
         server.addr(),
         mb,
+        n_shards,
+        (mb as usize / n_shards).max(1),
         rate.map(|r| format!(", {r} Mb/s limit")).unwrap_or_default()
     );
     println!("press Ctrl-C to stop");

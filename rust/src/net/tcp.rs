@@ -1,45 +1,93 @@
 //! Real TCP transport: a threaded producer-store server exposing one
-//! [`KvStore`] per listener, and a blocking client. Used by the runnable
-//! examples and integration tests so the consumer request path is
-//! exercised over real sockets with the real wire codec. (The cluster-
-//! scale experiments run on the in-process simulator instead.)
+//! [`ShardedKvStore`] per listener, and a blocking client. Used by the
+//! runnable examples and integration tests so the consumer request path
+//! is exercised over real sockets with the real wire codec. (The
+//! cluster-scale experiments run on the in-process simulator instead.)
+//!
+//! Request-path discipline (the system's hottest path):
+//! * connection threads hit independently locked store shards, not one
+//!   global `Mutex<KvStore>`;
+//! * rate limiting is a lock-free [`AtomicTokenBucket`] — no shared
+//!   mutex re-serializing what sharding parallelized;
+//! * each connection owns a `BufReader`/`BufWriter` pair plus two
+//!   reusable scratch buffers, requests decode as borrowed
+//!   [`RequestRef`]s, and GET hits encode straight from the shard into
+//!   the output buffer — a steady-state GET performs zero transient heap
+//!   allocations server-side.
 
-use crate::core::SimTime;
-use crate::kv::KvStore;
-use crate::net::wire::{read_frame, write_frame, Request, Response};
-use crate::util::token_bucket::TokenBucket;
-use std::io;
+use crate::kv::{KvStats, ShardedKvStore};
+use crate::net::wire::{
+    encode_value_response, read_frame_into, read_frame_into_patient, write_frame, Request,
+    RequestRef, Response,
+};
+use crate::util::token_bucket::AtomicTokenBucket;
+use std::io::{self, BufReader, BufWriter};
 use std::net::{TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-/// A producer store served over TCP: one KvStore + one rate limiter,
-/// shared across client connections (one thread per connection).
+/// Per-connection buffered-I/O capacity.
+const CONN_BUF_BYTES: usize = 32 << 10;
+
+/// Bound a reused scratch buffer's slack: keep capacity for steady-state
+/// frames, but don't let one oversized frame (up to `MAX_FRAME` = 16 MiB)
+/// pin megabytes of unaccounted heap for the connection's lifetime.
+fn bound_scratch(buf: &mut Vec<u8>) {
+    if buf.capacity() > CONN_BUF_BYTES && buf.capacity() / 2 > buf.len() {
+        buf.shrink_to(CONN_BUF_BYTES.max(buf.len()));
+    }
+}
+
+/// Default shard count: one per available core, clamped to a sane range.
+pub fn default_shards() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).clamp(1, 16)
+}
+
+/// A producer store served over TCP: one sharded KvStore + one lock-free
+/// rate limiter, shared across client connections (one thread per
+/// connection).
 pub struct ProducerStoreServer {
     local_addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
     accept_handle: Option<JoinHandle<()>>,
-    store: Arc<Mutex<KvStore>>,
+    store: Arc<ShardedKvStore>,
 }
 
 impl ProducerStoreServer {
     /// Bind to `addr` (use port 0 for an ephemeral port) serving a store
-    /// of `max_bytes`, rate limited to `rate_bps` bytes/sec (None = off).
+    /// of `max_bytes`, rate limited to `rate_bps` bytes/sec (None = off),
+    /// with [`default_shards`] store shards.
+    ///
+    /// Sharding trade-off: the largest storable key+value pair is
+    /// bounded by one *shard's* budget (~`max_bytes / shards`), not the
+    /// whole store. Pass `n_shards = 1` to [`Self::start_sharded`] for
+    /// the unsharded bound (at the cost of a single global lock).
     pub fn start<A: ToSocketAddrs>(
         addr: A,
         max_bytes: usize,
         rate_bps: Option<u64>,
         seed: u64,
     ) -> io::Result<Self> {
+        Self::start_sharded(addr, max_bytes, rate_bps, seed, default_shards())
+    }
+
+    /// [`Self::start`] with an explicit shard count (1 = the old
+    /// single-mutex behavior, used as the benchmark baseline).
+    pub fn start_sharded<A: ToSocketAddrs>(
+        addr: A,
+        max_bytes: usize,
+        rate_bps: Option<u64>,
+        seed: u64,
+        n_shards: usize,
+    ) -> io::Result<Self> {
         let listener = TcpListener::bind(addr)?;
         let local_addr = listener.local_addr()?;
         listener.set_nonblocking(true)?;
         let stop = Arc::new(AtomicBool::new(false));
-        let store = Arc::new(Mutex::new(KvStore::new(max_bytes, seed)));
-        let bucket = rate_bps
-            .map(|bps| Arc::new(Mutex::new(TokenBucket::new(bps, bps / 4))));
+        let store = Arc::new(ShardedKvStore::new(max_bytes, n_shards, seed));
+        let bucket = rate_bps.map(|bps| Arc::new(AtomicTokenBucket::new(bps, bps / 4)));
 
         let stop2 = stop.clone();
         let store2 = store.clone();
@@ -75,14 +123,20 @@ impl ProducerStoreServer {
         self.local_addr
     }
 
-    /// Snapshot of store statistics.
-    pub fn stats(&self) -> crate::kv::KvStats {
-        self.store.lock().unwrap().stats.clone()
+    /// The served store (shard-partitioned; all methods take `&self`).
+    pub fn store(&self) -> &Arc<ShardedKvStore> {
+        &self.store
     }
 
-    /// Harvester-initiated reclaim on a live store.
+    /// Snapshot of store statistics, aggregated across shards.
+    pub fn stats(&self) -> KvStats {
+        self.store.stats()
+    }
+
+    /// Harvester-initiated reclaim on a live store (proportional across
+    /// shards).
     pub fn shrink_to(&self, new_max: usize) -> usize {
-        self.store.lock().unwrap().shrink_to(new_max)
+        self.store.shrink_to(new_max)
     }
 
     pub fn stop(mut self) {
@@ -104,92 +158,124 @@ impl Drop for ProducerStoreServer {
 }
 
 fn serve_conn(
-    mut stream: TcpStream,
-    store: Arc<Mutex<KvStore>>,
+    stream: TcpStream,
+    store: Arc<ShardedKvStore>,
     stop: Arc<AtomicBool>,
-    bucket: Option<Arc<Mutex<TokenBucket>>>,
+    bucket: Option<Arc<AtomicTokenBucket>>,
     start: Instant,
 ) -> io::Result<()> {
     stream.set_read_timeout(Some(std::time::Duration::from_millis(100)))?;
+    let mut reader = BufReader::with_capacity(CONN_BUF_BYTES, stream.try_clone()?);
+    let mut writer = BufWriter::with_capacity(CONN_BUF_BYTES, stream);
+    // Reused for every request on this connection: the steady state
+    // allocates nothing.
+    let mut frame: Vec<u8> = Vec::new();
+    let mut out: Vec<u8> = Vec::new();
     loop {
-        if stop.load(Ordering::Relaxed) {
-            return Ok(());
+        // Timeout-tolerant frame read: mid-frame stalls never lose
+        // consumed bytes (no desync), and the stop flag is polled at
+        // every 100ms timeout tick.
+        let keep_going = || !stop.load(Ordering::Relaxed);
+        match read_frame_into_patient(&mut reader, &mut frame, keep_going) {
+            Ok(true) => {}
+            Ok(false) => return Ok(()), // server stopping
+            Err(_) => return Ok(()),    // disconnect / hostile length
         }
-        let frame = match read_frame(&mut stream) {
-            Ok(f) => f,
-            Err(e)
-                if e.kind() == io::ErrorKind::WouldBlock
-                    || e.kind() == io::ErrorKind::TimedOut =>
-            {
-                continue
-            }
-            Err(_) => return Ok(()), // disconnect
-        };
-        let resp = match Request::decode(&frame) {
-            Err(e) => Response::Error(e.to_string()),
+        out.clear();
+        match RequestRef::decode(&frame) {
+            Err(e) => Response::Error(e.to_string()).encode_into(&mut out),
             Ok(req) => {
-                // Rate limiting (paper §4.2): refuse oversized I/O.
+                // Rate limiting (paper §4.2): refuse oversized I/O. The
+                // bucket is lock-free, so throttling accounting never
+                // serializes connections.
                 let io_bytes = frame.len() as u64;
                 let throttled = bucket.as_ref().and_then(|b| {
-                    let now = SimTime::from_micros(start.elapsed().as_micros() as u64);
-                    let mut tb = b.lock().unwrap();
-                    if tb.try_consume(now, io_bytes) {
+                    let now_us = start.elapsed().as_micros() as u64;
+                    if b.try_consume(now_us, io_bytes) {
                         None
                     } else {
-                        let wait = tb
-                            .time_until(now, io_bytes)
-                            .unwrap_or(SimTime::from_secs(1));
-                        Some(Response::Throttled { retry_after_us: wait.as_micros() })
+                        Some(b.time_until_us(now_us, io_bytes).unwrap_or(1_000_000))
                     }
                 });
                 match throttled {
-                    Some(t) => t,
-                    None => {
-                        let mut kv = store.lock().unwrap();
-                        match req {
-                            Request::Get { key } => match kv.get(&key) {
-                                Some(v) => Response::Value(v),
-                                None => Response::NotFound,
-                            },
-                            Request::Put { key, value } => {
-                                if kv.put(&key, &value) {
-                                    Response::Stored
-                                } else {
-                                    Response::Rejected
-                                }
-                            }
-                            Request::Delete { key } => Response::Deleted(kv.delete(&key)),
-                            Request::Ping => Response::Pong,
-                        }
+                    Some(retry_after_us) => {
+                        Response::Throttled { retry_after_us }.encode_into(&mut out)
                     }
+                    None => match req {
+                        RequestRef::Get { key } => {
+                            // Zero-copy hit: the value is encoded from the
+                            // shard entry straight into the reused output
+                            // frame, under the shard lock.
+                            let hit =
+                                store.get_with(key, |v| encode_value_response(&mut out, v));
+                            if hit.is_none() {
+                                Response::NotFound.encode_into(&mut out);
+                            }
+                        }
+                        RequestRef::Put { key, value } => {
+                            if store.put(key, value) {
+                                Response::Stored.encode_into(&mut out)
+                            } else {
+                                Response::Rejected.encode_into(&mut out)
+                            }
+                        }
+                        RequestRef::Delete { key } => {
+                            Response::Deleted(store.delete(key)).encode_into(&mut out)
+                        }
+                        RequestRef::Ping => Response::Pong.encode_into(&mut out),
+                    },
                 }
             }
-        };
-        write_frame(&mut stream, &resp.encode())?;
+        }
+        write_frame(&mut writer, &out)?;
+        bound_scratch(&mut frame);
+        bound_scratch(&mut out);
     }
 }
 
-/// Blocking client for one producer store.
+/// Blocking client for one producer store. Owns buffered reader/writer
+/// halves plus reusable send/receive scratch buffers, so a steady-state
+/// call allocates only what the response forces (a `Value` payload).
 pub struct KvClient {
-    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+    send_buf: Vec<u8>,
+    recv_buf: Vec<u8>,
 }
 
 impl KvClient {
     pub fn connect<A: ToSocketAddrs>(addr: A) -> io::Result<Self> {
         let stream = TcpStream::connect(addr)?;
         stream.set_nodelay(true)?;
-        Ok(KvClient { stream })
+        Ok(KvClient {
+            reader: BufReader::with_capacity(CONN_BUF_BYTES, stream.try_clone()?),
+            writer: BufWriter::with_capacity(CONN_BUF_BYTES, stream),
+            send_buf: Vec::new(),
+            recv_buf: Vec::new(),
+        })
+    }
+
+    /// One request/response exchange from a borrowed request — the
+    /// allocation-free client path (`get`/`put`/`delete` use it so no
+    /// owned `Request` is built per call).
+    pub fn call_ref(&mut self, req: RequestRef<'_>) -> io::Result<Response> {
+        self.send_buf.clear();
+        req.encode_into(&mut self.send_buf);
+        write_frame(&mut self.writer, &self.send_buf)?;
+        read_frame_into(&mut self.reader, &mut self.recv_buf)?;
+        let resp = Response::decode(&self.recv_buf)
+            .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e));
+        bound_scratch(&mut self.send_buf);
+        bound_scratch(&mut self.recv_buf);
+        resp
     }
 
     pub fn call(&mut self, req: &Request) -> io::Result<Response> {
-        write_frame(&mut self.stream, &req.encode())?;
-        let frame = read_frame(&mut self.stream)?;
-        Response::decode(&frame)
-            .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e))
+        self.call_ref(req.to_ref())
     }
 
     pub fn get(&mut self, key: &[u8]) -> io::Result<Option<Vec<u8>>> {
-        match self.call(&Request::Get { key: key.to_vec() })? {
+        match self.call_ref(RequestRef::Get { key })? {
             Response::Value(v) => Ok(Some(v)),
             Response::NotFound => Ok(None),
             other => Err(io::Error::new(
@@ -200,7 +286,7 @@ impl KvClient {
     }
 
     pub fn put(&mut self, key: &[u8], value: &[u8]) -> io::Result<bool> {
-        match self.call(&Request::Put { key: key.to_vec(), value: value.to_vec() })? {
+        match self.call_ref(RequestRef::Put { key, value })? {
             Response::Stored => Ok(true),
             Response::Rejected | Response::Throttled { .. } => Ok(false),
             other => Err(io::Error::new(
@@ -211,7 +297,7 @@ impl KvClient {
     }
 
     pub fn delete(&mut self, key: &[u8]) -> io::Result<bool> {
-        match self.call(&Request::Delete { key: key.to_vec() })? {
+        match self.call_ref(RequestRef::Delete { key })? {
             Response::Deleted(ok) => Ok(ok),
             other => Err(io::Error::new(
                 io::ErrorKind::InvalidData,
@@ -270,6 +356,17 @@ mod tests {
     }
 
     #[test]
+    fn tcp_single_shard_baseline_still_works() {
+        let server =
+            ProducerStoreServer::start_sharded("127.0.0.1:0", 1 << 20, None, 4, 1).unwrap();
+        assert_eq!(server.store().num_shards(), 1);
+        let mut client = KvClient::connect(server.addr()).unwrap();
+        assert!(client.put(b"k", b"v").unwrap());
+        assert_eq!(client.get(b"k").unwrap(), Some(b"v".to_vec()));
+        server.stop();
+    }
+
+    #[test]
     fn tcp_rate_limit_throttles() {
         // 1 KB/s with tiny burst: the second large PUT must be throttled.
         let server =
@@ -280,6 +377,28 @@ mod tests {
             .call(&Request::Put { key: b"k2".to_vec(), value: vec![0u8; 4096] })
             .unwrap();
         assert!(matches!(resp, Response::Throttled { .. }), "got {resp:?}");
+        server.stop();
+    }
+
+    #[test]
+    fn tcp_shrink_on_live_server() {
+        let server =
+            ProducerStoreServer::start_sharded("127.0.0.1:0", 8 << 20, None, 6, 4).unwrap();
+        let mut client = KvClient::connect(server.addr()).unwrap();
+        for i in 0..2000u32 {
+            assert!(client.put(format!("k{i}").as_bytes(), &vec![1u8; 1024]).unwrap());
+        }
+        let freed = server.shrink_to(1 << 20);
+        assert!(freed > 0);
+        assert!(server.store().used_bytes() <= 1 << 20);
+        // Survivors still readable.
+        let mut hits = 0;
+        for i in 0..2000u32 {
+            if client.get(format!("k{i}").as_bytes()).unwrap().is_some() {
+                hits += 1;
+            }
+        }
+        assert!(hits > 0);
         server.stop();
     }
 }

@@ -4,6 +4,13 @@
 //! byte, then tag-specific fields; byte strings are `u32 LE` length +
 //! bytes. No external serialization deps — the codec is exhaustively
 //! round-trip and fuzz tested below.
+//!
+//! Two decoding layers: [`RequestRef`] borrows key/value slices straight
+//! out of the frame buffer (the server's zero-allocation path), while
+//! [`Request`]/[`Response`] are the owned forms used by clients, the
+//! in-process manager, and the simulator. Encoders append into
+//! caller-owned buffers (`encode_into`) so steady-state connections
+//! reuse one scratch buffer per direction.
 
 use std::io::{self, Read, Write};
 
@@ -13,6 +20,16 @@ pub enum Request {
     Get { key: Vec<u8> },
     Put { key: Vec<u8>, value: Vec<u8> },
     Delete { key: Vec<u8> },
+    Ping,
+}
+
+/// Borrowed view of a [`Request`], decoded without copying key or value
+/// bytes out of the frame buffer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RequestRef<'a> {
+    Get { key: &'a [u8] },
+    Put { key: &'a [u8], value: &'a [u8] },
+    Delete { key: &'a [u8] },
     Ping,
 }
 
@@ -58,14 +75,18 @@ fn put_bytes(out: &mut Vec<u8>, b: &[u8]) {
     out.extend_from_slice(b);
 }
 
-fn take_bytes(buf: &[u8], off: &mut usize) -> Result<Vec<u8>, CodecError> {
+fn take_bytes_ref<'a>(buf: &'a [u8], off: &mut usize) -> Result<&'a [u8], CodecError> {
     let len = take_u32(buf, off)? as usize;
     if buf.len() - *off < len {
         return Err(CodecError::Truncated);
     }
-    let out = buf[*off..*off + len].to_vec();
+    let out = &buf[*off..*off + len];
     *off += len;
     Ok(out)
+}
+
+fn take_bytes(buf: &[u8], off: &mut usize) -> Result<Vec<u8>, CodecError> {
+    take_bytes_ref(buf, off).map(|b| b.to_vec())
 }
 
 fn take_u32(buf: &[u8], off: &mut usize) -> Result<u32, CodecError> {
@@ -102,29 +123,9 @@ impl std::fmt::Display for CodecError {
 }
 impl std::error::Error for CodecError {}
 
-impl Request {
-    pub fn encode(&self) -> Vec<u8> {
-        let mut out = Vec::new();
-        match self {
-            Request::Get { key } => {
-                out.push(TAG_GET);
-                put_bytes(&mut out, key);
-            }
-            Request::Put { key, value } => {
-                out.push(TAG_PUT);
-                put_bytes(&mut out, key);
-                put_bytes(&mut out, value);
-            }
-            Request::Delete { key } => {
-                out.push(TAG_DELETE);
-                put_bytes(&mut out, key);
-            }
-            Request::Ping => out.push(TAG_PING),
-        }
-        out
-    }
-
-    pub fn decode(buf: &[u8]) -> Result<Request, CodecError> {
+impl<'a> RequestRef<'a> {
+    /// Decode a request, borrowing key/value bytes from `buf`.
+    pub fn decode(buf: &'a [u8]) -> Result<RequestRef<'a>, CodecError> {
         let mut off = 0usize;
         if buf.is_empty() {
             return Err(CodecError::Truncated);
@@ -132,13 +133,13 @@ impl Request {
         let tag = buf[0];
         off += 1;
         let req = match tag {
-            TAG_GET => Request::Get { key: take_bytes(buf, &mut off)? },
-            TAG_PUT => Request::Put {
-                key: take_bytes(buf, &mut off)?,
-                value: take_bytes(buf, &mut off)?,
+            TAG_GET => RequestRef::Get { key: take_bytes_ref(buf, &mut off)? },
+            TAG_PUT => RequestRef::Put {
+                key: take_bytes_ref(buf, &mut off)?,
+                value: take_bytes_ref(buf, &mut off)?,
             },
-            TAG_DELETE => Request::Delete { key: take_bytes(buf, &mut off)? },
-            TAG_PING => Request::Ping,
+            TAG_DELETE => RequestRef::Delete { key: take_bytes_ref(buf, &mut off)? },
+            TAG_PING => RequestRef::Ping,
             t => return Err(CodecError::UnknownTag(t)),
         };
         if off != buf.len() {
@@ -147,20 +148,97 @@ impl Request {
         Ok(req)
     }
 
-    /// Approximate bytes on the wire (for bandwidth accounting).
+    /// Copy into the owned form.
+    pub fn to_owned(self) -> Request {
+        match self {
+            RequestRef::Get { key } => Request::Get { key: key.to_vec() },
+            RequestRef::Put { key, value } => {
+                Request::Put { key: key.to_vec(), value: value.to_vec() }
+            }
+            RequestRef::Delete { key } => Request::Delete { key: key.to_vec() },
+            RequestRef::Ping => Request::Ping,
+        }
+    }
+
+    /// Append the encoded payload to `out` (does not clear it). This is
+    /// the single encoder: the owned [`Request`] delegates here.
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        match self {
+            RequestRef::Get { key } => {
+                out.push(TAG_GET);
+                put_bytes(out, key);
+            }
+            RequestRef::Put { key, value } => {
+                out.push(TAG_PUT);
+                put_bytes(out, key);
+                put_bytes(out, value);
+            }
+            RequestRef::Delete { key } => {
+                out.push(TAG_DELETE);
+                put_bytes(out, key);
+            }
+            RequestRef::Ping => out.push(TAG_PING),
+        }
+    }
+
+    /// Exact bytes on the wire (frame header + payload), without
+    /// encoding.
     pub fn wire_bytes(&self) -> usize {
-        4 + self.encode().len()
+        4 + 1
+            + match self {
+                RequestRef::Get { key } | RequestRef::Delete { key } => 4 + key.len(),
+                RequestRef::Put { key, value } => 8 + key.len() + value.len(),
+                RequestRef::Ping => 0,
+            }
     }
 }
 
-impl Response {
+impl Request {
+    /// Borrowed view (for allocation-free encoding of owned requests).
+    pub fn to_ref(&self) -> RequestRef<'_> {
+        match self {
+            Request::Get { key } => RequestRef::Get { key },
+            Request::Put { key, value } => RequestRef::Put { key, value },
+            Request::Delete { key } => RequestRef::Delete { key },
+            Request::Ping => RequestRef::Ping,
+        }
+    }
+
+    /// Append the encoded payload to `out` (does not clear it).
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        self.to_ref().encode_into(out)
+    }
+
     pub fn encode(&self) -> Vec<u8> {
         let mut out = Vec::new();
+        self.encode_into(&mut out);
+        out
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Request, CodecError> {
+        RequestRef::decode(buf).map(RequestRef::to_owned)
+    }
+
+    /// Exact bytes on the wire (frame header + payload), computed without
+    /// encoding (used for bandwidth accounting on the simulator hot path).
+    pub fn wire_bytes(&self) -> usize {
+        self.to_ref().wire_bytes()
+    }
+}
+
+/// Append a `Response::Value` payload built from a borrowed value slice:
+/// the server's zero-copy GET path encodes straight from the store's
+/// entry into the connection's reusable output buffer.
+pub fn encode_value_response(out: &mut Vec<u8>, value: &[u8]) {
+    out.push(TAG_VALUE);
+    put_bytes(out, value);
+}
+
+impl Response {
+    /// Append the encoded payload to `out` (does not clear it).
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
         match self {
-            Response::Value(v) => {
-                out.push(TAG_VALUE);
-                put_bytes(&mut out, v);
-            }
+            Response::Value(v) => encode_value_response(out, v),
             Response::NotFound => out.push(TAG_NOT_FOUND),
             Response::Stored => out.push(TAG_STORED),
             Response::Rejected => out.push(TAG_REJECTED),
@@ -175,9 +253,14 @@ impl Response {
             Response::Pong => out.push(TAG_PONG),
             Response::Error(msg) => {
                 out.push(TAG_ERROR);
-                put_bytes(&mut out, msg.as_bytes());
+                put_bytes(out, msg.as_bytes());
             }
         }
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        self.encode_into(&mut out);
         out
     }
 
@@ -212,8 +295,19 @@ impl Response {
         Ok(resp)
     }
 
+    /// Exact bytes on the wire (frame header + payload), without encoding.
     pub fn wire_bytes(&self) -> usize {
-        4 + self.encode().len()
+        4 + 1
+            + match self {
+                Response::Value(v) => 4 + v.len(),
+                Response::NotFound
+                | Response::Stored
+                | Response::Rejected
+                | Response::Pong => 0,
+                Response::Deleted(_) => 1,
+                Response::Throttled { .. } => 8,
+                Response::Error(msg) => 4 + msg.len(),
+            }
     }
 }
 
@@ -224,8 +318,10 @@ pub fn write_frame<W: Write>(w: &mut W, payload: &[u8]) -> io::Result<()> {
     w.flush()
 }
 
-/// Read one length-prefixed frame.
-pub fn read_frame<R: Read>(r: &mut R) -> io::Result<Vec<u8>> {
+/// Read one length-prefixed frame into a reusable buffer (resized in
+/// place and fully overwritten; steady state performs no allocation, and
+/// no redundant zero-fill of bytes `read_exact` is about to overwrite).
+pub fn read_frame_into<R: Read>(r: &mut R, buf: &mut Vec<u8>) -> io::Result<()> {
     let mut len_buf = [0u8; 4];
     r.read_exact(&mut len_buf)?;
     let len = u32::from_le_bytes(len_buf) as usize;
@@ -235,9 +331,74 @@ pub fn read_frame<R: Read>(r: &mut R) -> io::Result<Vec<u8>> {
             CodecError::FrameTooLarge(len),
         ));
     }
-    let mut buf = vec![0u8; len];
-    r.read_exact(&mut buf)?;
+    buf.resize(len, 0);
+    r.read_exact(buf)?;
+    Ok(())
+}
+
+/// Read one length-prefixed frame into a fresh buffer.
+pub fn read_frame<R: Read>(r: &mut R) -> io::Result<Vec<u8>> {
+    let mut buf = Vec::new();
+    read_frame_into(r, &mut buf)?;
     Ok(buf)
+}
+
+/// `read_exact` that survives read timeouts without losing data: plain
+/// `read_exact` discards whatever it consumed before a `WouldBlock`/
+/// `TimedOut`, desynchronizing the frame stream if the peer stalls
+/// mid-frame. This loop keeps partial progress and polls `keep_going`
+/// at every timeout tick; returns Ok(false) when told to stop.
+fn read_exact_interruptible<R: Read>(
+    r: &mut R,
+    buf: &mut [u8],
+    keep_going: &impl Fn() -> bool,
+) -> io::Result<bool> {
+    let mut filled = 0;
+    while filled < buf.len() {
+        if !keep_going() {
+            return Ok(false);
+        }
+        match r.read(&mut buf[filled..]) {
+            Ok(0) => return Err(io::ErrorKind::UnexpectedEof.into()),
+            Ok(n) => filled += n,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    io::ErrorKind::WouldBlock
+                        | io::ErrorKind::TimedOut
+                        | io::ErrorKind::Interrupted
+                ) => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(true)
+}
+
+/// [`read_frame_into`] for sockets with a read timeout: tolerates
+/// mid-frame timeouts without desync, polling `keep_going` while
+/// waiting. Returns Ok(true) with a complete frame in `buf`, Ok(false)
+/// if `keep_going` said to stop, or the I/O / frame-size error.
+pub fn read_frame_into_patient<R: Read>(
+    r: &mut R,
+    buf: &mut Vec<u8>,
+    keep_going: impl Fn() -> bool,
+) -> io::Result<bool> {
+    let mut len_buf = [0u8; 4];
+    if !read_exact_interruptible(r, &mut len_buf, &keep_going)? {
+        return Ok(false);
+    }
+    let len = u32::from_le_bytes(len_buf) as usize;
+    if len > MAX_FRAME {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            CodecError::FrameTooLarge(len),
+        ));
+    }
+    buf.resize(len, 0);
+    if !read_exact_interruptible(r, buf, &keep_going)? {
+        return Ok(false);
+    }
+    Ok(true)
 }
 
 #[cfg(test)]
@@ -256,6 +417,25 @@ mod tests {
         for req in cases {
             let enc = req.encode();
             assert_eq!(Request::decode(&enc).unwrap(), req);
+            // The borrowed decoder sees the same structure.
+            assert_eq!(RequestRef::decode(&enc).unwrap().to_owned(), req);
+        }
+    }
+
+    #[test]
+    fn request_ref_borrows_from_frame() {
+        let req = Request::Put { key: b"key".to_vec(), value: vec![9u8; 64] };
+        let enc = req.encode();
+        match RequestRef::decode(&enc).unwrap() {
+            RequestRef::Put { key, value } => {
+                assert_eq!(key, b"key");
+                assert_eq!(value, &[9u8; 64][..]);
+                // Borrowed straight out of the encoded frame.
+                let base = enc.as_ptr() as usize;
+                let kp = key.as_ptr() as usize;
+                assert!(kp >= base && kp < base + enc.len());
+            }
+            other => panic!("wrong variant {other:?}"),
         }
     }
 
@@ -280,6 +460,42 @@ mod tests {
     }
 
     #[test]
+    fn wire_bytes_matches_encoding_exactly() {
+        let reqs = [
+            Request::Get { key: b"abc".to_vec() },
+            Request::Put { key: b"k".to_vec(), value: vec![0u8; 777] },
+            Request::Delete { key: vec![] },
+            Request::Ping,
+        ];
+        for r in &reqs {
+            assert_eq!(r.wire_bytes(), 4 + r.encode().len(), "{r:?}");
+        }
+        let resps = [
+            Response::Value(vec![0u8; 321]),
+            Response::NotFound,
+            Response::Stored,
+            Response::Rejected,
+            Response::Deleted(true),
+            Response::Throttled { retry_after_us: 9 },
+            Response::Pong,
+            Response::Error("e".into()),
+        ];
+        for r in &resps {
+            assert_eq!(r.wire_bytes(), 4 + r.encode().len(), "{r:?}");
+        }
+    }
+
+    #[test]
+    fn encode_into_appends_without_clearing() {
+        let mut out = vec![0xFF];
+        Response::Pong.encode_into(&mut out);
+        assert_eq!(out, vec![0xFF, TAG_PONG]);
+        let mut out2 = Vec::new();
+        encode_value_response(&mut out2, &[1, 2]);
+        assert_eq!(Response::decode(&out2).unwrap(), Response::Value(vec![1, 2]));
+    }
+
+    #[test]
     fn rejects_malformed() {
         assert_eq!(Request::decode(&[]), Err(CodecError::Truncated));
         assert_eq!(Request::decode(&[99]), Err(CodecError::UnknownTag(99)));
@@ -297,6 +513,7 @@ mod tests {
             let len = rng.below(64) as usize;
             let buf: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
             let _ = Request::decode(&buf);
+            let _ = RequestRef::decode(&buf);
             let _ = Response::decode(&buf);
         }
     }
@@ -307,6 +524,21 @@ mod tests {
         write_frame(&mut buf, b"hello frame").unwrap();
         let mut cursor = std::io::Cursor::new(buf);
         assert_eq!(read_frame(&mut cursor).unwrap(), b"hello frame");
+    }
+
+    #[test]
+    fn frame_into_reuses_buffer() {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, &[7u8; 100]).unwrap();
+        write_frame(&mut wire, &[8u8; 50]).unwrap();
+        let mut cursor = std::io::Cursor::new(wire);
+        let mut buf = Vec::with_capacity(128);
+        let cap = buf.capacity();
+        read_frame_into(&mut cursor, &mut buf).unwrap();
+        assert_eq!(buf, vec![7u8; 100]);
+        read_frame_into(&mut cursor, &mut buf).unwrap();
+        assert_eq!(buf, vec![8u8; 50]);
+        assert_eq!(buf.capacity(), cap, "reused read buffer reallocated");
     }
 
     #[test]

@@ -125,7 +125,7 @@ impl Manager {
         }
         match req {
             Request::Get { key } => match entry.store.get(key) {
-                Some(v) => Response::Value(v),
+                Some(v) => Response::Value(v.to_vec()),
                 None => Response::NotFound,
             },
             Request::Put { key, value } => {

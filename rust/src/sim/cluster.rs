@@ -377,9 +377,11 @@ impl ClusterSim {
         match op {
             Op::Read { .. } => {
                 if is_local {
-                    // Local tier: populate lazily, always resident.
+                    // Local tier: populate lazily, always resident. The
+                    // presence probe uses `touch` so no value bytes are
+                    // read or copied on this hot path.
                     let c = &mut self.consumers[ci];
-                    if c.local.get(&key_bytes).is_none() {
+                    if !c.local.touch(&key_bytes) {
                         let val = vec![0xAB; value_size];
                         c.local.put(&key_bytes, &val);
                     }

@@ -1,0 +1,39 @@
+//! Shared non-cryptographic hashing: FNV-1a 64, used for shard routing
+//! ([`crate::kv::ShardedKvStore`]) and SHARDS spatial sampling
+//! ([`crate::consumer::mrc`]). Cheap, allocation-free, good spread for
+//! short keys.
+
+/// 64-bit FNV-1a over a byte string.
+#[inline]
+pub fn fnv1a_64(key: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in key {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // FNV-1a 64 reference values.
+        assert_eq!(fnv1a_64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a_64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a_64(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn spreads_sequential_keys() {
+        let mut buckets = [0u32; 8];
+        for i in 0..8000u32 {
+            buckets[(fnv1a_64(format!("user{i}").as_bytes()) % 8) as usize] += 1;
+        }
+        for (i, &n) in buckets.iter().enumerate() {
+            assert!(n > 500, "bucket {i} starved: {n}");
+        }
+    }
+}

@@ -5,6 +5,7 @@
 
 pub mod avl;
 pub mod bench;
+pub mod hash;
 pub mod rng;
 pub mod stats;
 pub mod timeseries;
@@ -14,4 +15,4 @@ pub use avl::WindowedDist;
 pub use rng::Rng;
 pub use stats::{Histogram, LatencyRecorder, Summary};
 pub use timeseries::TimeSeries;
-pub use token_bucket::TokenBucket;
+pub use token_bucket::{AtomicTokenBucket, TokenBucket};

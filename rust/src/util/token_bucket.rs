@@ -4,6 +4,7 @@
 //! refused and the consumer notified.
 
 use crate::core::SimTime;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
 
 /// Classic token bucket parameterized in bytes/second, advanced on the
 /// simulation (or wall) clock.
@@ -69,6 +70,113 @@ impl TokenBucket {
     }
 }
 
+/// Micro-byte token scale for [`AtomicTokenBucket`]: storing tokens in
+/// 1e-6-byte units makes the refill `elapsed_us * rate_bps` exact
+/// integer arithmetic, so sub-byte refills from frequent polling are
+/// never truncated away.
+const MICRO: i64 = 1_000_000;
+
+/// Lock-free token bucket for the TCP server's shared rate limiter.
+///
+/// The previous design put one `Mutex<TokenBucket>` in front of every
+/// connection thread, which re-serialized the request path that shard
+/// partitioning had just parallelized. Here admission is a single CAS
+/// loop on an atomic token counter, and refill piggybacks on whichever
+/// caller first observes the clock advancing (a failed refill race
+/// simply under-refills, never over-admits).
+pub struct AtomicTokenBucket {
+    rate_bps: u64,
+    burst_micro: i64,
+    tokens_micro: AtomicI64,
+    last_us: AtomicU64,
+}
+
+impl AtomicTokenBucket {
+    /// `rate_bps` bytes/second sustained; `burst_bytes` bucket depth.
+    pub fn new(rate_bps: u64, burst_bytes: u64) -> Self {
+        let burst_micro = (burst_bytes as i64).saturating_mul(MICRO);
+        AtomicTokenBucket {
+            rate_bps,
+            burst_micro,
+            tokens_micro: AtomicI64::new(burst_micro),
+            last_us: AtomicU64::new(0),
+        }
+    }
+
+    fn refill(&self, now_us: u64) {
+        let last = self.last_us.load(Ordering::Acquire);
+        if now_us <= last {
+            return;
+        }
+        // Claim the interval [last, now_us). Losing the race forfeits
+        // this caller's refill (conservative: never double-credits).
+        if self
+            .last_us
+            .compare_exchange(last, now_us, Ordering::AcqRel, Ordering::Relaxed)
+            .is_err()
+        {
+            return;
+        }
+        // rate_bps bytes/s == rate_bps micro-bytes/µs: exact.
+        let add_u = (now_us - last) as u128 * self.rate_bps as u128;
+        let add = add_u.min(i64::MAX as u128) as i64;
+        let mut cur = self.tokens_micro.load(Ordering::Relaxed);
+        loop {
+            let next = cur.saturating_add(add).min(self.burst_micro);
+            match self.tokens_micro.compare_exchange_weak(
+                cur,
+                next,
+                Ordering::AcqRel,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return,
+                Err(c) => cur = c,
+            }
+        }
+    }
+
+    /// Try to admit an I/O of `bytes` at `now_us` (microseconds on any
+    /// monotone clock shared by the callers).
+    pub fn try_consume(&self, now_us: u64, bytes: u64) -> bool {
+        self.refill(now_us);
+        let need = (bytes as i64).saturating_mul(MICRO);
+        let mut cur = self.tokens_micro.load(Ordering::Relaxed);
+        loop {
+            if cur < need {
+                return false;
+            }
+            match self.tokens_micro.compare_exchange_weak(
+                cur,
+                cur - need,
+                Ordering::AcqRel,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return true,
+                Err(c) => cur = c,
+            }
+        }
+    }
+
+    /// Microseconds until `bytes` tokens could be available (None if the
+    /// request exceeds the burst depth or the rate is zero).
+    pub fn time_until_us(&self, now_us: u64, bytes: u64) -> Option<u64> {
+        let need = (bytes as i64).saturating_mul(MICRO);
+        if need > self.burst_micro || self.rate_bps == 0 {
+            return None;
+        }
+        self.refill(now_us);
+        let cur = self.tokens_micro.load(Ordering::Relaxed);
+        if cur >= need {
+            return Some(0);
+        }
+        Some(((need - cur) as u64).div_ceil(self.rate_bps))
+    }
+
+    pub fn rate_bps(&self) -> u64 {
+        self.rate_bps
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -124,5 +232,76 @@ mod tests {
         let wait = tb.time_until(SimTime::ZERO, 100).unwrap();
         assert!((wait.as_secs_f64() - 0.1).abs() < 1e-6);
         assert_eq!(tb.time_until(SimTime::ZERO, 5000), None);
+    }
+
+    #[test]
+    fn atomic_admits_up_to_burst_and_refills() {
+        let tb = AtomicTokenBucket::new(1000, 500);
+        assert!(tb.try_consume(0, 500));
+        assert!(!tb.try_consume(0, 1));
+        // After 0.5s at 1000 B/s, 500 bytes are back.
+        assert!(!tb.try_consume(500_000, 501));
+        assert!(tb.try_consume(500_000, 500));
+    }
+
+    #[test]
+    fn atomic_time_until_estimates() {
+        let tb = AtomicTokenBucket::new(1000, 1000);
+        assert!(tb.try_consume(0, 1000));
+        // 100 bytes at 1000 B/s = 0.1s.
+        assert_eq!(tb.time_until_us(0, 100), Some(100_000));
+        assert_eq!(tb.time_until_us(0, 5000), None);
+    }
+
+    #[test]
+    fn atomic_sub_byte_refills_not_lost() {
+        // 1 B/s polled every 100µs: naive byte-granular refill would
+        // truncate every increment to zero forever.
+        let tb = AtomicTokenBucket::new(1, 10);
+        assert!(tb.try_consume(0, 10));
+        let mut now = 0u64;
+        for _ in 0..10_000 {
+            now += 100;
+            let _ = tb.try_consume(now, 10);
+        }
+        // 1 second elapsed: exactly 1 byte should have accumulated.
+        assert!(tb.try_consume(now, 1));
+        assert!(!tb.try_consume(now, 1));
+    }
+
+    #[test]
+    fn atomic_concurrent_never_over_admits() {
+        use std::sync::Arc;
+        let rate = 1_000_000u64;
+        let burst = 10_000u64;
+        let tb = Arc::new(AtomicTokenBucket::new(rate, burst));
+        let clock = Arc::new(AtomicU64::new(0));
+        let admitted = Arc::new(AtomicU64::new(0));
+        let handles: Vec<_> = (0..4)
+            .map(|t| {
+                let tb = tb.clone();
+                let clock = clock.clone();
+                let admitted = admitted.clone();
+                std::thread::spawn(move || {
+                    let mut rng = crate::util::rng::Rng::new(200 + t);
+                    for _ in 0..20_000 {
+                        let now = clock.fetch_add(2, Ordering::Relaxed) + 2;
+                        let req = 1 + rng.below(400);
+                        if tb.try_consume(now, req) {
+                            admitted.fetch_add(req, Ordering::Relaxed);
+                        }
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        // Refill credits are bounded by rate * elapsed (claimed intervals
+        // never overlap), so admission is bounded by burst + rate * t.
+        let elapsed_us = clock.load(Ordering::Relaxed);
+        let bound = burst + rate * elapsed_us / 1_000_000 + 1;
+        let got = admitted.load(Ordering::Relaxed);
+        assert!(got <= bound, "admitted {got} > bound {bound}");
     }
 }

@@ -89,7 +89,7 @@ fn prop_kv_accounting_invariants() {
                     kv.put(k.as_bytes(), &vec![0u8; 1 + rng.below(3000) as usize]);
                 }
                 2 => {
-                    kv.get(k.as_bytes());
+                    let _ = kv.get(k.as_bytes());
                 }
                 _ => {
                     kv.delete(k.as_bytes());

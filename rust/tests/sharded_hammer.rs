@@ -1,0 +1,211 @@
+//! Multi-threaded hammer tests for the sharded producer store: byte
+//! accounting must stay consistent under concurrent GET/PUT/DELETE from
+//! many threads, return exactly to zero after a full delete, and the
+//! cross-shard budget operations must distribute exactly.
+
+use memtrade::kv::ShardedKvStore;
+use memtrade::net::tcp::{KvClient, ProducerStoreServer};
+use memtrade::util::rng::Rng;
+use std::sync::Arc;
+
+/// Shared key space: every thread draws from the same 4x800 keys so
+/// shards see real cross-thread contention, not private partitions.
+fn hammer_key(rng: &mut Rng) -> String {
+    format!("t{}k{}", rng.below(4), rng.below(800))
+}
+
+#[test]
+fn hammer_accounting_invariants_under_concurrency() {
+    let store = Arc::new(ShardedKvStore::new(8 << 20, 8, 42));
+    let handles: Vec<_> = (0..8)
+        .map(|t| {
+            let store = store.clone();
+            std::thread::spawn(move || {
+                let mut rng = Rng::new(1000 + t);
+                let mut buf = Vec::with_capacity(2048);
+                for _ in 0..20_000 {
+                    let k = hammer_key(&mut rng);
+                    match rng.below(10) {
+                        0..=5 => {
+                            store.put(k.as_bytes(), &vec![0u8; 1 + rng.below(1500) as usize]);
+                        }
+                        6..=8 => {
+                            let _ = store.get_into(k.as_bytes(), &mut buf);
+                        }
+                        _ => {
+                            let _ = store.delete(k.as_bytes());
+                        }
+                    }
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    // Aggregate invariants after the storm.
+    assert!(store.used_bytes() <= store.max_bytes());
+    assert!(store.live_bytes() <= store.used_bytes());
+    let stats = store.stats();
+    assert!(stats.puts > 0 && stats.hits > 0 && stats.deletes > 0);
+
+    // Delete every possible key: accounting must return exactly to zero
+    // across all shards.
+    for t in 0..4u64 {
+        for i in 0..800u64 {
+            let _ = store.delete(format!("t{t}k{i}").as_bytes());
+        }
+    }
+    assert_eq!(store.len(), 0);
+    assert_eq!(store.used_bytes(), 0);
+    assert_eq!(store.live_bytes(), 0);
+    assert!((store.fragmentation() - 1.0).abs() < 1e-12);
+}
+
+#[test]
+fn concurrent_readers_see_consistent_values() {
+    // Writers continuously overwrite whole-value patterns; readers must
+    // never observe a torn mix (each value is byte-uniform).
+    let store = Arc::new(ShardedKvStore::new(64 << 20, 8, 7));
+    for i in 0..64u32 {
+        store.put(format!("k{i}").as_bytes(), &vec![0u8; 512]);
+    }
+    let writers: Vec<_> = (0..2)
+        .map(|t| {
+            let store = store.clone();
+            std::thread::spawn(move || {
+                let mut rng = Rng::new(50 + t);
+                for _ in 0..30_000 {
+                    let i = rng.below(64);
+                    let fill = rng.below(256) as u8;
+                    store.put(format!("k{i}").as_bytes(), &vec![fill; 512]);
+                }
+            })
+        })
+        .collect();
+    let readers: Vec<_> = (0..4)
+        .map(|t| {
+            let store = store.clone();
+            std::thread::spawn(move || {
+                let mut rng = Rng::new(80 + t);
+                let mut buf = Vec::with_capacity(1024);
+                for _ in 0..30_000 {
+                    let i = rng.below(64);
+                    if store.get_into(format!("k{i}").as_bytes(), &mut buf) {
+                        assert_eq!(buf.len(), 512);
+                        let first = buf[0];
+                        assert!(buf.iter().all(|&b| b == first), "torn read");
+                    }
+                }
+            })
+        })
+        .collect();
+    for h in writers.into_iter().chain(readers) {
+        h.join().unwrap();
+    }
+}
+
+#[test]
+fn cross_shard_shrink_is_exact_and_proportional() {
+    let store = ShardedKvStore::new(4 << 20, 4, 11);
+    for i in 0..3000u32 {
+        store.put(format!("k{i}").as_bytes(), &vec![1u8; 900]);
+    }
+    let used_before = store.used_bytes();
+    assert!(used_before > 1 << 20);
+
+    let freed = store.shrink_to(1 << 20);
+    // Budgets sum exactly to the new max, and eviction honored it.
+    assert_eq!(store.max_bytes(), 1 << 20);
+    assert!(store.used_bytes() <= 1 << 20);
+    assert_eq!(freed, used_before - store.used_bytes());
+
+    // A second shrink of a shrunken store stays exact.
+    let freed2 = store.shrink_to(256 << 10);
+    assert_eq!(store.max_bytes(), 256 << 10);
+    assert!(store.used_bytes() <= 256 << 10);
+    assert!(freed2 > 0);
+
+    // Growing back restores the exact total budget.
+    store.grow_to(4 << 20);
+    assert_eq!(store.max_bytes(), 4 << 20);
+}
+
+#[test]
+fn concurrent_shrink_while_serving() {
+    // Budget reclaim racing live traffic must keep invariants; the final
+    // budget must be what the last shrink set.
+    let store = Arc::new(ShardedKvStore::new(16 << 20, 8, 13));
+    for i in 0..8000u32 {
+        store.put(format!("k{i}").as_bytes(), &vec![2u8; 1024]);
+    }
+    let traffic: Vec<_> = (0..4)
+        .map(|t| {
+            let store = store.clone();
+            std::thread::spawn(move || {
+                let mut rng = Rng::new(500 + t);
+                let mut buf = Vec::new();
+                for _ in 0..10_000 {
+                    let k = format!("k{}", rng.below(8000));
+                    if rng.below(2) == 0 {
+                        let _ = store.get_into(k.as_bytes(), &mut buf);
+                    } else {
+                        store.put(k.as_bytes(), &vec![3u8; 1024]);
+                    }
+                }
+            })
+        })
+        .collect();
+    let shrinker = {
+        let store = store.clone();
+        std::thread::spawn(move || {
+            for step in 0..20u32 {
+                let target: usize = (16 << 20) >> (step % 3); // 16M, 8M, 4M
+                store.shrink_to(target);
+                store.grow_to(16 << 20);
+            }
+            store.shrink_to(2 << 20);
+        })
+    };
+    for h in traffic {
+        h.join().unwrap();
+    }
+    shrinker.join().unwrap();
+    assert_eq!(store.max_bytes(), 2 << 20);
+    // Traffic stopped before the final shrink finished joining, so the
+    // store must now fit its final budget.
+    assert!(store.used_bytes() <= 2 << 20);
+    assert!(store.live_bytes() <= store.used_bytes());
+}
+
+#[test]
+fn sharded_tcp_server_concurrent_clients() {
+    let server =
+        ProducerStoreServer::start_sharded("127.0.0.1:0", 16 << 20, None, 9, 4).unwrap();
+    let addr = server.addr();
+    let handles: Vec<_> = (0..8)
+        .map(|t| {
+            std::thread::spawn(move || {
+                let mut c = KvClient::connect(addr).unwrap();
+                for i in 0..100 {
+                    let key = format!("t{t}-k{i}");
+                    assert!(c.put(key.as_bytes(), &vec![t as u8; 512]).unwrap());
+                    assert_eq!(c.get(key.as_bytes()).unwrap(), Some(vec![t as u8; 512]));
+                }
+                for i in 0..100 {
+                    assert!(c.delete(format!("t{t}-k{i}").as_bytes()).unwrap());
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let stats = server.stats();
+    assert_eq!(stats.puts, 800);
+    assert_eq!(stats.hits, 800);
+    assert_eq!(stats.deletes, 800);
+    assert_eq!(server.store().len(), 0);
+    assert_eq!(server.store().used_bytes(), 0);
+    server.stop();
+}
