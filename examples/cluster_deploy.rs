@@ -16,7 +16,8 @@ fn main() {
     let quick = std::env::args().any(|a| a == "--quick");
     let (n_producers, n_consumers, minutes) = if quick { (16, 12, 4) } else { (64, 46, 20) };
     println!(
-        "== Memtrade cluster deployment: {n_producers} producers + {n_consumers} consumers, {minutes} simulated minutes =="
+        "== Memtrade cluster deployment: {n_producers} producers + {n_consumers} consumers, \
+         {minutes} simulated minutes =="
     );
 
     let mut table = Table::new(vec![

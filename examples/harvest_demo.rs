@@ -24,7 +24,10 @@ fn main() {
 
     let epoch = SimTime::from_secs(5);
     println!("phase 1: steady workload, harvesting (40 min)...");
-    println!("{:>6} {:>10} {:>10} {:>10} {:>10} {:>12}", "t(min)", "RSS", "Silo", "disk", "free", "latency");
+    println!(
+        "{:>6} {:>10} {:>10} {:>10} {:>10} {:>12}",
+        "t(min)", "RSS", "Silo", "disk", "free", "latency"
+    );
     let mut e = 0u64;
     let show = |p: &Producer, e: u64, lat: f64| {
         if e % 60 == 0 {

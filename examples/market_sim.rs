@@ -76,6 +76,9 @@ fn main() {
     }
     println!();
     table.print();
-    println!("\n(paper §7.4: >16% relative hit-ratio gain; consumer cost ~82% below spot;\n cluster utilization raised toward ~98% under local-search pricing)\n");
+    println!(
+        "\n(paper §7.4: >16% relative hit-ratio gain; consumer cost ~82% below spot;\n \
+         cluster utilization raised toward ~98% under local-search pricing)\n"
+    );
     println!("market_sim OK");
 }

@@ -1,0 +1,177 @@
+//! Tour of the networked marketplace: a broker daemon, two producer
+//! agents, and a lease-aware consumer pool, all over real TCP in one
+//! process — then a producer failure mid-run, absorbed as cache misses
+//! and healed by automatic re-provisioning.
+//!
+//! Run with: `cargo run --release --example marketplace`
+
+use memtrade::consumer::client::SecureKv;
+use memtrade::core::config::BrokerConfig;
+use memtrade::core::SimTime;
+use memtrade::market::{
+    BrokerServer, BrokerServerConfig, ProducerAgent, ProducerAgentConfig, RemotePool,
+    RemotePoolConfig,
+};
+use std::time::{Duration, Instant};
+
+fn main() {
+    const SLAB: u64 = 1 << 20; // 1 MB slabs so the tour is instant
+
+    println!("=== 1. broker daemon ===");
+    let broker = BrokerServer::start(
+        "127.0.0.1:0",
+        BrokerConfig {
+            slab_bytes: SLAB,
+            min_lease: SimTime::from_secs(10),
+            ..Default::default()
+        },
+        BrokerServerConfig {
+            tick: Duration::from_millis(20),
+            producer_timeout: Duration::from_millis(400),
+            forecast_min_samples: usize::MAX,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    println!("broker listening on {} (control plane)", broker.addr());
+
+    println!("\n=== 2. producer agents register and heartbeat ===");
+    let mk_agent = |id: u64| {
+        ProducerAgent::start(ProducerAgentConfig {
+            producer: id,
+            broker: broker.addr().to_string(),
+            data_addr: "127.0.0.1:0".to_string(),
+            advertise: None,
+            capacity_bytes: 32 * SLAB,
+            harvest: false,
+            heartbeat: Duration::from_millis(50),
+            shards: 2,
+            rate_bps: None,
+            seed: id,
+        })
+        .unwrap()
+    };
+    let mut agents = vec![mk_agent(1), mk_agent(2)];
+    for a in &agents {
+        println!("producer agent up, data plane at {}", a.data_addr());
+    }
+
+    println!("\n=== 3. consumer pool leases slabs ===");
+    let mut pool = RemotePool::connect(RemotePoolConfig {
+        consumer: 9,
+        broker: broker.addr().to_string(),
+        target_slabs: 48,
+        lease_ttl: Duration::from_secs(10),
+        renew_margin: Duration::from_secs(3),
+        ..Default::default()
+    })
+    .unwrap();
+    // Wait until the grants are held AND the producer stores have grown
+    // to their lease targets (that happens on the next heartbeat ack —
+    // PUTs before it would bounce off a zero-budget store).
+    let t_mount = Instant::now();
+    loop {
+        let stores_ready = agents.iter().all(|a| {
+            let max = a.store().map(|s| s.max_bytes()).unwrap_or(0) as u64;
+            max == a.target_bytes() && max > 0
+        });
+        if pool.held_slabs() >= 48 && stores_ready {
+            break;
+        }
+        if t_mount.elapsed() > Duration::from_secs(10) {
+            eprintln!(
+                "gave up waiting for capacity ({} slabs held)",
+                pool.held_slabs()
+            );
+            return;
+        }
+        pool.maintain();
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    println!(
+        "holding {} slabs across {} leases: {:?}",
+        pool.held_slabs(),
+        pool.live_slots(),
+        pool.live_endpoints()
+    );
+
+    println!("\n=== 4. secure traffic over leased memory ===");
+    let mut secure = SecureKv::new(Some([7u8; 16]), true, 1, 3);
+    let value = vec![0xAB_u8; 512];
+    let n = 2_000u32;
+    let t0 = Instant::now();
+    for i in 0..n {
+        assert!(secure.put(&mut pool, format!("key{i}").as_bytes(), &value));
+    }
+    let mut hits = 0;
+    for i in 0..n {
+        if secure.get(&mut pool, format!("key{i}").as_bytes()).is_some() {
+            hits += 1;
+        }
+    }
+    println!(
+        "{n} PUTs + {n} GETs in {:.0} ms, hit ratio {:.3}",
+        t0.elapsed().as_secs_f64() * 1e3,
+        hits as f64 / n as f64
+    );
+    for a in &agents {
+        println!(
+            "producer {} store: {} entries, {} MB budget",
+            a.data_addr(),
+            a.store().map(|s| s.len()).unwrap_or(0),
+            a.target_bytes() >> 20
+        );
+    }
+
+    println!("\n=== 5. producer failure mid-run ===");
+    println!("killing producer {} (no deregister — a crash)", agents[0].data_addr());
+    agents[0].kill();
+    let t1 = Instant::now();
+    let mut misses = 0;
+    let mut survived = 0;
+    for i in 0..n {
+        match secure.get(&mut pool, format!("key{i}").as_bytes()) {
+            Some(_) => survived += 1,
+            None => misses += 1,
+        }
+    }
+    println!(
+        "first sweep after kill: {survived} hits, {misses} misses, \
+         {} integrity failures (lost memory is a miss, never an error)",
+        secure.stats.integrity_failures
+    );
+    while pool.distinct_endpoints().len() != 1 || pool.held_slabs() < 32 {
+        pool.maintain();
+        std::thread::sleep(Duration::from_millis(10));
+        if t1.elapsed() > Duration::from_secs(10) {
+            break;
+        }
+    }
+    println!(
+        "re-provisioned in {:.0} ms: {} slabs on {:?}",
+        t1.elapsed().as_secs_f64() * 1e3,
+        pool.held_slabs(),
+        pool.live_endpoints()
+    );
+    for i in 0..n {
+        if secure.get(&mut pool, format!("key{i}").as_bytes()).is_none() {
+            let _ = secure.put(&mut pool, format!("key{i}").as_bytes(), &value);
+        }
+    }
+    let mut healed = 0;
+    for i in 0..n {
+        if secure.get(&mut pool, format!("key{i}").as_bytes()).is_some() {
+            healed += 1;
+        }
+    }
+    println!("after refill: {healed}/{n} keys hit again");
+    println!(
+        "pool stats: grants {}, renewals {}, slots lost {}, re-requests {}",
+        pool.stats.grants, pool.stats.renewals, pool.stats.slots_lost, pool.stats.rerequests
+    );
+
+    drop(pool);
+    agents.remove(1).stop();
+    broker.stop();
+    println!("\ndone.");
+}

@@ -1,19 +1,170 @@
 //! End-to-end request path: secure GET/PUT through the real wire codec
 //! and a real TCP producer store on localhost (the Table 2 data path,
-//! minus the simulated datacenter RTT), plus the in-process manager path
-//! used by the cluster simulation.
+//! minus the simulated datacenter RTT), the in-process manager path used
+//! by the cluster simulation, and the full marketplace control plane
+//! (broker daemon + producer agents + lease-aware pool), including
+//! recovery time after a producer kill. Emits `BENCH_e2e.json` so the
+//! marketplace-path numbers accumulate across PRs.
 
 use memtrade::consumer::client::SecureKv;
+use memtrade::core::config::BrokerConfig;
 use memtrade::core::{ConsumerId, Lease, LeaseId, Money, ProducerId, SimTime, DEFAULT_SLAB_BYTES};
+use memtrade::market::{
+    BrokerServer, BrokerServerConfig, ProducerAgent, ProducerAgentConfig, RemotePool,
+    RemotePoolConfig,
+};
 use memtrade::net::tcp::{KvClient, ProducerStoreServer};
 use memtrade::net::wire::{Request, Response};
 use memtrade::producer::Manager;
 use memtrade::util::bench::{bench, header};
 use memtrade::util::rng::Rng;
+use memtrade::util::stats::LatencyRecorder;
 use memtrade::workload::ycsb::YcsbWorkload;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Barrier};
 use std::time::{Duration, Instant};
+
+/// Boot broker + 2 agents + pool, run the marketplace path, measure
+/// GET/PUT latency and post-kill recovery; returns the JSON fields.
+fn marketplace_bench() -> String {
+    const SLAB: u64 = 1 << 20;
+    let broker_cfg = BrokerConfig {
+        slab_bytes: SLAB,
+        min_lease: SimTime::from_secs(30),
+        ..Default::default()
+    };
+    let server_cfg = BrokerServerConfig {
+        tick: Duration::from_millis(20),
+        producer_timeout: Duration::from_millis(300),
+        forecast_min_samples: usize::MAX,
+        ..Default::default()
+    };
+    let broker = BrokerServer::start("127.0.0.1:0", broker_cfg, server_cfg).unwrap();
+    let mk_agent = |id: u64| {
+        ProducerAgent::start(ProducerAgentConfig {
+            producer: id,
+            broker: broker.addr().to_string(),
+            data_addr: "127.0.0.1:0".to_string(),
+            advertise: None,
+            capacity_bytes: 64 * SLAB,
+            harvest: false,
+            heartbeat: Duration::from_millis(40),
+            shards: 4,
+            rate_bps: None,
+            seed: id,
+        })
+        .unwrap()
+    };
+    let mut agents = vec![mk_agent(1), mk_agent(2)];
+    let mut pool = RemotePool::connect(RemotePoolConfig {
+        consumer: 9,
+        broker: broker.addr().to_string(),
+        target_slabs: 96,
+        min_slabs: 1,
+        lease_ttl: Duration::from_secs(30),
+        renew_margin: Duration::from_secs(10),
+        maintain_every: Duration::from_millis(25),
+    })
+    .unwrap();
+
+    // Grant latency: from request to *mounted* capacity — grants held by
+    // the pool AND producer stores grown to their lease targets (that
+    // happens on the agents' next heartbeat ack; PUTs before it would be
+    // rejected by the still-zero-budget stores).
+    let t_grant = Instant::now();
+    let mounted = |agents: &[ProducerAgent]| {
+        agents.iter().all(|a| {
+            let max = a.store().map(|s| s.max_bytes()).unwrap_or(0) as u64;
+            max == a.target_bytes() && max > 0
+        })
+    };
+    while pool.held_slabs() < 96 || pool.distinct_endpoints().len() < 2 || !mounted(&agents) {
+        pool.maintain();
+        std::thread::sleep(Duration::from_millis(5));
+        assert!(t_grant.elapsed() < Duration::from_secs(10), "grants never mounted");
+    }
+    let grant_ms = t_grant.elapsed().as_secs_f64() * 1e3;
+
+    let mut secure = SecureKv::new(Some([5u8; 16]), true, 1, 7);
+    let value = vec![0xAB_u8; 1024];
+    const KEYS: u32 = 4_000;
+    for i in 0..KEYS {
+        assert!(secure.put(&mut pool, format!("user{i}").as_bytes(), &value));
+    }
+
+    // Steady-state marketplace GET/PUT (secure KV -> pool -> TCP store).
+    let mut rng = Rng::new(17);
+    let mut get_rec = LatencyRecorder::new();
+    let mut put_rec = LatencyRecorder::new();
+    let run_for = Duration::from_millis(1200);
+    let t0 = Instant::now();
+    let mut ops = 0u64;
+    while t0.elapsed() < run_for {
+        let key = format!("user{}", rng.below(KEYS as u64));
+        let t = Instant::now();
+        if rng.below(10) < 9 {
+            std::hint::black_box(secure.get(&mut pool, key.as_bytes()));
+            get_rec.record(t.elapsed().as_nanos() as f64 / 1e3);
+        } else {
+            std::hint::black_box(secure.put(&mut pool, key.as_bytes(), &value));
+            put_rec.record(t.elapsed().as_nanos() as f64 / 1e3);
+        }
+        ops += 1;
+    }
+    let ops_per_sec = ops as f64 / t0.elapsed().as_secs_f64();
+    println!(
+        "{:<48} {:>14.0} ops/s",
+        "marketplace_secure_90/10 (2 producers)", ops_per_sec
+    );
+    println!(
+        "{:<48} p50 {:>7.1}µs p99 {:>7.1}µs",
+        "  get latency", get_rec.p50(), get_rec.p99()
+    );
+    println!(
+        "{:<48} p50 {:>7.1}µs p99 {:>7.1}µs",
+        "  put latency", put_rec.p50(), put_rec.p99()
+    );
+
+    // Kill one producer: time until the pool is fully re-provisioned
+    // from the survivor while traffic keeps flowing (misses, no errors).
+    let survivor_capacity = 64; // slabs
+    agents[0].kill();
+    let t_kill = Instant::now();
+    let mut recovered_ms = f64::NAN;
+    while t_kill.elapsed() < Duration::from_secs(10) {
+        let key = format!("user{}", rng.below(KEYS as u64));
+        std::hint::black_box(secure.get(&mut pool, key.as_bytes()));
+        // Distinct endpoints, not slot count: the survivor may back
+        // several leases.
+        if pool.distinct_endpoints().len() == 1 && pool.held_slabs() >= survivor_capacity {
+            recovered_ms = t_kill.elapsed().as_secs_f64() * 1e3;
+            break;
+        }
+    }
+    println!(
+        "{:<48} {:>12.1} ms",
+        "recovery after producer kill (re-provisioned)", recovered_ms
+    );
+    assert_eq!(secure.stats.integrity_failures, 0);
+    if recovered_ms.is_nan() {
+        recovered_ms = -1.0; // keep the emitted JSON valid
+    }
+
+    let json = format!(
+        "  \"marketplace\": {{\n    \"grant_to_mounted_ms\": {grant_ms:.1},\n    \
+         \"ops_per_sec\": {ops_per_sec:.0},\n    \"get_p50_us\": {:.1},\n    \
+         \"get_p99_us\": {:.1},\n    \"put_p50_us\": {:.1},\n    \"put_p99_us\": {:.1},\n    \
+         \"recovery_after_kill_ms\": {recovered_ms:.1}\n  }}",
+        get_rec.p50(),
+        get_rec.p99(),
+        put_rec.p50(),
+        put_rec.p99(),
+    );
+    drop(pool);
+    agents.remove(1).stop();
+    broker.stop();
+    json
+}
 
 /// Aggregate ops/sec for `clients` concurrent TCP connections doing a
 /// 90/10 GET/PUT mix against a producer store with `n_shards` shards.
@@ -168,4 +319,15 @@ fn main() {
     bench("ycsb_next_op/10M-keys-zipf0.7", || {
         std::hint::black_box(w.next_op(&mut rng3));
     });
+
+    // --- Full marketplace: broker daemon + 2 producer agents + pool,
+    // grant -> put -> get -> kill -> recover.
+    println!("\n== bench: marketplace control plane ==");
+    let marketplace_json = marketplace_bench();
+
+    let json = format!("{{\n{marketplace_json}\n}}\n");
+    match std::fs::write("BENCH_e2e.json", &json) {
+        Ok(()) => println!("\nwrote BENCH_e2e.json"),
+        Err(e) => eprintln!("\ncould not write BENCH_e2e.json: {e}"),
+    }
 }

@@ -46,7 +46,13 @@ fn main() {
     for n in [256usize, 1024, 4096] {
         let (s, caps) = series(n, &mut rng);
         bench(&format!("rust_mirror_forecast/{n}-producers"), || {
-            std::hint::black_box(fb::forecast_batch(&s, &caps, 4, FORECAST_HORIZON, FORECAST_WINDOW));
+            std::hint::black_box(fb::forecast_batch(
+                &s,
+                &caps,
+                4,
+                FORECAST_HORIZON,
+                FORECAST_WINDOW,
+            ));
         });
     }
 

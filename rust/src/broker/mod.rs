@@ -52,7 +52,11 @@ pub struct Broker {
 }
 
 impl Broker {
-    pub fn new(cfg: BrokerConfig, predictor: AvailabilityPredictor, pricing: PricingEngine) -> Self {
+    pub fn new(
+        cfg: BrokerConfig,
+        predictor: AvailabilityPredictor,
+        pricing: PricingEngine,
+    ) -> Self {
         Broker {
             cfg,
             registry: Registry::default(),
@@ -141,7 +145,13 @@ impl Broker {
     pub fn market_epoch(&mut self, now: SimTime, spot_per_gb_hour: Money) -> Vec<Lease> {
         self.predictor.refresh(&mut self.registry, now);
         self.pricing.adjust(&self.registry, spot_per_gb_hour, self.cfg.slab_bytes);
+        self.service_pending(now)
+    }
 
+    /// Retry the pending queue FIFO and expire stale entries, without
+    /// touching predictions or price (the networked broker daemon runs
+    /// those on its own cadence).
+    pub fn service_pending(&mut self, now: SimTime) -> Vec<Lease> {
         let mut granted_leases = Vec::new();
         let mut still_pending = VecDeque::new();
         while let Some(mut p) = self.pending.pop_front() {
@@ -167,6 +177,16 @@ impl Broker {
 
     pub fn pending_len(&self) -> usize {
         self.pending.len()
+    }
+
+    /// Drop every queued remainder. The broker daemon has no push channel
+    /// to consumers, so it must not grant invisibly from the queue later;
+    /// consumer pools re-request instead (§5.2's FIFO queue lives in the
+    /// pool's retry loop there).
+    pub fn drain_pending(&mut self) -> usize {
+        let n = self.pending.len();
+        self.pending.clear();
+        n
     }
 }
 

@@ -7,7 +7,9 @@
 use crate::broker::registry::Registry;
 use crate::core::{SimTime, GIB};
 use crate::runtime::arima_fallback;
-use crate::runtime::engine::{Engine, ForecastEngine, ForecastResult, FORECAST_HORIZON, FORECAST_WINDOW};
+use crate::runtime::engine::{
+    Engine, ForecastEngine, ForecastResult, FORECAST_HORIZON, FORECAST_WINDOW,
+};
 
 enum Backend {
     Pjrt(ForecastEngine),

@@ -112,7 +112,10 @@ impl PricingEngine {
     }
 
     /// Evaluate candidates {p-Δ, p, p+Δ} against current demand inputs.
-    pub fn evaluate_candidates(&mut self, prices: [f64; DEMAND_PRICES]) -> [MarketEval; DEMAND_PRICES] {
+    pub fn evaluate_candidates(
+        &mut self,
+        prices: [f64; DEMAND_PRICES],
+    ) -> [MarketEval; DEMAND_PRICES] {
         if self.demand_inputs.is_empty() {
             return [MarketEval::default(); DEMAND_PRICES];
         }

@@ -15,6 +15,16 @@ use std::collections::HashMap;
 /// Anything that can carry a request to one producer store.
 pub trait KvTransport {
     fn call(&mut self, producer_index: u32, req: Request) -> Response;
+
+    /// Pick the producer index for a *new* PUT of `key`. The default
+    /// keeps the caller's round-robin choice; lease-aware transports
+    /// (e.g. [`crate::market::RemotePool`]) override it with
+    /// deterministic key→slab routing over their live slots. GETs and
+    /// DELETEs never consult this — they route from stored metadata.
+    fn route_put(&mut self, key: &[u8], round_robin_hint: u32) -> u32 {
+        let _ = key;
+        round_robin_hint
+    }
 }
 
 /// Blanket impl so closures can act as transports in tests/sims.
@@ -34,6 +44,9 @@ pub struct SecureKvStats {
     pub integrity_failures: u64,
     pub throttled: u64,
     pub rejected: u64,
+    /// Metadata entries dropped because their producer index fell out of
+    /// range when the producer count shrank (their remote data is gone).
+    pub stranded_drops: u64,
 }
 
 /// The secure consumer-side KV cache over leased remote memory.
@@ -64,8 +77,24 @@ impl SecureKv {
         self.n_producers
     }
 
+    /// Resize the producer table. Shrinking drops metadata whose stored
+    /// producer index no longer exists: those stores are gone, so the
+    /// keys would otherwise strand — GETs/DELETEs routed at indices the
+    /// transport no longer backs (an out-of-bounds panic or permanent
+    /// phantom misses, depending on the transport).
+    ///
+    /// Only meaningful with default-routing (round-robin) transports,
+    /// where `producer_index < n_producers` by construction. Transports
+    /// that override [`KvTransport::route_put`] (e.g.
+    /// [`crate::market::RemotePool`]) own the index space themselves —
+    /// do not call this on a `SecureKv` used with one, or valid
+    /// metadata at transport-chosen indices would be purged.
     pub fn set_n_producers(&mut self, n: u32) {
         self.n_producers = n.max(1);
+        let n = self.n_producers;
+        let before = self.metadata.len();
+        self.metadata.retain(|_, meta| meta.producer_index < n);
+        self.stats.stranded_drops += (before - self.metadata.len()) as u64;
     }
 
     /// Number of locally cached KV metadata entries.
@@ -84,10 +113,13 @@ impl SecureKv {
     }
 
     /// PUT (paper §6.1): seal, pick a producer store, send under K_P.
+    /// The store is chosen by the transport's [`KvTransport::route_put`]
+    /// (default: our round-robin cursor).
     pub fn put<T: KvTransport>(&mut self, t: &mut T, key: &[u8], value: &[u8]) -> bool {
         self.stats.puts += 1;
-        let producer = self.next_producer % self.n_producers;
+        let hint = self.next_producer % self.n_producers;
         self.next_producer = self.next_producer.wrapping_add(1);
+        let producer = t.route_put(key, hint);
         let Sealed { value_p, meta } = self.envelope.seal(value, producer);
         let k_p = meta.k_p.to_le_bytes().to_vec();
         match t.call(producer, Request::Put { key: k_p, value: value_p }) {
@@ -319,6 +351,70 @@ mod tests {
         let mut int_only = SecureKv::new(None, true, 1, 3);
         int_only.put(&mut t, b"12345678", b"v");
         assert_eq!(int_only.metadata_bytes(), 8 + 16);
+    }
+
+    #[test]
+    fn shrinking_producer_count_drops_stranded_metadata() {
+        // Regression: shrinking the producer table used to leave
+        // metadata routing GETs/DELETEs at indices that no longer exist
+        // (an out-of-bounds panic on indexing transports like this one).
+        let mut t = MemTransport::new(4);
+        let mut c = SecureKv::new(Some([1u8; 16]), true, 4, 1);
+        for i in 0..40 {
+            assert!(c.put(&mut t, format!("k{i}").as_bytes(), b"v"));
+        }
+        t.stores.truncate(2);
+        c.set_n_producers(2);
+        assert!(c.stats.stranded_drops > 0, "no metadata was stranded");
+        let mut hits = 0;
+        let mut misses = 0;
+        for i in 0..40 {
+            // Must not panic, and must never route beyond store 1.
+            match c.get(&mut t, format!("k{i}").as_bytes()) {
+                Some(v) => {
+                    assert_eq!(v, b"v".to_vec());
+                    hits += 1;
+                }
+                None => misses += 1,
+            }
+            assert!(!c.delete(&mut t, format!("dead{i}").as_bytes()));
+        }
+        // Keys on surviving stores still hit; stranded ones are misses.
+        assert_eq!(hits + misses, 40);
+        assert!(hits > 0, "survivors lost");
+        assert_eq!(misses as u64, c.stats.stranded_drops);
+        // Growing back is metadata-preserving.
+        let before = c.len();
+        c.set_n_producers(8);
+        assert_eq!(c.len(), before);
+    }
+
+    #[test]
+    fn transport_routing_hook_overrides_round_robin() {
+        struct FixedRoute(MemTransport);
+        impl KvTransport for FixedRoute {
+            fn call(&mut self, p: u32, req: Request) -> Response {
+                self.0.call(p, req)
+            }
+            fn route_put(&mut self, _key: &[u8], _hint: u32) -> u32 {
+                2 // everything lands on store 2
+            }
+        }
+        let mut t = FixedRoute(MemTransport::new(4));
+        let mut c = SecureKv::new(Some([1u8; 16]), true, 4, 1);
+        for i in 0..20 {
+            assert!(c.put(&mut t, format!("k{i}").as_bytes(), b"v"));
+        }
+        assert_eq!(t.0.stores[2].len(), 20);
+        for (i, store) in t.0.stores.iter().enumerate() {
+            if i != 2 {
+                assert_eq!(store.len(), 0);
+            }
+        }
+        // GETs follow the stored metadata to store 2.
+        for i in 0..20 {
+            assert!(c.get(&mut t, format!("k{i}").as_bytes()).is_some());
+        }
     }
 
     #[test]

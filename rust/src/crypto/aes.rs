@@ -65,7 +65,7 @@ const fn gf_mul(x: u8, y: u8) -> u8 {
 
 /// Precomputed ×9/×11/×13/×14 tables: InvMixColumns is the decryption
 /// hot path (measured 26 µs/KB with loop-based multiplies; tables cut
-/// CBC-decrypt roughly in half — see EXPERIMENTS.md §Perf).
+/// CBC-decrypt roughly in half — see DESIGN.md §Perf notes).
 const fn gf_table(y: u8) -> [u8; 256] {
     let mut t = [0u8; 256];
     let mut i = 0;

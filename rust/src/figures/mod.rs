@@ -1,7 +1,7 @@
 //! The experiment harness: one entry point per table/figure in the
 //! paper's evaluation (§7). `memtrade figure <id>` regenerates the data
-//! behind that figure and prints it as a markdown table; EXPERIMENTS.md
-//! records paper-vs-measured for each.
+//! behind that figure and prints it as a markdown table — the printed
+//! output is the record (DESIGN.md §Experiment index).
 //!
 //! | id        | paper result                                     |
 //! |-----------|--------------------------------------------------|

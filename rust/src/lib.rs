@@ -6,20 +6,22 @@
 //! * **Layer 3 (this crate)** — the complete Memtrade system: producers
 //!   ([`producer`]: harvester + Silo + manager), the market [`broker`]
 //!   (registry, placement, pricing, availability prediction), secure
-//!   [`consumer`] clients, and every substrate they need, built from
-//!   scratch: a Redis-like KV store ([`kv`]), a guest-VM memory model with
+//!   [`consumer`] clients, the networked [`market`] control plane that
+//!   deploys all three as broker daemon / producer agent / lease-aware
+//!   consumer pool, and every substrate they need, built from scratch:
+//!   a Redis-like KV store ([`kv`]), a guest-VM memory model with
 //!   cgroup/PFRA/swap semantics ([`mem`]), AES-128-CBC + SHA-256
-//!   ([`crypto`]), a wire protocol with simulated and TCP transports
-//!   ([`net`]), workload/trace generators ([`workload`]), and a
-//!   discrete-event cluster simulator ([`sim`]).
+//!   ([`crypto`]), data- and control-plane wire protocols with simulated
+//!   and TCP transports ([`net`]), workload/trace generators
+//!   ([`workload`]), and a discrete-event cluster simulator ([`sim`]).
 //! * **Layer 2/1 (build-time python)** — the broker's numeric hot paths
 //!   (batched ARIMA-family availability forecasting; MRC-driven market
 //!   demand evaluation) authored in JAX + Pallas, AOT-lowered to HLO text
 //!   and executed from [`runtime`] via the PJRT CPU client. Python never
 //!   runs on the request path.
 //!
-//! See `DESIGN.md` for the paper → module inventory and the experiment
-//! index, and `EXPERIMENTS.md` for reproduced tables/figures.
+//! See `DESIGN.md` (repo root) for the paper → module inventory, the
+//! deliberate substitutions, and the experiment index.
 
 pub mod broker;
 pub mod consumer;
@@ -27,6 +29,7 @@ pub mod core;
 pub mod crypto;
 pub mod figures;
 pub mod kv;
+pub mod market;
 pub mod mem;
 pub mod metrics;
 pub mod net;

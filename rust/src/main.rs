@@ -3,8 +3,11 @@
 //! ```text
 //! memtrade figure <id> [--quick]        regenerate a paper table/figure
 //! memtrade figure all [--quick]         regenerate everything
-//! memtrade producer --port <p> [...]    run a TCP producer store
-//! memtrade consumer --addr <a> [...]    run a YCSB consumer against it
+//! memtrade broker [--port P] [...]      run the marketplace broker daemon
+//! memtrade agent --broker <a> [...]     run a producer agent (data + control)
+//! memtrade producer --port <p> [...]    run a bare TCP producer store
+//! memtrade consumer --addr <a> [...]    run a YCSB consumer against one store
+//! memtrade consumer --broker <a> [...]  ... against broker-leased slabs
 //! memtrade sim [--minutes N]            run the cluster simulation
 //! memtrade replay [--steps N]           run the Google-style replay
 //! memtrade list                         list experiment ids
@@ -12,14 +15,21 @@
 //!
 //! Argument parsing is hand-rolled (offline build: no clap).
 
+use memtrade::consumer::client::{KvTransport, SecureKv};
+use memtrade::core::config::BrokerConfig;
 use memtrade::core::{Money, SimTime};
 use memtrade::figures;
+use memtrade::market::{
+    BrokerServer, BrokerServerConfig, ProducerAgent, ProducerAgentConfig, RemotePool,
+    RemotePoolConfig,
+};
 use memtrade::net::tcp::{KvClient, ProducerStoreServer};
 use memtrade::sim::cluster::{ClusterSim, ClusterSimConfig, ConsumerMode};
 use memtrade::sim::replay::{run as replay_run, ReplayConfig};
 use memtrade::util::rng::Rng;
 use memtrade::workload::ycsb::{Op, YcsbWorkload};
 use std::process::ExitCode;
+use std::time::Duration;
 
 struct Args {
     positional: Vec<String>,
@@ -65,8 +75,13 @@ memtrade — a disaggregated-memory marketplace (paper reproduction)
 
 USAGE:
   memtrade figure <id>|all [--quick]
+  memtrade broker [--port P] [--history-dir DIR] [--spot-gb-hour $]
+                  [--producer-timeout-ms N] [--min-lease-secs N]
+  memtrade agent --broker HOST:PORT [--id N] [--mb N] [--heartbeat-ms N]
+                 [--advertise HOST:PORT] [--harvest] [--shards N] [--rate-mbps R]
   memtrade producer [--port P] [--mb N] [--rate-mbps R] [--shards N]
-  memtrade consumer --addr HOST:PORT [--ops N] [--value-bytes B] [--no-encrypt]
+  memtrade consumer --addr HOST:PORT | --broker HOST:PORT [--slabs N]
+                    [--ops N] [--value-bytes B] [--no-encrypt]
   memtrade sim [--minutes N] [--producers N] [--consumers N] [--remote PCT]
   memtrade replay [--steps N] [--producers N] [--consumers N]
   memtrade list
@@ -82,6 +97,8 @@ fn main() -> ExitCode {
     let args = parse_args(&argv[1..]);
     match cmd.as_str() {
         "figure" => cmd_figure(&args),
+        "broker" => cmd_broker(&args),
+        "agent" => cmd_agent(&args),
         "producer" => cmd_producer(&args),
         "consumer" => cmd_consumer(&args),
         "sim" => cmd_sim(&args),
@@ -124,6 +141,85 @@ fn cmd_figure(args: &Args) -> ExitCode {
     ExitCode::SUCCESS
 }
 
+fn cmd_broker(args: &Args) -> ExitCode {
+    let port = args.flag_u64("port", 7070);
+    let broker_cfg = BrokerConfig {
+        min_lease: SimTime::from_secs(args.flag_u64("min-lease-secs", 600)),
+        ..Default::default()
+    };
+    let cfg = BrokerServerConfig {
+        spot_per_gb_hour: Money::from_dollars(
+            args.flag("spot-gb-hour").and_then(|v| v.parse().ok()).unwrap_or(0.0005),
+        ),
+        producer_timeout: Duration::from_millis(args.flag_u64("producer-timeout-ms", 3000)),
+        history_dir: args.flag("history-dir").map(std::path::PathBuf::from),
+        ..Default::default()
+    };
+    let server = match BrokerServer::start(format!("0.0.0.0:{port}"), broker_cfg, cfg) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("broker bind failed: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    println!("broker daemon listening on {} (control plane)", server.addr());
+    println!("press Ctrl-C to stop");
+    loop {
+        std::thread::sleep(Duration::from_secs(10));
+        println!(
+            "producers {} | active leases {} | price {}/slab·h",
+            server.producer_count(),
+            server.active_lease_count(),
+            server.current_price(),
+        );
+    }
+}
+
+fn cmd_agent(args: &Args) -> ExitCode {
+    let Some(broker) = args.flag("broker") else {
+        eprintln!("agent: --broker HOST:PORT required");
+        return ExitCode::FAILURE;
+    };
+    let cfg = ProducerAgentConfig {
+        producer: args.flag_u64("id", 1),
+        broker: broker.to_string(),
+        data_addr: format!("0.0.0.0:{}", args.flag_u64("port", 0)),
+        // A wildcard bind is not dialable from other hosts; multi-host
+        // deployments must say what consumers should dial.
+        advertise: args.flag("advertise").map(str::to_string),
+        capacity_bytes: args.flag_u64("mb", 1024) << 20,
+        harvest: args.has("harvest"),
+        heartbeat: Duration::from_millis(args.flag_u64("heartbeat-ms", 500)),
+        shards: args.flag_u64("shards", 0) as usize,
+        rate_bps: args
+            .flag("rate-mbps")
+            .and_then(|v| v.parse::<u64>().ok())
+            .map(|m| m * 1_000_000 / 8),
+        seed: args.flag_u64("id", 1),
+    };
+    let agent = match ProducerAgent::start(cfg) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("agent start failed: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    println!(
+        "producer agent up: data plane {}, registered with broker {broker}",
+        agent.data_addr()
+    );
+    println!("press Ctrl-C to stop");
+    loop {
+        std::thread::sleep(Duration::from_secs(10));
+        println!(
+            "offered {} MB | leased {} MB | store {} entries",
+            agent.offered_bytes() >> 20,
+            agent.target_bytes() >> 20,
+            agent.store().map(|s| s.len()).unwrap_or(0),
+        );
+    }
+}
+
 fn cmd_producer(args: &Args) -> ExitCode {
     let port = args.flag_u64("port", 7077);
     let mb = args.flag_u64("mb", 256);
@@ -158,34 +254,17 @@ fn cmd_producer(args: &Args) -> ExitCode {
     }
 }
 
-fn cmd_consumer(args: &Args) -> ExitCode {
-    let Some(addr) = args.flag("addr") else {
-        eprintln!("consumer: --addr HOST:PORT required");
-        return ExitCode::FAILURE;
-    };
-    let ops = args.flag_u64("ops", 10_000);
-    let value_bytes = args.flag_u64("value-bytes", 1024) as usize;
-    let encrypt = !args.has("no-encrypt");
-
-    let mut client = match KvClient::connect(addr) {
-        Ok(c) => c,
-        Err(e) => {
-            eprintln!("connect failed: {e}");
-            return ExitCode::FAILURE;
-        }
-    };
-    let mut secure = memtrade::consumer::client::SecureKv::new(
-        encrypt.then_some([3u8; 16]),
-        true,
-        1,
-        99,
-    );
+/// Drive a YCSB read/update mix through the secure KV over any
+/// transport, printing throughput/latency/hit-ratio at the end.
+fn drive_ycsb<T: KvTransport>(
+    secure: &mut SecureKv,
+    transport: &mut T,
+    ops: u64,
+    value_bytes: usize,
+) {
     let workload = YcsbWorkload::paper_default((ops / 4).max(100), value_bytes);
     let mut rng = Rng::new(5);
     let mut rec = memtrade::util::stats::LatencyRecorder::new();
-    let mut transport = |_p: u32, req: memtrade::net::wire::Request| {
-        client.call(&req).unwrap_or(memtrade::net::wire::Response::Error("io".into()))
-    };
     let started = std::time::Instant::now();
     for _ in 0..ops {
         let op = workload.next_op(&mut rng);
@@ -193,14 +272,14 @@ fn cmd_consumer(args: &Args) -> ExitCode {
         let t0 = std::time::Instant::now();
         match op {
             Op::Read { .. } => {
-                if secure.get(&mut transport, &key).is_none() {
+                if secure.get(transport, &key).is_none() {
                     let value = vec![0xAB; value_bytes];
-                    let _ = secure.put(&mut transport, &key, &value);
+                    let _ = secure.put(transport, &key, &value);
                 }
             }
             Op::Update { .. } => {
                 let value = vec![0xCD; value_bytes];
-                let _ = secure.put(&mut transport, &key, &value);
+                let _ = secure.put(transport, &key, &value);
             }
         }
         rec.record(t0.elapsed().as_micros() as f64);
@@ -216,6 +295,59 @@ fn cmd_consumer(args: &Args) -> ExitCode {
         rec.p99(),
         secure.hit_ratio(),
     );
+}
+
+fn cmd_consumer(args: &Args) -> ExitCode {
+    let ops = args.flag_u64("ops", 10_000);
+    let value_bytes = args.flag_u64("value-bytes", 1024) as usize;
+    let encrypt = !args.has("no-encrypt");
+    let mut secure = SecureKv::new(encrypt.then_some([3u8; 16]), true, 1, 99);
+
+    if let Some(broker) = args.flag("broker") {
+        // Marketplace mode: lease slabs via the broker and route through
+        // the lease-aware pool.
+        let cfg = RemotePoolConfig {
+            consumer: args.flag_u64("id", 1000),
+            broker: broker.to_string(),
+            target_slabs: args.flag_u64("slabs", 4) as u32,
+            ..Default::default()
+        };
+        let mut pool = match RemotePool::connect(cfg) {
+            Ok(p) => p,
+            Err(e) => {
+                eprintln!("broker connect failed: {e}");
+                return ExitCode::FAILURE;
+            }
+        };
+        println!(
+            "leased {} slabs across {} producers",
+            pool.held_slabs(),
+            pool.live_slots()
+        );
+        drive_ycsb(&mut secure, &mut pool, ops, value_bytes);
+        let s = &pool.stats;
+        println!(
+            "pool: grants {} | renewals {} | slots lost {} | re-requests {} | io errors {}",
+            s.grants, s.renewals, s.slots_lost, s.rerequests, s.io_errors
+        );
+        return ExitCode::SUCCESS;
+    }
+
+    let Some(addr) = args.flag("addr") else {
+        eprintln!("consumer: --addr or --broker HOST:PORT required");
+        return ExitCode::FAILURE;
+    };
+    let mut client = match KvClient::connect(addr) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("connect failed: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let mut transport = |_p: u32, req: memtrade::net::wire::Request| {
+        client.call(&req).unwrap_or(memtrade::net::wire::Response::Error("io".into()))
+    };
+    drive_ycsb(&mut secure, &mut transport, ops, value_bytes);
     ExitCode::SUCCESS
 }
 

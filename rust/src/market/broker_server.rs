@@ -1,0 +1,971 @@
+//! The broker daemon: the in-process [`Broker`] (registry, placement,
+//! pricing, availability prediction) served over the control-plane wire
+//! protocol, with lease expiry tracked on a monotonic clock, dead
+//! producers swept on heartbeat timeout, and per-producer usage
+//! histories persisted for the predictor across restarts.
+//!
+//! Threading: one accept loop, one thread per control connection (the
+//! control plane is low-rate — heartbeats and lease operations, never
+//! data), and one maintenance ticker (expiry sweep, death sweep,
+//! forecast refresh, accounting). All share one `Mutex<State>`; the
+//! data plane never touches it.
+//!
+//! Revocations and grants reach producers by piggybacking on heartbeat
+//! *acks* (pull, not push): each ack carries the authoritative store
+//! size plus the grants/ends since the last ack. An ack lost in flight
+//! is repaired by the agent's reconnect: re-registration keeps the
+//! producer's active leases and re-announces all of them on the next
+//! ack (and `target_bytes` is authoritative in every ack regardless).
+//! Consumers learn of lost leases when a renew is refused or the
+//! data-plane connection drops — both of which the
+//! [`crate::market::RemotePool`] turns into cache misses.
+
+use crate::broker::{AvailabilityPredictor, Broker, ConsumerRequest, PricingEngine, PricingStrategy};
+use crate::core::config::BrokerConfig;
+use crate::core::{ConsumerId, Lease, LeaseId, Money, ProducerId, SimTime, GIB};
+use crate::market::lease::{LeaseError, LeaseState, LeaseTable};
+use crate::net::control::{
+    server_handshake_patient, CtrlRequest, CtrlResponse, GrantInfo, ProducerGrant, RefuseCode,
+    CONTROL_MAGIC,
+};
+use crate::net::wire::{read_frame_into_patient, write_frame, CodecError};
+use std::collections::HashMap;
+use std::io::{self, BufReader, BufWriter, Write};
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Daemon-side tunables (the market economics live in [`BrokerConfig`]).
+#[derive(Clone, Debug)]
+pub struct BrokerServerConfig {
+    /// Exogenous spot price used for pricing, $/GB·hour.
+    pub spot_per_gb_hour: Money,
+    /// Maintenance cadence: expiry sweep and death sweep.
+    pub tick: Duration,
+    /// Forecast/pricing cadence. The batched AR fit is the broker's one
+    /// expensive computation and runs under the state lock — it gets
+    /// its own, much slower clock (the paper refreshes every 5 min).
+    pub forecast_every: Duration,
+    /// A producer missing heartbeats for this long is declared dead and
+    /// its leases revoked.
+    pub producer_timeout: Duration,
+    /// Persist per-producer usage histories here (one file per producer)
+    /// and replay them on re-registration, so the predictor survives
+    /// broker and producer restarts.
+    pub history_dir: Option<PathBuf>,
+    /// Run the real availability forecast only once every non-empty
+    /// history has at least this many samples (the AR fit needs a
+    /// window); younger producers are leased optimistically at their
+    /// reported free slabs.
+    pub forecast_min_samples: usize,
+}
+
+impl Default for BrokerServerConfig {
+    fn default() -> Self {
+        BrokerServerConfig {
+            spot_per_gb_hour: Money::from_dollars(0.0005),
+            tick: Duration::from_millis(100),
+            forecast_every: Duration::from_secs(60),
+            producer_timeout: Duration::from_secs(3),
+            history_dir: None,
+            forecast_min_samples: 16,
+        }
+    }
+}
+
+/// Best-effort on-disk usage history: `<dir>/producer-<id>.history`,
+/// one `"<us> <used_gb>"` line per heartbeat. Loads run rarely (agent
+/// registration) and read only a bounded tail; appends run on a
+/// dedicated writer thread so no disk I/O ever happens under the
+/// broker's state lock.
+#[derive(Clone)]
+struct HistoryStore {
+    dir: PathBuf,
+}
+
+/// One usage sample on its way to the history writer thread.
+type HistorySample = (u64, u64, f32);
+
+/// Replay cap: the registry's usage ring holds 288 samples
+/// ([`Registry::register_producer`] uses `TimeSeries::new(288)`), so
+/// replaying more would be parsed and immediately overwritten — all
+/// while holding the broker's state lock.
+const HISTORY_REPLAY_CAP: usize = 288;
+
+impl HistoryStore {
+    fn open(dir: PathBuf) -> io::Result<Self> {
+        std::fs::create_dir_all(&dir)?;
+        Ok(HistoryStore { dir })
+    }
+
+    fn path(&self, producer: u64) -> PathBuf {
+        self.dir.join(format!("producer-{producer}.history"))
+    }
+
+    /// Bytes of file tail read on load: comfortably holds
+    /// `HISTORY_REPLAY_CAP` lines, and bounds the work done (under the
+    /// state lock) when an agent re-registers against a large file.
+    const TAIL_BYTES: u64 = 64 * 1024;
+    /// Compaction threshold: an append beyond this first rewrites the
+    /// file down to the replay tail, so heartbeats can't grow it
+    /// without bound.
+    const COMPACT_BYTES: u64 = 1 << 22;
+
+    fn load(&self, producer: u64) -> Vec<(u64, f32)> {
+        use std::io::{Read, Seek, SeekFrom};
+        let Ok(mut f) = std::fs::File::open(self.path(producer)) else {
+            return Vec::new();
+        };
+        let len = f.metadata().map(|m| m.len()).unwrap_or(0);
+        let truncated = len > Self::TAIL_BYTES;
+        if truncated && f.seek(SeekFrom::End(-(Self::TAIL_BYTES as i64))).is_err() {
+            return Vec::new();
+        }
+        let mut text = String::new();
+        if f.read_to_string(&mut text).is_err() {
+            return Vec::new();
+        }
+        let tail = if truncated {
+            // The seek likely landed mid-line; drop the partial one.
+            text.split_once('\n').map(|(_, rest)| rest).unwrap_or("")
+        } else {
+            text.as_str()
+        };
+        let mut samples: Vec<(u64, f32)> = tail
+            .lines()
+            .filter_map(|line| {
+                let mut it = line.split_whitespace();
+                let us = it.next()?.parse().ok()?;
+                let gb = it.next()?.parse().ok()?;
+                Some((us, gb))
+            })
+            .collect();
+        if samples.len() > HISTORY_REPLAY_CAP {
+            samples.drain(..samples.len() - HISTORY_REPLAY_CAP);
+        }
+        samples
+    }
+
+    fn append(&self, producer: u64, us: u64, used_gb: f32) {
+        let path = self.path(producer);
+        let oversized = std::fs::metadata(&path)
+            .map(|m| m.len() > Self::COMPACT_BYTES)
+            .unwrap_or(false);
+        if oversized {
+            let keep = self.load(producer);
+            let mut text = String::with_capacity(keep.len() * 24);
+            for (us, gb) in &keep {
+                text.push_str(&format!("{us} {gb}\n"));
+            }
+            if let Err(e) = std::fs::write(&path, text) {
+                eprintln!("broker: history compaction failed for producer {producer}: {e}");
+            }
+        }
+        let r = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)
+            .and_then(|mut f| writeln!(f, "{us} {used_gb}"));
+        if let Err(e) = r {
+            eprintln!("broker: history append failed for producer {producer}: {e}");
+        }
+    }
+}
+
+struct ProducerEntry {
+    endpoint: String,
+    last_heartbeat_us: u64,
+}
+
+struct State {
+    broker: Broker,
+    leases: LeaseTable,
+    producers: HashMap<u64, ProducerEntry>,
+    history: Option<HistoryStore>,
+    /// Samples queued for the history writer thread (never blocks).
+    history_tx: Option<mpsc::Sender<HistorySample>>,
+    cfg: BrokerServerConfig,
+}
+
+impl State {
+    fn core_lease(rec: &crate::market::lease::LeaseRecord) -> Lease {
+        Lease {
+            id: LeaseId(rec.id),
+            consumer: ConsumerId(rec.consumer),
+            producer: ProducerId(rec.producer),
+            slabs: rec.slabs,
+            slab_bytes: rec.slab_bytes,
+            start: SimTime::from_micros(rec.granted_us),
+            duration: SimTime::from_micros(rec.duration_us),
+            price_per_slab_hour: Money(rec.price_nd_per_slab_hour),
+        }
+    }
+
+    /// Apply queued lease terminations to the registry (reputation,
+    /// free-slab return). Revocations count as broken leases (§5).
+    fn apply_lease_ends(&mut self) {
+        for end in self.leases.take_ended() {
+            let lease = Self::core_lease(&end.record);
+            self.broker.lease_ended(&lease, end.cause == LeaseState::Revoked);
+        }
+    }
+
+    /// Producers whose history is still too short for the AR fit are
+    /// leased at face value: what they report free is presumed safe.
+    fn apply_optimistic_safety(&mut self) {
+        let min = self.cfg.forecast_min_samples;
+        for p in self.broker.registry.producers_mut() {
+            if p.usage.len() < min {
+                p.predicted_safe_slabs = p.free_slabs + p.slabs_leased_now;
+            }
+        }
+    }
+
+    /// Forecast refresh, gated until every non-empty history can support
+    /// the AR fit (a single short series would poison the whole batch).
+    fn refresh_forecasts(&mut self, now_us: u64) {
+        let min = self.cfg.forecast_min_samples;
+        let lens: Vec<usize> = self
+            .broker
+            .registry
+            .producers()
+            .map(|p| p.usage.len())
+            .filter(|&n| n > 0)
+            .collect();
+        if !lens.is_empty() && lens.iter().all(|&n| n >= min) {
+            let now = SimTime::from_micros(now_us);
+            self.broker.predictor.refresh(&mut self.broker.registry, now);
+        }
+        self.broker.pricing.adjust(
+            &self.broker.registry,
+            self.cfg.spot_per_gb_hour,
+            self.broker.cfg.slab_bytes,
+        );
+        self.apply_optimistic_safety();
+    }
+
+    /// Declare producers dead after `producer_timeout` without a
+    /// heartbeat: revoke their leases, forget their endpoints.
+    fn sweep_dead_producers(&mut self, now_us: u64) {
+        let timeout_us = self.cfg.producer_timeout.as_micros() as u64;
+        let dead: Vec<u64> = self
+            .producers
+            .iter()
+            .filter(|(_, e)| now_us.saturating_sub(e.last_heartbeat_us) > timeout_us)
+            .map(|(&id, _)| id)
+            .collect();
+        for id in dead {
+            self.drop_producer(id, now_us);
+        }
+    }
+
+    fn drop_producer(&mut self, id: u64, now_us: u64) {
+        self.leases.revoke_all_for_producer(id, now_us);
+        self.apply_lease_ends();
+        self.broker.registry.deregister_producer(ProducerId(id));
+        self.producers.remove(&id);
+    }
+
+    fn refused(code: RefuseCode, detail: impl Into<String>) -> CtrlResponse {
+        CtrlResponse::Refused { code, detail: detail.into() }
+    }
+
+    /// Lease ids are a guessable counter, so lifecycle operations must
+    /// prove identity: `Renew`/`Release` only by the lease's consumer,
+    /// `Revoke` only by its producer. Returns the refusal, if any.
+    fn verify_holder(&self, lease: u64, claimed: u64, as_consumer: bool) -> Option<CtrlResponse> {
+        let rec = self.leases.get(lease)?;
+        let holder = if as_consumer { rec.consumer } else { rec.producer };
+        if holder == claimed {
+            None
+        } else {
+            Some(Self::refused(
+                RefuseCode::Malformed,
+                format!("lease {lease} is not held by participant {claimed}"),
+            ))
+        }
+    }
+
+    fn refuse_lease_error(e: LeaseError) -> CtrlResponse {
+        let code = match e {
+            LeaseError::Unknown(_) => RefuseCode::UnknownLease,
+            LeaseError::Ended(_, LeaseState::Expired) => RefuseCode::LeaseExpired,
+            LeaseError::Ended(_, LeaseState::Revoked) => RefuseCode::LeaseRevoked,
+            LeaseError::Ended(_, LeaseState::Released) => RefuseCode::LeaseReleased,
+            LeaseError::Ended(_, LeaseState::Active) | LeaseError::Duplicate(_) => {
+                RefuseCode::Malformed
+            }
+        };
+        Self::refused(code, e.to_string())
+    }
+
+    fn handle(&mut self, req: CtrlRequest, now_us: u64) -> CtrlResponse {
+        let now = SimTime::from_micros(now_us);
+        match req {
+            CtrlRequest::Register { producer, capacity_gb, endpoint, free_bytes } => {
+                // A re-registration while still considered alive is
+                // usually a control-plane blip (lost ack, reconnect),
+                // not a death: keep its active leases — a truly
+                // restarted store just serves misses, which is the
+                // system's loss model anyway — and re-announce them so
+                // the agent relearns its book from the next ack. Actual
+                // death is the heartbeat-timeout sweep's job.
+                let rejoining = self.producers.contains_key(&producer);
+                if rejoining {
+                    self.leases.reset_announcements(producer);
+                }
+                let free_slabs = (free_bytes / self.broker.cfg.slab_bytes) as u32;
+                self.broker.registry.register_producer(ProducerId(producer), capacity_gb);
+                if !rejoining {
+                    // Replay persisted usage history (fresh broker-side
+                    // record); a rejoining producer's history is live.
+                    if let Some(h) = &self.history {
+                        for (us, gb) in h.load(producer) {
+                            self.broker.registry.report_usage(
+                                ProducerId(producer),
+                                SimTime::from_micros(us),
+                                gb,
+                            );
+                        }
+                    }
+                }
+                self.broker
+                    .registry
+                    .update_producer_resources(ProducerId(producer), free_slabs, 1.0, 1.0);
+                self.apply_optimistic_safety();
+                self.producers
+                    .insert(producer, ProducerEntry { endpoint, last_heartbeat_us: now_us });
+                CtrlResponse::Registered { producer, slab_bytes: self.broker.cfg.slab_bytes }
+            }
+            CtrlRequest::Heartbeat {
+                producer,
+                free_slabs,
+                used_gb,
+                cpu_headroom,
+                bandwidth_headroom,
+            } => {
+                let Some(entry) = self.producers.get_mut(&producer) else {
+                    return Self::refused(
+                        RefuseCode::UnknownProducer,
+                        format!("producer {producer} is not registered"),
+                    );
+                };
+                entry.last_heartbeat_us = now_us;
+                self.broker.registry.report_usage(ProducerId(producer), now, used_gb);
+                if let Some(tx) = &self.history_tx {
+                    let _ = tx.send((producer, now_us, used_gb));
+                }
+                self.broker.registry.update_producer_resources(
+                    ProducerId(producer),
+                    free_slabs,
+                    cpu_headroom as f64,
+                    bandwidth_headroom as f64,
+                );
+                self.apply_optimistic_safety();
+                self.leases.sweep_expired(now_us);
+                self.apply_lease_ends();
+                let granted = self
+                    .leases
+                    .take_unannounced(producer)
+                    .into_iter()
+                    .map(|rec| ProducerGrant {
+                        lease: rec.id,
+                        consumer: rec.consumer,
+                        slabs: rec.slabs,
+                        slab_bytes: rec.slab_bytes,
+                        ttl_us: rec.ttl_us(now_us),
+                    })
+                    .collect();
+                let ended = self.leases.take_ended_unacked(producer);
+                CtrlResponse::HeartbeatAck {
+                    target_bytes: self.leases.producer_target_bytes(producer),
+                    granted,
+                    ended,
+                }
+            }
+            CtrlRequest::RequestSlabs { consumer, slabs, min_slabs, ttl_us } => {
+                if slabs == 0 {
+                    return Self::refused(RefuseCode::Malformed, "zero slabs requested");
+                }
+                // Clamp hostile TTLs: 30 days is far beyond any sane
+                // lease, and keeps expiry arithmetic comfortably finite.
+                const MAX_TTL_US: u64 = 30 * 24 * 3600 * 1_000_000;
+                let ttl_us = ttl_us.min(MAX_TTL_US);
+                self.leases.sweep_expired(now_us);
+                self.apply_lease_ends();
+                self.broker.registry.register_consumer(ConsumerId(consumer));
+                let request = ConsumerRequest {
+                    consumer: ConsumerId(consumer),
+                    slabs,
+                    min_slabs: min_slabs.max(1),
+                    lease: SimTime::from_micros(ttl_us),
+                    max_price_per_slab_hour: None,
+                    latency_us_to: Default::default(),
+                    weights: None,
+                };
+                let leases = self.broker.request_memory(now, request);
+                // No server-side queue: the pool retries on its own.
+                self.broker.drain_pending();
+                let mut grants = Vec::with_capacity(leases.len());
+                for lease in &leases {
+                    let endpoint = match self.producers.get(&lease.producer.0) {
+                        Some(e) => e.endpoint.clone(),
+                        None => {
+                            // Ungrantable after all: return the slabs the
+                            // registry already counted against the producer.
+                            self.broker.lease_ended(lease, false);
+                            continue;
+                        }
+                    };
+                    let duration_us = lease.duration.as_micros();
+                    if self
+                        .leases
+                        .insert(
+                            lease.id.0,
+                            consumer,
+                            lease.producer.0,
+                            lease.slabs,
+                            lease.slab_bytes,
+                            lease.price_per_slab_hour.0,
+                            now_us,
+                            duration_us,
+                        )
+                        .is_err()
+                    {
+                        self.broker.lease_ended(lease, false);
+                        continue;
+                    }
+                    grants.push(GrantInfo {
+                        lease: lease.id.0,
+                        producer: lease.producer.0,
+                        endpoint,
+                        slabs: lease.slabs,
+                        slab_bytes: lease.slab_bytes,
+                        ttl_us: duration_us,
+                        price_nd_per_slab_hour: lease.price_per_slab_hour.0,
+                    });
+                }
+                if grants.is_empty() {
+                    Self::refused(RefuseCode::NoCapacity, "no grantable capacity right now")
+                } else {
+                    CtrlResponse::Grants { leases: grants }
+                }
+            }
+            CtrlRequest::Renew { consumer, lease } => {
+                if let Some(r) = self.verify_holder(lease, consumer, true) {
+                    return r;
+                }
+                match self.leases.renew(lease, now_us) {
+                    Ok(new_expiry) => {
+                        CtrlResponse::Renewed { lease, ttl_us: new_expiry - now_us }
+                    }
+                    Err(e) => {
+                        self.apply_lease_ends();
+                        Self::refuse_lease_error(e)
+                    }
+                }
+            }
+            CtrlRequest::Release { consumer, lease } => {
+                if let Some(r) = self.verify_holder(lease, consumer, true) {
+                    return r;
+                }
+                match self.leases.release(lease, now_us) {
+                    Ok(_) => {
+                        self.apply_lease_ends();
+                        CtrlResponse::Released { lease }
+                    }
+                    Err(e) => {
+                        self.apply_lease_ends();
+                        Self::refuse_lease_error(e)
+                    }
+                }
+            }
+            CtrlRequest::Revoke { producer, lease } => {
+                if let Some(r) = self.verify_holder(lease, producer, false) {
+                    return r;
+                }
+                match self.leases.revoke(lease, now_us) {
+                    Ok(_) => {
+                        self.apply_lease_ends();
+                        CtrlResponse::Revoked { lease }
+                    }
+                    Err(e) => {
+                        self.apply_lease_ends();
+                        Self::refuse_lease_error(e)
+                    }
+                }
+            }
+            CtrlRequest::Deregister { producer } => {
+                if self.producers.contains_key(&producer) {
+                    self.drop_producer(producer, now_us);
+                    CtrlResponse::Deregistered { producer }
+                } else {
+                    Self::refused(
+                        RefuseCode::UnknownProducer,
+                        format!("producer {producer} is not registered"),
+                    )
+                }
+            }
+        }
+    }
+}
+
+/// The networked broker daemon (`memtrade broker` in the CLI).
+pub struct BrokerServer {
+    local_addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_handle: Option<JoinHandle<()>>,
+    maint_handle: Option<JoinHandle<()>>,
+    history_handle: Option<JoinHandle<()>>,
+    state: Arc<Mutex<State>>,
+    start: Instant,
+}
+
+impl BrokerServer {
+    /// Bind and serve. `broker_cfg` sets the market economics (slab
+    /// size, min lease, placement weights); `cfg` the daemon behavior.
+    pub fn start<A: ToSocketAddrs>(
+        addr: A,
+        broker_cfg: BrokerConfig,
+        cfg: BrokerServerConfig,
+    ) -> io::Result<Self> {
+        let listener = TcpListener::bind(addr)?;
+        let local_addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+
+        let slab_frac = broker_cfg.slab_bytes as f64 / GIB as f64;
+        let initial_price = cfg
+            .spot_per_gb_hour
+            .scale(broker_cfg.initial_price_fraction * slab_frac);
+        let broker = Broker::new(
+            broker_cfg.clone(),
+            AvailabilityPredictor::auto(),
+            PricingEngine::new(
+                PricingStrategy::FixedFraction,
+                initial_price,
+                broker_cfg.price_step_dollars,
+            ),
+        );
+        let history = match cfg.history_dir.clone() {
+            Some(dir) => Some(HistoryStore::open(dir)?),
+            None => None,
+        };
+        let stop = Arc::new(AtomicBool::new(false));
+        // Appends run on their own thread: heartbeat handling must never
+        // touch the disk while holding the state lock.
+        let (history_tx, history_handle) = match history.clone() {
+            Some(store) => {
+                let (tx, rx) = mpsc::channel::<HistorySample>();
+                let stop = stop.clone();
+                let handle = std::thread::spawn(move || {
+                    while !stop.load(Ordering::Relaxed) {
+                        match rx.recv_timeout(Duration::from_millis(100)) {
+                            Ok((producer, us, gb)) => store.append(producer, us, gb),
+                            Err(mpsc::RecvTimeoutError::Timeout) => {}
+                            Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                        }
+                    }
+                });
+                (Some(tx), Some(handle))
+            }
+            None => (None, None),
+        };
+        let state = Arc::new(Mutex::new(State {
+            broker,
+            leases: LeaseTable::default(),
+            producers: HashMap::new(),
+            history,
+            history_tx,
+            cfg: cfg.clone(),
+        }));
+        let start = Instant::now();
+
+        let accept_handle = {
+            let stop = stop.clone();
+            let state = state.clone();
+            std::thread::spawn(move || {
+                let mut conn_handles: Vec<JoinHandle<()>> = Vec::new();
+                while !stop.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            // The daemon runs forever and peers reconnect
+                            // freely: reap finished connection threads so
+                            // the handle list doesn't grow without bound.
+                            conn_handles.retain(|h| !h.is_finished());
+                            stream.set_nodelay(true).ok();
+                            let state = state.clone();
+                            let stop = stop.clone();
+                            conn_handles.push(std::thread::spawn(move || {
+                                let _ = serve_control_conn(stream, state, stop, start);
+                            }));
+                        }
+                        Err(ref e) if e.kind() == io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(1));
+                        }
+                        Err(_) => break,
+                    }
+                }
+                for h in conn_handles {
+                    let _ = h.join();
+                }
+            })
+        };
+
+        let maint_handle = {
+            let stop = stop.clone();
+            let state = state.clone();
+            let tick = cfg.tick;
+            let forecast_every = cfg.forecast_every;
+            std::thread::spawn(move || {
+                let mut last_forecast: Option<Instant> = None;
+                while !stop.load(Ordering::Relaxed) {
+                    std::thread::sleep(tick);
+                    let now_us = start.elapsed().as_micros() as u64;
+                    let mut s = state.lock().unwrap();
+                    s.leases.sweep_expired(now_us);
+                    s.apply_lease_ends();
+                    s.sweep_dead_producers(now_us);
+                    // Forecast + pricing on their own (slow) cadence: the
+                    // AR fit holds the lock and must not run per tick.
+                    let due =
+                        last_forecast.map_or(true, |t| t.elapsed() >= forecast_every);
+                    if due {
+                        s.refresh_forecasts(now_us);
+                        last_forecast = Some(Instant::now());
+                    }
+                }
+            })
+        };
+
+        Ok(BrokerServer {
+            local_addr,
+            stop,
+            accept_handle: Some(accept_handle),
+            maint_handle: Some(maint_handle),
+            history_handle,
+            state,
+            start,
+        })
+    }
+
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.local_addr
+    }
+
+    /// Microseconds on the daemon's monotonic clock.
+    pub fn now_us(&self) -> u64 {
+        self.start.elapsed().as_micros() as u64
+    }
+
+    pub fn producer_count(&self) -> usize {
+        self.state.lock().unwrap().producers.len()
+    }
+
+    pub fn active_lease_count(&self) -> usize {
+        self.state.lock().unwrap().leases.active_count()
+    }
+
+    /// Current market price per slab-hour.
+    pub fn current_price(&self) -> Money {
+        self.state.lock().unwrap().broker.current_price()
+    }
+
+    pub fn stop(mut self) {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.accept_handle.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.maint_handle.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.history_handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for BrokerServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn serve_control_conn(
+    stream: TcpStream,
+    state: Arc<Mutex<State>>,
+    stop: Arc<AtomicBool>,
+    start: Instant,
+) -> io::Result<()> {
+    stream.set_read_timeout(Some(Duration::from_millis(100)))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = BufWriter::new(stream);
+    let keep_going = || !stop.load(Ordering::Relaxed);
+    if !server_handshake_patient(&mut reader, &mut writer, CONTROL_MAGIC, keep_going)? {
+        return Ok(());
+    }
+    let mut frame: Vec<u8> = Vec::new();
+    let mut out: Vec<u8> = Vec::new();
+    loop {
+        let keep_going = || !stop.load(Ordering::Relaxed);
+        match read_frame_into_patient(&mut reader, &mut frame, keep_going) {
+            Ok(true) => {}
+            Ok(false) | Err(_) => return Ok(()),
+        }
+        let resp = match CtrlRequest::decode(&frame) {
+            Ok(req) => {
+                let now_us = start.elapsed().as_micros() as u64;
+                state.lock().unwrap().handle(req, now_us)
+            }
+            Err(e @ CodecError::UnknownTag(_)) => CtrlResponse::Refused {
+                code: RefuseCode::Malformed,
+                detail: format!("not a control frame: {e}"),
+            },
+            Err(e) => CtrlResponse::Refused {
+                code: RefuseCode::Malformed,
+                detail: e.to_string(),
+            },
+        };
+        out.clear();
+        resp.encode_into(&mut out);
+        write_frame(&mut writer, &out)?;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::control::CtrlClient;
+
+    fn quick_cfg() -> (BrokerConfig, BrokerServerConfig) {
+        let broker_cfg = BrokerConfig {
+            min_lease: SimTime::from_millis(200),
+            ..Default::default()
+        };
+        let cfg = BrokerServerConfig {
+            tick: Duration::from_millis(20),
+            producer_timeout: Duration::from_millis(400),
+            forecast_min_samples: 1_000_000, // stay optimistic in tests
+            ..Default::default()
+        };
+        (broker_cfg, cfg)
+    }
+
+    fn register(ctrl: &mut CtrlClient, producer: u64, free_slabs: u32) {
+        let resp = ctrl
+            .call(&CtrlRequest::Register {
+                producer,
+                capacity_gb: 8.0,
+                endpoint: format!("127.0.0.1:{}", 9000 + producer),
+                free_bytes: free_slabs as u64 * crate::core::DEFAULT_SLAB_BYTES,
+            })
+            .unwrap();
+        assert!(matches!(resp, CtrlResponse::Registered { .. }), "{resp:?}");
+    }
+
+    #[test]
+    fn register_request_renew_release_over_tcp() {
+        let (b, c) = quick_cfg();
+        let server = BrokerServer::start("127.0.0.1:0", b, c).unwrap();
+        let mut ctrl = CtrlClient::connect(server.addr()).unwrap();
+        register(&mut ctrl, 1, 32);
+        assert_eq!(server.producer_count(), 1);
+
+        let resp = ctrl
+            .call(&CtrlRequest::RequestSlabs {
+                consumer: 9,
+                slabs: 4,
+                min_slabs: 1,
+                ttl_us: 60_000_000,
+            })
+            .unwrap();
+        let CtrlResponse::Grants { leases } = resp else { panic!("{resp:?}") };
+        assert_eq!(leases.iter().map(|g| g.slabs).sum::<u32>(), 4);
+        assert_eq!(server.active_lease_count(), leases.len());
+        let id = leases[0].lease;
+
+        let resp = ctrl.call(&CtrlRequest::Renew { consumer: 9, lease: id }).unwrap();
+        assert!(matches!(resp, CtrlResponse::Renewed { lease, .. } if lease == id));
+        // Identity is enforced: another participant cannot end the lease.
+        let resp = ctrl.call(&CtrlRequest::Release { consumer: 8, lease: id }).unwrap();
+        assert!(matches!(resp, CtrlResponse::Refused { .. }), "{resp:?}");
+        let resp = ctrl.call(&CtrlRequest::Revoke { producer: 99, lease: id }).unwrap();
+        assert!(matches!(resp, CtrlResponse::Refused { .. }), "{resp:?}");
+        let resp = ctrl.call(&CtrlRequest::Release { consumer: 9, lease: id }).unwrap();
+        assert_eq!(resp, CtrlResponse::Released { lease: id });
+        let resp = ctrl.call(&CtrlRequest::Release { consumer: 9, lease: id }).unwrap();
+        assert!(
+            matches!(resp, CtrlResponse::Refused { code: RefuseCode::LeaseReleased, .. }),
+            "{resp:?}"
+        );
+        server.stop();
+    }
+
+    #[test]
+    fn heartbeat_acks_carry_grants_and_ends() {
+        let (b, c) = quick_cfg();
+        let slab_bytes = b.slab_bytes;
+        let server = BrokerServer::start("127.0.0.1:0", b, c).unwrap();
+        let mut ctrl = CtrlClient::connect(server.addr()).unwrap();
+        register(&mut ctrl, 5, 16);
+
+        let resp = ctrl
+            .call(&CtrlRequest::RequestSlabs {
+                consumer: 9,
+                slabs: 2,
+                min_slabs: 1,
+                ttl_us: 250_000,
+            })
+            .unwrap();
+        let CtrlResponse::Grants { leases } = resp else { panic!("{resp:?}") };
+        let id = leases[0].lease;
+
+        let hb = CtrlRequest::Heartbeat {
+            producer: 5,
+            free_slabs: 14,
+            used_gb: 2.0,
+            cpu_headroom: 0.9,
+            bandwidth_headroom: 0.9,
+        };
+        let resp = ctrl.call(&hb).unwrap();
+        let CtrlResponse::HeartbeatAck { target_bytes, granted, ended } = resp else {
+            panic!("{resp:?}")
+        };
+        assert_eq!(target_bytes, 2 * slab_bytes);
+        assert_eq!(granted.len(), leases.len());
+        assert_eq!(granted[0].lease, id);
+        assert!(ended.is_empty());
+
+        // Let the (short) lease expire, then the next ack reports the end
+        // and a zero target.
+        std::thread::sleep(Duration::from_millis(400));
+        let resp = ctrl.call(&hb).unwrap();
+        let CtrlResponse::HeartbeatAck { target_bytes, granted, ended } = resp else {
+            panic!("{resp:?}")
+        };
+        assert_eq!(target_bytes, 0);
+        assert!(granted.is_empty());
+        assert!(ended.contains(&id), "{ended:?}");
+        // Renewing the expired (and gc'd) lease is cleanly refused.
+        let resp = ctrl.call(&CtrlRequest::Renew { consumer: 9, lease: id }).unwrap();
+        assert!(matches!(resp, CtrlResponse::Refused { .. }), "{resp:?}");
+        server.stop();
+    }
+
+    #[test]
+    fn reregistration_keeps_leases_and_reannounces() {
+        let (b, c) = quick_cfg();
+        let slab_bytes = b.slab_bytes;
+        let server = BrokerServer::start("127.0.0.1:0", b, c).unwrap();
+        let mut ctrl = CtrlClient::connect(server.addr()).unwrap();
+        register(&mut ctrl, 3, 32);
+        let resp = ctrl
+            .call(&CtrlRequest::RequestSlabs {
+                consumer: 9,
+                slabs: 4,
+                min_slabs: 1,
+                ttl_us: 60_000_000,
+            })
+            .unwrap();
+        let CtrlResponse::Grants { leases } = resp else { panic!("{resp:?}") };
+        let hb = CtrlRequest::Heartbeat {
+            producer: 3,
+            free_slabs: 28,
+            used_gb: 2.0,
+            cpu_headroom: 0.9,
+            bandwidth_headroom: 0.9,
+        };
+        // First ack announces the grant...
+        let CtrlResponse::HeartbeatAck { granted, .. } = ctrl.call(&hb).unwrap() else {
+            panic!()
+        };
+        assert_eq!(granted.len(), leases.len());
+        // ...the agent "loses" that ack and reconnects: re-registration
+        // must keep the lease and re-announce it, not revoke it.
+        register(&mut ctrl, 3, 32);
+        assert_eq!(server.active_lease_count(), leases.len());
+        let CtrlResponse::HeartbeatAck { target_bytes, granted, .. } =
+            ctrl.call(&hb).unwrap()
+        else {
+            panic!()
+        };
+        assert_eq!(granted.len(), leases.len(), "grants not re-announced");
+        assert_eq!(target_bytes, 4 * slab_bytes);
+        server.stop();
+    }
+
+    #[test]
+    fn dead_producer_swept_and_leases_revoked() {
+        let (b, c) = quick_cfg();
+        let server = BrokerServer::start("127.0.0.1:0", b, c).unwrap();
+        let mut ctrl = CtrlClient::connect(server.addr()).unwrap();
+        register(&mut ctrl, 1, 32);
+        let resp = ctrl
+            .call(&CtrlRequest::RequestSlabs {
+                consumer: 9,
+                slabs: 4,
+                min_slabs: 1,
+                ttl_us: 60_000_000,
+            })
+            .unwrap();
+        let CtrlResponse::Grants { leases } = resp else { panic!("{resp:?}") };
+        // No heartbeats: past the timeout the producer and its leases go.
+        std::thread::sleep(Duration::from_millis(700));
+        assert_eq!(server.producer_count(), 0);
+        assert_eq!(server.active_lease_count(), 0);
+        let resp =
+            ctrl.call(&CtrlRequest::Renew { consumer: 9, lease: leases[0].lease }).unwrap();
+        assert!(matches!(resp, CtrlResponse::Refused { .. }), "{resp:?}");
+        server.stop();
+    }
+
+    #[test]
+    fn history_persists_across_restart() {
+        let dir = std::env::temp_dir().join(format!(
+            "memtrade-history-test-{}-{}",
+            std::process::id(),
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .unwrap()
+                .as_nanos()
+        ));
+        let (b, mut c) = quick_cfg();
+        c.history_dir = Some(dir.clone());
+        let store = HistoryStore::open(dir.clone()).unwrap();
+        for t in 0..40u64 {
+            store.append(77, t * 1_000, 2.5);
+        }
+        let server = BrokerServer::start("127.0.0.1:0", b, c).unwrap();
+        let mut ctrl = CtrlClient::connect(server.addr()).unwrap();
+        register(&mut ctrl, 77, 16);
+        // The replayed history landed in the registry.
+        {
+            let s = server.state.lock().unwrap();
+            let p = s.broker.registry.producer(ProducerId(77)).unwrap();
+            assert_eq!(p.usage.len(), 40);
+        }
+        // A heartbeat appends a new sample to the same file.
+        ctrl.call(&CtrlRequest::Heartbeat {
+            producer: 77,
+            free_slabs: 16,
+            used_gb: 2.75,
+            cpu_headroom: 1.0,
+            bandwidth_headroom: 1.0,
+        })
+        .unwrap();
+        // Appends flow through the writer thread; wait for the flush.
+        let deadline = Instant::now() + Duration::from_secs(2);
+        while store.load(77).len() != 41 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert_eq!(store.load(77).len(), 41);
+        server.stop();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,460 @@
+//! Lease lifecycle state machine, shared by the broker daemon and the
+//! discrete-event simulator.
+//!
+//! The table is clock-agnostic: every operation takes `now_us` (a
+//! monotonic microsecond count — wall clock in the daemon, `SimTime` in
+//! the simulator), so the state machine can be unit-tested on a mock
+//! clock and reused verbatim by both drivers.
+//!
+//! States: `Active` → `Expired` (TTL ran out), `Revoked` (producer took
+//! the memory back early, or died), or `Released` (consumer returned it)
+//! — all terminal. Transitions are *lazy* as well as swept: `renew`/
+//! `release`/`revoke` first lapse an overdue lease, so renew-after-expiry
+//! and expiry-while-a-revocation-is-in-flight resolve deterministically
+//! (the expiry wins). Every transition is queued once for the
+//! accounting consumer ([`LeaseTable::take_ended`]) and tracked
+//! per-producer for heartbeat acks.
+
+use std::collections::HashMap;
+
+/// Lifecycle state of one lease. All non-`Active` states are terminal.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LeaseState {
+    Active,
+    Expired,
+    Revoked,
+    Released,
+}
+
+impl LeaseState {
+    pub fn is_terminal(self) -> bool {
+        !matches!(self, LeaseState::Active)
+    }
+}
+
+/// One brokered lease as tracked by the control plane.
+#[derive(Clone, Debug)]
+pub struct LeaseRecord {
+    pub id: u64,
+    pub consumer: u64,
+    pub producer: u64,
+    pub slabs: u32,
+    pub slab_bytes: u64,
+    /// Agreed price, nano-dollars per slab-hour.
+    pub price_nd_per_slab_hour: i64,
+    pub granted_us: u64,
+    /// Lease duration; each successful renewal extends expiry by this.
+    pub duration_us: u64,
+    pub expiry_us: u64,
+    pub state: LeaseState,
+    /// Grant has been announced to the producer (heartbeat ack).
+    announced: bool,
+}
+
+impl LeaseRecord {
+    pub fn bytes(&self) -> u64 {
+        self.slabs as u64 * self.slab_bytes
+    }
+
+    /// Remaining lifetime at `now_us` (0 once overdue).
+    pub fn ttl_us(&self, now_us: u64) -> u64 {
+        self.expiry_us.saturating_sub(now_us)
+    }
+}
+
+/// Why a lease operation was refused.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LeaseError {
+    Unknown(u64),
+    /// The lease already reached the given terminal state.
+    Ended(u64, LeaseState),
+    /// An *active* lease with this id already exists.
+    Duplicate(u64),
+}
+
+impl std::fmt::Display for LeaseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            LeaseError::Unknown(id) => write!(f, "unknown lease {id}"),
+            LeaseError::Ended(id, s) => write!(f, "lease {id} already ended ({s:?})"),
+            LeaseError::Duplicate(id) => write!(f, "lease {id} already active"),
+        }
+    }
+}
+
+impl std::error::Error for LeaseError {}
+
+/// A completed lifecycle transition, for registry/billing accounting.
+#[derive(Clone, Debug)]
+pub struct LeaseEnd {
+    pub record: LeaseRecord,
+    pub cause: LeaseState,
+}
+
+/// The lease book: id → record, plus an accounting queue of ended
+/// leases and per-producer announcement tracking.
+#[derive(Default)]
+pub struct LeaseTable {
+    leases: HashMap<u64, LeaseRecord>,
+    /// Transitions not yet drained by [`Self::take_ended`].
+    ended: Vec<LeaseEnd>,
+    /// Terminal lease ids not yet acked to their producer. Records stay
+    /// in `leases` until acked so late renews get a precise refusal.
+    end_unacked: Vec<u64>,
+}
+
+impl LeaseTable {
+    /// Record a freshly granted lease. Lease ids come from the grantor
+    /// (the [`crate::broker::Broker`]); a terminal record under the same
+    /// id is superseded, an active one is a [`LeaseError::Duplicate`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn insert(
+        &mut self,
+        id: u64,
+        consumer: u64,
+        producer: u64,
+        slabs: u32,
+        slab_bytes: u64,
+        price_nd_per_slab_hour: i64,
+        now_us: u64,
+        duration_us: u64,
+    ) -> Result<(), LeaseError> {
+        if let Some(existing) = self.leases.get(&id) {
+            if existing.state == LeaseState::Active {
+                return Err(LeaseError::Duplicate(id));
+            }
+            self.end_unacked.retain(|&e| e != id);
+        }
+        self.leases.insert(
+            id,
+            LeaseRecord {
+                id,
+                consumer,
+                producer,
+                slabs,
+                slab_bytes,
+                price_nd_per_slab_hour,
+                granted_us: now_us,
+                duration_us,
+                // Saturating: a hostile/buggy u64::MAX TTL must not wrap
+                // into an instant expiry (or panic the sweep in debug).
+                expiry_us: now_us.saturating_add(duration_us),
+                state: LeaseState::Active,
+                announced: false,
+            },
+        );
+        Ok(())
+    }
+
+    pub fn get(&self, id: u64) -> Option<&LeaseRecord> {
+        self.leases.get(&id)
+    }
+
+    pub fn len(&self) -> usize {
+        self.leases.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.leases.is_empty()
+    }
+
+    pub fn active(&self) -> impl Iterator<Item = &LeaseRecord> {
+        self.leases.values().filter(|l| l.state == LeaseState::Active)
+    }
+
+    pub fn active_count(&self) -> usize {
+        self.active().count()
+    }
+
+    /// Total bytes of this producer's active leases — the authoritative
+    /// store size its agent must maintain.
+    pub fn producer_target_bytes(&self, producer: u64) -> u64 {
+        self.active().filter(|l| l.producer == producer).map(|l| l.bytes()).sum()
+    }
+
+    /// Lapse one overdue lease in place; returns its (possibly updated)
+    /// state. Terminal transitions queue an accounting event.
+    fn lapse(
+        leases: &mut HashMap<u64, LeaseRecord>,
+        ended: &mut Vec<LeaseEnd>,
+        end_unacked: &mut Vec<u64>,
+        id: u64,
+        now_us: u64,
+    ) -> Option<LeaseState> {
+        let rec = leases.get_mut(&id)?;
+        if rec.state == LeaseState::Active && now_us >= rec.expiry_us {
+            rec.state = LeaseState::Expired;
+            ended.push(LeaseEnd { record: rec.clone(), cause: LeaseState::Expired });
+            end_unacked.push(id);
+        }
+        Some(rec.state)
+    }
+
+    /// Extend an active lease by its original duration. Renewing an
+    /// overdue lease fails with `Ended(Expired)` — the expiry wins, and
+    /// the consumer must request fresh capacity.
+    pub fn renew(&mut self, id: u64, now_us: u64) -> Result<u64, LeaseError> {
+        let state =
+            Self::lapse(&mut self.leases, &mut self.ended, &mut self.end_unacked, id, now_us)
+                .ok_or(LeaseError::Unknown(id))?;
+        if state.is_terminal() {
+            return Err(LeaseError::Ended(id, state));
+        }
+        let rec = self.leases.get_mut(&id).unwrap();
+        rec.expiry_us = now_us.saturating_add(rec.duration_us);
+        Ok(rec.expiry_us)
+    }
+
+    fn end_with(
+        &mut self,
+        id: u64,
+        now_us: u64,
+        cause: LeaseState,
+    ) -> Result<LeaseRecord, LeaseError> {
+        debug_assert!(cause.is_terminal());
+        let state =
+            Self::lapse(&mut self.leases, &mut self.ended, &mut self.end_unacked, id, now_us)
+                .ok_or(LeaseError::Unknown(id))?;
+        if state.is_terminal() {
+            // Double-release, revoke-after-expiry, expiry-while-a-
+            // revocation-was-in-flight: the earlier transition stands.
+            return Err(LeaseError::Ended(id, state));
+        }
+        let rec = self.leases.get_mut(&id).unwrap();
+        rec.state = cause;
+        let snapshot = rec.clone();
+        self.ended.push(LeaseEnd { record: snapshot.clone(), cause });
+        self.end_unacked.push(id);
+        Ok(snapshot)
+    }
+
+    /// Consumer returns the lease (graceful end).
+    pub fn release(&mut self, id: u64, now_us: u64) -> Result<LeaseRecord, LeaseError> {
+        self.end_with(id, now_us, LeaseState::Released)
+    }
+
+    /// Producer takes the memory back early (counts against reputation).
+    pub fn revoke(&mut self, id: u64, now_us: u64) -> Result<LeaseRecord, LeaseError> {
+        self.end_with(id, now_us, LeaseState::Revoked)
+    }
+
+    /// Revoke every active lease of a producer (it died or deregistered).
+    /// The producer is gone, so no ack will ever come: all its records —
+    /// including earlier expiries still awaiting ack — are gc'd now.
+    pub fn revoke_all_for_producer(&mut self, producer: u64, now_us: u64) -> Vec<LeaseRecord> {
+        let ids: Vec<u64> = self
+            .active()
+            .filter(|l| l.producer == producer)
+            .map(|l| l.id)
+            .collect();
+        let mut out = Vec::with_capacity(ids.len());
+        for id in ids {
+            if let Ok(rec) = self.revoke(id, now_us) {
+                out.push(rec);
+            }
+        }
+        self.end_unacked
+            .retain(|id| self.leases.get(id).is_some_and(|r| r.producer != producer));
+        self.leases.retain(|_, r| r.producer != producer || !r.state.is_terminal());
+        out
+    }
+
+    /// Transition every overdue active lease to `Expired`; returns the
+    /// newly expired records.
+    pub fn sweep_expired(&mut self, now_us: u64) -> Vec<LeaseRecord> {
+        let due: Vec<u64> = self
+            .leases
+            .values()
+            .filter(|l| l.state == LeaseState::Active && now_us >= l.expiry_us)
+            .map(|l| l.id)
+            .collect();
+        let mut out = Vec::with_capacity(due.len());
+        for id in due {
+            Self::lapse(&mut self.leases, &mut self.ended, &mut self.end_unacked, id, now_us);
+            out.push(self.leases[&id].clone());
+        }
+        out
+    }
+
+    /// Drain the accounting queue: every terminal transition exactly once.
+    pub fn take_ended(&mut self) -> Vec<LeaseEnd> {
+        std::mem::take(&mut self.ended)
+    }
+
+    /// Active leases of `producer` not yet announced to it; marks them
+    /// announced (piggybacked on its next heartbeat ack).
+    pub fn take_unannounced(&mut self, producer: u64) -> Vec<LeaseRecord> {
+        let mut out = Vec::new();
+        for rec in self.leases.values_mut() {
+            if rec.producer == producer && rec.state == LeaseState::Active && !rec.announced {
+                rec.announced = true;
+                out.push(rec.clone());
+            }
+        }
+        out
+    }
+
+    /// Forget announcements to `producer`: its agent reconnected with a
+    /// blank slate (a control-plane blip or restart), so the next
+    /// heartbeat ack must re-carry every active lease. Pending ends stay
+    /// queued and re-carry too.
+    pub fn reset_announcements(&mut self, producer: u64) {
+        for rec in self.leases.values_mut() {
+            if rec.producer == producer && rec.state == LeaseState::Active {
+                rec.announced = false;
+            }
+        }
+    }
+
+    /// Terminal lease ids of `producer` not yet acked to it; acking
+    /// garbage-collects the records.
+    pub fn take_ended_unacked(&mut self, producer: u64) -> Vec<u64> {
+        let mut out = Vec::new();
+        self.end_unacked.retain(|&id| match self.leases.get(&id) {
+            Some(rec) if rec.producer == producer => {
+                out.push(id);
+                false
+            }
+            Some(_) => true,
+            None => false,
+        });
+        for id in &out {
+            self.leases.remove(id);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MB64: u64 = 64 << 20;
+
+    fn table_with(id: u64, now: u64, ttl: u64) -> LeaseTable {
+        let mut t = LeaseTable::default();
+        t.insert(id, 100, 1, 4, MB64, 42, now, ttl).unwrap();
+        t
+    }
+
+    #[test]
+    fn grant_renew_expire_on_mock_clock() {
+        let mut t = table_with(1, 0, 1_000);
+        assert_eq!(t.get(1).unwrap().expiry_us, 1_000);
+        assert_eq!(t.get(1).unwrap().ttl_us(400), 600);
+        // Renew at 900 pushes expiry to 900 + duration.
+        assert_eq!(t.renew(1, 900).unwrap(), 1_900);
+        // Sweep before expiry: nothing.
+        assert!(t.sweep_expired(1_800).is_empty());
+        // Sweep after: expired exactly once.
+        let swept = t.sweep_expired(1_900);
+        assert_eq!(swept.len(), 1);
+        assert_eq!(swept[0].state, LeaseState::Expired);
+        assert!(t.sweep_expired(2_000).is_empty());
+        let ends = t.take_ended();
+        assert_eq!(ends.len(), 1);
+        assert_eq!(ends[0].cause, LeaseState::Expired);
+        assert!(t.take_ended().is_empty());
+    }
+
+    #[test]
+    fn renew_after_expiry_refused_even_without_sweep() {
+        let mut t = table_with(1, 0, 1_000);
+        // No sweep ran; the lazy lapse inside renew must still refuse.
+        assert_eq!(t.renew(1, 1_000), Err(LeaseError::Ended(1, LeaseState::Expired)));
+        // The lapse was recorded for accounting exactly once.
+        assert_eq!(t.take_ended().len(), 1);
+        assert_eq!(t.renew(1, 1_100), Err(LeaseError::Ended(1, LeaseState::Expired)));
+        assert!(t.take_ended().is_empty());
+    }
+
+    #[test]
+    fn revoke_and_double_release() {
+        let mut t = table_with(1, 0, 10_000);
+        t.insert(2, 100, 1, 2, MB64, 42, 0, 10_000).unwrap();
+        assert_eq!(t.revoke(1, 100).unwrap().state, LeaseState::Revoked);
+        assert_eq!(t.renew(1, 200), Err(LeaseError::Ended(1, LeaseState::Revoked)));
+        assert_eq!(t.release(2, 100).unwrap().state, LeaseState::Released);
+        // Double-release is a precise refusal, not a second transition.
+        assert_eq!(t.release(2, 200), Err(LeaseError::Ended(2, LeaseState::Released)));
+        let ends = t.take_ended();
+        assert_eq!(ends.len(), 2);
+    }
+
+    #[test]
+    fn expiry_beats_revocation_in_flight() {
+        // A revoke that arrives after the expiry instant (e.g. queued on
+        // the wire while the sweep ran) resolves as Expired, not Revoked.
+        let mut t = table_with(1, 0, 1_000);
+        assert_eq!(t.revoke(1, 1_000), Err(LeaseError::Ended(1, LeaseState::Expired)));
+        assert_eq!(t.get(1).unwrap().state, LeaseState::Expired);
+        let ends = t.take_ended();
+        assert_eq!(ends.len(), 1);
+        assert_eq!(ends[0].cause, LeaseState::Expired);
+    }
+
+    #[test]
+    fn unknown_and_duplicate() {
+        let mut t = table_with(1, 0, 1_000);
+        assert_eq!(t.renew(9, 0), Err(LeaseError::Unknown(9)));
+        assert_eq!(t.release(9, 0), Err(LeaseError::Unknown(9)));
+        assert_eq!(
+            t.insert(1, 100, 1, 4, MB64, 42, 0, 1_000),
+            Err(LeaseError::Duplicate(1))
+        );
+        // A terminal record may be superseded (the sim re-leases ids).
+        t.revoke(1, 10).unwrap();
+        t.insert(1, 100, 1, 4, MB64, 42, 20, 1_000).unwrap();
+        assert_eq!(t.get(1).unwrap().state, LeaseState::Active);
+    }
+
+    #[test]
+    fn producer_announcement_and_ack_flow() {
+        let mut t = table_with(1, 0, 1_000);
+        t.insert(2, 100, 1, 2, MB64, 42, 0, 5_000).unwrap();
+        t.insert(3, 100, 7, 8, MB64, 42, 0, 5_000).unwrap();
+        assert_eq!(t.producer_target_bytes(1), 6 * MB64);
+        // Announce producer 1's grants once.
+        let g = t.take_unannounced(1);
+        assert_eq!(g.len(), 2);
+        assert!(t.take_unannounced(1).is_empty());
+        assert_eq!(t.take_unannounced(7).len(), 1);
+        // Lease 1 expires; the end is acked to producer 1 once, then gc'd.
+        t.sweep_expired(1_000);
+        assert_eq!(t.producer_target_bytes(1), 2 * MB64);
+        assert_eq!(t.take_ended_unacked(1), vec![1]);
+        assert!(t.take_ended_unacked(1).is_empty());
+        assert!(t.get(1).is_none());
+        // A renew arriving after gc gets Unknown — the slot is long dead.
+        assert_eq!(t.renew(1, 1_100), Err(LeaseError::Unknown(1)));
+    }
+
+    #[test]
+    fn dead_producer_revocation_is_immediate() {
+        let mut t = table_with(1, 0, 100_000);
+        t.insert(2, 101, 1, 2, MB64, 42, 0, 100_000).unwrap();
+        t.insert(3, 100, 7, 8, MB64, 42, 0, 100_000).unwrap();
+        let revoked = t.revoke_all_for_producer(1, 50);
+        assert_eq!(revoked.len(), 2);
+        assert_eq!(t.producer_target_bytes(1), 0);
+        // Gone from the table (no ack will ever come), but accounted.
+        assert!(t.get(1).is_none() && t.get(2).is_none());
+        assert_eq!(t.take_ended().len(), 2);
+        assert_eq!(t.get(3).unwrap().state, LeaseState::Active);
+        assert!(t.take_ended_unacked(1).is_empty());
+    }
+
+    #[test]
+    fn dead_producer_gc_includes_expired_unacked_records() {
+        // A lease expires, the producer dies before acking the end: the
+        // death sweep must gc the expired record too, not leak it.
+        let mut t = table_with(1, 0, 1_000);
+        t.insert(2, 100, 1, 2, MB64, 42, 0, 100_000).unwrap();
+        t.sweep_expired(1_000); // lease 1 expires, awaits producer ack
+        assert_eq!(t.take_ended().len(), 1);
+        let revoked = t.revoke_all_for_producer(1, 2_000);
+        assert_eq!(revoked.len(), 1); // only the still-active lease 2
+        assert!(t.is_empty(), "expired-unacked record leaked");
+        assert!(t.take_ended_unacked(1).is_empty());
+    }
+}

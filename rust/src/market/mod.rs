@@ -1,0 +1,31 @@
+//! The marketplace control plane (paper §3/§5/§6 as a *running system*):
+//! the three roles of Memtrade as networked processes, plus the lease
+//! lifecycle state machine they and the simulator share.
+//!
+//! * [`BrokerServer`] — the broker daemon: the in-process
+//!   [`crate::broker::Broker`] (registry, placement, pricing,
+//!   availability prediction) behind the control wire protocol
+//!   ([`crate::net::control`]), with monotonic-clock lease expiry, dead-
+//!   producer sweeps, and persisted per-producer usage histories.
+//! * [`ProducerAgent`] — registers with the broker, decides offered
+//!   capacity with the real harvester control loop, serves data-plane
+//!   traffic via [`crate::net::tcp::ProducerStoreServer`], heartbeats,
+//!   and shrinks its store when leases end or memory is reclaimed.
+//! * [`RemotePool`] — the lease-aware consumer pool: requests slabs,
+//!   routes keys deterministically to live leases, renews before
+//!   expiry, and turns revocation and connection loss into cache
+//!   misses, never errors.
+//! * [`lease`] — the clock-agnostic lease state machine (grant → renew
+//!   → expire / revoke / release), unit-tested on a mock clock and
+//!   driven by both the daemon (wall clock) and [`crate::sim::cluster`]
+//!   (simulated time).
+
+pub mod broker_server;
+pub mod lease;
+pub mod producer_agent;
+pub mod remote_pool;
+
+pub use broker_server::{BrokerServer, BrokerServerConfig};
+pub use lease::{LeaseEnd, LeaseError, LeaseRecord, LeaseState, LeaseTable};
+pub use producer_agent::{AgentStats, ProducerAgent, ProducerAgentConfig};
+pub use remote_pool::{PoolStats, RemotePool, RemotePoolConfig};

@@ -1,0 +1,429 @@
+//! The producer agent: one process-side of the marketplace that owns a
+//! data-plane [`ProducerStoreServer`], registers with the broker, and
+//! heartbeats its harvester-decided availability.
+//!
+//! Per heartbeat the agent:
+//!  1. decides offered capacity — either a fixed pool, or by stepping
+//!     the real harvester control loop (Algorithm 1) against a modeled
+//!     guest workload on the wall clock;
+//!  2. if the guest took memory back below what is leased, *revokes* its
+//!     newest leases at the broker and shrinks the store immediately
+//!     (consumers see cache misses, never corruption);
+//!  3. sends `Heartbeat` and applies the ack: the broker's
+//!     `target_bytes` (total active leased bytes) is authoritative, so
+//!     the store is grown/shrunk to exactly that — lease expiry and
+//!     revocation therefore provably shrink the producer store.
+//!
+//! The store starts at zero budget: until the broker grants a lease on
+//! this producer, every PUT is rejected.
+
+use crate::core::config::HarvesterConfig;
+use crate::core::{SimTime, GIB};
+use crate::kv::ShardedKvStore;
+use crate::mem::SwapDevice;
+use crate::net::control::{CtrlClient, CtrlRequest, CtrlResponse, RefuseCode};
+use crate::net::tcp::ProducerStoreServer;
+use crate::producer::Harvester;
+use crate::workload::apps::{AppKind, AppModel, AppRunner};
+use std::collections::HashMap;
+use std::io;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct ProducerAgentConfig {
+    pub producer: u64,
+    /// Broker control endpoint, `host:port`.
+    pub broker: String,
+    /// Data-plane bind address (port 0 = ephemeral).
+    pub data_addr: String,
+    /// Endpoint advertised to the broker (consumers dial this). Needed
+    /// when binding a wildcard address — `0.0.0.0:p` is not dialable
+    /// from another host. None = the bound address.
+    pub advertise: Option<String>,
+    /// Guest VM size; with `harvest` off, the whole pool is offered.
+    pub capacity_bytes: u64,
+    /// Drive offered capacity with the real harvester control loop over
+    /// a modeled guest app instead of offering `capacity_bytes` flat.
+    pub harvest: bool,
+    pub heartbeat: Duration,
+    /// Store shards (0 = one per core).
+    pub shards: usize,
+    /// Data-plane rate limit, bytes/sec (None = unlimited).
+    pub rate_bps: Option<u64>,
+    pub seed: u64,
+}
+
+impl Default for ProducerAgentConfig {
+    fn default() -> Self {
+        ProducerAgentConfig {
+            producer: 1,
+            broker: "127.0.0.1:7070".to_string(),
+            data_addr: "127.0.0.1:0".to_string(),
+            advertise: None,
+            capacity_bytes: GIB,
+            harvest: false,
+            heartbeat: Duration::from_millis(500),
+            shards: 0,
+            rate_bps: None,
+            seed: 1,
+        }
+    }
+}
+
+/// Counters shared with the agent loop (all monotonic except the gauges).
+#[derive(Default)]
+pub struct AgentStats {
+    /// Gauge: bytes the broker says must be leased out right now.
+    pub target_bytes: AtomicU64,
+    /// Gauge: bytes the harvester currently offers to the market.
+    pub offered_bytes: AtomicU64,
+    pub heartbeats: AtomicU64,
+    pub leases_started: AtomicU64,
+    pub leases_ended: AtomicU64,
+    pub revokes_sent: AtomicU64,
+    pub control_errors: AtomicU64,
+}
+
+/// Harvester control loop driven by the wall clock: the same
+/// [`Harvester`] state machine the simulator runs, stepped against a
+/// modeled guest app each heartbeat.
+struct HarvestLoop {
+    app: AppRunner,
+    harvester: Harvester,
+    last_us: u64,
+}
+
+impl HarvestLoop {
+    fn new(capacity_bytes: u64, heartbeat: Duration, seed: u64) -> Self {
+        // Redis-shaped guest scaled to the configured VM size.
+        let mut model = AppModel::preset(AppKind::Redis);
+        model.vm_bytes = capacity_bytes;
+        model.footprint_bytes = (capacity_bytes as f64 * 0.55) as u64;
+        let page_bytes = (capacity_bytes / 256).clamp(1 << 20, 64 << 20);
+        let cfg = HarvesterConfig {
+            // Real time runs much faster than the paper's 5-minute
+            // cadence; scale the gates to the heartbeat so the loop
+            // makes progress in seconds, not hours.
+            cooling_period: SimTime::from_micros(2 * heartbeat.as_micros() as u64),
+            epoch: SimTime::from_micros(heartbeat.as_micros() as u64),
+            recovery_period: SimTime::from_micros(10 * heartbeat.as_micros() as u64),
+            ..Default::default()
+        };
+        let mut app = AppRunner::new(
+            model,
+            page_bytes,
+            SwapDevice::Ssd,
+            Some(cfg.cooling_period),
+            seed,
+        );
+        app.ops_cap_per_epoch = 200;
+        let harvester = Harvester::new(cfg, capacity_bytes);
+        HarvestLoop { app, harvester, last_us: 0 }
+    }
+
+    /// One wall-clock epoch; returns harvestable (offerable) bytes.
+    fn step(&mut self, now_us: u64) -> u64 {
+        let now = SimTime::from_micros(now_us);
+        let epoch = SimTime::from_micros(now_us.saturating_sub(self.last_us).max(1));
+        self.last_us = now_us;
+        let rec = self.app.run_epoch(now, epoch);
+        let promotions = self.app.memory.promotions();
+        self.harvester.record_sample(now, rec.mean(), promotions);
+        self.harvester.step_epoch(now, &mut self.app.memory);
+        self.app.memory.shape().harvestable
+    }
+}
+
+/// A running producer agent: data-plane server + broker control loop.
+pub struct ProducerAgent {
+    cfg: ProducerAgentConfig,
+    stop: Arc<AtomicBool>,
+    loop_handle: Option<JoinHandle<()>>,
+    server: Option<ProducerStoreServer>,
+    data_addr: std::net::SocketAddr,
+    stats: Arc<AgentStats>,
+}
+
+impl ProducerAgent {
+    /// Boot the data plane, register with the broker (synchronously, so
+    /// a dead broker fails fast), and start heartbeating.
+    pub fn start(cfg: ProducerAgentConfig) -> io::Result<Self> {
+        let shards = if cfg.shards == 0 {
+            crate::net::tcp::default_shards()
+        } else {
+            cfg.shards
+        };
+        let server = ProducerStoreServer::start_sharded(
+            &cfg.data_addr,
+            cfg.capacity_bytes as usize,
+            cfg.rate_bps,
+            cfg.seed,
+            shards,
+        )?;
+        // Nothing is leased yet: zero budget until the broker says so.
+        server.shrink_to(0);
+        let data_addr = server.addr();
+        let endpoint = cfg.advertise.clone().unwrap_or_else(|| data_addr.to_string());
+        if cfg.advertise.is_none() && data_addr.ip().is_unspecified() {
+            eprintln!(
+                "producer agent: bound {data_addr} but advertising a wildcard address — \
+                 remote consumers cannot dial it; pass an advertise endpoint"
+            );
+        }
+        let store = server.store().clone();
+
+        let mut harvest = cfg
+            .harvest
+            .then(|| HarvestLoop::new(cfg.capacity_bytes, cfg.heartbeat, cfg.seed));
+        let start = Instant::now();
+        let offered0 = match &mut harvest {
+            Some(h) => h.step(1),
+            None => cfg.capacity_bytes,
+        };
+
+        let mut ctrl = CtrlClient::connect(&cfg.broker)?;
+        let slab_bytes = match ctrl.call(&CtrlRequest::Register {
+            producer: cfg.producer,
+            capacity_gb: cfg.capacity_bytes as f32 / GIB as f32,
+            endpoint: endpoint.clone(),
+            free_bytes: offered0,
+        })? {
+            CtrlResponse::Registered { slab_bytes, .. } => slab_bytes,
+            other => {
+                return Err(io::Error::new(
+                    io::ErrorKind::ConnectionRefused,
+                    format!("broker refused registration: {other:?}"),
+                ))
+            }
+        };
+
+        let stats = Arc::new(AgentStats::default());
+        stats.offered_bytes.store(offered0, Ordering::Relaxed);
+        let stop = Arc::new(AtomicBool::new(false));
+        let loop_handle = {
+            let cfg = cfg.clone();
+            let stop = stop.clone();
+            let stats = stats.clone();
+            std::thread::spawn(move || {
+                agent_loop(AgentLoop {
+                    cfg,
+                    endpoint,
+                    conn: Some(ctrl),
+                    store,
+                    harvest,
+                    slab_bytes,
+                    start,
+                    stop,
+                    stats,
+                })
+            })
+        };
+
+        Ok(ProducerAgent {
+            cfg,
+            stop,
+            loop_handle: Some(loop_handle),
+            server: Some(server),
+            data_addr,
+            stats,
+        })
+    }
+
+    /// Data-plane endpoint consumers dial.
+    pub fn data_addr(&self) -> std::net::SocketAddr {
+        self.data_addr
+    }
+
+    /// The served store (for stats and budget assertions).
+    pub fn store(&self) -> Option<&Arc<ShardedKvStore>> {
+        self.server.as_ref().map(|s| s.store())
+    }
+
+    pub fn stats(&self) -> &AgentStats {
+        &self.stats
+    }
+
+    pub fn target_bytes(&self) -> u64 {
+        self.stats.target_bytes.load(Ordering::Relaxed)
+    }
+
+    pub fn offered_bytes(&self) -> u64 {
+        self.stats.offered_bytes.load(Ordering::Relaxed)
+    }
+
+    /// Simulated crash: kill the control loop and the data plane without
+    /// telling the broker. It finds out via missed heartbeats; consumers
+    /// via connection loss.
+    pub fn kill(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.loop_handle.take() {
+            let _ = h.join();
+        }
+        if let Some(server) = self.server.take() {
+            server.stop();
+        }
+    }
+
+    /// Graceful exit: deregister (the broker revokes our leases at
+    /// once), then shut everything down.
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.loop_handle.take() {
+            let _ = h.join();
+        }
+        if let Ok(mut ctrl) = CtrlClient::connect(&self.cfg.broker) {
+            let _ = ctrl.call(&CtrlRequest::Deregister { producer: self.cfg.producer });
+        }
+        if let Some(server) = self.server.take() {
+            server.stop();
+        }
+    }
+}
+
+impl Drop for ProducerAgent {
+    fn drop(&mut self) {
+        self.kill();
+    }
+}
+
+struct AgentLoop {
+    cfg: ProducerAgentConfig,
+    /// The *bound* data-plane endpoint (not the 0-port bind address).
+    endpoint: String,
+    conn: Option<CtrlClient>,
+    store: Arc<ShardedKvStore>,
+    harvest: Option<HarvestLoop>,
+    slab_bytes: u64,
+    start: Instant,
+    stop: Arc<AtomicBool>,
+    stats: Arc<AgentStats>,
+}
+
+fn agent_loop(mut a: AgentLoop) {
+    // lease id -> bytes, learned from heartbeat acks; insertion order
+    // doubles as grant order so reclaim revokes the newest first.
+    let mut active: HashMap<u64, u64> = HashMap::new();
+    let mut grant_order: Vec<u64> = Vec::new();
+    // After a re-registration the broker re-announces our *complete*
+    // active book on the next ack; rebuild from it wholesale so entries
+    // that ended while we were disconnected don't linger.
+    let mut rebuild_book = false;
+
+    while !a.stop.load(Ordering::Relaxed) {
+        std::thread::sleep(a.cfg.heartbeat);
+        if a.stop.load(Ordering::Relaxed) {
+            break;
+        }
+        let now_us = a.start.elapsed().as_micros() as u64;
+        let offered = match &mut a.harvest {
+            Some(h) => h.step(now_us),
+            None => a.cfg.capacity_bytes,
+        };
+        a.stats.offered_bytes.store(offered, Ordering::Relaxed);
+
+        // Re-establish the control connection if it dropped (broker
+        // restart or transient failure): reconnect and re-register.
+        // The broker keeps our active leases across a re-registration,
+        // so availability must still be reported net of them — a full-
+        // capacity report here would invite over-granting.
+        if a.conn.is_none() {
+            let Ok(mut c) = CtrlClient::connect(&a.cfg.broker) else {
+                a.stats.control_errors.fetch_add(1, Ordering::Relaxed);
+                continue;
+            };
+            let leased_now: u64 = active.values().sum();
+            let reg = CtrlRequest::Register {
+                producer: a.cfg.producer,
+                capacity_gb: a.cfg.capacity_bytes as f32 / GIB as f32,
+                endpoint: a.endpoint.clone(),
+                free_bytes: offered.saturating_sub(leased_now),
+            };
+            if !matches!(c.call(&reg), Ok(CtrlResponse::Registered { .. })) {
+                a.stats.control_errors.fetch_add(1, Ordering::Relaxed);
+                continue;
+            }
+            rebuild_book = true;
+            a.conn = Some(c);
+        }
+
+        // Harvester reclaim: the guest needs memory back. Give up the
+        // newest leases until we fit, shrinking the store right away —
+        // downstream this is cache misses, never errors (§4.2).
+        let mut leased: u64 = active.values().sum();
+        let mut lost_conn = false;
+        while leased > offered {
+            let Some(&victim) = grant_order.last() else { break };
+            let bytes = active.remove(&victim).unwrap_or(0);
+            grant_order.pop();
+            leased -= bytes;
+            a.stats.revokes_sent.fetch_add(1, Ordering::Relaxed);
+            let revoke = CtrlRequest::Revoke { producer: a.cfg.producer, lease: victim };
+            if a.conn.as_mut().unwrap().call(&revoke).is_err() {
+                a.stats.control_errors.fetch_add(1, Ordering::Relaxed);
+                lost_conn = true;
+                break;
+            }
+        }
+        if (a.store.max_bytes() as u64) > leased {
+            a.store.shrink_to(leased as usize);
+        }
+        if lost_conn {
+            a.conn = None;
+            continue;
+        }
+
+        let hb = CtrlRequest::Heartbeat {
+            producer: a.cfg.producer,
+            free_slabs: (offered.saturating_sub(leased) / a.slab_bytes) as u32,
+            used_gb: a.cfg.capacity_bytes.saturating_sub(offered) as f32 / GIB as f32,
+            cpu_headroom: 0.9,
+            bandwidth_headroom: 0.9,
+        };
+        match a.conn.as_mut().unwrap().call(&hb) {
+            Ok(CtrlResponse::HeartbeatAck { target_bytes, granted, ended }) => {
+                a.stats.heartbeats.fetch_add(1, Ordering::Relaxed);
+                if rebuild_book {
+                    // This ack re-announces every active lease.
+                    active.clear();
+                    grant_order.clear();
+                    rebuild_book = false;
+                }
+                for g in granted {
+                    if active.insert(g.lease, g.slabs as u64 * g.slab_bytes).is_none() {
+                        grant_order.push(g.lease);
+                        a.stats.leases_started.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+                for id in ended {
+                    if active.remove(&id).is_some() {
+                        grant_order.retain(|&l| l != id);
+                        a.stats.leases_ended.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+                // The broker's view is authoritative for the budget.
+                let cur = a.store.max_bytes() as u64;
+                if target_bytes < cur {
+                    a.store.shrink_to(target_bytes as usize);
+                } else if target_bytes > cur {
+                    a.store.grow_to(target_bytes as usize);
+                }
+                a.stats.target_bytes.store(target_bytes, Ordering::Relaxed);
+            }
+            Ok(CtrlResponse::Refused { code: RefuseCode::UnknownProducer, .. }) => {
+                // Broker restarted and forgot us: re-register next tick.
+                a.stats.control_errors.fetch_add(1, Ordering::Relaxed);
+                a.conn = None;
+            }
+            Ok(_) => {
+                a.stats.control_errors.fetch_add(1, Ordering::Relaxed);
+            }
+            Err(_) => {
+                a.stats.control_errors.fetch_add(1, Ordering::Relaxed);
+                a.conn = None;
+            }
+        }
+    }
+}

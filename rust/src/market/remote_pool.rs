@@ -1,0 +1,432 @@
+//! The lease-aware consumer pool: requests slabs from the broker, holds
+//! a slot table of (lease, producer endpoint, [`KvClient`]) entries, and
+//! serves [`crate::consumer::SecureKv`] as its [`KvTransport`].
+//!
+//! Routing: new PUTs are routed *deterministically* — FNV-1a over the
+//! consumer key, modulo the live slots — replacing `SecureKv`'s blind
+//! round-robin (the pool overrides [`KvTransport::route_put`]); GETs and
+//! DELETEs follow the slot index recorded in the key's metadata, so
+//! reads always go where the write went.
+//!
+//! Loss model: a revoked, expired, or unreachable lease turns its slot
+//! dead. Calls against a dead slot answer like a cache miss (`NotFound`
+//! / `Rejected`) — never an error — which makes `SecureKv` drop the
+//! key's metadata exactly as it does for a producer-side eviction. The
+//! pool then re-requests capacity from the broker; reused slot indices
+//! are safe because wire keys never repeat (see below).
+//!
+//! Wire keys are namespaced: `SecureKv`'s substitute keys are a counter
+//! starting at zero *per consumer per process lifetime*, and a producer
+//! agent serves all its leases from one flat store — so the pool
+//! prefixes every outgoing key with its consumer id plus a per-session
+//! nonce. Without the id, two consumers sharing a producer would
+//! silently overwrite each other's values; without the nonce, a
+//! restarted consumer whose old leases were still warm would collide
+//! with its previous life's keys and misread them as corruption.
+//!
+//! Renewal runs opportunistically inside `call` (and via an explicit
+//! [`RemotePool::maintain`]): each live lease is renewed once less than
+//! `renew_margin` of its TTL remains.
+
+use crate::consumer::client::KvTransport;
+use crate::net::control::{CtrlClient, CtrlRequest, CtrlResponse, GrantInfo};
+use crate::net::tcp::KvClient;
+use crate::net::wire::{Request, Response};
+use crate::util::hash::fnv1a_64;
+use std::io;
+use std::time::{Duration, Instant};
+
+/// Bound on reconnect/redial attempts made from the data path: a
+/// black-holed broker or producer costs this much once per backoff
+/// window, not the OS's multi-minute SYN retry schedule per call.
+const DIAL_TIMEOUT: Duration = Duration::from_secs(2);
+/// After a failed broker reconnect or call, don't retry (and thus
+/// stall a data call again) until this much time has passed. Must
+/// exceed the worst-case inline stall (dial + handshake read wait), or
+/// a wedged broker would keep the data path blocked back-to-back.
+const RECONNECT_BACKOFF: Duration = Duration::from_secs(10);
+
+#[derive(Clone, Debug)]
+pub struct RemotePoolConfig {
+    pub consumer: u64,
+    /// Broker control endpoint, `host:port`.
+    pub broker: String,
+    /// Slabs the pool tries to hold at all times.
+    pub target_slabs: u32,
+    /// Partial-allocation floor per request.
+    pub min_slabs: u32,
+    /// Lease duration requested from the broker.
+    pub lease_ttl: Duration,
+    /// Renew a lease once its remaining TTL drops below this.
+    pub renew_margin: Duration,
+    /// Opportunistic maintenance cadence inside `call`.
+    pub maintain_every: Duration,
+}
+
+impl Default for RemotePoolConfig {
+    fn default() -> Self {
+        RemotePoolConfig {
+            consumer: 1,
+            broker: "127.0.0.1:7070".to_string(),
+            target_slabs: 8,
+            min_slabs: 1,
+            lease_ttl: Duration::from_secs(600),
+            renew_margin: Duration::from_secs(120),
+            maintain_every: Duration::from_millis(50),
+        }
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct PoolStats {
+    /// Leases granted to this pool over its lifetime.
+    pub grants: u64,
+    /// Slots lost to revocation, expiry, or connection failure.
+    pub slots_lost: u64,
+    pub renewals: u64,
+    pub renewal_failures: u64,
+    /// RequestSlabs calls made to refill toward the target.
+    pub rerequests: u64,
+    /// Data-plane I/O errors absorbed as misses.
+    pub io_errors: u64,
+    /// Calls routed to a dead slot and answered as misses.
+    pub dead_calls: u64,
+    /// Broker control-plane failures (reconnected on next maintain).
+    pub control_errors: u64,
+}
+
+struct Slot {
+    lease: u64,
+    endpoint: String,
+    slabs: u32,
+    deadline: Instant,
+    client: KvClient,
+}
+
+/// The consumer's window onto the marketplace: leased slabs mounted as
+/// remote KV capacity behind the [`KvTransport`] trait.
+pub struct RemotePool {
+    cfg: RemotePoolConfig,
+    ctrl: Option<CtrlClient>,
+    /// Slot index (== `SecureKv` producer index) → slot; `None` is dead.
+    /// Indices are stable for the pool's lifetime; dead ones are reused.
+    slots: Vec<Option<Slot>>,
+    /// Cached indices of live slots, for O(1) deterministic routing.
+    live: Vec<u32>,
+    held_slabs: u32,
+    next_maintain: Instant,
+    /// Earliest time a broker reconnect may be attempted again.
+    reconnect_after: Instant,
+    /// Session nonce mixed into the wire-key namespace (see module doc).
+    session: u64,
+    pub stats: PoolStats,
+}
+
+impl RemotePool {
+    /// Connect to the broker and request the target capacity. Succeeds
+    /// even when no capacity is grantable yet (the pool keeps retrying);
+    /// check [`Self::held_slabs`] if initial capacity is required.
+    pub fn connect(cfg: RemotePoolConfig) -> io::Result<Self> {
+        let ctrl = CtrlClient::connect(&cfg.broker)?;
+        let session = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_micros() as u64)
+            .unwrap_or(0);
+        let mut pool = RemotePool {
+            cfg,
+            ctrl: Some(ctrl),
+            slots: Vec::new(),
+            live: Vec::new(),
+            held_slabs: 0,
+            next_maintain: Instant::now(),
+            reconnect_after: Instant::now(),
+            session,
+            stats: PoolStats::default(),
+        };
+        pool.refill();
+        Ok(pool)
+    }
+
+    pub fn held_slabs(&self) -> u32 {
+        self.held_slabs
+    }
+
+    pub fn live_slots(&self) -> usize {
+        self.live.len()
+    }
+
+    /// Total slot indices ever in use (live + dead).
+    pub fn slot_count(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Endpoints currently served, one entry per live slot (a producer
+    /// backing several leases appears several times).
+    pub fn live_endpoints(&self) -> Vec<String> {
+        self.live
+            .iter()
+            .filter_map(|&i| self.slots[i as usize].as_ref())
+            .map(|s| s.endpoint.clone())
+            .collect()
+    }
+
+    /// Distinct producer endpoints currently backing live slots.
+    pub fn distinct_endpoints(&self) -> Vec<String> {
+        let mut eps = self.live_endpoints();
+        eps.sort();
+        eps.dedup();
+        eps
+    }
+
+    fn rebuild_live(&mut self) {
+        self.live = self
+            .slots
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.is_some())
+            .map(|(i, _)| i as u32)
+            .collect();
+    }
+
+    fn kill_slot(&mut self, index: usize) {
+        if let Some(slot) = self.slots.get_mut(index).and_then(|s| s.take()) {
+            self.held_slabs -= slot.slabs;
+            self.stats.slots_lost += 1;
+            self.rebuild_live();
+        }
+    }
+
+    fn add_grant(&mut self, g: GrantInfo, now: Instant) {
+        let client = match KvClient::connect_timeout(&g.endpoint, DIAL_TIMEOUT) {
+            Ok(c) => c,
+            Err(_) => {
+                // Producer vanished between grant and dial; the lease
+                // will expire broker-side.
+                self.stats.slots_lost += 1;
+                return;
+            }
+        };
+        let slot = Slot {
+            lease: g.lease,
+            endpoint: g.endpoint,
+            slabs: g.slabs,
+            deadline: now + Duration::from_micros(g.ttl_us),
+            client,
+        };
+        self.held_slabs += slot.slabs;
+        self.stats.grants += 1;
+        match self.slots.iter().position(Option::is_none) {
+            Some(i) => self.slots[i] = Some(slot),
+            None => self.slots.push(Some(slot)),
+        }
+        self.rebuild_live();
+    }
+
+    fn reconnect_ctrl(&mut self) -> bool {
+        if self.ctrl.is_some() {
+            return true;
+        }
+        let now = Instant::now();
+        if now < self.reconnect_after {
+            return false;
+        }
+        match CtrlClient::connect_timeout(&self.cfg.broker, DIAL_TIMEOUT) {
+            Ok(c) => {
+                self.ctrl = Some(c);
+                true
+            }
+            Err(_) => {
+                self.stats.control_errors += 1;
+                self.reconnect_after = now + RECONNECT_BACKOFF;
+                false
+            }
+        }
+    }
+
+    /// A control call failed: the connection is desynced (or the broker
+    /// is wedged). Drop it and back off, so the data path — which runs
+    /// maintenance inline — pays at most one stall per backoff window.
+    fn ctrl_failed(&mut self) {
+        self.stats.control_errors += 1;
+        self.ctrl = None;
+        self.reconnect_after = Instant::now() + RECONNECT_BACKOFF;
+    }
+
+    /// Ask the broker for whatever is missing toward the target.
+    fn refill(&mut self) {
+        if self.held_slabs >= self.cfg.target_slabs || !self.reconnect_ctrl() {
+            return;
+        }
+        let want = self.cfg.target_slabs - self.held_slabs;
+        self.stats.rerequests += 1;
+        let req = CtrlRequest::RequestSlabs {
+            consumer: self.cfg.consumer,
+            slabs: want,
+            min_slabs: self.cfg.min_slabs.min(want),
+            ttl_us: self.cfg.lease_ttl.as_micros() as u64,
+        };
+        match self.ctrl.as_mut().unwrap().call(&req) {
+            Ok(CtrlResponse::Grants { leases }) => {
+                let now = Instant::now();
+                for g in leases {
+                    self.add_grant(g, now);
+                }
+            }
+            Ok(_) => {} // NoCapacity: retry on a later maintain
+            Err(_) => self.ctrl_failed(),
+        }
+    }
+
+    /// Lease upkeep: expire overdue slots locally, renew the ones coming
+    /// due, re-request lost capacity. Runs opportunistically from
+    /// `call`; long-idle consumers should call it on a timer.
+    pub fn maintain(&mut self) {
+        let now = Instant::now();
+        // Local expiry first: a slot we failed to renew in time is dead
+        // even if the broker is unreachable.
+        let overdue: Vec<usize> = self
+            .live
+            .iter()
+            .map(|&i| i as usize)
+            .filter(|&i| {
+                self.slots[i].as_ref().is_some_and(|s| now >= s.deadline)
+            })
+            .collect();
+        for i in overdue {
+            self.kill_slot(i);
+        }
+        // Renewals.
+        if self.reconnect_ctrl() {
+            let due: Vec<usize> = self
+                .live
+                .iter()
+                .map(|&i| i as usize)
+                .filter(|&i| {
+                    self.slots[i]
+                        .as_ref()
+                        .is_some_and(|s| s.deadline.saturating_duration_since(now)
+                            < self.cfg.renew_margin)
+                })
+                .collect();
+            for i in due {
+                let lease = self.slots[i].as_ref().unwrap().lease;
+                let renew = CtrlRequest::Renew { consumer: self.cfg.consumer, lease };
+                match self.ctrl.as_mut().unwrap().call(&renew) {
+                    Ok(CtrlResponse::Renewed { ttl_us, .. }) => {
+                        self.stats.renewals += 1;
+                        if let Some(slot) = self.slots[i].as_mut() {
+                            slot.deadline = now + Duration::from_micros(ttl_us);
+                        }
+                    }
+                    Ok(_) => {
+                        // Refused: expired, revoked, or forgotten — the
+                        // remote memory is gone; downstream it's misses.
+                        self.stats.renewal_failures += 1;
+                        self.kill_slot(i);
+                    }
+                    Err(_) => {
+                        self.ctrl_failed();
+                        break;
+                    }
+                }
+            }
+        }
+        self.refill();
+    }
+
+    /// Release every live lease (graceful teardown).
+    pub fn release_all(&mut self) {
+        let leases: Vec<u64> = self
+            .live
+            .iter()
+            .filter_map(|&i| self.slots[i as usize].as_ref())
+            .map(|s| s.lease)
+            .collect();
+        if !leases.is_empty() && self.reconnect_ctrl() {
+            let consumer = self.cfg.consumer;
+            let ctrl = self.ctrl.as_mut().unwrap();
+            for lease in leases {
+                let _ = ctrl.call(&CtrlRequest::Release { consumer, lease });
+            }
+        }
+        for i in 0..self.slots.len() {
+            if self.slots[i].is_some() {
+                self.kill_slot(i);
+                // A released slot is not "lost".
+                self.stats.slots_lost -= 1;
+            }
+        }
+    }
+
+    /// The response a missing producer yields: exactly what the store
+    /// answers for absent data, so `SecureKv` treats it as a miss.
+    fn miss_response(req: &Request) -> Response {
+        match req {
+            Request::Get { .. } => Response::NotFound,
+            Request::Put { .. } => Response::Rejected,
+            Request::Delete { .. } => Response::Deleted(false),
+            Request::Ping => Response::Pong,
+        }
+    }
+
+    /// Prefix the request key with our consumer id and session nonce:
+    /// producer stores are shared across this producer's leases *and
+    /// consumers*, and `SecureKv` counters collide both across
+    /// consumers and across one consumer's restarts.
+    fn namespace_key(&self, req: &mut Request) {
+        let (Request::Get { key } | Request::Put { key, .. } | Request::Delete { key }) = req
+        else {
+            return;
+        };
+        let mut namespaced = Vec::with_capacity(16 + key.len());
+        namespaced.extend_from_slice(&self.cfg.consumer.to_le_bytes());
+        namespaced.extend_from_slice(&self.session.to_le_bytes());
+        namespaced.extend_from_slice(key);
+        *key = namespaced;
+    }
+}
+
+impl Drop for RemotePool {
+    fn drop(&mut self) {
+        self.release_all();
+    }
+}
+
+impl KvTransport for RemotePool {
+    fn call(&mut self, producer_index: u32, mut req: Request) -> Response {
+        let now = Instant::now();
+        if now >= self.next_maintain {
+            self.maintain();
+            self.next_maintain = now + self.cfg.maintain_every;
+        }
+        self.namespace_key(&mut req);
+        let index = producer_index as usize;
+        let result = match self.slots.get_mut(index).and_then(|s| s.as_mut()) {
+            Some(slot) => slot.client.call(&req),
+            None => {
+                self.stats.dead_calls += 1;
+                return Self::miss_response(&req);
+            }
+        };
+        match result {
+            Ok(resp) => resp,
+            Err(_) => {
+                // Connection loss == the remote memory is gone: kill the
+                // slot, answer as a miss, refill in the background.
+                self.stats.io_errors += 1;
+                self.kill_slot(index);
+                self.maintain();
+                Self::miss_response(&req)
+            }
+        }
+    }
+
+    /// Deterministic key→slab routing over the live slots.
+    fn route_put(&mut self, key: &[u8], round_robin_hint: u32) -> u32 {
+        if self.live.is_empty() {
+            round_robin_hint
+        } else {
+            self.live[(fnv1a_64(key) % self.live.len() as u64) as usize]
+        }
+    }
+}

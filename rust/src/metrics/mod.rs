@@ -1,6 +1,6 @@
 //! Experiment-output helpers: aligned text/markdown tables and CSV
-//! emitters used by every figure harness, so EXPERIMENTS.md rows come
-//! straight from program output.
+//! emitters used by every figure harness, so the experiment record
+//! (DESIGN.md §Experiment index) comes straight from program output.
 
 /// A simple column-aligned table printer.
 pub struct Table {

@@ -1,0 +1,782 @@
+//! Control-plane wire protocol between market participants and the
+//! broker daemon, plus the magic-bytes/version handshake both planes
+//! (control and data) perform before exchanging frames.
+//!
+//! The control protocol reuses the data plane's length-prefixed frame
+//! codec ([`crate::net::wire`]) and scratch-buffer discipline: one tag
+//! byte, then tag-specific fields, byte strings as `u32 LE` length +
+//! bytes. Frames: `Register`, `Heartbeat` (harvester-reported available
+//! slabs), `RequestSlabs`, grants, `Renew`, `Revoke`, `Release`,
+//! `Deregister`, and their acks. Lease lifetimes travel as *remaining*
+//! TTLs (`ttl_us`), never absolute deadlines, so participants need no
+//! clock agreement.
+//!
+//! ## Handshake
+//!
+//! Every memtrade TCP connection opens with one hello frame each way:
+//! 4 magic bytes naming the plane (`MTCP` control / `MTDP` data) plus a
+//! `u16 LE` protocol version. The accepting side answers with its own
+//! hello even when the peer's is wrong, so a data-plane [`crate::net::
+//! tcp::KvClient`] dialing a broker port (or vice versa, or a stale
+//! peer from before the handshake existed) fails with a clear
+//! "wrong plane / wrong version" error instead of desyncing on garbage
+//! frames.
+
+use crate::net::wire::{
+    put_bytes, read_frame_into, read_frame_into_patient, take_bytes, take_u32, take_u64,
+    write_frame, CodecError,
+};
+use std::io::{self, BufReader, BufWriter, Read, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+/// Dialing side must hear a hello within this long — a silent or
+/// non-memtrade peer yields a timeout error, not an indefinite hang.
+pub const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// Control calls are tiny; a response this late means the broker is
+/// gone. Callers treat the timeout as connection loss and reconnect.
+pub const CONTROL_CALL_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// `TcpStream::connect` with a bounded SYN wait, trying each resolved
+/// address: a black-holed peer costs `timeout`, not the OS's ~2-minute
+/// SYN retry schedule. Essential on paths that retry inline (the
+/// consumer pool's maintenance runs on its data path).
+pub fn connect_with_timeout(addr: &str, timeout: Duration) -> io::Result<TcpStream> {
+    let mut last = None;
+    for sa in addr.to_socket_addrs()? {
+        match TcpStream::connect_timeout(&sa, timeout) {
+            Ok(s) => return Ok(s),
+            Err(e) => last = Some(e),
+        }
+    }
+    Err(last.unwrap_or_else(|| {
+        io::Error::new(io::ErrorKind::InvalidInput, "address resolved to nothing")
+    }))
+}
+
+/// Version of both wire protocols; bumped by the handshake-introducing
+/// revision (v1 was the pre-handshake data plane).
+pub const PROTOCOL_VERSION: u16 = 2;
+/// Hello magic of the broker control plane.
+pub const CONTROL_MAGIC: [u8; 4] = *b"MTCP";
+/// Hello magic of the producer-store data plane.
+pub const DATA_MAGIC: [u8; 4] = *b"MTDP";
+
+/// Human name of the plane a hello magic identifies.
+pub fn plane_name(magic: [u8; 4]) -> &'static str {
+    match magic {
+        CONTROL_MAGIC => "control",
+        DATA_MAGIC => "data",
+        _ => "unknown",
+    }
+}
+
+fn hello_payload(magic: [u8; 4]) -> [u8; 6] {
+    let v = PROTOCOL_VERSION.to_le_bytes();
+    [magic[0], magic[1], magic[2], magic[3], v[0], v[1]]
+}
+
+fn check_hello(payload: &[u8], expected: [u8; 4]) -> Result<(), String> {
+    if payload.len() != 6 {
+        return Err(format!(
+            "peer did not answer the memtrade handshake ({}-byte frame)",
+            payload.len()
+        ));
+    }
+    let magic: [u8; 4] = payload[..4].try_into().unwrap();
+    let version = u16::from_le_bytes(payload[4..6].try_into().unwrap());
+    if magic != expected {
+        return Err(format!(
+            "peer speaks the memtrade {} plane v{version}, this endpoint speaks the {} \
+             plane v{PROTOCOL_VERSION}",
+            plane_name(magic),
+            plane_name(expected)
+        ));
+    }
+    if version != PROTOCOL_VERSION {
+        return Err(format!(
+            "peer speaks {} plane v{version}, this endpoint requires v{PROTOCOL_VERSION}",
+            plane_name(magic)
+        ));
+    }
+    Ok(())
+}
+
+fn handshake_err(msg: String) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, format!("handshake failed: {msg}"))
+}
+
+/// Dialing side of the handshake: send our hello, require a matching one
+/// back. Errors name the plane/version mismatch explicitly.
+pub fn client_handshake<R: Read, W: Write>(
+    r: &mut R,
+    w: &mut W,
+    magic: [u8; 4],
+) -> io::Result<()> {
+    write_frame(w, &hello_payload(magic))?;
+    let mut buf = Vec::with_capacity(8);
+    read_frame_into(r, &mut buf)?;
+    check_hello(&buf, magic).map_err(handshake_err)
+}
+
+/// Accepting side: read the peer's hello (timeout-tolerant, polling
+/// `keep_going` like the serving loops do), then answer with ours — even
+/// on mismatch, so the peer can print a clear error before we refuse.
+/// Returns Ok(false) when told to stop before a hello arrived.
+pub fn server_handshake_patient<R: Read, W: Write>(
+    r: &mut R,
+    w: &mut W,
+    magic: [u8; 4],
+    keep_going: impl Fn() -> bool,
+) -> io::Result<bool> {
+    let mut buf = Vec::with_capacity(8);
+    if !read_frame_into_patient(r, &mut buf, keep_going)? {
+        return Ok(false);
+    }
+    match check_hello(&buf, magic) {
+        Ok(()) => {
+            write_frame(w, &hello_payload(magic))?;
+            Ok(true)
+        }
+        Err(msg) => {
+            let _ = write_frame(w, &hello_payload(magic));
+            Err(handshake_err(msg))
+        }
+    }
+}
+
+/// Why the broker refused a control request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RefuseCode {
+    UnknownLease,
+    LeaseExpired,
+    LeaseRevoked,
+    LeaseReleased,
+    UnknownProducer,
+    NoCapacity,
+    Malformed,
+}
+
+impl RefuseCode {
+    fn to_byte(self) -> u8 {
+        match self {
+            RefuseCode::UnknownLease => 1,
+            RefuseCode::LeaseExpired => 2,
+            RefuseCode::LeaseRevoked => 3,
+            RefuseCode::LeaseReleased => 4,
+            RefuseCode::UnknownProducer => 5,
+            RefuseCode::NoCapacity => 6,
+            RefuseCode::Malformed => 7,
+        }
+    }
+
+    fn from_byte(b: u8) -> Result<Self, CodecError> {
+        Ok(match b {
+            1 => RefuseCode::UnknownLease,
+            2 => RefuseCode::LeaseExpired,
+            3 => RefuseCode::LeaseRevoked,
+            4 => RefuseCode::LeaseReleased,
+            5 => RefuseCode::UnknownProducer,
+            6 => RefuseCode::NoCapacity,
+            7 => RefuseCode::Malformed,
+            t => return Err(CodecError::UnknownTag(t)),
+        })
+    }
+}
+
+/// One granted lease as told to the *consumer* (who must dial the
+/// producer's data plane itself — the broker only brokers, §3).
+#[derive(Clone, Debug, PartialEq)]
+pub struct GrantInfo {
+    pub lease: u64,
+    pub producer: u64,
+    /// Producer data-plane endpoint, `host:port`.
+    pub endpoint: String,
+    pub slabs: u32,
+    pub slab_bytes: u64,
+    /// Remaining lifetime at send time.
+    pub ttl_us: u64,
+    /// Agreed price, nano-dollars per slab-hour.
+    pub price_nd_per_slab_hour: i64,
+}
+
+/// One granted lease as told to the *producer* in a heartbeat ack.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ProducerGrant {
+    pub lease: u64,
+    pub consumer: u64,
+    pub slabs: u32,
+    pub slab_bytes: u64,
+    pub ttl_us: u64,
+}
+
+/// Participant -> broker control requests.
+#[derive(Clone, Debug, PartialEq)]
+pub enum CtrlRequest {
+    /// Producer agent announces itself and its data-plane endpoint.
+    /// Availability is in *bytes* here — the agent only learns the
+    /// market's slab granularity from the `Registered` answer.
+    Register { producer: u64, capacity_gb: f32, endpoint: String, free_bytes: u64 },
+    /// Periodic producer report: harvester-decided availability.
+    Heartbeat {
+        producer: u64,
+        free_slabs: u32,
+        used_gb: f32,
+        cpu_headroom: f32,
+        bandwidth_headroom: f32,
+    },
+    /// Consumer asks for capacity; the broker answers with grants.
+    RequestSlabs { consumer: u64, slabs: u32, min_slabs: u32, ttl_us: u64 },
+    /// Consumer extends a lease before it expires. The broker verifies
+    /// `consumer` against the lease record — lease ids are guessable.
+    Renew { consumer: u64, lease: u64 },
+    /// Consumer returns a lease early (graceful; identity verified).
+    Release { consumer: u64, lease: u64 },
+    /// Producer takes leased memory back early (harvester reclaim;
+    /// identity verified).
+    Revoke { producer: u64, lease: u64 },
+    /// Producer leaves the market; its leases are revoked.
+    Deregister { producer: u64 },
+}
+
+/// Broker -> participant control responses.
+#[derive(Clone, Debug, PartialEq)]
+pub enum CtrlResponse {
+    Registered {
+        producer: u64,
+        /// The broker's slab granularity, authoritative for this market.
+        slab_bytes: u64,
+    },
+    HeartbeatAck {
+        /// Authoritative store size: total bytes of this producer's
+        /// active leases. The agent sizes its store to exactly this.
+        target_bytes: u64,
+        /// Leases granted since the last ack.
+        granted: Vec<ProducerGrant>,
+        /// Lease ids ended (expired/revoked/released) since the last ack.
+        ended: Vec<u64>,
+    },
+    Grants { leases: Vec<GrantInfo> },
+    Renewed { lease: u64, ttl_us: u64 },
+    Released { lease: u64 },
+    Revoked { lease: u64 },
+    Deregistered { producer: u64 },
+    Refused { code: RefuseCode, detail: String },
+}
+
+const TAG_REGISTER: u8 = 64;
+const TAG_HEARTBEAT: u8 = 65;
+const TAG_REQUEST_SLABS: u8 = 66;
+const TAG_RENEW: u8 = 67;
+const TAG_RELEASE: u8 = 68;
+const TAG_REVOKE: u8 = 69;
+const TAG_DEREGISTER: u8 = 70;
+
+const TAG_REGISTERED: u8 = 80;
+const TAG_HEARTBEAT_ACK: u8 = 81;
+const TAG_GRANTS: u8 = 82;
+const TAG_RENEWED: u8 = 83;
+const TAG_RELEASED: u8 = 84;
+const TAG_REVOKED: u8 = 85;
+const TAG_DEREGISTERED: u8 = 86;
+const TAG_REFUSED: u8 = 87;
+
+fn put_f32(out: &mut Vec<u8>, v: f32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn take_f32(buf: &[u8], off: &mut usize) -> Result<f32, CodecError> {
+    take_u32(buf, off).map(f32::from_bits)
+}
+
+fn take_i64(buf: &[u8], off: &mut usize) -> Result<i64, CodecError> {
+    take_u64(buf, off).map(|v| v as i64)
+}
+
+fn take_u8(buf: &[u8], off: &mut usize) -> Result<u8, CodecError> {
+    if buf.len() <= *off {
+        return Err(CodecError::Truncated);
+    }
+    let v = buf[*off];
+    *off += 1;
+    Ok(v)
+}
+
+fn take_string(buf: &[u8], off: &mut usize) -> Result<String, CodecError> {
+    String::from_utf8(take_bytes(buf, off)?).map_err(|_| CodecError::BadUtf8)
+}
+
+fn finish<T>(value: T, buf: &[u8], off: usize) -> Result<T, CodecError> {
+    if off == buf.len() {
+        Ok(value)
+    } else {
+        Err(CodecError::TrailingBytes)
+    }
+}
+
+impl GrantInfo {
+    fn encode_into(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.lease.to_le_bytes());
+        out.extend_from_slice(&self.producer.to_le_bytes());
+        put_bytes(out, self.endpoint.as_bytes());
+        out.extend_from_slice(&self.slabs.to_le_bytes());
+        out.extend_from_slice(&self.slab_bytes.to_le_bytes());
+        out.extend_from_slice(&self.ttl_us.to_le_bytes());
+        out.extend_from_slice(&self.price_nd_per_slab_hour.to_le_bytes());
+    }
+
+    fn decode(buf: &[u8], off: &mut usize) -> Result<Self, CodecError> {
+        Ok(GrantInfo {
+            lease: take_u64(buf, off)?,
+            producer: take_u64(buf, off)?,
+            endpoint: take_string(buf, off)?,
+            slabs: take_u32(buf, off)?,
+            slab_bytes: take_u64(buf, off)?,
+            ttl_us: take_u64(buf, off)?,
+            price_nd_per_slab_hour: take_i64(buf, off)?,
+        })
+    }
+}
+
+impl ProducerGrant {
+    fn encode_into(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.lease.to_le_bytes());
+        out.extend_from_slice(&self.consumer.to_le_bytes());
+        out.extend_from_slice(&self.slabs.to_le_bytes());
+        out.extend_from_slice(&self.slab_bytes.to_le_bytes());
+        out.extend_from_slice(&self.ttl_us.to_le_bytes());
+    }
+
+    fn decode(buf: &[u8], off: &mut usize) -> Result<Self, CodecError> {
+        Ok(ProducerGrant {
+            lease: take_u64(buf, off)?,
+            consumer: take_u64(buf, off)?,
+            slabs: take_u32(buf, off)?,
+            slab_bytes: take_u64(buf, off)?,
+            ttl_us: take_u64(buf, off)?,
+        })
+    }
+}
+
+impl CtrlRequest {
+    /// Append the encoded payload to `out` (does not clear it).
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        match self {
+            CtrlRequest::Register { producer, capacity_gb, endpoint, free_bytes } => {
+                out.push(TAG_REGISTER);
+                out.extend_from_slice(&producer.to_le_bytes());
+                put_f32(out, *capacity_gb);
+                put_bytes(out, endpoint.as_bytes());
+                out.extend_from_slice(&free_bytes.to_le_bytes());
+            }
+            CtrlRequest::Heartbeat {
+                producer,
+                free_slabs,
+                used_gb,
+                cpu_headroom,
+                bandwidth_headroom,
+            } => {
+                out.push(TAG_HEARTBEAT);
+                out.extend_from_slice(&producer.to_le_bytes());
+                out.extend_from_slice(&free_slabs.to_le_bytes());
+                put_f32(out, *used_gb);
+                put_f32(out, *cpu_headroom);
+                put_f32(out, *bandwidth_headroom);
+            }
+            CtrlRequest::RequestSlabs { consumer, slabs, min_slabs, ttl_us } => {
+                out.push(TAG_REQUEST_SLABS);
+                out.extend_from_slice(&consumer.to_le_bytes());
+                out.extend_from_slice(&slabs.to_le_bytes());
+                out.extend_from_slice(&min_slabs.to_le_bytes());
+                out.extend_from_slice(&ttl_us.to_le_bytes());
+            }
+            CtrlRequest::Renew { consumer, lease } => {
+                out.push(TAG_RENEW);
+                out.extend_from_slice(&consumer.to_le_bytes());
+                out.extend_from_slice(&lease.to_le_bytes());
+            }
+            CtrlRequest::Release { consumer, lease } => {
+                out.push(TAG_RELEASE);
+                out.extend_from_slice(&consumer.to_le_bytes());
+                out.extend_from_slice(&lease.to_le_bytes());
+            }
+            CtrlRequest::Revoke { producer, lease } => {
+                out.push(TAG_REVOKE);
+                out.extend_from_slice(&producer.to_le_bytes());
+                out.extend_from_slice(&lease.to_le_bytes());
+            }
+            CtrlRequest::Deregister { producer } => {
+                out.push(TAG_DEREGISTER);
+                out.extend_from_slice(&producer.to_le_bytes());
+            }
+        }
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        self.encode_into(&mut out);
+        out
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<CtrlRequest, CodecError> {
+        if buf.is_empty() {
+            return Err(CodecError::Truncated);
+        }
+        let mut off = 1usize;
+        let o = &mut off;
+        let req = match buf[0] {
+            TAG_REGISTER => CtrlRequest::Register {
+                producer: take_u64(buf, o)?,
+                capacity_gb: take_f32(buf, o)?,
+                endpoint: take_string(buf, o)?,
+                free_bytes: take_u64(buf, o)?,
+            },
+            TAG_HEARTBEAT => CtrlRequest::Heartbeat {
+                producer: take_u64(buf, o)?,
+                free_slabs: take_u32(buf, o)?,
+                used_gb: take_f32(buf, o)?,
+                cpu_headroom: take_f32(buf, o)?,
+                bandwidth_headroom: take_f32(buf, o)?,
+            },
+            TAG_REQUEST_SLABS => CtrlRequest::RequestSlabs {
+                consumer: take_u64(buf, o)?,
+                slabs: take_u32(buf, o)?,
+                min_slabs: take_u32(buf, o)?,
+                ttl_us: take_u64(buf, o)?,
+            },
+            TAG_RENEW => CtrlRequest::Renew {
+                consumer: take_u64(buf, o)?,
+                lease: take_u64(buf, o)?,
+            },
+            TAG_RELEASE => CtrlRequest::Release {
+                consumer: take_u64(buf, o)?,
+                lease: take_u64(buf, o)?,
+            },
+            TAG_REVOKE => CtrlRequest::Revoke {
+                producer: take_u64(buf, o)?,
+                lease: take_u64(buf, o)?,
+            },
+            TAG_DEREGISTER => CtrlRequest::Deregister { producer: take_u64(buf, o)? },
+            t => return Err(CodecError::UnknownTag(t)),
+        };
+        finish(req, buf, off)
+    }
+}
+
+impl CtrlResponse {
+    /// Append the encoded payload to `out` (does not clear it).
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        match self {
+            CtrlResponse::Registered { producer, slab_bytes } => {
+                out.push(TAG_REGISTERED);
+                out.extend_from_slice(&producer.to_le_bytes());
+                out.extend_from_slice(&slab_bytes.to_le_bytes());
+            }
+            CtrlResponse::HeartbeatAck { target_bytes, granted, ended } => {
+                out.push(TAG_HEARTBEAT_ACK);
+                out.extend_from_slice(&target_bytes.to_le_bytes());
+                out.extend_from_slice(&(granted.len() as u32).to_le_bytes());
+                for g in granted {
+                    g.encode_into(out);
+                }
+                out.extend_from_slice(&(ended.len() as u32).to_le_bytes());
+                for id in ended {
+                    out.extend_from_slice(&id.to_le_bytes());
+                }
+            }
+            CtrlResponse::Grants { leases } => {
+                out.push(TAG_GRANTS);
+                out.extend_from_slice(&(leases.len() as u32).to_le_bytes());
+                for g in leases {
+                    g.encode_into(out);
+                }
+            }
+            CtrlResponse::Renewed { lease, ttl_us } => {
+                out.push(TAG_RENEWED);
+                out.extend_from_slice(&lease.to_le_bytes());
+                out.extend_from_slice(&ttl_us.to_le_bytes());
+            }
+            CtrlResponse::Released { lease } => {
+                out.push(TAG_RELEASED);
+                out.extend_from_slice(&lease.to_le_bytes());
+            }
+            CtrlResponse::Revoked { lease } => {
+                out.push(TAG_REVOKED);
+                out.extend_from_slice(&lease.to_le_bytes());
+            }
+            CtrlResponse::Deregistered { producer } => {
+                out.push(TAG_DEREGISTERED);
+                out.extend_from_slice(&producer.to_le_bytes());
+            }
+            CtrlResponse::Refused { code, detail } => {
+                out.push(TAG_REFUSED);
+                out.push(code.to_byte());
+                put_bytes(out, detail.as_bytes());
+            }
+        }
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        self.encode_into(&mut out);
+        out
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<CtrlResponse, CodecError> {
+        if buf.is_empty() {
+            return Err(CodecError::Truncated);
+        }
+        let mut off = 1usize;
+        let o = &mut off;
+        let resp = match buf[0] {
+            TAG_REGISTERED => CtrlResponse::Registered {
+                producer: take_u64(buf, o)?,
+                slab_bytes: take_u64(buf, o)?,
+            },
+            TAG_HEARTBEAT_ACK => {
+                let target_bytes = take_u64(buf, o)?;
+                // Pre-allocation bound: each element needs at least its
+                // fixed wire size, so a hostile count can't force a
+                // huge allocation out of a small frame.
+                let n = take_u32(buf, o)? as usize;
+                if n > buf.len() / 32 {
+                    return Err(CodecError::Truncated);
+                }
+                let mut granted = Vec::with_capacity(n);
+                for _ in 0..n {
+                    granted.push(ProducerGrant::decode(buf, o)?);
+                }
+                let m = take_u32(buf, o)? as usize;
+                if m > buf.len() / 8 {
+                    return Err(CodecError::Truncated);
+                }
+                let mut ended = Vec::with_capacity(m);
+                for _ in 0..m {
+                    ended.push(take_u64(buf, o)?);
+                }
+                CtrlResponse::HeartbeatAck { target_bytes, granted, ended }
+            }
+            TAG_GRANTS => {
+                let n = take_u32(buf, o)? as usize;
+                if n > buf.len() / 44 {
+                    return Err(CodecError::Truncated);
+                }
+                let mut leases = Vec::with_capacity(n);
+                for _ in 0..n {
+                    leases.push(GrantInfo::decode(buf, o)?);
+                }
+                CtrlResponse::Grants { leases }
+            }
+            TAG_RENEWED => CtrlResponse::Renewed {
+                lease: take_u64(buf, o)?,
+                ttl_us: take_u64(buf, o)?,
+            },
+            TAG_RELEASED => CtrlResponse::Released { lease: take_u64(buf, o)? },
+            TAG_REVOKED => CtrlResponse::Revoked { lease: take_u64(buf, o)? },
+            TAG_DEREGISTERED => CtrlResponse::Deregistered { producer: take_u64(buf, o)? },
+            TAG_REFUSED => CtrlResponse::Refused {
+                code: RefuseCode::from_byte(take_u8(buf, o)?)?,
+                detail: take_string(buf, o)?,
+            },
+            t => return Err(CodecError::UnknownTag(t)),
+        };
+        finish(resp, buf, off)
+    }
+}
+
+/// Blocking control-plane client: one handshaked TCP connection to the
+/// broker, with reusable frame buffers like [`crate::net::tcp::KvClient`].
+pub struct CtrlClient {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+    send_buf: Vec<u8>,
+    recv_buf: Vec<u8>,
+}
+
+impl CtrlClient {
+    pub fn connect<A: ToSocketAddrs>(addr: A) -> io::Result<Self> {
+        Self::from_stream(TcpStream::connect(addr)?)
+    }
+
+    /// [`Self::connect`] with a bounded connection attempt — for
+    /// reconnect paths that must not stall their caller.
+    pub fn connect_timeout(addr: &str, timeout: Duration) -> io::Result<Self> {
+        Self::from_stream(connect_with_timeout(addr, timeout)?)
+    }
+
+    fn from_stream(stream: TcpStream) -> io::Result<Self> {
+        // Bounded reads for the connection's whole life: a hello (or any
+        // control response) that never arrives is an error, not a hang —
+        // a blocked call here would wedge agent/pool maintenance loops.
+        stream.set_read_timeout(Some(HANDSHAKE_TIMEOUT))?;
+        let mut reader = BufReader::new(stream.try_clone()?);
+        let mut writer = BufWriter::new(stream);
+        client_handshake(&mut reader, &mut writer, CONTROL_MAGIC)?;
+        reader.get_ref().set_read_timeout(Some(CONTROL_CALL_TIMEOUT))?;
+        Ok(CtrlClient { reader, writer, send_buf: Vec::new(), recv_buf: Vec::new() })
+    }
+
+    /// One control request/response exchange. A read timeout surfaces as
+    /// an error; the connection is then desynced and must be dropped
+    /// (every in-tree caller reconnects on `Err`).
+    pub fn call(&mut self, req: &CtrlRequest) -> io::Result<CtrlResponse> {
+        self.send_buf.clear();
+        req.encode_into(&mut self.send_buf);
+        write_frame(&mut self.writer, &self.send_buf)?;
+        read_frame_into(&mut self.reader, &mut self.recv_buf)?;
+        CtrlResponse::decode(&self.recv_buf)
+            .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn grant(i: u64) -> GrantInfo {
+        GrantInfo {
+            lease: i,
+            producer: 10 + i,
+            endpoint: format!("127.0.0.1:{}", 7000 + i),
+            slabs: 4,
+            slab_bytes: 64 << 20,
+            ttl_us: 5_000_000,
+            price_nd_per_slab_hour: 42_000,
+        }
+    }
+
+    #[test]
+    fn request_round_trip() {
+        let cases = vec![
+            CtrlRequest::Register {
+                producer: 7,
+                capacity_gb: 31.5,
+                endpoint: "10.0.0.2:7077".into(),
+                free_bytes: 4 << 30,
+            },
+            CtrlRequest::Heartbeat {
+                producer: 7,
+                free_slabs: 48,
+                used_gb: 3.25,
+                cpu_headroom: 0.9,
+                bandwidth_headroom: 0.5,
+            },
+            CtrlRequest::RequestSlabs { consumer: 9, slabs: 16, min_slabs: 1, ttl_us: 1 },
+            CtrlRequest::Renew { consumer: 9, lease: 3 },
+            CtrlRequest::Release { consumer: 9, lease: 4 },
+            CtrlRequest::Revoke { producer: 7, lease: 5 },
+            CtrlRequest::Deregister { producer: 7 },
+        ];
+        for req in cases {
+            let enc = req.encode();
+            assert_eq!(CtrlRequest::decode(&enc).unwrap(), req, "{req:?}");
+        }
+    }
+
+    #[test]
+    fn response_round_trip() {
+        let cases = vec![
+            CtrlResponse::Registered { producer: 7, slab_bytes: 64 << 20 },
+            CtrlResponse::HeartbeatAck {
+                target_bytes: 1 << 30,
+                granted: vec![
+                    ProducerGrant {
+                        lease: 1,
+                        consumer: 9,
+                        slabs: 4,
+                        slab_bytes: 64 << 20,
+                        ttl_us: 1_000_000,
+                    },
+                ],
+                ended: vec![2, 3],
+            },
+            CtrlResponse::HeartbeatAck { target_bytes: 0, granted: vec![], ended: vec![] },
+            CtrlResponse::Grants { leases: vec![grant(1), grant(2)] },
+            CtrlResponse::Grants { leases: vec![] },
+            CtrlResponse::Renewed { lease: 3, ttl_us: 9 },
+            CtrlResponse::Released { lease: 4 },
+            CtrlResponse::Revoked { lease: 5 },
+            CtrlResponse::Deregistered { producer: 7 },
+            CtrlResponse::Refused { code: RefuseCode::LeaseExpired, detail: "late".into() },
+        ];
+        for resp in cases {
+            let enc = resp.encode();
+            assert_eq!(CtrlResponse::decode(&enc).unwrap(), resp, "{resp:?}");
+        }
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert_eq!(CtrlRequest::decode(&[]), Err(CodecError::Truncated));
+        assert_eq!(CtrlRequest::decode(&[1]), Err(CodecError::UnknownTag(1)));
+        let mut ok = CtrlRequest::Renew { consumer: 9, lease: 1 }.encode();
+        ok.push(0);
+        assert_eq!(CtrlRequest::decode(&ok), Err(CodecError::TrailingBytes));
+        assert_eq!(CtrlResponse::decode(&[TAG_REFUSED, 99]), Err(CodecError::UnknownTag(99)));
+    }
+
+    #[test]
+    fn fuzz_decode_never_panics() {
+        let mut rng = Rng::new(77);
+        for _ in 0..20_000 {
+            let len = rng.below(96) as usize;
+            let mut buf: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+            let _ = CtrlRequest::decode(&buf);
+            let _ = CtrlResponse::decode(&buf);
+            // Bias toward valid tags so field decoding is fuzzed too.
+            if !buf.is_empty() {
+                buf[0] = 64 + (rng.below(24) as u8);
+                let _ = CtrlRequest::decode(&buf);
+                let _ = CtrlResponse::decode(&buf);
+            }
+        }
+    }
+
+    #[test]
+    fn hello_mismatch_names_planes() {
+        let err = check_hello(&hello_payload(DATA_MAGIC), CONTROL_MAGIC).unwrap_err();
+        assert!(err.contains("data plane"), "{err}");
+        assert!(err.contains("control plane"), "{err}");
+        let err = check_hello(b"junk!", CONTROL_MAGIC).unwrap_err();
+        assert!(err.contains("handshake"), "{err}");
+        check_hello(&hello_payload(CONTROL_MAGIC), CONTROL_MAGIC).unwrap();
+    }
+
+    #[test]
+    fn handshake_over_pipes() {
+        // Client and server halves over in-memory buffers.
+        let mut c2s = Vec::new();
+        write_frame(&mut c2s, &hello_payload(DATA_MAGIC)).unwrap();
+        let mut s_out = Vec::new();
+        let ok = server_handshake_patient(
+            &mut std::io::Cursor::new(c2s),
+            &mut s_out,
+            DATA_MAGIC,
+            || true,
+        )
+        .unwrap();
+        assert!(ok);
+        // The server's answer satisfies the client side.
+        let mut c_out = Vec::new();
+        client_handshake(&mut std::io::Cursor::new(s_out), &mut c_out, DATA_MAGIC).unwrap();
+    }
+
+    #[test]
+    fn server_refuses_wrong_plane_but_still_answers() {
+        let mut c2s = Vec::new();
+        write_frame(&mut c2s, &hello_payload(CONTROL_MAGIC)).unwrap();
+        let mut s_out = Vec::new();
+        let err = server_handshake_patient(
+            &mut std::io::Cursor::new(c2s),
+            &mut s_out,
+            DATA_MAGIC,
+            || true,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("control plane"), "{err}");
+        // The refusing server still sent its own hello for diagnosis.
+        assert!(!s_out.is_empty());
+    }
+}

@@ -1,13 +1,17 @@
 //! Networking substrate: the producer-store wire protocol (from-scratch
-//! binary codec), a network *model* for the discrete-event simulator
-//! (VPC-peering latency + NIC bandwidth, paper §3/§7), and a real TCP
-//! transport (std::net, threaded) used by the runnable examples so the
-//! request path is exercised over actual sockets.
+//! binary codec), the marketplace *control-plane* protocol with its
+//! magic-bytes/version handshake, a network *model* for the
+//! discrete-event simulator (VPC-peering latency + NIC bandwidth, paper
+//! §3/§7), and a real TCP transport (std::net, threaded) used by the
+//! runnable examples so the request path is exercised over actual
+//! sockets.
 
+pub mod control;
 pub mod model;
 pub mod tcp;
 pub mod wire;
 
+pub use control::{CtrlClient, CtrlRequest, CtrlResponse, GrantInfo, RefuseCode};
 pub use model::NetworkModel;
 pub use tcp::{KvClient, ProducerStoreServer};
 pub use wire::{Request, Response};

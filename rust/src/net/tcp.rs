@@ -16,6 +16,7 @@
 //!   allocations server-side.
 
 use crate::kv::{KvStats, ShardedKvStore};
+use crate::net::control::{client_handshake, server_handshake_patient, DATA_MAGIC};
 use crate::net::wire::{
     encode_value_response, read_frame_into, read_frame_into_patient, write_frame, Request,
     RequestRef, Response,
@@ -93,10 +94,13 @@ impl ProducerStoreServer {
         let store2 = store.clone();
         let start_instant = Instant::now();
         let accept_handle = std::thread::spawn(move || {
-            let mut conn_handles = Vec::new();
+            let mut conn_handles: Vec<JoinHandle<()>> = Vec::new();
             while !stop2.load(Ordering::Relaxed) {
                 match listener.accept() {
                     Ok((stream, _)) => {
+                        // Long-lived servers see endless reconnects; reap
+                        // finished connection threads as we go.
+                        conn_handles.retain(|h| !h.is_finished());
                         stream.set_nodelay(true).ok();
                         let store = store2.clone();
                         let stop = stop2.clone();
@@ -167,6 +171,13 @@ fn serve_conn(
     stream.set_read_timeout(Some(std::time::Duration::from_millis(100)))?;
     let mut reader = BufReader::with_capacity(CONN_BUF_BYTES, stream.try_clone()?);
     let mut writer = BufWriter::with_capacity(CONN_BUF_BYTES, stream);
+    // Magic/version handshake before any data frame: a control-plane (or
+    // stale) peer gets a clear refusal instead of desynced garbage.
+    if !server_handshake_patient(&mut reader, &mut writer, DATA_MAGIC, || {
+        !stop.load(Ordering::Relaxed)
+    })? {
+        return Ok(());
+    }
     // Reused for every request on this connection: the steady state
     // allocates nothing.
     let mut frame: Vec<u8> = Vec::new();
@@ -245,14 +256,26 @@ pub struct KvClient {
 
 impl KvClient {
     pub fn connect<A: ToSocketAddrs>(addr: A) -> io::Result<Self> {
-        let stream = TcpStream::connect(addr)?;
+        Self::from_stream(TcpStream::connect(addr)?)
+    }
+
+    /// [`Self::connect`] with a bounded connection attempt — for
+    /// reconnect paths (e.g. the consumer pool) that must not stall.
+    pub fn connect_timeout(addr: &str, timeout: std::time::Duration) -> io::Result<Self> {
+        Self::from_stream(crate::net::control::connect_with_timeout(addr, timeout)?)
+    }
+
+    fn from_stream(stream: TcpStream) -> io::Result<Self> {
         stream.set_nodelay(true)?;
-        Ok(KvClient {
-            reader: BufReader::with_capacity(CONN_BUF_BYTES, stream.try_clone()?),
-            writer: BufWriter::with_capacity(CONN_BUF_BYTES, stream),
-            send_buf: Vec::new(),
-            recv_buf: Vec::new(),
-        })
+        // Bounded handshake: a silent or non-memtrade peer errors out
+        // instead of hanging connect forever. Steady-state data calls
+        // revert to blocking reads.
+        stream.set_read_timeout(Some(crate::net::control::HANDSHAKE_TIMEOUT))?;
+        let mut reader = BufReader::with_capacity(CONN_BUF_BYTES, stream.try_clone()?);
+        let mut writer = BufWriter::with_capacity(CONN_BUF_BYTES, stream);
+        client_handshake(&mut reader, &mut writer, DATA_MAGIC)?;
+        reader.get_ref().set_read_timeout(None)?;
+        Ok(KvClient { reader, writer, send_buf: Vec::new(), recv_buf: Vec::new() })
     }
 
     /// One request/response exchange from a borrowed request — the

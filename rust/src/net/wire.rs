@@ -70,7 +70,7 @@ const TAG_ERROR: u8 = 17;
 /// rejected rather than allocated.
 pub const MAX_FRAME: usize = 16 << 20;
 
-fn put_bytes(out: &mut Vec<u8>, b: &[u8]) {
+pub(crate) fn put_bytes(out: &mut Vec<u8>, b: &[u8]) {
     out.extend_from_slice(&(b.len() as u32).to_le_bytes());
     out.extend_from_slice(b);
 }
@@ -85,11 +85,11 @@ fn take_bytes_ref<'a>(buf: &'a [u8], off: &mut usize) -> Result<&'a [u8], CodecE
     Ok(out)
 }
 
-fn take_bytes(buf: &[u8], off: &mut usize) -> Result<Vec<u8>, CodecError> {
+pub(crate) fn take_bytes(buf: &[u8], off: &mut usize) -> Result<Vec<u8>, CodecError> {
     take_bytes_ref(buf, off).map(|b| b.to_vec())
 }
 
-fn take_u32(buf: &[u8], off: &mut usize) -> Result<u32, CodecError> {
+pub(crate) fn take_u32(buf: &[u8], off: &mut usize) -> Result<u32, CodecError> {
     if buf.len() - *off < 4 {
         return Err(CodecError::Truncated);
     }
@@ -98,7 +98,7 @@ fn take_u32(buf: &[u8], off: &mut usize) -> Result<u32, CodecError> {
     Ok(v)
 }
 
-fn take_u64(buf: &[u8], off: &mut usize) -> Result<u64, CodecError> {
+pub(crate) fn take_u64(buf: &[u8], off: &mut usize) -> Result<u64, CodecError> {
     if buf.len() - *off < 8 {
         return Err(CodecError::Truncated);
     }

@@ -20,6 +20,7 @@ use crate::broker::pricing::{PricingEngine, PricingStrategy};
 use crate::broker::Broker;
 use crate::core::config::MemtradeConfig;
 use crate::core::{ConsumerId, Lease, Money, ProducerId, SimTime, GIB};
+use crate::market::lease::{LeaseState, LeaseTable};
 use crate::mem::SwapDevice;
 use crate::net::model::{Locality, NetworkModel};
 use crate::net::wire::{Request, Response};
@@ -155,6 +156,9 @@ pub struct ClusterSim {
     pub consumers: Vec<SimConsumer>,
     pub net: NetworkModel,
     pub now: SimTime,
+    /// Lease lifecycle book — the same state machine the networked
+    /// broker daemon runs, driven here on simulated time.
+    pub leases: LeaseTable,
     spot: SpotPriceSeries,
     epoch_count: u64,
 }
@@ -244,9 +248,24 @@ impl ClusterSim {
             consumers,
             net: NetworkModel::default(),
             now: SimTime::ZERO,
+            leases: LeaseTable::default(),
             spot: SpotPriceSeries::r3_large(4096, 17),
             epoch_count: 0,
         }
+    }
+
+    /// Track a consumer-held lease in the lifecycle book.
+    fn track_lease(leases: &mut LeaseTable, lease: &Lease) {
+        let _ = leases.insert(
+            lease.id.0,
+            lease.consumer.0,
+            lease.producer.0,
+            lease.slabs,
+            lease.slab_bytes,
+            lease.price_per_slab_hour.0,
+            lease.start.as_micros(),
+            lease.duration.as_micros(),
+        );
     }
 
     /// Warm the market: producers report history so the predictor has
@@ -302,6 +321,7 @@ impl ClusterSim {
                     .find(|p| p.id == pid)
                     .expect("lease to unknown producer");
                 assert!(p.manager.grant_lease(lease.clone(), 1_250_000_000 / 8));
+                Self::track_lease(&mut self.leases, &lease);
                 self.consumers[ci].leases.push(lease);
             }
             let n = self.consumers[ci].leases.len() as u32;
@@ -490,21 +510,38 @@ impl ClusterSim {
         // Lease expiry + renewal (paper §4.2: at expiry the manager asks
         // the broker whether the consumer extends at the current market
         // price; our consumers renew while they still hold remote keys).
+        // Expiry runs through the shared lease state machine; a renewal
+        // is a fresh grant at the current price, as in the daemon.
         let price = self.broker.current_price();
-        for ci in 0..self.consumers.len() {
-            for li in 0..self.consumers[ci].leases.len() {
-                let lease = self.consumers[ci].leases[li].clone();
-                if self.now >= lease.end() {
-                    let renewed = Lease {
-                        start: self.now,
-                        price_per_slab_hour: price,
-                        ..lease.clone()
-                    };
-                    self.consumers[ci].spend += renewed.total_cost();
-                    self.consumers[ci].leases[li] = renewed;
-                    self.broker.lease_ended(&lease, false);
-                }
+        self.leases.sweep_expired(self.now.as_micros());
+        for end in self.leases.take_ended() {
+            if end.cause != LeaseState::Expired {
+                continue;
             }
+            let Some(ci) = self
+                .consumers
+                .iter()
+                .position(|c| c.id.0 == end.record.consumer)
+            else {
+                continue;
+            };
+            let Some(li) = self.consumers[ci]
+                .leases
+                .iter()
+                .position(|l| l.id.0 == end.record.id)
+            else {
+                continue;
+            };
+            let lease = self.consumers[ci].leases[li].clone();
+            let renewed = Lease {
+                start: self.now,
+                price_per_slab_hour: price,
+                ..lease.clone()
+            };
+            self.consumers[ci].spend += renewed.total_cost();
+            Self::track_lease(&mut self.leases, &renewed);
+            self.consumers[ci].leases[li] = renewed;
+            self.broker.lease_ended(&lease, false);
         }
 
         // Market epoch every 5 minutes of sim time.
@@ -533,6 +570,7 @@ impl ClusterSim {
                         if let Some(c) =
                             self.consumers.iter_mut().find(|c| c.id == lease.consumer)
                         {
+                            Self::track_lease(&mut self.leases, &lease);
                             c.leases.push(lease);
                             let n = c.leases.len() as u32;
                             c.secure.set_n_producers(n);

@@ -1,0 +1,291 @@
+//! End-to-end marketplace tests over real TCP: a broker daemon, two
+//! producer agents, and a lease-aware consumer pool. Covers the full
+//! grant → put → get → revoke → recover path, producer failure mid-run
+//! (cache misses, never errors; no lost acknowledged writes on the
+//! survivor), lease expiry provably shrinking the producer store, and
+//! the cross-plane handshake refusals.
+
+use memtrade::consumer::client::SecureKv;
+use memtrade::core::config::BrokerConfig;
+use memtrade::core::SimTime;
+use memtrade::market::{
+    BrokerServer, BrokerServerConfig, ProducerAgent, ProducerAgentConfig, RemotePool,
+    RemotePoolConfig,
+};
+use memtrade::net::control::{CtrlClient, CtrlRequest, CtrlResponse};
+use memtrade::net::tcp::{KvClient, ProducerStoreServer};
+use std::time::{Duration, Instant};
+
+const SLAB: u64 = 1 << 20; // 1 MB slabs: cheap grants, fast tests
+
+fn broker_cfg(min_lease_ms: u64) -> BrokerConfig {
+    BrokerConfig {
+        slab_bytes: SLAB,
+        min_lease: SimTime::from_millis(min_lease_ms),
+        ..Default::default()
+    }
+}
+
+fn server_cfg() -> BrokerServerConfig {
+    BrokerServerConfig {
+        tick: Duration::from_millis(20),
+        producer_timeout: Duration::from_millis(400),
+        // Stay on optimistic (reported-free) safety in tests: histories
+        // are seconds old, far too short for the AR fit.
+        forecast_min_samples: usize::MAX,
+        ..Default::default()
+    }
+}
+
+fn start_agent(broker: &BrokerServer, id: u64, capacity: u64) -> ProducerAgent {
+    ProducerAgent::start(ProducerAgentConfig {
+        producer: id,
+        broker: broker.addr().to_string(),
+        data_addr: "127.0.0.1:0".to_string(),
+        advertise: None,
+        capacity_bytes: capacity,
+        harvest: false,
+        heartbeat: Duration::from_millis(50),
+        shards: 2,
+        rate_bps: None,
+        seed: id,
+    })
+    .expect("agent start")
+}
+
+/// Spin until `cond` holds or `timeout` passes; true if it held.
+fn wait_for(timeout: Duration, mut cond: impl FnMut() -> bool) -> bool {
+    let deadline = Instant::now() + timeout;
+    while Instant::now() < deadline {
+        if cond() {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    cond()
+}
+
+#[test]
+fn marketplace_survives_producer_failure() {
+    let broker = BrokerServer::start("127.0.0.1:0", broker_cfg(800), server_cfg()).unwrap();
+    let mut agents =
+        vec![start_agent(&broker, 1, 16 * SLAB), start_agent(&broker, 2, 16 * SLAB)];
+    assert_eq!(broker.producer_count(), 2);
+
+    // Lease more than one producer can hold, so slots span both.
+    let mut pool = RemotePool::connect(RemotePoolConfig {
+        consumer: 9,
+        broker: broker.addr().to_string(),
+        target_slabs: 24,
+        min_slabs: 1,
+        lease_ttl: Duration::from_millis(900),
+        renew_margin: Duration::from_millis(400),
+        maintain_every: Duration::from_millis(20),
+    })
+    .unwrap();
+    assert!(
+        wait_for(Duration::from_secs(5), || {
+            pool.maintain();
+            pool.held_slabs() >= 20 && pool.distinct_endpoints().len() >= 2
+        }),
+        "pool never reached target capacity: {} slabs, endpoints {:?}",
+        pool.held_slabs(),
+        pool.live_endpoints()
+    );
+    let endpoints = pool.distinct_endpoints();
+    assert!(
+        endpoints.contains(&agents[0].data_addr().to_string())
+            && endpoints.contains(&agents[1].data_addr().to_string()),
+        "slots must span both producers: {endpoints:?}"
+    );
+    // Agents must have grown their stores to the broker's target.
+    assert!(wait_for(Duration::from_secs(3), || {
+        agents.iter().all(|a| {
+            let max = a.store().map(|s| s.max_bytes()).unwrap_or(0) as u64;
+            max == a.target_bytes() && max > 0
+        })
+    }));
+
+    // Sustained traffic: store a working set, then read it back.
+    let mut secure = SecureKv::new(Some([7u8; 16]), true, 1, 3);
+    let n_keys = 1200u32;
+    let value = vec![0xAB_u8; 256];
+    let mut stored = Vec::new();
+    for i in 0..n_keys {
+        if secure.put(&mut pool, format!("key{i}").as_bytes(), &value) {
+            stored.push(i);
+        }
+    }
+    assert!(
+        stored.len() as f64 >= n_keys as f64 * 0.9,
+        "only {}/{n_keys} puts acknowledged",
+        stored.len()
+    );
+    let mut hits = 0;
+    for &i in &stored {
+        if secure.get(&mut pool, format!("key{i}").as_bytes()).is_some() {
+            hits += 1;
+        }
+    }
+    assert!(
+        hits as f64 >= stored.len() as f64 * 0.95,
+        "pre-failure hits {hits}/{}",
+        stored.len()
+    );
+
+    // Kill one producer mid-run. Its memory is gone; the marketplace
+    // must degrade to cache misses and re-provision — never error.
+    let dead_addr = agents[0].data_addr().to_string();
+    agents[0].kill();
+    let mut sweep_hits: Vec<bool> = Vec::new();
+    for &i in &stored {
+        sweep_hits.push(secure.get(&mut pool, format!("key{i}").as_bytes()).is_some());
+    }
+    let first_hits = sweep_hits.iter().filter(|&&h| h).count();
+    assert!(first_hits > 0, "survivor data lost");
+    assert!(first_hits < stored.len(), "dead producer's data cannot all survive");
+    assert_eq!(secure.stats.integrity_failures, 0);
+
+    // No lost acknowledged writes on the surviving producer: everything
+    // that hit right after the failure keeps hitting.
+    for (pos, &i) in stored.iter().enumerate() {
+        let hit = secure.get(&mut pool, format!("key{i}").as_bytes()).is_some();
+        if sweep_hits[pos] {
+            assert!(hit, "acknowledged write key{i} lost on surviving producer");
+        }
+    }
+
+    // Automatic re-provisioning: the broker sweeps the dead producer and
+    // the pool refills from the survivor (16 slabs of capacity).
+    assert!(
+        wait_for(Duration::from_secs(5), || {
+            pool.maintain();
+            pool.held_slabs() >= 12
+                && !pool.live_endpoints().contains(&dead_addr)
+        }),
+        "pool did not re-provision: {} slabs, endpoints {:?}",
+        pool.held_slabs(),
+        pool.live_endpoints()
+    );
+    assert!(pool.stats.slots_lost > 0);
+    assert!(pool.stats.rerequests > 0);
+
+    // Lost keys refill as cache writes and then hit again.
+    let mut refilled = 0;
+    for (pos, &i) in stored.iter().enumerate() {
+        if !sweep_hits[pos]
+            && secure.put(&mut pool, format!("key{i}").as_bytes(), &value)
+        {
+            refilled += 1;
+        }
+    }
+    assert!(refilled > 0);
+    let mut final_hits = 0;
+    for &i in &stored {
+        if secure.get(&mut pool, format!("key{i}").as_bytes()).is_some() {
+            final_hits += 1;
+        }
+    }
+    assert!(
+        final_hits > first_hits,
+        "recovery did not restore hit ratio: {final_hits} vs {first_hits}"
+    );
+    assert_eq!(secure.stats.integrity_failures, 0);
+
+    drop(pool);
+    agents.remove(1).stop();
+    broker.stop();
+}
+
+#[test]
+fn lease_renewal_sustains_and_expiry_shrinks_store() {
+    let broker = BrokerServer::start("127.0.0.1:0", broker_cfg(300), server_cfg()).unwrap();
+    let agent = start_agent(&broker, 1, 16 * SLAB);
+
+    // Lease 4 slabs directly (no pool, so nothing renews for us).
+    let mut ctrl = CtrlClient::connect(broker.addr()).unwrap();
+    let lease = {
+        let mut granted = None;
+        assert!(wait_for(Duration::from_secs(3), || {
+            match ctrl
+                .call(&CtrlRequest::RequestSlabs {
+                    consumer: 9,
+                    slabs: 4,
+                    min_slabs: 4,
+                    ttl_us: 500_000,
+                })
+                .unwrap()
+            {
+                CtrlResponse::Grants { leases } => {
+                    granted = Some(leases[0].clone());
+                    true
+                }
+                _ => false,
+            }
+        }));
+        granted.unwrap()
+    };
+    assert_eq!(lease.slab_bytes, SLAB);
+
+    // The agent's next heartbeat grows the store to the leased bytes.
+    assert!(
+        wait_for(Duration::from_secs(3), || {
+            agent.store().map(|s| s.max_bytes()).unwrap_or(0) as u64 == 4 * SLAB
+        }),
+        "store never grew to the lease: {} bytes",
+        agent.store().map(|s| s.max_bytes()).unwrap_or(0)
+    );
+    // Leased memory accepts writes.
+    let mut kv = KvClient::connect(agent.data_addr()).unwrap();
+    assert!(kv.put(b"k", &[1, 2, 3]).unwrap());
+
+    // Renewals keep it alive well past the original 500 ms expiry.
+    for _ in 0..6 {
+        std::thread::sleep(Duration::from_millis(100));
+        let resp = ctrl
+            .call(&CtrlRequest::Renew { consumer: 9, lease: lease.lease })
+            .unwrap();
+        assert!(matches!(resp, CtrlResponse::Renewed { .. }), "{resp:?}");
+    }
+    assert_eq!(agent.store().map(|s| s.max_bytes()).unwrap_or(0) as u64, 4 * SLAB);
+
+    // Stop renewing: expiry must provably shrink the producer store.
+    assert!(
+        wait_for(Duration::from_secs(3), || {
+            agent.store().map(|s| s.max_bytes()).unwrap_or(1) == 0
+        }),
+        "lease expiry did not shrink the store"
+    );
+    // And the data went with it: a fresh GET misses, a PUT is rejected.
+    assert_eq!(kv.get(b"k").unwrap(), None);
+    assert!(!kv.put(b"again", &[4]).unwrap());
+    // Renew-after-expiry is a clean refusal.
+    let resp = ctrl
+        .call(&CtrlRequest::Renew { consumer: 9, lease: lease.lease })
+        .unwrap();
+    assert!(matches!(resp, CtrlResponse::Refused { .. }), "{resp:?}");
+
+    agent.stop();
+    broker.stop();
+}
+
+#[test]
+fn cross_plane_connections_fail_with_clear_errors() {
+    let broker = BrokerServer::start("127.0.0.1:0", broker_cfg(300), server_cfg()).unwrap();
+    // Data client dials the broker's control port.
+    let err = KvClient::connect(broker.addr()).unwrap_err();
+    assert!(
+        err.to_string().contains("control plane"),
+        "unhelpful cross-plane error: {err}"
+    );
+
+    let store = ProducerStoreServer::start("127.0.0.1:0", 1 << 20, None, 1).unwrap();
+    // Control client dials a producer-store data port.
+    let err = CtrlClient::connect(store.addr()).unwrap_err();
+    assert!(
+        err.to_string().contains("data plane"),
+        "unhelpful cross-plane error: {err}"
+    );
+    store.stop();
+    broker.stop();
+}
