@@ -48,6 +48,7 @@ fn main() {
             shards: 2,
             rate_bps: None,
             seed: id,
+            ..Default::default()
         })
         .unwrap()
     };
@@ -96,7 +97,7 @@ fn main() {
     );
 
     println!("\n=== 4. secure traffic over leased memory ===");
-    let mut secure = SecureKv::new(Some([7u8; 16]), true, 1, 3);
+    let mut secure = SecureKv::new(Some([7u8; 16]), true, 1);
     let value = vec![0xAB_u8; 512];
     let n = 2_000u32;
     let t0 = Instant::now();

@@ -116,7 +116,7 @@ fn main() {
     let mut transport = |_p: u32, req: Request| -> Response {
         tcp.call(&req).unwrap_or(Response::Error("io".into()))
     };
-    let mut secure = SecureKv::new(Some([42u8; 16]), true, 1, 9);
+    let mut secure = SecureKv::new(Some([42u8; 16]), true, 1);
 
     let workload = YcsbWorkload::paper_default(20_000, 1024);
     let mut rng = Rng::new(11);

@@ -58,7 +58,7 @@ fn main() {
         corrupt_values: false,
         replay_other: false,
     };
-    let mut consumer = SecureKv::new(Some([0x42; 16]), true, 1, 7);
+    let mut consumer = SecureKv::new(Some([0x42; 16]), true, 1);
 
     // 1. Confidentiality: the producer never sees keys or plaintext.
     println!("1. PUT 'ssn' -> '123-45-6789' through the envelope");
@@ -117,7 +117,7 @@ fn main() {
         consumer.len(),
         consumer.metadata_bytes()
     );
-    let mut int_only = SecureKv::new(None, true, 1, 9);
+    let mut int_only = SecureKv::new(None, true, 1);
     {
         let mut t = |_p: u32, req: Request| producer.serve(req);
         int_only.put(&mut t, b"public-data", b"not sensitive");

@@ -36,12 +36,12 @@ fn main() {
         ("integrity_only", None, true),
         ("encrypt+integrity", Some([3u8; 16]), true),
     ] {
-        let mut env = Envelope::new(key, integrity, 11);
+        let mut env = Envelope::with_iv_seed(key, integrity, 11);
         let value = vec![0xA5u8; 1024];
         bench(&format!("envelope_seal/1KB/{mode}"), || {
             std::hint::black_box(env.seal(&value, 0));
         });
-        let mut env2 = Envelope::new(key, integrity, 11);
+        let mut env2 = Envelope::with_iv_seed(key, integrity, 11);
         let sealed = env2.seal(&value, 0);
         bench(&format!("envelope_open/1KB/{mode}"), || {
             std::hint::black_box(env2.open(&sealed.value_p, &sealed.meta).unwrap());

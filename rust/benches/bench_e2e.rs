@@ -9,6 +9,7 @@
 use memtrade::consumer::client::SecureKv;
 use memtrade::core::config::BrokerConfig;
 use memtrade::core::{ConsumerId, Lease, LeaseId, Money, ProducerId, SimTime, DEFAULT_SLAB_BYTES};
+use memtrade::market::chaos::{run_chaos, ChaosConfig, ChaosMix};
 use memtrade::market::{
     BrokerServer, BrokerServerConfig, ProducerAgent, ProducerAgentConfig, RemotePool,
     RemotePoolConfig,
@@ -52,6 +53,7 @@ fn marketplace_bench() -> String {
             shards: 4,
             rate_bps: None,
             seed: id,
+            ..Default::default()
         })
         .unwrap()
     };
@@ -64,6 +66,7 @@ fn marketplace_bench() -> String {
         lease_ttl: Duration::from_secs(30),
         renew_margin: Duration::from_secs(10),
         maintain_every: Duration::from_millis(25),
+        ..Default::default()
     })
     .unwrap();
 
@@ -85,7 +88,7 @@ fn marketplace_bench() -> String {
     }
     let grant_ms = t_grant.elapsed().as_secs_f64() * 1e3;
 
-    let mut secure = SecureKv::new(Some([5u8; 16]), true, 1, 7);
+    let mut secure = SecureKv::with_iv_seed(Some([5u8; 16]), true, 1, 7);
     let value = vec![0xAB_u8; 1024];
     const KEYS: u32 = 4_000;
     for i in 0..KEYS {
@@ -166,6 +169,49 @@ fn marketplace_bench() -> String {
     json
 }
 
+/// The chaos plane under a standard fault mix: ops/sec degradation
+/// versus a fault-free run of the same scenario shape, plus recovery
+/// time back to target capacity after the faults disarm. Fixed seed so
+/// the trajectory is comparable across PRs.
+fn chaos_bench() -> String {
+    let base = ChaosConfig { seed: 42, mix: ChaosMix::clean(), ..Default::default() };
+    let clean = run_chaos(&base);
+    let faulty = run_chaos(&ChaosConfig { mix: ChaosMix::standard(), ..base });
+    for o in [&clean, &faulty] {
+        assert!(
+            o.invariant_violations().is_empty(),
+            "chaos invariants violated in bench: {}",
+            o.report()
+        );
+    }
+    let degradation_pct = if clean.ops_per_sec > 0.0 {
+        100.0 * (1.0 - faulty.ops_per_sec / clean.ops_per_sec)
+    } else {
+        f64::NAN
+    };
+    println!("{:<48} {:>14.0} ops/s", "chaos/clean-baseline", clean.ops_per_sec);
+    println!(
+        "{:<48} {:>14.0} ops/s ({:.1}% degradation)",
+        "chaos/standard-mix", faulty.ops_per_sec, degradation_pct
+    );
+    println!(
+        "{:<48} {:>12.1} ms",
+        "chaos recovery after faults disarm", faulty.recovery_ms
+    );
+    format!(
+        "  \"chaos\": {{\n    \"clean_ops_per_sec\": {:.0},\n    \
+         \"faulty_ops_per_sec\": {:.0},\n    \"degradation_pct\": {:.1},\n    \
+         \"recovery_ms\": {:.1},\n    \"integrity_caught\": {},\n    \
+         \"tampered_served\": {}\n  }}",
+        clean.ops_per_sec,
+        faulty.ops_per_sec,
+        degradation_pct,
+        faulty.recovery_ms,
+        faulty.integrity_failures,
+        faulty.tampered,
+    )
+}
+
 /// Aggregate ops/sec for `clients` concurrent TCP connections doing a
 /// 90/10 GET/PUT mix against a producer store with `n_shards` shards.
 fn tcp_hammer_ops_per_sec(n_shards: usize, clients: usize, run_for: Duration) -> f64 {
@@ -234,7 +280,7 @@ fn main() {
         },
         1_250_000_000,
     ));
-    let mut secure = SecureKv::new(Some([5u8; 16]), true, 1, 7);
+    let mut secure = SecureKv::with_iv_seed(Some([5u8; 16]), true, 1, 7);
     let mut now_us = 0u64;
     let value = vec![0xAB; 1024];
     // Preload.
@@ -267,7 +313,7 @@ fn main() {
     // --- Real TCP on localhost.
     let server = ProducerStoreServer::start("127.0.0.1:0", 1 << 30, None, 11).unwrap();
     let mut client = KvClient::connect(server.addr()).unwrap();
-    let mut secure_tcp = SecureKv::new(Some([5u8; 16]), true, 1, 13);
+    let mut secure_tcp = SecureKv::with_iv_seed(Some([5u8; 16]), true, 1, 13);
     {
         let mut t = |_p: u32, req: Request| -> Response {
             client.call(&req).unwrap_or(Response::Error("io".into()))
@@ -325,7 +371,12 @@ fn main() {
     println!("\n== bench: marketplace control plane ==");
     let marketplace_json = marketplace_bench();
 
-    let json = format!("{{\n{marketplace_json}\n}}\n");
+    // --- Chaos plane: ops/sec under the standard fault mix, and how
+    // fast the marketplace reconverges once the faults stop.
+    println!("\n== bench: chaos plane (standard fault mix, seed 42) ==");
+    let chaos_json = chaos_bench();
+
+    let json = format!("{{\n{marketplace_json},\n{chaos_json}\n}}\n");
     match std::fs::write("BENCH_e2e.json", &json) {
         Ok(()) => println!("\nwrote BENCH_e2e.json"),
         Err(e) => eprintln!("\ncould not write BENCH_e2e.json: {e}"),

@@ -12,6 +12,12 @@ use crate::crypto::secure::{Envelope, OpenError, Sealed, SealedValue};
 use crate::net::wire::{Request, Response};
 use std::collections::HashMap;
 
+/// Reserved producer index naming the recorded-miss path: a transport
+/// whose [`KvTransport::route_put`] has nowhere live to route a PUT
+/// returns this, and its `call` answers deterministically like a miss
+/// (`Rejected`). No real slot ever uses this index.
+pub const DEAD_ROUTE: u32 = u32::MAX;
+
 /// Anything that can carry a request to one producer store.
 pub trait KvTransport {
     fn call(&mut self, producer_index: u32, req: Request) -> Response;
@@ -19,8 +25,9 @@ pub trait KvTransport {
     /// Pick the producer index for a *new* PUT of `key`. The default
     /// keeps the caller's round-robin choice; lease-aware transports
     /// (e.g. [`crate::market::RemotePool`]) override it with
-    /// deterministic key→slab routing over their live slots. GETs and
-    /// DELETEs never consult this — they route from stored metadata.
+    /// deterministic key→slab routing over their live slots, or
+    /// [`DEAD_ROUTE`] when nothing is live. GETs and DELETEs never
+    /// consult this — they route from stored metadata.
     fn route_put(&mut self, key: &[u8], round_robin_hint: u32) -> u32 {
         let _ = key;
         round_robin_hint
@@ -62,10 +69,28 @@ pub struct SecureKv {
 
 impl SecureKv {
     /// `key = None` disables encryption; `integrity` controls hashing.
-    /// `n_producers` is the number of producer stores leased.
-    pub fn new(key: Option<[u8; 16]>, integrity: bool, n_producers: u32, seed: u64) -> Self {
+    /// `n_producers` is the number of producer stores leased. CBC IVs
+    /// are drawn from OS entropy (see [`Envelope::new`]); deterministic
+    /// harnesses use [`Self::with_iv_seed`].
+    pub fn new(key: Option<[u8; 16]>, integrity: bool, n_producers: u32) -> Self {
+        Self::from_envelope(Envelope::new(key, integrity), n_producers)
+    }
+
+    /// [`Self::new`] with an explicit IV-stream seed — for tests,
+    /// benchmarks, and the simulator, where bit-reproducible runs
+    /// matter and the produced ciphertexts never leave the process.
+    pub fn with_iv_seed(
+        key: Option<[u8; 16]>,
+        integrity: bool,
+        n_producers: u32,
+        seed: u64,
+    ) -> Self {
+        Self::from_envelope(Envelope::with_iv_seed(key, integrity, seed), n_producers)
+    }
+
+    fn from_envelope(envelope: Envelope, n_producers: u32) -> Self {
         SecureKv {
-            envelope: Envelope::new(key, integrity, seed),
+            envelope,
             metadata: HashMap::new(),
             next_producer: 0,
             n_producers: n_producers.max(1),
@@ -244,7 +269,7 @@ mod tests {
     #[test]
     fn put_get_round_trip_encrypted() {
         let mut t = MemTransport::new(2);
-        let mut c = SecureKv::new(Some([1u8; 16]), true, 2, 42);
+        let mut c = SecureKv::with_iv_seed(Some([1u8; 16]), true, 2, 42);
         assert!(c.put(&mut t, b"mykey", b"myvalue"));
         assert_eq!(c.get(&mut t, b"mykey"), Some(b"myvalue".to_vec()));
         assert_eq!(c.hit_ratio(), 1.0);
@@ -262,7 +287,7 @@ mod tests {
     fn secure_kv_over_sharded_store() {
         use crate::kv::ShardedKvStore;
         let shared = ShardedKvStore::new(16 << 20, 4, 11);
-        let mut c = SecureKv::new(Some([9u8; 16]), true, 1, 21);
+        let mut c = SecureKv::with_iv_seed(Some([9u8; 16]), true, 1, 21);
         {
             let mut t = |_p: u32, req: Request| match req {
                 Request::Get { key } => match shared.get_owned(&key) {
@@ -295,7 +320,7 @@ mod tests {
     #[test]
     fn round_robin_spreads_across_producers() {
         let mut t = MemTransport::new(4);
-        let mut c = SecureKv::new(Some([1u8; 16]), true, 4, 1);
+        let mut c = SecureKv::with_iv_seed(Some([1u8; 16]), true, 4, 1);
         for i in 0..40 {
             assert!(c.put(&mut t, format!("k{i}").as_bytes(), b"v"));
         }
@@ -307,7 +332,7 @@ mod tests {
     #[test]
     fn corruption_detected_and_discarded() {
         let mut t = MemTransport::new(1);
-        let mut c = SecureKv::new(Some([1u8; 16]), true, 1, 7);
+        let mut c = SecureKv::with_iv_seed(Some([1u8; 16]), true, 1, 7);
         assert!(c.put(&mut t, b"key", b"value"));
         // Corrupt the stored bytes.
         let k_p = 0u64.to_le_bytes().to_vec();
@@ -324,7 +349,7 @@ mod tests {
     #[test]
     fn remote_eviction_is_a_miss() {
         let mut t = MemTransport::new(1);
-        let mut c = SecureKv::new(Some([1u8; 16]), true, 1, 9);
+        let mut c = SecureKv::with_iv_seed(Some([1u8; 16]), true, 1, 9);
         assert!(c.put(&mut t, b"key", b"value"));
         let k_p = 0u64.to_le_bytes().to_vec();
         t.stores[0].delete(&k_p);
@@ -335,7 +360,7 @@ mod tests {
     #[test]
     fn delete_synchronizes() {
         let mut t = MemTransport::new(1);
-        let mut c = SecureKv::new(Some([1u8; 16]), true, 1, 3);
+        let mut c = SecureKv::with_iv_seed(Some([1u8; 16]), true, 1, 3);
         assert!(c.put(&mut t, b"key", b"value"));
         assert!(c.delete(&mut t, b"key"));
         assert_eq!(t.stores[0].len(), 0);
@@ -345,10 +370,10 @@ mod tests {
     #[test]
     fn metadata_overhead_accounting() {
         let mut t = MemTransport::new(1);
-        let mut enc = SecureKv::new(Some([1u8; 16]), true, 1, 3);
+        let mut enc = SecureKv::with_iv_seed(Some([1u8; 16]), true, 1, 3);
         enc.put(&mut t, b"12345678", b"v");
         assert_eq!(enc.metadata_bytes(), 8 + 24);
-        let mut int_only = SecureKv::new(None, true, 1, 3);
+        let mut int_only = SecureKv::with_iv_seed(None, true, 1, 3);
         int_only.put(&mut t, b"12345678", b"v");
         assert_eq!(int_only.metadata_bytes(), 8 + 16);
     }
@@ -359,7 +384,7 @@ mod tests {
         // metadata routing GETs/DELETEs at indices that no longer exist
         // (an out-of-bounds panic on indexing transports like this one).
         let mut t = MemTransport::new(4);
-        let mut c = SecureKv::new(Some([1u8; 16]), true, 4, 1);
+        let mut c = SecureKv::with_iv_seed(Some([1u8; 16]), true, 4, 1);
         for i in 0..40 {
             assert!(c.put(&mut t, format!("k{i}").as_bytes(), b"v"));
         }
@@ -401,7 +426,7 @@ mod tests {
             }
         }
         let mut t = FixedRoute(MemTransport::new(4));
-        let mut c = SecureKv::new(Some([1u8; 16]), true, 4, 1);
+        let mut c = SecureKv::with_iv_seed(Some([1u8; 16]), true, 4, 1);
         for i in 0..20 {
             assert!(c.put(&mut t, format!("k{i}").as_bytes(), b"v"));
         }
@@ -419,7 +444,7 @@ mod tests {
 
     #[test]
     fn closure_transport_works() {
-        let mut c = SecureKv::new(None, false, 1, 3);
+        let mut c = SecureKv::with_iv_seed(None, false, 1, 3);
         let mut echo = |_p: u32, req: Request| match req {
             Request::Put { .. } => Response::Stored,
             Request::Get { .. } => Response::NotFound,

@@ -6,10 +6,29 @@
 //! `M_C = (K_P, H, P_i)` locally. GET verifies `H` over the returned `V_P`
 //! before decrypting. Integrity-only mode skips encryption/substitution
 //! and keeps just the hash (16-byte metadata instead of 24).
+//!
+//! ## Threat model (IV unpredictability)
+//!
+//! The producer is *untrusted* (§6): it sees every `V_P` and may store,
+//! replay, corrupt, or analyze them. CBC is only IND-CPA when IVs are
+//! unpredictable to the adversary — with predictable IVs a producer
+//! that can influence future plaintexts (e.g. a consumer caching
+//! attacker-supplied values) can confirm guesses about earlier blocks.
+//! The IV stream is therefore seeded from OS entropy by default
+//! ([`Envelope::new`]); the xoshiro generator expanding that seed is
+//! not itself cryptographic, which is an accepted trade-off of this
+//! from-scratch reproduction (a production deployment would use the
+//! platform CSPRNG per IV). [`Envelope::with_iv_seed`] keeps the fully
+//! deterministic stream for tests, benchmarks, and the simulator,
+//! where ciphertexts never cross a trust boundary. Integrity does not
+//! depend on the IVs at all: `H` binds the exact `V_P` bytes, so a
+//! Byzantine producer's corrupted, truncated, or replayed values are
+//! rejected regardless (`tests/chaos.rs` drives that at 100% tamper
+//! rates).
 
 use crate::crypto::aes::Aes128;
 use crate::crypto::sha256::sha256;
-use crate::util::rng::Rng;
+use crate::util::rng::{os_seed, Rng};
 
 /// Per-KV metadata kept locally by the consumer (paper: 24 bytes with
 /// encryption, 16 bytes integrity-only; we also keep the producer index).
@@ -58,8 +77,18 @@ pub enum OpenError {
 
 impl Envelope {
     /// `key = None` disables encryption (integrity-only mode when
-    /// `integrity`, or fully transparent when neither).
-    pub fn new(key: Option<[u8; 16]>, integrity: bool, seed: u64) -> Self {
+    /// `integrity`, or fully transparent when neither). The CBC IV
+    /// stream is seeded from OS entropy — IVs must be unpredictable to
+    /// the untrusted producer (module doc); tests and simulations that
+    /// need reproducibility use [`Self::with_iv_seed`].
+    pub fn new(key: Option<[u8; 16]>, integrity: bool) -> Self {
+        Self::with_iv_seed(key, integrity, os_seed())
+    }
+
+    /// [`Self::new`] with an explicit IV-stream seed. Deterministic —
+    /// and therefore predictable: only for harnesses whose ciphertexts
+    /// never reach an untrusted party.
+    pub fn with_iv_seed(key: Option<[u8; 16]>, integrity: bool, seed: u64) -> Self {
         Envelope {
             aes: key.map(|k| Aes128::new(&k)),
             integrity,
@@ -142,7 +171,7 @@ mod tests {
 
     #[test]
     fn seal_open_round_trip() {
-        let mut env = Envelope::new(Some([5u8; 16]), true, 42);
+        let mut env = Envelope::with_iv_seed(Some([5u8; 16]), true, 42);
         let sealed = env.seal(b"the consumer value", 3);
         assert_ne!(sealed.value_p, b"the consumer value".to_vec());
         assert_eq!(sealed.meta.producer_index, 3);
@@ -152,7 +181,7 @@ mod tests {
 
     #[test]
     fn counter_keys_are_unique_and_sequential() {
-        let mut env = Envelope::new(Some([5u8; 16]), true, 1);
+        let mut env = Envelope::with_iv_seed(Some([5u8; 16]), true, 1);
         let a = env.seal(b"a", 0);
         let b = env.seal(b"b", 0);
         assert_eq!(a.meta.k_p, 0);
@@ -161,7 +190,7 @@ mod tests {
 
     #[test]
     fn detects_corruption() {
-        let mut env = Envelope::new(Some([5u8; 16]), true, 7);
+        let mut env = Envelope::with_iv_seed(Some([5u8; 16]), true, 7);
         let sealed = env.seal(b"value", 0);
         let mut corrupted = sealed.value_p.clone();
         corrupted[20] ^= 0x01;
@@ -170,7 +199,7 @@ mod tests {
 
     #[test]
     fn integrity_only_mode() {
-        let mut env = Envelope::new(None, true, 7);
+        let mut env = Envelope::with_iv_seed(None, true, 7);
         let sealed = env.seal(b"plain value", 0);
         assert_eq!(sealed.value_p, b"plain value".to_vec()); // no encryption
         assert!(env.open(&sealed.value_p, &sealed.meta).is_ok());
@@ -183,7 +212,7 @@ mod tests {
 
     #[test]
     fn no_security_mode_passthrough() {
-        let mut env = Envelope::new(None, false, 7);
+        let mut env = Envelope::with_iv_seed(None, false, 7);
         let sealed = env.seal(b"raw", 0);
         assert_eq!(sealed.value_p, b"raw");
         let mut tampered = sealed.value_p.clone();
@@ -193,8 +222,25 @@ mod tests {
     }
 
     #[test]
+    fn default_envelopes_draw_independent_iv_streams() {
+        // Regression: IVs used to come from a fixed deterministic seed,
+        // so every consumer process emitted the *same predictable* IV
+        // sequence — exactly what CBC must not do in front of an
+        // untrusted producer. Two entropy-seeded envelopes with the
+        // same key must now produce different ciphertexts for the same
+        // plaintext (2^-128 false-failure probability).
+        let mut a = Envelope::new(Some([5u8; 16]), true);
+        let mut b = Envelope::new(Some([5u8; 16]), true);
+        assert_ne!(a.seal(b"same plaintext", 0).value_p, b.seal(b"same plaintext", 0).value_p);
+        // The explicit-seed constructor stays bit-reproducible.
+        let mut c = Envelope::with_iv_seed(Some([5u8; 16]), true, 9);
+        let mut d = Envelope::with_iv_seed(Some([5u8; 16]), true, 9);
+        assert_eq!(c.seal(b"same plaintext", 0).value_p, d.seal(b"same plaintext", 0).value_p);
+    }
+
+    #[test]
     fn fresh_ivs_randomize_ciphertext() {
-        let mut env = Envelope::new(Some([9u8; 16]), true, 3);
+        let mut env = Envelope::with_iv_seed(Some([9u8; 16]), true, 3);
         let a = env.seal(b"same", 0);
         let b = env.seal(b"same", 0);
         assert_ne!(a.value_p, b.value_p);
@@ -202,10 +248,10 @@ mod tests {
 
     #[test]
     fn producer_overhead_accounting() {
-        let env = Envelope::new(Some([9u8; 16]), true, 3);
+        let env = Envelope::with_iv_seed(Some([9u8; 16]), true, 3);
         // 5-byte value: IV 16 + pad to 16 => 16 + 11 = 27 extra bytes.
         assert_eq!(env.producer_overhead(5), 16 + 11);
-        let env2 = Envelope::new(None, true, 3);
+        let env2 = Envelope::with_iv_seed(None, true, 3);
         assert_eq!(env2.producer_overhead(5), 0);
     }
 }

@@ -10,6 +10,7 @@
 //! memtrade consumer --broker <a> [...]  ... against broker-leased slabs
 //! memtrade sim [--minutes N]            run the cluster simulation
 //! memtrade replay [--steps N]           run the Google-style replay
+//! memtrade chaos [--seed S] [--mix M]   run seeded fault-injection scenarios
 //! memtrade list                         list experiment ids
 //! ```
 //!
@@ -19,6 +20,7 @@ use memtrade::consumer::client::{KvTransport, SecureKv};
 use memtrade::core::config::BrokerConfig;
 use memtrade::core::{Money, SimTime};
 use memtrade::figures;
+use memtrade::market::chaos::{run_chaos, ChaosConfig, ChaosMix};
 use memtrade::market::{
     BrokerServer, BrokerServerConfig, ProducerAgent, ProducerAgentConfig, RemotePool,
     RemotePoolConfig,
@@ -84,6 +86,9 @@ USAGE:
                     [--ops N] [--value-bytes B] [--no-encrypt]
   memtrade sim [--minutes N] [--producers N] [--consumers N] [--remote PCT]
   memtrade replay [--steps N] [--producers N] [--consumers N]
+  memtrade chaos [--seed S | --seeds N] [--mix MIX] [--ops N] [--keys N]
+                 (MIX: clean|standard, or +-joined fault families:
+                  control|data|byzantine|kill|race, e.g. data+kill)
   memtrade list
 ";
 
@@ -103,6 +108,7 @@ fn main() -> ExitCode {
         "consumer" => cmd_consumer(&args),
         "sim" => cmd_sim(&args),
         "replay" => cmd_replay(&args),
+        "chaos" => cmd_chaos(&args),
         "list" => {
             for id in figures::ALL {
                 println!("{id}");
@@ -301,7 +307,7 @@ fn cmd_consumer(args: &Args) -> ExitCode {
     let ops = args.flag_u64("ops", 10_000);
     let value_bytes = args.flag_u64("value-bytes", 1024) as usize;
     let encrypt = !args.has("no-encrypt");
-    let mut secure = SecureKv::new(encrypt.then_some([3u8; 16]), true, 1, 99);
+    let mut secure = SecureKv::new(encrypt.then_some([3u8; 16]), true, 1);
 
     if let Some(broker) = args.flag("broker") {
         // Marketplace mode: lease slabs via the broker and route through
@@ -379,6 +385,58 @@ fn cmd_sim(args: &Args) -> ExitCode {
         Money::from_dollars(sim.broker.current_price().as_dollars()),
     );
     ExitCode::SUCCESS
+}
+
+/// Run seeded chaos scenarios (broker + 2 agents + pool under fault
+/// injection) and report the resilience invariants per seed. Exits
+/// non-zero if any invariant is violated — the printed seed + mix
+/// reproduce the failure exactly (`memtrade chaos --seed S --mix M`).
+fn cmd_chaos(args: &Args) -> ExitCode {
+    let mix_name = args.flag("mix").unwrap_or("standard");
+    let Some(mix) = ChaosMix::from_name(mix_name) else {
+        eprintln!("chaos: unknown mix {mix_name:?} (one of: {})", ChaosMix::NAMES.join("|"));
+        return ExitCode::FAILURE;
+    };
+    let seeds: Vec<u64> = match args.flag("seed") {
+        Some(s) => match s.parse() {
+            Ok(v) => vec![v],
+            Err(_) => {
+                eprintln!("chaos: --seed must be an integer, got {s:?}");
+                return ExitCode::FAILURE;
+            }
+        },
+        None => (1..=args.flag_u64("seeds", 5)).collect(),
+    };
+    let mut failures = 0u32;
+    for &seed in &seeds {
+        let cfg = ChaosConfig {
+            seed,
+            mix,
+            keys: args.flag_u64("keys", 150) as u32,
+            fault_ops: args.flag_u64("ops", 400),
+            ..Default::default()
+        };
+        println!("=== chaos seed {seed} mix {} ===", mix.label());
+        let outcome = run_chaos(&cfg);
+        println!("{}", outcome.report());
+        let violations = outcome.invariant_violations();
+        if violations.is_empty() {
+            println!("PASS");
+        } else {
+            failures += 1;
+            println!("FAIL (reproduce: memtrade chaos --seed {seed} --mix {})", mix.label());
+            for v in &violations {
+                println!("  violation: {v}");
+            }
+        }
+    }
+    if failures == 0 {
+        println!("\nall {} scenario(s) passed", seeds.len());
+        ExitCode::SUCCESS
+    } else {
+        eprintln!("\n{failures}/{} scenario(s) violated invariants", seeds.len());
+        ExitCode::FAILURE
+    }
 }
 
 fn cmd_replay(args: &Args) -> ExitCode {

@@ -28,10 +28,11 @@ use crate::net::control::{
     server_handshake_patient, CtrlRequest, CtrlResponse, GrantInfo, ProducerGrant, RefuseCode,
     CONTROL_MAGIC,
 };
+use crate::net::faults::{FaultPlan, FaultyStream};
 use crate::net::wire::{read_frame_into_patient, write_frame, CodecError};
 use std::collections::HashMap;
 use std::io::{self, BufReader, BufWriter, Write};
-use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::net::{TcpListener, ToSocketAddrs};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
@@ -61,6 +62,10 @@ pub struct BrokerServerConfig {
     /// window); younger producers are leased optimistically at their
     /// reported free slabs.
     pub forecast_min_samples: usize,
+    /// Chaos plane: fault schedule installed on every accepted control
+    /// connection (None in production — the accepted streams are then
+    /// plain pass-throughs).
+    pub faults: Option<FaultPlan>,
 }
 
 impl Default for BrokerServerConfig {
@@ -72,6 +77,7 @@ impl Default for BrokerServerConfig {
             producer_timeout: Duration::from_secs(3),
             history_dir: None,
             forecast_min_samples: 16,
+            faults: None,
         }
     }
 }
@@ -586,8 +592,10 @@ impl BrokerServer {
         let accept_handle = {
             let stop = stop.clone();
             let state = state.clone();
+            let faults = cfg.faults.clone();
             std::thread::spawn(move || {
                 let mut conn_handles: Vec<JoinHandle<()>> = Vec::new();
+                let mut conn_idx: u64 = 0;
                 while !stop.load(Ordering::Relaxed) {
                     match listener.accept() {
                         Ok((stream, _)) => {
@@ -596,6 +604,8 @@ impl BrokerServer {
                             // the handle list doesn't grow without bound.
                             conn_handles.retain(|h| !h.is_finished());
                             stream.set_nodelay(true).ok();
+                            let stream = FaultyStream::new(stream, faults.as_ref(), conn_idx);
+                            conn_idx += 1;
                             let state = state.clone();
                             let stop = stop.clone();
                             conn_handles.push(std::thread::spawn(move || {
@@ -698,7 +708,7 @@ impl Drop for BrokerServer {
 }
 
 fn serve_control_conn(
-    stream: TcpStream,
+    stream: FaultyStream,
     state: Arc<Mutex<State>>,
     stop: Arc<AtomicBool>,
     start: Instant,

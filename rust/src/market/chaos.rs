@@ -1,0 +1,633 @@
+//! Chaos scenarios: the full marketplace (broker daemon + two producer
+//! agents + lease-aware consumer pool, all over real TCP) run under a
+//! seeded fault schedule, with the paper's resilience invariants
+//! checked machine-readably.
+//!
+//! One scenario = one [`ChaosConfig`] (a seed plus a [`ChaosMix`] of
+//! fault families). The runner:
+//!
+//!  1. derives per-plane [`FaultPlan`]s (and optionally a Byzantine
+//!     producer) from the seed,
+//!  2. boots the topology and provisions the pool,
+//!  3. drives secure PUT/GET traffic while the faults run — optionally
+//!     killing a producer mid-run and racing renewals against forged
+//!     revocations,
+//!  4. disarms every fault source and measures reconvergence back to
+//!     target capacity,
+//!  5. sweeps the working set twice to check the invariants.
+//!
+//! Invariants ([`ChaosOutcome::invariant_violations`]):
+//!
+//!  * **No panic** — the runner returning at all is the check; a panic
+//!    anywhere in the stack fails the calling test/CLI.
+//!  * **Zero integrity escapes** — every GET that *verifies* must
+//!    return exactly the bytes that were PUT; tampering and corruption
+//!    must surface as `BadHash`/`BadCiphertext` misses, never as wrong
+//!    data ([`ChaosOutcome::integrity_escapes`]).
+//!  * **No lost acknowledged writes on surviving producers** — after
+//!    faults stop, a key that reads back once must keep reading back
+//!    ([`ChaosOutcome::lost_acked_writes`]).
+//!  * **Reconvergence** — the pool returns to its target capacity once
+//!    faults stop ([`ChaosOutcome::reconverged`],
+//!    [`ChaosOutcome::recovery_ms`]).
+//!
+//! Reproducibility: every fault decision comes from RNG streams that
+//! are pure functions of the seed and a per-connection index (see
+//! [`crate::net::faults`]), so a red run is replayed with
+//! `memtrade chaos --seed <seed> --mix <mix>`. Thread/timing
+//! interleavings still vary run to run — the *schedules* are what the
+//! seed pins down.
+
+use crate::consumer::client::SecureKv;
+use crate::core::config::BrokerConfig;
+use crate::core::SimTime;
+use crate::market::{
+    BrokerServer, BrokerServerConfig, PoolStats, ProducerAgent, ProducerAgentConfig,
+    RemotePool, RemotePoolConfig,
+};
+use crate::net::control::{CtrlClient, CtrlRequest};
+use crate::net::faults::{ByzantineSpec, FaultPlan, FaultSpec};
+use crate::util::rng::Rng;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// 1 MB slabs keep grants cheap and scenarios fast.
+const SLAB: u64 = 1 << 20;
+/// Slabs per producer agent.
+const AGENT_SLABS: u64 = 16;
+/// Slabs the pool holds at target (≤ one agent's capacity, so a
+/// mid-run kill still leaves enough for full reconvergence).
+const TARGET_SLABS: u32 = 12;
+
+/// Which fault families a scenario runs.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ChaosMix {
+    /// Seeded faults on every accepted broker control connection.
+    pub control_faults: bool,
+    /// Seeded faults on every consumer-pool data connection.
+    pub data_faults: bool,
+    /// Both producers serve a seeded fraction of GET hits tampered
+    /// (both, because placement may land every lease on one producer).
+    pub byzantine: bool,
+    /// Kill producer 1 (no deregister) halfway through the fault phase.
+    pub kill_producer: bool,
+    /// Race renewals against forged lease revocations on guessed ids.
+    pub revoke_race: bool,
+}
+
+impl ChaosMix {
+    /// Nothing at all — the baseline the bench compares against.
+    pub fn clean() -> Self {
+        ChaosMix::default()
+    }
+
+    /// Every fault family at once: the bench's standard mix.
+    pub fn standard() -> Self {
+        ChaosMix {
+            control_faults: true,
+            data_faults: true,
+            byzantine: true,
+            kill_producer: true,
+            revoke_race: true,
+        }
+    }
+
+    /// Parse a CLI mix name: `clean`, `standard`, or any `+`-joined
+    /// combination of fault families (`control`, `data`, `byzantine`,
+    /// `kill`, `race` — e.g. `data+kill`). `None` for an unknown name.
+    /// Round-trips with [`Self::label`], so a printed reproduction
+    /// command always parses back to the mix that ran.
+    pub fn from_name(name: &str) -> Option<Self> {
+        match name {
+            "clean" => return Some(Self::clean()),
+            "standard" => return Some(Self::standard()),
+            _ => {}
+        }
+        let mut mix = ChaosMix::default();
+        for part in name.split('+') {
+            match part {
+                "control" => mix.control_faults = true,
+                "data" => mix.data_faults = true,
+                "byzantine" => mix.byzantine = true,
+                "kill" => mix.kill_producer = true,
+                "race" => mix.revoke_race = true,
+                _ => return None,
+            }
+        }
+        Some(mix)
+    }
+
+    pub const NAMES: &'static [&'static str] =
+        &["clean", "standard", "control", "data", "byzantine", "kill", "race"];
+
+    /// Canonical printable name; [`Self::from_name`] parses it back.
+    pub fn label(&self) -> String {
+        let mut parts = Vec::new();
+        if self.control_faults {
+            parts.push("control");
+        }
+        if self.data_faults {
+            parts.push("data");
+        }
+        if self.byzantine {
+            parts.push("byzantine");
+        }
+        if self.kill_producer {
+            parts.push("kill");
+        }
+        if self.revoke_race {
+            parts.push("race");
+        }
+        if parts.is_empty() {
+            "clean".to_string()
+        } else {
+            parts.join("+")
+        }
+    }
+}
+
+/// One seeded chaos scenario.
+#[derive(Clone, Debug)]
+pub struct ChaosConfig {
+    pub seed: u64,
+    pub mix: ChaosMix,
+    /// Working-set keys (always re-put with the same per-key value, so
+    /// any verified GET has exactly one legal answer).
+    pub keys: u32,
+    pub value_bytes: usize,
+    /// Data operations driven during the fault phase.
+    pub fault_ops: u64,
+}
+
+impl Default for ChaosConfig {
+    fn default() -> Self {
+        ChaosConfig {
+            seed: 1,
+            mix: ChaosMix::standard(),
+            keys: 150,
+            value_bytes: 256,
+            fault_ops: 400,
+        }
+    }
+}
+
+/// What one scenario observed; see the module doc for the invariants.
+#[derive(Clone, Debug)]
+pub struct ChaosOutcome {
+    pub seed: u64,
+    /// Printable schedule descriptor (mix + derived fault rates).
+    pub schedule: String,
+    /// Data ops driven during the fault phase, and their throughput.
+    pub ops: u64,
+    pub ops_per_sec: f64,
+    pub hits: u64,
+    pub misses: u64,
+    /// Tampered/corrupted responses the envelope rejected (good).
+    pub integrity_failures: u64,
+    /// Verified GETs that returned wrong bytes (must be zero).
+    pub integrity_escapes: u64,
+    /// Responses the Byzantine producer actually served tampered.
+    pub tampered: u64,
+    /// Keys that read back after reconvergence and then vanished.
+    pub lost_acked_writes: u64,
+    /// Pool back at target capacity after faults stopped.
+    pub reconverged: bool,
+    /// Faults-stop → reconverged, in milliseconds (NaN if never).
+    pub recovery_ms: f64,
+    pub held_slabs_after: u32,
+    pub pool_stats: PoolStats,
+}
+
+impl ChaosOutcome {
+    /// Human-readable invariant violations; empty = scenario passed.
+    pub fn invariant_violations(&self) -> Vec<String> {
+        let mut v = Vec::new();
+        if self.integrity_escapes > 0 {
+            v.push(format!(
+                "{} integrity escape(s): a verified GET returned wrong bytes",
+                self.integrity_escapes
+            ));
+        }
+        if self.lost_acked_writes > 0 {
+            v.push(format!(
+                "{} acknowledged write(s) lost on surviving producers after faults stopped",
+                self.lost_acked_writes
+            ));
+        }
+        if !self.reconverged {
+            v.push(format!(
+                "pool never reconverged to {TARGET_SLABS} slabs (held {})",
+                self.held_slabs_after
+            ));
+        }
+        v
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "seed={} [{}]\n  ops {} ({:.0} ops/s) | hits {} misses {} | integrity: \
+             {} caught, {} escaped, {} tampered\n  lost acked writes {} | reconverged {} \
+             in {:.0} ms (held {}/{TARGET_SLABS}) | pool: grants {} lost {} renewals {} \
+             io_errs {} dead_calls {} ctrl_errs {}",
+            self.seed,
+            self.schedule,
+            self.ops,
+            self.ops_per_sec,
+            self.hits,
+            self.misses,
+            self.integrity_failures,
+            self.integrity_escapes,
+            self.tampered,
+            self.lost_acked_writes,
+            self.reconverged,
+            self.recovery_ms,
+            self.held_slabs_after,
+            self.pool_stats.grants,
+            self.pool_stats.slots_lost,
+            self.pool_stats.renewals,
+            self.pool_stats.io_errors,
+            self.pool_stats.dead_calls,
+            self.pool_stats.control_errors,
+        )
+    }
+}
+
+/// Derive one direction-pair of fault rates from the scenario RNG.
+/// Rates are kept in ranges where the system should stay *degraded but
+/// live*; the disarm phase then demands full recovery.
+fn derive_spec(rng: &mut Rng) -> FaultSpec {
+    FaultSpec {
+        drop_p: rng.uniform(0.0, 0.04),
+        delay_p: rng.uniform(0.0, 0.08),
+        delay_max_ms: 1 + rng.below(12),
+        disconnect_p: rng.uniform(0.0, 0.012),
+        truncate_p: rng.uniform(0.0, 0.02),
+        duplicate_p: rng.uniform(0.0, 0.03),
+        bitflip_p: rng.uniform(0.0, 0.025),
+    }
+}
+
+fn spec_label(s: &FaultSpec) -> String {
+    format!(
+        "drop={:.3} delay={:.3}/{}ms disc={:.4} trunc={:.3} dup={:.3} flip={:.3}",
+        s.drop_p, s.delay_p, s.delay_max_ms, s.disconnect_p, s.truncate_p, s.duplicate_p,
+        s.bitflip_p
+    )
+}
+
+/// The one legal value for key `k` under `seed`: re-puts are always
+/// byte-identical, so a verified GET has exactly one correct answer.
+fn value_for(seed: u64, k: u32, len: usize) -> Vec<u8> {
+    let mut rng = Rng::new(seed ^ 0x7A1E ^ (k as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    (0..len).map(|_| rng.next_u64() as u8).collect()
+}
+
+fn key_for(k: u32) -> Vec<u8> {
+    format!("ck{k}").into_bytes()
+}
+
+/// Spin until `cond` holds or `timeout` passes; true if it held.
+fn wait_for(timeout: Duration, mut cond: impl FnMut() -> bool) -> bool {
+    let deadline = Instant::now() + timeout;
+    while Instant::now() < deadline {
+        if cond() {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    cond()
+}
+
+/// Run one scenario end to end. Panics only on harness failures (bind
+/// errors, a broker that never comes up *without* faults installed);
+/// system misbehavior lands in the outcome instead.
+pub fn run_chaos(cfg: &ChaosConfig) -> ChaosOutcome {
+    let mut rng = Rng::new(cfg.seed ^ 0xC4A0_5000);
+
+    // --- Derive the schedule from the seed.
+    let ctrl_plan = cfg
+        .mix
+        .control_faults
+        .then(|| FaultPlan::new(cfg.seed ^ 0xC7, derive_spec(&mut rng), derive_spec(&mut rng)));
+    let data_plan = cfg
+        .mix
+        .data_faults
+        .then(|| FaultPlan::new(cfg.seed ^ 0xDA, derive_spec(&mut rng), derive_spec(&mut rng)));
+    let byz = cfg
+        .mix
+        .byzantine
+        .then(|| ByzantineSpec::new(cfg.seed ^ 0xB2, rng.uniform(0.15, 0.4)));
+    let schedule = {
+        let mut s = format!("mix={}", cfg.mix.label());
+        if let Some(p) = &ctrl_plan {
+            s += &format!(" ctrl[r: {} | w: {}]", spec_label(&p.read), spec_label(&p.write));
+        }
+        if let Some(p) = &data_plan {
+            s += &format!(" data[r: {} | w: {}]", spec_label(&p.read), spec_label(&p.write));
+        }
+        if let Some(b) = &byz {
+            s += &format!(" byz[p={:.2}]", b.tamper_p);
+        }
+        s
+    };
+
+    // --- Boot the topology. The broker binds clean; its *accepted*
+    // control connections carry the fault schedule.
+    let broker = BrokerServer::start(
+        "127.0.0.1:0",
+        BrokerConfig {
+            slab_bytes: SLAB,
+            min_lease: SimTime::from_millis(200),
+            ..Default::default()
+        },
+        BrokerServerConfig {
+            tick: Duration::from_millis(20),
+            producer_timeout: Duration::from_millis(600),
+            forecast_min_samples: usize::MAX,
+            faults: ctrl_plan.clone(),
+            ..Default::default()
+        },
+    )
+    .expect("broker bind");
+
+    let start_agent = |id: u64, byzantine: Option<ByzantineSpec>| -> ProducerAgent {
+        let agent_cfg = ProducerAgentConfig {
+            producer: id,
+            broker: broker.addr().to_string(),
+            data_addr: "127.0.0.1:0".to_string(),
+            advertise: None,
+            capacity_bytes: AGENT_SLABS * SLAB,
+            harvest: false,
+            heartbeat: Duration::from_millis(50),
+            shards: 2,
+            rate_bps: None,
+            seed: cfg.seed ^ id,
+            ctrl_call_timeout: Duration::from_millis(250),
+            ctrl_faults: None,
+            data_faults: None,
+            byzantine,
+        };
+        // Registration runs through the (possibly faulty) control
+        // plane; retry fresh connections until one schedule lets the
+        // handshake through.
+        let deadline = Instant::now() + Duration::from_secs(20);
+        loop {
+            match ProducerAgent::start(agent_cfg.clone()) {
+                Ok(a) => return a,
+                Err(e) if Instant::now() < deadline => {
+                    let _ = e;
+                    std::thread::sleep(Duration::from_millis(25));
+                }
+                Err(e) => panic!("agent {id} never registered: {e} (schedule {schedule})"),
+            }
+        }
+    };
+    let mut agents = vec![start_agent(1, byz.clone()), start_agent(2, byz.clone())];
+
+    let pool_cfg = RemotePoolConfig {
+        consumer: 9,
+        broker: broker.addr().to_string(),
+        target_slabs: TARGET_SLABS,
+        min_slabs: 1,
+        lease_ttl: Duration::from_millis(700),
+        renew_margin: Duration::from_millis(300),
+        maintain_every: Duration::from_millis(20),
+        reconnect_backoff: Duration::from_millis(250),
+        data_call_timeout: Duration::from_millis(150),
+        ctrl_call_timeout: Duration::from_millis(250),
+        ctrl_faults: None, // broker-side plan already faults this plane
+        data_faults: data_plan.clone(),
+    };
+    let mut pool = {
+        let deadline = Instant::now() + Duration::from_secs(20);
+        loop {
+            match RemotePool::connect(pool_cfg.clone()) {
+                Ok(p) => break p,
+                Err(e) if Instant::now() < deadline => {
+                    let _ = e;
+                    std::thread::sleep(Duration::from_millis(25));
+                }
+                Err(e) => panic!("pool never connected: {e} (schedule {schedule})"),
+            }
+        }
+    };
+
+    // Best-effort provisioning: under faults, partial capacity is fine
+    // — full capacity is only demanded after the disarm.
+    wait_for(Duration::from_secs(4), || {
+        pool.maintain();
+        pool.held_slabs() >= TARGET_SLABS.min(4)
+    });
+
+    // --- Optional renew-vs-revoke racer: forged producer-side
+    // revocations on guessed lease ids (they are a small counter),
+    // racing the pool's renewals and the broker's expiry sweeps.
+    let race_stop = Arc::new(AtomicBool::new(false));
+    let racer = cfg.mix.revoke_race.then(|| {
+        let addr = broker.addr().to_string();
+        let stop = race_stop.clone();
+        std::thread::spawn(move || {
+            let mut ctrl: Option<CtrlClient> = None;
+            let mut lease_guess: u64 = 1;
+            while !stop.load(Ordering::Relaxed) {
+                if ctrl.is_none() {
+                    ctrl = CtrlClient::connect_timeout(&addr, Duration::from_millis(500))
+                        .ok()
+                        .map(|mut c| {
+                            let _ = c.set_call_timeout(Duration::from_millis(250));
+                            c
+                        });
+                }
+                if let Some(c) = ctrl.as_mut() {
+                    let producer = 1 + (lease_guess % 2);
+                    let req = CtrlRequest::Revoke { producer, lease: lease_guess };
+                    if c.call(&req).is_err() {
+                        ctrl = None;
+                    }
+                    lease_guess = 1 + (lease_guess % 48);
+                }
+                std::thread::sleep(Duration::from_millis(20));
+            }
+        })
+    });
+
+    // --- Fault phase: secure traffic while the schedule runs.
+    let mut secure = SecureKv::with_iv_seed(Some([0x5E; 16]), true, 1, cfg.seed ^ 0x5EC);
+    let mut op_rng = Rng::new(cfg.seed ^ 0x0500);
+    let mut hits = 0u64;
+    let mut misses = 0u64;
+    let mut escapes = 0u64;
+    let mut killed = false;
+    let phase_budget = Duration::from_secs(8);
+    let t_phase = Instant::now();
+    let mut ops_done = 0u64;
+    for op in 0..cfg.fault_ops {
+        if t_phase.elapsed() > phase_budget {
+            break;
+        }
+        if cfg.mix.kill_producer
+            && !killed
+            && (op >= cfg.fault_ops / 2 || t_phase.elapsed() > phase_budget / 2)
+        {
+            agents[0].kill();
+            killed = true;
+        }
+        let k = op_rng.below(cfg.keys as u64) as u32;
+        let key = key_for(k);
+        if op_rng.chance(0.4) {
+            let _ = secure.put(&mut pool, &key, &value_for(cfg.seed, k, cfg.value_bytes));
+        } else {
+            match secure.get(&mut pool, &key) {
+                Some(v) => {
+                    hits += 1;
+                    if v != value_for(cfg.seed, k, cfg.value_bytes) {
+                        escapes += 1;
+                    }
+                }
+                None => misses += 1,
+            }
+        }
+        ops_done += 1;
+    }
+    let ops_per_sec = ops_done as f64 / t_phase.elapsed().as_secs_f64().max(1e-9);
+    if cfg.mix.kill_producer && !killed {
+        agents[0].kill();
+        killed = true;
+    }
+
+    // --- Disarm everything; the marketplace must heal on its own.
+    race_stop.store(true, Ordering::Relaxed);
+    if let Some(h) = racer {
+        let _ = h.join();
+    }
+    if let Some(p) = &ctrl_plan {
+        p.disarm();
+    }
+    if let Some(p) = &data_plan {
+        p.disarm();
+    }
+    if let Some(b) = &byz {
+        b.disarm();
+    }
+    let t_recover = Instant::now();
+    let mut reconverged = wait_for(Duration::from_secs(8), || {
+        pool.maintain();
+        pool.held_slabs() >= TARGET_SLABS
+    });
+    let mut recovery_ms = t_recover.elapsed().as_secs_f64() * 1e3;
+    // Stabilize for one full lease TTL: slots the broker silently ended
+    // during the faults get renewed-or-killed-and-refilled, so the
+    // sweeps below only see capacity that is actually backed. This
+    // fixed window is harness bookkeeping, not recovery — it is kept
+    // out of recovery_ms so the metric stays comparable across PRs.
+    let t_stable = Instant::now();
+    while t_stable.elapsed() < Duration::from_millis(900) {
+        pool.maintain();
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    if reconverged && pool.held_slabs() < TARGET_SLABS {
+        // Capacity dipped during stabilization (a stale slot died on
+        // renewal): charge only the extra re-provisioning time.
+        let t_rewait = Instant::now();
+        reconverged = wait_for(Duration::from_secs(4), || {
+            pool.maintain();
+            pool.held_slabs() >= TARGET_SLABS
+        });
+        recovery_ms += t_rewait.elapsed().as_secs_f64() * 1e3;
+    }
+    if !reconverged {
+        recovery_ms = f64::NAN;
+    }
+    // Live producer stores sized to their lease targets, so re-puts
+    // below land in real budget.
+    wait_for(Duration::from_secs(3), || {
+        agents.iter().skip(usize::from(killed)).all(|a| {
+            a.store().map(|s| s.max_bytes() as u64).unwrap_or(0) == a.target_bytes()
+        })
+    });
+
+    // --- Refill the working set (clean network now), then the two
+    // invariant sweeps.
+    for k in 0..cfg.keys {
+        let key = key_for(k);
+        if secure.get(&mut pool, &key).is_none() {
+            let _ = secure.put(&mut pool, &key, &value_for(cfg.seed, k, cfg.value_bytes));
+        }
+    }
+    let mut sweep1 = vec![false; cfg.keys as usize];
+    for k in 0..cfg.keys {
+        if let Some(v) = secure.get(&mut pool, &key_for(k)) {
+            if v != value_for(cfg.seed, k, cfg.value_bytes) {
+                escapes += 1;
+            } else {
+                sweep1[k as usize] = true;
+            }
+        }
+    }
+    let mut lost_acked_writes = 0u64;
+    for k in 0..cfg.keys {
+        let now = secure.get(&mut pool, &key_for(k));
+        match now {
+            Some(v) => {
+                if v != value_for(cfg.seed, k, cfg.value_bytes) {
+                    escapes += 1;
+                }
+            }
+            None => {
+                if sweep1[k as usize] {
+                    lost_acked_writes += 1;
+                }
+            }
+        }
+    }
+
+    let tampered: u64 = agents.iter().map(|a| a.byzantine_tampered()).sum();
+    let outcome = ChaosOutcome {
+        seed: cfg.seed,
+        schedule,
+        ops: ops_done,
+        ops_per_sec,
+        hits,
+        misses,
+        integrity_failures: secure.stats.integrity_failures,
+        integrity_escapes: escapes,
+        tampered,
+        lost_acked_writes,
+        reconverged,
+        recovery_ms,
+        held_slabs_after: pool.held_slabs(),
+        pool_stats: pool.stats.clone(),
+    };
+
+    drop(pool);
+    for a in agents.drain(..) {
+        a.stop();
+    }
+    broker.stop();
+    outcome
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mix_labels_round_trip_through_from_name() {
+        // The printed reproduction command must parse back to the mix
+        // that ran — for every combination, not just the single-family
+        // names.
+        let mixes = [
+            ChaosMix::clean(),
+            ChaosMix::standard(),
+            ChaosMix { data_faults: true, kill_producer: true, ..Default::default() },
+            ChaosMix { control_faults: true, revoke_race: true, ..Default::default() },
+            ChaosMix { byzantine: true, ..Default::default() },
+        ];
+        for m in mixes {
+            assert_eq!(ChaosMix::from_name(&m.label()), Some(m), "{}", m.label());
+        }
+        assert_eq!(ChaosMix::from_name("bogus"), None);
+        assert_eq!(ChaosMix::from_name("data+bogus"), None);
+    }
+}

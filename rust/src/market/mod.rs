@@ -19,13 +19,19 @@
 //!   → expire / revoke / release), unit-tested on a mock clock and
 //!   driven by both the daemon (wall clock) and [`crate::sim::cluster`]
 //!   (simulated time).
+//! * [`chaos`] — seeded chaos scenarios: the whole topology run under
+//!   [`crate::net::faults`] fault schedules (plus Byzantine producers,
+//!   mid-run kills, and renew-vs-revoke races), with the paper's
+//!   resilience invariants checked machine-readably.
 
 pub mod broker_server;
+pub mod chaos;
 pub mod lease;
 pub mod producer_agent;
 pub mod remote_pool;
 
 pub use broker_server::{BrokerServer, BrokerServerConfig};
+pub use chaos::{run_chaos, ChaosConfig, ChaosMix, ChaosOutcome};
 pub use lease::{LeaseEnd, LeaseError, LeaseRecord, LeaseState, LeaseTable};
 pub use producer_agent::{AgentStats, ProducerAgent, ProducerAgentConfig};
 pub use remote_pool::{PoolStats, RemotePool, RemotePoolConfig};

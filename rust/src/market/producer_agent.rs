@@ -22,6 +22,7 @@ use crate::core::{SimTime, GIB};
 use crate::kv::ShardedKvStore;
 use crate::mem::SwapDevice;
 use crate::net::control::{CtrlClient, CtrlRequest, CtrlResponse, RefuseCode};
+use crate::net::faults::{ByzantineSpec, FaultPlan};
 use crate::net::tcp::ProducerStoreServer;
 use crate::producer::Harvester;
 use crate::workload::apps::{AppKind, AppModel, AppRunner};
@@ -54,6 +55,18 @@ pub struct ProducerAgentConfig {
     /// Data-plane rate limit, bytes/sec (None = unlimited).
     pub rate_bps: Option<u64>,
     pub seed: u64,
+    /// Longest a control call may wait for the broker's answer before
+    /// the agent treats the connection as lost and reconnects.
+    pub ctrl_call_timeout: Duration,
+    /// Chaos plane: fault schedule for this agent's broker connections.
+    pub ctrl_faults: Option<FaultPlan>,
+    /// Chaos plane: fault schedule installed on accepted data-plane
+    /// connections.
+    pub data_faults: Option<FaultPlan>,
+    /// Chaos plane: serve a seeded fraction of GET hits tampered
+    /// (corrupted / stale / truncated) — the Byzantine producer the
+    /// §6.1 envelope is tested against.
+    pub byzantine: Option<ByzantineSpec>,
 }
 
 impl Default for ProducerAgentConfig {
@@ -69,6 +82,10 @@ impl Default for ProducerAgentConfig {
             shards: 0,
             rate_bps: None,
             seed: 1,
+            ctrl_call_timeout: crate::net::control::CONTROL_CALL_TIMEOUT,
+            ctrl_faults: None,
+            data_faults: None,
+            byzantine: None,
         }
     }
 }
@@ -156,12 +173,14 @@ impl ProducerAgent {
         } else {
             cfg.shards
         };
-        let server = ProducerStoreServer::start_sharded(
+        let server = ProducerStoreServer::start_chaotic(
             &cfg.data_addr,
             cfg.capacity_bytes as usize,
             cfg.rate_bps,
             cfg.seed,
             shards,
+            cfg.data_faults.clone(),
+            cfg.byzantine.clone(),
         )?;
         // Nothing is leased yet: zero budget until the broker says so.
         server.shrink_to(0);
@@ -184,7 +203,7 @@ impl ProducerAgent {
             None => cfg.capacity_bytes,
         };
 
-        let mut ctrl = CtrlClient::connect(&cfg.broker)?;
+        let mut ctrl = dial_broker(&cfg, 0)?;
         let slab_bytes = match ctrl.call(&CtrlRequest::Register {
             producer: cfg.producer,
             capacity_gb: cfg.capacity_bytes as f32 / GIB as f32,
@@ -212,6 +231,7 @@ impl ProducerAgent {
                     cfg,
                     endpoint,
                     conn: Some(ctrl),
+                    conn_seq: 1,
                     store,
                     harvest,
                     slab_bytes,
@@ -246,6 +266,12 @@ impl ProducerAgent {
         &self.stats
     }
 
+    /// Byzantine-mode responses this agent's store served tampered
+    /// (0 unless configured with a [`ByzantineSpec`], or after `kill`).
+    pub fn byzantine_tampered(&self) -> u64 {
+        self.server.as_ref().map(|s| s.byzantine_tampered()).unwrap_or(0)
+    }
+
     pub fn target_bytes(&self) -> u64 {
         self.stats.target_bytes.load(Ordering::Relaxed)
     }
@@ -274,6 +300,8 @@ impl ProducerAgent {
         if let Some(h) = self.loop_handle.take() {
             let _ = h.join();
         }
+        // Deregister over a clean connection: teardown must not race a
+        // chaos plan that could eat the goodbye.
         if let Ok(mut ctrl) = CtrlClient::connect(&self.cfg.broker) {
             let _ = ctrl.call(&CtrlRequest::Deregister { producer: self.cfg.producer });
         }
@@ -289,11 +317,30 @@ impl Drop for ProducerAgent {
     }
 }
 
+/// Dial the broker with the agent's chaos plan (if any) installed and
+/// per-call response waits bounded. `conn` indexes this agent's control
+/// connections for the fault plan's determinism contract.
+fn dial_broker(cfg: &ProducerAgentConfig, conn: u64) -> io::Result<CtrlClient> {
+    let mut ctrl = match &cfg.ctrl_faults {
+        Some(plan) => CtrlClient::connect_faulty(
+            &cfg.broker,
+            crate::net::control::HANDSHAKE_TIMEOUT,
+            plan,
+            conn,
+        )?,
+        None => CtrlClient::connect(&cfg.broker)?,
+    };
+    ctrl.set_call_timeout(cfg.ctrl_call_timeout)?;
+    Ok(ctrl)
+}
+
 struct AgentLoop {
     cfg: ProducerAgentConfig,
     /// The *bound* data-plane endpoint (not the 0-port bind address).
     endpoint: String,
     conn: Option<CtrlClient>,
+    /// Control connections dialed so far (the chaos plan's index).
+    conn_seq: u64,
     store: Arc<ShardedKvStore>,
     harvest: Option<HarvestLoop>,
     slab_bytes: u64,
@@ -330,7 +377,9 @@ fn agent_loop(mut a: AgentLoop) {
         // so availability must still be reported net of them — a full-
         // capacity report here would invite over-granting.
         if a.conn.is_none() {
-            let Ok(mut c) = CtrlClient::connect(&a.cfg.broker) else {
+            let conn_idx = a.conn_seq;
+            a.conn_seq += 1;
+            let Ok(mut c) = dial_broker(&a.cfg, conn_idx) else {
                 a.stats.control_errors.fetch_add(1, Ordering::Relaxed);
                 continue;
             };
@@ -418,7 +467,13 @@ fn agent_loop(mut a: AgentLoop) {
                 a.conn = None;
             }
             Ok(_) => {
+                // Any other answer to a heartbeat means the response
+                // stream is desynced (e.g. a duplicated frame shifted
+                // every later response) — keeping the connection would
+                // misread acks forever. Reconnect and re-register; the
+                // broker re-announces our whole book on the next ack.
                 a.stats.control_errors.fetch_add(1, Ordering::Relaxed);
+                a.conn = None;
             }
             Err(_) => {
                 a.stats.control_errors.fetch_add(1, Ordering::Relaxed);

@@ -28,8 +28,9 @@
 //! [`RemotePool::maintain`]): each live lease is renewed once less than
 //! `renew_margin` of its TTL remains.
 
-use crate::consumer::client::KvTransport;
+use crate::consumer::client::{KvTransport, DEAD_ROUTE};
 use crate::net::control::{CtrlClient, CtrlRequest, CtrlResponse, GrantInfo};
+use crate::net::faults::FaultPlan;
 use crate::net::tcp::KvClient;
 use crate::net::wire::{Request, Response};
 use crate::util::hash::fnv1a_64;
@@ -40,11 +41,6 @@ use std::time::{Duration, Instant};
 /// black-holed broker or producer costs this much once per backoff
 /// window, not the OS's multi-minute SYN retry schedule per call.
 const DIAL_TIMEOUT: Duration = Duration::from_secs(2);
-/// After a failed broker reconnect or call, don't retry (and thus
-/// stall a data call again) until this much time has passed. Must
-/// exceed the worst-case inline stall (dial + handshake read wait), or
-/// a wedged broker would keep the data path blocked back-to-back.
-const RECONNECT_BACKOFF: Duration = Duration::from_secs(10);
 
 #[derive(Clone, Debug)]
 pub struct RemotePoolConfig {
@@ -61,6 +57,22 @@ pub struct RemotePoolConfig {
     pub renew_margin: Duration,
     /// Opportunistic maintenance cadence inside `call`.
     pub maintain_every: Duration,
+    /// After a failed broker reconnect or call, don't retry (and thus
+    /// stall a data call again) until this much time has passed. Must
+    /// exceed the worst-case inline stall (dial + handshake read wait),
+    /// or a wedged broker would keep the data path blocked
+    /// back-to-back.
+    pub reconnect_backoff: Duration,
+    /// Longest a data-plane call may wait for its response: a producer
+    /// that stops answering mid-stream surfaces as a dead slot (cache
+    /// misses) instead of wedging the consumer forever.
+    pub data_call_timeout: Duration,
+    /// Longest a control call may wait for the broker's answer.
+    pub ctrl_call_timeout: Duration,
+    /// Chaos plane: fault schedule for dialed broker connections.
+    pub ctrl_faults: Option<FaultPlan>,
+    /// Chaos plane: fault schedule for dialed producer connections.
+    pub data_faults: Option<FaultPlan>,
 }
 
 impl Default for RemotePoolConfig {
@@ -73,6 +85,11 @@ impl Default for RemotePoolConfig {
             lease_ttl: Duration::from_secs(600),
             renew_margin: Duration::from_secs(120),
             maintain_every: Duration::from_millis(50),
+            reconnect_backoff: Duration::from_secs(10),
+            data_call_timeout: Duration::from_secs(2),
+            ctrl_call_timeout: crate::net::control::CONTROL_CALL_TIMEOUT,
+            ctrl_faults: None,
+            data_faults: None,
         }
     }
 }
@@ -119,6 +136,9 @@ pub struct RemotePool {
     reconnect_after: Instant,
     /// Session nonce mixed into the wire-key namespace (see module doc).
     session: u64,
+    /// Connections dialed so far — the per-connection index of the
+    /// fault plans' determinism contract (control and data share it).
+    conn_seq: u64,
     pub stats: PoolStats,
 }
 
@@ -127,24 +147,40 @@ impl RemotePool {
     /// even when no capacity is grantable yet (the pool keeps retrying);
     /// check [`Self::held_slabs`] if initial capacity is required.
     pub fn connect(cfg: RemotePoolConfig) -> io::Result<Self> {
-        let ctrl = CtrlClient::connect(&cfg.broker)?;
         let session = std::time::SystemTime::now()
             .duration_since(std::time::UNIX_EPOCH)
             .map(|d| d.as_micros() as u64)
             .unwrap_or(0);
         let mut pool = RemotePool {
             cfg,
-            ctrl: Some(ctrl),
+            ctrl: None,
             slots: Vec::new(),
             live: Vec::new(),
             held_slabs: 0,
             next_maintain: Instant::now(),
             reconnect_after: Instant::now(),
             session,
+            conn_seq: 0,
             stats: PoolStats::default(),
         };
+        // Bounded initial dial: a black-holed broker fails fast here
+        // instead of hanging the constructor on the OS SYN schedule.
+        pool.ctrl = Some(pool.dial_ctrl(crate::net::control::HANDSHAKE_TIMEOUT)?);
         pool.refill();
         Ok(pool)
+    }
+
+    /// Dial the broker, install the chaos plan if one is configured,
+    /// and bound per-call response waits.
+    fn dial_ctrl(&mut self, timeout: Duration) -> io::Result<CtrlClient> {
+        let conn = self.conn_seq;
+        self.conn_seq += 1;
+        let mut ctrl = match &self.cfg.ctrl_faults {
+            Some(plan) => CtrlClient::connect_faulty(&self.cfg.broker, timeout, plan, conn)?,
+            None => CtrlClient::connect_timeout(&self.cfg.broker, timeout)?,
+        };
+        ctrl.set_call_timeout(self.cfg.ctrl_call_timeout)?;
+        Ok(ctrl)
     }
 
     pub fn held_slabs(&self) -> u32 {
@@ -197,7 +233,13 @@ impl RemotePool {
     }
 
     fn add_grant(&mut self, g: GrantInfo, now: Instant) {
-        let client = match KvClient::connect_timeout(&g.endpoint, DIAL_TIMEOUT) {
+        let conn = self.conn_seq;
+        self.conn_seq += 1;
+        let dialed = match &self.cfg.data_faults {
+            Some(plan) => KvClient::connect_faulty(&g.endpoint, DIAL_TIMEOUT, plan, conn),
+            None => KvClient::connect_timeout(&g.endpoint, DIAL_TIMEOUT),
+        };
+        let mut client = match dialed {
             Ok(c) => c,
             Err(_) => {
                 // Producer vanished between grant and dial; the lease
@@ -206,6 +248,12 @@ impl RemotePool {
                 return;
             }
         };
+        // A slot that stops answering must become a dead slot (misses),
+        // not a wedged consumer: bound every data call's response wait.
+        if client.set_call_timeout(Some(self.cfg.data_call_timeout)).is_err() {
+            self.stats.slots_lost += 1;
+            return;
+        }
         let slot = Slot {
             lease: g.lease,
             endpoint: g.endpoint,
@@ -230,14 +278,14 @@ impl RemotePool {
         if now < self.reconnect_after {
             return false;
         }
-        match CtrlClient::connect_timeout(&self.cfg.broker, DIAL_TIMEOUT) {
+        match self.dial_ctrl(DIAL_TIMEOUT) {
             Ok(c) => {
                 self.ctrl = Some(c);
                 true
             }
             Err(_) => {
                 self.stats.control_errors += 1;
-                self.reconnect_after = now + RECONNECT_BACKOFF;
+                self.reconnect_after = now + self.cfg.reconnect_backoff;
                 false
             }
         }
@@ -249,7 +297,7 @@ impl RemotePool {
     fn ctrl_failed(&mut self) {
         self.stats.control_errors += 1;
         self.ctrl = None;
-        self.reconnect_after = Instant::now() + RECONNECT_BACKOFF;
+        self.reconnect_after = Instant::now() + self.cfg.reconnect_backoff;
     }
 
     /// Ask the broker for whatever is missing toward the target.
@@ -272,7 +320,17 @@ impl RemotePool {
                     self.add_grant(g, now);
                 }
             }
-            Ok(_) => {} // NoCapacity: retry on a later maintain
+            Ok(CtrlResponse::Refused { .. }) => {} // NoCapacity: retry later
+            Ok(_) => {
+                // Response type doesn't match the request: the stream
+                // is desynced (e.g. a duplicated frame shifted every
+                // later response by one). Interpreting shifted
+                // responses would corrupt lease state forever — drop
+                // the connection and start clean. Chaos flushed this
+                // out: `duplicate` faults left pools permanently
+                // misreading renews as grants and vice versa.
+                self.ctrl_failed();
+            }
             Err(_) => self.ctrl_failed(),
         }
     }
@@ -312,17 +370,28 @@ impl RemotePool {
                 let lease = self.slots[i].as_ref().unwrap().lease;
                 let renew = CtrlRequest::Renew { consumer: self.cfg.consumer, lease };
                 match self.ctrl.as_mut().unwrap().call(&renew) {
-                    Ok(CtrlResponse::Renewed { ttl_us, .. }) => {
+                    // The ack must name the lease we renewed: a Renewed
+                    // for a *different* lease is a shifted (desynced)
+                    // stream that happens to be renew-shaped, and
+                    // extending this slot on its TTL would keep traffic
+                    // flowing to slabs the broker already reclaimed.
+                    Ok(CtrlResponse::Renewed { lease: acked, ttl_us }) if acked == lease => {
                         self.stats.renewals += 1;
                         if let Some(slot) = self.slots[i].as_mut() {
                             slot.deadline = now + Duration::from_micros(ttl_us);
                         }
                     }
-                    Ok(_) => {
+                    Ok(CtrlResponse::Refused { .. }) => {
                         // Refused: expired, revoked, or forgotten — the
                         // remote memory is gone; downstream it's misses.
                         self.stats.renewal_failures += 1;
                         self.kill_slot(i);
+                    }
+                    Ok(_) => {
+                        // Desynced stream (see refill): killing slots on
+                        // shifted responses would shed healthy capacity.
+                        self.ctrl_failed();
+                        break;
                     }
                     Err(_) => {
                         self.ctrl_failed();
@@ -400,6 +469,15 @@ impl KvTransport for RemotePool {
             self.next_maintain = now + self.cfg.maintain_every;
         }
         self.namespace_key(&mut req);
+        if producer_index == DEAD_ROUTE {
+            // `route_put` found zero live slots: a deterministic
+            // recorded miss. Even if the maintain above just revived
+            // capacity, this call was routed dead and stays dead —
+            // resurrecting it onto an arbitrary slot index would hand
+            // `SecureKv` metadata at an index the routing never chose.
+            self.stats.dead_calls += 1;
+            return Self::miss_response(&req);
+        }
         let index = producer_index as usize;
         let result = match self.slots.get_mut(index).and_then(|s| s.as_mut()) {
             Some(slot) => slot.client.call(&req),
@@ -421,10 +499,15 @@ impl KvTransport for RemotePool {
         }
     }
 
-    /// Deterministic key→slab routing over the live slots.
-    fn route_put(&mut self, key: &[u8], round_robin_hint: u32) -> u32 {
+    /// Deterministic key→slab routing over the live slots. With zero
+    /// live slots the PUT is routed to [`DEAD_ROUTE`], the recorded-
+    /// miss path — never to the caller's round-robin hint, which is a
+    /// producer index in *`SecureKv`'s* table, not ours, and may be
+    /// dead, reused, or out of range (chaos flushed this out as
+    /// sporadic PUTs landing on a just-revived unrelated slot).
+    fn route_put(&mut self, key: &[u8], _round_robin_hint: u32) -> u32 {
         if self.live.is_empty() {
-            round_robin_hint
+            DEAD_ROUTE
         } else {
             self.live[(fnv1a_64(key) % self.live.len() as u64) as usize]
         }

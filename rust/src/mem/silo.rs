@@ -58,8 +58,14 @@ impl Silo {
     }
 
     /// Frontswap store: a reclaimed page enters the victim cache.
+    ///
+    /// Idempotent: re-admitting a page that is already resident
+    /// refreshes its entry time (its cooling clock restarts). The
+    /// superseded queue record is skipped lazily by
+    /// [`Self::drain_cooled`]'s entry-time check — re-admission is the
+    /// very case that check documents, so it must not be asserted away
+    /// (it used to panic debug builds).
     pub fn admit(&mut self, now: SimTime, page: u32) {
-        debug_assert!(!self.members.contains_key(&page), "page already in Silo");
         self.queue.push_back((now, page));
         self.members.insert(page, now);
         self.stats.admitted += 1;
@@ -163,6 +169,37 @@ mod tests {
         s.admit(SimTime::from_secs(9), 1); // re-admitted just before old cooling
         assert!(s.drain_cooled(SimTime::from_secs(10)).is_empty());
         assert_eq!(s.drain_cooled(SimTime::from_secs(19)), vec![1]);
+    }
+
+    #[test]
+    fn readmission_while_resident_is_idempotent() {
+        // Regression: a legal re-admission (page still resident) used to
+        // trip admit's debug_assert. It must instead restart the page's
+        // cooling clock and leave exactly one live membership.
+        let mut s = Silo::new(SimTime::from_secs(10));
+        s.admit(SimTime::ZERO, 1);
+        s.admit(SimTime::from_secs(6), 1); // re-admitted, never mapped back
+        assert_eq!(s.len(), 1);
+        // Old entry time (t=0) no longer cools the page at t=10...
+        assert!(s.drain_cooled(SimTime::from_secs(10)).is_empty());
+        assert!(s.contains(1));
+        // ...the refreshed time (t=6) does at t=16.
+        assert_eq!(s.drain_cooled(SimTime::from_secs(16)), vec![1]);
+        assert!(s.is_empty());
+        assert_eq!(s.stats.cooled_to_disk, 1);
+    }
+
+    #[test]
+    fn readmission_after_cooling_starts_fresh() {
+        let mut s = Silo::new(SimTime::from_secs(10));
+        s.admit(SimTime::ZERO, 1);
+        assert_eq!(s.drain_cooled(SimTime::from_secs(10)), vec![1]);
+        // Back from disk and reclaimed again: a brand-new residency.
+        s.admit(SimTime::from_secs(20), 1);
+        assert!(s.contains(1));
+        assert!(s.drain_cooled(SimTime::from_secs(29)).is_empty());
+        assert_eq!(s.drain_cooled(SimTime::from_secs(30)), vec![1]);
+        assert_eq!(s.stats.admitted, 2);
     }
 
     #[test]

@@ -22,6 +22,7 @@
 //! "wrong plane / wrong version" error instead of desyncing on garbage
 //! frames.
 
+use crate::net::faults::{FaultPlan, FaultyStream};
 use crate::net::wire::{
     put_bytes, read_frame_into, read_frame_into_patient, take_bytes, take_u32, take_u64,
     write_frame, CodecError,
@@ -588,33 +589,57 @@ impl CtrlResponse {
 /// Blocking control-plane client: one handshaked TCP connection to the
 /// broker, with reusable frame buffers like [`crate::net::tcp::KvClient`].
 pub struct CtrlClient {
-    reader: BufReader<TcpStream>,
-    writer: BufWriter<TcpStream>,
+    reader: BufReader<FaultyStream>,
+    writer: BufWriter<FaultyStream>,
     send_buf: Vec<u8>,
     recv_buf: Vec<u8>,
 }
 
 impl CtrlClient {
     pub fn connect<A: ToSocketAddrs>(addr: A) -> io::Result<Self> {
-        Self::from_stream(TcpStream::connect(addr)?)
+        Self::from_stream(FaultyStream::clean(TcpStream::connect(addr)?), HANDSHAKE_TIMEOUT)
     }
 
-    /// [`Self::connect`] with a bounded connection attempt — for
-    /// reconnect paths that must not stall their caller.
+    /// [`Self::connect`] with the whole attempt bounded — dial *and*
+    /// handshake — for reconnect paths that must not stall their caller.
     pub fn connect_timeout(addr: &str, timeout: Duration) -> io::Result<Self> {
-        Self::from_stream(connect_with_timeout(addr, timeout)?)
+        let stream = connect_with_timeout(addr, timeout)?;
+        Self::from_stream(FaultyStream::clean(stream), timeout.min(HANDSHAKE_TIMEOUT))
     }
 
-    fn from_stream(stream: TcpStream) -> io::Result<Self> {
+    /// [`Self::connect_timeout`] with a fault schedule installed: the
+    /// connection becomes `plan`'s `conn`-th deterministic stream.
+    pub fn connect_faulty(
+        addr: &str,
+        timeout: Duration,
+        plan: &FaultPlan,
+        conn: u64,
+    ) -> io::Result<Self> {
+        let stream = connect_with_timeout(addr, timeout)?;
+        Self::from_stream(
+            FaultyStream::new(stream, Some(plan), conn),
+            timeout.min(HANDSHAKE_TIMEOUT),
+        )
+    }
+
+    fn from_stream(stream: FaultyStream, handshake_timeout: Duration) -> io::Result<Self> {
         // Bounded reads for the connection's whole life: a hello (or any
         // control response) that never arrives is an error, not a hang —
         // a blocked call here would wedge agent/pool maintenance loops.
-        stream.set_read_timeout(Some(HANDSHAKE_TIMEOUT))?;
+        stream.set_read_timeout(Some(handshake_timeout))?;
         let mut reader = BufReader::new(stream.try_clone()?);
         let mut writer = BufWriter::new(stream);
         client_handshake(&mut reader, &mut writer, CONTROL_MAGIC)?;
         reader.get_ref().set_read_timeout(Some(CONTROL_CALL_TIMEOUT))?;
         Ok(CtrlClient { reader, writer, send_buf: Vec::new(), recv_buf: Vec::new() })
+    }
+
+    /// Override the per-call response deadline (default
+    /// [`CONTROL_CALL_TIMEOUT`]). Chaos scenarios tighten this so a
+    /// dropped control frame costs milliseconds, not ten seconds of a
+    /// wedged maintenance loop.
+    pub fn set_call_timeout(&mut self, timeout: Duration) -> io::Result<()> {
+        self.reader.get_ref().set_read_timeout(Some(timeout))
     }
 
     /// One control request/response exchange. A read timeout surfaces as

@@ -1,0 +1,512 @@
+//! The chaos plane: deterministic, seeded fault injection threaded
+//! under both wire protocols.
+//!
+//! A [`FaultPlan`] describes a schedule of faults — drop, delay,
+//! disconnect, truncate, duplicate, bit-flip — with independent rates
+//! per direction (read vs. write). Every endpoint that owns a TCP
+//! stream ([`crate::net::tcp::KvClient`], [`crate::net::control::
+//! CtrlClient`], [`crate::market::BrokerServer`], [`crate::net::tcp::
+//! ProducerStoreServer`]) is constructed over a [`FaultyStream`], a
+//! `Read + Write` wrapper around the raw `TcpStream`. With no plan
+//! installed the wrapper is a single branch around the raw socket call
+//! — no allocation, no copy, no extra syscall — so production paths are
+//! unchanged; with a plan, every I/O call consults a seeded RNG.
+//!
+//! ## Determinism contract
+//!
+//! The fault schedule observed by one connection is a pure function of
+//! `(plan.seed, connection index, I/O call sequence on that
+//! connection)`: each accepted/dialed connection derives an independent
+//! RNG stream via SplitMix64 over its index, and fault decisions are
+//! drawn in a fixed order per call. Concurrency can reorder *which*
+//! connection gets which index when peers race to dial, but a failing
+//! schedule replayed with the same seed exercises the same per-
+//! connection fault sequences — which is what makes a red chaos run
+//! reproducible from its printed seed (see `memtrade chaos --seed`).
+//!
+//! Plans are *armed* by default and can be [`FaultPlan::disarm`]ed at
+//! runtime: the switch is shared by every stream built from (a clone
+//! of) the plan, so a chaos scenario can stop injecting faults on live
+//! connections and then assert that the system reconverges.
+//!
+//! ## Byzantine producers
+//!
+//! [`ByzantineSpec`] is the data plane's application-level attacker: a
+//! producer store that serves *syntactically valid* but wrong GET
+//! responses — a corrupted value, a stale (replayed) value, or a
+//! truncated value — for a seeded fraction of hits. The paper's §6.1
+//! envelope must catch 100% of these as `BadHash`/`BadCiphertext`
+//! misses; `tests/chaos.rs` asserts exactly that.
+
+use crate::util::rng::{splitmix64_once, Rng};
+use std::io::{self, Read, Write};
+use std::net::{Shutdown, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Per-direction fault rates. All probabilities are per I/O call (not
+/// per byte); `Default` is all-zero (no faults).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct FaultSpec {
+    /// Silently discard the payload (write side only): the caller sees
+    /// success, the peer sees nothing — a lost frame.
+    pub drop_p: f64,
+    /// Sleep up to `delay_max_ms` before the call proceeds.
+    pub delay_p: f64,
+    pub delay_max_ms: u64,
+    /// Shut the socket down; every later call on either half errors.
+    pub disconnect_p: f64,
+    /// Lose the tail of the payload: a partial write the caller thinks
+    /// completed, or a read whose trailing bytes are discarded.
+    pub truncate_p: f64,
+    /// Write the payload twice (write side only).
+    pub duplicate_p: f64,
+    /// Flip one random bit of the payload.
+    pub bitflip_p: f64,
+}
+
+/// A seeded, per-direction fault schedule for one plane's connections.
+#[derive(Clone, Debug)]
+pub struct FaultPlan {
+    pub seed: u64,
+    /// Faults on the inbound direction (reads from the peer).
+    pub read: FaultSpec,
+    /// Faults on the outbound direction (writes to the peer).
+    pub write: FaultSpec,
+    /// Live kill switch, shared by every stream built from this plan
+    /// (clones share it too).
+    armed: Arc<AtomicBool>,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan {
+            seed: 0,
+            read: FaultSpec::default(),
+            write: FaultSpec::default(),
+            armed: Arc::new(AtomicBool::new(true)),
+        }
+    }
+}
+
+impl FaultPlan {
+    /// A plan with independent per-direction rates.
+    pub fn new(seed: u64, read: FaultSpec, write: FaultSpec) -> Self {
+        FaultPlan { seed, read, write, ..Default::default() }
+    }
+
+    /// Same fault rates in both directions.
+    pub fn symmetric(seed: u64, spec: FaultSpec) -> Self {
+        Self::new(seed, spec, spec)
+    }
+
+    /// Stop injecting faults on every stream built from this plan (or a
+    /// clone of it), including connections already established.
+    pub fn disarm(&self) {
+        self.armed.store(false, Ordering::Relaxed);
+    }
+
+    pub fn arm(&self) {
+        self.armed.store(true, Ordering::Relaxed);
+    }
+
+    pub fn is_armed(&self) -> bool {
+        self.armed.load(Ordering::Relaxed)
+    }
+
+    /// Derive the deterministic per-connection fault state for the
+    /// `conn`-th connection under this plan.
+    fn state_for(&self, conn: u64) -> Arc<Mutex<FaultState>> {
+        Arc::new(Mutex::new(FaultState {
+            rng: Rng::new(self.seed ^ splitmix64_once(conn)),
+            read: self.read,
+            write: self.write,
+            armed: self.armed.clone(),
+            dead: false,
+        }))
+    }
+}
+
+/// Shared mutable fault state of one connection (reader and writer
+/// halves of the same connection share it, so the combined fault
+/// sequence is deterministic for single-threaded request/response use).
+struct FaultState {
+    rng: Rng,
+    read: FaultSpec,
+    write: FaultSpec,
+    armed: Arc<AtomicBool>,
+    /// A disconnect fault fired: every later call errors.
+    dead: bool,
+}
+
+fn injected_disconnect() -> io::Error {
+    io::Error::new(io::ErrorKind::ConnectionReset, "injected disconnect (chaos plane)")
+}
+
+/// A `TcpStream` with an optional installed fault schedule. Without one
+/// (`state == None`) every call is a direct delegation to the socket.
+pub struct FaultyStream {
+    inner: TcpStream,
+    state: Option<Arc<Mutex<FaultState>>>,
+}
+
+impl FaultyStream {
+    /// A pass-through stream: byte-identical to the raw socket.
+    pub fn clean(inner: TcpStream) -> Self {
+        FaultyStream { inner, state: None }
+    }
+
+    /// Wrap `inner` under `plan` as that plan's `conn`-th connection
+    /// (`plan = None` is [`Self::clean`]).
+    pub fn new(inner: TcpStream, plan: Option<&FaultPlan>, conn: u64) -> Self {
+        FaultyStream { inner, state: plan.map(|p| p.state_for(conn)) }
+    }
+
+    /// Clone the underlying socket; both halves share one fault state,
+    /// so reads and writes draw from a single deterministic sequence.
+    pub fn try_clone(&self) -> io::Result<FaultyStream> {
+        Ok(FaultyStream { inner: self.inner.try_clone()?, state: self.state.clone() })
+    }
+
+    pub fn set_read_timeout(&self, t: Option<Duration>) -> io::Result<()> {
+        self.inner.set_read_timeout(t)
+    }
+
+    pub fn set_nodelay(&self, on: bool) -> io::Result<()> {
+        self.inner.set_nodelay(on)
+    }
+}
+
+fn flip_random_bit(buf: &mut [u8], rng: &mut Rng) {
+    if buf.is_empty() {
+        return;
+    }
+    let byte = rng.below(buf.len() as u64) as usize;
+    let bit = rng.below(8) as u32;
+    buf[byte] ^= 1u8 << bit;
+}
+
+impl Read for FaultyStream {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        let Some(state) = &self.state else {
+            return self.inner.read(buf);
+        };
+        let mut s = state.lock().unwrap();
+        if s.dead {
+            return Err(injected_disconnect());
+        }
+        if !s.armed.load(Ordering::Relaxed) {
+            return self.inner.read(buf);
+        }
+        // Decisions drawn in a fixed order per call (see module doc).
+        if s.rng.chance(s.read.disconnect_p) {
+            s.dead = true;
+            self.inner.shutdown(Shutdown::Both).ok();
+            return Err(injected_disconnect());
+        }
+        if s.rng.chance(s.read.delay_p) {
+            let ms = s.rng.below(s.read.delay_max_ms.max(1) + 1);
+            std::thread::sleep(Duration::from_millis(ms));
+        }
+        let n = self.inner.read(buf)?;
+        if n > 0 && s.rng.chance(s.read.bitflip_p) {
+            flip_random_bit(&mut buf[..n], &mut s.rng);
+        }
+        if n > 1 && s.rng.chance(s.read.truncate_p) {
+            // Discard the tail: those bytes were consumed from the
+            // socket and are gone — the peer and we now disagree about
+            // the stream position.
+            let keep = 1 + s.rng.below(n as u64 - 1) as usize;
+            return Ok(keep);
+        }
+        Ok(n)
+    }
+}
+
+impl Write for FaultyStream {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        let Some(state) = &self.state else {
+            return self.inner.write(buf);
+        };
+        let mut s = state.lock().unwrap();
+        if s.dead {
+            return Err(injected_disconnect());
+        }
+        if !s.armed.load(Ordering::Relaxed) {
+            return self.inner.write(buf);
+        }
+        if s.rng.chance(s.write.disconnect_p) {
+            s.dead = true;
+            self.inner.shutdown(Shutdown::Both).ok();
+            return Err(injected_disconnect());
+        }
+        if s.rng.chance(s.write.delay_p) {
+            let ms = s.rng.below(s.write.delay_max_ms.max(1) + 1);
+            std::thread::sleep(Duration::from_millis(ms));
+        }
+        if s.rng.chance(s.write.drop_p) {
+            // Vanished in flight; the caller believes it was sent.
+            return Ok(buf.len());
+        }
+        if !buf.is_empty() && s.rng.chance(s.write.bitflip_p) {
+            let mut copy = buf.to_vec();
+            flip_random_bit(&mut copy, &mut s.rng);
+            self.inner.write_all(&copy)?;
+            return Ok(buf.len());
+        }
+        if buf.len() > 1 && s.rng.chance(s.write.truncate_p) {
+            let keep = 1 + s.rng.below(buf.len() as u64 - 1) as usize;
+            self.inner.write_all(&buf[..keep])?;
+            // Report full success: the tail is silently lost.
+            return Ok(buf.len());
+        }
+        if !buf.is_empty() && s.rng.chance(s.write.duplicate_p) {
+            self.inner.write_all(buf)?;
+            self.inner.write_all(buf)?;
+            return Ok(buf.len());
+        }
+        self.inner.write(buf)
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        self.inner.flush()
+    }
+}
+
+/// A Byzantine producer store: tampers with a seeded fraction of GET
+/// hit responses (application-level, under any transport faults).
+#[derive(Clone, Debug)]
+pub struct ByzantineSpec {
+    pub seed: u64,
+    /// Fraction of GET hits answered with a tampered value.
+    pub tamper_p: f64,
+    armed: Arc<AtomicBool>,
+}
+
+impl Default for ByzantineSpec {
+    fn default() -> Self {
+        ByzantineSpec { seed: 0, tamper_p: 0.0, armed: Arc::new(AtomicBool::new(true)) }
+    }
+}
+
+impl ByzantineSpec {
+    pub fn new(seed: u64, tamper_p: f64) -> Self {
+        ByzantineSpec { seed, tamper_p, ..Default::default() }
+    }
+
+    /// Stop tampering on every connection built from this spec (or a
+    /// clone of it).
+    pub fn disarm(&self) {
+        self.armed.store(false, Ordering::Relaxed);
+    }
+
+    pub fn arm(&self) {
+        self.armed.store(true, Ordering::Relaxed);
+    }
+
+    /// Deterministic per-connection tamper state (same index contract
+    /// as [`FaultPlan`]).
+    pub fn state_for(&self, conn: u64) -> ByzantineState {
+        ByzantineState {
+            rng: Rng::new(self.seed ^ splitmix64_once(conn) ^ 0xB12A_2717),
+            tamper_p: self.tamper_p,
+            armed: self.armed.clone(),
+            last_clean: Vec::new(),
+        }
+    }
+}
+
+/// Encoded `Response::Value` layout this module rewrites: 1 tag byte +
+/// `u32 LE` value length + value bytes (see `crate::net::wire`). The
+/// round-trip test below pins the assumption.
+const VALUE_HDR: usize = 5;
+
+/// Per-connection Byzantine state: a seeded RNG plus the last clean
+/// value response served (the replay source).
+pub struct ByzantineState {
+    rng: Rng,
+    tamper_p: f64,
+    armed: Arc<AtomicBool>,
+    last_clean: Vec<u8>,
+}
+
+impl ByzantineState {
+    /// Maybe tamper with an encoded GET-hit (`Value`) response in
+    /// place; returns true if the response was tampered. Tampered
+    /// responses stay syntactically valid frames — they must survive
+    /// decoding and die at the consumer's integrity check, not at the
+    /// codec.
+    pub fn process_value_response(&mut self, out: &mut Vec<u8>) -> bool {
+        let clean = out.clone();
+        let mut tampered = false;
+        // Empty values have no bytes to corrupt detectably; skip them
+        // (sealed values are never empty: IV + padding ≥ 32 bytes).
+        if self.armed.load(Ordering::Relaxed)
+            && out.len() > VALUE_HDR
+            && self.rng.chance(self.tamper_p)
+        {
+            match self.rng.below(3) {
+                0 => self.corrupt(out),
+                1 => self.truncate(out),
+                _ => {
+                    // Replay the previous clean value — if there is one
+                    // and it actually differs (tampering must always be
+                    // detectable, never a silent no-op).
+                    if !self.last_clean.is_empty() && self.last_clean != clean {
+                        *out = self.last_clean.clone();
+                    } else {
+                        self.corrupt(out);
+                    }
+                }
+            }
+            tampered = true;
+        }
+        self.last_clean = clean;
+        tampered
+    }
+
+    fn corrupt(&mut self, out: &mut Vec<u8>) {
+        let idx = VALUE_HDR + self.rng.below((out.len() - VALUE_HDR) as u64) as usize;
+        let bit = self.rng.below(8) as u32;
+        out[idx] ^= 1u8 << bit;
+    }
+
+    fn truncate(&mut self, out: &mut Vec<u8>) {
+        let value_len = out.len() - VALUE_HDR;
+        let cut = 1 + self.rng.below(value_len as u64) as usize;
+        out.truncate(VALUE_HDR + (value_len - cut));
+        let new_len = (out.len() - VALUE_HDR) as u32;
+        out[1..VALUE_HDR].copy_from_slice(&new_len.to_le_bytes());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::wire::{encode_value_response, Response};
+
+    #[test]
+    fn clean_stream_is_pure_delegation() {
+        // A clean FaultyStream has no fault state at all — the no-plan
+        // path cannot consult an RNG or allocate.
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let t = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            let mut buf = [0u8; 5];
+            s.read_exact(&mut buf).unwrap();
+            s.write_all(&buf).unwrap();
+        });
+        let mut fs = FaultyStream::clean(TcpStream::connect(addr).unwrap());
+        assert!(fs.state.is_none());
+        fs.write_all(b"hello").unwrap();
+        let mut back = [0u8; 5];
+        fs.read_exact(&mut back).unwrap();
+        assert_eq!(&back, b"hello");
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn fault_schedule_is_deterministic_per_connection() {
+        let plan = FaultPlan::symmetric(
+            7,
+            FaultSpec { drop_p: 0.3, bitflip_p: 0.3, ..Default::default() },
+        );
+        // Same plan, same connection index → identical decision streams.
+        let a = plan.state_for(3);
+        let b = plan.state_for(3);
+        let mut a = a.lock().unwrap();
+        let mut b = b.lock().unwrap();
+        for _ in 0..64 {
+            assert_eq!(a.rng.next_u64(), b.rng.next_u64());
+        }
+        // Different connection index → an independent stream.
+        let c = plan.state_for(4);
+        let mut c = c.lock().unwrap();
+        let mut same = 0;
+        let mut a2 = plan.state_for(3);
+        let a2 = Arc::get_mut(&mut a2).unwrap().get_mut().unwrap();
+        for _ in 0..64 {
+            if a2.rng.next_u64() == c.rng.next_u64() {
+                same += 1;
+            }
+        }
+        assert!(same < 4, "streams not independent: {same}/64 collisions");
+    }
+
+    #[test]
+    fn disarm_stops_faults_on_live_connections() {
+        let spec = FaultSpec { drop_p: 1.0, ..Default::default() };
+        let plan = FaultPlan::symmetric(1, spec);
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let t = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            let mut buf = [0u8; 3];
+            // Only the post-disarm write ever arrives.
+            s.read_exact(&mut buf).unwrap();
+            buf
+        });
+        let mut fs = FaultyStream::new(TcpStream::connect(addr).unwrap(), Some(&plan), 0);
+        fs.write_all(b"xxx").unwrap(); // dropped (drop_p = 1)
+        plan.disarm();
+        fs.write_all(b"yyy").unwrap(); // delivered
+        assert_eq!(&t.join().unwrap(), b"yyy");
+    }
+
+    #[test]
+    fn injected_disconnect_kills_both_halves() {
+        let spec = FaultSpec { disconnect_p: 1.0, ..Default::default() };
+        let plan = FaultPlan::symmetric(2, spec);
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let _keep = listener; // hold the listener so connect succeeds
+        let mut fs = FaultyStream::new(TcpStream::connect(addr).unwrap(), Some(&plan), 0);
+        let mut half = fs.try_clone().unwrap();
+        assert!(fs.write_all(b"x").is_err());
+        // The shared state is dead: the cloned half errors too.
+        let mut buf = [0u8; 1];
+        assert!(half.read(&mut buf).is_err());
+    }
+
+    fn value_response(v: &[u8]) -> Vec<u8> {
+        let mut out = Vec::new();
+        encode_value_response(&mut out, v);
+        out
+    }
+
+    #[test]
+    fn byzantine_tampering_stays_decodable_and_always_differs() {
+        let spec = ByzantineSpec::new(9, 1.0);
+        let mut st = spec.state_for(0);
+        for i in 0..200u32 {
+            let clean = value_response(&[i as u8; 48]);
+            let mut out = clean.clone();
+            assert!(st.process_value_response(&mut out), "tamper_p=1 must fire");
+            assert_ne!(out, clean, "tampering was a silent no-op at i={i}");
+            // Still a valid wire frame — it must reach the envelope.
+            match Response::decode(&out) {
+                Ok(Response::Value(_)) => {}
+                other => panic!("tampered frame undecodable: {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn byzantine_disarm_and_empty_value_are_clean() {
+        let spec = ByzantineSpec::new(9, 1.0);
+        let mut st = spec.state_for(1);
+        // Empty value: nothing to corrupt detectably — passed through.
+        let clean = value_response(b"");
+        let mut out = clean.clone();
+        assert!(!st.process_value_response(&mut out));
+        assert_eq!(out, clean);
+        // Disarmed: passed through.
+        spec.disarm();
+        let clean = value_response(&[1, 2, 3, 4]);
+        let mut out = clean.clone();
+        assert!(!st.process_value_response(&mut out));
+        assert_eq!(out, clean);
+    }
+}

@@ -2,16 +2,20 @@
 //! binary codec), the marketplace *control-plane* protocol with its
 //! magic-bytes/version handshake, a network *model* for the
 //! discrete-event simulator (VPC-peering latency + NIC bandwidth, paper
-//! §3/§7), and a real TCP transport (std::net, threaded) used by the
+//! §3/§7), a real TCP transport (std::net, threaded) used by the
 //! runnable examples so the request path is exercised over actual
-//! sockets.
+//! sockets, and the chaos plane ([`faults`]): deterministic seeded
+//! fault injection threaded under both planes, plus the Byzantine
+//! producer mode the §6.1 envelope is tested against.
 
 pub mod control;
+pub mod faults;
 pub mod model;
 pub mod tcp;
 pub mod wire;
 
 pub use control::{CtrlClient, CtrlRequest, CtrlResponse, GrantInfo, RefuseCode};
+pub use faults::{ByzantineSpec, FaultPlan, FaultSpec, FaultyStream};
 pub use model::NetworkModel;
 pub use tcp::{KvClient, ProducerStoreServer};
 pub use wire::{Request, Response};

@@ -17,6 +17,7 @@
 
 use crate::kv::{KvStats, ShardedKvStore};
 use crate::net::control::{client_handshake, server_handshake_patient, DATA_MAGIC};
+use crate::net::faults::{ByzantineSpec, ByzantineState, FaultPlan, FaultyStream};
 use crate::net::wire::{
     encode_value_response, read_frame_into, read_frame_into_patient, write_frame, Request,
     RequestRef, Response,
@@ -24,7 +25,7 @@ use crate::net::wire::{
 use crate::util::token_bucket::AtomicTokenBucket;
 use std::io::{self, BufReader, BufWriter};
 use std::net::{TcpListener, TcpStream, ToSocketAddrs};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Instant;
@@ -54,6 +55,9 @@ pub struct ProducerStoreServer {
     stop: Arc<AtomicBool>,
     accept_handle: Option<JoinHandle<()>>,
     store: Arc<ShardedKvStore>,
+    /// Byzantine-mode responses served tampered (0 unless started via
+    /// [`Self::start_chaotic`] with a [`ByzantineSpec`]).
+    tampered: Arc<AtomicU64>,
 }
 
 impl ProducerStoreServer {
@@ -83,18 +87,41 @@ impl ProducerStoreServer {
         seed: u64,
         n_shards: usize,
     ) -> io::Result<Self> {
+        Self::start_chaotic(addr, max_bytes, rate_bps, seed, n_shards, None, None)
+    }
+
+    /// [`Self::start_sharded`] with the chaos plane installed: every
+    /// accepted connection is wrapped in a [`FaultyStream`] under
+    /// `faults`, and `byzantine` turns the store hostile — a seeded
+    /// fraction of GET hits is answered corrupted, stale, or truncated
+    /// (the §6.1 envelope must catch every one). With both `None` this
+    /// is byte-identical to [`Self::start_sharded`].
+    pub fn start_chaotic<A: ToSocketAddrs>(
+        addr: A,
+        max_bytes: usize,
+        rate_bps: Option<u64>,
+        seed: u64,
+        n_shards: usize,
+        faults: Option<FaultPlan>,
+        byzantine: Option<ByzantineSpec>,
+    ) -> io::Result<Self> {
         let listener = TcpListener::bind(addr)?;
         let local_addr = listener.local_addr()?;
         listener.set_nonblocking(true)?;
         let stop = Arc::new(AtomicBool::new(false));
         let store = Arc::new(ShardedKvStore::new(max_bytes, n_shards, seed));
         let bucket = rate_bps.map(|bps| Arc::new(AtomicTokenBucket::new(bps, bps / 4)));
+        let tampered = Arc::new(AtomicU64::new(0));
 
         let stop2 = stop.clone();
         let store2 = store.clone();
+        let tampered2 = tampered.clone();
         let start_instant = Instant::now();
         let accept_handle = std::thread::spawn(move || {
             let mut conn_handles: Vec<JoinHandle<()>> = Vec::new();
+            // Per-plan connection index: the fault/tamper schedule of
+            // connection k is a pure function of (seed, k).
+            let mut conn_idx: u64 = 0;
             while !stop2.load(Ordering::Relaxed) {
                 match listener.accept() {
                     Ok((stream, _)) => {
@@ -102,11 +129,23 @@ impl ProducerStoreServer {
                         // finished connection threads as we go.
                         conn_handles.retain(|h| !h.is_finished());
                         stream.set_nodelay(true).ok();
+                        let stream = FaultyStream::new(stream, faults.as_ref(), conn_idx);
+                        let byz = byzantine.as_ref().map(|b| b.state_for(conn_idx));
+                        conn_idx += 1;
                         let store = store2.clone();
                         let stop = stop2.clone();
                         let bucket = bucket.clone();
+                        let tampered = tampered2.clone();
                         conn_handles.push(std::thread::spawn(move || {
-                            let _ = serve_conn(stream, store, stop, bucket, start_instant);
+                            let _ = serve_conn(
+                                stream,
+                                store,
+                                stop,
+                                bucket,
+                                start_instant,
+                                byz,
+                                tampered,
+                            );
                         }));
                     }
                     Err(ref e) if e.kind() == io::ErrorKind::WouldBlock => {
@@ -120,7 +159,13 @@ impl ProducerStoreServer {
             }
         });
 
-        Ok(ProducerStoreServer { local_addr, stop, accept_handle: Some(accept_handle), store })
+        Ok(ProducerStoreServer {
+            local_addr,
+            stop,
+            accept_handle: Some(accept_handle),
+            store,
+            tampered,
+        })
     }
 
     pub fn addr(&self) -> std::net::SocketAddr {
@@ -135,6 +180,12 @@ impl ProducerStoreServer {
     /// Snapshot of store statistics, aggregated across shards.
     pub fn stats(&self) -> KvStats {
         self.store.stats()
+    }
+
+    /// Responses served tampered by the Byzantine mode so far (for
+    /// asserting the envelope caught every one of them).
+    pub fn byzantine_tampered(&self) -> u64 {
+        self.tampered.load(Ordering::Relaxed)
     }
 
     /// Harvester-initiated reclaim on a live store (proportional across
@@ -162,11 +213,13 @@ impl Drop for ProducerStoreServer {
 }
 
 fn serve_conn(
-    stream: TcpStream,
+    stream: FaultyStream,
     store: Arc<ShardedKvStore>,
     stop: Arc<AtomicBool>,
     bucket: Option<Arc<AtomicTokenBucket>>,
     start: Instant,
+    mut byz: Option<ByzantineState>,
+    tampered: Arc<AtomicU64>,
 ) -> io::Result<()> {
     stream.set_read_timeout(Some(std::time::Duration::from_millis(100)))?;
     let mut reader = BufReader::with_capacity(CONN_BUF_BYTES, stream.try_clone()?);
@@ -221,6 +274,12 @@ fn serve_conn(
                                 store.get_with(key, |v| encode_value_response(&mut out, v));
                             if hit.is_none() {
                                 Response::NotFound.encode_into(&mut out);
+                            } else if let Some(b) = byz.as_mut() {
+                                // Byzantine mode: maybe corrupt, replay,
+                                // or truncate this hit (chaos-only path).
+                                if b.process_value_response(&mut out) {
+                                    tampered.fetch_add(1, Ordering::Relaxed);
+                                }
                             }
                         }
                         RequestRef::Put { key, value } => {
@@ -248,34 +307,70 @@ fn serve_conn(
 /// halves plus reusable send/receive scratch buffers, so a steady-state
 /// call allocates only what the response forces (a `Value` payload).
 pub struct KvClient {
-    reader: BufReader<TcpStream>,
-    writer: BufWriter<TcpStream>,
+    reader: BufReader<FaultyStream>,
+    writer: BufWriter<FaultyStream>,
     send_buf: Vec<u8>,
     recv_buf: Vec<u8>,
 }
 
 impl KvClient {
     pub fn connect<A: ToSocketAddrs>(addr: A) -> io::Result<Self> {
-        Self::from_stream(TcpStream::connect(addr)?)
+        Self::from_stream(
+            FaultyStream::clean(TcpStream::connect(addr)?),
+            crate::net::control::HANDSHAKE_TIMEOUT,
+        )
     }
 
-    /// [`Self::connect`] with a bounded connection attempt — for
-    /// reconnect paths (e.g. the consumer pool) that must not stall.
+    /// [`Self::connect`] with the whole attempt bounded — dial *and*
+    /// handshake — for reconnect paths (e.g. the consumer pool) that
+    /// must not stall.
     pub fn connect_timeout(addr: &str, timeout: std::time::Duration) -> io::Result<Self> {
-        Self::from_stream(crate::net::control::connect_with_timeout(addr, timeout)?)
+        let stream = crate::net::control::connect_with_timeout(addr, timeout)?;
+        Self::from_stream(
+            FaultyStream::clean(stream),
+            timeout.min(crate::net::control::HANDSHAKE_TIMEOUT),
+        )
     }
 
-    fn from_stream(stream: TcpStream) -> io::Result<Self> {
+    /// [`Self::connect_timeout`] with a fault schedule installed: the
+    /// connection becomes `plan`'s `conn`-th deterministic stream.
+    pub fn connect_faulty(
+        addr: &str,
+        timeout: std::time::Duration,
+        plan: &FaultPlan,
+        conn: u64,
+    ) -> io::Result<Self> {
+        let stream = crate::net::control::connect_with_timeout(addr, timeout)?;
+        Self::from_stream(
+            FaultyStream::new(stream, Some(plan), conn),
+            timeout.min(crate::net::control::HANDSHAKE_TIMEOUT),
+        )
+    }
+
+    fn from_stream(
+        stream: FaultyStream,
+        handshake_timeout: std::time::Duration,
+    ) -> io::Result<Self> {
         stream.set_nodelay(true)?;
         // Bounded handshake: a silent or non-memtrade peer errors out
         // instead of hanging connect forever. Steady-state data calls
         // revert to blocking reads.
-        stream.set_read_timeout(Some(crate::net::control::HANDSHAKE_TIMEOUT))?;
+        stream.set_read_timeout(Some(handshake_timeout))?;
         let mut reader = BufReader::with_capacity(CONN_BUF_BYTES, stream.try_clone()?);
         let mut writer = BufWriter::with_capacity(CONN_BUF_BYTES, stream);
         client_handshake(&mut reader, &mut writer, DATA_MAGIC)?;
         reader.get_ref().set_read_timeout(None)?;
         Ok(KvClient { reader, writer, send_buf: Vec::new(), recv_buf: Vec::new() })
+    }
+
+    /// Bound how long any later call may wait for a response. A stalled
+    /// or wedged producer then surfaces as an error instead of blocking
+    /// the caller forever; after a timeout the connection is desynced
+    /// and must be dropped (the consumer pool kills the slot — chaos
+    /// flushed this out: a producer that stops answering mid-stream
+    /// used to wedge the consumer data path indefinitely).
+    pub fn set_call_timeout(&mut self, timeout: Option<std::time::Duration>) -> io::Result<()> {
+        self.reader.get_ref().set_read_timeout(timeout)
     }
 
     /// One request/response exchange from a borrowed request — the
@@ -386,6 +481,24 @@ mod tests {
         let mut client = KvClient::connect(server.addr()).unwrap();
         assert!(client.put(b"k", b"v").unwrap());
         assert_eq!(client.get(b"k").unwrap(), Some(b"v".to_vec()));
+        server.stop();
+    }
+
+    #[test]
+    fn byzantine_server_tampers_every_hit_but_stays_decodable() {
+        let byz = crate::net::faults::ByzantineSpec::new(5, 1.0);
+        let server =
+            ProducerStoreServer::start_chaotic("127.0.0.1:0", 1 << 20, None, 1, 2, None, Some(byz))
+                .unwrap();
+        let mut client = KvClient::connect(server.addr()).unwrap();
+        assert!(client.put(b"k", &[7u8; 64]).unwrap());
+        // A raw client happily accepts the tampered bytes — catching
+        // them is the consumer envelope's job (see tests/chaos.rs).
+        for _ in 0..10 {
+            let v = client.get(b"k").unwrap().expect("tampered hits still decode");
+            assert_ne!(v, vec![7u8; 64], "tampering must never be a no-op");
+        }
+        assert_eq!(server.byzantine_tampered(), 10);
         server.stop();
     }
 

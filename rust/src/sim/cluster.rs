@@ -223,7 +223,7 @@ impl ClusterSim {
                     workload: YcsbWorkload::paper_default(cfg.n_keys, cfg.value_size),
                     local: KvStore::new(local_bytes.max(1 << 20), cfg.seed ^ (0xC0 + i as u64)),
                     remote_fraction: cfg.remote_fraction,
-                    secure: SecureKv::new(
+                    secure: SecureKv::with_iv_seed(
                         cfg.mode.envelope_key(),
                         cfg.mode.integrity(),
                         1,
@@ -449,7 +449,7 @@ impl ClusterSim {
         // temporarily taking the SecureKv out of the consumer.
         let mut secure = std::mem::replace(
             &mut consumers[ci].secure,
-            SecureKv::new(None, false, 1, 0),
+            SecureKv::with_iv_seed(None, false, 1, 0),
         );
         let result = {
             let mut transport = |producer_index: u32, req: Request| {
@@ -472,7 +472,7 @@ impl ClusterSim {
         let consumers = &mut self.consumers;
         let mut secure = std::mem::replace(
             &mut consumers[ci].secure,
-            SecureKv::new(None, false, 1, 0),
+            SecureKv::with_iv_seed(None, false, 1, 0),
         );
         let ok = {
             let mut transport = |producer_index: u32, req: Request| {

@@ -2,6 +2,32 @@
 //! samplers the evaluation needs: uniform, normal, exponential, and the
 //! Zipfian generator YCSB uses (paper §7 runs YCSB with Zipf constant 0.7).
 
+/// Best-effort OS entropy for seeding *unpredictable* streams (CBC IVs
+/// — see `crate::crypto::secure`). Reads `/dev/urandom` where it
+/// exists; the fallback mixes wall-clock nanoseconds, the process id,
+/// and an ASLR-randomized address, which is far weaker — acceptable
+/// only because every in-tree platform has `/dev/urandom`.
+pub fn os_seed() -> u64 {
+    #[cfg(unix)]
+    {
+        use std::io::Read;
+        if let Ok(mut f) = std::fs::File::open("/dev/urandom") {
+            let mut b = [0u8; 8];
+            if f.read_exact(&mut b).is_ok() {
+                return u64::from_le_bytes(b);
+            }
+        }
+    }
+    let t = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_nanos() as u64)
+        .unwrap_or(0);
+    let stack_probe = 0u8;
+    let aslr = std::ptr::addr_of!(stack_probe) as usize as u64;
+    let mut z = t ^ aslr.wrapping_mul(0x9E3779B97F4A7C15) ^ ((std::process::id() as u64) << 32);
+    splitmix64(&mut z)
+}
+
 /// xoshiro256** — fast, high-quality, reproducible across platforms.
 #[derive(Clone, Debug)]
 pub struct Rng {
@@ -14,6 +40,14 @@ fn splitmix64(state: &mut u64) -> u64 {
     z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
     z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
     z ^ (z >> 31)
+}
+
+/// One SplitMix64 mixing step by value — for deriving independent seed
+/// streams from an index (e.g. per-connection fault schedules in
+/// [`crate::net::faults`]).
+pub(crate) fn splitmix64_once(seed: u64) -> u64 {
+    let mut s = seed;
+    splitmix64(&mut s)
 }
 
 impl Rng {

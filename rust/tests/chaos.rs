@@ -1,0 +1,287 @@
+//! Chaos soak suite: ≥ 20 seeded fault schedules across both
+//! marketplace planes, asserting the paper's resilience invariants —
+//! no panic, zero integrity escapes, no lost acknowledged writes on
+//! surviving producers, and reconvergence to target capacity once
+//! faults stop.
+//!
+//! Every schedule prints its seed and a one-line reproduction command
+//! before it runs, so a red CI job is replayable locally:
+//! `cargo run --release -- chaos --seed <seed> --mix <mix>`.
+
+use memtrade::consumer::client::SecureKv;
+use memtrade::market::chaos::{run_chaos, ChaosConfig, ChaosMix, ChaosOutcome};
+use memtrade::net::faults::{ByzantineSpec, FaultPlan, FaultSpec};
+use memtrade::net::tcp::{KvClient, ProducerStoreServer};
+use memtrade::net::wire::{Request, Response};
+use memtrade::util::rng::Rng;
+use std::time::Duration;
+
+fn assert_invariants(o: &ChaosOutcome) {
+    println!("chaos outcome: {}", o.report());
+    let violations = o.invariant_violations();
+    assert!(
+        violations.is_empty(),
+        "invariants violated for seed {} — reproduce with `memtrade chaos --seed {} --mix \
+         <mix>`:\n  schedule: {}\n  {}",
+        o.seed,
+        o.seed,
+        o.schedule,
+        violations.join("\n  ")
+    );
+}
+
+fn run_marketplace_schedule(seed: u64, mix: ChaosMix) -> ChaosOutcome {
+    println!(
+        "chaos schedule: marketplace seed={seed} mix={} (reproduce: memtrade chaos --seed \
+         {seed} --mix {})",
+        mix.label(),
+        mix.label()
+    );
+    run_chaos(&ChaosConfig { seed, mix, ..Default::default() })
+}
+
+// --- Full-topology schedules (broker + 2 agents + pool over TCP). ---
+
+#[test]
+fn chaos_marketplace_control_plane_faults() {
+    for seed in [101, 102] {
+        let o = run_marketplace_schedule(seed, ChaosMix::from_name("control").unwrap());
+        assert_invariants(&o);
+    }
+}
+
+#[test]
+fn chaos_marketplace_data_plane_faults() {
+    for seed in [201, 202] {
+        let o = run_marketplace_schedule(seed, ChaosMix::from_name("data").unwrap());
+        assert_invariants(&o);
+        assert!(o.ops > 0, "no traffic survived the data faults (seed {seed})");
+    }
+}
+
+#[test]
+fn chaos_marketplace_byzantine_producer() {
+    let o = run_marketplace_schedule(301, ChaosMix::from_name("byzantine").unwrap());
+    assert_invariants(&o);
+    assert!(o.tampered > 0, "byzantine mode never fired — schedule too short");
+    assert!(
+        o.integrity_failures > 0,
+        "tampered responses ({}) never reached the envelope",
+        o.tampered
+    );
+}
+
+#[test]
+fn chaos_marketplace_mid_run_kill() {
+    for seed in [401, 402] {
+        let o = run_marketplace_schedule(seed, ChaosMix::from_name("data+kill").unwrap());
+        assert_invariants(&o);
+    }
+}
+
+#[test]
+fn chaos_marketplace_renew_vs_revoke_race() {
+    for seed in [501, 502] {
+        let o = run_marketplace_schedule(seed, ChaosMix::from_name("control+race").unwrap());
+        assert_invariants(&o);
+    }
+}
+
+#[test]
+fn chaos_marketplace_standard_mix() {
+    // Everything at once: control + data faults, Byzantine producer,
+    // mid-run kill, revocation race.
+    let o = run_marketplace_schedule(601, ChaosMix::standard());
+    assert_invariants(&o);
+}
+
+// --- Light data-plane schedules: one faulty client/server pair. -----
+
+/// Derive a data-plane fault spec from a seed (wider rates than the
+/// marketplace runner — here nothing needs to *recover*, only to never
+/// panic and never escape the envelope).
+fn light_spec(rng: &mut Rng) -> FaultSpec {
+    FaultSpec {
+        drop_p: rng.uniform(0.0, 0.08),
+        delay_p: rng.uniform(0.0, 0.05),
+        delay_max_ms: 1 + rng.below(5),
+        disconnect_p: rng.uniform(0.0, 0.03),
+        truncate_p: rng.uniform(0.0, 0.05),
+        duplicate_p: rng.uniform(0.0, 0.06),
+        bitflip_p: rng.uniform(0.0, 0.06),
+    }
+}
+
+/// One seeded schedule against a single chaotic producer store: drive
+/// secure traffic through reconnecting faulty clients; assert zero
+/// escapes and that the pair is fully usable once the plan disarms.
+fn run_light_schedule(seed: u64) {
+    println!("chaos schedule: data-plane pair seed={seed}");
+    let mut rng = Rng::new(seed ^ 0x11);
+    let server_plan = FaultPlan::new(seed ^ 0x51, light_spec(&mut rng), light_spec(&mut rng));
+    let client_plan = FaultPlan::new(seed ^ 0xC1, light_spec(&mut rng), light_spec(&mut rng));
+    let server = ProducerStoreServer::start_chaotic(
+        "127.0.0.1:0",
+        8 << 20,
+        None,
+        seed,
+        2,
+        Some(server_plan.clone()),
+        None,
+    )
+    .unwrap();
+    let addr = server.addr().to_string();
+
+    let mut secure = SecureKv::with_iv_seed(Some([0xAA; 16]), true, 1, seed);
+    let mut client: Option<KvClient> = None;
+    let mut conn_seq = 0u64;
+    let value = |k: u64| -> Vec<u8> { vec![(seed ^ k) as u8; 64 + (k as usize % 64)] };
+    let mut escapes = 0u64;
+    for op in 0..250u64 {
+        // Reconnect through the faulty dialer when the last connection
+        // died; a refused dial is just a miss for this op.
+        if client.is_none() {
+            conn_seq += 1;
+            client = KvClient::connect_faulty(
+                &addr,
+                Duration::from_millis(500),
+                &client_plan,
+                conn_seq,
+            )
+            .ok()
+            .map(|mut c| {
+                let _ = c.set_call_timeout(Some(Duration::from_millis(100)));
+                c
+            });
+        }
+        let mut dead = false;
+        {
+            let mut transport = |_p: u32, req: Request| -> Response {
+                match client.as_mut() {
+                    Some(c) => c.call(&req).unwrap_or_else(|_| {
+                        dead = true;
+                        Response::Error("io".into())
+                    }),
+                    None => Response::Error("not connected".into()),
+                }
+            };
+            let k = op % 40;
+            let key = format!("k{k}").into_bytes();
+            if op % 3 == 0 {
+                let _ = secure.put(&mut transport, &key, &value(k));
+            } else if let Some(v) = secure.get(&mut transport, &key) {
+                if v != value(k) {
+                    escapes += 1;
+                }
+            }
+        }
+        if dead {
+            client = None;
+        }
+    }
+    assert_eq!(escapes, 0, "integrity escape under data faults (seed {seed})");
+
+    // Disarm both sides: a fresh clean connection must round-trip,
+    // proving the store itself survived the storm undamaged.
+    server_plan.disarm();
+    client_plan.disarm();
+    let mut clean = KvClient::connect(server.addr()).unwrap();
+    assert!(clean.put(b"post-chaos", b"alive").unwrap());
+    assert_eq!(clean.get(b"post-chaos").unwrap(), Some(b"alive".to_vec()));
+    server.stop();
+}
+
+#[test]
+fn chaos_data_plane_faulty_pairs() {
+    // Twelve independent seeded schedules (cheap: one server + one
+    // reconnecting client each).
+    for seed in [11, 12, 13, 14, 15, 16, 17, 18, 19, 20, 21, 22] {
+        run_light_schedule(seed);
+    }
+}
+
+// --- Byzantine producer: the envelope must catch 100%. --------------
+
+#[test]
+fn chaos_byzantine_producer_caught_at_full_tamper_rate() {
+    for seed in [71, 72] {
+        println!("chaos schedule: byzantine tamper_p=1.0 seed={seed}");
+        let server = ProducerStoreServer::start_chaotic(
+            "127.0.0.1:0",
+            8 << 20,
+            None,
+            seed,
+            2,
+            None,
+            Some(ByzantineSpec::new(seed, 1.0)),
+        )
+        .unwrap();
+        let mut client = KvClient::connect(server.addr()).unwrap();
+        let mut secure = SecureKv::with_iv_seed(Some([0x77; 16]), true, 1, seed);
+        let mut transport = |_p: u32, req: Request| -> Response {
+            client.call(&req).unwrap_or(Response::Error("io".into()))
+        };
+        const N: u64 = 120;
+        for i in 0..N {
+            let key = format!("k{i}").into_bytes();
+            assert!(secure.put(&mut transport, &key, &[i as u8; 96]));
+        }
+        // Every single GET is tampered with; every single one must be
+        // rejected by the envelope as a miss — zero escapes.
+        for i in 0..N {
+            let key = format!("k{i}").into_bytes();
+            assert_eq!(
+                secure.get(&mut transport, &key),
+                None,
+                "tampered response escaped the envelope (seed {seed}, key {i})"
+            );
+        }
+        assert_eq!(secure.stats.integrity_failures, N, "seed {seed}");
+        assert_eq!(secure.stats.hits, 0, "seed {seed}");
+        assert_eq!(server.byzantine_tampered(), N, "seed {seed}");
+        server.stop();
+    }
+}
+
+// --- Partial tamper rate: hits that verify are the right bytes. ------
+
+#[test]
+fn chaos_byzantine_partial_rate_verified_hits_are_correct() {
+    let seed = 81;
+    println!("chaos schedule: byzantine tamper_p=0.4 seed={seed}");
+    let server = ProducerStoreServer::start_chaotic(
+        "127.0.0.1:0",
+        8 << 20,
+        None,
+        seed,
+        2,
+        None,
+        Some(ByzantineSpec::new(seed, 0.4)),
+    )
+    .unwrap();
+    let mut client = KvClient::connect(server.addr()).unwrap();
+    let mut secure = SecureKv::with_iv_seed(Some([0x88; 16]), true, 1, seed);
+    let mut transport = |_p: u32, req: Request| -> Response {
+        client.call(&req).unwrap_or(Response::Error("io".into()))
+    };
+    for i in 0..200u64 {
+        let key = format!("k{i}").into_bytes();
+        assert!(secure.put(&mut transport, &key, &[i as u8; 96]));
+    }
+    let mut hits = 0u64;
+    for i in 0..200u64 {
+        let key = format!("k{i}").into_bytes();
+        if let Some(v) = secure.get(&mut transport, &key) {
+            assert_eq!(v, vec![i as u8; 96], "escape at key {i}");
+            hits += 1;
+        }
+    }
+    assert!(hits > 0, "nothing survived a 40% tamper rate");
+    assert!(secure.stats.integrity_failures > 0, "tampering never fired");
+    assert_eq!(
+        secure.stats.integrity_failures,
+        server.byzantine_tampered(),
+        "every tampered response must be caught, none must escape"
+    );
+    server.stop();
+}

@@ -72,7 +72,7 @@ fn full_stack_lease_and_serve() {
     assert!(!leases.is_empty());
     assert!(producer.manager.grant_lease(leases[0].clone(), 1_000_000_000));
 
-    let mut secure = SecureKv::new(Some([1u8; 16]), true, 1, 5);
+    let mut secure = SecureKv::with_iv_seed(Some([1u8; 16]), true, 1, 5);
     for i in 0..500u32 {
         let mut t = |_p: u32, req: Request| -> Response {
             producer.manager.handle(ConsumerId(10), &req, now)
@@ -120,7 +120,7 @@ fn reclaim_under_pressure_evicts_consumer_data_not_producer_perf() {
         price_per_slab_hour: Money::from_dollars(1e-5),
     };
     assert!(producer.manager.grant_lease(lease, 1_000_000_000));
-    let mut secure = SecureKv::new(Some([2u8; 16]), true, 1, 6);
+    let mut secure = SecureKv::with_iv_seed(Some([2u8; 16]), true, 1, 6);
     for i in 0..2000u32 {
         let mut t = |_p: u32, req: Request| -> Response {
             producer.manager.handle(ConsumerId(10), &req, now)
@@ -156,7 +156,7 @@ fn reclaim_under_pressure_evicts_consumer_data_not_producer_perf() {
 fn tcp_secure_path_with_rate_limit() {
     let server = ProducerStoreServer::start("127.0.0.1:0", 64 << 20, None, 5).unwrap();
     let mut client = KvClient::connect(server.addr()).unwrap();
-    let mut secure = SecureKv::new(Some([3u8; 16]), true, 1, 7);
+    let mut secure = SecureKv::with_iv_seed(Some([3u8; 16]), true, 1, 7);
     let mut t = |_p: u32, req: Request| -> Response {
         client.call(&req).unwrap_or(Response::Error("io".into()))
     };

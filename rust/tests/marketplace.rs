@@ -5,15 +5,22 @@
 //! survivor), lease expiry provably shrinking the producer store, and
 //! the cross-plane handshake refusals.
 
-use memtrade::consumer::client::SecureKv;
+use memtrade::consumer::client::{KvTransport, SecureKv, DEAD_ROUTE};
 use memtrade::core::config::BrokerConfig;
 use memtrade::core::SimTime;
 use memtrade::market::{
     BrokerServer, BrokerServerConfig, ProducerAgent, ProducerAgentConfig, RemotePool,
     RemotePoolConfig,
 };
-use memtrade::net::control::{CtrlClient, CtrlRequest, CtrlResponse};
+use memtrade::net::control::{
+    server_handshake_patient, CtrlClient, CtrlRequest, CtrlResponse, CONTROL_MAGIC, DATA_MAGIC,
+};
 use memtrade::net::tcp::{KvClient, ProducerStoreServer};
+use memtrade::net::wire::{read_frame_into_patient, write_frame, Request, Response};
+use std::io::{BufReader, BufWriter};
+use std::net::TcpListener;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 const SLAB: u64 = 1 << 20; // 1 MB slabs: cheap grants, fast tests
@@ -49,6 +56,7 @@ fn start_agent(broker: &BrokerServer, id: u64, capacity: u64) -> ProducerAgent {
         shards: 2,
         rate_bps: None,
         seed: id,
+        ..Default::default()
     })
     .expect("agent start")
 }
@@ -81,6 +89,7 @@ fn marketplace_survives_producer_failure() {
         lease_ttl: Duration::from_millis(900),
         renew_margin: Duration::from_millis(400),
         maintain_every: Duration::from_millis(20),
+        ..Default::default()
     })
     .unwrap();
     assert!(
@@ -107,7 +116,7 @@ fn marketplace_survives_producer_failure() {
     }));
 
     // Sustained traffic: store a working set, then read it back.
-    let mut secure = SecureKv::new(Some([7u8; 16]), true, 1, 3);
+    let mut secure = SecureKv::with_iv_seed(Some([7u8; 16]), true, 1, 3);
     let n_keys = 1200u32;
     let value = vec![0xAB_u8; 256];
     let mut stored = Vec::new();
@@ -267,6 +276,220 @@ fn lease_renewal_sustains_and_expiry_shrinks_store() {
 
     agent.stop();
     broker.stop();
+}
+
+#[test]
+fn zero_live_slots_put_get_delete_are_recorded_misses() {
+    // Regression (flushed out by the chaos plane — the standard mix,
+    // e.g. `memtrade chaos --seed 601 --mix standard`, drives the pool
+    // through all-slots-dead windows): `route_put` used to return the
+    // caller's raw round-robin hint when no slots were live. That hint
+    // is an index in *SecureKv's* producer table, not the pool's slot
+    // table — so the PUT could land on a dead, reused, or out-of-range
+    // slot index. It must instead take the deterministic recorded-miss
+    // path (DEAD_ROUTE).
+    let broker = BrokerServer::start("127.0.0.1:0", broker_cfg(300), server_cfg()).unwrap();
+    // No producers registered: the pool connects but holds nothing.
+    let mut pool = RemotePool::connect(RemotePoolConfig {
+        consumer: 9,
+        broker: broker.addr().to_string(),
+        target_slabs: 4,
+        ..Default::default()
+    })
+    .unwrap();
+    assert_eq!(pool.live_slots(), 0);
+    assert_eq!(pool.route_put(b"any-key", 7), DEAD_ROUTE);
+
+    // The full secure path: every operation is a clean miss, no panic,
+    // no connection attempt to a phantom producer.
+    let mut secure = SecureKv::with_iv_seed(Some([1u8; 16]), true, 1, 2);
+    let t0 = Instant::now();
+    assert!(!secure.put(&mut pool, b"k", b"v"));
+    assert_eq!(secure.get(&mut pool, b"k"), None);
+    assert!(!secure.delete(&mut pool, b"k"));
+    assert!(t0.elapsed() < Duration::from_secs(5));
+    assert!(pool.stats.dead_calls >= 1, "PUT did not take the recorded-miss path");
+    assert_eq!(pool.stats.io_errors, 0);
+
+    // The transport-level contract for dead-routed calls of each verb.
+    assert_eq!(pool.call(DEAD_ROUTE, Request::Get { key: b"x".to_vec() }), Response::NotFound);
+    assert_eq!(
+        pool.call(DEAD_ROUTE, Request::Put { key: b"x".to_vec(), value: b"y".to_vec() }),
+        Response::Rejected
+    );
+    assert_eq!(
+        pool.call(DEAD_ROUTE, Request::Delete { key: b"x".to_vec() }),
+        Response::Deleted(false)
+    );
+    broker.stop();
+}
+
+#[test]
+fn stalled_producer_surfaces_as_bounded_miss_not_a_wedge() {
+    // Regression (flushed out by the chaos plane — delay/drop schedules
+    // like `memtrade chaos --seed 201 --mix data` stall responses
+    // mid-stream): the pool's data clients used to read with no
+    // timeout, so a producer that accepted a request and then went
+    // silent wedged the consumer data path forever. The pool now bounds
+    // every data call (`data_call_timeout`) and turns the stall into a
+    // dead slot, i.e. a cache miss.
+    let broker = BrokerServer::start(
+        "127.0.0.1:0",
+        broker_cfg(300),
+        BrokerServerConfig {
+            tick: Duration::from_millis(20),
+            // The silent producer sends no heartbeats; keep it "alive"
+            // broker-side for the whole test.
+            producer_timeout: Duration::from_secs(30),
+            forecast_min_samples: usize::MAX,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+
+    // A fake producer data plane: completes the handshake, reads
+    // request frames, never answers.
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let silent_addr = listener.local_addr().unwrap();
+    listener.set_nonblocking(true).unwrap();
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = stop.clone();
+    let silent = std::thread::spawn(move || {
+        let mut conns = Vec::new();
+        while !stop2.load(Ordering::Relaxed) {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    let stop = stop2.clone();
+                    conns.push(std::thread::spawn(move || {
+                        stream.set_read_timeout(Some(Duration::from_millis(50))).unwrap();
+                        let mut reader = BufReader::new(stream.try_clone().unwrap());
+                        let mut writer = BufWriter::new(stream);
+                        let keep = || !stop.load(Ordering::Relaxed);
+                        let shook =
+                            server_handshake_patient(&mut reader, &mut writer, DATA_MAGIC, keep);
+                        if !matches!(shook, Ok(true)) {
+                            return;
+                        }
+                        // Swallow requests; answer nothing, ever.
+                        let mut frame = Vec::new();
+                        loop {
+                            match read_frame_into_patient(&mut reader, &mut frame, keep) {
+                                Ok(true) => {}
+                                _ => return,
+                            }
+                        }
+                    }));
+                }
+                Err(_) => std::thread::sleep(Duration::from_millis(2)),
+            }
+        }
+        for c in conns {
+            let _ = c.join();
+        }
+    });
+
+    // Register the silent endpoint as a producer so the broker grants
+    // leases on it.
+    let mut ctrl = CtrlClient::connect(broker.addr()).unwrap();
+    let resp = ctrl
+        .call(&CtrlRequest::Register {
+            producer: 1,
+            capacity_gb: 0.25,
+            endpoint: silent_addr.to_string(),
+            free_bytes: 8 * SLAB,
+        })
+        .unwrap();
+    assert!(matches!(resp, CtrlResponse::Registered { .. }), "{resp:?}");
+
+    let mut pool = RemotePool::connect(RemotePoolConfig {
+        consumer: 9,
+        broker: broker.addr().to_string(),
+        target_slabs: 4,
+        lease_ttl: Duration::from_secs(10),
+        renew_margin: Duration::from_secs(2),
+        maintain_every: Duration::from_millis(50),
+        data_call_timeout: Duration::from_millis(300),
+        ..Default::default()
+    })
+    .unwrap();
+    assert!(
+        wait_for(Duration::from_secs(3), || {
+            pool.maintain();
+            pool.live_slots() > 0
+        }),
+        "pool never mounted the silent producer"
+    );
+
+    let mut secure = SecureKv::with_iv_seed(Some([9u8; 16]), true, 1, 1);
+    let t0 = Instant::now();
+    assert!(
+        !secure.put(&mut pool, b"k", b"v"),
+        "a write into a silent producer must fail as a miss"
+    );
+    assert!(
+        t0.elapsed() < Duration::from_secs(5),
+        "data path wedged on a stalled producer for {:?}",
+        t0.elapsed()
+    );
+    assert!(pool.stats.io_errors >= 1, "the stall was not surfaced as an I/O loss");
+    assert_eq!(secure.stats.integrity_failures, 0);
+
+    stop.store(true, Ordering::Relaxed);
+    drop(pool);
+    let _ = silent.join();
+    broker.stop();
+}
+
+#[test]
+fn mismatched_control_response_drops_the_connection() {
+    // Regression (flushed out by the chaos plane — `duplicate` faults,
+    // e.g. `memtrade chaos --seed 601 --mix standard`): a duplicated
+    // control frame shifts every later response by one, so a pool that
+    // *interprets* mismatched responses misreads renews as grants (and
+    // vice versa) forever. A response that does not match the request
+    // must be treated as a desynced stream: drop the connection and
+    // reconnect fresh.
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = stop.clone();
+    let fake_broker = std::thread::spawn(move || {
+        let Ok((stream, _)) = listener.accept() else { return };
+        stream.set_read_timeout(Some(Duration::from_millis(50))).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut writer = BufWriter::new(stream);
+        let keep = || !stop2.load(Ordering::Relaxed);
+        let shook = server_handshake_patient(&mut reader, &mut writer, CONTROL_MAGIC, keep);
+        if !matches!(shook, Ok(true)) {
+            return;
+        }
+        let mut frame = Vec::new();
+        while matches!(read_frame_into_patient(&mut reader, &mut frame, keep), Ok(true)) {
+            // Always the wrong answer: a Renewed ack nobody asked for.
+            let resp = CtrlResponse::Renewed { lease: 0, ttl_us: 1 }.encode();
+            if write_frame(&mut writer, &resp).is_err() {
+                return;
+            }
+        }
+    });
+
+    let mut pool = RemotePool::connect(RemotePoolConfig {
+        consumer: 9,
+        broker: addr.to_string(),
+        target_slabs: 4,
+        ..Default::default()
+    })
+    .unwrap();
+    // The initial refill asked for slabs and was answered with a renew
+    // ack: the pool must flag the connection, not invent capacity.
+    assert!(
+        pool.stats.control_errors >= 1,
+        "mismatched control response was not treated as a desynced stream"
+    );
+    assert_eq!(pool.held_slabs(), 0);
+    stop.store(true, Ordering::Relaxed);
+    drop(pool);
+    let _ = fake_broker.join();
 }
 
 #[test]
