@@ -17,7 +17,7 @@ use memtrade::market::{
 use memtrade::net::tcp::{KvClient, ProducerStoreServer};
 use memtrade::net::wire::{Request, Response};
 use memtrade::producer::Manager;
-use memtrade::util::bench::{bench, header};
+use memtrade::util::bench::{bench, header, run_for as bench_run_for, smoke};
 use memtrade::util::rng::Rng;
 use memtrade::util::stats::LatencyRecorder;
 use memtrade::workload::ycsb::YcsbWorkload;
@@ -99,7 +99,7 @@ fn marketplace_bench() -> String {
     let mut rng = Rng::new(17);
     let mut get_rec = LatencyRecorder::new();
     let mut put_rec = LatencyRecorder::new();
-    let run_for = Duration::from_millis(1200);
+    let run_for = bench_run_for(1200);
     let t0 = Instant::now();
     let mut ops = 0u64;
     while t0.elapsed() < run_for {
@@ -174,7 +174,17 @@ fn marketplace_bench() -> String {
 /// time back to target capacity after the faults disarm. Fixed seed so
 /// the trajectory is comparable across PRs.
 fn chaos_bench() -> String {
-    let base = ChaosConfig { seed: 42, mix: ChaosMix::clean(), ..Default::default() };
+    let base = if smoke() {
+        ChaosConfig {
+            seed: 42,
+            mix: ChaosMix::clean(),
+            keys: 80,
+            fault_ops: 200,
+            ..Default::default()
+        }
+    } else {
+        ChaosConfig { seed: 42, mix: ChaosMix::clean(), ..Default::default() }
+    };
     let clean = run_chaos(&base);
     let faulty = run_chaos(&ChaosConfig { mix: ChaosMix::standard(), ..base });
     for o in [&clean, &faulty] {
@@ -209,6 +219,92 @@ fn chaos_bench() -> String {
         faulty.recovery_ms,
         faulty.integrity_failures,
         faulty.tampered,
+    )
+}
+
+/// The data-plane headline this PR's CI gates on: single-op GETs vs
+/// batched multi-gets vs pipelined GETs against one TCP producer store
+/// on localhost, same connection, same topology. Emits the `batch` JSON
+/// section; CI fails if `batch_speedup` (multi-get, 32 ops/frame —
+/// well past the gate's "window ≥ 8") drops below 1.5x single-op.
+fn batch_bench() -> String {
+    const KEYS: u64 = 8_192;
+    const BATCH: usize = 32;
+    const WINDOW: usize = 8;
+    let server =
+        ProducerStoreServer::start_sharded("127.0.0.1:0", 1 << 30, None, 31, 8).unwrap();
+    let mut client = KvClient::connect(server.addr()).unwrap();
+    let value = vec![0xAB_u8; 512];
+    {
+        // Preload through the batch path itself (also exercises it).
+        let keys: Vec<Vec<u8>> = (0..KEYS).map(|i| format!("user{i}").into_bytes()).collect();
+        for chunk in keys.chunks(256) {
+            let pairs: Vec<(&[u8], &[u8])> =
+                chunk.iter().map(|k| (k.as_slice(), value.as_slice())).collect();
+            assert!(client.multi_put(&pairs).unwrap().iter().all(|&s| s));
+        }
+    }
+    let run = bench_run_for(1000);
+
+    // Single-op GETs: one round trip per key (the pre-batching path).
+    let mut rng = Rng::new(71);
+    let t0 = Instant::now();
+    let mut single_ops = 0u64;
+    while t0.elapsed() < run {
+        let key = format!("user{}", rng.below(KEYS));
+        assert!(client.get(key.as_bytes()).unwrap().is_some());
+        single_ops += 1;
+    }
+    let single = single_ops as f64 / t0.elapsed().as_secs_f64();
+
+    // Batched multi-gets: BATCH ops per frame, one round trip per frame.
+    let t0 = Instant::now();
+    let mut batch_ops = 0u64;
+    while t0.elapsed() < run {
+        let keys: Vec<Vec<u8>> =
+            (0..BATCH).map(|_| format!("user{}", rng.below(KEYS)).into_bytes()).collect();
+        let key_refs: Vec<&[u8]> = keys.iter().map(Vec::as_slice).collect();
+        let got = client.multi_get(&key_refs).unwrap();
+        assert!(got.iter().all(Option::is_some));
+        batch_ops += BATCH as u64;
+    }
+    let batched = batch_ops as f64 / t0.elapsed().as_secs_f64();
+
+    // Pipelined single-op GETs: WINDOW requests in flight.
+    let t0 = Instant::now();
+    let mut pipe_ops = 0u64;
+    while t0.elapsed() < run {
+        let reqs: Vec<Request> = (0..BATCH)
+            .map(|_| Request::Get { key: format!("user{}", rng.below(KEYS)).into_bytes() })
+            .collect();
+        let resps = client.call_many(&reqs, WINDOW).unwrap();
+        assert!(resps.iter().all(|r| matches!(r, Response::Value(_))));
+        pipe_ops += BATCH as u64;
+    }
+    let pipelined = pipe_ops as f64 / t0.elapsed().as_secs_f64();
+    server.stop();
+
+    let batch_speedup = batched / single;
+    let pipeline_speedup = pipelined / single;
+    println!("{:<48} {:>14.0} ops/s", "batch/single-op GET (baseline)", single);
+    println!(
+        "{:<48} {:>14.0} ops/s ({:.2}x)",
+        format!("batch/multi-get x{BATCH}"),
+        batched,
+        batch_speedup
+    );
+    println!(
+        "{:<48} {:>14.0} ops/s ({:.2}x)",
+        format!("batch/pipelined GET w={WINDOW}"),
+        pipelined,
+        pipeline_speedup
+    );
+    format!(
+        "  \"batch\": {{\n    \"single_get_ops_per_sec\": {single:.0},\n    \
+         \"multi_get_ops_per_sec\": {batched:.0},\n    \"batch_size\": {BATCH},\n    \
+         \"pipelined_get_ops_per_sec\": {pipelined:.0},\n    \"window\": {WINDOW},\n    \
+         \"batch_speedup\": {batch_speedup:.3},\n    \
+         \"pipeline_speedup\": {pipeline_speedup:.3}\n  }}"
     )
 }
 
@@ -339,12 +435,17 @@ fn main() {
     });
     server.stop();
 
+    // --- Batched + pipelined data plane vs. single-op round trips
+    // (the section CI's bench-smoke perf gate reads).
+    println!("\n== bench: batched/pipelined data plane ==");
+    let batch_json = batch_bench();
+
     // --- Multi-client TCP: single-mutex baseline vs. sharded server.
     let clients = std::thread::available_parallelism()
         .map(|n| n.get())
         .unwrap_or(4)
         .clamp(4, 8);
-    let run_for = Duration::from_millis(1200);
+    let run_for = bench_run_for(1200);
     println!("\n== bench: TCP hammer (90/10 GET/PUT, 1KB, {clients} clients) ==");
     let tcp_single = tcp_hammer_ops_per_sec(1, clients, run_for);
     println!("{:<48} {:>14.0} ops/s", "tcp_hammer/1-shard", tcp_single);
@@ -376,7 +477,7 @@ fn main() {
     println!("\n== bench: chaos plane (standard fault mix, seed 42) ==");
     let chaos_json = chaos_bench();
 
-    let json = format!("{{\n{marketplace_json},\n{chaos_json}\n}}\n");
+    let json = format!("{{\n{batch_json},\n{marketplace_json},\n{chaos_json}\n}}\n");
     match std::fs::write("BENCH_e2e.json", &json) {
         Ok(()) => println!("\nwrote BENCH_e2e.json"),
         Err(e) => eprintln!("\ncould not write BENCH_e2e.json: {e}"),

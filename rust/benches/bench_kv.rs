@@ -10,7 +10,7 @@
 //! number across PRs.
 
 use memtrade::kv::{KvStore, ShardedKvStore};
-use memtrade::util::bench::{bench, header};
+use memtrade::util::bench::{bench, header, run_for as bench_run_for, smoke};
 use memtrade::util::rng::Rng;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Barrier};
@@ -135,7 +135,10 @@ fn main() {
         .unwrap_or(4)
         .clamp(4, 8);
     let shards = 16;
-    let run_for = Duration::from_millis(1500);
+    let run_for = bench_run_for(1500);
+    if smoke() {
+        println!("\n(smoke mode: shortened measurement windows)");
+    }
     println!("\n== bench: sharded hammer (90/10 GET/PUT, 1KB, {threads} threads) ==");
     let single = hammer_ops_per_sec(1, threads, run_for);
     println!("{:<48} {:>14.0} ops/s", "hammer/1-shard (global mutex baseline)", single);

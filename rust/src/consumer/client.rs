@@ -10,7 +10,7 @@
 
 use crate::crypto::secure::{Envelope, OpenError, Sealed, SealedValue};
 use crate::net::wire::{Request, Response};
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 
 /// Reserved producer index naming the recorded-miss path: a transport
 /// whose [`KvTransport::route_put`] has nowhere live to route a PUT
@@ -21,6 +21,18 @@ pub const DEAD_ROUTE: u32 = u32::MAX;
 /// Anything that can carry a request to one producer store.
 pub trait KvTransport {
     fn call(&mut self, producer_index: u32, req: Request) -> Response;
+
+    /// Execute a group of requests against one producer, one response
+    /// per request *in request order*; a miss or rejection on one op
+    /// must not fail its siblings. The default degrades to sequential
+    /// single calls, so every existing transport (closures, the
+    /// in-process manager, the simulator) keeps working unchanged;
+    /// wire-backed transports ([`crate::net::tcp::KvClient`],
+    /// [`crate::market::RemotePool`]) override it with true batch
+    /// frames, amortizing the per-request round trip.
+    fn call_multi(&mut self, producer_index: u32, reqs: Vec<Request>) -> Vec<Response> {
+        reqs.into_iter().map(|r| self.call(producer_index, r)).collect()
+    }
 
     /// Pick the producer index for a *new* PUT of `key`. The default
     /// keeps the caller's round-robin choice; lease-aware transports
@@ -201,6 +213,135 @@ impl SecureKv {
                 None
             }
         }
+    }
+
+    /// Batched GET: one result per key, in order (`None` = miss).
+    ///
+    /// Keys are grouped by the producer recorded in their metadata and
+    /// each group travels as one [`KvTransport::call_multi`] — over a
+    /// wire transport that is one batch frame per producer instead of
+    /// one round trip per key. Verification stays strictly per op: each
+    /// value is checked against its own metadata exactly as in
+    /// [`Self::get`] (seal-time counters/IVs are per value, so batching
+    /// shares no nonces), and a miss, tamper, or throttle on one key
+    /// never fails its siblings.
+    pub fn multi_get<T: KvTransport>(&mut self, t: &mut T, keys: &[&[u8]]) -> Vec<Option<Vec<u8>>> {
+        let mut results: Vec<Option<Vec<u8>>> = vec![None; keys.len()];
+        self.stats.gets += keys.len() as u64;
+        // Group by producer; BTreeMap so the fan-out order is
+        // deterministic (the chaos plane's schedules stay replayable).
+        let mut groups: BTreeMap<u32, Vec<(usize, SealedValue)>> = BTreeMap::new();
+        for (i, key) in keys.iter().enumerate() {
+            match self.metadata.get(*key) {
+                Some(m) => groups.entry(m.producer_index).or_default().push((i, m.clone())),
+                None => self.stats.misses += 1,
+            }
+        }
+        for (producer, group) in groups {
+            let reqs: Vec<Request> = group
+                .iter()
+                .map(|(_, m)| Request::Get { key: m.k_p.to_le_bytes().to_vec() })
+                .collect();
+            let mut resps = t.call_multi(producer, reqs).into_iter();
+            for (i, meta) in group {
+                match resps.next() {
+                    Some(Response::Value(value_p)) => {
+                        match self.envelope.open(&value_p, &meta) {
+                            Ok(v) => {
+                                self.stats.hits += 1;
+                                results[i] = Some(v);
+                            }
+                            Err(OpenError::BadHash) | Err(OpenError::BadCiphertext) => {
+                                self.stats.integrity_failures += 1;
+                                self.stats.misses += 1;
+                                self.metadata.remove(keys[i]);
+                            }
+                        }
+                    }
+                    Some(Response::Throttled { .. }) => {
+                        self.stats.throttled += 1;
+                        self.stats.misses += 1;
+                    }
+                    Some(_) => {
+                        // Evicted at the producer (or lease gone, or the
+                        // transport absorbed an error): same as `get`.
+                        self.stats.misses += 1;
+                        self.metadata.remove(keys[i]);
+                    }
+                    // Transport answered short (contract violation):
+                    // count the miss but keep the metadata — nothing
+                    // proved the remote copy is gone.
+                    None => self.stats.misses += 1,
+                }
+            }
+        }
+        results
+    }
+
+    /// Batched PUT: true per stored pair, in order. Every value is
+    /// sealed individually ([`Envelope::seal`] draws a fresh IV and
+    /// substitute-key counter per op — no cross-op nonce reuse), routed
+    /// via [`KvTransport::route_put`] exactly like [`Self::put`], then
+    /// grouped per producer into one `call_multi` each.
+    pub fn multi_put<T: KvTransport>(&mut self, t: &mut T, items: &[(&[u8], &[u8])]) -> Vec<bool> {
+        let mut results = vec![false; items.len()];
+        self.stats.puts += items.len() as u64;
+        let mut groups: BTreeMap<u32, Vec<(usize, Sealed)>> = BTreeMap::new();
+        for (i, (key, value)) in items.iter().enumerate() {
+            let hint = self.next_producer % self.n_producers;
+            self.next_producer = self.next_producer.wrapping_add(1);
+            let producer = t.route_put(key, hint);
+            let sealed = self.envelope.seal(value, producer);
+            groups.entry(producer).or_default().push((i, sealed));
+        }
+        for (producer, group) in groups {
+            let mut metas: Vec<(usize, SealedValue)> = Vec::with_capacity(group.len());
+            let reqs: Vec<Request> = group
+                .into_iter()
+                .map(|(i, Sealed { value_p, meta })| {
+                    let req =
+                        Request::Put { key: meta.k_p.to_le_bytes().to_vec(), value: value_p };
+                    metas.push((i, meta));
+                    req
+                })
+                .collect();
+            let mut resps = t.call_multi(producer, reqs).into_iter();
+            for (i, meta) in metas {
+                match resps.next() {
+                    Some(Response::Stored) => {
+                        self.metadata.insert(items[i].0.to_vec(), meta);
+                        results[i] = true;
+                    }
+                    Some(Response::Throttled { .. }) => self.stats.throttled += 1,
+                    _ => self.stats.rejected += 1,
+                }
+            }
+        }
+        results
+    }
+
+    /// Batched DELETE: removes local metadata per key, then synchronizes
+    /// the producer stores with one grouped `call_multi` per producer.
+    pub fn multi_delete<T: KvTransport>(&mut self, t: &mut T, keys: &[&[u8]]) -> Vec<bool> {
+        let mut results = vec![false; keys.len()];
+        self.stats.deletes += keys.len() as u64;
+        let mut groups: BTreeMap<u32, Vec<(usize, SealedValue)>> = BTreeMap::new();
+        for (i, key) in keys.iter().enumerate() {
+            if let Some(meta) = self.metadata.remove(*key) {
+                groups.entry(meta.producer_index).or_default().push((i, meta));
+            }
+        }
+        for (producer, group) in groups {
+            let reqs: Vec<Request> = group
+                .iter()
+                .map(|(_, m)| Request::Delete { key: m.k_p.to_le_bytes().to_vec() })
+                .collect();
+            let mut resps = t.call_multi(producer, reqs).into_iter();
+            for (i, _meta) in group {
+                results[i] = matches!(resps.next(), Some(Response::Deleted(true)));
+            }
+        }
+        results
     }
 
     /// DELETE (paper §6.1): remove local metadata, then synchronize the
@@ -412,6 +553,96 @@ mod tests {
         let before = c.len();
         c.set_n_producers(8);
         assert_eq!(c.len(), before);
+    }
+
+    #[test]
+    fn multi_ops_round_trip_and_group_across_producers() {
+        let mut t = MemTransport::new(3);
+        let mut c = SecureKv::with_iv_seed(Some([2u8; 16]), true, 3, 5);
+        let keys: Vec<Vec<u8>> = (0..30).map(|i| format!("mk{i}").into_bytes()).collect();
+        let vals: Vec<Vec<u8>> = (0..30).map(|i| vec![i as u8; 48]).collect();
+        let items: Vec<(&[u8], &[u8])> =
+            keys.iter().zip(&vals).map(|(k, v)| (k.as_slice(), v.as_slice())).collect();
+        assert_eq!(c.multi_put(&mut t, &items), vec![true; 30]);
+        assert_eq!(c.stats.puts, 30);
+        // Round-robin routing spread the batch across all producers.
+        for store in &t.stores {
+            assert!(store.len() >= 5, "store imbalance: {}", store.len());
+        }
+        // One multi_get over keys owned by all three producers, plus a
+        // miss in the middle: per-op results, in order.
+        let mut get_keys: Vec<&[u8]> = keys.iter().map(Vec::as_slice).collect();
+        get_keys.insert(11, b"never-put");
+        let got = c.multi_get(&mut t, &get_keys);
+        assert_eq!(got.len(), 31);
+        assert_eq!(got[11], None);
+        for (i, g) in got.iter().enumerate().filter(|(i, _)| *i != 11) {
+            let j = if i < 11 { i } else { i - 1 };
+            assert_eq!(g.as_deref(), Some(vals[j].as_slice()), "op {i}");
+        }
+        assert_eq!(c.stats.hits, 30);
+        assert_eq!(c.stats.misses, 1);
+        // Batched deletes synchronize the stores; repeats are false.
+        let key_refs: Vec<&[u8]> = keys.iter().map(Vec::as_slice).collect();
+        assert_eq!(c.multi_delete(&mut t, &key_refs), vec![true; 30]);
+        assert!(c.is_empty());
+        assert_eq!(c.multi_delete(&mut t, &key_refs), vec![false; 30]);
+        assert!(t.stores.iter().all(|s| s.len() == 0));
+    }
+
+    #[test]
+    fn multi_get_detects_corruption_per_op_without_failing_siblings() {
+        let mut t = MemTransport::new(1);
+        let mut c = SecureKv::with_iv_seed(Some([3u8; 16]), true, 1, 9);
+        for i in 0..10u64 {
+            assert!(c.put(&mut t, format!("k{i}").as_bytes(), &[i as u8; 32]));
+        }
+        // Corrupt exactly one stored value (substitute key 4).
+        let k_p = 4u64.to_le_bytes().to_vec();
+        let mut stored = t.stores[0].get(&k_p).unwrap().to_vec();
+        stored[20] ^= 0x80;
+        t.stores[0].put(&k_p, &stored);
+        let keys: Vec<Vec<u8>> = (0..10).map(|i| format!("k{i}").into_bytes()).collect();
+        let key_refs: Vec<&[u8]> = keys.iter().map(Vec::as_slice).collect();
+        let got = c.multi_get(&mut t, &key_refs);
+        for (i, g) in got.iter().enumerate() {
+            if i == 4 {
+                assert_eq!(*g, None, "corrupted op must be a miss");
+            } else {
+                assert_eq!(g.as_deref(), Some([i as u8; 32].as_slice()), "sibling {i} failed");
+            }
+        }
+        assert_eq!(c.stats.integrity_failures, 1);
+        // The corrupted key's metadata is dropped: now a local miss.
+        assert_eq!(c.get(&mut t, b"k4"), None);
+        assert_eq!(c.len(), 9);
+    }
+
+    #[test]
+    fn multi_ops_match_single_op_semantics_on_closure_transports() {
+        // The default call_multi degrades to per-op calls, so a closure
+        // transport sees identical traffic either way.
+        let mut c = SecureKv::with_iv_seed(None, true, 1, 3);
+        let mut calls = 0u32;
+        {
+            let mut echo = |_p: u32, req: Request| {
+                calls += 1;
+                match req {
+                    Request::Put { .. } => Response::Stored,
+                    Request::Get { .. } => Response::NotFound,
+                    _ => Response::Pong,
+                }
+            };
+            let items: [(&[u8], &[u8]); 2] = [(b"a", b"1"), (b"b", b"2")];
+            assert_eq!(c.multi_put(&mut echo, &items), vec![true, true]);
+        }
+        assert_eq!(calls, 2);
+        // Stored-then-evicted keys degrade per op.
+        let mut gone = |_p: u32, _req: Request| Response::NotFound;
+        let keys: [&[u8]; 3] = [b"a", b"b", b"c"];
+        assert_eq!(c.multi_get(&mut gone, &keys), vec![None, None, None]);
+        assert_eq!(c.stats.misses, 3);
+        assert!(c.is_empty(), "eviction answers must drop metadata");
     }
 
     #[test]

@@ -84,6 +84,7 @@ USAGE:
   memtrade producer [--port P] [--mb N] [--rate-mbps R] [--shards N]
   memtrade consumer --addr HOST:PORT | --broker HOST:PORT [--slabs N]
                     [--ops N] [--value-bytes B] [--no-encrypt]
+                    [--batch N] [--window W]
   memtrade sim [--minutes N] [--producers N] [--consumers N] [--remote PCT]
   memtrade replay [--steps N] [--producers N] [--consumers N]
   memtrade chaos [--seed S | --seeds N] [--mix MIX] [--ops N] [--keys N]
@@ -202,6 +203,7 @@ fn cmd_agent(args: &Args) -> ExitCode {
             .and_then(|v| v.parse::<u64>().ok())
             .map(|m| m * 1_000_000 / 8),
         seed: args.flag_u64("id", 1),
+        ..Default::default()
     };
     let agent = match ProducerAgent::start(cfg) {
         Ok(a) => a,
@@ -262,33 +264,79 @@ fn cmd_producer(args: &Args) -> ExitCode {
 
 /// Drive a YCSB read/update mix through the secure KV over any
 /// transport, printing throughput/latency/hit-ratio at the end.
+/// `batch > 1` groups ops into `SecureKv` multi-ops (true batch frames
+/// on wire transports), amortizing the per-request round trip; latency
+/// is then recorded per batch, divided across its ops.
 fn drive_ycsb<T: KvTransport>(
     secure: &mut SecureKv,
     transport: &mut T,
     ops: u64,
     value_bytes: usize,
+    batch: usize,
 ) {
     let workload = YcsbWorkload::paper_default((ops / 4).max(100), value_bytes);
     let mut rng = Rng::new(5);
     let mut rec = memtrade::util::stats::LatencyRecorder::new();
     let started = std::time::Instant::now();
-    for _ in 0..ops {
-        let op = workload.next_op(&mut rng);
-        let key = YcsbWorkload::key_bytes(op.key());
-        let t0 = std::time::Instant::now();
-        match op {
-            Op::Read { .. } => {
-                if secure.get(transport, &key).is_none() {
-                    let value = vec![0xAB; value_bytes];
+    let batch = batch.max(1);
+    let mut done = 0u64;
+    while done < ops {
+        let n = batch.min((ops - done) as usize);
+        if n == 1 {
+            let op = workload.next_op(&mut rng);
+            let key = YcsbWorkload::key_bytes(op.key());
+            let t0 = std::time::Instant::now();
+            match op {
+                Op::Read { .. } => {
+                    if secure.get(transport, &key).is_none() {
+                        let value = vec![0xAB; value_bytes];
+                        let _ = secure.put(transport, &key, &value);
+                    }
+                }
+                Op::Update { .. } => {
+                    let value = vec![0xCD; value_bytes];
                     let _ = secure.put(transport, &key, &value);
                 }
             }
-            Op::Update { .. } => {
-                let value = vec![0xCD; value_bytes];
-                let _ = secure.put(transport, &key, &value);
+            rec.record(t0.elapsed().as_micros() as f64);
+            done += 1;
+            continue;
+        }
+        // Collect one batch of ops, split reads from updates.
+        let mut read_keys: Vec<Vec<u8>> = Vec::new();
+        let mut update_keys: Vec<Vec<u8>> = Vec::new();
+        for _ in 0..n {
+            let op = workload.next_op(&mut rng);
+            let key = YcsbWorkload::key_bytes(op.key());
+            match op {
+                Op::Read { .. } => read_keys.push(key),
+                Op::Update { .. } => update_keys.push(key),
             }
         }
-        rec.record(t0.elapsed().as_micros() as f64);
+        let t0 = std::time::Instant::now();
+        // Batched reads; misses refill the cache as batched writes.
+        let read_refs: Vec<&[u8]> = read_keys.iter().map(Vec::as_slice).collect();
+        let got = secure.multi_get(transport, &read_refs);
+        let refill_value = vec![0xAB; value_bytes];
+        let refills: Vec<(&[u8], &[u8])> = read_refs
+            .iter()
+            .zip(&got)
+            .filter(|(_, g)| g.is_none())
+            .map(|(k, _)| (*k, refill_value.as_slice()))
+            .collect();
+        if !refills.is_empty() {
+            let _ = secure.multi_put(transport, &refills);
+        }
+        let update_value = vec![0xCD; value_bytes];
+        let updates: Vec<(&[u8], &[u8])> = update_keys
+            .iter()
+            .map(|k| (k.as_slice(), update_value.as_slice()))
+            .collect();
+        if !updates.is_empty() {
+            let _ = secure.multi_put(transport, &updates);
+        }
+        rec.record(t0.elapsed().as_micros() as f64 / n as f64);
+        done += n as u64;
     }
     let dt = started.elapsed().as_secs_f64();
     println!(
@@ -307,6 +355,11 @@ fn cmd_consumer(args: &Args) -> ExitCode {
     let ops = args.flag_u64("ops", 10_000);
     let value_bytes = args.flag_u64("value-bytes", 1024) as usize;
     let encrypt = !args.has("no-encrypt");
+    // --batch N: group N ops per SecureKv multi-op (one batch frame per
+    // routed producer). --window W: in-flight frame window on the data
+    // connections (chunked batches pipeline W frames deep).
+    let batch = args.flag_u64("batch", 1) as usize;
+    let window = args.flag_u64("window", 1) as usize;
     let mut secure = SecureKv::new(encrypt.then_some([3u8; 16]), true, 1);
 
     if let Some(broker) = args.flag("broker") {
@@ -316,6 +369,7 @@ fn cmd_consumer(args: &Args) -> ExitCode {
             consumer: args.flag_u64("id", 1000),
             broker: broker.to_string(),
             target_slabs: args.flag_u64("slabs", 4) as u32,
+            data_window: window,
             ..Default::default()
         };
         let mut pool = match RemotePool::connect(cfg) {
@@ -326,11 +380,11 @@ fn cmd_consumer(args: &Args) -> ExitCode {
             }
         };
         println!(
-            "leased {} slabs across {} producers",
+            "leased {} slabs across {} producers (batch {batch}, window {window})",
             pool.held_slabs(),
             pool.live_slots()
         );
-        drive_ycsb(&mut secure, &mut pool, ops, value_bytes);
+        drive_ycsb(&mut secure, &mut pool, ops, value_bytes, batch);
         let s = &pool.stats;
         println!(
             "pool: grants {} | renewals {} | slots lost {} | re-requests {} | io errors {}",
@@ -350,10 +404,14 @@ fn cmd_consumer(args: &Args) -> ExitCode {
             return ExitCode::FAILURE;
         }
     };
-    let mut transport = |_p: u32, req: memtrade::net::wire::Request| {
-        client.call(&req).unwrap_or(memtrade::net::wire::Response::Error("io".into()))
-    };
-    drive_ycsb(&mut secure, &mut transport, ops, value_bytes);
+    client.set_window(window);
+    println!(
+        "connected to {addr} (batch {batch}, window {window}, negotiated max batch {})",
+        client.negotiated_max_batch()
+    );
+    // A KvClient is itself a KvTransport: multi-ops become real batch
+    // frames on this connection.
+    drive_ycsb(&mut secure, &mut client, ops, value_bytes, batch);
     ExitCode::SUCCESS
 }
 

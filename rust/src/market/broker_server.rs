@@ -717,7 +717,9 @@ fn serve_control_conn(
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = BufWriter::new(stream);
     let keep_going = || !stop.load(Ordering::Relaxed);
-    if !server_handshake_patient(&mut reader, &mut writer, CONTROL_MAGIC, keep_going)? {
+    if server_handshake_patient(&mut reader, &mut writer, CONTROL_MAGIC, keep_going)?
+        .is_none()
+    {
         return Ok(());
     }
     let mut frame: Vec<u8> = Vec::new();

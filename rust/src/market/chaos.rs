@@ -396,6 +396,7 @@ pub fn run_chaos(cfg: &ChaosConfig) -> ChaosOutcome {
         reconnect_backoff: Duration::from_millis(250),
         data_call_timeout: Duration::from_millis(150),
         ctrl_call_timeout: Duration::from_millis(250),
+        data_window: 2,
         ctrl_faults: None, // broker-side plan already faults this plane
         data_faults: data_plan.clone(),
     };
@@ -473,22 +474,61 @@ pub fn run_chaos(cfg: &ChaosConfig) -> ChaosOutcome {
             agents[0].kill();
             killed = true;
         }
-        let k = op_rng.below(cfg.keys as u64) as u32;
-        let key = key_for(k);
-        if op_rng.chance(0.4) {
-            let _ = secure.put(&mut pool, &key, &value_for(cfg.seed, k, cfg.value_bytes));
-        } else {
-            match secure.get(&mut pool, &key) {
-                Some(v) => {
-                    hits += 1;
-                    if v != value_for(cfg.seed, k, cfg.value_bytes) {
-                        escapes += 1;
+        // ~25% of iterations drive *batch* frames (multi-get or
+        // multi-put), so transport faults land mid-batch — truncating
+        // between ops, duplicating batch responses — and Byzantine
+        // tampering is exercised per op inside batches; the rest stay
+        // single-op.
+        if op_rng.chance(0.15) {
+            let m = 2 + op_rng.below(7) as usize;
+            let ks: Vec<u32> =
+                (0..m).map(|_| op_rng.below(cfg.keys as u64) as u32).collect();
+            let keys: Vec<Vec<u8>> = ks.iter().map(|&k| key_for(k)).collect();
+            let key_refs: Vec<&[u8]> = keys.iter().map(Vec::as_slice).collect();
+            for (j, got) in secure.multi_get(&mut pool, &key_refs).into_iter().enumerate() {
+                match got {
+                    Some(v) => {
+                        hits += 1;
+                        if v != value_for(cfg.seed, ks[j], cfg.value_bytes) {
+                            escapes += 1;
+                        }
                     }
+                    None => misses += 1,
                 }
-                None => misses += 1,
             }
+            ops_done += m as u64;
+        } else if op_rng.chance(0.1) {
+            let m = 2 + op_rng.below(3) as usize;
+            let ks: Vec<u32> =
+                (0..m).map(|_| op_rng.below(cfg.keys as u64) as u32).collect();
+            let keys: Vec<Vec<u8>> = ks.iter().map(|&k| key_for(k)).collect();
+            let vals: Vec<Vec<u8>> =
+                ks.iter().map(|&k| value_for(cfg.seed, k, cfg.value_bytes)).collect();
+            let items: Vec<(&[u8], &[u8])> = keys
+                .iter()
+                .zip(&vals)
+                .map(|(k, v)| (k.as_slice(), v.as_slice()))
+                .collect();
+            let _ = secure.multi_put(&mut pool, &items);
+            ops_done += m as u64;
+        } else {
+            let k = op_rng.below(cfg.keys as u64) as u32;
+            let key = key_for(k);
+            if op_rng.chance(0.4) {
+                let _ = secure.put(&mut pool, &key, &value_for(cfg.seed, k, cfg.value_bytes));
+            } else {
+                match secure.get(&mut pool, &key) {
+                    Some(v) => {
+                        hits += 1;
+                        if v != value_for(cfg.seed, k, cfg.value_bytes) {
+                            escapes += 1;
+                        }
+                    }
+                    None => misses += 1,
+                }
+            }
+            ops_done += 1;
         }
-        ops_done += 1;
     }
     let ops_per_sec = ops_done as f64 / t_phase.elapsed().as_secs_f64().max(1e-9);
     if cfg.mix.kill_producer && !killed {

@@ -27,6 +27,13 @@
 //! Renewal runs opportunistically inside `call` (and via an explicit
 //! [`RemotePool::maintain`]): each live lease is renewed once less than
 //! `renew_margin` of its TTL remains.
+//!
+//! Batching: the pool overrides [`KvTransport::call_multi`], so a
+//! `SecureKv` multi-op that grouped its keys by routed slot lands here
+//! as one group per producer and travels as true batch frames on that
+//! slot's connection — one round trip per producer instead of one per
+//! key, with the same per-op miss degradation when a slot is dead or
+//! dies mid-batch.
 
 use crate::consumer::client::{KvTransport, DEAD_ROUTE};
 use crate::net::control::{CtrlClient, CtrlRequest, CtrlResponse, GrantInfo};
@@ -69,6 +76,10 @@ pub struct RemotePoolConfig {
     pub data_call_timeout: Duration,
     /// Longest a control call may wait for the broker's answer.
     pub ctrl_call_timeout: Duration,
+    /// In-flight frame window configured on each slot's data client:
+    /// batches larger than the negotiated per-frame cap pipeline their
+    /// chunks up to this many frames deep (1 = strict one-shot).
+    pub data_window: usize,
     /// Chaos plane: fault schedule for dialed broker connections.
     pub ctrl_faults: Option<FaultPlan>,
     /// Chaos plane: fault schedule for dialed producer connections.
@@ -88,6 +99,7 @@ impl Default for RemotePoolConfig {
             reconnect_backoff: Duration::from_secs(10),
             data_call_timeout: Duration::from_secs(2),
             ctrl_call_timeout: crate::net::control::CONTROL_CALL_TIMEOUT,
+            data_window: 1,
             ctrl_faults: None,
             data_faults: None,
         }
@@ -254,6 +266,7 @@ impl RemotePool {
             self.stats.slots_lost += 1;
             return;
         }
+        client.set_window(self.cfg.data_window);
         let slot = Slot {
             lease: g.lease,
             endpoint: g.endpoint,
@@ -495,6 +508,50 @@ impl KvTransport for RemotePool {
                 self.kill_slot(index);
                 self.maintain();
                 Self::miss_response(&req)
+            }
+        }
+    }
+
+    /// Batched calls against one routed slot: the whole group travels
+    /// as true batch frames on the slot's connection (chunked to the
+    /// handshake-negotiated cap). `SecureKv`'s multi-ops group by
+    /// routed slot before calling, so a consumer multi-get fans out as
+    /// one batch per producer. Dead slots degrade to *per-op* misses —
+    /// exactly the single-call loss model — and a connection failure
+    /// mid-batch kills the slot and answers every op in the group as a
+    /// miss (the acked-write guarantee lives with surviving producers,
+    /// not the lost connection).
+    fn call_multi(&mut self, producer_index: u32, mut reqs: Vec<Request>) -> Vec<Response> {
+        if reqs.is_empty() {
+            return Vec::new();
+        }
+        let now = Instant::now();
+        if now >= self.next_maintain {
+            self.maintain();
+            self.next_maintain = now + self.cfg.maintain_every;
+        }
+        for req in &mut reqs {
+            self.namespace_key(req);
+        }
+        if producer_index == DEAD_ROUTE {
+            self.stats.dead_calls += reqs.len() as u64;
+            return reqs.iter().map(Self::miss_response).collect();
+        }
+        let index = producer_index as usize;
+        let result = match self.slots.get_mut(index).and_then(|s| s.as_mut()) {
+            Some(slot) => slot.client.call_batch(&reqs),
+            None => {
+                self.stats.dead_calls += reqs.len() as u64;
+                return reqs.iter().map(Self::miss_response).collect();
+            }
+        };
+        match result {
+            Ok(resps) if resps.len() == reqs.len() => resps,
+            Ok(_) | Err(_) => {
+                self.stats.io_errors += 1;
+                self.kill_slot(index);
+                self.maintain();
+                reqs.iter().map(Self::miss_response).collect()
             }
         }
     }

@@ -14,13 +14,18 @@
 //! ## Handshake
 //!
 //! Every memtrade TCP connection opens with one hello frame each way:
-//! 4 magic bytes naming the plane (`MTCP` control / `MTDP` data) plus a
-//! `u16 LE` protocol version. The accepting side answers with its own
-//! hello even when the peer's is wrong, so a data-plane [`crate::net::
-//! tcp::KvClient`] dialing a broker port (or vice versa, or a stale
-//! peer from before the handshake existed) fails with a clear
-//! "wrong plane / wrong version" error instead of desyncing on garbage
-//! frames.
+//! 4 magic bytes naming the plane (`MTCP` control / `MTDP` data), a
+//! `u16 LE` protocol version, and — since v3 — a `u32 LE` advertising
+//! the most ops the sender accepts in one batch frame. The accepting
+//! side answers with its own hello even when the peer's is wrong, so a
+//! data-plane [`crate::net::tcp::KvClient`] dialing a broker port (or
+//! vice versa, or a stale peer from before the handshake existed) fails
+//! with a clear "wrong plane / wrong version" error instead of
+//! desyncing on garbage frames. Batch capability rides the same check:
+//! a pre-batching (v≤2) peer is refused at the handshake with the
+//! version named, never sent a batch frame it would die decoding
+//! mid-stream, and both sides cap outgoing batches at the pairwise
+//! minimum of the advertised limits.
 
 use crate::net::faults::{FaultPlan, FaultyStream};
 use crate::net::wire::{
@@ -57,8 +62,9 @@ pub fn connect_with_timeout(addr: &str, timeout: Duration) -> io::Result<TcpStre
 }
 
 /// Version of both wire protocols; bumped by the handshake-introducing
-/// revision (v1 was the pre-handshake data plane).
-pub const PROTOCOL_VERSION: u16 = 2;
+/// revision (v1 was the pre-handshake data plane, v2 the pre-batching
+/// handshake) and again by the batch frames + negotiated batch cap (v3).
+pub const PROTOCOL_VERSION: u16 = 3;
 /// Hello magic of the broker control plane.
 pub const CONTROL_MAGIC: [u8; 4] = *b"MTCP";
 /// Hello magic of the producer-store data plane.
@@ -73,13 +79,31 @@ pub fn plane_name(magic: [u8; 4]) -> &'static str {
     }
 }
 
-fn hello_payload(magic: [u8; 4]) -> [u8; 6] {
-    let v = PROTOCOL_VERSION.to_le_bytes();
-    [magic[0], magic[1], magic[2], magic[3], v[0], v[1]]
+/// What a valid peer hello negotiated.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct HelloInfo {
+    /// Most ops the peer accepts in one batch frame. Senders cap their
+    /// batches at `min(this, own MAX_BATCH_OPS)`, so a frame the peer
+    /// cannot decode is never on the wire.
+    pub max_batch_ops: u32,
 }
 
-fn check_hello(payload: &[u8], expected: [u8; 4]) -> Result<(), String> {
-    if payload.len() != 6 {
+/// v3 hello: magic (4) + version (2) + max batch ops (4).
+const HELLO_LEN: usize = 10;
+
+fn hello_payload(magic: [u8; 4]) -> [u8; HELLO_LEN] {
+    let v = PROTOCOL_VERSION.to_le_bytes();
+    let b = (crate::net::wire::MAX_BATCH_OPS as u32).to_le_bytes();
+    [
+        magic[0], magic[1], magic[2], magic[3], v[0], v[1], b[0], b[1], b[2], b[3],
+    ]
+}
+
+fn check_hello(payload: &[u8], expected: [u8; 4]) -> Result<HelloInfo, String> {
+    // Plane and version are judged from the v1-compatible prefix, so an
+    // old (shorter-hello) peer gets told its *version* is wrong rather
+    // than a generic length complaint.
+    if payload.len() < 6 {
         return Err(format!(
             "peer did not answer the memtrade handshake ({}-byte frame)",
             payload.len()
@@ -101,22 +125,33 @@ fn check_hello(payload: &[u8], expected: [u8; 4]) -> Result<(), String> {
             plane_name(magic)
         ));
     }
-    Ok(())
+    if payload.len() != HELLO_LEN {
+        return Err(format!(
+            "malformed {} plane v{PROTOCOL_VERSION} hello ({}-byte frame, expected \
+             {HELLO_LEN})",
+            plane_name(magic),
+            payload.len()
+        ));
+    }
+    Ok(HelloInfo {
+        max_batch_ops: u32::from_le_bytes(payload[6..10].try_into().unwrap()),
+    })
 }
 
 fn handshake_err(msg: String) -> io::Error {
     io::Error::new(io::ErrorKind::InvalidData, format!("handshake failed: {msg}"))
 }
 
-/// Dialing side of the handshake: send our hello, require a matching one
-/// back. Errors name the plane/version mismatch explicitly.
+/// Dialing side of the handshake: send our hello, require a matching
+/// one back. Errors name the plane/version mismatch explicitly; success
+/// returns what the peer negotiated (its batch cap).
 pub fn client_handshake<R: Read, W: Write>(
     r: &mut R,
     w: &mut W,
     magic: [u8; 4],
-) -> io::Result<()> {
+) -> io::Result<HelloInfo> {
     write_frame(w, &hello_payload(magic))?;
-    let mut buf = Vec::with_capacity(8);
+    let mut buf = Vec::with_capacity(HELLO_LEN + 2);
     read_frame_into(r, &mut buf)?;
     check_hello(&buf, magic).map_err(handshake_err)
 }
@@ -124,21 +159,22 @@ pub fn client_handshake<R: Read, W: Write>(
 /// Accepting side: read the peer's hello (timeout-tolerant, polling
 /// `keep_going` like the serving loops do), then answer with ours — even
 /// on mismatch, so the peer can print a clear error before we refuse.
-/// Returns Ok(false) when told to stop before a hello arrived.
+/// Returns Ok(None) when told to stop before a hello arrived, and the
+/// peer's negotiated [`HelloInfo`] on success.
 pub fn server_handshake_patient<R: Read, W: Write>(
     r: &mut R,
     w: &mut W,
     magic: [u8; 4],
     keep_going: impl Fn() -> bool,
-) -> io::Result<bool> {
-    let mut buf = Vec::with_capacity(8);
+) -> io::Result<Option<HelloInfo>> {
+    let mut buf = Vec::with_capacity(HELLO_LEN + 2);
     if !read_frame_into_patient(r, &mut buf, keep_going)? {
-        return Ok(false);
+        return Ok(None);
     }
     match check_hello(&buf, magic) {
-        Ok(()) => {
+        Ok(info) => {
             write_frame(w, &hello_payload(magic))?;
-            Ok(true)
+            Ok(Some(info))
         }
         Err(msg) => {
             let _ = write_frame(w, &hello_payload(magic));
@@ -766,7 +802,27 @@ mod tests {
         assert!(err.contains("control plane"), "{err}");
         let err = check_hello(b"junk!", CONTROL_MAGIC).unwrap_err();
         assert!(err.contains("handshake"), "{err}");
-        check_hello(&hello_payload(CONTROL_MAGIC), CONTROL_MAGIC).unwrap();
+        let info = check_hello(&hello_payload(CONTROL_MAGIC), CONTROL_MAGIC).unwrap();
+        assert_eq!(info.max_batch_ops, crate::net::wire::MAX_BATCH_OPS as u32);
+    }
+
+    #[test]
+    fn pre_batching_peer_is_refused_with_its_version_named() {
+        // A v2 peer sent a 6-byte hello (magic + version, no batch cap).
+        // It must be refused with the version mismatch spelled out — the
+        // clear "wrong version" error — instead of ever being sent a
+        // batch frame it would die decoding mid-stream.
+        let mut old = Vec::new();
+        old.extend_from_slice(&DATA_MAGIC);
+        old.extend_from_slice(&2u16.to_le_bytes());
+        let err = check_hello(&old, DATA_MAGIC).unwrap_err();
+        assert!(err.contains("v2"), "{err}");
+        assert!(err.contains("requires v3"), "{err}");
+        // A v3-versioned hello of the wrong shape is named malformed.
+        let mut bad = hello_payload(DATA_MAGIC).to_vec();
+        bad.push(0);
+        let err = check_hello(&bad, DATA_MAGIC).unwrap_err();
+        assert!(err.contains("malformed"), "{err}");
     }
 
     #[test]
@@ -775,17 +831,21 @@ mod tests {
         let mut c2s = Vec::new();
         write_frame(&mut c2s, &hello_payload(DATA_MAGIC)).unwrap();
         let mut s_out = Vec::new();
-        let ok = server_handshake_patient(
+        let info = server_handshake_patient(
             &mut std::io::Cursor::new(c2s),
             &mut s_out,
             DATA_MAGIC,
             || true,
         )
-        .unwrap();
-        assert!(ok);
-        // The server's answer satisfies the client side.
+        .unwrap()
+        .expect("handshake must complete");
+        assert_eq!(info.max_batch_ops, crate::net::wire::MAX_BATCH_OPS as u32);
+        // The server's answer satisfies the client side and carries the
+        // same negotiated batch cap.
         let mut c_out = Vec::new();
-        client_handshake(&mut std::io::Cursor::new(s_out), &mut c_out, DATA_MAGIC).unwrap();
+        let info =
+            client_handshake(&mut std::io::Cursor::new(s_out), &mut c_out, DATA_MAGIC).unwrap();
+        assert_eq!(info.max_batch_ops, crate::net::wire::MAX_BATCH_OPS as u32);
     }
 
     #[test]

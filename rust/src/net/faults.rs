@@ -338,25 +338,37 @@ impl ByzantineState {
     /// decoding and die at the consumer's integrity check, not at the
     /// codec.
     pub fn process_value_response(&mut self, out: &mut Vec<u8>) -> bool {
-        let clean = out.clone();
+        self.process_value_response_at(out, 0)
+    }
+
+    /// [`Self::process_value_response`] for a `Value` sub-response that
+    /// starts at byte `start` of `out` — the batch path encodes several
+    /// per-op responses into one shared output buffer, and each GET hit
+    /// must be independently tamperable so the envelope is exercised
+    /// *per op* inside a batch, not just per frame.
+    pub fn process_value_response_at(&mut self, out: &mut Vec<u8>, start: usize) -> bool {
+        let clean = out[start..].to_vec();
         let mut tampered = false;
         // Empty values have no bytes to corrupt detectably; skip them
         // (sealed values are never empty: IV + padding ≥ 32 bytes).
         if self.armed.load(Ordering::Relaxed)
-            && out.len() > VALUE_HDR
+            && out.len() - start > VALUE_HDR
             && self.rng.chance(self.tamper_p)
         {
             match self.rng.below(3) {
-                0 => self.corrupt(out),
-                1 => self.truncate(out),
+                0 => self.corrupt(out, start),
+                1 => self.truncate(out, start),
                 _ => {
                     // Replay the previous clean value — if there is one
                     // and it actually differs (tampering must always be
                     // detectable, never a silent no-op).
                     if !self.last_clean.is_empty() && self.last_clean != clean {
-                        *out = self.last_clean.clone();
+                        out.truncate(start);
+                        let replay = std::mem::take(&mut self.last_clean);
+                        out.extend_from_slice(&replay);
+                        self.last_clean = replay;
                     } else {
-                        self.corrupt(out);
+                        self.corrupt(out, start);
                     }
                 }
             }
@@ -366,18 +378,20 @@ impl ByzantineState {
         tampered
     }
 
-    fn corrupt(&mut self, out: &mut Vec<u8>) {
-        let idx = VALUE_HDR + self.rng.below((out.len() - VALUE_HDR) as u64) as usize;
+    fn corrupt(&mut self, out: &mut Vec<u8>, start: usize) {
+        let hdr = start + VALUE_HDR;
+        let idx = hdr + self.rng.below((out.len() - hdr) as u64) as usize;
         let bit = self.rng.below(8) as u32;
         out[idx] ^= 1u8 << bit;
     }
 
-    fn truncate(&mut self, out: &mut Vec<u8>) {
-        let value_len = out.len() - VALUE_HDR;
+    fn truncate(&mut self, out: &mut Vec<u8>, start: usize) {
+        let hdr = start + VALUE_HDR;
+        let value_len = out.len() - hdr;
         let cut = 1 + self.rng.below(value_len as u64) as usize;
-        out.truncate(VALUE_HDR + (value_len - cut));
-        let new_len = (out.len() - VALUE_HDR) as u32;
-        out[1..VALUE_HDR].copy_from_slice(&new_len.to_le_bytes());
+        out.truncate(out.len() - cut);
+        let new_len = (out.len() - hdr) as u32;
+        out[start + 1..hdr].copy_from_slice(&new_len.to_le_bytes());
     }
 }
 
@@ -489,6 +503,31 @@ mod tests {
             match Response::decode(&out) {
                 Ok(Response::Value(_)) => {}
                 other => panic!("tampered frame undecodable: {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn byzantine_tampering_at_offset_leaves_batch_prefix_intact() {
+        // The batch path appends sub-responses into one shared buffer;
+        // tampering op k must keep ops 0..k byte-identical and leave
+        // the whole buffer a valid concatenation of Value responses.
+        let spec = ByzantineSpec::new(4, 1.0);
+        let mut st = spec.state_for(0);
+        for i in 0..100u32 {
+            let mut out = Vec::new();
+            encode_value_response(&mut out, &[0x5A; 24]); // op 0: clean
+            let prefix = out.clone();
+            let start = out.len();
+            encode_value_response(&mut out, &[i as u8; 48]); // op 1
+            let clean_tail = out[start..].to_vec();
+            assert!(st.process_value_response_at(&mut out, start));
+            assert_eq!(&out[..start], &prefix[..], "prefix disturbed at i={i}");
+            assert_ne!(&out[start..], &clean_tail[..], "no-op tamper at i={i}");
+            // The tampered tail still decodes as a Value sub-response.
+            match Response::decode(&out[start..]) {
+                Ok(Response::Value(_)) => {}
+                other => panic!("tampered sub-response undecodable: {other:?}"),
             }
         }
     }

@@ -13,20 +13,33 @@
 //!   reusable scratch buffers, requests decode as borrowed
 //!   [`RequestRef`]s, and GET hits encode straight from the shard into
 //!   the output buffer — a steady-state GET performs zero transient heap
-//!   allocations server-side.
+//!   allocations server-side;
+//! * batch frames (`MultiGet`/`MultiPut`/`MultiDelete`) execute
+//!   shard-grouped: the ops are bucketed per shard, every involved
+//!   shard is locked exactly once (ascending index order), and results
+//!   encode straight into the reusable output buffer in request order —
+//!   one lock acquisition per shard per batch instead of one per op.
+//!
+//! [`KvClient`] is the matching blocking client: one-shot calls, true
+//! batch frames, and pipelined singles with a configurable in-flight
+//! window (the one-shot API is exactly the window = 1 case).
 
-use crate::kv::{KvStats, ShardedKvStore};
+use crate::consumer::client::KvTransport;
+use crate::kv::{KvStats, KvStore, ShardedKvStore};
 use crate::net::control::{client_handshake, server_handshake_patient, DATA_MAGIC};
 use crate::net::faults::{ByzantineSpec, ByzantineState, FaultPlan, FaultyStream};
 use crate::net::wire::{
-    encode_value_response, read_frame_into, read_frame_into_patient, write_frame, Request,
-    RequestRef, Response,
+    decode_batch_request, decode_batch_response, encode_batch_response_header,
+    encode_multi_delete_into, encode_multi_get_into, encode_multi_put_into,
+    encode_value_response, is_batch_request, read_frame_into, read_frame_into_patient,
+    write_frame, write_frame_noflush, BatchKind, BatchOpRef, Request, RequestRef, Response,
+    MAX_BATCH_OPS,
 };
 use crate::util::token_bucket::AtomicTokenBucket;
-use std::io::{self, BufReader, BufWriter};
+use std::io::{self, BufReader, BufWriter, Write};
 use std::net::{TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, MutexGuard};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
@@ -225,14 +238,19 @@ fn serve_conn(
     let mut reader = BufReader::with_capacity(CONN_BUF_BYTES, stream.try_clone()?);
     let mut writer = BufWriter::with_capacity(CONN_BUF_BYTES, stream);
     // Magic/version handshake before any data frame: a control-plane (or
-    // stale) peer gets a clear refusal instead of desynced garbage.
-    if !server_handshake_patient(&mut reader, &mut writer, DATA_MAGIC, || {
+    // stale, pre-batching) peer gets a clear refusal instead of desynced
+    // garbage. The hello also carries the batch cap, so a peer never
+    // sends batches we would refuse to decode.
+    if server_handshake_patient(&mut reader, &mut writer, DATA_MAGIC, || {
         !stop.load(Ordering::Relaxed)
-    })? {
+    })?
+    .is_none()
+    {
         return Ok(());
     }
-    // Reused for every request on this connection: the steady state
-    // allocates nothing.
+    // Reused for every request on this connection: the single-op steady
+    // state allocates nothing (batches allocate one bounded op table +
+    // lock table per frame, amortized over up to MAX_BATCH_OPS ops).
     let mut frame: Vec<u8> = Vec::new();
     let mut out: Vec<u8> = Vec::new();
     loop {
@@ -246,22 +264,41 @@ fn serve_conn(
             Err(_) => return Ok(()),    // disconnect / hostile length
         }
         out.clear();
-        match RequestRef::decode(&frame) {
-            Err(e) => Response::Error(e.to_string()).encode_into(&mut out),
-            Ok(req) => {
-                // Rate limiting (paper §4.2): refuse oversized I/O. The
-                // bucket is lock-free, so throttling accounting never
-                // serializes connections.
-                let io_bytes = frame.len() as u64;
-                let throttled = bucket.as_ref().and_then(|b| {
-                    let now_us = start.elapsed().as_micros() as u64;
-                    if b.try_consume(now_us, io_bytes) {
-                        None
-                    } else {
-                        Some(b.time_until_us(now_us, io_bytes).unwrap_or(1_000_000))
+        // Rate limiting (paper §4.2): refuse oversized I/O, priced by
+        // frame bytes (one draw covers a whole batch). The bucket is
+        // lock-free, so throttling accounting never serializes
+        // connections. Tokens are only drawn for frames that decode.
+        let throttle = |frame_len: usize| {
+            bucket.as_ref().and_then(|b| {
+                let now_us = start.elapsed().as_micros() as u64;
+                let io_bytes = frame_len as u64;
+                if b.try_consume(now_us, io_bytes) {
+                    None
+                } else {
+                    Some(b.time_until_us(now_us, io_bytes).unwrap_or(1_000_000))
+                }
+            })
+        };
+        if is_batch_request(&frame) {
+            let mut ops: Vec<BatchOpRef<'_>> = Vec::new();
+            match decode_batch_request(&frame, &mut ops) {
+                Err(e) => Response::Error(e.to_string()).encode_into(&mut out),
+                Ok(()) => match throttle(frame.len()) {
+                    Some(retry_after_us) => {
+                        // Per-op status even when throttled: the batch
+                        // contract is one status per op, always.
+                        encode_batch_response_header(&mut out, ops.len() as u32);
+                        for _ in &ops {
+                            Response::Throttled { retry_after_us }.encode_into(&mut out);
+                        }
                     }
-                });
-                match throttled {
+                    None => serve_batch(&store, &ops, &mut out, &mut byz, &tampered),
+                },
+            }
+        } else {
+            match RequestRef::decode(&frame) {
+                Err(e) => Response::Error(e.to_string()).encode_into(&mut out),
+                Ok(req) => match throttle(frame.len()) {
                     Some(retry_after_us) => {
                         Response::Throttled { retry_after_us }.encode_into(&mut out)
                     }
@@ -294,7 +331,7 @@ fn serve_conn(
                         }
                         RequestRef::Ping => Response::Pong.encode_into(&mut out),
                     },
-                }
+                },
             }
         }
         write_frame(&mut writer, &out)?;
@@ -303,14 +340,101 @@ fn serve_conn(
     }
 }
 
+/// Execute one decoded batch against the sharded store, appending one
+/// status per op (request order) to `out`.
+///
+/// Lock discipline: ops are bucketed by owning shard up front, then
+/// every involved shard is locked exactly once, in ascending index
+/// order — the same total order `shrink_to`/`grow_to` use, so the batch
+/// path cannot deadlock against budget operations or other batches.
+/// Holding the group of locks while executing lets every GET hit encode
+/// zero-copy from its shard straight into the shared output buffer.
+fn serve_batch(
+    store: &ShardedKvStore,
+    ops: &[BatchOpRef<'_>],
+    out: &mut Vec<u8>,
+    byz: &mut Option<ByzantineState>,
+    tampered: &AtomicU64,
+) {
+    encode_batch_response_header(out, ops.len() as u32);
+    if ops.is_empty() {
+        return;
+    }
+    let n_shards = store.num_shards();
+    let mut needed = vec![false; n_shards];
+    let mut op_shard: Vec<u32> = Vec::with_capacity(ops.len());
+    for op in ops {
+        let s = store.shard_index(op.key());
+        op_shard.push(s as u32);
+        needed[s] = true;
+    }
+    let mut guards: Vec<Option<MutexGuard<'_, KvStore>>> = needed
+        .iter()
+        .enumerate()
+        .map(|(i, &need)| need.then(|| store.lock_shard(i)))
+        .collect();
+    for (op, &s) in ops.iter().zip(&op_shard) {
+        let kv = guards[s as usize].as_mut().expect("owning shard is locked");
+        match *op {
+            BatchOpRef::Get { key } => match kv.get(key) {
+                Some(v) => {
+                    let at = out.len();
+                    encode_value_response(out, v);
+                    if let Some(b) = byz.as_mut() {
+                        // Byzantine mode tampers per op inside the
+                        // batch — the envelope must catch each one.
+                        if b.process_value_response_at(out, at) {
+                            tampered.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                }
+                None => Response::NotFound.encode_into(out),
+            },
+            BatchOpRef::Put { key, value } => {
+                if kv.put(key, value) {
+                    Response::Stored.encode_into(out)
+                } else {
+                    Response::Rejected.encode_into(out)
+                }
+            }
+            BatchOpRef::Delete { key } => Response::Deleted(kv.delete(key)).encode_into(out),
+        }
+    }
+}
+
 /// Blocking client for one producer store. Owns buffered reader/writer
 /// halves plus reusable send/receive scratch buffers, so a steady-state
 /// call allocates only what the response forces (a `Value` payload).
+///
+/// Three calling modes, all over the same two buffered halves:
+///
+///  * **one-shot** (`call`/`get`/`put`/`delete`): send one frame, read
+///    one response — exactly the pipelined path at window = 1;
+///  * **pipelined** ([`Self::call_many`], or raw
+///    [`Self::send_request`]/[`Self::recv_response`]): up to `window`
+///    request frames in flight before the first response is read,
+///    hiding the per-request RTT;
+///  * **batched** ([`Self::multi_get`]/[`Self::multi_put`]/
+///    [`Self::multi_delete`]/[`Self::call_batch`]): many ops per
+///    *frame*, chunked to the handshake-negotiated cap, chunks
+///    themselves pipelined up to `window`.
+///
+/// Responses always arrive in request order. After any I/O or protocol
+/// error the stream may be desynced (frames can be mid-flight), so the
+/// connection **poisons itself**: every later call fails fast with
+/// `BrokenPipe` instead of reading another request's response as its
+/// own. Reconnect to recover.
 pub struct KvClient {
     reader: BufReader<FaultyStream>,
     writer: BufWriter<FaultyStream>,
     send_buf: Vec<u8>,
     recv_buf: Vec<u8>,
+    /// `min(our MAX_BATCH_OPS, peer's advertised cap)`, ≥ 1.
+    max_batch: usize,
+    /// In-flight frame window for pipelined paths (1 = one-shot).
+    window: usize,
+    /// An I/O or protocol error desynced the stream; refuse further use.
+    poisoned: bool,
 }
 
 impl KvClient {
@@ -358,9 +482,52 @@ impl KvClient {
         stream.set_read_timeout(Some(handshake_timeout))?;
         let mut reader = BufReader::with_capacity(CONN_BUF_BYTES, stream.try_clone()?);
         let mut writer = BufWriter::with_capacity(CONN_BUF_BYTES, stream);
-        client_handshake(&mut reader, &mut writer, DATA_MAGIC)?;
+        let hello = client_handshake(&mut reader, &mut writer, DATA_MAGIC)?;
         reader.get_ref().set_read_timeout(None)?;
-        Ok(KvClient { reader, writer, send_buf: Vec::new(), recv_buf: Vec::new() })
+        Ok(KvClient {
+            reader,
+            writer,
+            send_buf: Vec::new(),
+            recv_buf: Vec::new(),
+            max_batch: (hello.max_batch_ops as usize).clamp(1, MAX_BATCH_OPS),
+            window: 1,
+            poisoned: false,
+        })
+    }
+
+    /// True once an I/O or protocol error has desynced this connection;
+    /// every call now fails fast (reconnect to recover).
+    pub fn is_poisoned(&self) -> bool {
+        self.poisoned
+    }
+
+    fn check_live(&self) -> io::Result<()> {
+        if self.poisoned {
+            return Err(io::Error::new(
+                io::ErrorKind::BrokenPipe,
+                "connection poisoned by an earlier I/O error; reconnect",
+            ));
+        }
+        Ok(())
+    }
+
+    /// Most ops this connection may put in one batch frame (the
+    /// pairwise minimum negotiated in the handshake). Larger batches
+    /// are chunked transparently.
+    pub fn negotiated_max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    /// Set the in-flight frame window for pipelined paths (clamped
+    /// ≥ 1; 1 restores strict one-shot request/response). Keep windows
+    /// modest (≤ 32): both sides buffer in-flight frames, and a huge
+    /// window of huge responses can fill both TCP directions at once.
+    pub fn set_window(&mut self, window: usize) {
+        self.window = window.max(1);
+    }
+
+    pub fn window(&self) -> usize {
+        self.window
     }
 
     /// Bound how long any later call may wait for a response. A stalled
@@ -373,23 +540,235 @@ impl KvClient {
         self.reader.get_ref().set_read_timeout(timeout)
     }
 
-    /// One request/response exchange from a borrowed request — the
-    /// allocation-free client path (`get`/`put`/`delete` use it so no
-    /// owned `Request` is built per call).
-    pub fn call_ref(&mut self, req: RequestRef<'_>) -> io::Result<Response> {
+    /// Queue one request without waiting for its response — the raw
+    /// pipelining primitive. Frames are buffered; they reach the wire
+    /// when the buffer fills or on the next [`Self::recv_response`].
+    /// Responses come back in send order.
+    pub fn send_request(&mut self, req: RequestRef<'_>) -> io::Result<()> {
+        self.check_live()?;
         self.send_buf.clear();
         req.encode_into(&mut self.send_buf);
-        write_frame(&mut self.writer, &self.send_buf)?;
+        if let Err(e) = write_frame_noflush(&mut self.writer, &self.send_buf) {
+            self.poisoned = true;
+            return Err(e);
+        }
+        bound_scratch(&mut self.send_buf);
+        Ok(())
+    }
+
+    /// Receive the next in-order response (flushing queued requests
+    /// first, so send/recv can never deadlock on a buffered frame).
+    pub fn recv_response(&mut self) -> io::Result<Response> {
+        self.check_live()?;
+        let resp = self.recv_response_inner();
+        if resp.is_err() {
+            // A failed read leaves the response stream position unknown
+            // (a timeout may have consumed part of a frame): never let
+            // a later call read some other request's response.
+            self.poisoned = true;
+        }
+        resp
+    }
+
+    fn recv_response_inner(&mut self) -> io::Result<Response> {
+        self.writer.flush()?;
         read_frame_into(&mut self.reader, &mut self.recv_buf)?;
         let resp = Response::decode(&self.recv_buf)
             .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e));
-        bound_scratch(&mut self.send_buf);
         bound_scratch(&mut self.recv_buf);
         resp
     }
 
+    /// One request/response exchange from a borrowed request — the
+    /// allocation-free client path (`get`/`put`/`delete` use it so no
+    /// owned `Request` is built per call). Exactly the pipelined path
+    /// at window = 1.
+    pub fn call_ref(&mut self, req: RequestRef<'_>) -> io::Result<Response> {
+        self.send_request(req)?;
+        self.recv_response()
+    }
+
     pub fn call(&mut self, req: &Request) -> io::Result<Response> {
         self.call_ref(req.to_ref())
+    }
+
+    /// Pipelined single-op calls: keep up to `window` requests in
+    /// flight, reading responses (which arrive in request order) as the
+    /// window refills. `window = 1` degenerates to sequential one-shot
+    /// calls.
+    pub fn call_many(&mut self, reqs: &[Request], window: usize) -> io::Result<Vec<Response>> {
+        let window = window.max(1);
+        let mut resps = Vec::with_capacity(reqs.len());
+        let mut sent = 0usize;
+        while resps.len() < reqs.len() {
+            while sent < reqs.len() && sent - resps.len() < window {
+                self.send_request(reqs[sent].to_ref())?;
+                sent += 1;
+            }
+            resps.push(self.recv_response()?);
+        }
+        Ok(resps)
+    }
+
+    /// Exchange `total` ops as ⌈total / max_batch⌉ batch frames, with up
+    /// to `window` frames in flight; `encode_chunk` appends the frame
+    /// payload for one op range. Returns per-op responses in op order.
+    /// Any failure poisons the connection: frames may still be in
+    /// flight, so a later read could otherwise misattribute responses.
+    fn exchange_batches(
+        &mut self,
+        total: usize,
+        encode_chunk: impl FnMut(&mut Vec<u8>, std::ops::Range<usize>),
+    ) -> io::Result<Vec<Response>> {
+        if total == 0 {
+            return Ok(Vec::new());
+        }
+        self.check_live()?;
+        let out = self.exchange_batches_inner(total, encode_chunk);
+        if out.is_err() {
+            self.poisoned = true;
+        }
+        out
+    }
+
+    fn exchange_batches_inner(
+        &mut self,
+        total: usize,
+        mut encode_chunk: impl FnMut(&mut Vec<u8>, std::ops::Range<usize>),
+    ) -> io::Result<Vec<Response>> {
+        let max = self.max_batch.max(1);
+        let window = self.window.max(1);
+        let n_chunks = total.div_ceil(max);
+        let chunk_range = |i: usize| (i * max)..(i * max + max).min(total);
+        let mut resps = Vec::with_capacity(total);
+        let (mut sent, mut recvd) = (0usize, 0usize);
+        while recvd < n_chunks {
+            while sent < n_chunks && sent - recvd < window {
+                self.send_buf.clear();
+                encode_chunk(&mut self.send_buf, chunk_range(sent));
+                write_frame_noflush(&mut self.writer, &self.send_buf)?;
+                sent += 1;
+            }
+            self.writer.flush()?;
+            read_frame_into(&mut self.reader, &mut self.recv_buf)?;
+            let got = decode_batch_response(&self.recv_buf).map_err(|e| {
+                // Not a batch response: either the server's decode-error
+                // report or a desynced stream — surface it; the caller
+                // must drop the connection.
+                let msg = match Response::decode(&self.recv_buf) {
+                    Ok(Response::Error(m)) => format!("batch refused: {m}"),
+                    Ok(other) => format!("non-batch response {other:?} to a batch request"),
+                    Err(_) => e.to_string(),
+                };
+                io::Error::new(io::ErrorKind::InvalidData, msg)
+            })?;
+            let expect = chunk_range(recvd).len();
+            if got.len() != expect {
+                return Err(io::Error::new(
+                    io::ErrorKind::InvalidData,
+                    format!("batch answered {} of {expect} ops", got.len()),
+                ));
+            }
+            resps.extend(got);
+            recvd += 1;
+        }
+        bound_scratch(&mut self.send_buf);
+        bound_scratch(&mut self.recv_buf);
+        Ok(resps)
+    }
+
+    /// Batched GET: one status per key, in order (`None` = miss).
+    pub fn multi_get(&mut self, keys: &[&[u8]]) -> io::Result<Vec<Option<Vec<u8>>>> {
+        let resps =
+            self.exchange_batches(keys.len(), |out, r| encode_multi_get_into(out, &keys[r]))?;
+        resps
+            .into_iter()
+            .map(|r| match r {
+                Response::Value(v) => Ok(Some(v)),
+                Response::NotFound => Ok(None),
+                other => Err(io::Error::new(
+                    io::ErrorKind::InvalidData,
+                    format!("unexpected batch-get status {other:?}"),
+                )),
+            })
+            .collect()
+    }
+
+    /// Batched PUT: true per stored pair; a rejected or throttled op is
+    /// false without failing its siblings.
+    pub fn multi_put(&mut self, pairs: &[(&[u8], &[u8])]) -> io::Result<Vec<bool>> {
+        let resps =
+            self.exchange_batches(pairs.len(), |out, r| encode_multi_put_into(out, &pairs[r]))?;
+        resps
+            .into_iter()
+            .map(|r| match r {
+                Response::Stored => Ok(true),
+                Response::Rejected | Response::Throttled { .. } => Ok(false),
+                other => Err(io::Error::new(
+                    io::ErrorKind::InvalidData,
+                    format!("unexpected batch-put status {other:?}"),
+                )),
+            })
+            .collect()
+    }
+
+    /// Batched DELETE: per-key "existed" flags.
+    pub fn multi_delete(&mut self, keys: &[&[u8]]) -> io::Result<Vec<bool>> {
+        let resps = self
+            .exchange_batches(keys.len(), |out, r| encode_multi_delete_into(out, &keys[r]))?;
+        resps
+            .into_iter()
+            .map(|r| match r {
+                Response::Deleted(ok) => Ok(ok),
+                other => Err(io::Error::new(
+                    io::ErrorKind::InvalidData,
+                    format!("unexpected batch-delete status {other:?}"),
+                )),
+            })
+            .collect()
+    }
+
+    /// Execute owned single-op requests as true batch frames when they
+    /// are homogeneous (all GET / all PUT / all DELETE — what
+    /// [`crate::consumer::SecureKv`]'s multi-ops produce), falling back
+    /// to pipelined singles otherwise. One response per request, in
+    /// order.
+    pub fn call_batch(&mut self, reqs: &[Request]) -> io::Result<Vec<Response>> {
+        if reqs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let Some(kind) = reqs[0].batch_kind() else {
+            return self.call_many(reqs, self.window);
+        };
+        if reqs.iter().any(|r| r.batch_kind() != Some(kind)) {
+            return self.call_many(reqs, self.window);
+        }
+        self.exchange_batches(reqs.len(), |out, range| match kind {
+            BatchKind::Get | BatchKind::Delete => {
+                let keys: Vec<&[u8]> = reqs[range]
+                    .iter()
+                    .map(|r| match r {
+                        Request::Get { key } | Request::Delete { key } => key.as_slice(),
+                        _ => unreachable!("homogeneity checked"),
+                    })
+                    .collect();
+                if kind == BatchKind::Get {
+                    encode_multi_get_into(out, &keys)
+                } else {
+                    encode_multi_delete_into(out, &keys)
+                }
+            }
+            BatchKind::Put => {
+                let pairs: Vec<(&[u8], &[u8])> = reqs[range]
+                    .iter()
+                    .map(|r| match r {
+                        Request::Put { key, value } => (key.as_slice(), value.as_slice()),
+                        _ => unreachable!("homogeneity checked"),
+                    })
+                    .collect();
+                encode_multi_put_into(out, &pairs)
+            }
+        })
     }
 
     pub fn get(&mut self, key: &[u8]) -> io::Result<Option<Vec<u8>>> {
@@ -422,6 +801,28 @@ impl KvClient {
                 format!("unexpected response {other:?}"),
             )),
         }
+    }
+}
+
+/// A `KvClient` is itself a single-producer [`KvTransport`], so
+/// [`crate::consumer::SecureKv`] (including its multi-ops) can run
+/// directly over one TCP connection: batches become real batch frames,
+/// and I/O errors surface as `Response::Error` — which the secure layer
+/// treats as a miss, same as every other transport. The first error
+/// poisons the connection, so every later call through this impl is an
+/// instant per-op `Error` (more misses) rather than a desynced read of
+/// some other request's response; callers that want to recover
+/// reconnect, exactly like [`crate::market::RemotePool`] killing a
+/// slot.
+impl KvTransport for KvClient {
+    fn call(&mut self, _producer_index: u32, req: Request) -> Response {
+        KvClient::call(self, &req).unwrap_or_else(|e| Response::Error(e.to_string()))
+    }
+
+    fn call_multi(&mut self, _producer_index: u32, reqs: Vec<Request>) -> Vec<Response> {
+        let n = reqs.len();
+        self.call_batch(&reqs)
+            .unwrap_or_else(|e| vec![Response::Error(e.to_string()); n])
     }
 }
 
@@ -500,6 +901,186 @@ mod tests {
         }
         assert_eq!(server.byzantine_tampered(), 10);
         server.stop();
+    }
+
+    #[test]
+    fn tcp_batch_round_trip() {
+        let server = ProducerStoreServer::start("127.0.0.1:0", 4 << 20, None, 9).unwrap();
+        let mut client = KvClient::connect(server.addr()).unwrap();
+        assert_eq!(client.negotiated_max_batch(), MAX_BATCH_OPS);
+
+        let keys: Vec<Vec<u8>> = (0..40).map(|i| format!("bk{i}").into_bytes()).collect();
+        let vals: Vec<Vec<u8>> = (0..40).map(|i| vec![i as u8; 200]).collect();
+        let pairs: Vec<(&[u8], &[u8])> =
+            keys.iter().zip(&vals).map(|(k, v)| (k.as_slice(), v.as_slice())).collect();
+        assert_eq!(client.multi_put(&pairs).unwrap(), vec![true; 40]);
+
+        // Mixed hits and misses in one batch: per-op status, in order.
+        let mut get_keys: Vec<&[u8]> = keys.iter().map(Vec::as_slice).collect();
+        get_keys.insert(7, b"absent");
+        let got = client.multi_get(&get_keys).unwrap();
+        assert_eq!(got.len(), 41);
+        assert_eq!(got[7], None, "the miss must not fail its siblings");
+        for (i, v) in got.iter().enumerate().filter(|(i, _)| *i != 7) {
+            let j = if i < 7 { i } else { i - 1 };
+            assert_eq!(v.as_deref(), Some(vals[j].as_slice()), "op {i}");
+        }
+
+        // Empty batch: legal, answered empty.
+        assert_eq!(client.multi_get(&[]).unwrap(), vec![]);
+
+        let key_refs: Vec<&[u8]> = keys.iter().map(Vec::as_slice).collect();
+        let deleted = client.multi_delete(&key_refs).unwrap();
+        assert_eq!(deleted, vec![true; 40]);
+        assert_eq!(client.multi_delete(&key_refs).unwrap(), vec![false; 40]);
+
+        let stats = server.stats();
+        assert_eq!(stats.puts, 40);
+        assert_eq!(stats.hits, 40);
+        assert_eq!(stats.misses, 1);
+        server.stop();
+    }
+
+    #[test]
+    fn tcp_batches_chunk_to_the_negotiated_cap_and_pipeline() {
+        let server = ProducerStoreServer::start("127.0.0.1:0", 4 << 20, None, 10).unwrap();
+        let mut client = KvClient::connect(server.addr()).unwrap();
+        // Force tiny chunks and a >1 window so chunking + in-flight
+        // pipelining are both exercised on a real socket.
+        client.max_batch = 8;
+        client.set_window(3);
+        assert_eq!(client.window(), 3);
+        let keys: Vec<Vec<u8>> = (0..100).map(|i| format!("ck{i}").into_bytes()).collect();
+        let vals: Vec<Vec<u8>> = (0..100).map(|i| vec![(i % 251) as u8; 64]).collect();
+        let pairs: Vec<(&[u8], &[u8])> =
+            keys.iter().zip(&vals).map(|(k, v)| (k.as_slice(), v.as_slice())).collect();
+        assert_eq!(client.multi_put(&pairs).unwrap(), vec![true; 100]);
+        let key_refs: Vec<&[u8]> = keys.iter().map(Vec::as_slice).collect();
+        let got = client.multi_get(&key_refs).unwrap();
+        for (i, v) in got.iter().enumerate() {
+            assert_eq!(v.as_deref(), Some(vals[i].as_slice()), "op {i} out of order");
+        }
+        server.stop();
+    }
+
+    #[test]
+    fn tcp_pipelined_call_many_keeps_response_order() {
+        let server = ProducerStoreServer::start("127.0.0.1:0", 1 << 20, None, 11).unwrap();
+        let mut client = KvClient::connect(server.addr()).unwrap();
+        assert!(client.put(b"present", b"yes").unwrap());
+        let reqs: Vec<Request> = (0..60)
+            .map(|i| {
+                if i % 2 == 0 {
+                    Request::Get { key: b"present".to_vec() }
+                } else {
+                    Request::Get { key: format!("absent{i}").into_bytes() }
+                }
+            })
+            .collect();
+        for window in [1usize, 4, 16] {
+            let resps = client.call_many(&reqs, window).unwrap();
+            assert_eq!(resps.len(), 60);
+            for (i, r) in resps.iter().enumerate() {
+                if i % 2 == 0 {
+                    assert_eq!(*r, Response::Value(b"yes".to_vec()), "w={window} op {i}");
+                } else {
+                    assert_eq!(*r, Response::NotFound, "w={window} op {i}");
+                }
+            }
+        }
+        // A heterogeneous call_batch (Ping mixed in) falls back to the
+        // pipelined path and still answers per op, in order.
+        let mixed = vec![
+            Request::Get { key: b"present".to_vec() },
+            Request::Ping,
+            Request::Delete { key: b"present".to_vec() },
+        ];
+        let resps = client.call_batch(&mixed).unwrap();
+        assert_eq!(resps[0], Response::Value(b"yes".to_vec()));
+        assert_eq!(resps[1], Response::Pong);
+        assert_eq!(resps[2], Response::Deleted(true));
+        server.stop();
+    }
+
+    #[test]
+    fn tcp_batch_throttle_is_per_op() {
+        // 1 KB/s with a tiny burst: a 4-op batch of 1 KB values cannot
+        // fit the bucket, and every op must report Throttled — the
+        // batch contract is one status per op even when refused.
+        let server = ProducerStoreServer::start("127.0.0.1:0", 4 << 20, Some(1024), 12).unwrap();
+        let mut client = KvClient::connect(server.addr()).unwrap();
+        let val = vec![0u8; 1024];
+        let reqs: Vec<Request> = (0..4)
+            .map(|i| Request::Put { key: format!("t{i}").into_bytes(), value: val.clone() })
+            .collect();
+        let resps = client.call_batch(&reqs).unwrap();
+        assert_eq!(resps.len(), 4);
+        assert!(
+            resps.iter().all(|r| matches!(r, Response::Throttled { .. })),
+            "got {resps:?}"
+        );
+        // The mapped API degrades the same ops to false, not errors.
+        let pairs: Vec<(&[u8], &[u8])> = reqs
+            .iter()
+            .map(|r| match r {
+                Request::Put { key, value } => (key.as_slice(), value.as_slice()),
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_eq!(client.multi_put(&pairs).unwrap(), vec![false; 4]);
+        server.stop();
+    }
+
+    #[test]
+    fn tcp_byzantine_tampers_batched_hits_per_op() {
+        let byz = crate::net::faults::ByzantineSpec::new(6, 1.0);
+        let server = ProducerStoreServer::start_chaotic(
+            "127.0.0.1:0",
+            1 << 20,
+            None,
+            7,
+            2,
+            None,
+            Some(byz),
+        )
+        .unwrap();
+        let mut client = KvClient::connect(server.addr()).unwrap();
+        let keys: Vec<Vec<u8>> = (0..12).map(|i| format!("zk{i}").into_bytes()).collect();
+        let pairs: Vec<(&[u8], &[u8])> =
+            keys.iter().map(|k| (k.as_slice(), [0x44u8; 64].as_slice())).collect();
+        assert_eq!(client.multi_put(&pairs).unwrap(), vec![true; 12]);
+        let key_refs: Vec<&[u8]> = keys.iter().map(Vec::as_slice).collect();
+        // Every batched hit is tampered independently — and still
+        // decodes, so the corruption reaches the envelope layer.
+        let got = client.multi_get(&key_refs).unwrap();
+        for (i, v) in got.iter().enumerate() {
+            let v = v.as_ref().expect("tampered hits still decode");
+            assert_ne!(v, &vec![0x44u8; 64], "op {i} tamper was a no-op");
+        }
+        assert_eq!(server.byzantine_tampered(), 12);
+        server.stop();
+    }
+
+    #[test]
+    fn client_poisons_after_io_error_and_refuses_reuse() {
+        let server = ProducerStoreServer::start("127.0.0.1:0", 1 << 20, None, 13).unwrap();
+        let mut client = KvClient::connect(server.addr()).unwrap();
+        assert!(client.put(b"k", b"v").unwrap());
+        assert!(!client.is_poisoned());
+        // Kill the server: the next call hits a real I/O error...
+        server.stop();
+        assert!(client.get(b"k").is_err());
+        assert!(client.is_poisoned());
+        // ...and the connection is now poisoned: refused fast with
+        // BrokenPipe, never a desynced read of a stale response.
+        let err = client.get(b"k").unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::BrokenPipe);
+        let keys: [&[u8]; 2] = [b"k", b"k2"];
+        assert_eq!(client.multi_get(&keys).unwrap_err().kind(), io::ErrorKind::BrokenPipe);
+        // The infallible transport face degrades to per-op errors (the
+        // secure layer sees misses), not misattributed responses.
+        let resps = KvTransport::call_multi(&mut client, 0, vec![Request::Ping]);
+        assert!(matches!(resps[0], Response::Error(_)), "got {resps:?}");
     }
 
     #[test]

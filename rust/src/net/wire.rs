@@ -11,6 +11,25 @@
 //! in-process manager, and the simulator. Encoders append into
 //! caller-owned buffers (`encode_into`) so steady-state connections
 //! reuse one scratch buffer per direction.
+//!
+//! ## Batch frames (protocol v3)
+//!
+//! `MultiGet` / `MultiPut` / `MultiDelete` frames carry up to
+//! [`MAX_BATCH_OPS`] homogeneous ops in one frame, amortizing the
+//! per-request round trip that dominates remote-memory latency. A batch
+//! request is answered by exactly one batch response carrying one
+//! status per op, *in request order* — a miss, rejection, or throttle
+//! on one op never fails its siblings (the partial-failure contract the
+//! consumer layers rely on). Batches are not transactional: ops execute
+//! independently, interleaved with other connections' traffic. The per-
+//! frame op cap is advertised in the handshake hello and the effective
+//! limit is the pairwise minimum, so a frame a peer cannot decode is
+//! never sent (see [`crate::net::control`]). Batch ops stay *outside*
+//! the [`Request`]/[`RequestRef`]/[`Response`] enums: the single-op
+//! types keep their exhaustive matches everywhere (manager, simulator,
+//! transports), and batch framing lives in the dedicated
+//! `encode_multi_*` / [`decode_batch_request`] /
+//! [`decode_batch_response`] entry points below.
 
 use std::io::{self, Read, Write};
 
@@ -56,6 +75,9 @@ const TAG_GET: u8 = 1;
 const TAG_PUT: u8 = 2;
 const TAG_DELETE: u8 = 3;
 const TAG_PING: u8 = 4;
+const TAG_MULTI_GET: u8 = 5;
+const TAG_MULTI_PUT: u8 = 6;
+const TAG_MULTI_DELETE: u8 = 7;
 
 const TAG_VALUE: u8 = 10;
 const TAG_NOT_FOUND: u8 = 11;
@@ -65,10 +87,17 @@ const TAG_DELETED: u8 = 14;
 const TAG_THROTTLED: u8 = 15;
 const TAG_PONG: u8 = 16;
 const TAG_ERROR: u8 = 17;
+const TAG_BATCH: u8 = 18;
 
 /// Hard cap on frame size (16 MB) — malformed/hostile lengths are
 /// rejected rather than allocated.
 pub const MAX_FRAME: usize = 16 << 20;
+
+/// Most ops one batch frame may carry. Advertised in the handshake
+/// hello; the effective per-connection limit is the pairwise minimum,
+/// so clients chunk larger batches before encoding. Decoders enforce it
+/// so a hostile count cannot force a huge table allocation.
+pub const MAX_BATCH_OPS: usize = 1024;
 
 pub(crate) fn put_bytes(out: &mut Vec<u8>, b: &[u8]) {
     out.extend_from_slice(&(b.len() as u32).to_le_bytes());
@@ -113,6 +142,8 @@ pub enum CodecError {
     UnknownTag(u8),
     TrailingBytes,
     FrameTooLarge(usize),
+    /// Batch frame declares more ops than [`MAX_BATCH_OPS`].
+    BatchTooLarge(usize),
     BadUtf8,
 }
 
@@ -224,6 +255,161 @@ impl Request {
     pub fn wire_bytes(&self) -> usize {
         self.to_ref().wire_bytes()
     }
+
+    /// Which batch frame this single-op request belongs in (`None` for
+    /// `Ping`, which has no batched form).
+    pub fn batch_kind(&self) -> Option<BatchKind> {
+        match self {
+            Request::Get { .. } => Some(BatchKind::Get),
+            Request::Put { .. } => Some(BatchKind::Put),
+            Request::Delete { .. } => Some(BatchKind::Delete),
+            Request::Ping => None,
+        }
+    }
+}
+
+/// The three homogeneous batch frame kinds.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BatchKind {
+    Get,
+    Put,
+    Delete,
+}
+
+/// Borrowed view of one op inside a decoded batch request frame
+/// (key/value slices point into the frame buffer, like [`RequestRef`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BatchOpRef<'a> {
+    Get { key: &'a [u8] },
+    Put { key: &'a [u8], value: &'a [u8] },
+    Delete { key: &'a [u8] },
+}
+
+impl<'a> BatchOpRef<'a> {
+    /// The op's key (every batch op has exactly one).
+    pub fn key(&self) -> &'a [u8] {
+        match self {
+            BatchOpRef::Get { key }
+            | BatchOpRef::Put { key, .. }
+            | BatchOpRef::Delete { key } => key,
+        }
+    }
+}
+
+/// True when `frame` opens with a batch request tag — the server's
+/// dispatch test between the single-op and batch paths.
+pub fn is_batch_request(frame: &[u8]) -> bool {
+    matches!(frame.first(), Some(&TAG_MULTI_GET | &TAG_MULTI_PUT | &TAG_MULTI_DELETE))
+}
+
+fn batch_header(out: &mut Vec<u8>, tag: u8, count: usize) {
+    out.push(tag);
+    out.extend_from_slice(&(count as u32).to_le_bytes());
+}
+
+/// Append a `MultiGet` request payload: `count` keys, answered per-op.
+pub fn encode_multi_get_into(out: &mut Vec<u8>, keys: &[&[u8]]) {
+    batch_header(out, TAG_MULTI_GET, keys.len());
+    for k in keys {
+        put_bytes(out, k);
+    }
+}
+
+/// Append a `MultiPut` request payload: `count` key/value pairs.
+pub fn encode_multi_put_into(out: &mut Vec<u8>, pairs: &[(&[u8], &[u8])]) {
+    batch_header(out, TAG_MULTI_PUT, pairs.len());
+    for (k, v) in pairs {
+        put_bytes(out, k);
+        put_bytes(out, v);
+    }
+}
+
+/// Append a `MultiDelete` request payload: `count` keys.
+pub fn encode_multi_delete_into(out: &mut Vec<u8>, keys: &[&[u8]]) {
+    batch_header(out, TAG_MULTI_DELETE, keys.len());
+    for k in keys {
+        put_bytes(out, k);
+    }
+}
+
+/// Decode a batch request frame into `ops` (cleared first), borrowing
+/// key/value bytes from `buf`. Allocation is bounded before any table
+/// growth: the declared count must fit [`MAX_BATCH_OPS`] *and* the
+/// remaining frame bytes (every op costs ≥ 4 bytes on the wire), so a
+/// hostile count out of a small frame is rejected, not allocated.
+pub fn decode_batch_request<'a>(
+    buf: &'a [u8],
+    ops: &mut Vec<BatchOpRef<'a>>,
+) -> Result<(), CodecError> {
+    ops.clear();
+    if buf.is_empty() {
+        return Err(CodecError::Truncated);
+    }
+    let tag = buf[0];
+    if !matches!(tag, TAG_MULTI_GET | TAG_MULTI_PUT | TAG_MULTI_DELETE) {
+        return Err(CodecError::UnknownTag(tag));
+    }
+    let mut off = 1usize;
+    let n = take_u32(buf, &mut off)? as usize;
+    if n > MAX_BATCH_OPS {
+        return Err(CodecError::BatchTooLarge(n));
+    }
+    if n > (buf.len() - off) / 4 {
+        return Err(CodecError::Truncated);
+    }
+    ops.reserve(n);
+    for _ in 0..n {
+        let op = match tag {
+            TAG_MULTI_GET => BatchOpRef::Get { key: take_bytes_ref(buf, &mut off)? },
+            TAG_MULTI_PUT => BatchOpRef::Put {
+                key: take_bytes_ref(buf, &mut off)?,
+                value: take_bytes_ref(buf, &mut off)?,
+            },
+            _ => BatchOpRef::Delete { key: take_bytes_ref(buf, &mut off)? },
+        };
+        ops.push(op);
+    }
+    if off != buf.len() {
+        return Err(CodecError::TrailingBytes);
+    }
+    Ok(())
+}
+
+/// Open a batch response payload in `out`: tag + op count. The caller
+/// then appends one encoded single-op [`Response`] per op, in request
+/// order (GET hits may use [`encode_value_response`] for the zero-copy
+/// path).
+pub fn encode_batch_response_header(out: &mut Vec<u8>, count: u32) {
+    out.push(TAG_BATCH);
+    out.extend_from_slice(&count.to_le_bytes());
+}
+
+/// Decode a batch response frame into per-op responses, in request
+/// order. Count is allocation-bounded like the request decoder (every
+/// sub-response costs ≥ 1 byte).
+pub fn decode_batch_response(buf: &[u8]) -> Result<Vec<Response>, CodecError> {
+    if buf.is_empty() {
+        return Err(CodecError::Truncated);
+    }
+    if buf[0] != TAG_BATCH {
+        return Err(CodecError::UnknownTag(buf[0]));
+    }
+    let mut off = 1usize;
+    let n = take_u32(buf, &mut off)? as usize;
+    if n > MAX_BATCH_OPS {
+        return Err(CodecError::BatchTooLarge(n));
+    }
+    if n > buf.len() - off {
+        return Err(CodecError::Truncated);
+    }
+    let mut resps = Vec::with_capacity(n);
+    for _ in 0..n {
+        resps.push(Response::decode_at(buf, &mut off)?);
+    }
+    if off != buf.len() {
+        return Err(CodecError::TrailingBytes);
+    }
+    Ok(resps)
 }
 
 /// Append a `Response::Value` payload built from a borrowed value slice:
@@ -265,34 +451,43 @@ impl Response {
     }
 
     pub fn decode(buf: &[u8]) -> Result<Response, CodecError> {
-        if buf.is_empty() {
-            return Err(CodecError::Truncated);
-        }
-        let mut off = 1usize;
-        let resp = match buf[0] {
-            TAG_VALUE => Response::Value(take_bytes(buf, &mut off)?),
-            TAG_NOT_FOUND => Response::NotFound,
-            TAG_STORED => Response::Stored,
-            TAG_REJECTED => Response::Rejected,
-            TAG_DELETED => {
-                if buf.len() < 2 {
-                    return Err(CodecError::Truncated);
-                }
-                off += 1;
-                Response::Deleted(buf[1] != 0)
-            }
-            TAG_THROTTLED => Response::Throttled { retry_after_us: take_u64(buf, &mut off)? },
-            TAG_PONG => Response::Pong,
-            TAG_ERROR => {
-                let bytes = take_bytes(buf, &mut off)?;
-                Response::Error(String::from_utf8(bytes).map_err(|_| CodecError::BadUtf8)?)
-            }
-            t => return Err(CodecError::UnknownTag(t)),
-        };
+        let mut off = 0usize;
+        let resp = Self::decode_at(buf, &mut off)?;
         if off != buf.len() {
             return Err(CodecError::TrailingBytes);
         }
         Ok(resp)
+    }
+
+    /// Decode one response starting at `*off` (responses are self-
+    /// delimiting, so batch frames concatenate them back to back).
+    fn decode_at(buf: &[u8], off: &mut usize) -> Result<Response, CodecError> {
+        if *off >= buf.len() {
+            return Err(CodecError::Truncated);
+        }
+        let tag = buf[*off];
+        *off += 1;
+        Ok(match tag {
+            TAG_VALUE => Response::Value(take_bytes(buf, off)?),
+            TAG_NOT_FOUND => Response::NotFound,
+            TAG_STORED => Response::Stored,
+            TAG_REJECTED => Response::Rejected,
+            TAG_DELETED => {
+                if *off >= buf.len() {
+                    return Err(CodecError::Truncated);
+                }
+                let b = buf[*off];
+                *off += 1;
+                Response::Deleted(b != 0)
+            }
+            TAG_THROTTLED => Response::Throttled { retry_after_us: take_u64(buf, off)? },
+            TAG_PONG => Response::Pong,
+            TAG_ERROR => {
+                let bytes = take_bytes(buf, off)?;
+                Response::Error(String::from_utf8(bytes).map_err(|_| CodecError::BadUtf8)?)
+            }
+            t => return Err(CodecError::UnknownTag(t)),
+        })
     }
 
     /// Exact bytes on the wire (frame header + payload), without encoding.
@@ -311,11 +506,18 @@ impl Response {
     }
 }
 
-/// Write one length-prefixed frame.
+/// Write one length-prefixed frame and flush it to the wire.
 pub fn write_frame<W: Write>(w: &mut W, payload: &[u8]) -> io::Result<()> {
-    w.write_all(&(payload.len() as u32).to_le_bytes())?;
-    w.write_all(payload)?;
+    write_frame_noflush(w, payload)?;
     w.flush()
+}
+
+/// [`write_frame`] without the trailing flush: pipelined senders queue
+/// several frames into one buffered write and flush once per window,
+/// collapsing per-request syscalls.
+pub fn write_frame_noflush<W: Write>(w: &mut W, payload: &[u8]) -> io::Result<()> {
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(payload)
 }
 
 /// Read one length-prefixed frame into a reusable buffer (resized in
@@ -515,6 +717,142 @@ mod tests {
             let _ = Request::decode(&buf);
             let _ = RequestRef::decode(&buf);
             let _ = Response::decode(&buf);
+        }
+    }
+
+    fn batch_get_frame(keys: &[&[u8]]) -> Vec<u8> {
+        let mut out = Vec::new();
+        encode_multi_get_into(&mut out, keys);
+        out
+    }
+
+    #[test]
+    fn batch_request_round_trips() {
+        let keys: Vec<Vec<u8>> = (0..5).map(|i| format!("key{i}").into_bytes()).collect();
+        let key_refs: Vec<&[u8]> = keys.iter().map(Vec::as_slice).collect();
+        let mut ops = Vec::new();
+
+        decode_batch_request(&batch_get_frame(&key_refs), &mut ops).unwrap();
+        assert_eq!(ops.len(), 5);
+        for (op, k) in ops.iter().zip(&keys) {
+            assert_eq!(*op, BatchOpRef::Get { key: k.as_slice() });
+            assert_eq!(op.key(), k.as_slice());
+        }
+
+        let vals: Vec<Vec<u8>> = (0..5).map(|i| vec![i as u8; 32]).collect();
+        let pairs: Vec<(&[u8], &[u8])> = key_refs
+            .iter()
+            .zip(&vals)
+            .map(|(k, v)| (*k, v.as_slice()))
+            .collect();
+        let mut enc = Vec::new();
+        encode_multi_put_into(&mut enc, &pairs);
+        assert!(is_batch_request(&enc));
+        decode_batch_request(&enc, &mut ops).unwrap();
+        assert_eq!(ops.len(), 5);
+        for (op, (k, v)) in ops.iter().zip(&pairs) {
+            assert_eq!(*op, BatchOpRef::Put { key: k, value: v });
+        }
+
+        let mut enc = Vec::new();
+        encode_multi_delete_into(&mut enc, &key_refs);
+        decode_batch_request(&enc, &mut ops).unwrap();
+        assert_eq!(ops[0], BatchOpRef::Delete { key: b"key0" });
+    }
+
+    #[test]
+    fn empty_batch_is_legal() {
+        let enc = batch_get_frame(&[]);
+        let mut ops = vec![BatchOpRef::Get { key: b"stale" }];
+        decode_batch_request(&enc, &mut ops).unwrap();
+        assert!(ops.is_empty(), "decode must clear the reused table");
+
+        let mut resp = Vec::new();
+        encode_batch_response_header(&mut resp, 0);
+        assert_eq!(decode_batch_response(&resp).unwrap(), vec![]);
+    }
+
+    #[test]
+    fn max_size_batch_round_trips_and_one_more_is_rejected() {
+        let key = b"k".as_slice();
+        let keys: Vec<&[u8]> = vec![key; MAX_BATCH_OPS];
+        let enc = batch_get_frame(&keys);
+        let mut ops = Vec::new();
+        decode_batch_request(&enc, &mut ops).unwrap();
+        assert_eq!(ops.len(), MAX_BATCH_OPS);
+
+        // Same frame, count inflated past the cap: refused before any
+        // table allocation, with the count named.
+        let mut oversized = enc.clone();
+        oversized[1..5].copy_from_slice(&((MAX_BATCH_OPS + 1) as u32).to_le_bytes());
+        assert_eq!(
+            decode_batch_request(&oversized, &mut ops),
+            Err(CodecError::BatchTooLarge(MAX_BATCH_OPS + 1))
+        );
+        // A huge count out of a tiny frame is Truncated, not allocated.
+        let mut tiny = batch_get_frame(&[b"k".as_slice()]);
+        tiny[1..5].copy_from_slice(&1000u32.to_le_bytes());
+        assert_eq!(decode_batch_request(&tiny, &mut ops), Err(CodecError::Truncated));
+    }
+
+    #[test]
+    fn batch_request_truncated_at_every_boundary_errors_cleanly() {
+        let keys: Vec<Vec<u8>> = (0..4).map(|i| format!("some-key-{i}").into_bytes()).collect();
+        let vals: Vec<Vec<u8>> = (0..4).map(|i| vec![i as u8; 17]).collect();
+        let pairs: Vec<(&[u8], &[u8])> =
+            keys.iter().zip(&vals).map(|(k, v)| (k.as_slice(), v.as_slice())).collect();
+        let mut enc = Vec::new();
+        encode_multi_put_into(&mut enc, &pairs);
+        let mut ops = Vec::new();
+        for cut in 0..enc.len() {
+            let r = decode_batch_request(&enc[..cut], &mut ops);
+            assert!(r.is_err(), "prefix of {cut}/{} bytes decoded", enc.len());
+        }
+        decode_batch_request(&enc, &mut ops).unwrap();
+    }
+
+    #[test]
+    fn batch_response_round_trips_with_per_op_status() {
+        let resps = vec![
+            Response::Value(vec![1, 2, 3]),
+            Response::NotFound,
+            Response::Stored,
+            Response::Rejected,
+            Response::Deleted(true),
+            Response::Deleted(false),
+            Response::Throttled { retry_after_us: 77 },
+            Response::Error("one bad op".into()),
+            Response::Value(vec![]),
+        ];
+        let mut enc = Vec::new();
+        encode_batch_response_header(&mut enc, resps.len() as u32);
+        for r in &resps {
+            r.encode_into(&mut enc);
+        }
+        assert_eq!(decode_batch_response(&enc).unwrap(), resps);
+        // Truncated at every boundary: clean error, never a panic and
+        // never a short silently-accepted batch.
+        for cut in 0..enc.len() {
+            assert!(decode_batch_response(&enc[..cut]).is_err(), "cut={cut}");
+        }
+    }
+
+    #[test]
+    fn batch_fuzz_decode_never_panics() {
+        let mut rng = Rng::new(93);
+        let mut ops = Vec::new();
+        for _ in 0..20_000 {
+            let len = rng.below(96) as usize;
+            let mut buf: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+            let _ = decode_batch_request(&buf, &mut ops);
+            let _ = decode_batch_response(&buf);
+            // Bias toward valid tags so field decoding is fuzzed too.
+            if !buf.is_empty() {
+                buf[0] = 5 + (rng.below(3) as u8);
+                let _ = decode_batch_request(&buf, &mut ops);
+                buf[0] = TAG_BATCH;
+                let _ = decode_batch_response(&buf);
+            }
         }
     }
 

@@ -34,10 +34,29 @@ fn fmt_ns(ns: f64) -> String {
     }
 }
 
+/// True when the short deterministic smoke mode is requested
+/// (`MEMTRADE_BENCH_SMOKE=1`, set by CI's bench-smoke job): benches
+/// shrink their measurement windows ~10x so the job finishes in
+/// seconds while still emitting the same JSON artifacts. Relative
+/// numbers (speedups) stay meaningful; absolute ones get noisier.
+pub fn smoke() -> bool {
+    std::env::var_os("MEMTRADE_BENCH_SMOKE").is_some_and(|v| v != "0" && !v.is_empty())
+}
+
+/// `normal_ms` scaled for the current mode ([`smoke`] divides by 10,
+/// floored at 60 ms so every measurement still gets real samples).
+pub fn run_for(normal_ms: u64) -> Duration {
+    if smoke() {
+        Duration::from_millis((normal_ms / 10).max(60))
+    } else {
+        Duration::from_millis(normal_ms)
+    }
+}
+
 /// Run `f` repeatedly for ~`target` wall time (after warmup), sampling
 /// per-call latency in batches; prints a criterion-like row.
 pub fn bench<F: FnMut()>(name: &str, mut f: F) -> BenchResult {
-    bench_with_target(name, Duration::from_millis(800), &mut f)
+    bench_with_target(name, run_for(800), &mut f)
 }
 
 pub fn bench_with_target<F: FnMut()>(name: &str, target: Duration, f: &mut F) -> BenchResult {

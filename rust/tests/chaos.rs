@@ -8,13 +8,38 @@
 //! before it runs, so a red CI job is replayable locally:
 //! `cargo run --release -- chaos --seed <seed> --mix <mix>`.
 
-use memtrade::consumer::client::SecureKv;
+use memtrade::consumer::client::{KvTransport, SecureKv};
 use memtrade::market::chaos::{run_chaos, ChaosConfig, ChaosMix, ChaosOutcome};
 use memtrade::net::faults::{ByzantineSpec, FaultPlan, FaultSpec};
 use memtrade::net::tcp::{KvClient, ProducerStoreServer};
 use memtrade::net::wire::{Request, Response};
 use memtrade::util::rng::Rng;
 use std::time::Duration;
+
+/// A `KvClient` as a transport that *remembers* I/O death, so faulty-
+/// pair schedules can reconnect — and that sends `SecureKv` multi-ops
+/// as true batch frames (the point of the batch fault schedules).
+struct ClientTransport<'a> {
+    client: &'a mut KvClient,
+    dead: bool,
+}
+
+impl KvTransport for ClientTransport<'_> {
+    fn call(&mut self, _p: u32, req: Request) -> Response {
+        self.client.call(&req).unwrap_or_else(|_| {
+            self.dead = true;
+            Response::Error("io".into())
+        })
+    }
+
+    fn call_multi(&mut self, _p: u32, reqs: Vec<Request>) -> Vec<Response> {
+        let n = reqs.len();
+        self.client.call_batch(&reqs).unwrap_or_else(|_| {
+            self.dead = true;
+            vec![Response::Error("io".into()); n]
+        })
+    }
+}
 
 fn assert_invariants(o: &ChaosOutcome) {
     println!("chaos outcome: {}", o.report());
@@ -197,6 +222,145 @@ fn chaos_data_plane_faulty_pairs() {
     // reconnecting client each).
     for seed in [11, 12, 13, 14, 15, 16, 17, 18, 19, 20, 21, 22] {
         run_light_schedule(seed);
+    }
+}
+
+/// One seeded schedule of *batch* traffic against a chaotic pair: every
+/// op travels inside a MultiGet/MultiPut frame, so write-side truncation
+/// cuts between batch ops and duplication doubles whole batch responses
+/// — the frames either decode fully or the connection dies; a batch
+/// must never produce a wrong verified value or a panic.
+fn run_batch_schedule(seed: u64) {
+    println!("chaos schedule: batched data-plane pair seed={seed}");
+    let mut rng = Rng::new(seed ^ 0xBA7C);
+    let server_plan = FaultPlan::new(seed ^ 0x5B, light_spec(&mut rng), light_spec(&mut rng));
+    let client_plan = FaultPlan::new(seed ^ 0xCB, light_spec(&mut rng), light_spec(&mut rng));
+    let server = ProducerStoreServer::start_chaotic(
+        "127.0.0.1:0",
+        8 << 20,
+        None,
+        seed,
+        4,
+        Some(server_plan.clone()),
+        None,
+    )
+    .unwrap();
+    let addr = server.addr().to_string();
+
+    let mut secure = SecureKv::with_iv_seed(Some([0xBB; 16]), true, 1, seed);
+    let mut client: Option<KvClient> = None;
+    let mut conn_seq = 0u64;
+    let value = |k: u64| -> Vec<u8> { vec![(seed ^ k) as u8; 48 + (k as usize % 48)] };
+    let mut escapes = 0u64;
+    for round in 0..60u64 {
+        if client.is_none() {
+            conn_seq += 1;
+            client = KvClient::connect_faulty(
+                &addr,
+                Duration::from_millis(500),
+                &client_plan,
+                conn_seq,
+            )
+            .ok()
+            .map(|mut c| {
+                let _ = c.set_call_timeout(Some(Duration::from_millis(100)));
+                c.set_window(2);
+                c
+            });
+        }
+        let Some(c) = client.as_mut() else { continue };
+        let mut t = ClientTransport { client: c, dead: false };
+        let ks: Vec<u64> = (0..6).map(|j| (round * 3 + j) % 30).collect();
+        let keys: Vec<Vec<u8>> = ks.iter().map(|k| format!("bk{k}").into_bytes()).collect();
+        if round % 3 == 0 {
+            let vals: Vec<Vec<u8>> = ks.iter().map(|&k| value(k)).collect();
+            let items: Vec<(&[u8], &[u8])> = keys
+                .iter()
+                .zip(&vals)
+                .map(|(k, v)| (k.as_slice(), v.as_slice()))
+                .collect();
+            let _ = secure.multi_put(&mut t, &items);
+        } else {
+            let key_refs: Vec<&[u8]> = keys.iter().map(Vec::as_slice).collect();
+            for (j, got) in secure.multi_get(&mut t, &key_refs).into_iter().enumerate() {
+                if let Some(v) = got {
+                    if v != value(ks[j]) {
+                        escapes += 1;
+                    }
+                }
+            }
+        }
+        if t.dead {
+            client = None;
+        }
+    }
+    assert_eq!(escapes, 0, "integrity escape in a batch (seed {seed})");
+
+    // Disarm both sides: a clean connection's batches must round-trip,
+    // proving the store survived the batched storm undamaged.
+    server_plan.disarm();
+    client_plan.disarm();
+    let mut clean = KvClient::connect(server.addr()).unwrap();
+    let pairs: [(&[u8], &[u8]); 2] = [(b"post-a", b"1"), (b"post-b", b"2")];
+    assert_eq!(clean.multi_put(&pairs).unwrap(), vec![true, true]);
+    let keys: [&[u8]; 2] = [b"post-a", b"post-b"];
+    assert_eq!(
+        clean.multi_get(&keys).unwrap(),
+        vec![Some(b"1".to_vec()), Some(b"2".to_vec())]
+    );
+    server.stop();
+}
+
+#[test]
+fn chaos_batch_frames_under_faulty_pairs() {
+    for seed in [31, 32, 33, 34, 35, 36] {
+        run_batch_schedule(seed);
+    }
+}
+
+/// Batched GETs against a producer that tampers *every* hit: the
+/// envelope must reject each batched op individually — 100% caught,
+/// zero escapes, exactly as the single-op guarantee.
+#[test]
+fn chaos_byzantine_batches_caught_at_full_tamper_rate() {
+    for seed in [91, 92] {
+        println!("chaos schedule: byzantine batches tamper_p=1.0 seed={seed}");
+        let server = ProducerStoreServer::start_chaotic(
+            "127.0.0.1:0",
+            8 << 20,
+            None,
+            seed,
+            2,
+            None,
+            Some(ByzantineSpec::new(seed, 1.0)),
+        )
+        .unwrap();
+        let mut client = KvClient::connect(server.addr()).unwrap();
+        let mut secure = SecureKv::with_iv_seed(Some([0x99; 16]), true, 1, seed);
+        const N: u64 = 96;
+        {
+            let mut t = ClientTransport { client: &mut client, dead: false };
+            let keys: Vec<Vec<u8>> = (0..N).map(|i| format!("k{i}").into_bytes()).collect();
+            let vals: Vec<Vec<u8>> = (0..N).map(|i| vec![i as u8; 80]).collect();
+            let items: Vec<(&[u8], &[u8])> = keys
+                .iter()
+                .zip(&vals)
+                .map(|(k, v)| (k.as_slice(), v.as_slice()))
+                .collect();
+            assert_eq!(secure.multi_put(&mut t, &items), vec![true; N as usize]);
+            // One giant multi-get: every op inside the batch is served
+            // tampered, and every single one must die at the envelope.
+            let key_refs: Vec<&[u8]> = keys.iter().map(Vec::as_slice).collect();
+            let got = secure.multi_get(&mut t, &key_refs);
+            assert!(
+                got.iter().all(Option::is_none),
+                "a tampered batched op escaped the envelope (seed {seed})"
+            );
+        }
+        assert_eq!(secure.stats.integrity_failures, N, "seed {seed}");
+        assert_eq!(secure.stats.hits, 0, "seed {seed}");
+        assert_eq!(server.byzantine_tampered(), N, "seed {seed}");
+        server.stop();
     }
 }
 

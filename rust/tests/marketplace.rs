@@ -207,6 +207,84 @@ fn marketplace_survives_producer_failure() {
 }
 
 #[test]
+fn pool_batches_fan_out_per_producer_and_degrade_per_op_on_kill() {
+    let broker = BrokerServer::start("127.0.0.1:0", broker_cfg(800), server_cfg()).unwrap();
+    let mut agents =
+        vec![start_agent(&broker, 1, 16 * SLAB), start_agent(&broker, 2, 16 * SLAB)];
+    let mut pool = RemotePool::connect(RemotePoolConfig {
+        consumer: 11,
+        broker: broker.addr().to_string(),
+        target_slabs: 24,
+        min_slabs: 1,
+        lease_ttl: Duration::from_secs(10),
+        renew_margin: Duration::from_secs(2),
+        maintain_every: Duration::from_millis(20),
+        data_window: 2,
+        ..Default::default()
+    })
+    .unwrap();
+    assert!(wait_for(Duration::from_secs(5), || {
+        pool.maintain();
+        pool.held_slabs() >= 20 && pool.distinct_endpoints().len() >= 2
+    }));
+    assert!(wait_for(Duration::from_secs(3), || {
+        agents.iter().all(|a| {
+            let max = a.store().map(|s| s.max_bytes()).unwrap_or(0) as u64;
+            max == a.target_bytes() && max > 0
+        })
+    }));
+
+    // A batched working set: multi_put routes per key across both
+    // producers' slots, fanning out one batch frame per producer.
+    let mut secure = SecureKv::with_iv_seed(Some([8u8; 16]), true, 1, 4);
+    let keys: Vec<Vec<u8>> = (0..400).map(|i| format!("bkey{i}").into_bytes()).collect();
+    let vals: Vec<Vec<u8>> = (0..400).map(|i| vec![(i % 251) as u8; 128]).collect();
+    let items: Vec<(&[u8], &[u8])> =
+        keys.iter().zip(&vals).map(|(k, v)| (k.as_slice(), v.as_slice())).collect();
+    let stored = secure.multi_put(&mut pool, &items);
+    let n_stored = stored.iter().filter(|&&s| s).count();
+    assert!(n_stored >= 360, "only {n_stored}/400 batched puts acknowledged");
+
+    let key_refs: Vec<&[u8]> = keys.iter().map(Vec::as_slice).collect();
+    let got = secure.multi_get(&mut pool, &key_refs);
+    let mut hits = 0;
+    for (i, g) in got.iter().enumerate() {
+        if let Some(v) = g {
+            assert_eq!(v, &vals[i], "batched op {i} returned wrong bytes");
+            hits += 1;
+        }
+    }
+    assert!(hits >= n_stored * 95 / 100, "batched hits {hits}/{n_stored}");
+    assert_eq!(secure.stats.integrity_failures, 0);
+
+    // Kill one producer: batched gets spanning both producers must
+    // degrade *per op* — survivor ops still hit, dead ops are misses,
+    // never an error and never a poisoned sibling.
+    agents[0].kill();
+    let got = secure.multi_get(&mut pool, &key_refs);
+    let mut post_hits = 0;
+    for (i, g) in got.iter().enumerate() {
+        if let Some(v) = g {
+            assert_eq!(v, &vals[i], "post-kill batched op {i} returned wrong bytes");
+            post_hits += 1;
+        }
+    }
+    assert!(post_hits > 0, "survivor's batched data lost");
+    assert!(post_hits < n_stored, "dead producer's batched data cannot all survive");
+    assert_eq!(secure.stats.integrity_failures, 0);
+
+    // Batched deletes on the survivor's keys synchronize its store.
+    let deleted = secure.multi_delete(&mut pool, &key_refs);
+    assert_eq!(deleted.len(), 400);
+    assert!(deleted.iter().any(|&d| d), "no batched delete reached the survivor");
+    assert!(secure.is_empty());
+
+    drop(pool);
+    agents.remove(1).stop();
+    broker.stop();
+}
+
+#[test]
 fn lease_renewal_sustains_and_expiry_shrinks_store() {
     let broker = BrokerServer::start("127.0.0.1:0", broker_cfg(300), server_cfg()).unwrap();
     let agent = start_agent(&broker, 1, 16 * SLAB);
@@ -367,7 +445,7 @@ fn stalled_producer_surfaces_as_bounded_miss_not_a_wedge() {
                         let keep = || !stop.load(Ordering::Relaxed);
                         let shook =
                             server_handshake_patient(&mut reader, &mut writer, DATA_MAGIC, keep);
-                        if !matches!(shook, Ok(true)) {
+                        if !matches!(shook, Ok(Some(_))) {
                             return;
                         }
                         // Swallow requests; answer nothing, ever.
@@ -460,7 +538,7 @@ fn mismatched_control_response_drops_the_connection() {
         let mut writer = BufWriter::new(stream);
         let keep = || !stop2.load(Ordering::Relaxed);
         let shook = server_handshake_patient(&mut reader, &mut writer, CONTROL_MAGIC, keep);
-        if !matches!(shook, Ok(true)) {
+        if !matches!(shook, Ok(Some(_))) {
             return;
         }
         let mut frame = Vec::new();
