@@ -9,7 +9,7 @@
 //! Results are recorded in EXPERIMENTS.md §Table 2.
 
 use memtrade::core::SimTime;
-use memtrade::metrics::{ms, pct, Table};
+use memtrade::util::fmt::{ms, pct, Table};
 use memtrade::sim::cluster::{ClusterSim, ClusterSimConfig, ConsumerMode};
 
 fn main() {

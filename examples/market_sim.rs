@@ -7,7 +7,7 @@
 
 use memtrade::broker::pricing::PricingStrategy;
 use memtrade::core::Money;
-use memtrade::metrics::{pct, Table};
+use memtrade::util::fmt::{pct, Table};
 use memtrade::sim::market::{MarketSim, MarketSimConfig};
 use memtrade::workload::cluster_trace::{ClusterTrace, MachineClass};
 use memtrade::workload::memcachier::MrcLibrary;

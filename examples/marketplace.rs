@@ -168,7 +168,10 @@ fn main() {
     println!("after refill: {healed}/{n} keys hit again");
     println!(
         "pool stats: grants {}, renewals {}, slots lost {}, re-requests {}",
-        pool.stats.grants, pool.stats.renewals, pool.stats.slots_lost, pool.stats.rerequests
+        pool.stats.grants.get(),
+        pool.stats.renewals.get(),
+        pool.stats.slots_lost.get(),
+        pool.stats.rerequests.get()
     );
 
     drop(pool);

@@ -17,9 +17,9 @@ use memtrade::market::{
 use memtrade::net::tcp::{KvClient, ProducerStoreServer};
 use memtrade::net::wire::{Request, Response};
 use memtrade::producer::Manager;
+use memtrade::metrics::Histogram;
 use memtrade::util::bench::{bench, header, run_for as bench_run_for, smoke};
 use memtrade::util::rng::Rng;
-use memtrade::util::stats::LatencyRecorder;
 use memtrade::workload::ycsb::YcsbWorkload;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Barrier};
@@ -95,10 +95,13 @@ fn marketplace_bench() -> String {
         assert!(secure.put(&mut pool, format!("user{i}").as_bytes(), &value));
     }
 
-    // Steady-state marketplace GET/PUT (secure KV -> pool -> TCP store).
+    // Steady-state marketplace GET/PUT (secure KV -> pool -> TCP
+    // store). Latency goes through the production instrument — the
+    // shared `metrics::Histogram`, recorded in ns — so the emitted
+    // p50/p99 fields are the same math the live system reports.
     let mut rng = Rng::new(17);
-    let mut get_rec = LatencyRecorder::new();
-    let mut put_rec = LatencyRecorder::new();
+    let get_hist = Histogram::new();
+    let put_hist = Histogram::new();
     let run_for = bench_run_for(1200);
     let t0 = Instant::now();
     let mut ops = 0u64;
@@ -107,25 +110,30 @@ fn marketplace_bench() -> String {
         let t = Instant::now();
         if rng.below(10) < 9 {
             std::hint::black_box(secure.get(&mut pool, key.as_bytes()));
-            get_rec.record(t.elapsed().as_nanos() as f64 / 1e3);
+            get_hist.record(t.elapsed().as_nanos() as u64);
         } else {
             std::hint::black_box(secure.put(&mut pool, key.as_bytes(), &value));
-            put_rec.record(t.elapsed().as_nanos() as f64 / 1e3);
+            put_hist.record(t.elapsed().as_nanos() as u64);
         }
         ops += 1;
     }
     let ops_per_sec = ops as f64 / t0.elapsed().as_secs_f64();
+    let (get_rec, put_rec) = (get_hist.snapshot(), put_hist.snapshot());
     println!(
         "{:<48} {:>14.0} ops/s",
         "marketplace_secure_90/10 (2 producers)", ops_per_sec
     );
     println!(
         "{:<48} p50 {:>7.1}µs p99 {:>7.1}µs",
-        "  get latency", get_rec.p50(), get_rec.p99()
+        "  get latency",
+        get_rec.p50() / 1e3,
+        get_rec.p99() / 1e3
     );
     println!(
         "{:<48} p50 {:>7.1}µs p99 {:>7.1}µs",
-        "  put latency", put_rec.p50(), put_rec.p99()
+        "  put latency",
+        put_rec.p50() / 1e3,
+        put_rec.p99() / 1e3
     );
 
     // Kill one producer: time until the pool is fully re-provisioned
@@ -155,13 +163,16 @@ fn marketplace_bench() -> String {
 
     let json = format!(
         "  \"marketplace\": {{\n    \"grant_to_mounted_ms\": {grant_ms:.1},\n    \
-         \"ops_per_sec\": {ops_per_sec:.0},\n    \"get_p50_us\": {:.1},\n    \
+         \"ops_per_sec\": {ops_per_sec:.0},\n    \
+         \"latency_source\": \"metrics-histogram\",\n    \
+         \"latency_samples\": {},\n    \"get_p50_us\": {:.1},\n    \
          \"get_p99_us\": {:.1},\n    \"put_p50_us\": {:.1},\n    \"put_p99_us\": {:.1},\n    \
          \"recovery_after_kill_ms\": {recovered_ms:.1}\n  }}",
-        get_rec.p50(),
-        get_rec.p99(),
-        put_rec.p50(),
-        put_rec.p99(),
+        get_rec.count() + put_rec.count(),
+        get_rec.p50() / 1e3,
+        get_rec.p99() / 1e3,
+        put_rec.p50() / 1e3,
+        put_rec.p99() / 1e3,
     );
     drop(pool);
     agents.remove(1).stop();

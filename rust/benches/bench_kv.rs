@@ -10,6 +10,7 @@
 //! number across PRs.
 
 use memtrade::kv::{KvStore, ShardedKvStore};
+use memtrade::metrics::Histogram;
 use memtrade::util::bench::{bench, header, run_for as bench_run_for, smoke};
 use memtrade::util::rng::Rng;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -75,6 +76,25 @@ fn main() {
         let k = &keys[rng.below(keys.len() as u64) as usize];
         assert!(kv.get(k).is_some());
     });
+
+    // The latency section of BENCH_kv.json comes from the production
+    // instrument — the shared `metrics::Histogram` — not bench-local
+    // math: per-op GET-hit latency recorded in nanoseconds.
+    let get_hit_hist = Histogram::new();
+    {
+        let mut rng = Rng::new(19);
+        let until = Instant::now() + bench_run_for(400);
+        while Instant::now() < until {
+            for _ in 0..256 {
+                let k = &keys[rng.below(keys.len() as u64) as usize];
+                let t0 = Instant::now();
+                std::hint::black_box(kv.get(k));
+                get_hit_hist.record(t0.elapsed().as_nanos() as u64);
+            }
+        }
+    }
+    let get_hit_snap = get_hit_hist.snapshot();
+    println!("get_hit latency (metrics::Histogram, ns): {}", get_hit_snap.render());
 
     // GET into a reused caller buffer (the owned-copy path).
     let mut rng_into = Rng::new(12);
@@ -151,9 +171,16 @@ fn main() {
          \"value_bytes\": 1024,\n  \"get_fraction\": 0.9,\n  \
          \"single_shard_ops_per_sec\": {single:.0},\n  \"shards\": {shards},\n  \
          \"sharded_ops_per_sec\": {multi:.0},\n  \"speedup\": {:.3},\n  \
-         \"get_hit_mean_ns\": {:.1}\n}}\n",
+         \"get_hit_mean_ns\": {:.1},\n  \"latency\": {{\n    \
+         \"source\": \"metrics-histogram\",\n    \"unit\": \"ns\",\n    \
+         \"samples\": {},\n    \"get_hit_p50\": {:.1},\n    \
+         \"get_hit_p99\": {:.1},\n    \"get_hit_p999\": {:.1}\n  }}\n}}\n",
         multi / single,
         get_hit.mean_ns,
+        get_hit_snap.count(),
+        get_hit_snap.p50(),
+        get_hit_snap.p99(),
+        get_hit_snap.p999(),
     );
     match std::fs::write("BENCH_kv.json", &json) {
         Ok(()) => println!("\nwrote BENCH_kv.json"),

@@ -34,6 +34,24 @@ pub struct BrokerStats {
     pub commission_earned: Money,
 }
 
+impl crate::metrics::Observe for BrokerStats {
+    fn observe(&self, prefix: &str, out: &mut crate::metrics::MetricSet) {
+        use crate::metrics::scoped;
+        out.set_counter(scoped(prefix, "requests"), self.requests);
+        out.set_counter(scoped(prefix, "slabs_requested"), self.slabs_requested);
+        out.set_counter(scoped(prefix, "slabs_granted"), self.slabs_granted);
+        out.set_counter(scoped(prefix, "requests_fully_satisfied"), self.requests_fully_satisfied);
+        out.set_counter(
+            scoped(prefix, "requests_partially_satisfied"),
+            self.requests_partially_satisfied,
+        );
+        out.set_counter(scoped(prefix, "requests_queued"), self.requests_queued);
+        out.set_counter(scoped(prefix, "requests_expired"), self.requests_expired);
+        out.set_counter(scoped(prefix, "leases_granted"), self.leases_granted);
+        out.set_gauge(scoped(prefix, "commission_earned_nd"), self.commission_earned.0);
+    }
+}
+
 struct PendingRequest {
     request: ConsumerRequest,
     remaining_slabs: u32,

@@ -30,6 +30,12 @@ pub struct ProducerRecord {
     /// §7.2 accuracy: count of (checks, over-predictions by >4%).
     pub accuracy_checks: u64,
     pub overpredictions: u64,
+    /// Observed data-plane p99 (µs) from the producer's last non-idle
+    /// heartbeat window (0 = never observed). This is *measured* server
+    /// latency, not a self-report — placement ranks by it.
+    pub observed_p99_us: u64,
+    /// Observed data-plane ops/sec from the last heartbeat window.
+    pub observed_ops_per_sec: u64,
 }
 
 impl ProducerRecord {
@@ -73,6 +79,8 @@ impl Registry {
             slabs_leased_now: 0,
             accuracy_checks: 0,
             overpredictions: 0,
+            observed_p99_us: 0,
+            observed_ops_per_sec: 0,
         });
     }
 
@@ -104,6 +112,19 @@ impl Registry {
                 }
             }
             p.usage.push(used_gb);
+        }
+    }
+
+    /// Heartbeat-carried observed telemetry: the producer's measured
+    /// data-plane tail latency and throughput over its last window. An
+    /// idle window (p99 = 0) keeps the previous latency evidence — no
+    /// new traffic is not evidence of being fast.
+    pub fn report_observed_telemetry(&mut self, id: ProducerId, p99_us: u64, ops_per_sec: u64) {
+        if let Some(p) = self.producers.get_mut(&id) {
+            p.observed_ops_per_sec = ops_per_sec;
+            if p99_us > 0 {
+                p.observed_p99_us = p99_us;
+            }
         }
     }
 
@@ -174,11 +195,15 @@ impl Registry {
                 predicted_safe_slabs: p.predicted_safe_slabs,
                 cpu_headroom: p.cpu_headroom,
                 bandwidth_headroom: p.bandwidth_headroom,
-                latency_us: request
-                    .latency_us_to
-                    .get(&p.id)
-                    .copied()
-                    .unwrap_or(200),
+                // Latency evidence, best first: the consumer's own
+                // measurement to this producer, else the broker's
+                // *observed* data-plane p99 from heartbeats, else the
+                // legacy default. A producer whose store is actually
+                // slow loses placement share even when it self-reports
+                // healthy headroom.
+                latency_us: request.latency_us_to.get(&p.id).copied().unwrap_or(
+                    if p.observed_p99_us > 0 { p.observed_p99_us } else { 200 },
+                ),
                 reputation: p.reputation(),
             })
             .collect()
@@ -255,6 +280,54 @@ mod tests {
         r.producers_mut().next().unwrap().predicted_next_usage = Some(8.1);
         r.report_usage(ProducerId(1), SimTime::ZERO, 8.0);
         assert_eq!(r.prediction_accuracy(), (2, 1));
+    }
+
+    #[test]
+    fn observed_telemetry_feeds_placement_latency() {
+        use crate::broker::placement;
+        use crate::core::config::PlacementWeights;
+        let mut r = Registry::default();
+        r.register_producer(ProducerId(1), 32.0);
+        r.register_producer(ProducerId(2), 32.0);
+        for id in [1u64, 2] {
+            r.update_producer_resources(ProducerId(id), 16, 0.9, 0.9);
+            r.producers_mut().find(|p| p.id.0 == id).unwrap().predicted_safe_slabs = 16;
+        }
+        // Producer 2's store is observed slow; producer 1 fast.
+        r.report_observed_telemetry(ProducerId(2), 8_000, 500);
+        r.report_observed_telemetry(ProducerId(1), 80, 5_000);
+        let req = crate::broker::ConsumerRequest {
+            consumer: ConsumerId(9),
+            slabs: 8,
+            min_slabs: 1,
+            lease: SimTime::from_hours(1),
+            max_price_per_slab_hour: None,
+            latency_us_to: Default::default(),
+            weights: None,
+        };
+        let states = r.producer_states(
+            &crate::broker::AvailabilityPredictor::fallback(288, 12),
+            &req,
+            SimTime::ZERO,
+        );
+        let p1 = states.iter().find(|s| s.producer.0 == 1).unwrap();
+        let p2 = states.iter().find(|s| s.producer.0 == 2).unwrap();
+        assert_eq!(p1.latency_us, 80);
+        assert_eq!(p2.latency_us, 8_000);
+        let ranked = placement::rank(&states, &req, &PlacementWeights::default());
+        assert_eq!(ranked[0].producer, ProducerId(1), "observed-slow producer ranked first");
+        // An idle window (p99 = 0) keeps the previous evidence.
+        r.report_observed_telemetry(ProducerId(2), 0, 0);
+        assert_eq!(r.producer(ProducerId(2)).unwrap().observed_p99_us, 8_000);
+        // A consumer's own measurement still wins over observed p99.
+        let mut req2 = req.clone();
+        req2.latency_us_to.insert(ProducerId(2), 50);
+        let states = r.producer_states(
+            &crate::broker::AvailabilityPredictor::fallback(288, 12),
+            &req2,
+            SimTime::ZERO,
+        );
+        assert_eq!(states.iter().find(|s| s.producer.0 == 2).unwrap().latency_us, 50);
     }
 
     #[test]

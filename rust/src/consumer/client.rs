@@ -9,8 +9,10 @@
 //! paper's overhead numbers (§7.3) can be reproduced.
 
 use crate::crypto::secure::{Envelope, OpenError, Sealed, SealedValue};
+use crate::metrics::{scoped, Histogram, MetricSet, Observe};
 use crate::net::wire::{Request, Response};
 use std::collections::{BTreeMap, HashMap};
+use std::time::Instant;
 
 /// Reserved producer index naming the recorded-miss path: a transport
 /// whose [`KvTransport::route_put`] has nowhere live to route a PUT
@@ -68,6 +70,49 @@ pub struct SecureKvStats {
     pub stranded_drops: u64,
 }
 
+impl Observe for SecureKvStats {
+    fn observe(&self, prefix: &str, out: &mut MetricSet) {
+        out.set_counter(scoped(prefix, "puts"), self.puts);
+        out.set_counter(scoped(prefix, "gets"), self.gets);
+        out.set_counter(scoped(prefix, "hits"), self.hits);
+        out.set_counter(scoped(prefix, "misses"), self.misses);
+        out.set_counter(scoped(prefix, "deletes"), self.deletes);
+        out.set_counter(scoped(prefix, "integrity_failures"), self.integrity_failures);
+        out.set_counter(scoped(prefix, "throttled"), self.throttled);
+        out.set_counter(scoped(prefix, "rejected"), self.rejected);
+        out.set_counter(scoped(prefix, "stranded_drops"), self.stranded_drops);
+    }
+}
+
+/// The secure client's latency instruments, all on the shared
+/// [`crate::metrics::Histogram`]. Single-key ops record their whole
+/// round trip in `op_us`; multi-ops record one `group_us` sample per
+/// per-producer batch plus its occupancy in `batch_ops`; every sealed /
+/// opened value records its crypto cost in `seal_ns` / `open_ns`.
+#[derive(Debug, Default)]
+pub struct ClientTelemetry {
+    /// Whole-call latency of single-key get/put/delete (µs).
+    pub op_us: Histogram,
+    /// Round-trip latency of one multi-op per-producer group (µs).
+    pub group_us: Histogram,
+    /// Batch-window occupancy: ops per per-producer group.
+    pub batch_ops: Histogram,
+    /// Envelope seal cost per value (ns).
+    pub seal_ns: Histogram,
+    /// Envelope verify + decrypt cost per value (ns).
+    pub open_ns: Histogram,
+}
+
+impl Observe for ClientTelemetry {
+    fn observe(&self, prefix: &str, out: &mut MetricSet) {
+        out.set_histogram(scoped(prefix, "op_us"), self.op_us.snapshot());
+        out.set_histogram(scoped(prefix, "group_us"), self.group_us.snapshot());
+        out.set_histogram(scoped(prefix, "batch_ops"), self.batch_ops.snapshot());
+        out.set_histogram(scoped(prefix, "seal_ns"), self.seal_ns.snapshot());
+        out.set_histogram(scoped(prefix, "open_ns"), self.open_ns.snapshot());
+    }
+}
+
 /// The secure consumer-side KV cache over leased remote memory.
 pub struct SecureKv {
     envelope: Envelope,
@@ -77,6 +122,7 @@ pub struct SecureKv {
     next_producer: u32,
     n_producers: u32,
     pub stats: SecureKvStats,
+    pub telemetry: ClientTelemetry,
 }
 
 impl SecureKv {
@@ -107,7 +153,19 @@ impl SecureKv {
             next_producer: 0,
             n_producers: n_producers.max(1),
             stats: SecureKvStats::default(),
+            telemetry: ClientTelemetry::default(),
         }
+    }
+
+    /// Everything this client observes, on the shared metrics plane:
+    /// the op counters plus the latency instruments.
+    pub fn metrics(&self) -> MetricSet {
+        let mut out = MetricSet::new();
+        self.stats.observe("secure", &mut out);
+        self.telemetry.observe("secure", &mut out);
+        out.set_gauge("secure.metadata_bytes", self.metadata_bytes() as i64);
+        out.set_gauge("secure.keys", self.len() as i64);
+        out
     }
 
     pub fn n_producers(&self) -> u32 {
@@ -153,13 +211,16 @@ impl SecureKv {
     /// The store is chosen by the transport's [`KvTransport::route_put`]
     /// (default: our round-robin cursor).
     pub fn put<T: KvTransport>(&mut self, t: &mut T, key: &[u8], value: &[u8]) -> bool {
+        let t_op = Instant::now();
         self.stats.puts += 1;
         let hint = self.next_producer % self.n_producers;
         self.next_producer = self.next_producer.wrapping_add(1);
         let producer = t.route_put(key, hint);
+        let t_seal = Instant::now();
         let Sealed { value_p, meta } = self.envelope.seal(value, producer);
+        self.telemetry.seal_ns.record(t_seal.elapsed().as_nanos() as u64);
         let k_p = meta.k_p.to_le_bytes().to_vec();
-        match t.call(producer, Request::Put { key: k_p, value: value_p }) {
+        let stored = match t.call(producer, Request::Put { key: k_p, value: value_p }) {
             Response::Stored => {
                 self.metadata.insert(key.to_vec(), meta);
                 true
@@ -172,35 +233,44 @@ impl SecureKv {
                 self.stats.rejected += 1;
                 false
             }
-        }
+        };
+        self.telemetry.op_us.record_elapsed_us(t_op);
+        stored
     }
 
     /// GET (paper §6.1): local metadata lookup, fetch under K_P, verify
     /// hash, decrypt. A failed verification discards the value (miss).
     pub fn get<T: KvTransport>(&mut self, t: &mut T, key: &[u8]) -> Option<Vec<u8>> {
+        let t_op = Instant::now();
         self.stats.gets += 1;
         let meta = match self.metadata.get(key) {
             Some(m) => m.clone(),
             None => {
                 self.stats.misses += 1;
+                self.telemetry.op_us.record_elapsed_us(t_op);
                 return None;
             }
         };
         let k_p = meta.k_p.to_le_bytes().to_vec();
-        match t.call(meta.producer_index, Request::Get { key: k_p }) {
-            Response::Value(value_p) => match self.envelope.open(&value_p, &meta) {
-                Ok(v) => {
-                    self.stats.hits += 1;
-                    Some(v)
+        let got = match t.call(meta.producer_index, Request::Get { key: k_p }) {
+            Response::Value(value_p) => {
+                let t_open = Instant::now();
+                let opened = self.envelope.open(&value_p, &meta);
+                self.telemetry.open_ns.record(t_open.elapsed().as_nanos() as u64);
+                match opened {
+                    Ok(v) => {
+                        self.stats.hits += 1;
+                        Some(v)
+                    }
+                    Err(OpenError::BadHash) | Err(OpenError::BadCiphertext) => {
+                        // Corrupted by the untrusted producer: discard.
+                        self.stats.integrity_failures += 1;
+                        self.stats.misses += 1;
+                        self.metadata.remove(key);
+                        None
+                    }
                 }
-                Err(OpenError::BadHash) | Err(OpenError::BadCiphertext) => {
-                    // Corrupted by the untrusted producer: discard.
-                    self.stats.integrity_failures += 1;
-                    self.stats.misses += 1;
-                    self.metadata.remove(key);
-                    None
-                }
-            },
+            }
             Response::Throttled { .. } => {
                 self.stats.throttled += 1;
                 self.stats.misses += 1;
@@ -212,7 +282,9 @@ impl SecureKv {
                 self.metadata.remove(key);
                 None
             }
-        }
+        };
+        self.telemetry.op_us.record_elapsed_us(t_op);
+        got
     }
 
     /// Batched GET: one result per key, in order (`None` = miss).
@@ -242,11 +314,17 @@ impl SecureKv {
                 .iter()
                 .map(|(_, m)| Request::Get { key: m.k_p.to_le_bytes().to_vec() })
                 .collect();
+            self.telemetry.batch_ops.record(group.len() as u64);
+            let t_group = Instant::now();
             let mut resps = t.call_multi(producer, reqs).into_iter();
+            self.telemetry.group_us.record_elapsed_us(t_group);
             for (i, meta) in group {
                 match resps.next() {
                     Some(Response::Value(value_p)) => {
-                        match self.envelope.open(&value_p, &meta) {
+                        let t_open = Instant::now();
+                        let opened = self.envelope.open(&value_p, &meta);
+                        self.telemetry.open_ns.record(t_open.elapsed().as_nanos() as u64);
+                        match opened {
                             Ok(v) => {
                                 self.stats.hits += 1;
                                 results[i] = Some(v);
@@ -291,7 +369,9 @@ impl SecureKv {
             let hint = self.next_producer % self.n_producers;
             self.next_producer = self.next_producer.wrapping_add(1);
             let producer = t.route_put(key, hint);
+            let t_seal = Instant::now();
             let sealed = self.envelope.seal(value, producer);
+            self.telemetry.seal_ns.record(t_seal.elapsed().as_nanos() as u64);
             groups.entry(producer).or_default().push((i, sealed));
         }
         for (producer, group) in groups {
@@ -305,7 +385,10 @@ impl SecureKv {
                     req
                 })
                 .collect();
+            self.telemetry.batch_ops.record(reqs.len() as u64);
+            let t_group = Instant::now();
             let mut resps = t.call_multi(producer, reqs).into_iter();
+            self.telemetry.group_us.record_elapsed_us(t_group);
             for (i, meta) in metas {
                 match resps.next() {
                     Some(Response::Stored) => {
@@ -336,7 +419,10 @@ impl SecureKv {
                 .iter()
                 .map(|(_, m)| Request::Delete { key: m.k_p.to_le_bytes().to_vec() })
                 .collect();
+            self.telemetry.batch_ops.record(reqs.len() as u64);
+            let t_group = Instant::now();
             let mut resps = t.call_multi(producer, reqs).into_iter();
+            self.telemetry.group_us.record_elapsed_us(t_group);
             for (i, _meta) in group {
                 results[i] = matches!(resps.next(), Some(Response::Deleted(true)));
             }
@@ -347,15 +433,19 @@ impl SecureKv {
     /// DELETE (paper §6.1): remove local metadata, then synchronize the
     /// producer store.
     pub fn delete<T: KvTransport>(&mut self, t: &mut T, key: &[u8]) -> bool {
+        let t_op = Instant::now();
         self.stats.deletes += 1;
         let Some(meta) = self.metadata.remove(key) else {
+            self.telemetry.op_us.record_elapsed_us(t_op);
             return false;
         };
         let k_p = meta.k_p.to_le_bytes().to_vec();
-        matches!(
+        let deleted = matches!(
             t.call(meta.producer_index, Request::Delete { key: k_p }),
             Response::Deleted(true)
-        )
+        );
+        self.telemetry.op_us.record_elapsed_us(t_op);
+        deleted
     }
 
     /// Hit ratio observed so far.
@@ -405,6 +495,26 @@ mod tests {
                 Request::Ping => Response::Pong,
             }
         }
+    }
+
+    #[test]
+    fn telemetry_records_crypto_and_call_latency() {
+        let mut t = MemTransport::new(2);
+        let mut c = SecureKv::with_iv_seed(Some([1u8; 16]), true, 2, 42);
+        assert!(c.put(&mut t, b"k", b"v"));
+        assert_eq!(c.get(&mut t, b"k"), Some(b"v".to_vec()));
+        let keys: [&[u8]; 2] = [b"k", b"absent"];
+        c.multi_get(&mut t, &keys);
+        let m = c.metrics();
+        assert!(m.histogram("secure.op_us").unwrap().count() >= 2);
+        assert_eq!(m.histogram("secure.seal_ns").unwrap().count(), 1);
+        assert_eq!(m.histogram("secure.open_ns").unwrap().count(), 2);
+        // One per-producer group: only "k" had metadata to fetch.
+        let batches = m.histogram("secure.batch_ops").unwrap();
+        assert_eq!(batches.count(), 1);
+        assert_eq!(m.histogram("secure.group_us").unwrap().count(), 1);
+        assert_eq!(m.counter("secure.puts"), Some(1));
+        assert!(m.gauge("secure.metadata_bytes").unwrap() > 0);
     }
 
     #[test]

@@ -12,7 +12,7 @@
 use crate::core::config::HarvesterConfig;
 use crate::core::{ProducerId, SimTime, GIB, MIB};
 use crate::mem::SwapDevice;
-use crate::metrics::{gb, pct, Table};
+use crate::util::fmt::{gb, pct, Table};
 use crate::producer::Producer;
 use crate::sim::replay::{run as replay, ReplayConfig};
 use crate::workload::apps::{AppKind, AppModel, AppRunner};

@@ -1,7 +1,7 @@
 //! Broker experiments: Fig 10 (placement + utilization) and the §7.2
 //! availability-predictor accuracy numbers.
 
-use crate::metrics::{pct, Table};
+use crate::util::fmt::{pct, Table};
 use crate::sim::replay::{run as replay, ReplayConfig};
 
 /// Fig 10: requests satisfied vs producer DRAM, and cluster utilization.

@@ -6,7 +6,7 @@
 use crate::consumer::swap_iface::SwapInterfaceModel;
 use crate::core::{SimTime, GIB};
 use crate::crypto::secure::Envelope;
-use crate::metrics::{ms, pct, Table};
+use crate::util::fmt::{ms, pct, Table};
 use crate::net::model::Locality;
 use crate::sim::cluster::{ClusterSim, ClusterSimConfig, ConsumerMode};
 use crate::workload::apps::AppKind;

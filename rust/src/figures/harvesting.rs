@@ -4,7 +4,7 @@
 use crate::core::config::HarvesterConfig;
 use crate::core::{SimTime, GIB, MIB};
 use crate::mem::SwapDevice;
-use crate::metrics::{gb, ms, pct, Table};
+use crate::util::fmt::{gb, ms, pct, Table};
 use crate::producer::Producer;
 use crate::workload::apps::{AppKind, AppModel, AppRunner};
 use crate::core::ProducerId;

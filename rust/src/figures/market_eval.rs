@@ -3,7 +3,7 @@
 
 use crate::broker::pricing::PricingStrategy;
 use crate::core::Money;
-use crate::metrics::{pct, Table};
+use crate::util::fmt::{pct, Table};
 use crate::sim::market::{MarketSim, MarketSimConfig, MarketStep};
 use crate::workload::cluster_trace::{ClusterTrace, MachineClass};
 use crate::workload::memcachier::MrcLibrary;

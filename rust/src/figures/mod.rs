@@ -30,7 +30,7 @@ pub mod harvesting;
 pub mod market_eval;
 pub mod traces;
 
-use crate::metrics::Table;
+use crate::util::fmt::Table;
 
 /// All known experiment ids.
 pub const ALL: &[&str] = &[

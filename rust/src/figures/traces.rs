@@ -1,7 +1,7 @@
 //! Trace-analysis figures: Fig 1 (cluster utilization CDFs) and Fig 2a
 //! (availability durations of unallocated memory).
 
-use crate::metrics::{pct, Table};
+use crate::util::fmt::{pct, Table};
 use crate::workload::cluster_trace::{ClusterTrace, MachineClass};
 
 fn quantile(sorted: &[f64], q: f64) -> f64 {

@@ -15,5 +15,5 @@
 pub mod sharded;
 pub mod store;
 
-pub use sharded::ShardedKvStore;
+pub use sharded::{ShardGuard, ShardedKvStore};
 pub use store::{KvStats, KvStore};

@@ -19,9 +19,12 @@
 //! [`MIN_SHARD_BYTES`] per shard.
 
 use super::store::{KvStats, KvStore};
+use crate::metrics::Histogram;
 use crate::util::hash::fnv1a_64;
+use std::ops::{Deref, DerefMut};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Instant;
 
 /// Split `total` into `n` parts that differ by at most one byte and sum
 /// exactly to `total`.
@@ -44,6 +47,41 @@ pub struct ShardedKvStore {
     shards: Vec<Mutex<KvStore>>,
     /// Round-robin cursor so `sample_key` doesn't always drain shard 0.
     sample_cursor: AtomicUsize,
+    /// Telemetry: shard-lock hold time (µs), recorded when a
+    /// [`ShardGuard`] drops. `None` (the default) costs nothing — the
+    /// guard then skips even the clock reads.
+    lock_hold_us: Option<Arc<Histogram>>,
+}
+
+/// A held shard lock. Derefs to the underlying [`KvStore`]; when the
+/// owning store is instrumented ([`ShardedKvStore::instrument_locks`]),
+/// dropping the guard records how long the lock was held — the signal
+/// that makes lock contention (a hot shard, a long harvester shrink)
+/// visible on the shared metrics plane instead of only as tail latency.
+pub struct ShardGuard<'a> {
+    guard: MutexGuard<'a, KvStore>,
+    held: Option<(Instant, &'a Histogram)>,
+}
+
+impl Deref for ShardGuard<'_> {
+    type Target = KvStore;
+    fn deref(&self) -> &KvStore {
+        &self.guard
+    }
+}
+
+impl DerefMut for ShardGuard<'_> {
+    fn deref_mut(&mut self) -> &mut KvStore {
+        &mut self.guard
+    }
+}
+
+impl Drop for ShardGuard<'_> {
+    fn drop(&mut self) {
+        if let Some((since, hist)) = self.held {
+            hist.record_elapsed_us(since);
+        }
+    }
 }
 
 impl ShardedKvStore {
@@ -61,7 +99,14 @@ impl ShardedKvStore {
                 Mutex::new(KvStore::new(budget, shard_seed))
             })
             .collect();
-        ShardedKvStore { shards, sample_cursor: AtomicUsize::new(0) }
+        ShardedKvStore { shards, sample_cursor: AtomicUsize::new(0), lock_hold_us: None }
+    }
+
+    /// Record every shard-lock hold time (µs) into `hist`. Called once
+    /// at construction time (before the store is shared); uninstrumented
+    /// stores pay nothing.
+    pub fn instrument_locks(&mut self, hist: Arc<Histogram>) {
+        self.lock_hold_us = Some(hist);
     }
 
     pub fn num_shards(&self) -> usize {
@@ -79,11 +124,15 @@ impl ShardedKvStore {
     /// Multi-shard callers (the batch execution path) must acquire in
     /// ascending index order — the same total order `shrink_to` /
     /// `grow_to` use — so no two lock paths can deadlock.
-    pub fn lock_shard(&self, i: usize) -> MutexGuard<'_, KvStore> {
-        self.shards[i].lock().unwrap()
+    pub fn lock_shard(&self, i: usize) -> ShardGuard<'_> {
+        let guard = self.shards[i].lock().unwrap();
+        ShardGuard {
+            guard,
+            held: self.lock_hold_us.as_deref().map(|h| (Instant::now(), h)),
+        }
     }
 
-    fn shard(&self, key: &[u8]) -> MutexGuard<'_, KvStore> {
+    fn shard(&self, key: &[u8]) -> ShardGuard<'_> {
         self.lock_shard(self.shard_index(key))
     }
 
@@ -171,7 +220,7 @@ impl ShardedKvStore {
     /// proportional share rounds to zero: a shard whose budget ever hit
     /// zero would otherwise keep a zero share forever (0 * anything = 0)
     /// and permanently reject its whole key range.
-    fn proportional_budgets(guards: &[MutexGuard<'_, KvStore>], new_max: usize) -> Vec<usize> {
+    fn proportional_budgets(guards: &[ShardGuard<'_>], new_max: usize) -> Vec<usize> {
         let n = guards.len();
         let total: usize = guards.iter().map(|g| g.max_bytes()).sum();
         if total == 0 {
@@ -201,8 +250,8 @@ impl ShardedKvStore {
     /// (in index order, the only multi-lock path — no deadlock with the
     /// single-lock request path).
     pub fn shrink_to(&self, new_max: usize) -> usize {
-        let mut guards: Vec<MutexGuard<'_, KvStore>> =
-            self.shards.iter().map(|s| s.lock().unwrap()).collect();
+        let mut guards: Vec<ShardGuard<'_>> =
+            (0..self.shards.len()).map(|i| self.lock_shard(i)).collect();
         let budgets = Self::proportional_budgets(&guards, new_max);
         guards.iter_mut().zip(budgets).map(|(g, b)| g.shrink_to(b)).sum()
     }
@@ -210,8 +259,8 @@ impl ShardedKvStore {
     /// Grow the total budget back toward `new_max`, proportionally per
     /// shard (each shard keeps its budget if already larger).
     pub fn grow_to(&self, new_max: usize) {
-        let mut guards: Vec<MutexGuard<'_, KvStore>> =
-            self.shards.iter().map(|s| s.lock().unwrap()).collect();
+        let mut guards: Vec<ShardGuard<'_>> =
+            (0..self.shards.len()).map(|i| self.lock_shard(i)).collect();
         let budgets = Self::proportional_budgets(&guards, new_max);
         for (g, b) in guards.iter_mut().zip(budgets) {
             g.grow_to(b);
@@ -367,6 +416,22 @@ mod tests {
         assert!(s.fragmentation() > 1.0);
         assert!(s.defragment() > 0);
         assert!((s.fragmentation() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lock_hold_histogram_records_on_instrumented_stores() {
+        let mut s = ShardedKvStore::new(4 << 20, 4, 1);
+        let hist = Arc::new(Histogram::new());
+        s.instrument_locks(hist.clone());
+        s.put(b"k", b"v");
+        assert_eq!(s.get_owned(b"k"), Some(b"v".to_vec()));
+        s.shrink_to(1 << 20); // takes all 4 shard locks
+        let n = hist.snapshot().count();
+        assert!(n >= 6, "lock holds not recorded: {n}");
+        // Uninstrumented stores record nothing (and pay nothing).
+        let s2 = ShardedKvStore::new(4 << 20, 4, 1);
+        s2.put(b"k", b"v");
+        assert_eq!(hist.snapshot().count(), n);
     }
 
     #[test]

@@ -39,6 +39,18 @@ impl KvStats {
     }
 }
 
+impl crate::metrics::Observe for KvStats {
+    fn observe(&self, prefix: &str, out: &mut crate::metrics::MetricSet) {
+        use crate::metrics::scoped;
+        out.set_counter(scoped(prefix, "hits"), self.hits);
+        out.set_counter(scoped(prefix, "misses"), self.misses);
+        out.set_counter(scoped(prefix, "puts"), self.puts);
+        out.set_counter(scoped(prefix, "deletes"), self.deletes);
+        out.set_counter(scoped(prefix, "evictions"), self.evictions);
+        out.set_counter(scoped(prefix, "rejected"), self.rejected);
+    }
+}
+
 struct Entry {
     value: Vec<u8>,
     /// Logical LRU clock value at last access.

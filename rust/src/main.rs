@@ -11,6 +11,7 @@
 //! memtrade sim [--minutes N]            run the cluster simulation
 //! memtrade replay [--steps N]           run the Google-style replay
 //! memtrade chaos [--seed S] [--mix M]   run seeded fault-injection scenarios
+//! memtrade top --broker <a>             live marketplace telemetry (StatsQuery)
 //! memtrade list                         list experiment ids
 //! ```
 //!
@@ -25,6 +26,8 @@ use memtrade::market::{
     BrokerServer, BrokerServerConfig, ProducerAgent, ProducerAgentConfig, RemotePool,
     RemotePoolConfig,
 };
+use memtrade::metrics::{Metric, MetricSet};
+use memtrade::net::control::{CtrlClient, CtrlRequest, CtrlResponse};
 use memtrade::net::tcp::{KvClient, ProducerStoreServer};
 use memtrade::sim::cluster::{ClusterSim, ClusterSimConfig, ConsumerMode};
 use memtrade::sim::replay::{run as replay_run, ReplayConfig};
@@ -81,6 +84,7 @@ USAGE:
                   [--producer-timeout-ms N] [--min-lease-secs N]
   memtrade agent --broker HOST:PORT [--id N] [--mb N] [--heartbeat-ms N]
                  [--advertise HOST:PORT] [--harvest] [--shards N] [--rate-mbps R]
+                 [--stats-port P]
   memtrade producer [--port P] [--mb N] [--rate-mbps R] [--shards N]
   memtrade consumer --addr HOST:PORT | --broker HOST:PORT [--slabs N]
                     [--ops N] [--value-bytes B] [--no-encrypt]
@@ -90,6 +94,7 @@ USAGE:
   memtrade chaos [--seed S | --seeds N] [--mix MIX] [--ops N] [--keys N]
                  (MIX: clean|standard, or +-joined fault families:
                   control|data|byzantine|kill|race, e.g. data+kill)
+  memtrade top --broker HOST:PORT | --addr HOST:PORT [--interval-ms N] [--once]
   memtrade list
 ";
 
@@ -110,6 +115,7 @@ fn main() -> ExitCode {
         "sim" => cmd_sim(&args),
         "replay" => cmd_replay(&args),
         "chaos" => cmd_chaos(&args),
+        "top" => cmd_top(&args),
         "list" => {
             for id in figures::ALL {
                 println!("{id}");
@@ -203,6 +209,7 @@ fn cmd_agent(args: &Args) -> ExitCode {
             .and_then(|v| v.parse::<u64>().ok())
             .map(|m| m * 1_000_000 / 8),
         seed: args.flag_u64("id", 1),
+        stats_addr: Some(format!("0.0.0.0:{}", args.flag_u64("stats-port", 0))),
         ..Default::default()
     };
     let agent = match ProducerAgent::start(cfg) {
@@ -216,6 +223,9 @@ fn cmd_agent(args: &Args) -> ExitCode {
         "producer agent up: data plane {}, registered with broker {broker}",
         agent.data_addr()
     );
+    if let Some(addr) = agent.stats_addr() {
+        println!("stats endpoint on {addr} (poll with `memtrade top --addr {addr}`)");
+    }
     println!("press Ctrl-C to stop");
     loop {
         std::thread::sleep(Duration::from_secs(10));
@@ -388,8 +398,13 @@ fn cmd_consumer(args: &Args) -> ExitCode {
         let s = &pool.stats;
         println!(
             "pool: grants {} | renewals {} | slots lost {} | re-requests {} | io errors {}",
-            s.grants, s.renewals, s.slots_lost, s.rerequests, s.io_errors
+            s.grants.get(),
+            s.renewals.get(),
+            s.slots_lost.get(),
+            s.rerequests.get(),
+            s.io_errors.get()
         );
+        println!("pool data-call latency: {}", pool.data_call_us.snapshot().render());
         return ExitCode::SUCCESS;
     }
 
@@ -521,4 +536,106 @@ fn cmd_replay(args: &Args) -> ExitCode {
         100.0 * r.revoked_fraction,
     );
     ExitCode::SUCCESS
+}
+
+/// Poll one `StatsQuery` from a broker or agent stats endpoint.
+fn poll_stats(addr: &str) -> std::io::Result<(u64, MetricSet)> {
+    let mut ctrl = CtrlClient::connect_timeout(addr, Duration::from_secs(2))?;
+    match ctrl.call(&CtrlRequest::StatsQuery)? {
+        CtrlResponse::Stats { uptime_us, metrics } => Ok((uptime_us, metrics)),
+        other => Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("unexpected stats reply: {other:?}"),
+        )),
+    }
+}
+
+/// Render one stats snapshot: a per-producer table (built from the
+/// broker's `producer.<id>.<field>` gauges) above the raw metric list.
+fn render_top(uptime_us: u64, m: &MetricSet) -> String {
+    use memtrade::util::fmt::Table;
+    let mut producers: std::collections::BTreeMap<u64, std::collections::BTreeMap<String, i64>> =
+        Default::default();
+    for (name, metric) in m.iter() {
+        if let Some((id, field)) = name
+            .strip_prefix("producer.")
+            .and_then(|t| t.split_once('.'))
+            .and_then(|(id, f)| id.parse::<u64>().ok().map(|id| (id, f)))
+        {
+            let v = match metric {
+                Metric::Counter(v) => *v as i64,
+                Metric::Gauge(v) => *v,
+                Metric::Histogram(_) => continue,
+            };
+            producers.entry(id).or_default().insert(field.to_string(), v);
+        }
+    }
+    let mut out = format!(
+        "memtrade top — uptime {:.1}s | producers {} | active leases {} | \
+         price {} nd/slab·h\n\n",
+        uptime_us as f64 / 1e6,
+        m.gauge("market.producers").unwrap_or(0),
+        m.gauge("market.active_leases").unwrap_or(0),
+        m.gauge("market.price_nd_per_slab_hour").unwrap_or(0),
+    );
+    if !producers.is_empty() {
+        let mut t = Table::new(vec![
+            "producer", "p99 µs", "ops/s", "free", "leased", "safe", "rep %",
+        ]);
+        for (id, f) in &producers {
+            let g = |k: &str| f.get(k).copied().unwrap_or(0).to_string();
+            t.row(vec![
+                id.to_string(),
+                g("observed_p99_us"),
+                g("ops_per_sec"),
+                g("free_slabs"),
+                g("leased_slabs"),
+                g("safe_slabs"),
+                g("reputation_pct"),
+            ]);
+        }
+        out.push_str(&t.markdown());
+        out.push('\n');
+    }
+    let mut rest = MetricSet::new();
+    for (name, metric) in m.iter() {
+        if !name.starts_with("producer.") {
+            rest.set(name, metric.clone());
+        }
+    }
+    out.push_str(&rest.render());
+    out
+}
+
+/// Live marketplace telemetry: poll `StatsQuery` on a broker (or an
+/// agent stats endpoint via --addr) and render it, `top`-style.
+fn cmd_top(args: &Args) -> ExitCode {
+    let Some(addr) = args.flag("broker").or_else(|| args.flag("addr")) else {
+        eprintln!("top: --broker HOST:PORT (or --addr for an agent stats endpoint) required");
+        return ExitCode::FAILURE;
+    };
+    let interval = Duration::from_millis(args.flag_u64("interval-ms", 1000));
+    let once = args.has("once");
+    loop {
+        match poll_stats(addr) {
+            Ok((uptime_us, metrics)) => {
+                if !once {
+                    // ANSI clear + home, like top(1).
+                    print!("\x1b[2J\x1b[H");
+                }
+                print!("{}", render_top(uptime_us, &metrics));
+            }
+            Err(e) => {
+                if once {
+                    eprintln!("top: stats poll failed: {e}");
+                    return ExitCode::FAILURE;
+                }
+                eprintln!("top: stats poll failed: {e} (retrying)");
+            }
+        }
+        if once {
+            return ExitCode::SUCCESS;
+        }
+        std::thread::sleep(interval);
+    }
 }

@@ -24,6 +24,7 @@ use crate::broker::{AvailabilityPredictor, Broker, ConsumerRequest, PricingEngin
 use crate::core::config::BrokerConfig;
 use crate::core::{ConsumerId, Lease, LeaseId, Money, ProducerId, SimTime, GIB};
 use crate::market::lease::{LeaseError, LeaseState, LeaseTable};
+use crate::metrics::{MetricSet, Observe, Registry as MetricsRegistry};
 use crate::net::control::{
     server_handshake_patient, CtrlRequest, CtrlResponse, GrantInfo, ProducerGrant, RefuseCode,
     CONTROL_MAGIC,
@@ -194,6 +195,9 @@ struct State {
     /// Samples queued for the history writer thread (never blocks).
     history_tx: Option<mpsc::Sender<HistorySample>>,
     cfg: BrokerServerConfig,
+    /// Daemon-level live counters/gauges (control verbs, sweeps) —
+    /// served to `StatsQuery` along with the market + per-producer view.
+    telemetry: MetricsRegistry,
 }
 
 impl State {
@@ -215,6 +219,13 @@ impl State {
     fn apply_lease_ends(&mut self) {
         for end in self.leases.take_ended() {
             let lease = Self::core_lease(&end.record);
+            let counter = match end.cause {
+                LeaseState::Expired => "leases.expired",
+                LeaseState::Revoked => "leases.revoked",
+                LeaseState::Released => "leases.released",
+                LeaseState::Active => "leases.ended_active",
+            };
+            self.telemetry.counter(counter).inc();
             self.broker.lease_ended(&lease, end.cause == LeaseState::Revoked);
         }
     }
@@ -264,8 +275,33 @@ impl State {
             .map(|(&id, _)| id)
             .collect();
         for id in dead {
+            self.telemetry.counter("sweep.producers_dead").inc();
             self.drop_producer(id, now_us);
         }
+    }
+
+    /// The broker's whole observable state in one [`MetricSet`]: daemon
+    /// counters, market-level gauges, the in-process broker's stats,
+    /// and — crucially for `memtrade top` — the per-producer *observed*
+    /// data-plane telemetry that placement ranks by.
+    fn metrics(&self, now_us: u64) -> MetricSet {
+        let mut m = self.telemetry.snapshot();
+        self.broker.stats.observe("broker", &mut m);
+        m.set_gauge("market.uptime_us", now_us as i64);
+        m.set_gauge("market.producers", self.producers.len() as i64);
+        m.set_gauge("market.active_leases", self.leases.active_count() as i64);
+        m.set_gauge("market.price_nd_per_slab_hour", self.broker.current_price().0);
+        for p in self.broker.registry.producers() {
+            let id = p.id.0;
+            let pre = format!("producer.{id}");
+            m.set_gauge(format!("{pre}.observed_p99_us"), p.observed_p99_us as i64);
+            m.set_gauge(format!("{pre}.ops_per_sec"), p.observed_ops_per_sec as i64);
+            m.set_gauge(format!("{pre}.free_slabs"), p.free_slabs as i64);
+            m.set_gauge(format!("{pre}.leased_slabs"), p.slabs_leased_now as i64);
+            m.set_gauge(format!("{pre}.safe_slabs"), p.predicted_safe_slabs as i64);
+            m.set_gauge(format!("{pre}.reputation_pct"), (p.reputation() * 100.0) as i64);
+        }
+        m
     }
 
     fn drop_producer(&mut self, id: u64, now_us: u64) {
@@ -319,6 +355,7 @@ impl State {
                 // system's loss model anyway — and re-announce them so
                 // the agent relearns its book from the next ack. Actual
                 // death is the heartbeat-timeout sweep's job.
+                self.telemetry.counter("ctrl.registrations").inc();
                 let rejoining = self.producers.contains_key(&producer);
                 if rejoining {
                     self.leases.reset_announcements(producer);
@@ -352,6 +389,8 @@ impl State {
                 used_gb,
                 cpu_headroom,
                 bandwidth_headroom,
+                observed_p99_us,
+                observed_ops_per_sec,
             } => {
                 let Some(entry) = self.producers.get_mut(&producer) else {
                     return Self::refused(
@@ -359,6 +398,7 @@ impl State {
                         format!("producer {producer} is not registered"),
                     );
                 };
+                self.telemetry.counter("ctrl.heartbeats").inc();
                 entry.last_heartbeat_us = now_us;
                 self.broker.registry.report_usage(ProducerId(producer), now, used_gb);
                 if let Some(tx) = &self.history_tx {
@@ -369,6 +409,13 @@ impl State {
                     free_slabs,
                     cpu_headroom as f64,
                     bandwidth_headroom as f64,
+                );
+                // The feedback loop: measured data-plane behavior flows
+                // into the registry, and placement ranks by it.
+                self.broker.registry.report_observed_telemetry(
+                    ProducerId(producer),
+                    observed_p99_us as u64,
+                    observed_ops_per_sec as u64,
                 );
                 self.apply_optimistic_safety();
                 self.leases.sweep_expired(now_us);
@@ -393,6 +440,7 @@ impl State {
                 }
             }
             CtrlRequest::RequestSlabs { consumer, slabs, min_slabs, ttl_us } => {
+                self.telemetry.counter("ctrl.slab_requests").inc();
                 if slabs == 0 {
                     return Self::refused(RefuseCode::Malformed, "zero slabs requested");
                 }
@@ -461,6 +509,7 @@ impl State {
                 }
             }
             CtrlRequest::Renew { consumer, lease } => {
+                self.telemetry.counter("ctrl.renews").inc();
                 if let Some(r) = self.verify_holder(lease, consumer, true) {
                     return r;
                 }
@@ -475,6 +524,7 @@ impl State {
                 }
             }
             CtrlRequest::Release { consumer, lease } => {
+                self.telemetry.counter("ctrl.releases").inc();
                 if let Some(r) = self.verify_holder(lease, consumer, true) {
                     return r;
                 }
@@ -490,6 +540,7 @@ impl State {
                 }
             }
             CtrlRequest::Revoke { producer, lease } => {
+                self.telemetry.counter("ctrl.revokes").inc();
                 if let Some(r) = self.verify_holder(lease, producer, false) {
                     return r;
                 }
@@ -514,6 +565,10 @@ impl State {
                         format!("producer {producer} is not registered"),
                     )
                 }
+            }
+            CtrlRequest::StatsQuery => {
+                self.telemetry.counter("ctrl.stats_queries").inc();
+                CtrlResponse::Stats { uptime_us: now_us, metrics: self.metrics(now_us) }
             }
         }
     }
@@ -586,6 +641,7 @@ impl BrokerServer {
             history,
             history_tx,
             cfg: cfg.clone(),
+            telemetry: MetricsRegistry::new(),
         }));
         let start = Instant::now();
 
@@ -672,6 +728,12 @@ impl BrokerServer {
 
     pub fn producer_count(&self) -> usize {
         self.state.lock().unwrap().producers.len()
+    }
+
+    /// Live metrics snapshot — exactly what a `StatsQuery` answers.
+    pub fn metrics(&self) -> MetricSet {
+        let now_us = self.start.elapsed().as_micros() as u64;
+        self.state.lock().unwrap().metrics(now_us)
     }
 
     pub fn active_lease_count(&self) -> usize {
@@ -844,6 +906,8 @@ mod tests {
             used_gb: 2.0,
             cpu_headroom: 0.9,
             bandwidth_headroom: 0.9,
+            observed_p99_us: 320,
+            observed_ops_per_sec: 900,
         };
         let resp = ctrl.call(&hb).unwrap();
         let CtrlResponse::HeartbeatAck { target_bytes, granted, ended } = resp else {
@@ -871,6 +935,45 @@ mod tests {
     }
 
     #[test]
+    fn stats_query_reports_market_and_observed_telemetry() {
+        let (b, c) = quick_cfg();
+        let server = BrokerServer::start("127.0.0.1:0", b, c).unwrap();
+        let mut ctrl = CtrlClient::connect(server.addr()).unwrap();
+        register(&mut ctrl, 4, 16);
+        let hb = |p99: u32, ops: u32| CtrlRequest::Heartbeat {
+            producer: 4,
+            free_slabs: 16,
+            used_gb: 1.0,
+            cpu_headroom: 0.9,
+            bandwidth_headroom: 0.9,
+            observed_p99_us: p99,
+            observed_ops_per_sec: ops,
+        };
+        ctrl.call(&hb(4_200, 77)).unwrap();
+        let resp = ctrl.call(&CtrlRequest::StatsQuery).unwrap();
+        let CtrlResponse::Stats { uptime_us, metrics } = resp else { panic!("{resp:?}") };
+        assert!(uptime_us > 0);
+        assert_eq!(metrics.gauge("market.producers"), Some(1));
+        assert_eq!(metrics.counter("ctrl.heartbeats"), Some(1));
+        assert_eq!(metrics.counter("ctrl.registrations"), Some(1));
+        assert_eq!(metrics.gauge("producer.4.observed_p99_us"), Some(4_200));
+        assert_eq!(metrics.gauge("producer.4.ops_per_sec"), Some(77));
+        // An idle heartbeat window (p99 = 0) keeps the latency evidence
+        // but zeroes the throughput gauge.
+        ctrl.call(&hb(0, 0)).unwrap();
+        let CtrlResponse::Stats { metrics, .. } =
+            ctrl.call(&CtrlRequest::StatsQuery).unwrap()
+        else {
+            panic!()
+        };
+        assert_eq!(metrics.gauge("producer.4.observed_p99_us"), Some(4_200));
+        assert_eq!(metrics.gauge("producer.4.ops_per_sec"), Some(0));
+        // The in-process accessor serves the same snapshot shape.
+        assert_eq!(server.metrics().gauge("market.producers"), Some(1));
+        server.stop();
+    }
+
+    #[test]
     fn reregistration_keeps_leases_and_reannounces() {
         let (b, c) = quick_cfg();
         let slab_bytes = b.slab_bytes;
@@ -892,6 +995,8 @@ mod tests {
             used_gb: 2.0,
             cpu_headroom: 0.9,
             bandwidth_headroom: 0.9,
+            observed_p99_us: 0,
+            observed_ops_per_sec: 0,
         };
         // First ack announces the grant...
         let CtrlResponse::HeartbeatAck { granted, .. } = ctrl.call(&hb).unwrap() else {
@@ -969,6 +1074,8 @@ mod tests {
             used_gb: 2.75,
             cpu_headroom: 1.0,
             bandwidth_headroom: 1.0,
+            observed_p99_us: 0,
+            observed_ops_per_sec: 0,
         })
         .unwrap();
         // Appends flow through the writer thread; wait for the flush.

@@ -243,12 +243,12 @@ impl ChaosOutcome {
             self.reconverged,
             self.recovery_ms,
             self.held_slabs_after,
-            self.pool_stats.grants,
-            self.pool_stats.slots_lost,
-            self.pool_stats.renewals,
-            self.pool_stats.io_errors,
-            self.pool_stats.dead_calls,
-            self.pool_stats.control_errors,
+            self.pool_stats.grants.get(),
+            self.pool_stats.slots_lost.get(),
+            self.pool_stats.renewals.get(),
+            self.pool_stats.io_errors.get(),
+            self.pool_stats.dead_calls.get(),
+            self.pool_stats.control_errors.get(),
         )
     }
 }
@@ -367,6 +367,9 @@ pub fn run_chaos(cfg: &ChaosConfig) -> ChaosOutcome {
             ctrl_faults: None,
             data_faults: None,
             byzantine,
+            // Chaos scenarios poke the system through faults, not stats
+            // polls; skip the extra listener per agent.
+            stats_addr: None,
         };
         // Registration runs through the (possibly faulty) control
         // plane; retry fresh connections until one schedule lets the

@@ -23,15 +23,20 @@
 //!   [`crate::net::faults`] fault schedules (plus Byzantine producers,
 //!   mid-run kills, and renew-vs-revoke races), with the paper's
 //!   resilience invariants checked machine-readably.
+//! * [`stats_server`] — the read-only `StatsQuery` endpoint producer
+//!   agents mount next to their data plane, so every marketplace role
+//!   is observable over the wire (`memtrade top`).
 
 pub mod broker_server;
 pub mod chaos;
 pub mod lease;
 pub mod producer_agent;
 pub mod remote_pool;
+pub mod stats_server;
 
 pub use broker_server::{BrokerServer, BrokerServerConfig};
 pub use chaos::{run_chaos, ChaosConfig, ChaosMix, ChaosOutcome};
 pub use lease::{LeaseEnd, LeaseError, LeaseRecord, LeaseState, LeaseTable};
 pub use producer_agent::{AgentStats, ProducerAgent, ProducerAgentConfig};
 pub use remote_pool::{PoolStats, RemotePool, RemotePoolConfig};
+pub use stats_server::StatsServer;

@@ -20,7 +20,9 @@
 use crate::core::config::HarvesterConfig;
 use crate::core::{SimTime, GIB};
 use crate::kv::ShardedKvStore;
+use crate::market::stats_server::{MetricsSource, StatsServer};
 use crate::mem::SwapDevice;
+use crate::metrics::{scoped, Counter, Gauge, Histogram, MetricSet, Observe};
 use crate::net::control::{CtrlClient, CtrlRequest, CtrlResponse, RefuseCode};
 use crate::net::faults::{ByzantineSpec, FaultPlan};
 use crate::net::tcp::ProducerStoreServer;
@@ -28,7 +30,7 @@ use crate::producer::Harvester;
 use crate::workload::apps::{AppKind, AppModel, AppRunner};
 use std::collections::HashMap;
 use std::io;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -67,6 +69,10 @@ pub struct ProducerAgentConfig {
     /// (corrupted / stale / truncated) — the Byzantine producer the
     /// §6.1 envelope is tested against.
     pub byzantine: Option<ByzantineSpec>,
+    /// Where to mount the read-only `StatsQuery` endpoint (port 0 =
+    /// ephemeral; `None` = no stats endpoint). `memtrade top` and tests
+    /// poll it for this agent's live data-plane telemetry.
+    pub stats_addr: Option<String>,
 }
 
 impl Default for ProducerAgentConfig {
@@ -86,22 +92,43 @@ impl Default for ProducerAgentConfig {
             ctrl_faults: None,
             data_faults: None,
             byzantine: None,
+            stats_addr: Some("127.0.0.1:0".to_string()),
         }
     }
 }
 
-/// Counters shared with the agent loop (all monotonic except the gauges).
+/// Counters shared with the agent loop (all monotonic except the
+/// gauges), on the shared metrics plane.
 #[derive(Default)]
 pub struct AgentStats {
     /// Gauge: bytes the broker says must be leased out right now.
-    pub target_bytes: AtomicU64,
+    pub target_bytes: Gauge,
     /// Gauge: bytes the harvester currently offers to the market.
-    pub offered_bytes: AtomicU64,
-    pub heartbeats: AtomicU64,
-    pub leases_started: AtomicU64,
-    pub leases_ended: AtomicU64,
-    pub revokes_sent: AtomicU64,
-    pub control_errors: AtomicU64,
+    pub offered_bytes: Gauge,
+    /// Gauge: observed data-plane p99 (µs) over the last heartbeat
+    /// window — exactly what the heartbeat reported to the broker.
+    pub data_p99_us: Gauge,
+    /// Gauge: data-plane ops/sec over the last heartbeat window.
+    pub data_ops_per_sec: Gauge,
+    pub heartbeats: Counter,
+    pub leases_started: Counter,
+    pub leases_ended: Counter,
+    pub revokes_sent: Counter,
+    pub control_errors: Counter,
+}
+
+impl Observe for AgentStats {
+    fn observe(&self, prefix: &str, out: &mut MetricSet) {
+        out.set_gauge(scoped(prefix, "target_bytes"), self.target_bytes.get());
+        out.set_gauge(scoped(prefix, "offered_bytes"), self.offered_bytes.get());
+        out.set_gauge(scoped(prefix, "data_p99_us"), self.data_p99_us.get());
+        out.set_gauge(scoped(prefix, "data_ops_per_sec"), self.data_ops_per_sec.get());
+        out.set_counter(scoped(prefix, "heartbeats"), self.heartbeats.get());
+        out.set_counter(scoped(prefix, "leases_started"), self.leases_started.get());
+        out.set_counter(scoped(prefix, "leases_ended"), self.leases_ended.get());
+        out.set_counter(scoped(prefix, "revokes_sent"), self.revokes_sent.get());
+        out.set_counter(scoped(prefix, "control_errors"), self.control_errors.get());
+    }
 }
 
 /// Harvester control loop driven by the wall clock: the same
@@ -160,6 +187,7 @@ pub struct ProducerAgent {
     stop: Arc<AtomicBool>,
     loop_handle: Option<JoinHandle<()>>,
     server: Option<ProducerStoreServer>,
+    stats_server: Option<StatsServer>,
     data_addr: std::net::SocketAddr,
     stats: Arc<AgentStats>,
 }
@@ -220,8 +248,35 @@ impl ProducerAgent {
         };
 
         let stats = Arc::new(AgentStats::default());
-        stats.offered_bytes.store(offered0, Ordering::Relaxed);
+        stats.offered_bytes.set(offered0 as i64);
         let stop = Arc::new(AtomicBool::new(false));
+
+        // Mount the read-only stats endpoint: the agent's own stats,
+        // the data plane's live registry (op latency, ops, shard-lock
+        // holds), and the store's counters, all in one MetricSet.
+        let stats_server = match &cfg.stats_addr {
+            Some(addr) => {
+                let stats = stats.clone();
+                let telemetry = server.telemetry().clone();
+                let store = store.clone();
+                let producer = cfg.producer;
+                let source: MetricsSource = Arc::new(move || {
+                    let mut m = MetricSet::new();
+                    m.set_gauge("agent.producer", producer as i64);
+                    stats.observe("agent", &mut m);
+                    telemetry.observe("data", &mut m);
+                    store.stats().observe("store", &mut m);
+                    m.set_gauge("store.used_bytes", store.used_bytes() as i64);
+                    m.set_gauge("store.max_bytes", store.max_bytes() as i64);
+                    m.set_gauge("store.keys", store.len() as i64);
+                    m
+                });
+                Some(StatsServer::start(addr, source)?)
+            }
+            None => None,
+        };
+
+        let data_op_us = server.telemetry().histogram("op_us");
         let loop_handle = {
             let cfg = cfg.clone();
             let stop = stop.clone();
@@ -238,6 +293,7 @@ impl ProducerAgent {
                     start,
                     stop,
                     stats,
+                    data_op_us,
                 })
             })
         };
@@ -247,6 +303,7 @@ impl ProducerAgent {
             stop,
             loop_handle: Some(loop_handle),
             server: Some(server),
+            stats_server,
             data_addr,
             stats,
         })
@@ -255,6 +312,11 @@ impl ProducerAgent {
     /// Data-plane endpoint consumers dial.
     pub fn data_addr(&self) -> std::net::SocketAddr {
         self.data_addr
+    }
+
+    /// The read-only `StatsQuery` endpoint, if one was configured.
+    pub fn stats_addr(&self) -> Option<std::net::SocketAddr> {
+        self.stats_server.as_ref().map(|s| s.addr())
     }
 
     /// The served store (for stats and budget assertions).
@@ -273,11 +335,11 @@ impl ProducerAgent {
     }
 
     pub fn target_bytes(&self) -> u64 {
-        self.stats.target_bytes.load(Ordering::Relaxed)
+        self.stats.target_bytes.get().max(0) as u64
     }
 
     pub fn offered_bytes(&self) -> u64 {
-        self.stats.offered_bytes.load(Ordering::Relaxed)
+        self.stats.offered_bytes.get().max(0) as u64
     }
 
     /// Simulated crash: kill the control loop and the data plane without
@@ -290,6 +352,9 @@ impl ProducerAgent {
         }
         if let Some(server) = self.server.take() {
             server.stop();
+        }
+        if let Some(s) = self.stats_server.take() {
+            s.stop();
         }
     }
 
@@ -307,6 +372,9 @@ impl ProducerAgent {
         }
         if let Some(server) = self.server.take() {
             server.stop();
+        }
+        if let Some(s) = self.stats_server.take() {
+            s.stop();
         }
     }
 }
@@ -347,6 +415,9 @@ struct AgentLoop {
     start: Instant,
     stop: Arc<AtomicBool>,
     stats: Arc<AgentStats>,
+    /// The data plane's per-op service-latency histogram; heartbeats
+    /// report the p99 + ops/sec of the delta since the last beat.
+    data_op_us: Arc<Histogram>,
 }
 
 fn agent_loop(mut a: AgentLoop) {
@@ -358,6 +429,11 @@ fn agent_loop(mut a: AgentLoop) {
     // active book on the next ack; rebuild from it wholesale so entries
     // that ended while we were disconnected don't linger.
     let mut rebuild_book = false;
+    // Telemetry window: heartbeats report the p99/ops-per-sec of the
+    // data plane *since the last beat* (a delta of the live histogram),
+    // so the broker sees current behavior, not lifetime averages.
+    let mut window_start = Instant::now();
+    let mut window_snap = a.data_op_us.snapshot();
 
     while !a.stop.load(Ordering::Relaxed) {
         std::thread::sleep(a.cfg.heartbeat);
@@ -369,7 +445,7 @@ fn agent_loop(mut a: AgentLoop) {
             Some(h) => h.step(now_us),
             None => a.cfg.capacity_bytes,
         };
-        a.stats.offered_bytes.store(offered, Ordering::Relaxed);
+        a.stats.offered_bytes.set(offered as i64);
 
         // Re-establish the control connection if it dropped (broker
         // restart or transient failure): reconnect and re-register.
@@ -380,7 +456,7 @@ fn agent_loop(mut a: AgentLoop) {
             let conn_idx = a.conn_seq;
             a.conn_seq += 1;
             let Ok(mut c) = dial_broker(&a.cfg, conn_idx) else {
-                a.stats.control_errors.fetch_add(1, Ordering::Relaxed);
+                a.stats.control_errors.inc();
                 continue;
             };
             let leased_now: u64 = active.values().sum();
@@ -391,7 +467,7 @@ fn agent_loop(mut a: AgentLoop) {
                 free_bytes: offered.saturating_sub(leased_now),
             };
             if !matches!(c.call(&reg), Ok(CtrlResponse::Registered { .. })) {
-                a.stats.control_errors.fetch_add(1, Ordering::Relaxed);
+                a.stats.control_errors.inc();
                 continue;
             }
             rebuild_book = true;
@@ -408,10 +484,10 @@ fn agent_loop(mut a: AgentLoop) {
             let bytes = active.remove(&victim).unwrap_or(0);
             grant_order.pop();
             leased -= bytes;
-            a.stats.revokes_sent.fetch_add(1, Ordering::Relaxed);
+            a.stats.revokes_sent.inc();
             let revoke = CtrlRequest::Revoke { producer: a.cfg.producer, lease: victim };
             if a.conn.as_mut().unwrap().call(&revoke).is_err() {
-                a.stats.control_errors.fetch_add(1, Ordering::Relaxed);
+                a.stats.control_errors.inc();
                 lost_conn = true;
                 break;
             }
@@ -424,16 +500,35 @@ fn agent_loop(mut a: AgentLoop) {
             continue;
         }
 
+        // Observed data-plane telemetry for this window.
+        let snap = a.data_op_us.snapshot();
+        let window = snap.delta(&window_snap);
+        let dt = window_start.elapsed().as_secs_f64().max(1e-6);
+        window_snap = snap;
+        window_start = Instant::now();
+        let observed_ops_per_sec = (window.count() as f64 / dt).round() as u32;
+        let observed_p99_us = if window.count() > 0 {
+            window.p99().round().min(u32::MAX as f64) as u32
+        } else {
+            0 // no traffic observed: nothing to report this window
+        };
+        a.stats.data_ops_per_sec.set(observed_ops_per_sec as i64);
+        if observed_p99_us > 0 {
+            a.stats.data_p99_us.set(observed_p99_us as i64);
+        }
+
         let hb = CtrlRequest::Heartbeat {
             producer: a.cfg.producer,
             free_slabs: (offered.saturating_sub(leased) / a.slab_bytes) as u32,
             used_gb: a.cfg.capacity_bytes.saturating_sub(offered) as f32 / GIB as f32,
             cpu_headroom: 0.9,
             bandwidth_headroom: 0.9,
+            observed_p99_us,
+            observed_ops_per_sec,
         };
         match a.conn.as_mut().unwrap().call(&hb) {
             Ok(CtrlResponse::HeartbeatAck { target_bytes, granted, ended }) => {
-                a.stats.heartbeats.fetch_add(1, Ordering::Relaxed);
+                a.stats.heartbeats.inc();
                 if rebuild_book {
                     // This ack re-announces every active lease.
                     active.clear();
@@ -443,13 +538,13 @@ fn agent_loop(mut a: AgentLoop) {
                 for g in granted {
                     if active.insert(g.lease, g.slabs as u64 * g.slab_bytes).is_none() {
                         grant_order.push(g.lease);
-                        a.stats.leases_started.fetch_add(1, Ordering::Relaxed);
+                        a.stats.leases_started.inc();
                     }
                 }
                 for id in ended {
                     if active.remove(&id).is_some() {
                         grant_order.retain(|&l| l != id);
-                        a.stats.leases_ended.fetch_add(1, Ordering::Relaxed);
+                        a.stats.leases_ended.inc();
                     }
                 }
                 // The broker's view is authoritative for the budget.
@@ -459,11 +554,11 @@ fn agent_loop(mut a: AgentLoop) {
                 } else if target_bytes > cur {
                     a.store.grow_to(target_bytes as usize);
                 }
-                a.stats.target_bytes.store(target_bytes, Ordering::Relaxed);
+                a.stats.target_bytes.set(target_bytes as i64);
             }
             Ok(CtrlResponse::Refused { code: RefuseCode::UnknownProducer, .. }) => {
                 // Broker restarted and forgot us: re-register next tick.
-                a.stats.control_errors.fetch_add(1, Ordering::Relaxed);
+                a.stats.control_errors.inc();
                 a.conn = None;
             }
             Ok(_) => {
@@ -472,11 +567,11 @@ fn agent_loop(mut a: AgentLoop) {
                 // every later response) — keeping the connection would
                 // misread acks forever. Reconnect and re-register; the
                 // broker re-announces our whole book on the next ack.
-                a.stats.control_errors.fetch_add(1, Ordering::Relaxed);
+                a.stats.control_errors.inc();
                 a.conn = None;
             }
             Err(_) => {
-                a.stats.control_errors.fetch_add(1, Ordering::Relaxed);
+                a.stats.control_errors.inc();
                 a.conn = None;
             }
         }

@@ -36,6 +36,7 @@
 //! dies mid-batch.
 
 use crate::consumer::client::{KvTransport, DEAD_ROUTE};
+use crate::metrics::{scoped, Counter, Histogram, MetricSet, Observe};
 use crate::net::control::{CtrlClient, CtrlRequest, CtrlResponse, GrantInfo};
 use crate::net::faults::FaultPlan;
 use crate::net::tcp::KvClient;
@@ -106,22 +107,38 @@ impl Default for RemotePoolConfig {
     }
 }
 
+/// Live pool counters ([`crate::metrics::Counter`]s, so the running
+/// pool can be observed — and cloned as a snapshot — without pausing
+/// the data path). Reads are `.get()`.
 #[derive(Clone, Debug, Default)]
 pub struct PoolStats {
     /// Leases granted to this pool over its lifetime.
-    pub grants: u64,
+    pub grants: Counter,
     /// Slots lost to revocation, expiry, or connection failure.
-    pub slots_lost: u64,
-    pub renewals: u64,
-    pub renewal_failures: u64,
+    pub slots_lost: Counter,
+    pub renewals: Counter,
+    pub renewal_failures: Counter,
     /// RequestSlabs calls made to refill toward the target.
-    pub rerequests: u64,
+    pub rerequests: Counter,
     /// Data-plane I/O errors absorbed as misses.
-    pub io_errors: u64,
+    pub io_errors: Counter,
     /// Calls routed to a dead slot and answered as misses.
-    pub dead_calls: u64,
+    pub dead_calls: Counter,
     /// Broker control-plane failures (reconnected on next maintain).
-    pub control_errors: u64,
+    pub control_errors: Counter,
+}
+
+impl Observe for PoolStats {
+    fn observe(&self, prefix: &str, out: &mut MetricSet) {
+        out.set_counter(scoped(prefix, "grants"), self.grants.get());
+        out.set_counter(scoped(prefix, "slots_lost"), self.slots_lost.get());
+        out.set_counter(scoped(prefix, "renewals"), self.renewals.get());
+        out.set_counter(scoped(prefix, "renewal_failures"), self.renewal_failures.get());
+        out.set_counter(scoped(prefix, "rerequests"), self.rerequests.get());
+        out.set_counter(scoped(prefix, "io_errors"), self.io_errors.get());
+        out.set_counter(scoped(prefix, "dead_calls"), self.dead_calls.get());
+        out.set_counter(scoped(prefix, "control_errors"), self.control_errors.get());
+    }
 }
 
 struct Slot {
@@ -152,6 +169,9 @@ pub struct RemotePool {
     /// fault plans' determinism contract (control and data share it).
     conn_seq: u64,
     pub stats: PoolStats,
+    /// Data-plane call latency (µs) as *this consumer* observes it —
+    /// one sample per routed call or per-producer batch group.
+    pub data_call_us: Histogram,
 }
 
 impl RemotePool {
@@ -174,6 +194,7 @@ impl RemotePool {
             session,
             conn_seq: 0,
             stats: PoolStats::default(),
+            data_call_us: Histogram::new(),
         };
         // Bounded initial dial: a black-holed broker fails fast here
         // instead of hanging the constructor on the OS SYN schedule.
@@ -197,6 +218,16 @@ impl RemotePool {
 
     pub fn held_slabs(&self) -> u32 {
         self.held_slabs
+    }
+
+    /// Everything this pool observes, on the shared metrics plane.
+    pub fn metrics(&self) -> MetricSet {
+        let mut out = MetricSet::new();
+        self.stats.observe("pool", &mut out);
+        out.set_histogram("pool.data_call_us", self.data_call_us.snapshot());
+        out.set_gauge("pool.held_slabs", self.held_slabs as i64);
+        out.set_gauge("pool.live_slots", self.live.len() as i64);
+        out
     }
 
     pub fn live_slots(&self) -> usize {
@@ -239,7 +270,7 @@ impl RemotePool {
     fn kill_slot(&mut self, index: usize) {
         if let Some(slot) = self.slots.get_mut(index).and_then(|s| s.take()) {
             self.held_slabs -= slot.slabs;
-            self.stats.slots_lost += 1;
+            self.stats.slots_lost.inc();
             self.rebuild_live();
         }
     }
@@ -256,14 +287,14 @@ impl RemotePool {
             Err(_) => {
                 // Producer vanished between grant and dial; the lease
                 // will expire broker-side.
-                self.stats.slots_lost += 1;
+                self.stats.slots_lost.inc();
                 return;
             }
         };
         // A slot that stops answering must become a dead slot (misses),
         // not a wedged consumer: bound every data call's response wait.
         if client.set_call_timeout(Some(self.cfg.data_call_timeout)).is_err() {
-            self.stats.slots_lost += 1;
+            self.stats.slots_lost.inc();
             return;
         }
         client.set_window(self.cfg.data_window);
@@ -275,7 +306,7 @@ impl RemotePool {
             client,
         };
         self.held_slabs += slot.slabs;
-        self.stats.grants += 1;
+        self.stats.grants.inc();
         match self.slots.iter().position(Option::is_none) {
             Some(i) => self.slots[i] = Some(slot),
             None => self.slots.push(Some(slot)),
@@ -297,7 +328,7 @@ impl RemotePool {
                 true
             }
             Err(_) => {
-                self.stats.control_errors += 1;
+                self.stats.control_errors.inc();
                 self.reconnect_after = now + self.cfg.reconnect_backoff;
                 false
             }
@@ -308,7 +339,7 @@ impl RemotePool {
     /// is wedged). Drop it and back off, so the data path — which runs
     /// maintenance inline — pays at most one stall per backoff window.
     fn ctrl_failed(&mut self) {
-        self.stats.control_errors += 1;
+        self.stats.control_errors.inc();
         self.ctrl = None;
         self.reconnect_after = Instant::now() + self.cfg.reconnect_backoff;
     }
@@ -319,7 +350,7 @@ impl RemotePool {
             return;
         }
         let want = self.cfg.target_slabs - self.held_slabs;
-        self.stats.rerequests += 1;
+        self.stats.rerequests.inc();
         let req = CtrlRequest::RequestSlabs {
             consumer: self.cfg.consumer,
             slabs: want,
@@ -389,7 +420,7 @@ impl RemotePool {
                     // extending this slot on its TTL would keep traffic
                     // flowing to slabs the broker already reclaimed.
                     Ok(CtrlResponse::Renewed { lease: acked, ttl_us }) if acked == lease => {
-                        self.stats.renewals += 1;
+                        self.stats.renewals.inc();
                         if let Some(slot) = self.slots[i].as_mut() {
                             slot.deadline = now + Duration::from_micros(ttl_us);
                         }
@@ -397,7 +428,7 @@ impl RemotePool {
                     Ok(CtrlResponse::Refused { .. }) => {
                         // Refused: expired, revoked, or forgotten — the
                         // remote memory is gone; downstream it's misses.
-                        self.stats.renewal_failures += 1;
+                        self.stats.renewal_failures.inc();
                         self.kill_slot(i);
                     }
                     Ok(_) => {
@@ -434,8 +465,12 @@ impl RemotePool {
         for i in 0..self.slots.len() {
             if self.slots[i].is_some() {
                 self.kill_slot(i);
-                // A released slot is not "lost".
-                self.stats.slots_lost -= 1;
+                // A released slot is not "lost". Guarded decrement: if a
+                // racing maintenance path (or a future kill_slot variant)
+                // ever recovers a slot without recording the loss, the
+                // un-count must saturate at zero — not wrap the gauge to
+                // 2^64 - 1 and report a catastrophic loss rate forever.
+                self.stats.slots_lost.dec_saturating();
             }
         }
     }
@@ -488,23 +523,25 @@ impl KvTransport for RemotePool {
             // capacity, this call was routed dead and stays dead —
             // resurrecting it onto an arbitrary slot index would hand
             // `SecureKv` metadata at an index the routing never chose.
-            self.stats.dead_calls += 1;
+            self.stats.dead_calls.inc();
             return Self::miss_response(&req);
         }
         let index = producer_index as usize;
+        let t_call = Instant::now();
         let result = match self.slots.get_mut(index).and_then(|s| s.as_mut()) {
             Some(slot) => slot.client.call(&req),
             None => {
-                self.stats.dead_calls += 1;
+                self.stats.dead_calls.inc();
                 return Self::miss_response(&req);
             }
         };
+        self.data_call_us.record_elapsed_us(t_call);
         match result {
             Ok(resp) => resp,
             Err(_) => {
                 // Connection loss == the remote memory is gone: kill the
                 // slot, answer as a miss, refill in the background.
-                self.stats.io_errors += 1;
+                self.stats.io_errors.inc();
                 self.kill_slot(index);
                 self.maintain();
                 Self::miss_response(&req)
@@ -534,21 +571,23 @@ impl KvTransport for RemotePool {
             self.namespace_key(req);
         }
         if producer_index == DEAD_ROUTE {
-            self.stats.dead_calls += reqs.len() as u64;
+            self.stats.dead_calls.add(reqs.len() as u64);
             return reqs.iter().map(Self::miss_response).collect();
         }
         let index = producer_index as usize;
+        let t_call = Instant::now();
         let result = match self.slots.get_mut(index).and_then(|s| s.as_mut()) {
             Some(slot) => slot.client.call_batch(&reqs),
             None => {
-                self.stats.dead_calls += reqs.len() as u64;
+                self.stats.dead_calls.add(reqs.len() as u64);
                 return reqs.iter().map(Self::miss_response).collect();
             }
         };
+        self.data_call_us.record_elapsed_us(t_call);
         match result {
             Ok(resps) if resps.len() == reqs.len() => resps,
             Ok(_) | Err(_) => {
-                self.stats.io_errors += 1;
+                self.stats.io_errors.inc();
                 self.kill_slot(index);
                 self.maintain();
                 reqs.iter().map(Self::miss_response).collect()

@@ -1,0 +1,178 @@
+//! A minimal control-plane stats endpoint: answers `StatsQuery` with a
+//! caller-supplied [`MetricSet`] snapshot and refuses everything else.
+//!
+//! The broker daemon answers `StatsQuery` on its main control port; a
+//! producer agent has no control listener of its own (it *dials* the
+//! broker), so it mounts one of these next to its data plane. The
+//! endpoint speaks the ordinary control handshake, which means
+//! `memtrade top` and any `CtrlClient` can poll it — and a data-plane
+//! client dialing it by mistake gets the standard "wrong plane" error.
+
+use crate::metrics::MetricSet;
+use crate::net::control::{
+    server_handshake_patient, CtrlRequest, CtrlResponse, RefuseCode, CONTROL_MAGIC,
+};
+use crate::net::faults::FaultyStream;
+use crate::net::wire::{read_frame_into_patient, write_frame};
+use std::io::{self, BufReader, BufWriter};
+use std::net::{TcpListener, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Builds the snapshot served to each `StatsQuery` (called per query,
+/// so the numbers are always live).
+pub type MetricsSource = Arc<dyn Fn() -> MetricSet + Send + Sync>;
+
+/// A read-only stats listener (one thread per connection; stats polls
+/// are low-rate).
+pub struct StatsServer {
+    local_addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_handle: Option<JoinHandle<()>>,
+}
+
+impl StatsServer {
+    pub fn start<A: ToSocketAddrs>(addr: A, source: MetricsSource) -> io::Result<Self> {
+        let listener = TcpListener::bind(addr)?;
+        let local_addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let start = Instant::now();
+
+        let stop2 = stop.clone();
+        let accept_handle = std::thread::spawn(move || {
+            let mut conn_handles: Vec<JoinHandle<()>> = Vec::new();
+            while !stop2.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        conn_handles.retain(|h| !h.is_finished());
+                        stream.set_nodelay(true).ok();
+                        let stop = stop2.clone();
+                        let source = source.clone();
+                        conn_handles.push(std::thread::spawn(move || {
+                            let _ = serve_stats_conn(
+                                FaultyStream::clean(stream),
+                                source,
+                                stop,
+                                start,
+                            );
+                        }));
+                    }
+                    Err(ref e) if e.kind() == io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(1));
+                    }
+                    Err(_) => break,
+                }
+            }
+            for h in conn_handles {
+                let _ = h.join();
+            }
+        });
+
+        Ok(StatsServer { local_addr, stop, accept_handle: Some(accept_handle) })
+    }
+
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.local_addr
+    }
+
+    pub fn stop(mut self) {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.accept_handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for StatsServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn serve_stats_conn(
+    stream: FaultyStream,
+    source: MetricsSource,
+    stop: Arc<AtomicBool>,
+    start: Instant,
+) -> io::Result<()> {
+    stream.set_read_timeout(Some(Duration::from_millis(100)))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = BufWriter::new(stream);
+    let keep_going = || !stop.load(Ordering::Relaxed);
+    if server_handshake_patient(&mut reader, &mut writer, CONTROL_MAGIC, keep_going)?
+        .is_none()
+    {
+        return Ok(());
+    }
+    let mut frame: Vec<u8> = Vec::new();
+    let mut out: Vec<u8> = Vec::new();
+    loop {
+        let keep_going = || !stop.load(Ordering::Relaxed);
+        match read_frame_into_patient(&mut reader, &mut frame, keep_going) {
+            Ok(true) => {}
+            Ok(false) | Err(_) => return Ok(()),
+        }
+        let resp = match CtrlRequest::decode(&frame) {
+            Ok(CtrlRequest::StatsQuery) => CtrlResponse::Stats {
+                uptime_us: start.elapsed().as_micros() as u64,
+                metrics: source(),
+            },
+            Ok(_) => CtrlResponse::Refused {
+                code: RefuseCode::Malformed,
+                detail: "stats-only endpoint: only StatsQuery is served here".into(),
+            },
+            Err(e) => CtrlResponse::Refused {
+                code: RefuseCode::Malformed,
+                detail: e.to_string(),
+            },
+        };
+        out.clear();
+        resp.encode_into(&mut out);
+        write_frame(&mut writer, &out)?;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::control::CtrlClient;
+
+    #[test]
+    fn serves_live_snapshots_and_refuses_other_requests() {
+        let hits = Arc::new(crate::metrics::Counter::new());
+        let hits2 = hits.clone();
+        let source: MetricsSource = Arc::new(move || {
+            let mut m = MetricSet::new();
+            m.set_counter("hits", hits2.get());
+            m
+        });
+        let server = StatsServer::start("127.0.0.1:0", source).unwrap();
+        let mut ctrl = CtrlClient::connect(server.addr()).unwrap();
+        let CtrlResponse::Stats { metrics, .. } =
+            ctrl.call(&CtrlRequest::StatsQuery).unwrap()
+        else {
+            panic!("not a stats reply")
+        };
+        assert_eq!(metrics.counter("hits"), Some(0));
+        hits.add(3);
+        // Live: the next poll sees the new value over the same conn.
+        let CtrlResponse::Stats { metrics, uptime_us } =
+            ctrl.call(&CtrlRequest::StatsQuery).unwrap()
+        else {
+            panic!("not a stats reply")
+        };
+        assert_eq!(metrics.counter("hits"), Some(3));
+        assert!(uptime_us > 0);
+        // Anything else is refused, not misinterpreted.
+        let resp = ctrl.call(&CtrlRequest::Deregister { producer: 1 }).unwrap();
+        assert!(matches!(resp, CtrlResponse::Refused { .. }), "{resp:?}");
+        server.stop();
+    }
+}

@@ -55,6 +55,17 @@ pub struct GuestStats {
     pub prefetched: u64,
 }
 
+impl crate::metrics::Observe for GuestStats {
+    fn observe(&self, prefix: &str, out: &mut crate::metrics::MetricSet) {
+        use crate::metrics::scoped;
+        out.set_counter(scoped(prefix, "accesses"), self.accesses);
+        out.set_counter(scoped(prefix, "silo_hits"), self.silo_hits);
+        out.set_counter(scoped(prefix, "disk_faults"), self.disk_faults);
+        out.set_counter(scoped(prefix, "swap_outs"), self.swap_outs);
+        out.set_counter(scoped(prefix, "prefetched"), self.prefetched);
+    }
+}
+
 /// PFRA sampling width: how many resident pages the reclaimer inspects
 /// per eviction. Small values make reclaim (realistically) imperfect.
 const PFRA_SAMPLES: usize = 8;

@@ -31,6 +31,15 @@ pub struct SiloStats {
     pub cooled_to_disk: u64,
 }
 
+impl crate::metrics::Observe for SiloStats {
+    fn observe(&self, prefix: &str, out: &mut crate::metrics::MetricSet) {
+        use crate::metrics::scoped;
+        out.set_counter(scoped(prefix, "admitted"), self.admitted);
+        out.set_counter(scoped(prefix, "mapped_back"), self.mapped_back);
+        out.set_counter(scoped(prefix, "cooled_to_disk"), self.cooled_to_disk);
+    }
+}
+
 impl Silo {
     pub fn new(cooling: SimTime) -> Self {
         Silo {

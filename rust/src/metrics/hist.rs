@@ -1,0 +1,377 @@
+//! Lock-free log-bucketed latency histogram: the one latency instrument
+//! every layer shares, from the producer store's per-op service time to
+//! the broker's placement feedback and the `cargo bench` JSON artifacts.
+//!
+//! Design constraints (this sits on the hottest paths in the system):
+//!
+//! * `record(v)` is exactly **one** relaxed atomic add — no allocation,
+//!   no locking, no floating point;
+//! * fixed memory: 64 power-of-two buckets (bucket 0 holds zeros,
+//!   bucket *i* holds `[2^(i-1), 2^i)`), so a histogram is 512 bytes of
+//!   `AtomicU64` regardless of traffic;
+//! * snapshots are plain `[u64; 64]` copies that support **deltas**
+//!   (windowed rates: the producer agent heartbeats `snapshot - previous
+//!   snapshot` so the broker sees the *last window's* p99, not the
+//!   lifetime's), merging, p50/p90/p99/p999 with intra-bucket linear
+//!   interpolation, and JSON + aligned-text rendering.
+//!
+//! Quantile error is bounded by the bucket width (< 2x, typically far
+//! less with interpolation) — the right trade for a feedback signal and
+//! trend tracking; exact-percentile needs are out of scope.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Number of power-of-two buckets (covers the full `u64` range).
+pub const HIST_BUCKETS: usize = 64;
+
+/// Bucket index of `v`: 0 for 0, else `floor(log2(v)) + 1`, clamped.
+#[inline]
+fn bucket_index(v: u64) -> usize {
+    if v == 0 {
+        0
+    } else {
+        ((64 - v.leading_zeros()) as usize).min(HIST_BUCKETS - 1)
+    }
+}
+
+/// Inclusive-exclusive value range `[lo, hi)` of bucket `i`.
+fn bucket_bounds(i: usize) -> (u64, u64) {
+    match i {
+        0 => (0, 1),
+        _ => (1u64 << (i - 1), if i >= 63 { u64::MAX } else { 1u64 << i }),
+    }
+}
+
+/// Shared, thread-safe histogram. Unit-agnostic: callers pick one unit
+/// per instrument (microseconds on network paths, nanoseconds in the
+/// benches) and name the metric accordingly (`op_us`, `seal_ns`, ...).
+#[derive(Debug)]
+pub struct Histogram {
+    counts: [AtomicU64; HIST_BUCKETS],
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clone for Histogram {
+    fn clone(&self) -> Self {
+        let h = Histogram::new();
+        for (dst, src) in h.counts.iter().zip(&self.counts) {
+            dst.store(src.load(Ordering::Relaxed), Ordering::Relaxed);
+        }
+        h
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram { counts: std::array::from_fn(|_| AtomicU64::new(0)) }
+    }
+
+    /// Record one sample: a single relaxed atomic add.
+    #[inline]
+    pub fn record(&self, v: u64) {
+        self.counts[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Convenience for recording a `Duration` in microseconds.
+    #[inline]
+    pub fn record_elapsed_us(&self, since: std::time::Instant) {
+        self.record(since.elapsed().as_micros() as u64);
+    }
+
+    /// Total samples recorded (sum over buckets).
+    pub fn count(&self) -> u64 {
+        self.counts.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Fold another histogram's counts into this one.
+    pub fn merge(&self, other: &Histogram) {
+        for (dst, src) in self.counts.iter().zip(&other.counts) {
+            dst.fetch_add(src.load(Ordering::Relaxed), Ordering::Relaxed);
+        }
+    }
+
+    /// Consistent-enough copy of the bucket counts (individual loads are
+    /// atomic; concurrent records may land between loads, which a delta
+    /// of two snapshots absorbs as part of the next window).
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        HistogramSnapshot {
+            counts: std::array::from_fn(|i| self.counts[i].load(Ordering::Relaxed)),
+        }
+    }
+}
+
+/// A point-in-time copy of a [`Histogram`]: plain counts supporting
+/// deltas, merging, quantiles, and rendering.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HistogramSnapshot {
+    pub counts: [u64; HIST_BUCKETS],
+}
+
+impl Default for HistogramSnapshot {
+    fn default() -> Self {
+        HistogramSnapshot { counts: [0; HIST_BUCKETS] }
+    }
+}
+
+impl HistogramSnapshot {
+    pub fn count(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.counts.iter().all(|&c| c == 0)
+    }
+
+    /// The window between `earlier` and `self`, bucket-wise. Saturating:
+    /// a racing concurrent record can make one bucket's earlier load
+    /// exceed the later one by an in-flight sample — that never
+    /// underflows into a 2^64 phantom count.
+    pub fn delta(&self, earlier: &HistogramSnapshot) -> HistogramSnapshot {
+        HistogramSnapshot {
+            counts: std::array::from_fn(|i| {
+                self.counts[i].saturating_sub(earlier.counts[i])
+            }),
+        }
+    }
+
+    pub fn merge(&mut self, other: &HistogramSnapshot) {
+        for (dst, src) in self.counts.iter_mut().zip(&other.counts) {
+            *dst += src;
+        }
+    }
+
+    /// Estimated q-quantile (q in [0, 1]), interpolating linearly inside
+    /// the bucket holding the target rank. 0.0 when empty.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * n as f64).ceil().max(1.0) as u64;
+        let mut acc = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            if acc + c >= target {
+                let (lo, hi) = bucket_bounds(i);
+                let frac = (target - acc) as f64 / c as f64;
+                return lo as f64 + frac * (hi - lo) as f64;
+            }
+            acc += c;
+        }
+        bucket_bounds(HIST_BUCKETS - 1).1 as f64
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.quantile(0.50)
+    }
+    pub fn p90(&self) -> f64 {
+        self.quantile(0.90)
+    }
+    pub fn p99(&self) -> f64 {
+        self.quantile(0.99)
+    }
+    pub fn p999(&self) -> f64 {
+        self.quantile(0.999)
+    }
+
+    /// Bucket-midpoint-weighted mean (same error bound as the buckets).
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        let sum: f64 = self
+            .counts
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| {
+                let (lo, hi) = bucket_bounds(i);
+                c as f64 * (lo as f64 + hi as f64) / 2.0
+            })
+            .sum();
+        sum / n as f64
+    }
+
+    /// Nonzero buckets as `(bucket_index, count)` pairs — the wire and
+    /// JSON form (at most 64 entries, usually a handful).
+    pub fn nonzero_buckets(&self) -> Vec<(u8, u64)> {
+        self.counts
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| (i as u8, c))
+            .collect()
+    }
+
+    /// Rebuild from `(bucket_index, count)` pairs (wire decode). Out-of-
+    /// range indices are rejected by the caller (the codec bounds them);
+    /// duplicate indices accumulate saturating, so a hostile frame
+    /// repeating a bucket with huge counts cannot overflow (a debug
+    /// panic / silent release wrap in a path hardened against exactly
+    /// such frames).
+    pub fn from_buckets(buckets: &[(u8, u64)]) -> HistogramSnapshot {
+        let mut s = HistogramSnapshot::default();
+        for &(i, c) in buckets {
+            if (i as usize) < HIST_BUCKETS {
+                s.counts[i as usize] = s.counts[i as usize].saturating_add(c);
+            }
+        }
+        s
+    }
+
+    /// JSON object: count, quantiles, mean, and the nonzero buckets.
+    pub fn to_json(&self) -> String {
+        let buckets: Vec<String> = self
+            .nonzero_buckets()
+            .iter()
+            .map(|(i, c)| format!("[{i},{c}]"))
+            .collect();
+        format!(
+            "{{\"count\":{},\"mean\":{:.1},\"p50\":{:.1},\"p90\":{:.1},\"p99\":{:.1},\
+             \"p999\":{:.1},\"buckets\":[{}]}}",
+            self.count(),
+            self.mean(),
+            self.p50(),
+            self.p90(),
+            self.p99(),
+            self.p999(),
+            buckets.join(",")
+        )
+    }
+
+    /// One-line text render for `memtrade top` and log output.
+    pub fn render(&self) -> String {
+        format!(
+            "n={} mean={:.1} p50={:.1} p90={:.1} p99={:.1} p999={:.1}",
+            self.count(),
+            self.mean(),
+            self.p50(),
+            self.p90(),
+            self.p99(),
+            self.p999()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn bucket_layout() {
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 1);
+        assert_eq!(bucket_index(2), 2);
+        assert_eq!(bucket_index(3), 2);
+        assert_eq!(bucket_index(4), 3);
+        assert_eq!(bucket_index(u64::MAX), HIST_BUCKETS - 1);
+        for v in [0u64, 1, 2, 3, 9, 1000, 1 << 40] {
+            let (lo, hi) = bucket_bounds(bucket_index(v));
+            assert!(lo <= v && (v < hi || hi == u64::MAX), "v={v} lo={lo} hi={hi}");
+        }
+    }
+
+    #[test]
+    fn record_count_quantiles() {
+        let h = Histogram::new();
+        for v in 1..=1000u64 {
+            h.record(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count(), 1000);
+        // Bucketed quantiles are within a bucket width of the truth.
+        let p50 = s.p50();
+        assert!((250.0..=1024.0).contains(&p50), "p50={p50}");
+        assert!(s.p99() >= s.p90() && s.p90() >= s.p50());
+        assert!(s.quantile(1.0) >= 512.0);
+        assert!(s.mean() > 0.0);
+    }
+
+    #[test]
+    fn zero_and_empty() {
+        let h = Histogram::new();
+        assert_eq!(h.snapshot().quantile(0.5), 0.0);
+        h.record(0);
+        let s = h.snapshot();
+        assert_eq!(s.count(), 1);
+        assert_eq!(s.counts[0], 1);
+        assert!(s.quantile(0.5) < 1.0);
+    }
+
+    #[test]
+    fn delta_is_the_window() {
+        let h = Histogram::new();
+        for _ in 0..10 {
+            h.record(100);
+        }
+        let s1 = h.snapshot();
+        for _ in 0..5 {
+            h.record(100_000);
+        }
+        let d = h.snapshot().delta(&s1);
+        assert_eq!(d.count(), 5);
+        // The window's p50 reflects only the new (slow) samples.
+        assert!(d.p50() >= 65536.0, "window p50 = {}", d.p50());
+        // Saturating: a delta the wrong way around never underflows.
+        let backwards = s1.delta(&h.snapshot());
+        assert!(backwards.counts.iter().all(|&c| c < 1 << 32));
+    }
+
+    #[test]
+    fn merge_conserves() {
+        let a = Histogram::new();
+        let b = Histogram::new();
+        for i in 0..100u64 {
+            a.record(i);
+            b.record(i * 7);
+        }
+        let n = a.count() + b.count();
+        a.merge(&b);
+        assert_eq!(a.count(), n);
+        let mut sa = a.snapshot();
+        sa.merge(&b.snapshot());
+        assert_eq!(sa.count(), n + b.count());
+    }
+
+    #[test]
+    fn concurrent_records_are_all_counted() {
+        let h = Arc::new(Histogram::new());
+        let handles: Vec<_> = (0..8)
+            .map(|t| {
+                let h = h.clone();
+                std::thread::spawn(move || {
+                    for i in 0..10_000u64 {
+                        h.record(t * 1000 + i % 997);
+                    }
+                })
+            })
+            .collect();
+        for j in handles {
+            j.join().unwrap();
+        }
+        assert_eq!(h.count(), 80_000);
+    }
+
+    #[test]
+    fn wire_form_round_trips() {
+        let h = Histogram::new();
+        for v in [0u64, 1, 5, 5, 900, 900, 900, 1 << 33] {
+            h.record(v);
+        }
+        let s = h.snapshot();
+        let rebuilt = HistogramSnapshot::from_buckets(&s.nonzero_buckets());
+        assert_eq!(rebuilt, s);
+        let json = s.to_json();
+        assert!(json.contains("\"count\":8"), "{json}");
+        assert!(s.render().contains("n=8"));
+    }
+}

@@ -1,92 +1,298 @@
-//! Experiment-output helpers: aligned text/markdown tables and CSV
-//! emitters used by every figure harness, so the experiment record
-//! (DESIGN.md §Experiment index) comes straight from program output.
+//! The telemetry spine: one metrics plane shared by every layer of the
+//! marketplace, from shard-lock hold times to broker placement feedback.
+//!
+//! Three live primitives — [`Counter`], [`Gauge`], and the lock-free
+//! log-bucketed [`Histogram`] — plus a [`Registry`] of named instruments
+//! and a serializable point-in-time [`MetricSet`]. Components that keep
+//! plain stats structs (the KV store's `KvStats`, the secure client's
+//! `SecureKvStats`, ...) join the same plane through [`Observe`]: they
+//! render into a `MetricSet` under a prefix, and from there everything
+//! shares one wire form (`StatsQuery`/`Stats` on the control plane), one
+//! JSON form (the `BENCH_*.json` artifacts), and one text form
+//! (`memtrade top`).
+//!
+//! Formatting helpers (`Table`, `gb`, ...) used to live here; they are
+//! presentation, not telemetry, and moved to [`crate::util::fmt`].
 
-/// A simple column-aligned table printer.
-pub struct Table {
-    headers: Vec<String>,
-    rows: Vec<Vec<String>>,
+pub mod hist;
+
+pub use hist::{Histogram, HistogramSnapshot, HIST_BUCKETS};
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Monotonic event counter (one relaxed atomic add per event).
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn new() -> Self {
+        Counter(AtomicU64::new(0))
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Guarded decrement: saturates at zero instead of wrapping to
+    /// 2^64 - 1. For the rare "un-count" corrections (e.g. a released
+    /// slot is not a *lost* slot) where a racing path may not have
+    /// recorded the increment being undone.
+    pub fn dec_saturating(&self) {
+        let _ =
+            self.0.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| v.checked_sub(1));
+    }
+
+    #[inline]
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
 }
 
-impl Table {
-    pub fn new<S: Into<String>>(headers: Vec<S>) -> Self {
-        Table { headers: headers.into_iter().map(Into::into).collect(), rows: Vec::new() }
+/// Clone is a snapshot: the new counter starts at the observed value
+/// (used by report structs that freeze stats at scenario end).
+impl Clone for Counter {
+    fn clone(&self) -> Self {
+        Counter(AtomicU64::new(self.get()))
+    }
+}
+
+/// Point-in-time signed level (bytes offered, slabs held, observed p99).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    pub fn new() -> Self {
+        Gauge(AtomicI64::new(0))
     }
 
-    pub fn row<S: Into<String>>(&mut self, cells: Vec<S>) -> &mut Self {
-        let cells: Vec<String> = cells.into_iter().map(Into::into).collect();
-        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
-        self.rows.push(cells);
-        self
+    #[inline]
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
     }
 
-    fn widths(&self) -> Vec<usize> {
-        let mut w: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
-        for row in &self.rows {
-            for (i, c) in row.iter().enumerate() {
-                w[i] = w[i].max(c.len());
-            }
+    #[inline]
+    pub fn add(&self, d: i64) {
+        self.0.fetch_add(d, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+impl Clone for Gauge {
+    fn clone(&self) -> Self {
+        let g = Gauge::new();
+        g.set(self.get());
+        g
+    }
+}
+
+/// One observed metric value in a [`MetricSet`].
+#[derive(Clone, Debug, PartialEq)]
+pub enum Metric {
+    Counter(u64),
+    Gauge(i64),
+    Histogram(HistogramSnapshot),
+}
+
+/// A named, ordered snapshot of metrics: the unit that travels on the
+/// wire (`StatsQuery` reply), renders to JSON (benches), and renders to
+/// text (`memtrade top`). Names are dotted paths (`data.op_us`,
+/// `producer.3.observed_p99_us`); `BTreeMap` keeps every rendering
+/// deterministic.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct MetricSet {
+    entries: BTreeMap<String, Metric>,
+}
+
+/// Join `prefix` and `name` with a dot (bare `name` when no prefix) —
+/// the naming convention every [`Observe`] impl uses.
+pub fn scoped(prefix: &str, name: &str) -> String {
+    if prefix.is_empty() {
+        name.to_string()
+    } else {
+        format!("{prefix}.{name}")
+    }
+}
+
+impl MetricSet {
+    pub fn new() -> Self {
+        MetricSet::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn set(&mut self, name: impl Into<String>, value: Metric) {
+        self.entries.insert(name.into(), value);
+    }
+
+    pub fn set_counter(&mut self, name: impl Into<String>, v: u64) {
+        self.set(name, Metric::Counter(v));
+    }
+
+    pub fn set_gauge(&mut self, name: impl Into<String>, v: i64) {
+        self.set(name, Metric::Gauge(v));
+    }
+
+    pub fn set_histogram(&mut self, name: impl Into<String>, s: HistogramSnapshot) {
+        self.set(name, Metric::Histogram(s));
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Metric> {
+        self.entries.get(name)
+    }
+
+    /// Counter value by name (also accepts a gauge, as its magnitude).
+    pub fn counter(&self, name: &str) -> Option<u64> {
+        match self.entries.get(name)? {
+            Metric::Counter(v) => Some(*v),
+            Metric::Gauge(v) => Some((*v).max(0) as u64),
+            Metric::Histogram(_) => None,
         }
-        w
     }
 
-    /// Render as a markdown table.
-    pub fn markdown(&self) -> String {
-        let w = self.widths();
+    pub fn gauge(&self, name: &str) -> Option<i64> {
+        match self.entries.get(name)? {
+            Metric::Gauge(v) => Some(*v),
+            Metric::Counter(v) => Some(*v as i64),
+            Metric::Histogram(_) => None,
+        }
+    }
+
+    pub fn histogram(&self, name: &str) -> Option<&HistogramSnapshot> {
+        match self.entries.get(name)? {
+            Metric::Histogram(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&str, &Metric)> {
+        self.entries.iter().map(|(k, v)| (k.as_str(), v))
+    }
+
+    /// JSON object keyed by metric name (histograms nest their own
+    /// object, see [`HistogramSnapshot::to_json`]).
+    pub fn to_json(&self) -> String {
+        let fields: Vec<String> = self
+            .entries
+            .iter()
+            .map(|(name, m)| {
+                let v = match m {
+                    Metric::Counter(v) => v.to_string(),
+                    Metric::Gauge(v) => v.to_string(),
+                    Metric::Histogram(s) => s.to_json(),
+                };
+                format!("\"{name}\": {v}")
+            })
+            .collect();
+        format!("{{{}}}", fields.join(", "))
+    }
+
+    /// Aligned text render, one metric per line.
+    pub fn render(&self) -> String {
+        let width = self.entries.keys().map(String::len).max().unwrap_or(0);
         let mut out = String::new();
-        let fmt_row = |cells: &[String], w: &[usize]| {
-            let mut line = String::from("|");
-            for (c, width) in cells.iter().zip(w) {
-                line.push_str(&format!(" {c:<width$} |"));
-            }
-            line.push('\n');
-            line
-        };
-        out.push_str(&fmt_row(&self.headers, &w));
-        out.push('|');
-        for width in &w {
-            out.push_str(&format!("{:-<1$}|", "", width + 2));
-        }
-        out.push('\n');
-        for row in &self.rows {
-            out.push_str(&fmt_row(row, &w));
+        for (name, m) in &self.entries {
+            let v = match m {
+                Metric::Counter(v) => v.to_string(),
+                Metric::Gauge(v) => v.to_string(),
+                Metric::Histogram(s) => s.render(),
+            };
+            out.push_str(&format!("{name:<width$}  {v}\n"));
         }
         out
     }
+}
 
-    /// Render as CSV.
-    pub fn csv(&self) -> String {
-        let esc = |s: &String| {
-            if s.contains(',') || s.contains('"') {
-                format!("\"{}\"", s.replace('"', "\"\""))
-            } else {
-                s.clone()
-            }
-        };
-        let mut out = String::new();
-        out.push_str(&self.headers.iter().map(esc).collect::<Vec<_>>().join(","));
-        out.push('\n');
-        for row in &self.rows {
-            out.push_str(&row.iter().map(esc).collect::<Vec<_>>().join(","));
-            out.push('\n');
-        }
+/// Anything that can publish itself onto the metrics plane. Implemented
+/// by the live [`Registry`] and by every legacy stats struct
+/// (`KvStats`, `SecureKvStats`, `PoolStats`, `AgentStats`,
+/// `BrokerStats`, `SiloStats`, `GuestStats`), so one `MetricSet` can
+/// carry a whole process's telemetry.
+pub trait Observe {
+    /// Write this component's metrics into `out` under `prefix`
+    /// (`""` = bare names).
+    fn observe(&self, prefix: &str, out: &mut MetricSet);
+}
+
+/// A set of named live instruments. Lookup-or-create takes a short
+/// mutex on a cold path; the returned `Arc` is then held by the hot
+/// path, which touches only its own atomics.
+#[derive(Debug, Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, Arc<Gauge>>>,
+    histograms: Mutex<BTreeMap<String, Arc<Histogram>>>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Registry::default()
+    }
+
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        self.counters
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_insert_with(|| Arc::new(Counter::new()))
+            .clone()
+    }
+
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        self.gauges
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_insert_with(|| Arc::new(Gauge::new()))
+            .clone()
+    }
+
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        self.histograms
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_insert_with(|| Arc::new(Histogram::new()))
+            .clone()
+    }
+
+    /// Snapshot every registered instrument into a [`MetricSet`].
+    pub fn snapshot(&self) -> MetricSet {
+        let mut out = MetricSet::new();
+        self.observe("", &mut out);
         out
     }
+}
 
-    pub fn print(&self) {
-        print!("{}", self.markdown());
+impl Observe for Registry {
+    fn observe(&self, prefix: &str, out: &mut MetricSet) {
+        for (name, c) in self.counters.lock().unwrap().iter() {
+            out.set_counter(scoped(prefix, name), c.get());
+        }
+        for (name, g) in self.gauges.lock().unwrap().iter() {
+            out.set_gauge(scoped(prefix, name), g.get());
+        }
+        for (name, h) in self.histograms.lock().unwrap().iter() {
+            out.set_histogram(scoped(prefix, name), h.snapshot());
+        }
     }
-}
-
-/// Format helpers for experiment output.
-pub fn gb(bytes: u64) -> String {
-    format!("{:.1} GB", bytes as f64 / (1u64 << 30) as f64)
-}
-pub fn pct(frac: f64) -> String {
-    format!("{:.1}%", frac * 100.0)
-}
-pub fn ms(us: f64) -> String {
-    format!("{:.2} ms", us / 1000.0)
 }
 
 #[cfg(test)]
@@ -94,34 +300,66 @@ mod tests {
     use super::*;
 
     #[test]
-    fn markdown_alignment() {
-        let mut t = Table::new(vec!["name", "value"]);
-        t.row(vec!["a", "1"]).row(vec!["long-name", "2"]);
-        let md = t.markdown();
-        assert!(md.contains("| name      | value |"));
-        assert!(md.contains("| long-name | 2     |"));
-        assert!(md.lines().count() == 4);
+    fn counter_and_gauge_basics() {
+        let c = Counter::new();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        let snap = c.clone();
+        c.inc();
+        assert_eq!(snap.get(), 5);
+        assert_eq!(c.get(), 6);
+
+        let g = Gauge::new();
+        g.set(-3);
+        g.add(10);
+        assert_eq!(g.get(), 7);
     }
 
     #[test]
-    fn csv_escaping() {
-        let mut t = Table::new(vec!["a", "b"]);
-        t.row(vec!["x,y", "has \"quote\""]);
-        let csv = t.csv();
-        assert!(csv.contains("\"x,y\""));
-        assert!(csv.contains("\"has \"\"quote\"\"\""));
+    fn counter_decrement_saturates_at_zero() {
+        // Regression shape for PoolStats::slots_lost: an un-count on a
+        // counter that never counted must stay 0, not wrap to 2^64 - 1.
+        let c = Counter::new();
+        c.dec_saturating();
+        assert_eq!(c.get(), 0);
+        c.inc();
+        c.dec_saturating();
+        c.dec_saturating();
+        assert_eq!(c.get(), 0);
     }
 
     #[test]
-    #[should_panic(expected = "row arity")]
-    fn arity_checked() {
-        Table::new(vec!["a", "b"]).row(vec!["only-one"]);
+    fn registry_is_live_and_shared() {
+        let r = Registry::new();
+        let a = r.counter("ops");
+        let b = r.counter("ops");
+        a.inc();
+        b.inc();
+        assert_eq!(r.counter("ops").get(), 2);
+        r.gauge("level").set(42);
+        r.histogram("lat_us").record(100);
+        let snap = r.snapshot();
+        assert_eq!(snap.counter("ops"), Some(2));
+        assert_eq!(snap.gauge("level"), Some(42));
+        assert_eq!(snap.histogram("lat_us").unwrap().count(), 1);
     }
 
     #[test]
-    fn formatters() {
-        assert_eq!(gb(1 << 30), "1.0 GB");
-        assert_eq!(pct(0.123), "12.3%");
-        assert_eq!(ms(1500.0), "1.50 ms");
+    fn metric_set_prefixing_render_and_json() {
+        let r = Registry::new();
+        r.counter("hits").add(7);
+        let mut out = MetricSet::new();
+        r.observe("store", &mut out);
+        assert_eq!(out.counter("store.hits"), Some(7));
+        let json = out.to_json();
+        assert!(json.contains("\"store.hits\": 7"), "{json}");
+        assert!(out.render().contains("store.hits"));
+        // Deterministic ordering.
+        let mut m = MetricSet::new();
+        m.set_counter("b", 2);
+        m.set_counter("a", 1);
+        let names: Vec<&str> = m.iter().map(|(n, _)| n).collect();
+        assert_eq!(names, vec!["a", "b"]);
     }
 }

@@ -27,6 +27,7 @@
 //! mid-stream, and both sides cap outgoing batches at the pairwise
 //! minimum of the advertised limits.
 
+use crate::metrics::{HistogramSnapshot, Metric, MetricSet, HIST_BUCKETS};
 use crate::net::faults::{FaultPlan, FaultyStream};
 use crate::net::wire::{
     put_bytes, read_frame_into, read_frame_into_patient, take_bytes, take_u32, take_u64,
@@ -63,8 +64,10 @@ pub fn connect_with_timeout(addr: &str, timeout: Duration) -> io::Result<TcpStre
 
 /// Version of both wire protocols; bumped by the handshake-introducing
 /// revision (v1 was the pre-handshake data plane, v2 the pre-batching
-/// handshake) and again by the batch frames + negotiated batch cap (v3).
-pub const PROTOCOL_VERSION: u16 = 3;
+/// handshake), by the batch frames + negotiated batch cap (v3), and by
+/// the telemetry spine (v4: heartbeats carry observed data-plane
+/// p99/ops-per-sec, and `StatsQuery`/`Stats` expose live metrics).
+pub const PROTOCOL_VERSION: u16 = 4;
 /// Hello magic of the broker control plane.
 pub const CONTROL_MAGIC: [u8; 4] = *b"MTCP";
 /// Hello magic of the producer-store data plane.
@@ -255,13 +258,21 @@ pub enum CtrlRequest {
     /// Availability is in *bytes* here — the agent only learns the
     /// market's slab granularity from the `Registered` answer.
     Register { producer: u64, capacity_gb: f32, endpoint: String, free_bytes: u64 },
-    /// Periodic producer report: harvester-decided availability.
+    /// Periodic producer report: harvester-decided availability, plus
+    /// the producer's *observed* data-plane telemetry over the last
+    /// heartbeat window (v4) — the feedback loop that lets placement
+    /// rank producers by measured tail latency instead of self-reports.
     Heartbeat {
         producer: u64,
         free_slabs: u32,
         used_gb: f32,
         cpu_headroom: f32,
         bandwidth_headroom: f32,
+        /// p99 of the store's per-op service latency in the last window
+        /// (µs; 0 = no traffic observed).
+        observed_p99_us: u32,
+        /// Data-plane ops/sec served in the last window.
+        observed_ops_per_sec: u32,
     },
     /// Consumer asks for capacity; the broker answers with grants.
     RequestSlabs { consumer: u64, slabs: u32, min_slabs: u32, ttl_us: u64 },
@@ -275,6 +286,10 @@ pub enum CtrlRequest {
     Revoke { producer: u64, lease: u64 },
     /// Producer leaves the market; its leases are revoked.
     Deregister { producer: u64 },
+    /// Ask this endpoint for its live metrics (v4). Served by the
+    /// broker (market + per-producer observed telemetry) and by each
+    /// producer agent's stats endpoint; `memtrade top` polls it.
+    StatsQuery,
 }
 
 /// Broker -> participant control responses.
@@ -299,6 +314,8 @@ pub enum CtrlResponse {
     Released { lease: u64 },
     Revoked { lease: u64 },
     Deregistered { producer: u64 },
+    /// Live metrics snapshot answering a [`CtrlRequest::StatsQuery`].
+    Stats { uptime_us: u64, metrics: MetricSet },
     Refused { code: RefuseCode, detail: String },
 }
 
@@ -309,6 +326,7 @@ const TAG_RENEW: u8 = 67;
 const TAG_RELEASE: u8 = 68;
 const TAG_REVOKE: u8 = 69;
 const TAG_DEREGISTER: u8 = 70;
+const TAG_STATS_QUERY: u8 = 71;
 
 const TAG_REGISTERED: u8 = 80;
 const TAG_HEARTBEAT_ACK: u8 = 81;
@@ -318,6 +336,81 @@ const TAG_RELEASED: u8 = 84;
 const TAG_REVOKED: u8 = 85;
 const TAG_DEREGISTERED: u8 = 86;
 const TAG_REFUSED: u8 = 87;
+const TAG_STATS: u8 = 88;
+
+/// Wire kind bytes of one [`Metric`] inside a metric set.
+const METRIC_COUNTER: u8 = 1;
+const METRIC_GAUGE: u8 = 2;
+const METRIC_HISTOGRAM: u8 = 3;
+
+/// Append a [`MetricSet`]: `u32` entry count, then per entry the name
+/// (length-prefixed bytes), a kind byte, and the kind's payload.
+/// Histograms travel as their nonzero `(bucket, count)` pairs — at most
+/// [`HIST_BUCKETS`], usually a handful.
+fn put_metric_set(out: &mut Vec<u8>, m: &MetricSet) {
+    out.extend_from_slice(&(m.len() as u32).to_le_bytes());
+    for (name, metric) in m.iter() {
+        put_bytes(out, name.as_bytes());
+        match metric {
+            Metric::Counter(v) => {
+                out.push(METRIC_COUNTER);
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+            Metric::Gauge(v) => {
+                out.push(METRIC_GAUGE);
+                out.extend_from_slice(&(*v as u64).to_le_bytes());
+            }
+            Metric::Histogram(s) => {
+                out.push(METRIC_HISTOGRAM);
+                let nz = s.nonzero_buckets();
+                out.push(nz.len() as u8);
+                for (i, c) in nz {
+                    out.push(i);
+                    out.extend_from_slice(&c.to_le_bytes());
+                }
+            }
+        }
+    }
+}
+
+/// Decode a [`MetricSet`] with allocation bounded by the frame itself:
+/// a hostile entry count cannot reserve more than the frame could hold,
+/// and histogram bucket lists are bounded by both [`HIST_BUCKETS`] and
+/// the remaining bytes. The per-entry floor is 6 wire bytes — an
+/// empty-named histogram with zero nonzero buckets (4-byte name length
+/// + kind + bucket count) — NOT the 13 bytes of a counter entry; a
+/// tighter bound would refuse legitimately encoded frames.
+fn take_metric_set(buf: &[u8], off: &mut usize) -> Result<MetricSet, CodecError> {
+    let n = take_u32(buf, off)? as usize;
+    if n > buf.len() / 6 {
+        return Err(CodecError::Truncated);
+    }
+    let mut m = MetricSet::new();
+    for _ in 0..n {
+        let name = take_string(buf, off)?;
+        match take_u8(buf, off)? {
+            METRIC_COUNTER => m.set_counter(name, take_u64(buf, off)?),
+            METRIC_GAUGE => m.set_gauge(name, take_u64(buf, off)? as i64),
+            METRIC_HISTOGRAM => {
+                let k = take_u8(buf, off)? as usize;
+                if k > HIST_BUCKETS || k * 9 > buf.len() - *off {
+                    return Err(CodecError::Truncated);
+                }
+                let mut buckets = Vec::with_capacity(k);
+                for _ in 0..k {
+                    let idx = take_u8(buf, off)?;
+                    if idx as usize >= HIST_BUCKETS {
+                        return Err(CodecError::Truncated);
+                    }
+                    buckets.push((idx, take_u64(buf, off)?));
+                }
+                m.set_histogram(name, HistogramSnapshot::from_buckets(&buckets));
+            }
+            t => return Err(CodecError::UnknownTag(t)),
+        }
+    }
+    Ok(m)
+}
 
 fn put_f32(out: &mut Vec<u8>, v: f32) {
     out.extend_from_slice(&v.to_le_bytes());
@@ -413,6 +506,8 @@ impl CtrlRequest {
                 used_gb,
                 cpu_headroom,
                 bandwidth_headroom,
+                observed_p99_us,
+                observed_ops_per_sec,
             } => {
                 out.push(TAG_HEARTBEAT);
                 out.extend_from_slice(&producer.to_le_bytes());
@@ -420,6 +515,8 @@ impl CtrlRequest {
                 put_f32(out, *used_gb);
                 put_f32(out, *cpu_headroom);
                 put_f32(out, *bandwidth_headroom);
+                out.extend_from_slice(&observed_p99_us.to_le_bytes());
+                out.extend_from_slice(&observed_ops_per_sec.to_le_bytes());
             }
             CtrlRequest::RequestSlabs { consumer, slabs, min_slabs, ttl_us } => {
                 out.push(TAG_REQUEST_SLABS);
@@ -447,6 +544,7 @@ impl CtrlRequest {
                 out.push(TAG_DEREGISTER);
                 out.extend_from_slice(&producer.to_le_bytes());
             }
+            CtrlRequest::StatsQuery => out.push(TAG_STATS_QUERY),
         }
     }
 
@@ -475,6 +573,8 @@ impl CtrlRequest {
                 used_gb: take_f32(buf, o)?,
                 cpu_headroom: take_f32(buf, o)?,
                 bandwidth_headroom: take_f32(buf, o)?,
+                observed_p99_us: take_u32(buf, o)?,
+                observed_ops_per_sec: take_u32(buf, o)?,
             },
             TAG_REQUEST_SLABS => CtrlRequest::RequestSlabs {
                 consumer: take_u64(buf, o)?,
@@ -495,6 +595,7 @@ impl CtrlRequest {
                 lease: take_u64(buf, o)?,
             },
             TAG_DEREGISTER => CtrlRequest::Deregister { producer: take_u64(buf, o)? },
+            TAG_STATS_QUERY => CtrlRequest::StatsQuery,
             t => return Err(CodecError::UnknownTag(t)),
         };
         finish(req, buf, off)
@@ -545,6 +646,11 @@ impl CtrlResponse {
             CtrlResponse::Deregistered { producer } => {
                 out.push(TAG_DEREGISTERED);
                 out.extend_from_slice(&producer.to_le_bytes());
+            }
+            CtrlResponse::Stats { uptime_us, metrics } => {
+                out.push(TAG_STATS);
+                out.extend_from_slice(&uptime_us.to_le_bytes());
+                put_metric_set(out, metrics);
             }
             CtrlResponse::Refused { code, detail } => {
                 out.push(TAG_REFUSED);
@@ -612,6 +718,10 @@ impl CtrlResponse {
             TAG_RELEASED => CtrlResponse::Released { lease: take_u64(buf, o)? },
             TAG_REVOKED => CtrlResponse::Revoked { lease: take_u64(buf, o)? },
             TAG_DEREGISTERED => CtrlResponse::Deregistered { producer: take_u64(buf, o)? },
+            TAG_STATS => CtrlResponse::Stats {
+                uptime_us: take_u64(buf, o)?,
+                metrics: take_metric_set(buf, o)?,
+            },
             TAG_REFUSED => CtrlResponse::Refused {
                 code: RefuseCode::from_byte(take_u8(buf, o)?)?,
                 detail: take_string(buf, o)?,
@@ -723,12 +833,15 @@ mod tests {
                 used_gb: 3.25,
                 cpu_headroom: 0.9,
                 bandwidth_headroom: 0.5,
+                observed_p99_us: 740,
+                observed_ops_per_sec: 12_500,
             },
             CtrlRequest::RequestSlabs { consumer: 9, slabs: 16, min_slabs: 1, ttl_us: 1 },
             CtrlRequest::Renew { consumer: 9, lease: 3 },
             CtrlRequest::Release { consumer: 9, lease: 4 },
             CtrlRequest::Revoke { producer: 7, lease: 5 },
             CtrlRequest::Deregister { producer: 7 },
+            CtrlRequest::StatsQuery,
         ];
         for req in cases {
             let enc = req.encode();
@@ -760,6 +873,21 @@ mod tests {
             CtrlResponse::Released { lease: 4 },
             CtrlResponse::Revoked { lease: 5 },
             CtrlResponse::Deregistered { producer: 7 },
+            CtrlResponse::Stats { uptime_us: 123_456, metrics: MetricSet::new() },
+            CtrlResponse::Stats {
+                uptime_us: 1,
+                metrics: {
+                    let mut m = MetricSet::new();
+                    m.set_counter("ctrl.heartbeats", 42);
+                    m.set_gauge("market.producers", -1);
+                    let h = crate::metrics::Histogram::new();
+                    for v in [0u64, 3, 90, 90, 5_000, 1 << 40] {
+                        h.record(v);
+                    }
+                    m.set_histogram("data.op_us", h.snapshot());
+                    m
+                },
+            },
             CtrlResponse::Refused { code: RefuseCode::LeaseExpired, detail: "late".into() },
         ];
         for resp in cases {
@@ -788,11 +916,30 @@ mod tests {
             let _ = CtrlResponse::decode(&buf);
             // Bias toward valid tags so field decoding is fuzzed too.
             if !buf.is_empty() {
-                buf[0] = 64 + (rng.below(24) as u8);
+                buf[0] = 64 + (rng.below(28) as u8);
                 let _ = CtrlRequest::decode(&buf);
                 let _ = CtrlResponse::decode(&buf);
             }
         }
+    }
+
+    #[test]
+    fn stats_decode_bounds_hostile_counts() {
+        // A tiny frame declaring 2^32-1 metric entries must be refused
+        // before any table is reserved.
+        let mut buf = vec![TAG_STATS];
+        buf.extend_from_slice(&7u64.to_le_bytes());
+        buf.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert_eq!(CtrlResponse::decode(&buf), Err(CodecError::Truncated));
+        // Same for a histogram whose bucket index is out of range.
+        let mut m = MetricSet::new();
+        m.set_counter("x", 1);
+        let mut ok = CtrlResponse::Stats { uptime_us: 1, metrics: m }.encode();
+        // name "x" is 4(len)+1 bytes at offset 13; kind at 18; value 19..27.
+        ok[18] = METRIC_HISTOGRAM;
+        ok[19] = 1; // one bucket pair
+        ok[20] = 64; // bucket index out of range
+        assert!(CtrlResponse::decode(&ok).is_err());
     }
 
     #[test]
@@ -817,8 +964,8 @@ mod tests {
         old.extend_from_slice(&2u16.to_le_bytes());
         let err = check_hello(&old, DATA_MAGIC).unwrap_err();
         assert!(err.contains("v2"), "{err}");
-        assert!(err.contains("requires v3"), "{err}");
-        // A v3-versioned hello of the wrong shape is named malformed.
+        assert!(err.contains("requires v4"), "{err}");
+        // A current-versioned hello of the wrong shape is named malformed.
         let mut bad = hello_payload(DATA_MAGIC).to_vec();
         bad.push(0);
         let err = check_hello(&bad, DATA_MAGIC).unwrap_err();

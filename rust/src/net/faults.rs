@@ -38,6 +38,7 @@
 //! envelope must catch 100% of these as `BadHash`/`BadCiphertext`
 //! misses; `tests/chaos.rs` asserts exactly that.
 
+use crate::metrics::{scoped, Counter, MetricSet, Observe};
 use crate::util::rng::{splitmix64_once, Rng};
 use std::io::{self, Read, Write};
 use std::net::{Shutdown, TcpStream};
@@ -66,6 +67,43 @@ pub struct FaultSpec {
     pub bitflip_p: f64,
 }
 
+/// Injected-fault counters, shared by every stream built from one plan
+/// (and its clones): the chaos plane's own telemetry, so scenarios and
+/// `memtrade top` can report *how much* chaos actually landed instead
+/// of inferring it from rates.
+#[derive(Debug, Default)]
+pub struct FaultCounters {
+    pub drops: Counter,
+    pub delays: Counter,
+    pub disconnects: Counter,
+    pub truncates: Counter,
+    pub duplicates: Counter,
+    pub bitflips: Counter,
+}
+
+impl FaultCounters {
+    /// Total faults injected across all kinds.
+    pub fn total(&self) -> u64 {
+        self.drops.get()
+            + self.delays.get()
+            + self.disconnects.get()
+            + self.truncates.get()
+            + self.duplicates.get()
+            + self.bitflips.get()
+    }
+}
+
+impl Observe for FaultCounters {
+    fn observe(&self, prefix: &str, out: &mut MetricSet) {
+        out.set_counter(scoped(prefix, "drops"), self.drops.get());
+        out.set_counter(scoped(prefix, "delays"), self.delays.get());
+        out.set_counter(scoped(prefix, "disconnects"), self.disconnects.get());
+        out.set_counter(scoped(prefix, "truncates"), self.truncates.get());
+        out.set_counter(scoped(prefix, "duplicates"), self.duplicates.get());
+        out.set_counter(scoped(prefix, "bitflips"), self.bitflips.get());
+    }
+}
+
 /// A seeded, per-direction fault schedule for one plane's connections.
 #[derive(Clone, Debug)]
 pub struct FaultPlan {
@@ -77,6 +115,8 @@ pub struct FaultPlan {
     /// Live kill switch, shared by every stream built from this plan
     /// (clones share it too).
     armed: Arc<AtomicBool>,
+    /// Injected-fault counts (shared with clones, like `armed`).
+    counters: Arc<FaultCounters>,
 }
 
 impl Default for FaultPlan {
@@ -86,6 +126,7 @@ impl Default for FaultPlan {
             read: FaultSpec::default(),
             write: FaultSpec::default(),
             armed: Arc::new(AtomicBool::new(true)),
+            counters: Arc::new(FaultCounters::default()),
         }
     }
 }
@@ -115,6 +156,12 @@ impl FaultPlan {
         self.armed.load(Ordering::Relaxed)
     }
 
+    /// Counts of faults actually injected on streams built from this
+    /// plan (or a clone of it).
+    pub fn counters(&self) -> &FaultCounters {
+        &self.counters
+    }
+
     /// Derive the deterministic per-connection fault state for the
     /// `conn`-th connection under this plan.
     fn state_for(&self, conn: u64) -> Arc<Mutex<FaultState>> {
@@ -123,6 +170,7 @@ impl FaultPlan {
             read: self.read,
             write: self.write,
             armed: self.armed.clone(),
+            counters: self.counters.clone(),
             dead: false,
         }))
     }
@@ -136,6 +184,7 @@ struct FaultState {
     read: FaultSpec,
     write: FaultSpec,
     armed: Arc<AtomicBool>,
+    counters: Arc<FaultCounters>,
     /// A disconnect fault fired: every later call errors.
     dead: bool,
 }
@@ -202,21 +251,25 @@ impl Read for FaultyStream {
         // Decisions drawn in a fixed order per call (see module doc).
         if s.rng.chance(s.read.disconnect_p) {
             s.dead = true;
+            s.counters.disconnects.inc();
             self.inner.shutdown(Shutdown::Both).ok();
             return Err(injected_disconnect());
         }
         if s.rng.chance(s.read.delay_p) {
             let ms = s.rng.below(s.read.delay_max_ms.max(1) + 1);
+            s.counters.delays.inc();
             std::thread::sleep(Duration::from_millis(ms));
         }
         let n = self.inner.read(buf)?;
         if n > 0 && s.rng.chance(s.read.bitflip_p) {
+            s.counters.bitflips.inc();
             flip_random_bit(&mut buf[..n], &mut s.rng);
         }
         if n > 1 && s.rng.chance(s.read.truncate_p) {
             // Discard the tail: those bytes were consumed from the
             // socket and are gone — the peer and we now disagree about
             // the stream position.
+            s.counters.truncates.inc();
             let keep = 1 + s.rng.below(n as u64 - 1) as usize;
             return Ok(keep);
         }
@@ -238,30 +291,36 @@ impl Write for FaultyStream {
         }
         if s.rng.chance(s.write.disconnect_p) {
             s.dead = true;
+            s.counters.disconnects.inc();
             self.inner.shutdown(Shutdown::Both).ok();
             return Err(injected_disconnect());
         }
         if s.rng.chance(s.write.delay_p) {
             let ms = s.rng.below(s.write.delay_max_ms.max(1) + 1);
+            s.counters.delays.inc();
             std::thread::sleep(Duration::from_millis(ms));
         }
         if s.rng.chance(s.write.drop_p) {
             // Vanished in flight; the caller believes it was sent.
+            s.counters.drops.inc();
             return Ok(buf.len());
         }
         if !buf.is_empty() && s.rng.chance(s.write.bitflip_p) {
+            s.counters.bitflips.inc();
             let mut copy = buf.to_vec();
             flip_random_bit(&mut copy, &mut s.rng);
             self.inner.write_all(&copy)?;
             return Ok(buf.len());
         }
         if buf.len() > 1 && s.rng.chance(s.write.truncate_p) {
+            s.counters.truncates.inc();
             let keep = 1 + s.rng.below(buf.len() as u64 - 1) as usize;
             self.inner.write_all(&buf[..keep])?;
             // Report full success: the tail is silently lost.
             return Ok(buf.len());
         }
         if !buf.is_empty() && s.rng.chance(s.write.duplicate_p) {
+            s.counters.duplicates.inc();
             self.inner.write_all(buf)?;
             self.inner.write_all(buf)?;
             return Ok(buf.len());
@@ -464,9 +523,16 @@ mod tests {
         });
         let mut fs = FaultyStream::new(TcpStream::connect(addr).unwrap(), Some(&plan), 0);
         fs.write_all(b"xxx").unwrap(); // dropped (drop_p = 1)
+        assert_eq!(plan.counters().drops.get(), 1, "injected drop not counted");
         plan.disarm();
         fs.write_all(b"yyy").unwrap(); // delivered
         assert_eq!(&t.join().unwrap(), b"yyy");
+        // Disarmed injections are not injections: the count is frozen.
+        assert_eq!(plan.counters().drops.get(), 1);
+        assert_eq!(plan.counters().total(), 1);
+        let mut m = MetricSet::new();
+        plan.counters().observe("faults", &mut m);
+        assert_eq!(m.counter("faults.drops"), Some(1));
     }
 
     #[test]

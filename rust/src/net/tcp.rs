@@ -25,7 +25,8 @@
 //! window (the one-shot API is exactly the window = 1 case).
 
 use crate::consumer::client::KvTransport;
-use crate::kv::{KvStats, KvStore, ShardedKvStore};
+use crate::kv::{KvStats, ShardGuard, ShardedKvStore};
+use crate::metrics::{Counter, Histogram, MetricSet, Observe, Registry};
 use crate::net::control::{client_handshake, server_handshake_patient, DATA_MAGIC};
 use crate::net::faults::{ByzantineSpec, ByzantineState, FaultPlan, FaultyStream};
 use crate::net::wire::{
@@ -39,7 +40,7 @@ use crate::util::token_bucket::AtomicTokenBucket;
 use std::io::{self, BufReader, BufWriter, Write};
 use std::net::{TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, MutexGuard};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Instant;
 
@@ -71,6 +72,25 @@ pub struct ProducerStoreServer {
     /// Byzantine-mode responses served tampered (0 unless started via
     /// [`Self::start_chaotic`] with a [`ByzantineSpec`]).
     tampered: Arc<AtomicU64>,
+    /// Live telemetry: `op_us` (per-frame service latency, µs, the
+    /// producer's *observed* data-plane latency that heartbeats feed to
+    /// broker placement), `ops` (ops served; batches count per op), and
+    /// `shard.lock_hold_us` (from the instrumented store).
+    telemetry: Arc<Registry>,
+}
+
+/// Everything one connection thread needs, bundled (the serving loop
+/// outlives many reconnecting peers; each accepted connection clones
+/// these shared handles).
+struct ConnShared {
+    store: Arc<ShardedKvStore>,
+    stop: Arc<AtomicBool>,
+    bucket: Option<Arc<AtomicTokenBucket>>,
+    start: Instant,
+    byz: Option<ByzantineState>,
+    tampered: Arc<AtomicU64>,
+    op_us: Arc<Histogram>,
+    ops: Arc<Counter>,
 }
 
 impl ProducerStoreServer {
@@ -122,9 +142,16 @@ impl ProducerStoreServer {
         let local_addr = listener.local_addr()?;
         listener.set_nonblocking(true)?;
         let stop = Arc::new(AtomicBool::new(false));
-        let store = Arc::new(ShardedKvStore::new(max_bytes, n_shards, seed));
+        let telemetry = Arc::new(Registry::new());
+        let store = {
+            let mut store = ShardedKvStore::new(max_bytes, n_shards, seed);
+            store.instrument_locks(telemetry.histogram("shard.lock_hold_us"));
+            Arc::new(store)
+        };
         let bucket = rate_bps.map(|bps| Arc::new(AtomicTokenBucket::new(bps, bps / 4)));
         let tampered = Arc::new(AtomicU64::new(0));
+        let op_us = telemetry.histogram("op_us");
+        let ops = telemetry.counter("ops");
 
         let stop2 = stop.clone();
         let store2 = store.clone();
@@ -145,20 +172,18 @@ impl ProducerStoreServer {
                         let stream = FaultyStream::new(stream, faults.as_ref(), conn_idx);
                         let byz = byzantine.as_ref().map(|b| b.state_for(conn_idx));
                         conn_idx += 1;
-                        let store = store2.clone();
-                        let stop = stop2.clone();
-                        let bucket = bucket.clone();
-                        let tampered = tampered2.clone();
+                        let shared = ConnShared {
+                            store: store2.clone(),
+                            stop: stop2.clone(),
+                            bucket: bucket.clone(),
+                            start: start_instant,
+                            byz,
+                            tampered: tampered2.clone(),
+                            op_us: op_us.clone(),
+                            ops: ops.clone(),
+                        };
                         conn_handles.push(std::thread::spawn(move || {
-                            let _ = serve_conn(
-                                stream,
-                                store,
-                                stop,
-                                bucket,
-                                start_instant,
-                                byz,
-                                tampered,
-                            );
+                            let _ = serve_conn(stream, shared);
                         }));
                     }
                     Err(ref e) if e.kind() == io::ErrorKind::WouldBlock => {
@@ -178,6 +203,7 @@ impl ProducerStoreServer {
             accept_handle: Some(accept_handle),
             store,
             tampered,
+            telemetry,
         })
     }
 
@@ -193,6 +219,26 @@ impl ProducerStoreServer {
     /// Snapshot of store statistics, aggregated across shards.
     pub fn stats(&self) -> KvStats {
         self.store.stats()
+    }
+
+    /// The live telemetry registry (`op_us`, `ops`,
+    /// `shard.lock_hold_us`). The producer agent reads windowed deltas
+    /// of `op_us` to put observed p99 + ops/sec on its heartbeats.
+    pub fn telemetry(&self) -> &Arc<Registry> {
+        &self.telemetry
+    }
+
+    /// Full metrics snapshot: live registry + store counters/gauges —
+    /// what the agent's stats endpoint serves for this data plane.
+    pub fn metrics(&self) -> MetricSet {
+        let mut out = MetricSet::new();
+        self.telemetry.observe("data", &mut out);
+        self.store.stats().observe("store", &mut out);
+        out.set_gauge("store.used_bytes", self.store.used_bytes() as i64);
+        out.set_gauge("store.max_bytes", self.store.max_bytes() as i64);
+        out.set_gauge("store.keys", self.store.len() as i64);
+        out.set_counter("byzantine.tampered", self.tampered.load(Ordering::Relaxed));
+        out
     }
 
     /// Responses served tampered by the Byzantine mode so far (for
@@ -225,15 +271,9 @@ impl Drop for ProducerStoreServer {
     }
 }
 
-fn serve_conn(
-    stream: FaultyStream,
-    store: Arc<ShardedKvStore>,
-    stop: Arc<AtomicBool>,
-    bucket: Option<Arc<AtomicTokenBucket>>,
-    start: Instant,
-    mut byz: Option<ByzantineState>,
-    tampered: Arc<AtomicU64>,
-) -> io::Result<()> {
+fn serve_conn(stream: FaultyStream, shared: ConnShared) -> io::Result<()> {
+    let ConnShared { store, stop, bucket, start, mut byz, tampered, op_us, ops: ops_ctr } =
+        shared;
     stream.set_read_timeout(Some(std::time::Duration::from_millis(100)))?;
     let mut reader = BufReader::with_capacity(CONN_BUF_BYTES, stream.try_clone()?);
     let mut writer = BufWriter::with_capacity(CONN_BUF_BYTES, stream);
@@ -264,6 +304,17 @@ fn serve_conn(
             Err(_) => return Ok(()),    // disconnect / hostile length
         }
         out.clear();
+        // Observed per-op service latency: decode → execute → response
+        // bytes written. Injected I/O stalls (chaos write delays) land
+        // inside this window on purpose — the histogram is this
+        // producer's *observed* data-plane latency, the very number its
+        // heartbeats feed to broker placement. Only frames that were
+        // actually *served* count (`frame_ops > 0`): throttle refusals
+        // and decode errors answer in microseconds, and recording them
+        // would make an overloaded or garbage-fed producer look fast —
+        // inverting the placement feedback this signal exists for.
+        let t_op = Instant::now();
+        let mut frame_ops: u64 = 0;
         // Rate limiting (paper §4.2): refuse oversized I/O, priced by
         // frame bytes (one draw covers a whole batch). The bucket is
         // lock-free, so throttling accounting never serializes
@@ -292,7 +343,10 @@ fn serve_conn(
                             Response::Throttled { retry_after_us }.encode_into(&mut out);
                         }
                     }
-                    None => serve_batch(&store, &ops, &mut out, &mut byz, &tampered),
+                    None => {
+                        frame_ops = ops.len() as u64;
+                        serve_batch(&store, &ops, &mut out, &mut byz, &tampered);
+                    }
                 },
             }
         } else {
@@ -302,39 +356,47 @@ fn serve_conn(
                     Some(retry_after_us) => {
                         Response::Throttled { retry_after_us }.encode_into(&mut out)
                     }
-                    None => match req {
-                        RequestRef::Get { key } => {
-                            // Zero-copy hit: the value is encoded from the
-                            // shard entry straight into the reused output
-                            // frame, under the shard lock.
-                            let hit =
-                                store.get_with(key, |v| encode_value_response(&mut out, v));
-                            if hit.is_none() {
-                                Response::NotFound.encode_into(&mut out);
-                            } else if let Some(b) = byz.as_mut() {
-                                // Byzantine mode: maybe corrupt, replay,
-                                // or truncate this hit (chaos-only path).
-                                if b.process_value_response(&mut out) {
-                                    tampered.fetch_add(1, Ordering::Relaxed);
+                    None => {
+                        frame_ops = 1;
+                        match req {
+                            RequestRef::Get { key } => {
+                                // Zero-copy hit: the value is encoded
+                                // from the shard entry straight into the
+                                // reused output frame, under the lock.
+                                let hit = store
+                                    .get_with(key, |v| encode_value_response(&mut out, v));
+                                if hit.is_none() {
+                                    Response::NotFound.encode_into(&mut out);
+                                } else if let Some(b) = byz.as_mut() {
+                                    // Byzantine mode: maybe corrupt,
+                                    // replay, or truncate this hit
+                                    // (chaos-only path).
+                                    if b.process_value_response(&mut out) {
+                                        tampered.fetch_add(1, Ordering::Relaxed);
+                                    }
                                 }
                             }
-                        }
-                        RequestRef::Put { key, value } => {
-                            if store.put(key, value) {
-                                Response::Stored.encode_into(&mut out)
-                            } else {
-                                Response::Rejected.encode_into(&mut out)
+                            RequestRef::Put { key, value } => {
+                                if store.put(key, value) {
+                                    Response::Stored.encode_into(&mut out)
+                                } else {
+                                    Response::Rejected.encode_into(&mut out)
+                                }
                             }
+                            RequestRef::Delete { key } => {
+                                Response::Deleted(store.delete(key)).encode_into(&mut out)
+                            }
+                            RequestRef::Ping => Response::Pong.encode_into(&mut out),
                         }
-                        RequestRef::Delete { key } => {
-                            Response::Deleted(store.delete(key)).encode_into(&mut out)
-                        }
-                        RequestRef::Ping => Response::Pong.encode_into(&mut out),
-                    },
+                    }
                 },
             }
         }
         write_frame(&mut writer, &out)?;
+        if frame_ops > 0 {
+            op_us.record_elapsed_us(t_op);
+            ops_ctr.add(frame_ops);
+        }
         bound_scratch(&mut frame);
         bound_scratch(&mut out);
     }
@@ -368,7 +430,7 @@ fn serve_batch(
         op_shard.push(s as u32);
         needed[s] = true;
     }
-    let mut guards: Vec<Option<MutexGuard<'_, KvStore>>> = needed
+    let mut guards: Vec<Option<ShardGuard<'_>>> = needed
         .iter()
         .enumerate()
         .map(|(i, &need)| need.then(|| store.lock_shard(i)))
@@ -1028,6 +1090,12 @@ mod tests {
             })
             .collect();
         assert_eq!(client.multi_put(&pairs).unwrap(), vec![false; 4]);
+        // Throttle refusals answer in microseconds and serve nothing:
+        // they must NOT pollute the observed-latency/throughput signal
+        // placement ranks by, or an overloaded producer looks fast.
+        let m = server.metrics();
+        assert_eq!(m.counter("data.ops"), Some(0), "throttled frames counted as served");
+        assert_eq!(m.histogram("data.op_us").unwrap().count(), 0);
         server.stop();
     }
 
@@ -1081,6 +1149,25 @@ mod tests {
         // secure layer sees misses), not misattributed responses.
         let resps = KvTransport::call_multi(&mut client, 0, vec![Request::Ping]);
         assert!(matches!(resps[0], Response::Error(_)), "got {resps:?}");
+    }
+
+    #[test]
+    fn server_telemetry_counts_ops_and_latency() {
+        let server = ProducerStoreServer::start("127.0.0.1:0", 1 << 20, None, 5).unwrap();
+        let mut client = KvClient::connect(server.addr()).unwrap();
+        assert!(client.put(b"k", b"v").unwrap());
+        assert_eq!(client.get(b"k").unwrap(), Some(b"v".to_vec()));
+        let keys: [&[u8]; 3] = [b"k", b"k", b"absent"];
+        client.multi_get(&keys).unwrap();
+        let m = server.metrics();
+        // 2 single-op frames + one 3-op batch frame.
+        assert_eq!(m.counter("data.ops"), Some(5));
+        let h = m.histogram("data.op_us").unwrap();
+        assert_eq!(h.count(), 3, "one service-latency sample per frame");
+        assert!(m.histogram("data.shard.lock_hold_us").unwrap().count() >= 3);
+        assert_eq!(m.counter("store.puts"), Some(1));
+        assert!(m.gauge("store.used_bytes").unwrap() > 0);
+        server.stop();
     }
 
     #[test]

@@ -5,6 +5,7 @@
 
 pub mod avl;
 pub mod bench;
+pub mod fmt;
 pub mod hash;
 pub mod rng;
 pub mod stats;

@@ -74,6 +74,14 @@ impl Summary {
 /// (~2.4% with 32 subbuckets per octave) — constant memory, O(1) insert,
 /// O(buckets) quantiles. Values are recorded as f64 microseconds (or any
 /// positive unit).
+///
+/// Relationship to [`crate::metrics::Histogram`]: this is the
+/// *experiment* instrument — single-threaded (`&mut self`), f64 input,
+/// high resolution (sub-unit values, 32 subbuckets/octave) for the
+/// simulator and figure harnesses. The `metrics` one is the *system*
+/// instrument — shared (`&self`, one atomic add), integer input, 64
+/// coarse pow-2 buckets, snapshot/delta/wire-friendly — and is what
+/// every live path and the bench JSON artifacts use. Don't add a third.
 #[derive(Clone, Debug)]
 pub struct Histogram {
     /// buckets[octave][sub]

@@ -176,8 +176,8 @@ fn marketplace_survives_producer_failure() {
         pool.held_slabs(),
         pool.live_endpoints()
     );
-    assert!(pool.stats.slots_lost > 0);
-    assert!(pool.stats.rerequests > 0);
+    assert!(pool.stats.slots_lost.get() > 0);
+    assert!(pool.stats.rerequests.get() > 0);
 
     // Lost keys refill as cache writes and then hit again.
     let mut refilled = 0;
@@ -386,8 +386,8 @@ fn zero_live_slots_put_get_delete_are_recorded_misses() {
     assert_eq!(secure.get(&mut pool, b"k"), None);
     assert!(!secure.delete(&mut pool, b"k"));
     assert!(t0.elapsed() < Duration::from_secs(5));
-    assert!(pool.stats.dead_calls >= 1, "PUT did not take the recorded-miss path");
-    assert_eq!(pool.stats.io_errors, 0);
+    assert!(pool.stats.dead_calls.get() >= 1, "PUT did not take the recorded-miss path");
+    assert_eq!(pool.stats.io_errors.get(), 0);
 
     // The transport-level contract for dead-routed calls of each verb.
     assert_eq!(pool.call(DEAD_ROUTE, Request::Get { key: b"x".to_vec() }), Response::NotFound);
@@ -509,7 +509,7 @@ fn stalled_producer_surfaces_as_bounded_miss_not_a_wedge() {
         "data path wedged on a stalled producer for {:?}",
         t0.elapsed()
     );
-    assert!(pool.stats.io_errors >= 1, "the stall was not surfaced as an I/O loss");
+    assert!(pool.stats.io_errors.get() >= 1, "the stall was not surfaced as an I/O loss");
     assert_eq!(secure.stats.integrity_failures, 0);
 
     stop.store(true, Ordering::Relaxed);
@@ -561,7 +561,7 @@ fn mismatched_control_response_drops_the_connection() {
     // The initial refill asked for slabs and was answered with a renew
     // ack: the pool must flag the connection, not invent capacity.
     assert!(
-        pool.stats.control_errors >= 1,
+        pool.stats.control_errors.get() >= 1,
         "mismatched control response was not treated as a desynced stream"
     );
     assert_eq!(pool.held_slabs(), 0);

@@ -292,3 +292,92 @@ fn prop_wire_codec_round_trip_random() {
         }
     }
 }
+
+#[test]
+fn prop_metrics_histogram_concurrent_record_merge_conserves_count() {
+    use memtrade::metrics::Histogram;
+    use std::sync::Arc;
+    for seed in 0..4u64 {
+        // 8 threads record deterministic per-thread sequences into one
+        // shared histogram AND into private ones; the shared counts
+        // must equal the merge of the private counts, bucket by bucket.
+        let shared = Arc::new(Histogram::new());
+        let handles: Vec<_> = (0..8u64)
+            .map(|t| {
+                let shared = shared.clone();
+                std::thread::spawn(move || {
+                    let mut rng = Rng::new(seed * 100 + t);
+                    let local = Histogram::new();
+                    for _ in 0..5_000 {
+                        let v = rng.below(1 << 40);
+                        shared.record(v);
+                        local.record(v);
+                    }
+                    local.snapshot()
+                })
+            })
+            .collect();
+        let mut merged = memtrade::metrics::HistogramSnapshot::default();
+        for h in handles {
+            merged.merge(&h.join().unwrap());
+        }
+        assert_eq!(shared.count(), 40_000, "seed {seed}: lost records");
+        assert_eq!(shared.snapshot(), merged, "seed {seed}: shared != merged");
+    }
+}
+
+#[test]
+fn prop_metrics_snapshot_deltas_nonnegative_and_additive() {
+    use memtrade::metrics::Histogram;
+    let mut rng = Rng::new(210);
+    for case in 0..50 {
+        let h = Histogram::new();
+        let mut snaps = vec![h.snapshot()];
+        for _ in 0..4 {
+            for _ in 0..rng.below(500) {
+                h.record(rng.below(1 << 30));
+            }
+            snaps.push(h.snapshot());
+        }
+        // Every window is non-negative, and windows sum to the total.
+        let mut windows_total = 0u64;
+        for w in snaps.windows(2) {
+            let d = w[1].delta(&w[0]);
+            assert!(d.counts.iter().all(|&c| c < 1 << 60), "case {case}: underflow");
+            assert_eq!(d.count(), w[1].count() - w[0].count(), "case {case}");
+            windows_total += d.count();
+        }
+        assert_eq!(windows_total, h.count(), "case {case}: windows don't tile");
+    }
+}
+
+#[test]
+fn prop_metrics_quantiles_monotone_and_in_range() {
+    use memtrade::metrics::Histogram;
+    let mut rng = Rng::new(211);
+    for case in 0..100 {
+        let h = Histogram::new();
+        let n = 1 + rng.below(2_000);
+        let (mut lo, mut hi) = (u64::MAX, 0u64);
+        for _ in 0..n {
+            // Mix scales so many octaves are hit.
+            let v = rng.below(10u64.pow(1 + rng.below(9) as u32));
+            lo = lo.min(v);
+            hi = hi.max(v);
+            h.record(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count(), n, "case {case}");
+        let mut prev = 0.0f64;
+        for i in 0..=20 {
+            let q = i as f64 / 20.0;
+            let v = s.quantile(q);
+            assert!(v >= prev, "case {case}: quantile({q}) = {v} < {prev}");
+            prev = v;
+        }
+        // Bucketed estimates stay within one bucket of the extremes.
+        assert!(s.quantile(0.0) <= (lo.max(1) * 2) as f64, "case {case}");
+        assert!(s.quantile(1.0) <= (hi.max(1) as f64) * 2.0 + 1.0, "case {case}");
+        assert!(s.p999() >= s.p99() && s.p99() >= s.p90() && s.p90() >= s.p50());
+    }
+}

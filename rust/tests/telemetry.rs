@@ -1,0 +1,213 @@
+//! End-to-end tests of the telemetry spine over real TCP: `StatsQuery`
+//! returns live per-producer p99 + ops/sec from a running broker +
+//! agents + pool topology, each agent's stats endpoint serves its data
+//! plane's live registry, and — the loop this PR closes — a producer
+//! whose store is *observed* slow loses placement share, regardless of
+//! what it self-reports.
+
+use memtrade::consumer::client::SecureKv;
+use memtrade::core::config::BrokerConfig;
+use memtrade::core::SimTime;
+use memtrade::market::{
+    BrokerServer, BrokerServerConfig, ProducerAgent, ProducerAgentConfig,
+    RemotePool, RemotePoolConfig,
+};
+use memtrade::metrics::MetricSet;
+use memtrade::net::control::{CtrlClient, CtrlRequest, CtrlResponse};
+use memtrade::net::faults::{FaultPlan, FaultSpec};
+use memtrade::net::tcp::KvClient;
+use std::time::{Duration, Instant};
+
+const SLAB: u64 = 1 << 20;
+
+fn broker_cfg() -> BrokerConfig {
+    BrokerConfig {
+        slab_bytes: SLAB,
+        min_lease: SimTime::from_millis(800),
+        ..Default::default()
+    }
+}
+
+fn server_cfg() -> BrokerServerConfig {
+    BrokerServerConfig {
+        tick: Duration::from_millis(20),
+        producer_timeout: Duration::from_secs(30),
+        forecast_min_samples: usize::MAX,
+        ..Default::default()
+    }
+}
+
+fn start_agent(
+    broker: &BrokerServer,
+    id: u64,
+    capacity: u64,
+    data_faults: Option<FaultPlan>,
+) -> ProducerAgent {
+    ProducerAgent::start(ProducerAgentConfig {
+        producer: id,
+        broker: broker.addr().to_string(),
+        data_addr: "127.0.0.1:0".to_string(),
+        capacity_bytes: capacity,
+        heartbeat: Duration::from_millis(50),
+        shards: 2,
+        seed: id,
+        data_faults,
+        ..Default::default()
+    })
+    .expect("agent start")
+}
+
+fn query_stats(addr: std::net::SocketAddr) -> (u64, MetricSet) {
+    let mut ctrl = CtrlClient::connect(addr).expect("stats dial");
+    match ctrl.call(&CtrlRequest::StatsQuery).expect("stats call") {
+        CtrlResponse::Stats { uptime_us, metrics } => (uptime_us, metrics),
+        other => panic!("unexpected stats reply: {other:?}"),
+    }
+}
+
+#[test]
+fn stats_query_reports_live_per_producer_telemetry() {
+    let broker = BrokerServer::start("127.0.0.1:0", broker_cfg(), server_cfg()).unwrap();
+    let agents =
+        vec![start_agent(&broker, 1, 16 * SLAB, None), start_agent(&broker, 2, 16 * SLAB, None)];
+    // More than one producer can hold, so live slots span both and
+    // traffic reaches both data planes.
+    let mut pool = RemotePool::connect(RemotePoolConfig {
+        consumer: 9,
+        broker: broker.addr().to_string(),
+        target_slabs: 24,
+        min_slabs: 1,
+        lease_ttl: Duration::from_secs(10),
+        renew_margin: Duration::from_secs(2),
+        maintain_every: Duration::from_millis(20),
+        ..Default::default()
+    })
+    .unwrap();
+
+    let mut secure = SecureKv::with_iv_seed(Some([7u8; 16]), true, 1, 3);
+    let value = vec![0xAB_u8; 256];
+    // Drive traffic until the broker's StatsQuery shows *observed* p99
+    // and throughput for both producers (flows: store op_us histogram →
+    // agent heartbeat window delta → broker registry → StatsQuery).
+    let deadline = Instant::now() + Duration::from_secs(15);
+    let (mut i, mut live) = (0u32, None);
+    while Instant::now() < deadline && live.is_none() {
+        pool.maintain();
+        for _ in 0..40 {
+            let key = format!("key{}", i % 500);
+            i += 1;
+            if secure.get(&mut pool, key.as_bytes()).is_none() {
+                let _ = secure.put(&mut pool, key.as_bytes(), &value);
+            }
+        }
+        let (_, m) = query_stats(broker.addr());
+        let seen = [1u64, 2].iter().all(|id| {
+            m.gauge(&format!("producer.{id}.observed_p99_us")).unwrap_or(0) > 0
+                && m.gauge(&format!("producer.{id}.ops_per_sec")).is_some()
+        });
+        if seen {
+            live = Some(m);
+        }
+    }
+    let m = live.expect("broker never reported observed telemetry for both producers");
+    assert_eq!(m.gauge("market.producers"), Some(2));
+    assert!(m.counter("ctrl.heartbeats").unwrap_or(0) > 0);
+    assert!(m.gauge("market.active_leases").unwrap_or(0) > 0);
+    assert!(m.counter("broker.leases_granted").unwrap_or(0) > 0);
+
+    // Each agent's own stats endpoint serves the live data-plane
+    // registry: per-op service latency, shard-lock holds, store state.
+    for a in &agents {
+        let stats_addr = a.stats_addr().expect("agent stats endpoint");
+        let (uptime_us, am) = query_stats(stats_addr);
+        assert!(uptime_us > 0);
+        assert!(
+            am.histogram("data.op_us").expect("op_us histogram").count() > 0,
+            "agent {} served no observed ops",
+            a.data_addr()
+        );
+        assert!(am.histogram("data.shard.lock_hold_us").unwrap().count() > 0);
+        assert!(am.counter("data.ops").unwrap_or(0) > 0);
+        assert!(am.counter("agent.heartbeats").unwrap_or(0) > 0);
+        assert!(am.gauge("store.max_bytes").unwrap_or(0) > 0);
+    }
+
+    // The consumer side of the same plane.
+    let pm = pool.metrics();
+    assert!(pm.counter("pool.grants").unwrap_or(0) > 0);
+    assert!(pm.histogram("pool.data_call_us").unwrap().count() > 0);
+    let sm = secure.metrics();
+    assert!(sm.histogram("secure.op_us").unwrap().count() > 0);
+    assert!(sm.histogram("secure.seal_ns").unwrap().count() > 0);
+
+    drop(pool);
+    for a in agents {
+        a.stop();
+    }
+    broker.stop();
+}
+
+#[test]
+fn observed_latency_shifts_placement_away_from_slow_producer() {
+    let broker = BrokerServer::start("127.0.0.1:0", broker_cfg(), server_cfg()).unwrap();
+    // Producer 1 is healthy. Producer 2's data plane is artificially
+    // slow: every response write stalls up to 8 ms (a chaos delay
+    // plan). Both self-report identical free capacity and headroom —
+    // only *observed* latency separates them.
+    let slow_plan = FaultPlan::new(
+        42,
+        FaultSpec::default(),
+        FaultSpec { delay_p: 1.0, delay_max_ms: 8, ..Default::default() },
+    );
+    let fast = start_agent(&broker, 1, 16 * SLAB, None);
+    let slow = start_agent(&broker, 2, 16 * SLAB, Some(slow_plan.clone()));
+
+    // Drive observable traffic at both data planes directly (GET misses
+    // are served — and measured — even with zero leased budget).
+    let mut fast_client = KvClient::connect(fast.data_addr()).unwrap();
+    let mut slow_client = KvClient::connect(slow.data_addr()).unwrap();
+    let deadline = Instant::now() + Duration::from_secs(20);
+    let mut ready = false;
+    while Instant::now() < deadline && !ready {
+        for i in 0..20u32 {
+            let key = format!("probe{i}");
+            let _ = fast_client.get(key.as_bytes());
+            let _ = slow_client.get(key.as_bytes());
+        }
+        let (_, m) = query_stats(broker.addr());
+        let fast_p99 = m.gauge("producer.1.observed_p99_us").unwrap_or(0);
+        let slow_p99 = m.gauge("producer.2.observed_p99_us").unwrap_or(0);
+        // The injected stall is ≥ milliseconds; the healthy localhost
+        // store serves in microseconds.
+        ready = fast_p99 > 0 && fast_p99 < 2_000 && slow_p99 >= 2_000;
+    }
+    assert!(ready, "broker never observed the latency gap through heartbeats");
+    assert!(slow_plan.counters().delays.get() > 0, "chaos delays not injected/counted");
+
+    // A fresh consumer asks for capacity both producers could serve.
+    // Placement must rank by observed tail latency: every grant lands
+    // on the fast producer.
+    let mut ctrl = CtrlClient::connect(broker.addr()).unwrap();
+    for round in 0..3 {
+        let resp = ctrl
+            .call(&CtrlRequest::RequestSlabs {
+                consumer: 77 + round,
+                slabs: 4,
+                min_slabs: 1,
+                ttl_us: 60_000_000,
+            })
+            .unwrap();
+        let CtrlResponse::Grants { leases } = resp else { panic!("{resp:?}") };
+        assert!(!leases.is_empty());
+        for lease in &leases {
+            assert_eq!(
+                lease.producer, 1,
+                "round {round}: observed-slow producer won placement: {leases:?}"
+            );
+        }
+    }
+
+    fast.stop();
+    slow.stop();
+    broker.stop();
+}
