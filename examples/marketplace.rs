@@ -39,7 +39,7 @@ fn main() {
     let mk_agent = |id: u64| {
         ProducerAgent::start(ProducerAgentConfig {
             producer: id,
-            broker: broker.addr().to_string(),
+            brokers: vec![broker.addr().to_string()],
             data_addr: "127.0.0.1:0".to_string(),
             advertise: None,
             capacity_bytes: 32 * SLAB,
@@ -60,7 +60,7 @@ fn main() {
     println!("\n=== 3. consumer pool leases slabs ===");
     let mut pool = RemotePool::connect(RemotePoolConfig {
         consumer: 9,
-        broker: broker.addr().to_string(),
+        brokers: vec![broker.addr().to_string()],
         target_slabs: 48,
         lease_ttl: Duration::from_secs(10),
         renew_margin: Duration::from_secs(3),

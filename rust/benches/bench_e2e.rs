@@ -44,7 +44,7 @@ fn marketplace_bench() -> String {
     let mk_agent = |id: u64| {
         ProducerAgent::start(ProducerAgentConfig {
             producer: id,
-            broker: broker.addr().to_string(),
+            brokers: vec![broker.addr().to_string()],
             data_addr: "127.0.0.1:0".to_string(),
             advertise: None,
             capacity_bytes: 64 * SLAB,
@@ -60,7 +60,7 @@ fn marketplace_bench() -> String {
     let mut agents = vec![mk_agent(1), mk_agent(2)];
     let mut pool = RemotePool::connect(RemotePoolConfig {
         consumer: 9,
-        broker: broker.addr().to_string(),
+        brokers: vec![broker.addr().to_string()],
         target_slabs: 96,
         min_slabs: 1,
         lease_ttl: Duration::from_secs(30),
@@ -198,13 +198,18 @@ fn chaos_bench() -> String {
     };
     let clean = run_chaos(&base);
     let faulty = run_chaos(&ChaosConfig { mix: ChaosMix::standard(), ..base });
-    for o in [&clean, &faulty] {
+    // Warm-standby failover under the same scenario shape: kill the
+    // primary broker mid-run, measure how long until the marketplace is
+    // back at target capacity on the promoted standby.
+    let failover = run_chaos(&ChaosConfig { mix: ChaosMix::failover(), ..base });
+    for o in [&clean, &faulty, &failover] {
         assert!(
             o.invariant_violations().is_empty(),
             "chaos invariants violated in bench: {}",
             o.report()
         );
     }
+    assert_eq!(failover.broker_takeovers, Some(1), "bench failover never promoted the standby");
     let degradation_pct = if clean.ops_per_sec > 0.0 {
         100.0 * (1.0 - faulty.ops_per_sec / clean.ops_per_sec)
     } else {
@@ -219,15 +224,20 @@ fn chaos_bench() -> String {
         "{:<48} {:>12.1} ms",
         "chaos recovery after faults disarm", faulty.recovery_ms
     );
+    println!(
+        "{:<48} {:>12.1} ms",
+        "failover recovery after primary broker kill", failover.recovery_ms
+    );
     format!(
         "  \"chaos\": {{\n    \"clean_ops_per_sec\": {:.0},\n    \
          \"faulty_ops_per_sec\": {:.0},\n    \"degradation_pct\": {:.1},\n    \
-         \"recovery_ms\": {:.1},\n    \"integrity_caught\": {},\n    \
-         \"tampered_served\": {}\n  }}",
+         \"recovery_ms\": {:.1},\n    \"failover_recovery_ms\": {:.1},\n    \
+         \"integrity_caught\": {},\n    \"tampered_served\": {}\n  }}",
         clean.ops_per_sec,
         faulty.ops_per_sec,
         degradation_pct,
         faulty.recovery_ms,
+        failover.recovery_ms,
         faulty.integrity_failures,
         faulty.tampered,
     )

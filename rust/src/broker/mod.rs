@@ -193,6 +193,17 @@ impl Broker {
         self.registry.note_lease_end(lease, broken);
     }
 
+    /// Adopt a lease granted elsewhere — a warm standby replaying the
+    /// primary's replication log. Accounts it in the registry exactly
+    /// as [`Self::request_memory`] would (so the symmetric
+    /// [`Self::lease_ended`] stays balanced) and advances the id
+    /// counter past it, so grants made after takeover can never
+    /// collide with a replicated lease id.
+    pub fn adopt_lease(&mut self, lease: &Lease) {
+        self.next_lease = self.next_lease.max(lease.id.0 + 1);
+        self.registry.note_lease(lease);
+    }
+
     pub fn pending_len(&self) -> usize {
         self.pending.len()
     }
@@ -304,6 +315,33 @@ mod tests {
         req.max_price_per_slab_hour = Some(Money::from_dollars(1e-9));
         let leases = b.request_memory(SimTime::from_hours(25), req);
         assert!(leases.is_empty());
+    }
+
+    #[test]
+    fn adopted_leases_never_collide_with_fresh_grants() {
+        let mut b = broker();
+        feed_producer(&mut b, 1, 32.0, 8.0, 64);
+        // Replay a lease the (dead) primary granted as id 41.
+        let adopted = Lease {
+            id: LeaseId(41),
+            consumer: ConsumerId(9),
+            producer: ProducerId(1),
+            slabs: 8,
+            slab_bytes: b.cfg.slab_bytes,
+            start: SimTime::ZERO,
+            duration: SimTime::from_hours(1),
+            price_per_slab_hour: Money::from_dollars(0.0001),
+        };
+        b.adopt_lease(&adopted);
+        let p = b.registry.producer(ProducerId(1)).unwrap();
+        assert_eq!(p.slabs_leased_now, 8);
+        assert_eq!(p.free_slabs, 56);
+        // Post-takeover grants start past the adopted id.
+        let leases = b.request_memory(SimTime::from_hours(25), request(1, 4));
+        assert_eq!(leases[0].id, LeaseId(42));
+        // The symmetric end leaves the registry balanced.
+        b.lease_ended(&adopted, false);
+        assert_eq!(b.registry.producer(ProducerId(1)).unwrap().slabs_leased_now, 4);
     }
 
     #[test]

@@ -82,18 +82,19 @@ USAGE:
   memtrade figure <id>|all [--quick]
   memtrade broker [--port P] [--history-dir DIR] [--spot-gb-hour $]
                   [--producer-timeout-ms N] [--min-lease-secs N]
-  memtrade agent --broker HOST:PORT [--id N] [--mb N] [--heartbeat-ms N]
-                 [--advertise HOST:PORT] [--harvest] [--shards N] [--rate-mbps R]
-                 [--stats-port P]
+                  [--standby-of HOST:PORT] [--takeover-ms N]
+  memtrade agent --broker HOST:PORT[,HOST:PORT...] [--id N] [--mb N]
+                 [--heartbeat-ms N] [--advertise HOST:PORT] [--harvest]
+                 [--shards N] [--rate-mbps R] [--stats-port P]
   memtrade producer [--port P] [--mb N] [--rate-mbps R] [--shards N]
-  memtrade consumer --addr HOST:PORT | --broker HOST:PORT [--slabs N]
-                    [--ops N] [--value-bytes B] [--no-encrypt]
+  memtrade consumer --addr HOST:PORT | --broker HOST:PORT[,HOST:PORT...]
+                    [--slabs N] [--ops N] [--value-bytes B] [--no-encrypt]
                     [--batch N] [--window W]
   memtrade sim [--minutes N] [--producers N] [--consumers N] [--remote PCT]
   memtrade replay [--steps N] [--producers N] [--consumers N]
   memtrade chaos [--seed S | --seeds N] [--mix MIX] [--ops N] [--keys N]
                  (MIX: clean|standard, or +-joined fault families:
-                  control|data|byzantine|kill|race, e.g. data+kill)
+                  control|data|byzantine|kill|race|failover, e.g. data+kill)
   memtrade top --broker HOST:PORT | --addr HOST:PORT [--interval-ms N] [--once]
   memtrade list
 ";
@@ -160,12 +161,15 @@ fn cmd_broker(args: &Args) -> ExitCode {
         min_lease: SimTime::from_secs(args.flag_u64("min-lease-secs", 600)),
         ..Default::default()
     };
+    let standby_of = args.flag("standby-of").map(str::to_string);
     let cfg = BrokerServerConfig {
         spot_per_gb_hour: Money::from_dollars(
             args.flag("spot-gb-hour").and_then(|v| v.parse().ok()).unwrap_or(0.0005),
         ),
         producer_timeout: Duration::from_millis(args.flag_u64("producer-timeout-ms", 3000)),
         history_dir: args.flag("history-dir").map(std::path::PathBuf::from),
+        standby_of: standby_of.clone(),
+        takeover_after: Duration::from_millis(args.flag_u64("takeover-ms", 2000)),
         ..Default::default()
     };
     let server = match BrokerServer::start(format!("0.0.0.0:{port}"), broker_cfg, cfg) {
@@ -175,12 +179,19 @@ fn cmd_broker(args: &Args) -> ExitCode {
             return ExitCode::FAILURE;
         }
     };
-    println!("broker daemon listening on {} (control plane)", server.addr());
+    match &standby_of {
+        Some(primary) => println!(
+            "broker daemon listening on {} (warm standby of {primary})",
+            server.addr()
+        ),
+        None => println!("broker daemon listening on {} (control plane, primary)", server.addr()),
+    }
     println!("press Ctrl-C to stop");
     loop {
         std::thread::sleep(Duration::from_secs(10));
+        let role = if server.is_primary() { "primary" } else { "standby" };
         println!(
-            "producers {} | active leases {} | price {}/slab·h",
+            "{role} | producers {} | active leases {} | price {}/slab·h",
             server.producer_count(),
             server.active_lease_count(),
             server.current_price(),
@@ -190,12 +201,14 @@ fn cmd_broker(args: &Args) -> ExitCode {
 
 fn cmd_agent(args: &Args) -> ExitCode {
     let Some(broker) = args.flag("broker") else {
-        eprintln!("agent: --broker HOST:PORT required");
+        eprintln!("agent: --broker HOST:PORT[,HOST:PORT...] required");
         return ExitCode::FAILURE;
     };
     let cfg = ProducerAgentConfig {
         producer: args.flag_u64("id", 1),
-        broker: broker.to_string(),
+        // Comma-separated list: first endpoint is tried first, the rest
+        // are failover targets (warm standbys).
+        brokers: broker.split(',').map(str::to_string).collect(),
         data_addr: format!("0.0.0.0:{}", args.flag_u64("port", 0)),
         // A wildcard bind is not dialable from other hosts; multi-host
         // deployments must say what consumers should dial.
@@ -377,7 +390,7 @@ fn cmd_consumer(args: &Args) -> ExitCode {
         // the lease-aware pool.
         let cfg = RemotePoolConfig {
             consumer: args.flag_u64("id", 1000),
-            broker: broker.to_string(),
+            brokers: broker.split(',').map(str::to_string).collect(),
             target_slabs: args.flag_u64("slabs", 4) as u32,
             data_window: window,
             ..Default::default()
@@ -570,8 +583,15 @@ fn render_top(uptime_us: u64, m: &MetricSet) -> String {
             producers.entry(id).or_default().insert(field.to_string(), v);
         }
     }
+    // Brokers publish their failover role (0 = primary, 1 = standby);
+    // agent stats endpoints have no such gauge.
+    let role = match m.gauge("market.role") {
+        Some(0) => " | role primary",
+        Some(_) => " | role standby",
+        None => "",
+    };
     let mut out = format!(
-        "memtrade top — uptime {:.1}s | producers {} | active leases {} | \
+        "memtrade top — uptime {:.1}s{role} | producers {} | active leases {} | \
          price {} nd/slab·h\n\n",
         uptime_us as f64 / 1e6,
         m.gauge("market.producers").unwrap_or(0),

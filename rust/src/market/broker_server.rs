@@ -19,19 +19,37 @@
 //! Consumers learn of lost leases when a renew is refused or the
 //! data-plane connection drops — both of which the
 //! [`crate::market::RemotePool`] turns into cache misses.
+//!
+//! ## Warm-standby failover
+//!
+//! A second daemon started with `standby_of` replicates the primary:
+//! every market state change the primary makes is appended to a bounded
+//! lease-event log ([`crate::market::lease::LeaseEvent`]), and the
+//! standby pulls it with `ReplicaPoll` on its maintenance cadence,
+//! replaying each event through its own [`LeaseTable`] and adopting
+//! grants into its in-process [`Broker`] (so post-takeover lease ids
+//! never collide). It also tails the shared usage-history dir so its
+//! predictor knows what the primary knew. Until takeover it answers
+//! every market verb with `NotPrimary` (only `StatsQuery` and
+//! `ReplicaPoll` are served), so a client that dials it by mistake is
+//! told to move on rather than silently served stale state. When
+//! replication polls fail for `takeover_after`, the standby promotes
+//! itself; producers and consumers fail over on their own (ordered
+//! endpoint lists), and the keep-leases re-registration path repairs
+//! whatever a replication gap lost.
 
 use crate::broker::{AvailabilityPredictor, Broker, ConsumerRequest, PricingEngine, PricingStrategy};
 use crate::core::config::BrokerConfig;
 use crate::core::{ConsumerId, Lease, LeaseId, Money, ProducerId, SimTime, GIB};
-use crate::market::lease::{LeaseError, LeaseState, LeaseTable};
+use crate::market::lease::{LeaseError, LeaseEvent, LeaseState, LeaseTable};
 use crate::metrics::{MetricSet, Observe, Registry as MetricsRegistry};
 use crate::net::control::{
-    server_handshake_patient, CtrlRequest, CtrlResponse, GrantInfo, ProducerGrant, RefuseCode,
-    CONTROL_MAGIC,
+    server_handshake_patient, CtrlClient, CtrlRequest, CtrlResponse, GrantInfo, ProducerGrant,
+    RefuseCode, CONTROL_MAGIC,
 };
 use crate::net::faults::{FaultPlan, FaultyStream};
 use crate::net::wire::{read_frame_into_patient, write_frame, CodecError};
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::io::{self, BufReader, BufWriter, Write};
 use std::net::{TcpListener, ToSocketAddrs};
 use std::path::PathBuf;
@@ -67,6 +85,14 @@ pub struct BrokerServerConfig {
     /// connection (None in production — the accepted streams are then
     /// plain pass-throughs).
     pub faults: Option<FaultPlan>,
+    /// Warm-standby mode: poll this primary's lease-event log, replay
+    /// it, and refuse market verbs with `NotPrimary` until takeover.
+    /// Point `history_dir` at the primary's so usage histories carry
+    /// over too.
+    pub standby_of: Option<String>,
+    /// Standby only: promote to primary after this long without one
+    /// successful replication poll.
+    pub takeover_after: Duration,
 }
 
 impl Default for BrokerServerConfig {
@@ -79,9 +105,22 @@ impl Default for BrokerServerConfig {
             history_dir: None,
             forecast_min_samples: 16,
             faults: None,
+            standby_of: None,
+            takeover_after: Duration::from_secs(2),
         }
     }
 }
+
+/// Replication log bound: events kept for standbys to poll. A standby
+/// that falls further behind than this sees a sequence gap (tolerated —
+/// re-registration at takeover repairs what it missed), which beats the
+/// primary buffering without bound for a standby that may never return.
+const REPL_LOG_CAP: usize = 65_536;
+
+/// Most events one `ReplicaPoll` answer carries, whatever the poller
+/// asked for: keeps a catch-up answer a bounded frame, not a 65k-event
+/// wall. The standby simply polls again for the rest.
+const REPL_POLL_MAX: u32 = 512;
 
 /// Best-effort on-disk usage history: `<dir>/producer-<id>.history`,
 /// one `"<us> <used_gb>"` line per heartbeat. Loads run rarely (agent
@@ -121,39 +160,53 @@ impl HistoryStore {
     /// without bound.
     const COMPACT_BYTES: u64 = 1 << 22;
 
-    fn load(&self, producer: u64) -> Vec<(u64, f32)> {
+    /// Returns the parsed tail samples plus a count of lines skipped as
+    /// unparsable — above all the torn final line a crash mid-append
+    /// leaves behind. A history file is best-effort forecast input, so
+    /// replay tolerates damage line by line; it never errors the whole
+    /// load over one bad record.
+    fn load(&self, producer: u64) -> (Vec<(u64, f32)>, usize) {
         use std::io::{Read, Seek, SeekFrom};
         let Ok(mut f) = std::fs::File::open(self.path(producer)) else {
-            return Vec::new();
+            return (Vec::new(), 0);
         };
         let len = f.metadata().map(|m| m.len()).unwrap_or(0);
         let truncated = len > Self::TAIL_BYTES;
         if truncated && f.seek(SeekFrom::End(-(Self::TAIL_BYTES as i64))).is_err() {
-            return Vec::new();
+            return (Vec::new(), 0);
         }
-        let mut text = String::new();
-        if f.read_to_string(&mut text).is_err() {
-            return Vec::new();
+        let mut bytes = Vec::new();
+        if f.read_to_end(&mut bytes).is_err() {
+            return (Vec::new(), 0);
         }
-        let tail = if truncated {
+        // Torn appends can leave non-UTF-8 garbage too; keep whatever
+        // lines survive rather than refusing the file.
+        let text = String::from_utf8_lossy(&bytes);
+        let tail: &str = if truncated {
             // The seek likely landed mid-line; drop the partial one.
             text.split_once('\n').map(|(_, rest)| rest).unwrap_or("")
         } else {
-            text.as_str()
+            text.as_ref()
         };
-        let mut samples: Vec<(u64, f32)> = tail
-            .lines()
-            .filter_map(|line| {
-                let mut it = line.split_whitespace();
-                let us = it.next()?.parse().ok()?;
-                let gb = it.next()?.parse().ok()?;
+        let mut skipped = 0usize;
+        let mut samples: Vec<(u64, f32)> = Vec::new();
+        for line in tail.lines() {
+            let mut it = line.split_whitespace();
+            let parsed = (|| {
+                let us: u64 = it.next()?.parse().ok()?;
+                let gb: f32 = it.next()?.parse().ok()?;
                 Some((us, gb))
-            })
-            .collect();
+            })();
+            match parsed {
+                Some(s) => samples.push(s),
+                None if line.trim().is_empty() => {}
+                None => skipped += 1,
+            }
+        }
         if samples.len() > HISTORY_REPLAY_CAP {
             samples.drain(..samples.len() - HISTORY_REPLAY_CAP);
         }
-        samples
+        (samples, skipped)
     }
 
     fn append(&self, producer: u64, us: u64, used_gb: f32) {
@@ -162,20 +215,40 @@ impl HistoryStore {
             .map(|m| m.len() > Self::COMPACT_BYTES)
             .unwrap_or(false);
         if oversized {
-            let keep = self.load(producer);
+            let keep = self.load(producer).0;
             let mut text = String::with_capacity(keep.len() * 24);
             for (us, gb) in &keep {
                 text.push_str(&format!("{us} {gb}\n"));
             }
-            if let Err(e) = std::fs::write(&path, text) {
+            // Write-temp-then-rename: a crash mid-compaction leaves the
+            // old file or the new one, never a half-written history.
+            let tmp = path.with_extension("history.tmp");
+            let r = std::fs::write(&tmp, text).and_then(|_| std::fs::rename(&tmp, &path));
+            if let Err(e) = r {
                 eprintln!("broker: history compaction failed for producer {producer}: {e}");
             }
         }
         let r = std::fs::OpenOptions::new()
             .create(true)
+            .read(true)
             .append(true)
             .open(path)
-            .and_then(|mut f| writeln!(f, "{us} {used_gb}"));
+            .and_then(|mut f| {
+                // A crash mid-append can leave the file without its
+                // trailing newline; gluing the next sample onto the torn
+                // line would forge a parsable-but-bogus record. Check the
+                // last byte and start a fresh line if needed.
+                use std::io::{Read, Seek, SeekFrom};
+                if f.metadata()?.len() > 0 {
+                    f.seek(SeekFrom::End(-1))?;
+                    let mut b = [0u8; 1];
+                    f.read_exact(&mut b)?;
+                    if b[0] != b'\n' {
+                        writeln!(f)?;
+                    }
+                }
+                writeln!(f, "{us} {used_gb}")
+            });
         if let Err(e) = r {
             eprintln!("broker: history append failed for producer {producer}: {e}");
         }
@@ -185,6 +258,13 @@ impl HistoryStore {
 struct ProducerEntry {
     endpoint: String,
     last_heartbeat_us: u64,
+}
+
+/// Which side of the failover pair this daemon currently is.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Role {
+    Primary,
+    Standby,
 }
 
 struct State {
@@ -198,6 +278,19 @@ struct State {
     /// Daemon-level live counters/gauges (control verbs, sweeps) —
     /// served to `StatsQuery` along with the market + per-producer view.
     telemetry: MetricsRegistry,
+    /// `Standby` refuses market verbs and replays the primary's log
+    /// until promoted.
+    role: Role,
+    /// Append-only lease-event log served to `ReplicaPoll`, bounded at
+    /// [`REPL_LOG_CAP`] (older events are evicted; a lagging standby
+    /// sees the gap). A standby keeps its own copy current too, so its
+    /// log continues seamlessly after takeover.
+    repl_log: VecDeque<LeaseEvent>,
+    /// Sequence number of `repl_log.front()`.
+    repl_base_seq: u64,
+    /// Standby only: newest history-file timestamp replayed per
+    /// producer, so periodic tailing never double-feeds the predictor.
+    history_replayed_us: HashMap<u64, u64>,
 }
 
 impl State {
@@ -214,8 +307,22 @@ impl State {
         }
     }
 
+    /// Append one event to the replication log (evicting the oldest
+    /// past [`REPL_LOG_CAP`]). Every market state change flows through
+    /// here or dies unreplicated.
+    fn log_event(&mut self, ev: LeaseEvent) {
+        if self.repl_log.len() >= REPL_LOG_CAP {
+            self.repl_log.pop_front();
+            self.repl_base_seq += 1;
+        }
+        self.repl_log.push_back(ev);
+    }
+
     /// Apply queued lease terminations to the registry (reputation,
-    /// free-slab return). Revocations count as broken leases (§5).
+    /// free-slab return) and the replication log. Revocations count as
+    /// broken leases (§5). This is the single choke point every
+    /// terminal transition — sweep, release, revoke, death — drains
+    /// through, so it is also where ends are replicated.
     fn apply_lease_ends(&mut self) {
         for end in self.leases.take_ended() {
             let lease = Self::core_lease(&end.record);
@@ -226,8 +333,106 @@ impl State {
                 LeaseState::Active => "leases.ended_active",
             };
             self.telemetry.counter(counter).inc();
+            let id = end.record.id;
+            match end.cause {
+                LeaseState::Expired => self.log_event(LeaseEvent::Expired { lease: id }),
+                LeaseState::Revoked => self.log_event(LeaseEvent::Revoked { lease: id }),
+                LeaseState::Released => self.log_event(LeaseEvent::Released { lease: id }),
+                LeaseState::Active => {}
+            }
             self.broker.lease_ended(&lease, end.cause == LeaseState::Revoked);
         }
+    }
+
+    /// Standby: replay one replicated event into the full market state
+    /// — lease table, in-process broker (registry accounting + id
+    /// counter), and producer membership — and mirror it into our own
+    /// log so it continues seamlessly after takeover. End events are
+    /// not mirrored directly: applying them queues the same terminal
+    /// transition locally, and [`Self::apply_lease_ends`] logs it.
+    fn apply_replicated(&mut self, ev: &LeaseEvent, now_us: u64) {
+        match ev {
+            LeaseEvent::Granted { lease, .. } => {
+                // Fresh unless an *active* record already holds the id
+                // (a re-polled overlap); terminal records are superseded
+                // and their registry accounting was already unwound.
+                let fresh =
+                    self.leases.get(*lease).map_or(true, |r| r.state.is_terminal());
+                self.leases.apply_event(ev, now_us);
+                if fresh {
+                    if let Some(rec) = self.leases.get(*lease) {
+                        self.broker.adopt_lease(&Self::core_lease(rec));
+                        self.log_event(ev.clone());
+                    }
+                }
+            }
+            LeaseEvent::Renewed { .. } => {
+                self.leases.apply_event(ev, now_us);
+                self.log_event(ev.clone());
+            }
+            LeaseEvent::Released { .. }
+            | LeaseEvent::Revoked { .. }
+            | LeaseEvent::Expired { .. } => {
+                self.leases.apply_event(ev, now_us);
+            }
+            LeaseEvent::ProducerUp { producer, endpoint, capacity_gb } => {
+                self.broker
+                    .registry
+                    .register_producer(ProducerId(*producer), *capacity_gb);
+                self.producers.insert(
+                    *producer,
+                    ProducerEntry { endpoint: endpoint.clone(), last_heartbeat_us: now_us },
+                );
+                self.log_event(ev.clone());
+            }
+            LeaseEvent::ProducerDown { producer } => {
+                self.log_event(ev.clone());
+                self.leases.apply_event(ev, now_us);
+                self.apply_lease_ends();
+                self.broker.registry.deregister_producer(ProducerId(*producer));
+                self.producers.remove(producer);
+                self.history_replayed_us.remove(producer);
+            }
+        }
+        self.apply_lease_ends();
+    }
+
+    /// Standby: replay usage-history samples appended since the last
+    /// tail, for every producer learned from the log, so the predictor
+    /// knows at takeover what the primary knew. Bounded work under the
+    /// lock: one 64 KB tail per producer, on the slow tail cadence.
+    fn tail_history(&mut self) {
+        let Some(h) = self.history.clone() else { return };
+        let ids: Vec<u64> = self.producers.keys().copied().collect();
+        for id in ids {
+            let last = self.history_replayed_us.get(&id).copied();
+            let (samples, skipped) = h.load(id);
+            if skipped > 0 {
+                self.telemetry.counter("history.lines_skipped").add(skipped as u64);
+            }
+            for (us, gb) in samples {
+                if last.map_or(true, |l| us > l) {
+                    self.broker
+                        .registry
+                        .report_usage(ProducerId(id), SimTime::from_micros(us), gb);
+                    self.history_replayed_us.insert(id, us);
+                }
+            }
+        }
+    }
+
+    /// Takeover: the primary went silent past the deadline. Start
+    /// granting, and stamp every known producer as just-heard-from —
+    /// each gets a full heartbeat timeout to fail over and re-register
+    /// (which re-announces its leases and repairs anything a
+    /// replication gap lost) before the death sweep may claim it.
+    fn promote(&mut self, now_us: u64) {
+        self.role = Role::Primary;
+        self.telemetry.counter("repl.takeovers").inc();
+        for e in self.producers.values_mut() {
+            e.last_heartbeat_us = now_us;
+        }
+        self.apply_optimistic_safety();
     }
 
     /// Producers whose history is still too short for the AR fit are
@@ -288,6 +493,12 @@ impl State {
         let mut m = self.telemetry.snapshot();
         self.broker.stats.observe("broker", &mut m);
         m.set_gauge("market.uptime_us", now_us as i64);
+        // 0 = primary, 1 = standby (`memtrade top` names the role).
+        m.set_gauge("market.role", (self.role == Role::Standby) as i64);
+        m.set_gauge(
+            "market.repl_log_seq",
+            (self.repl_base_seq + self.repl_log.len() as u64) as i64,
+        );
         m.set_gauge("market.producers", self.producers.len() as i64);
         m.set_gauge("market.active_leases", self.leases.active_count() as i64);
         m.set_gauge("market.price_nd_per_slab_hour", self.broker.current_price().0);
@@ -305,10 +516,12 @@ impl State {
     }
 
     fn drop_producer(&mut self, id: u64, now_us: u64) {
+        self.log_event(LeaseEvent::ProducerDown { producer: id });
         self.leases.revoke_all_for_producer(id, now_us);
         self.apply_lease_ends();
         self.broker.registry.deregister_producer(ProducerId(id));
         self.producers.remove(&id);
+        self.history_replayed_us.remove(&id);
     }
 
     fn refused(code: RefuseCode, detail: impl Into<String>) -> CtrlResponse {
@@ -346,6 +559,17 @@ impl State {
 
     fn handle(&mut self, req: CtrlRequest, now_us: u64) -> CtrlResponse {
         let now = SimTime::from_micros(now_us);
+        // A standby serves observers and replicas only; every market
+        // verb is told to try the next endpoint. Granting from two
+        // brokers at once is the one thing failover must never do.
+        if self.role == Role::Standby
+            && !matches!(req, CtrlRequest::StatsQuery | CtrlRequest::ReplicaPoll { .. })
+        {
+            return Self::refused(
+                RefuseCode::NotPrimary,
+                "standby broker: not serving market requests until takeover",
+            );
+        }
         match req {
             CtrlRequest::Register { producer, capacity_gb, endpoint, free_bytes } => {
                 // A re-registration while still considered alive is
@@ -365,8 +589,14 @@ impl State {
                 if !rejoining {
                     // Replay persisted usage history (fresh broker-side
                     // record); a rejoining producer's history is live.
-                    if let Some(h) = &self.history {
-                        for (us, gb) in h.load(producer) {
+                    if let Some(h) = self.history.clone() {
+                        let (samples, skipped) = h.load(producer);
+                        if skipped > 0 {
+                            self.telemetry
+                                .counter("history.lines_skipped")
+                                .add(skipped as u64);
+                        }
+                        for (us, gb) in samples {
                             self.broker.registry.report_usage(
                                 ProducerId(producer),
                                 SimTime::from_micros(us),
@@ -379,6 +609,11 @@ impl State {
                     .registry
                     .update_producer_resources(ProducerId(producer), free_slabs, 1.0, 1.0);
                 self.apply_optimistic_safety();
+                self.log_event(LeaseEvent::ProducerUp {
+                    producer,
+                    endpoint: endpoint.clone(),
+                    capacity_gb,
+                });
                 self.producers
                     .insert(producer, ProducerEntry { endpoint, last_heartbeat_us: now_us });
                 CtrlResponse::Registered { producer, slab_bytes: self.broker.cfg.slab_bytes }
@@ -492,6 +727,15 @@ impl State {
                         self.broker.lease_ended(lease, false);
                         continue;
                     }
+                    self.log_event(LeaseEvent::Granted {
+                        lease: lease.id.0,
+                        consumer,
+                        producer: lease.producer.0,
+                        slabs: lease.slabs,
+                        slab_bytes: lease.slab_bytes,
+                        price_nd_per_slab_hour: lease.price_per_slab_hour.0,
+                        ttl_us: duration_us,
+                    });
                     grants.push(GrantInfo {
                         lease: lease.id.0,
                         producer: lease.producer.0,
@@ -515,7 +759,9 @@ impl State {
                 }
                 match self.leases.renew(lease, now_us) {
                     Ok(new_expiry) => {
-                        CtrlResponse::Renewed { lease, ttl_us: new_expiry - now_us }
+                        let ttl_us = new_expiry - now_us;
+                        self.log_event(LeaseEvent::Renewed { lease, ttl_us });
+                        CtrlResponse::Renewed { lease, ttl_us }
                     }
                     Err(e) => {
                         self.apply_lease_ends();
@@ -570,6 +816,19 @@ impl State {
                 self.telemetry.counter("ctrl.stats_queries").inc();
                 CtrlResponse::Stats { uptime_us: now_us, metrics: self.metrics(now_us) }
             }
+            CtrlRequest::ReplicaPoll { from_seq, max } => {
+                self.telemetry.counter("ctrl.replica_polls").inc();
+                let next_seq = self.repl_base_seq + self.repl_log.len() as u64;
+                // Clamp into the retained window: polling below the
+                // base is the gap case (first_seq > from_seq tells the
+                // standby), polling past the end is just caught-up.
+                let start = from_seq.clamp(self.repl_base_seq, next_seq);
+                let idx = (start - self.repl_base_seq) as usize;
+                let take = (max.min(REPL_POLL_MAX)) as usize;
+                let events: Vec<LeaseEvent> =
+                    self.repl_log.iter().skip(idx).take(take).cloned().collect();
+                CtrlResponse::ReplicaEvents { first_seq: start, events }
+            }
         }
     }
 }
@@ -581,6 +840,7 @@ pub struct BrokerServer {
     accept_handle: Option<JoinHandle<()>>,
     maint_handle: Option<JoinHandle<()>>,
     history_handle: Option<JoinHandle<()>>,
+    repl_handle: Option<JoinHandle<()>>,
     state: Arc<Mutex<State>>,
     start: Instant,
 }
@@ -634,6 +894,7 @@ impl BrokerServer {
             }
             None => (None, None),
         };
+        let role = if cfg.standby_of.is_some() { Role::Standby } else { Role::Primary };
         let state = Arc::new(Mutex::new(State {
             broker,
             leases: LeaseTable::default(),
@@ -642,6 +903,10 @@ impl BrokerServer {
             history_tx,
             cfg: cfg.clone(),
             telemetry: MetricsRegistry::new(),
+            role,
+            repl_log: VecDeque::new(),
+            repl_base_seq: 0,
+            history_replayed_us: HashMap::new(),
         }));
         let start = Instant::now();
 
@@ -693,7 +958,12 @@ impl BrokerServer {
                     let mut s = state.lock().unwrap();
                     s.leases.sweep_expired(now_us);
                     s.apply_lease_ends();
-                    s.sweep_dead_producers(now_us);
+                    // A standby hears no heartbeats; sweeping producers
+                    // for silence would kill them all. Its membership
+                    // view is the replicated log until promotion.
+                    if s.role == Role::Primary {
+                        s.sweep_dead_producers(now_us);
+                    }
                     // Forecast + pricing on their own (slow) cadence: the
                     // AR fit holds the lock and must not run per tick.
                     let due =
@@ -706,12 +976,23 @@ impl BrokerServer {
             })
         };
 
+        let repl_handle = cfg.standby_of.clone().map(|primary| {
+            let stop = stop.clone();
+            let state = state.clone();
+            let tick = cfg.tick;
+            let takeover_after = cfg.takeover_after;
+            std::thread::spawn(move || {
+                replication_loop(&primary, state, stop, start, tick, takeover_after)
+            })
+        });
+
         Ok(BrokerServer {
             local_addr,
             stop,
             accept_handle: Some(accept_handle),
             maint_handle: Some(maint_handle),
             history_handle,
+            repl_handle,
             state,
             start,
         })
@@ -745,6 +1026,12 @@ impl BrokerServer {
         self.state.lock().unwrap().broker.current_price()
     }
 
+    /// Is this daemon currently granting (primary), or a warm standby?
+    /// Flips exactly once, at takeover.
+    pub fn is_primary(&self) -> bool {
+        self.state.lock().unwrap().role == Role::Primary
+    }
+
     pub fn stop(mut self) {
         self.shutdown();
     }
@@ -758,6 +1045,9 @@ impl BrokerServer {
             let _ = h.join();
         }
         if let Some(h) = self.history_handle.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.repl_handle.take() {
             let _ = h.join();
         }
     }
@@ -809,6 +1099,87 @@ fn serve_control_conn(
         out.clear();
         resp.encode_into(&mut out);
         write_frame(&mut writer, &out)?;
+    }
+}
+
+/// The standby's side of replication: poll the primary's lease-event
+/// log on the maintenance tick, replay each batch under the state
+/// lock, tail the shared usage-history dir on a slow cadence, and
+/// promote after `takeover_after` without one successful poll.
+fn replication_loop(
+    primary: &str,
+    state: Arc<Mutex<State>>,
+    stop: Arc<AtomicBool>,
+    start: Instant,
+    tick: Duration,
+    takeover_after: Duration,
+) {
+    use crate::net::control::CONTROL_CALL_TIMEOUT;
+    // Every network wait is bounded well inside the takeover deadline,
+    // or one wedged dial/call could eat the whole silence budget and
+    // stall the promotion the deadline exists to guarantee.
+    let call_timeout = (takeover_after / 2)
+        .max(Duration::from_millis(100))
+        .min(CONTROL_CALL_TIMEOUT);
+    let mut ctrl: Option<CtrlClient> = None;
+    let mut from_seq: u64 = 0;
+    let mut last_ok = Instant::now();
+    let mut last_tail = Instant::now();
+    // A full batch means the primary has more queued: poll again
+    // without sleeping, so catch-up runs at wire speed, not tick speed.
+    let mut catching_up = false;
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            return;
+        }
+        if !catching_up {
+            std::thread::sleep(tick);
+        }
+        catching_up = false;
+        if ctrl.is_none() {
+            if let Ok(mut c) = CtrlClient::connect_timeout(primary, call_timeout) {
+                let _ = c.set_call_timeout(call_timeout);
+                ctrl = Some(c);
+            }
+        }
+        if let Some(c) = ctrl.as_mut() {
+            match c.call(&CtrlRequest::ReplicaPoll { from_seq, max: REPL_POLL_MAX }) {
+                Ok(CtrlResponse::ReplicaEvents { first_seq, events }) => {
+                    last_ok = Instant::now();
+                    let now_us = start.elapsed().as_micros() as u64;
+                    let n = events.len() as u64;
+                    let mut s = state.lock().unwrap();
+                    if first_seq > from_seq {
+                        // Fell past the primary's bounded log; tolerated
+                        // — producer re-registration after takeover
+                        // re-announces whatever the gap lost.
+                        s.telemetry.counter("repl.gaps").inc();
+                    }
+                    for ev in &events {
+                        s.apply_replicated(ev, now_us);
+                    }
+                    s.telemetry.counter("repl.events_applied").add(n);
+                    from_seq = first_seq + n;
+                    catching_up = n == u64::from(REPL_POLL_MAX);
+                }
+                // A refusal, decode error, or timeout leaves the stream
+                // possibly desynced: drop it and re-dial next round.
+                Ok(_) | Err(_) => ctrl = None,
+            }
+        }
+        if last_tail.elapsed() >= Duration::from_secs(1) {
+            last_tail = Instant::now();
+            state.lock().unwrap().tail_history();
+        }
+        if last_ok.elapsed() >= takeover_after {
+            let now_us = start.elapsed().as_micros() as u64;
+            let mut s = state.lock().unwrap();
+            // Final history tail first: promote with everything the
+            // primary persisted before it died.
+            s.tail_history();
+            s.promote(now_us);
+            return;
+        }
     }
 }
 
@@ -1080,11 +1451,172 @@ mod tests {
         .unwrap();
         // Appends flow through the writer thread; wait for the flush.
         let deadline = Instant::now() + Duration::from_secs(2);
-        while store.load(77).len() != 41 && Instant::now() < deadline {
+        while store.load(77).0.len() != 41 && Instant::now() < deadline {
             std::thread::sleep(Duration::from_millis(10));
         }
-        assert_eq!(store.load(77).len(), 41);
+        assert_eq!(store.load(77).0.len(), 41);
         server.stop();
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    fn temp_dir(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!(
+            "memtrade-{tag}-{}-{}",
+            std::process::id(),
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .unwrap()
+                .as_nanos()
+        ))
+    }
+
+    #[test]
+    fn history_replay_skips_torn_final_line() {
+        let dir = temp_dir("history-torn");
+        let store = HistoryStore::open(dir.clone()).unwrap();
+        for t in 1..=10u64 {
+            store.append(5, t * 1_000, 1.5);
+        }
+        // Simulate a crash mid-append: chop 5 bytes off the final
+        // "10000 1.5\n", leaving "10000" — a line with no second token.
+        // (Cutting fewer bytes would leave "10000 1." which *parses*;
+        // torn floats are indistinguishable from valid ones.)
+        let path = store.path(5);
+        let len = std::fs::metadata(&path).unwrap().len();
+        let f = std::fs::OpenOptions::new().write(true).open(&path).unwrap();
+        f.set_len(len - 5).unwrap();
+        drop(f);
+        let (samples, skipped) = store.load(5);
+        assert_eq!(samples.len(), 9, "the 9 intact lines replay");
+        assert_eq!(skipped, 1, "the torn line is counted, not fatal");
+        assert_eq!(samples.last(), Some(&(9_000, 1.5)));
+        // A subsequent append starts a fresh line — it must not glue
+        // onto the torn one and forge a parsable-but-bogus sample.
+        store.append(5, 11_000, 2.0);
+        let (samples, skipped) = store.load(5);
+        assert_eq!(skipped, 1);
+        assert_eq!(samples.len(), 10);
+        assert_eq!(samples.last(), Some(&(11_000, 2.0)));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn history_compaction_is_atomic_and_bounded() {
+        let dir = temp_dir("history-compact");
+        let store = HistoryStore::open(dir.clone()).unwrap();
+        let path = store.path(8);
+        // A file past the compaction threshold (~4 MB of lines)...
+        let big = "123456 2.5\n".repeat(420_000);
+        assert!(big.len() as u64 > HistoryStore::COMPACT_BYTES);
+        std::fs::write(&path, big).unwrap();
+        // ...is rewritten down to the replay tail by one append.
+        store.append(8, 999_999, 3.5);
+        let len = std::fs::metadata(&path).unwrap().len();
+        assert!(len < HistoryStore::TAIL_BYTES, "compacted to {len} bytes");
+        assert!(
+            !path.with_extension("history.tmp").exists(),
+            "temp file renamed away, not left behind"
+        );
+        let (samples, skipped) = store.load(8);
+        assert_eq!(skipped, 0);
+        assert!(samples.len() <= HISTORY_REPLAY_CAP + 1);
+        assert_eq!(samples.last(), Some(&(999_999, 3.5)));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn standby_replicates_and_takes_over() {
+        let (b, c) = quick_cfg();
+        let primary = BrokerServer::start("127.0.0.1:0", b.clone(), c.clone()).unwrap();
+        let standby_cfg = BrokerServerConfig {
+            standby_of: Some(primary.addr().to_string()),
+            takeover_after: Duration::from_millis(400),
+            ..c
+        };
+        let standby = BrokerServer::start("127.0.0.1:0", b, standby_cfg).unwrap();
+        assert!(primary.is_primary());
+        assert!(!standby.is_primary());
+
+        // Build market state on the primary: a producer and a grant.
+        let mut ctrl = CtrlClient::connect(primary.addr()).unwrap();
+        register(&mut ctrl, 1, 32);
+        let resp = ctrl
+            .call(&CtrlRequest::RequestSlabs {
+                consumer: 9,
+                slabs: 4,
+                min_slabs: 1,
+                ttl_us: 60_000_000,
+            })
+            .unwrap();
+        let CtrlResponse::Grants { leases } = resp else { panic!("{resp:?}") };
+        let id = leases[0].lease;
+
+        // Meanwhile the standby refuses market verbs but answers stats.
+        let mut sctrl = CtrlClient::connect(standby.addr()).unwrap();
+        let resp = sctrl
+            .call(&CtrlRequest::RequestSlabs {
+                consumer: 9,
+                slabs: 1,
+                min_slabs: 1,
+                ttl_us: 1_000_000,
+            })
+            .unwrap();
+        assert!(
+            matches!(resp, CtrlResponse::Refused { code: RefuseCode::NotPrimary, .. }),
+            "{resp:?}"
+        );
+        let CtrlResponse::Stats { metrics, .. } =
+            sctrl.call(&CtrlRequest::StatsQuery).unwrap()
+        else {
+            panic!()
+        };
+        assert_eq!(metrics.gauge("market.role"), Some(1));
+
+        // The replicated book converges to the primary's.
+        let deadline = Instant::now() + Duration::from_secs(3);
+        while (standby.producer_count() != 1
+            || standby.active_lease_count() != leases.len())
+            && Instant::now() < deadline
+        {
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        assert_eq!(standby.producer_count(), 1);
+        assert_eq!(standby.active_lease_count(), leases.len());
+
+        // Kill the primary; the standby promotes within takeover_after
+        // (plus poll slack) and starts serving the same book.
+        primary.stop();
+        let deadline = Instant::now() + Duration::from_secs(3);
+        while !standby.is_primary() && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        assert!(standby.is_primary(), "standby never promoted");
+        // The consumer's lease survives failover: renew succeeds there.
+        let resp = sctrl.call(&CtrlRequest::Renew { consumer: 9, lease: id }).unwrap();
+        assert!(
+            matches!(resp, CtrlResponse::Renewed { lease, .. } if lease == id),
+            "{resp:?}"
+        );
+        // Fresh grants never collide with adopted lease ids.
+        let resp = sctrl
+            .call(&CtrlRequest::RequestSlabs {
+                consumer: 9,
+                slabs: 2,
+                min_slabs: 1,
+                ttl_us: 60_000_000,
+            })
+            .unwrap();
+        let CtrlResponse::Grants { leases: fresh } = resp else { panic!("{resp:?}") };
+        for g in &fresh {
+            assert!(g.lease > id, "fresh lease {} collides with adopted {id}", g.lease);
+        }
+        let CtrlResponse::Stats { metrics, .. } =
+            sctrl.call(&CtrlRequest::StatsQuery).unwrap()
+        else {
+            panic!()
+        };
+        assert_eq!(metrics.gauge("market.role"), Some(0));
+        assert_eq!(metrics.counter("repl.takeovers"), Some(1));
+        standby.stop();
     }
 }

@@ -10,8 +10,10 @@
 //!     producer) from the seed,
 //!  2. boots the topology and provisions the pool,
 //!  3. drives secure PUT/GET traffic while the faults run — optionally
-//!     killing a producer mid-run and racing renewals against forged
-//!     revocations,
+//!     killing a producer mid-run, racing renewals against forged
+//!     revocations, or killing the *primary broker* under a warm
+//!     standby (`failover`) so takeover and client failover run under
+//!     load,
 //!  4. disarms every fault source and measures reconvergence back to
 //!     target capacity,
 //!  5. sweeps the working set twice to check the invariants.
@@ -74,6 +76,10 @@ pub struct ChaosMix {
     pub kill_producer: bool,
     /// Race renewals against forged lease revocations on guessed ids.
     pub revoke_race: bool,
+    /// Boot a warm standby broker and kill the primary halfway through
+    /// the fault phase: the standby must take over and every client
+    /// must fail over to it (mix name `failover`).
+    pub kill_broker: bool,
 }
 
 impl ChaosMix {
@@ -93,11 +99,17 @@ impl ChaosMix {
         }
     }
 
+    /// Broker failover alone: kill the primary mid-run and demand the
+    /// warm standby takes over with zero invariant violations.
+    pub fn failover() -> Self {
+        ChaosMix { kill_broker: true, ..Default::default() }
+    }
+
     /// Parse a CLI mix name: `clean`, `standard`, or any `+`-joined
     /// combination of fault families (`control`, `data`, `byzantine`,
-    /// `kill`, `race` — e.g. `data+kill`). `None` for an unknown name.
-    /// Round-trips with [`Self::label`], so a printed reproduction
-    /// command always parses back to the mix that ran.
+    /// `kill`, `race`, `failover` — e.g. `data+kill`). `None` for an
+    /// unknown name. Round-trips with [`Self::label`], so a printed
+    /// reproduction command always parses back to the mix that ran.
     pub fn from_name(name: &str) -> Option<Self> {
         match name {
             "clean" => return Some(Self::clean()),
@@ -112,6 +124,7 @@ impl ChaosMix {
                 "byzantine" => mix.byzantine = true,
                 "kill" => mix.kill_producer = true,
                 "race" => mix.revoke_race = true,
+                "failover" => mix.kill_broker = true,
                 _ => return None,
             }
         }
@@ -119,7 +132,7 @@ impl ChaosMix {
     }
 
     pub const NAMES: &'static [&'static str] =
-        &["clean", "standard", "control", "data", "byzantine", "kill", "race"];
+        &["clean", "standard", "control", "data", "byzantine", "kill", "race", "failover"];
 
     /// Canonical printable name; [`Self::from_name`] parses it back.
     pub fn label(&self) -> String {
@@ -138,6 +151,9 @@ impl ChaosMix {
         }
         if self.revoke_race {
             parts.push("race");
+        }
+        if self.kill_broker {
+            parts.push("failover");
         }
         if parts.is_empty() {
             "clean".to_string()
@@ -196,6 +212,9 @@ pub struct ChaosOutcome {
     /// Faults-stop → reconverged, in milliseconds (NaN if never).
     pub recovery_ms: f64,
     pub held_slabs_after: u32,
+    /// Standby takeovers observed (`None` = scenario had no standby).
+    /// A `failover` mix must see exactly one.
+    pub broker_takeovers: Option<u64>,
     pub pool_stats: PoolStats,
 }
 
@@ -221,6 +240,9 @@ impl ChaosOutcome {
                 self.held_slabs_after
             ));
         }
+        if self.broker_takeovers == Some(0) {
+            v.push("standby broker never took over after the primary was killed".to_string());
+        }
         v
     }
 
@@ -228,8 +250,8 @@ impl ChaosOutcome {
         format!(
             "seed={} [{}]\n  ops {} ({:.0} ops/s) | hits {} misses {} | integrity: \
              {} caught, {} escaped, {} tampered\n  lost acked writes {} | reconverged {} \
-             in {:.0} ms (held {}/{TARGET_SLABS}) | pool: grants {} lost {} renewals {} \
-             io_errs {} dead_calls {} ctrl_errs {}",
+             in {:.0} ms (held {}/{TARGET_SLABS}, takeovers {:?}) | pool: grants {} lost {} \
+             renewals {} io_errs {} dead_calls {} ctrl_errs {}",
             self.seed,
             self.schedule,
             self.ops,
@@ -243,6 +265,7 @@ impl ChaosOutcome {
             self.reconverged,
             self.recovery_ms,
             self.held_slabs_after,
+            self.broker_takeovers,
             self.pool_stats.grants.get(),
             self.pool_stats.slots_lost.get(),
             self.pool_stats.renewals.get(),
@@ -334,13 +357,14 @@ pub fn run_chaos(cfg: &ChaosConfig) -> ChaosOutcome {
 
     // --- Boot the topology. The broker binds clean; its *accepted*
     // control connections carry the fault schedule.
+    let broker_cfg = BrokerConfig {
+        slab_bytes: SLAB,
+        min_lease: SimTime::from_millis(200),
+        ..Default::default()
+    };
     let broker = BrokerServer::start(
         "127.0.0.1:0",
-        BrokerConfig {
-            slab_bytes: SLAB,
-            min_lease: SimTime::from_millis(200),
-            ..Default::default()
-        },
+        broker_cfg.clone(),
         BrokerServerConfig {
             tick: Duration::from_millis(20),
             producer_timeout: Duration::from_millis(600),
@@ -351,10 +375,37 @@ pub fn run_chaos(cfg: &ChaosConfig) -> ChaosOutcome {
     )
     .expect("broker bind");
 
+    // Failover scenarios boot a warm standby replicating the primary's
+    // lease-event log. It shares the control fault schedule — the
+    // replication stream itself runs through the primary's faulty
+    // accepted connections.
+    let standby = cfg.mix.kill_broker.then(|| {
+        BrokerServer::start(
+            "127.0.0.1:0",
+            broker_cfg.clone(),
+            BrokerServerConfig {
+                tick: Duration::from_millis(20),
+                producer_timeout: Duration::from_millis(600),
+                forecast_min_samples: usize::MAX,
+                faults: ctrl_plan.clone(),
+                standby_of: Some(broker.addr().to_string()),
+                takeover_after: Duration::from_millis(400),
+                ..Default::default()
+            },
+        )
+        .expect("standby bind")
+    });
+    // Ordered failover list every client gets: primary first.
+    let mut broker_list = vec![broker.addr().to_string()];
+    if let Some(s) = &standby {
+        broker_list.push(s.addr().to_string());
+    }
+    let mut primary = Some(broker);
+
     let start_agent = |id: u64, byzantine: Option<ByzantineSpec>| -> ProducerAgent {
         let agent_cfg = ProducerAgentConfig {
             producer: id,
-            broker: broker.addr().to_string(),
+            brokers: broker_list.clone(),
             data_addr: "127.0.0.1:0".to_string(),
             advertise: None,
             capacity_bytes: AGENT_SLABS * SLAB,
@@ -364,6 +415,10 @@ pub fn run_chaos(cfg: &ChaosConfig) -> ChaosOutcome {
             rate_bps: None,
             seed: cfg.seed ^ id,
             ctrl_call_timeout: Duration::from_millis(250),
+            // Failover must finish inside the recovery budget: retry
+            // promptly, cap low, keep the jitter.
+            redial_backoff: Duration::from_millis(100),
+            redial_backoff_cap: Duration::from_secs(1),
             ctrl_faults: None,
             data_faults: None,
             byzantine,
@@ -390,13 +445,14 @@ pub fn run_chaos(cfg: &ChaosConfig) -> ChaosOutcome {
 
     let pool_cfg = RemotePoolConfig {
         consumer: 9,
-        broker: broker.addr().to_string(),
+        brokers: broker_list.clone(),
         target_slabs: TARGET_SLABS,
         min_slabs: 1,
         lease_ttl: Duration::from_millis(700),
         renew_margin: Duration::from_millis(300),
         maintain_every: Duration::from_millis(20),
-        reconnect_backoff: Duration::from_millis(250),
+        reconnect_backoff: Duration::from_millis(100),
+        reconnect_backoff_cap: Duration::from_secs(1),
         data_call_timeout: Duration::from_millis(150),
         ctrl_call_timeout: Duration::from_millis(250),
         data_window: 2,
@@ -429,7 +485,7 @@ pub fn run_chaos(cfg: &ChaosConfig) -> ChaosOutcome {
     // racing the pool's renewals and the broker's expiry sweeps.
     let race_stop = Arc::new(AtomicBool::new(false));
     let racer = cfg.mix.revoke_race.then(|| {
-        let addr = broker.addr().to_string();
+        let addr = broker_list[0].clone();
         let stop = race_stop.clone();
         std::thread::spawn(move || {
             let mut ctrl: Option<CtrlClient> = None;
@@ -470,12 +526,18 @@ pub fn run_chaos(cfg: &ChaosConfig) -> ChaosOutcome {
         if t_phase.elapsed() > phase_budget {
             break;
         }
-        if cfg.mix.kill_producer
-            && !killed
-            && (op >= cfg.fault_ops / 2 || t_phase.elapsed() > phase_budget / 2)
-        {
+        let halfway = op >= cfg.fault_ops / 2 || t_phase.elapsed() > phase_budget / 2;
+        if cfg.mix.kill_producer && !killed && halfway {
             agents[0].kill();
             killed = true;
+        }
+        // Kill the primary broker under load: the warm standby must
+        // promote itself and every client must fail over to it while
+        // traffic keeps flowing.
+        if cfg.mix.kill_broker && halfway {
+            if let Some(p) = primary.take() {
+                p.stop();
+            }
         }
         // ~25% of iterations drive *batch* frames (multi-get or
         // multi-put), so transport faults land mid-batch — truncating
@@ -537,6 +599,13 @@ pub fn run_chaos(cfg: &ChaosConfig) -> ChaosOutcome {
     if cfg.mix.kill_producer && !killed {
         agents[0].kill();
         killed = true;
+    }
+    // A failover scenario whose op loop ended early still kills the
+    // primary: recovery below must run against the standby.
+    if cfg.mix.kill_broker {
+        if let Some(p) = primary.take() {
+            p.stop();
+        }
     }
 
     // --- Disarm everything; the marketplace must heal on its own.
@@ -626,6 +695,9 @@ pub fn run_chaos(cfg: &ChaosConfig) -> ChaosOutcome {
     }
 
     let tampered: u64 = agents.iter().map(|a| a.byzantine_tampered()).sum();
+    let broker_takeovers = standby
+        .as_ref()
+        .map(|s| s.metrics().counter("repl.takeovers").unwrap_or(0));
     let outcome = ChaosOutcome {
         seed: cfg.seed,
         schedule,
@@ -640,6 +712,7 @@ pub fn run_chaos(cfg: &ChaosConfig) -> ChaosOutcome {
         reconverged,
         recovery_ms,
         held_slabs_after: pool.held_slabs(),
+        broker_takeovers,
         pool_stats: pool.stats.clone(),
     };
 
@@ -647,7 +720,12 @@ pub fn run_chaos(cfg: &ChaosConfig) -> ChaosOutcome {
     for a in agents.drain(..) {
         a.stop();
     }
-    broker.stop();
+    if let Some(p) = primary {
+        p.stop();
+    }
+    if let Some(s) = standby {
+        s.stop();
+    }
     outcome
 }
 
@@ -666,6 +744,8 @@ mod tests {
             ChaosMix { data_faults: true, kill_producer: true, ..Default::default() },
             ChaosMix { control_faults: true, revoke_race: true, ..Default::default() },
             ChaosMix { byzantine: true, ..Default::default() },
+            ChaosMix::failover(),
+            ChaosMix { data_faults: true, kill_broker: true, ..Default::default() },
         ];
         for m in mixes {
             assert_eq!(ChaosMix::from_name(&m.label()), Some(m), "{}", m.label());

@@ -91,6 +91,31 @@ pub struct LeaseEnd {
     pub cause: LeaseState,
 }
 
+/// One entry of the broker's append-only replication log: every market
+/// state change the primary makes, in the order it made them. A standby
+/// replays the stream through [`LeaseTable::apply_event`] to own an
+/// equivalent lease book at takeover. Lifetimes are remaining TTLs
+/// (clock-agnostic, like the wire); producer membership changes ride
+/// the same log so the standby also knows who is alive and where.
+#[derive(Clone, Debug, PartialEq)]
+pub enum LeaseEvent {
+    Granted {
+        lease: u64,
+        consumer: u64,
+        producer: u64,
+        slabs: u32,
+        slab_bytes: u64,
+        price_nd_per_slab_hour: i64,
+        ttl_us: u64,
+    },
+    Renewed { lease: u64, ttl_us: u64 },
+    Released { lease: u64 },
+    Revoked { lease: u64 },
+    Expired { lease: u64 },
+    ProducerUp { producer: u64, endpoint: String, capacity_gb: f32 },
+    ProducerDown { producer: u64 },
+}
+
 /// The lease book: id → record, plus an accounting queue of ended
 /// leases and per-producer announcement tracking.
 #[derive(Default)]
@@ -306,6 +331,57 @@ impl LeaseTable {
         }
     }
 
+    /// Replay one replicated [`LeaseEvent`] at local time `now_us`.
+    ///
+    /// Every outcome the primary already decided is taken as
+    /// authoritative, so refusals the table would hand a live caller
+    /// are tolerated here: a duplicate grant, a renew/end on a lease
+    /// this replica already lapsed, or an end for a lease it never saw
+    /// (log gap) each leave the earlier local state standing. The
+    /// takeover re-registration path repairs whatever a gap cost.
+    /// Applying a log prefix and then its suffix is exactly applying
+    /// the whole log — the invariant the failover proptest pins down.
+    pub fn apply_event(&mut self, ev: &LeaseEvent, now_us: u64) {
+        match ev {
+            LeaseEvent::Granted {
+                lease,
+                consumer,
+                producer,
+                slabs,
+                slab_bytes,
+                price_nd_per_slab_hour,
+                ttl_us,
+            } => {
+                let _ = self.insert(
+                    *lease,
+                    *consumer,
+                    *producer,
+                    *slabs,
+                    *slab_bytes,
+                    *price_nd_per_slab_hour,
+                    now_us,
+                    *ttl_us,
+                );
+            }
+            LeaseEvent::Renewed { lease, .. } => {
+                let _ = self.renew(*lease, now_us);
+            }
+            LeaseEvent::Released { lease } => {
+                let _ = self.release(*lease, now_us);
+            }
+            LeaseEvent::Revoked { lease } => {
+                let _ = self.revoke(*lease, now_us);
+            }
+            LeaseEvent::Expired { lease } => {
+                let _ = self.end_with(*lease, now_us, LeaseState::Expired);
+            }
+            LeaseEvent::ProducerUp { .. } => {} // registry-level; no lease change
+            LeaseEvent::ProducerDown { producer } => {
+                self.revoke_all_for_producer(*producer, now_us);
+            }
+        }
+    }
+
     /// Terminal lease ids of `producer` not yet acked to it; acking
     /// garbage-collects the records.
     pub fn take_ended_unacked(&mut self, producer: u64) -> Vec<u64> {
@@ -442,6 +518,43 @@ mod tests {
         assert_eq!(t.take_ended().len(), 2);
         assert_eq!(t.get(3).unwrap().state, LeaseState::Active);
         assert!(t.take_ended_unacked(1).is_empty());
+    }
+
+    fn granted(lease: u64, producer: u64, slabs: u32, ttl: u64) -> LeaseEvent {
+        LeaseEvent::Granted {
+            lease,
+            consumer: 100,
+            producer,
+            slabs,
+            slab_bytes: MB64,
+            price_nd_per_slab_hour: 42,
+            ttl_us: ttl,
+        }
+    }
+
+    #[test]
+    fn replay_builds_equivalent_book_and_tolerates_gaps() {
+        let mut t = LeaseTable::default();
+        t.apply_event(&granted(1, 1, 4, 10_000), 0);
+        t.apply_event(&granted(2, 1, 2, 10_000), 0);
+        t.apply_event(&granted(3, 7, 8, 10_000), 0);
+        assert_eq!(t.producer_target_bytes(1), 6 * MB64);
+        // Primary-decided ends replay as the primary's cause.
+        t.apply_event(&LeaseEvent::Renewed { lease: 1, ttl_us: 10_000 }, 5_000);
+        t.apply_event(&LeaseEvent::Released { lease: 2 }, 6_000);
+        t.apply_event(&LeaseEvent::Expired { lease: 3 }, 7_000);
+        assert_eq!(t.get(1).unwrap().expiry_us, 15_000);
+        assert_eq!(t.get(2).unwrap().state, LeaseState::Released);
+        assert_eq!(t.get(3).unwrap().state, LeaseState::Expired);
+        // Gap tolerance: events about leases this replica never saw, or
+        // already-ended ones, leave local state standing — no panic.
+        t.apply_event(&LeaseEvent::Revoked { lease: 99 }, 7_000);
+        t.apply_event(&LeaseEvent::Released { lease: 2 }, 8_000);
+        t.apply_event(&granted(1, 1, 4, 10_000), 8_000); // duplicate grant
+        assert_eq!(t.get(1).unwrap().expiry_us, 15_000, "duplicate must not reset");
+        // A dead producer revokes everything it still holds.
+        t.apply_event(&LeaseEvent::ProducerDown { producer: 1 }, 9_000);
+        assert_eq!(t.producer_target_bytes(1), 0);
     }
 
     #[test]

@@ -6,7 +6,10 @@
 //!   [`crate::broker::Broker`] (registry, placement, pricing,
 //!   availability prediction) behind the control wire protocol
 //!   ([`crate::net::control`]), with monotonic-clock lease expiry, dead-
-//!   producer sweeps, and persisted per-producer usage histories.
+//!   producer sweeps, persisted per-producer usage histories, and warm-
+//!   standby failover: a primary streams its lease-event log to a
+//!   standby that replays it and takes over when the primary goes
+//!   silent.
 //! * [`ProducerAgent`] — registers with the broker, decides offered
 //!   capacity with the real harvester control loop, serves data-plane
 //!   traffic via [`crate::net::tcp::ProducerStoreServer`], heartbeats,
@@ -36,7 +39,7 @@ pub mod stats_server;
 
 pub use broker_server::{BrokerServer, BrokerServerConfig};
 pub use chaos::{run_chaos, ChaosConfig, ChaosMix, ChaosOutcome};
-pub use lease::{LeaseEnd, LeaseError, LeaseRecord, LeaseState, LeaseTable};
+pub use lease::{LeaseEnd, LeaseError, LeaseEvent, LeaseRecord, LeaseState, LeaseTable};
 pub use producer_agent::{AgentStats, ProducerAgent, ProducerAgentConfig};
 pub use remote_pool::{PoolStats, RemotePool, RemotePoolConfig};
 pub use stats_server::StatsServer;

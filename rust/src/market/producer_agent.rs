@@ -16,6 +16,13 @@
 //!
 //! The store starts at zero budget: until the broker grants a lease on
 //! this producer, every PUT is rejected.
+//!
+//! Failover: `brokers` is an ordered endpoint list (primary first).
+//! When the current broker stops answering — or refuses with
+//! `NotPrimary` — the agent advances to the next endpoint under a
+//! jittered exponential backoff and re-registers there. Re-registration
+//! re-announces the complete active book on the next heartbeat ack, so
+//! a promoted standby relearns anything its replicated log missed.
 
 use crate::core::config::HarvesterConfig;
 use crate::core::{SimTime, GIB};
@@ -27,6 +34,7 @@ use crate::net::control::{CtrlClient, CtrlRequest, CtrlResponse, RefuseCode};
 use crate::net::faults::{ByzantineSpec, FaultPlan};
 use crate::net::tcp::ProducerStoreServer;
 use crate::producer::Harvester;
+use crate::util::Backoff;
 use crate::workload::apps::{AppKind, AppModel, AppRunner};
 use std::collections::HashMap;
 use std::io;
@@ -38,8 +46,10 @@ use std::time::{Duration, Instant};
 #[derive(Clone, Debug)]
 pub struct ProducerAgentConfig {
     pub producer: u64,
-    /// Broker control endpoint, `host:port`.
-    pub broker: String,
+    /// Broker control endpoints, `host:port`, in failover order
+    /// (primary first, then standbys). The agent registers with the
+    /// first that accepts and advances — wrapping — when it fails.
+    pub brokers: Vec<String>,
     /// Data-plane bind address (port 0 = ephemeral).
     pub data_addr: String,
     /// Endpoint advertised to the broker (consumers dial this). Needed
@@ -60,6 +70,13 @@ pub struct ProducerAgentConfig {
     /// Longest a control call may wait for the broker's answer before
     /// the agent treats the connection as lost and reconnects.
     pub ctrl_call_timeout: Duration,
+    /// First redial delay after a failed broker dial or registration;
+    /// doubles per consecutive failure up to `redial_backoff_cap` with
+    /// seeded jitter ([`Backoff`]), so a fleet of agents doesn't hammer
+    /// a just-promoted standby in lockstep.
+    pub redial_backoff: Duration,
+    /// Ceiling of the redial backoff schedule.
+    pub redial_backoff_cap: Duration,
     /// Chaos plane: fault schedule for this agent's broker connections.
     pub ctrl_faults: Option<FaultPlan>,
     /// Chaos plane: fault schedule installed on accepted data-plane
@@ -79,7 +96,7 @@ impl Default for ProducerAgentConfig {
     fn default() -> Self {
         ProducerAgentConfig {
             producer: 1,
-            broker: "127.0.0.1:7070".to_string(),
+            brokers: vec!["127.0.0.1:7070".to_string()],
             data_addr: "127.0.0.1:0".to_string(),
             advertise: None,
             capacity_bytes: GIB,
@@ -89,6 +106,8 @@ impl Default for ProducerAgentConfig {
             rate_bps: None,
             seed: 1,
             ctrl_call_timeout: crate::net::control::CONTROL_CALL_TIMEOUT,
+            redial_backoff: Duration::from_millis(500),
+            redial_backoff_cap: Duration::from_secs(10),
             ctrl_faults: None,
             data_faults: None,
             byzantine: None,
@@ -115,6 +134,9 @@ pub struct AgentStats {
     pub leases_ended: Counter,
     pub revokes_sent: Counter,
     pub control_errors: Counter,
+    /// Times the agent advanced to the next broker endpoint in its
+    /// failover list.
+    pub broker_failovers: Counter,
 }
 
 impl Observe for AgentStats {
@@ -128,6 +150,7 @@ impl Observe for AgentStats {
         out.set_counter(scoped(prefix, "leases_ended"), self.leases_ended.get());
         out.set_counter(scoped(prefix, "revokes_sent"), self.revokes_sent.get());
         out.set_counter(scoped(prefix, "control_errors"), self.control_errors.get());
+        out.set_counter(scoped(prefix, "broker_failovers"), self.broker_failovers.get());
     }
 }
 
@@ -231,20 +254,44 @@ impl ProducerAgent {
             None => cfg.capacity_bytes,
         };
 
-        let mut ctrl = dial_broker(&cfg, 0)?;
-        let slab_bytes = match ctrl.call(&CtrlRequest::Register {
-            producer: cfg.producer,
-            capacity_gb: cfg.capacity_bytes as f32 / GIB as f32,
-            endpoint: endpoint.clone(),
-            free_bytes: offered0,
-        })? {
-            CtrlResponse::Registered { slab_bytes, .. } => slab_bytes,
-            other => {
-                return Err(io::Error::new(
-                    io::ErrorKind::ConnectionRefused,
-                    format!("broker refused registration: {other:?}"),
-                ))
+        // Register with the first broker that accepts, in failover
+        // order: a standby listed first answers `NotPrimary` and we
+        // simply move on to the one actually granting.
+        let mut registered: Option<(CtrlClient, u64, usize)> = None;
+        let mut conn_seq = 0u64;
+        let mut last_err =
+            io::Error::new(io::ErrorKind::InvalidInput, "no broker endpoints configured");
+        for idx in 0..cfg.brokers.len() {
+            let conn_idx = conn_seq;
+            conn_seq += 1;
+            let mut c = match dial_broker(&cfg, &cfg.brokers[idx], conn_idx) {
+                Ok(c) => c,
+                Err(e) => {
+                    last_err = e;
+                    continue;
+                }
+            };
+            match c.call(&CtrlRequest::Register {
+                producer: cfg.producer,
+                capacity_gb: cfg.capacity_bytes as f32 / GIB as f32,
+                endpoint: endpoint.clone(),
+                free_bytes: offered0,
+            }) {
+                Ok(CtrlResponse::Registered { slab_bytes, .. }) => {
+                    registered = Some((c, slab_bytes, idx));
+                    break;
+                }
+                Ok(other) => {
+                    last_err = io::Error::new(
+                        io::ErrorKind::ConnectionRefused,
+                        format!("broker {} refused registration: {other:?}", cfg.brokers[idx]),
+                    );
+                }
+                Err(e) => last_err = e,
             }
+        }
+        let Some((ctrl, slab_bytes, broker_idx)) = registered else {
+            return Err(last_err);
         };
 
         let stats = Arc::new(AgentStats::default());
@@ -281,12 +328,22 @@ impl ProducerAgent {
             let cfg = cfg.clone();
             let stop = stop.clone();
             let stats = stats.clone();
+            // Jitter seeded per producer: a fleet failing over together
+            // must not redial the standby in lockstep.
+            let backoff = Backoff::new(
+                cfg.redial_backoff,
+                cfg.redial_backoff_cap,
+                cfg.seed ^ cfg.producer,
+            );
             std::thread::spawn(move || {
                 agent_loop(AgentLoop {
                     cfg,
                     endpoint,
                     conn: Some(ctrl),
-                    conn_seq: 1,
+                    conn_seq,
+                    broker_idx,
+                    backoff,
+                    redial_after: Instant::now(),
                     store,
                     harvest,
                     slab_bytes,
@@ -366,9 +423,14 @@ impl ProducerAgent {
             let _ = h.join();
         }
         // Deregister over a clean connection: teardown must not race a
-        // chaos plan that could eat the goodbye.
-        if let Ok(mut ctrl) = CtrlClient::connect(&self.cfg.broker) {
-            let _ = ctrl.call(&CtrlRequest::Deregister { producer: self.cfg.producer });
+        // chaos plan that could eat the goodbye. Whichever broker is
+        // primary right now takes it; the rest refuse or are dead.
+        for addr in &self.cfg.brokers {
+            let Ok(mut ctrl) = CtrlClient::connect(addr) else { continue };
+            let bye = CtrlRequest::Deregister { producer: self.cfg.producer };
+            if matches!(ctrl.call(&bye), Ok(CtrlResponse::Deregistered { .. })) {
+                break;
+            }
         }
         if let Some(server) = self.server.take() {
             server.stop();
@@ -385,18 +447,19 @@ impl Drop for ProducerAgent {
     }
 }
 
-/// Dial the broker with the agent's chaos plan (if any) installed and
-/// per-call response waits bounded. `conn` indexes this agent's control
-/// connections for the fault plan's determinism contract.
-fn dial_broker(cfg: &ProducerAgentConfig, conn: u64) -> io::Result<CtrlClient> {
+/// Dial one broker endpoint with the agent's chaos plan (if any)
+/// installed and per-call response waits bounded. `conn` indexes this
+/// agent's control connections for the fault plan's determinism
+/// contract.
+fn dial_broker(cfg: &ProducerAgentConfig, addr: &str, conn: u64) -> io::Result<CtrlClient> {
     let mut ctrl = match &cfg.ctrl_faults {
         Some(plan) => CtrlClient::connect_faulty(
-            &cfg.broker,
+            addr,
             crate::net::control::HANDSHAKE_TIMEOUT,
             plan,
             conn,
         )?,
-        None => CtrlClient::connect(&cfg.broker)?,
+        None => CtrlClient::connect(addr)?,
     };
     ctrl.set_call_timeout(cfg.ctrl_call_timeout)?;
     Ok(ctrl)
@@ -409,6 +472,12 @@ struct AgentLoop {
     conn: Option<CtrlClient>,
     /// Control connections dialed so far (the chaos plan's index).
     conn_seq: u64,
+    /// Index into `cfg.brokers` of the endpoint currently in use.
+    broker_idx: usize,
+    /// Jittered exponential redial schedule feeding `redial_after`.
+    backoff: Backoff,
+    /// Earliest time another dial attempt may be made.
+    redial_after: Instant,
     store: Arc<ShardedKvStore>,
     harvest: Option<HarvestLoop>,
     slab_bytes: u64,
@@ -448,15 +517,29 @@ fn agent_loop(mut a: AgentLoop) {
         a.stats.offered_bytes.set(offered as i64);
 
         // Re-establish the control connection if it dropped (broker
-        // restart or transient failure): reconnect and re-register.
-        // The broker keeps our active leases across a re-registration,
-        // so availability must still be reported net of them — a full-
+        // restart, failover, or transient failure): reconnect and
+        // re-register, gated by the jittered backoff so a wedged or
+        // just-promoted broker isn't hammered every heartbeat. The
+        // broker keeps our active leases across a re-registration, so
+        // availability must still be reported net of them — a full-
         // capacity report here would invite over-granting.
         if a.conn.is_none() {
+            if Instant::now() < a.redial_after {
+                continue;
+            }
             let conn_idx = a.conn_seq;
             a.conn_seq += 1;
-            let Ok(mut c) = dial_broker(&a.cfg, conn_idx) else {
+            let addr = a.cfg.brokers[a.broker_idx % a.cfg.brokers.len().max(1)].clone();
+            let dial_failed = |a: &mut AgentLoop| {
                 a.stats.control_errors.inc();
+                a.redial_after = Instant::now() + a.backoff.next_delay();
+                if a.cfg.brokers.len() > 1 {
+                    a.broker_idx = (a.broker_idx + 1) % a.cfg.brokers.len();
+                    a.stats.broker_failovers.inc();
+                }
+            };
+            let Ok(mut c) = dial_broker(&a.cfg, &addr, conn_idx) else {
+                dial_failed(&mut a);
                 continue;
             };
             let leased_now: u64 = active.values().sum();
@@ -467,9 +550,12 @@ fn agent_loop(mut a: AgentLoop) {
                 free_bytes: offered.saturating_sub(leased_now),
             };
             if !matches!(c.call(&reg), Ok(CtrlResponse::Registered { .. })) {
-                a.stats.control_errors.inc();
+                // A standby's `NotPrimary` lands here too: same cure —
+                // back off and try the next endpoint.
+                dial_failed(&mut a);
                 continue;
             }
+            a.backoff.reset();
             rebuild_book = true;
             a.conn = Some(c);
         }
@@ -557,9 +643,20 @@ fn agent_loop(mut a: AgentLoop) {
                 a.stats.target_bytes.set(target_bytes as i64);
             }
             Ok(CtrlResponse::Refused { code: RefuseCode::UnknownProducer, .. }) => {
-                // Broker restarted and forgot us: re-register next tick.
+                // Broker restarted and forgot us: re-register next tick
+                // at the *same* endpoint — it is primary, just amnesiac.
                 a.stats.control_errors.inc();
                 a.conn = None;
+            }
+            Ok(CtrlResponse::Refused { code: RefuseCode::NotPrimary, .. }) => {
+                // The broker we talk to demoted or was always a standby:
+                // advance to the next endpoint right away.
+                a.stats.control_errors.inc();
+                a.conn = None;
+                if a.cfg.brokers.len() > 1 {
+                    a.broker_idx = (a.broker_idx + 1) % a.cfg.brokers.len();
+                    a.stats.broker_failovers.inc();
+                }
             }
             Ok(_) => {
                 // Any other answer to a heartbeat means the response

@@ -34,14 +34,22 @@
 //! slot's connection — one round trip per producer instead of one per
 //! key, with the same per-op miss degradation when a slot is dead or
 //! dies mid-batch.
+//!
+//! Failover: `brokers` is an ordered endpoint list (primary first).
+//! A dial failure, desynced stream, or `NotPrimary` refusal advances
+//! the pool to the next endpoint under a jittered exponential backoff
+//! ([`crate::util::Backoff`]); leases survive the hop because the
+//! standby replays the primary's lease-event log and honors them after
+//! takeover.
 
 use crate::consumer::client::{KvTransport, DEAD_ROUTE};
 use crate::metrics::{scoped, Counter, Histogram, MetricSet, Observe};
-use crate::net::control::{CtrlClient, CtrlRequest, CtrlResponse, GrantInfo};
+use crate::net::control::{CtrlClient, CtrlRequest, CtrlResponse, GrantInfo, RefuseCode};
 use crate::net::faults::FaultPlan;
 use crate::net::tcp::KvClient;
 use crate::net::wire::{Request, Response};
 use crate::util::hash::fnv1a_64;
+use crate::util::Backoff;
 use std::io;
 use std::time::{Duration, Instant};
 
@@ -53,8 +61,11 @@ const DIAL_TIMEOUT: Duration = Duration::from_secs(2);
 #[derive(Clone, Debug)]
 pub struct RemotePoolConfig {
     pub consumer: u64,
-    /// Broker control endpoint, `host:port`.
-    pub broker: String,
+    /// Broker control endpoints, `host:port`, in failover order
+    /// (primary first, then standbys). The pool talks to one at a time
+    /// and advances to the next — wrapping — when the current one fails
+    /// to dial, desyncs, or answers `NotPrimary`.
+    pub brokers: Vec<String>,
     /// Slabs the pool tries to hold at all times.
     pub target_slabs: u32,
     /// Partial-allocation floor per request.
@@ -66,11 +77,15 @@ pub struct RemotePoolConfig {
     /// Opportunistic maintenance cadence inside `call`.
     pub maintain_every: Duration,
     /// After a failed broker reconnect or call, don't retry (and thus
-    /// stall a data call again) until this much time has passed. Must
-    /// exceed the worst-case inline stall (dial + handshake read wait),
-    /// or a wedged broker would keep the data path blocked
-    /// back-to-back.
+    /// stall a data call again) until a backoff delay has passed. This
+    /// is the *first* window of a capped exponential schedule with
+    /// seeded jitter ([`Backoff`]): small enough that failover to a
+    /// standby is prompt, doubling per consecutive failure toward
+    /// `reconnect_backoff_cap` so a wedged broker can't keep the data
+    /// path stalled back-to-back.
     pub reconnect_backoff: Duration,
+    /// Ceiling of the reconnect backoff schedule.
+    pub reconnect_backoff_cap: Duration,
     /// Longest a data-plane call may wait for its response: a producer
     /// that stops answering mid-stream surfaces as a dead slot (cache
     /// misses) instead of wedging the consumer forever.
@@ -91,13 +106,14 @@ impl Default for RemotePoolConfig {
     fn default() -> Self {
         RemotePoolConfig {
             consumer: 1,
-            broker: "127.0.0.1:7070".to_string(),
+            brokers: vec!["127.0.0.1:7070".to_string()],
             target_slabs: 8,
             min_slabs: 1,
             lease_ttl: Duration::from_secs(600),
             renew_margin: Duration::from_secs(120),
             maintain_every: Duration::from_millis(50),
-            reconnect_backoff: Duration::from_secs(10),
+            reconnect_backoff: Duration::from_millis(500),
+            reconnect_backoff_cap: Duration::from_secs(10),
             data_call_timeout: Duration::from_secs(2),
             ctrl_call_timeout: crate::net::control::CONTROL_CALL_TIMEOUT,
             data_window: 1,
@@ -126,6 +142,9 @@ pub struct PoolStats {
     pub dead_calls: Counter,
     /// Broker control-plane failures (reconnected on next maintain).
     pub control_errors: Counter,
+    /// Times the pool advanced to the next broker endpoint in its
+    /// failover list.
+    pub broker_failovers: Counter,
 }
 
 impl Observe for PoolStats {
@@ -138,6 +157,7 @@ impl Observe for PoolStats {
         out.set_counter(scoped(prefix, "io_errors"), self.io_errors.get());
         out.set_counter(scoped(prefix, "dead_calls"), self.dead_calls.get());
         out.set_counter(scoped(prefix, "control_errors"), self.control_errors.get());
+        out.set_counter(scoped(prefix, "broker_failovers"), self.broker_failovers.get());
     }
 }
 
@@ -163,6 +183,10 @@ pub struct RemotePool {
     next_maintain: Instant,
     /// Earliest time a broker reconnect may be attempted again.
     reconnect_after: Instant,
+    /// Jittered exponential schedule feeding `reconnect_after`.
+    backoff: Backoff,
+    /// Index into `cfg.brokers` of the endpoint currently in use.
+    broker_idx: usize,
     /// Session nonce mixed into the wire-key namespace (see module doc).
     session: u64,
     /// Connections dialed so far — the per-connection index of the
@@ -183,6 +207,14 @@ impl RemotePool {
             .duration_since(std::time::UNIX_EPOCH)
             .map(|d| d.as_micros() as u64)
             .unwrap_or(0);
+        // Seed the reconnect jitter per consumer (and session): at a
+        // broker failover the whole fleet notices together, and
+        // identically-seeded schedules would retry in lockstep.
+        let backoff = Backoff::new(
+            cfg.reconnect_backoff,
+            cfg.reconnect_backoff_cap,
+            cfg.consumer ^ session,
+        );
         let mut pool = RemotePool {
             cfg,
             ctrl: None,
@@ -191,29 +223,62 @@ impl RemotePool {
             held_slabs: 0,
             next_maintain: Instant::now(),
             reconnect_after: Instant::now(),
+            backoff,
+            broker_idx: 0,
             session,
             conn_seq: 0,
             stats: PoolStats::default(),
             data_call_us: Histogram::new(),
         };
-        // Bounded initial dial: a black-holed broker fails fast here
-        // instead of hanging the constructor on the OS SYN schedule.
-        pool.ctrl = Some(pool.dial_ctrl(crate::net::control::HANDSHAKE_TIMEOUT)?);
-        pool.refill();
-        Ok(pool)
+        // Bounded initial dial, trying each endpoint once: a black-holed
+        // broker fails over (or fails fast) here instead of hanging the
+        // constructor on the OS SYN schedule.
+        let mut last_err = None;
+        for _ in 0..pool.cfg.brokers.len().max(1) {
+            match pool.dial_ctrl(crate::net::control::HANDSHAKE_TIMEOUT) {
+                Ok(c) => {
+                    pool.ctrl = Some(c);
+                    break;
+                }
+                Err(e) => {
+                    last_err = Some(e);
+                    pool.advance_broker();
+                }
+            }
+        }
+        match pool.ctrl {
+            Some(_) => {
+                pool.refill();
+                Ok(pool)
+            }
+            None => Err(last_err.unwrap_or_else(|| {
+                io::Error::new(io::ErrorKind::InvalidInput, "no broker endpoints configured")
+            })),
+        }
     }
 
-    /// Dial the broker, install the chaos plan if one is configured,
-    /// and bound per-call response waits.
+    /// Dial the current broker endpoint, install the chaos plan if one
+    /// is configured, and bound per-call response waits.
     fn dial_ctrl(&mut self, timeout: Duration) -> io::Result<CtrlClient> {
+        let addr = self.cfg.brokers.get(self.broker_idx).ok_or_else(|| {
+            io::Error::new(io::ErrorKind::InvalidInput, "no broker endpoints configured")
+        })?;
         let conn = self.conn_seq;
         self.conn_seq += 1;
         let mut ctrl = match &self.cfg.ctrl_faults {
-            Some(plan) => CtrlClient::connect_faulty(&self.cfg.broker, timeout, plan, conn)?,
-            None => CtrlClient::connect_timeout(&self.cfg.broker, timeout)?,
+            Some(plan) => CtrlClient::connect_faulty(addr, timeout, plan, conn)?,
+            None => CtrlClient::connect_timeout(addr, timeout)?,
         };
         ctrl.set_call_timeout(self.cfg.ctrl_call_timeout)?;
         Ok(ctrl)
+    }
+
+    /// Rotate to the next broker endpoint in the failover list.
+    fn advance_broker(&mut self) {
+        if self.cfg.brokers.len() > 1 {
+            self.broker_idx = (self.broker_idx + 1) % self.cfg.brokers.len();
+            self.stats.broker_failovers.inc();
+        }
     }
 
     pub fn held_slabs(&self) -> u32 {
@@ -325,23 +390,29 @@ impl RemotePool {
         match self.dial_ctrl(DIAL_TIMEOUT) {
             Ok(c) => {
                 self.ctrl = Some(c);
+                self.backoff.reset();
                 true
             }
             Err(_) => {
                 self.stats.control_errors.inc();
-                self.reconnect_after = now + self.cfg.reconnect_backoff;
+                self.reconnect_after = now + self.backoff.next_delay();
+                // Try the next endpoint on the following attempt: an
+                // unreachable primary usually means its standby serves.
+                self.advance_broker();
                 false
             }
         }
     }
 
-    /// A control call failed: the connection is desynced (or the broker
-    /// is wedged). Drop it and back off, so the data path — which runs
+    /// A control call failed: the connection is desynced, the broker is
+    /// wedged, or it answered `NotPrimary`. Drop it, advance to the
+    /// next endpoint, and back off, so the data path — which runs
     /// maintenance inline — pays at most one stall per backoff window.
     fn ctrl_failed(&mut self) {
         self.stats.control_errors.inc();
         self.ctrl = None;
-        self.reconnect_after = Instant::now() + self.cfg.reconnect_backoff;
+        self.reconnect_after = Instant::now() + self.backoff.next_delay();
+        self.advance_broker();
     }
 
     /// Ask the broker for whatever is missing toward the target.
@@ -363,6 +434,12 @@ impl RemotePool {
                 for g in leases {
                     self.add_grant(g, now);
                 }
+            }
+            // A standby answered: this endpoint holds the book but does
+            // not grant. Advance to the next; waiting here (the
+            // NoCapacity treatment) would starve the pool forever.
+            Ok(CtrlResponse::Refused { code: RefuseCode::NotPrimary, .. }) => {
+                self.ctrl_failed();
             }
             Ok(CtrlResponse::Refused { .. }) => {} // NoCapacity: retry later
             Ok(_) => {
@@ -424,6 +501,14 @@ impl RemotePool {
                         if let Some(slot) = self.slots[i].as_mut() {
                             slot.deadline = now + Duration::from_micros(ttl_us);
                         }
+                    }
+                    // `NotPrimary` says nothing about *this lease* —
+                    // the standby simply doesn't serve renews. Killing
+                    // the slot would shed healthy capacity at exactly
+                    // the moment of failover; move brokers instead.
+                    Ok(CtrlResponse::Refused { code: RefuseCode::NotPrimary, .. }) => {
+                        self.ctrl_failed();
+                        break;
                     }
                     Ok(CtrlResponse::Refused { .. }) => {
                         // Refused: expired, revoked, or forgotten — the

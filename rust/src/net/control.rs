@@ -27,6 +27,7 @@
 //! mid-stream, and both sides cap outgoing batches at the pairwise
 //! minimum of the advertised limits.
 
+use crate::market::lease::LeaseEvent;
 use crate::metrics::{HistogramSnapshot, Metric, MetricSet, HIST_BUCKETS};
 use crate::net::faults::{FaultPlan, FaultyStream};
 use crate::net::wire::{
@@ -64,10 +65,13 @@ pub fn connect_with_timeout(addr: &str, timeout: Duration) -> io::Result<TcpStre
 
 /// Version of both wire protocols; bumped by the handshake-introducing
 /// revision (v1 was the pre-handshake data plane, v2 the pre-batching
-/// handshake), by the batch frames + negotiated batch cap (v3), and by
-/// the telemetry spine (v4: heartbeats carry observed data-plane
-/// p99/ops-per-sec, and `StatsQuery`/`Stats` expose live metrics).
-pub const PROTOCOL_VERSION: u16 = 4;
+/// handshake), by the batch frames + negotiated batch cap (v3), by the
+/// telemetry spine (v4: heartbeats carry observed data-plane
+/// p99/ops-per-sec, and `StatsQuery`/`Stats` expose live metrics), and
+/// by broker failover (v5: `ReplicaPoll`/`ReplicaEvents` replication
+/// frames and the `NotPrimary` refusal a standby answers market verbs
+/// with).
+pub const PROTOCOL_VERSION: u16 = 5;
 /// Hello magic of the broker control plane.
 pub const CONTROL_MAGIC: [u8; 4] = *b"MTCP";
 /// Hello magic of the producer-store data plane.
@@ -196,6 +200,10 @@ pub enum RefuseCode {
     UnknownProducer,
     NoCapacity,
     Malformed,
+    /// This endpoint is a warm standby (v5): it replicates the primary's
+    /// lease log but grants nothing until takeover. Clients advance to
+    /// the next endpoint in their broker list instead of retrying here.
+    NotPrimary,
 }
 
 impl RefuseCode {
@@ -208,6 +216,7 @@ impl RefuseCode {
             RefuseCode::UnknownProducer => 5,
             RefuseCode::NoCapacity => 6,
             RefuseCode::Malformed => 7,
+            RefuseCode::NotPrimary => 8,
         }
     }
 
@@ -220,6 +229,7 @@ impl RefuseCode {
             5 => RefuseCode::UnknownProducer,
             6 => RefuseCode::NoCapacity,
             7 => RefuseCode::Malformed,
+            8 => RefuseCode::NotPrimary,
             t => return Err(CodecError::UnknownTag(t)),
         })
     }
@@ -290,6 +300,11 @@ pub enum CtrlRequest {
     /// broker (market + per-producer observed telemetry) and by each
     /// producer agent's stats endpoint; `memtrade top` polls it.
     StatsQuery,
+    /// Standby -> primary (v5): pull lease-log events from `from_seq`
+    /// onward, at most `max` per answer. Pull keeps the primary's serve
+    /// loop request/response like every other verb — no push channel,
+    /// no replication-specific connection state.
+    ReplicaPoll { from_seq: u64, max: u32 },
 }
 
 /// Broker -> participant control responses.
@@ -316,6 +331,13 @@ pub enum CtrlResponse {
     Deregistered { producer: u64 },
     /// Live metrics snapshot answering a [`CtrlRequest::StatsQuery`].
     Stats { uptime_us: u64, metrics: MetricSet },
+    /// Lease-log slice answering a [`CtrlRequest::ReplicaPoll`] (v5).
+    /// `first_seq` is the sequence of `events[0]` — or, with no events,
+    /// the next sequence the log will assign. A `first_seq` above the
+    /// polled `from_seq` means the primary compacted that span away; the
+    /// standby tolerates the gap (re-registration at takeover repairs
+    /// whatever it missed) and resumes from `first_seq`.
+    ReplicaEvents { first_seq: u64, events: Vec<LeaseEvent> },
     Refused { code: RefuseCode, detail: String },
 }
 
@@ -327,6 +349,7 @@ const TAG_RELEASE: u8 = 68;
 const TAG_REVOKE: u8 = 69;
 const TAG_DEREGISTER: u8 = 70;
 const TAG_STATS_QUERY: u8 = 71;
+const TAG_REPLICA_POLL: u8 = 72;
 
 const TAG_REGISTERED: u8 = 80;
 const TAG_HEARTBEAT_ACK: u8 = 81;
@@ -337,6 +360,7 @@ const TAG_REVOKED: u8 = 85;
 const TAG_DEREGISTERED: u8 = 86;
 const TAG_REFUSED: u8 = 87;
 const TAG_STATS: u8 = 88;
+const TAG_REPLICA_EVENTS: u8 = 89;
 
 /// Wire kind bytes of one [`Metric`] inside a metric set.
 const METRIC_COUNTER: u8 = 1;
@@ -489,6 +513,96 @@ impl ProducerGrant {
     }
 }
 
+/// Wire kind bytes of one [`LeaseEvent`] inside a replica answer.
+const EVENT_GRANTED: u8 = 1;
+const EVENT_RENEWED: u8 = 2;
+const EVENT_RELEASED: u8 = 3;
+const EVENT_REVOKED: u8 = 4;
+const EVENT_EXPIRED: u8 = 5;
+const EVENT_PRODUCER_UP: u8 = 6;
+const EVENT_PRODUCER_DOWN: u8 = 7;
+
+/// Append one [`LeaseEvent`]: a kind byte, then kind-specific fields.
+/// Lifetimes travel as remaining TTLs like every other control frame,
+/// so the standby needs no clock agreement with the primary.
+fn put_lease_event(out: &mut Vec<u8>, ev: &LeaseEvent) {
+    match ev {
+        LeaseEvent::Granted {
+            lease,
+            consumer,
+            producer,
+            slabs,
+            slab_bytes,
+            price_nd_per_slab_hour,
+            ttl_us,
+        } => {
+            out.push(EVENT_GRANTED);
+            out.extend_from_slice(&lease.to_le_bytes());
+            out.extend_from_slice(&consumer.to_le_bytes());
+            out.extend_from_slice(&producer.to_le_bytes());
+            out.extend_from_slice(&slabs.to_le_bytes());
+            out.extend_from_slice(&slab_bytes.to_le_bytes());
+            out.extend_from_slice(&price_nd_per_slab_hour.to_le_bytes());
+            out.extend_from_slice(&ttl_us.to_le_bytes());
+        }
+        LeaseEvent::Renewed { lease, ttl_us } => {
+            out.push(EVENT_RENEWED);
+            out.extend_from_slice(&lease.to_le_bytes());
+            out.extend_from_slice(&ttl_us.to_le_bytes());
+        }
+        LeaseEvent::Released { lease } => {
+            out.push(EVENT_RELEASED);
+            out.extend_from_slice(&lease.to_le_bytes());
+        }
+        LeaseEvent::Revoked { lease } => {
+            out.push(EVENT_REVOKED);
+            out.extend_from_slice(&lease.to_le_bytes());
+        }
+        LeaseEvent::Expired { lease } => {
+            out.push(EVENT_EXPIRED);
+            out.extend_from_slice(&lease.to_le_bytes());
+        }
+        LeaseEvent::ProducerUp { producer, endpoint, capacity_gb } => {
+            out.push(EVENT_PRODUCER_UP);
+            out.extend_from_slice(&producer.to_le_bytes());
+            put_bytes(out, endpoint.as_bytes());
+            put_f32(out, *capacity_gb);
+        }
+        LeaseEvent::ProducerDown { producer } => {
+            out.push(EVENT_PRODUCER_DOWN);
+            out.extend_from_slice(&producer.to_le_bytes());
+        }
+    }
+}
+
+fn take_lease_event(buf: &[u8], off: &mut usize) -> Result<LeaseEvent, CodecError> {
+    Ok(match take_u8(buf, off)? {
+        EVENT_GRANTED => LeaseEvent::Granted {
+            lease: take_u64(buf, off)?,
+            consumer: take_u64(buf, off)?,
+            producer: take_u64(buf, off)?,
+            slabs: take_u32(buf, off)?,
+            slab_bytes: take_u64(buf, off)?,
+            price_nd_per_slab_hour: take_i64(buf, off)?,
+            ttl_us: take_u64(buf, off)?,
+        },
+        EVENT_RENEWED => LeaseEvent::Renewed {
+            lease: take_u64(buf, off)?,
+            ttl_us: take_u64(buf, off)?,
+        },
+        EVENT_RELEASED => LeaseEvent::Released { lease: take_u64(buf, off)? },
+        EVENT_REVOKED => LeaseEvent::Revoked { lease: take_u64(buf, off)? },
+        EVENT_EXPIRED => LeaseEvent::Expired { lease: take_u64(buf, off)? },
+        EVENT_PRODUCER_UP => LeaseEvent::ProducerUp {
+            producer: take_u64(buf, off)?,
+            endpoint: take_string(buf, off)?,
+            capacity_gb: take_f32(buf, off)?,
+        },
+        EVENT_PRODUCER_DOWN => LeaseEvent::ProducerDown { producer: take_u64(buf, off)? },
+        t => return Err(CodecError::UnknownTag(t)),
+    })
+}
+
 impl CtrlRequest {
     /// Append the encoded payload to `out` (does not clear it).
     pub fn encode_into(&self, out: &mut Vec<u8>) {
@@ -545,6 +659,11 @@ impl CtrlRequest {
                 out.extend_from_slice(&producer.to_le_bytes());
             }
             CtrlRequest::StatsQuery => out.push(TAG_STATS_QUERY),
+            CtrlRequest::ReplicaPoll { from_seq, max } => {
+                out.push(TAG_REPLICA_POLL);
+                out.extend_from_slice(&from_seq.to_le_bytes());
+                out.extend_from_slice(&max.to_le_bytes());
+            }
         }
     }
 
@@ -596,6 +715,10 @@ impl CtrlRequest {
             },
             TAG_DEREGISTER => CtrlRequest::Deregister { producer: take_u64(buf, o)? },
             TAG_STATS_QUERY => CtrlRequest::StatsQuery,
+            TAG_REPLICA_POLL => CtrlRequest::ReplicaPoll {
+                from_seq: take_u64(buf, o)?,
+                max: take_u32(buf, o)?,
+            },
             t => return Err(CodecError::UnknownTag(t)),
         };
         finish(req, buf, off)
@@ -651,6 +774,14 @@ impl CtrlResponse {
                 out.push(TAG_STATS);
                 out.extend_from_slice(&uptime_us.to_le_bytes());
                 put_metric_set(out, metrics);
+            }
+            CtrlResponse::ReplicaEvents { first_seq, events } => {
+                out.push(TAG_REPLICA_EVENTS);
+                out.extend_from_slice(&first_seq.to_le_bytes());
+                out.extend_from_slice(&(events.len() as u32).to_le_bytes());
+                for ev in events {
+                    put_lease_event(out, ev);
+                }
             }
             CtrlResponse::Refused { code, detail } => {
                 out.push(TAG_REFUSED);
@@ -722,6 +853,21 @@ impl CtrlResponse {
                 uptime_us: take_u64(buf, o)?,
                 metrics: take_metric_set(buf, o)?,
             },
+            TAG_REPLICA_EVENTS => {
+                let first_seq = take_u64(buf, o)?;
+                // Per-event wire floor is 9 bytes (kind + one u64 id),
+                // so a hostile count can't reserve more than the frame
+                // could hold.
+                let n = take_u32(buf, o)? as usize;
+                if n > buf.len() / 9 {
+                    return Err(CodecError::Truncated);
+                }
+                let mut events = Vec::with_capacity(n);
+                for _ in 0..n {
+                    events.push(take_lease_event(buf, o)?);
+                }
+                CtrlResponse::ReplicaEvents { first_seq, events }
+            }
             TAG_REFUSED => CtrlResponse::Refused {
                 code: RefuseCode::from_byte(take_u8(buf, o)?)?,
                 detail: take_string(buf, o)?,
@@ -842,6 +988,7 @@ mod tests {
             CtrlRequest::Revoke { producer: 7, lease: 5 },
             CtrlRequest::Deregister { producer: 7 },
             CtrlRequest::StatsQuery,
+            CtrlRequest::ReplicaPoll { from_seq: 42, max: 256 },
         ];
         for req in cases {
             let enc = req.encode();
@@ -888,7 +1035,33 @@ mod tests {
                     m
                 },
             },
+            CtrlResponse::ReplicaEvents {
+                first_seq: 17,
+                events: vec![
+                    LeaseEvent::Granted {
+                        lease: 3,
+                        consumer: 9,
+                        producer: 7,
+                        slabs: 4,
+                        slab_bytes: 64 << 20,
+                        price_nd_per_slab_hour: 42_000,
+                        ttl_us: 5_000_000,
+                    },
+                    LeaseEvent::Renewed { lease: 3, ttl_us: 5_000_000 },
+                    LeaseEvent::Released { lease: 3 },
+                    LeaseEvent::Revoked { lease: 4 },
+                    LeaseEvent::Expired { lease: 5 },
+                    LeaseEvent::ProducerUp {
+                        producer: 7,
+                        endpoint: "10.0.0.2:7077".into(),
+                        capacity_gb: 31.5,
+                    },
+                    LeaseEvent::ProducerDown { producer: 7 },
+                ],
+            },
+            CtrlResponse::ReplicaEvents { first_seq: 0, events: vec![] },
             CtrlResponse::Refused { code: RefuseCode::LeaseExpired, detail: "late".into() },
+            CtrlResponse::Refused { code: RefuseCode::NotPrimary, detail: "standby".into() },
         ];
         for resp in cases {
             let enc = resp.encode();
@@ -943,6 +1116,23 @@ mod tests {
     }
 
     #[test]
+    fn replica_events_decode_bounds_hostile_counts() {
+        // A tiny frame declaring 2^32-1 events must be refused before
+        // any event list is reserved.
+        let mut buf = vec![TAG_REPLICA_EVENTS];
+        buf.extend_from_slice(&0u64.to_le_bytes());
+        buf.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert_eq!(CtrlResponse::decode(&buf), Err(CodecError::Truncated));
+        // An unknown event kind is an error, not a skip.
+        let mut buf = vec![TAG_REPLICA_EVENTS];
+        buf.extend_from_slice(&0u64.to_le_bytes());
+        buf.extend_from_slice(&1u32.to_le_bytes());
+        buf.push(99);
+        buf.extend_from_slice(&7u64.to_le_bytes());
+        assert_eq!(CtrlResponse::decode(&buf), Err(CodecError::UnknownTag(99)));
+    }
+
+    #[test]
     fn hello_mismatch_names_planes() {
         let err = check_hello(&hello_payload(DATA_MAGIC), CONTROL_MAGIC).unwrap_err();
         assert!(err.contains("data plane"), "{err}");
@@ -964,7 +1154,7 @@ mod tests {
         old.extend_from_slice(&2u16.to_le_bytes());
         let err = check_hello(&old, DATA_MAGIC).unwrap_err();
         assert!(err.contains("v2"), "{err}");
-        assert!(err.contains("requires v4"), "{err}");
+        assert!(err.contains("requires v5"), "{err}");
         // A current-versioned hello of the wrong shape is named malformed.
         let mut bad = hello_payload(DATA_MAGIC).to_vec();
         bad.push(0);

@@ -1,0 +1,131 @@
+//! Capped exponential backoff with seeded jitter, for every reconnect
+//! loop in the marketplace.
+//!
+//! A fixed retry delay has two failure modes this module exists to
+//! kill: it is either too long (a consumer pool that waits 10s to
+//! re-dial a broker that restarted in 100ms) or, worse, synchronized —
+//! at a broker failover every agent and pool in the fleet notices the
+//! dead primary within one heartbeat of each other, and with a fixed
+//! delay they all hammer the standby at the same instant, repeatedly.
+//! The schedule here doubles a per-attempt window up to a cap and
+//! draws the actual delay uniformly from the window's upper half
+//! ("equal jitter"), so retries stay prompt early, bounded late, and
+//! de-correlated across clients seeded differently.
+//!
+//! The schedule is clock-free — it returns [`Duration`]s and never
+//! sleeps — so callers own the waiting and tests assert the exact
+//! sequence deterministically.
+
+use crate::util::rng::Rng;
+use std::time::Duration;
+
+/// Deterministic capped-exponential backoff schedule.
+pub struct Backoff {
+    base_us: u64,
+    cap_us: u64,
+    rng: Rng,
+    attempt: u32,
+}
+
+impl Backoff {
+    /// A schedule starting at `base` and doubling per attempt up to
+    /// `cap`. Jitter is drawn from `seed`: clients seeded differently
+    /// (e.g. by participant id) spread out even when they start
+    /// retrying at the same instant.
+    pub fn new(base: Duration, cap: Duration, seed: u64) -> Self {
+        Backoff {
+            base_us: (base.as_micros() as u64).max(1),
+            cap_us: (cap.as_micros() as u64).max(1),
+            rng: Rng::new(seed),
+            attempt: 0,
+        }
+    }
+
+    /// The delay to wait before the next attempt; each call advances
+    /// the schedule. The `n`-th delay (0-based) lies in
+    /// `[w/2, w]` where `w = min(base << n, cap)` — never below half
+    /// the window (prompt-but-spread), never above the cap.
+    pub fn next_delay(&mut self) -> Duration {
+        // Stop shifting once the window has surely reached the cap;
+        // `checked_shl`-style guard against `base << 63` overflow.
+        let shift = self.attempt.min(32);
+        let window = self.base_us.saturating_mul(1u64 << shift).min(self.cap_us);
+        self.attempt = self.attempt.saturating_add(1);
+        let half = window / 2;
+        Duration::from_micros(half + self.rng.below(window - half + 1))
+    }
+
+    /// Back to the first-attempt window after a success; the jitter
+    /// stream keeps advancing (re-correlating the fleet on every
+    /// success would defeat the point).
+    pub fn reset(&mut self) {
+        self.attempt = 0;
+    }
+
+    /// Attempts since the last [`Self::reset`].
+    pub fn attempts(&self) -> u32 {
+        self.attempt
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MS: u64 = 1_000;
+
+    fn schedule(seed: u64, n: usize) -> Vec<u64> {
+        let mut b = Backoff::new(Duration::from_millis(100), Duration::from_secs(5), seed);
+        (0..n).map(|_| b.next_delay().as_micros() as u64).collect()
+    }
+
+    #[test]
+    fn delays_grow_exponentially_within_jitter_bounds_then_cap() {
+        let delays = schedule(7, 12);
+        for (i, d) in delays.iter().enumerate() {
+            let window = (100 * MS << i.min(32)).min(5_000 * MS);
+            assert!(*d >= window / 2, "attempt {i}: {d} below {}", window / 2);
+            assert!(*d <= window, "attempt {i}: {d} above {window}");
+        }
+        // By attempt 6 (100ms << 6 = 6.4s) the window is the 5s cap.
+        for (i, d) in delays.iter().enumerate().skip(6) {
+            assert!(*d >= 2_500 * MS && *d <= 5_000 * MS, "attempt {i}: {d}");
+        }
+    }
+
+    #[test]
+    fn schedule_is_deterministic_per_seed_and_spread_across_seeds() {
+        assert_eq!(schedule(7, 8), schedule(7, 8));
+        // Two clients seeded differently never retry in lockstep for
+        // a whole schedule (the anti-thundering-herd property).
+        assert_ne!(schedule(7, 8), schedule(8, 8));
+    }
+
+    #[test]
+    fn reset_restarts_the_window_without_replaying_jitter() {
+        let mut b = Backoff::new(Duration::from_millis(100), Duration::from_secs(5), 7);
+        for _ in 0..5 {
+            b.next_delay();
+        }
+        assert_eq!(b.attempts(), 5);
+        b.reset();
+        assert_eq!(b.attempts(), 0);
+        let d = b.next_delay().as_micros() as u64;
+        assert!((50 * MS..=100 * MS).contains(&d), "post-reset delay {d}");
+    }
+
+    #[test]
+    fn degenerate_configs_stay_sane() {
+        // base > cap: every delay clamps into the cap window.
+        let mut b = Backoff::new(Duration::from_secs(10), Duration::from_secs(1), 3);
+        for _ in 0..4 {
+            let d = b.next_delay();
+            assert!(d >= Duration::from_millis(500) && d <= Duration::from_secs(1));
+        }
+        // Zero base: still advances (1µs floor), never panics.
+        let mut b = Backoff::new(Duration::ZERO, Duration::ZERO, 3);
+        for _ in 0..70 {
+            assert!(b.next_delay() <= Duration::from_micros(1));
+        }
+    }
+}

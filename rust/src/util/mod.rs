@@ -1,9 +1,11 @@
 //! Foundational utilities built from scratch (no external deps): a fast
 //! deterministic RNG with the samplers the workloads need, the windowed
 //! order-statistics tree the harvester's p99 estimators use, streaming
-//! statistics, a token-bucket rate limiter, and time-series helpers.
+//! statistics, a token-bucket rate limiter, time-series helpers, and a
+//! jittered exponential-backoff schedule for reconnect loops.
 
 pub mod avl;
+pub mod backoff;
 pub mod bench;
 pub mod fmt;
 pub mod hash;
@@ -13,6 +15,7 @@ pub mod timeseries;
 pub mod token_bucket;
 
 pub use avl::WindowedDist;
+pub use backoff::Backoff;
 pub use rng::Rng;
 pub use stats::{Histogram, LatencyRecorder, Summary};
 pub use timeseries::TimeSeries;

@@ -113,6 +113,32 @@ fn chaos_marketplace_renew_vs_revoke_race() {
 }
 
 #[test]
+fn chaos_marketplace_failover_takeover() {
+    // Kill the primary broker mid-run with a warm standby replicating
+    // its lease-event log. Beyond the shared invariants (no lost acked
+    // writes, zero escapes, reconvergence), the standby must have taken
+    // over exactly once — `Some(0)` means clients reconverged against
+    // nothing, which the invariant check already rejects.
+    for seed in [701, 702] {
+        let o = run_marketplace_schedule(seed, ChaosMix::failover());
+        assert_invariants(&o);
+        assert_eq!(o.broker_takeovers, Some(1), "seed {seed}: takeovers {:?}", o.broker_takeovers);
+        assert!(o.ops > 0, "no traffic survived the failover (seed {seed})");
+    }
+}
+
+#[test]
+fn chaos_marketplace_failover_under_data_faults() {
+    // Failover while the data plane is also faulty: the promoted
+    // standby's re-registered producers keep serving through the same
+    // fault schedules, and the integrity envelope still catches every
+    // corruption.
+    let o = run_marketplace_schedule(801, ChaosMix::from_name("data+failover").unwrap());
+    assert_invariants(&o);
+    assert_eq!(o.broker_takeovers, Some(1), "takeovers {:?}", o.broker_takeovers);
+}
+
+#[test]
 fn chaos_marketplace_standard_mix() {
     // Everything at once: control + data faults, Byzantine producer,
     // mid-run kill, revocation race.

@@ -47,7 +47,7 @@ fn server_cfg() -> BrokerServerConfig {
 fn start_agent(broker: &BrokerServer, id: u64, capacity: u64) -> ProducerAgent {
     ProducerAgent::start(ProducerAgentConfig {
         producer: id,
-        broker: broker.addr().to_string(),
+        brokers: vec![broker.addr().to_string()],
         data_addr: "127.0.0.1:0".to_string(),
         advertise: None,
         capacity_bytes: capacity,
@@ -83,7 +83,7 @@ fn marketplace_survives_producer_failure() {
     // Lease more than one producer can hold, so slots span both.
     let mut pool = RemotePool::connect(RemotePoolConfig {
         consumer: 9,
-        broker: broker.addr().to_string(),
+        brokers: vec![broker.addr().to_string()],
         target_slabs: 24,
         min_slabs: 1,
         lease_ttl: Duration::from_millis(900),
@@ -213,7 +213,7 @@ fn pool_batches_fan_out_per_producer_and_degrade_per_op_on_kill() {
         vec![start_agent(&broker, 1, 16 * SLAB), start_agent(&broker, 2, 16 * SLAB)];
     let mut pool = RemotePool::connect(RemotePoolConfig {
         consumer: 11,
-        broker: broker.addr().to_string(),
+        brokers: vec![broker.addr().to_string()],
         target_slabs: 24,
         min_slabs: 1,
         lease_ttl: Duration::from_secs(10),
@@ -370,7 +370,7 @@ fn zero_live_slots_put_get_delete_are_recorded_misses() {
     // No producers registered: the pool connects but holds nothing.
     let mut pool = RemotePool::connect(RemotePoolConfig {
         consumer: 9,
-        broker: broker.addr().to_string(),
+        brokers: vec![broker.addr().to_string()],
         target_slabs: 4,
         ..Default::default()
     })
@@ -481,7 +481,7 @@ fn stalled_producer_surfaces_as_bounded_miss_not_a_wedge() {
 
     let mut pool = RemotePool::connect(RemotePoolConfig {
         consumer: 9,
-        broker: broker.addr().to_string(),
+        brokers: vec![broker.addr().to_string()],
         target_slabs: 4,
         lease_ttl: Duration::from_secs(10),
         renew_margin: Duration::from_secs(2),
@@ -553,7 +553,7 @@ fn mismatched_control_response_drops_the_connection() {
 
     let mut pool = RemotePool::connect(RemotePoolConfig {
         consumer: 9,
-        broker: addr.to_string(),
+        brokers: vec![addr.to_string()],
         target_slabs: 4,
         ..Default::default()
     })

@@ -265,6 +265,123 @@ fn prop_forecast_safe_never_exceeds_capacity() {
 }
 
 #[test]
+fn prop_lease_log_prefix_then_suffix_replay_equals_whole_log() {
+    // The warm-standby contract: a replica that applied a log prefix,
+    // drained its accounting queues (sweeps, billing, producer acks —
+    // everything a live standby does between polls), and then applied
+    // the suffix must hold the same *active* lease book as a replica
+    // that replayed the whole log in one sitting. Event timestamps are
+    // identical on both sides (the wire carries remaining TTLs, so
+    // apply time is what sets expiries).
+    use memtrade::market::{LeaseEvent, LeaseTable};
+
+    // Normalized projection of the live book: terminal records are
+    // garbage-collected by producer acks, so only active leases are
+    // comparable — and they are exactly what a takeover must preserve.
+    fn active_snapshot(t: &LeaseTable) -> Vec<(u64, u64, u64, u32, u64, u64)> {
+        let mut v: Vec<_> = t
+            .active()
+            .map(|l| (l.id, l.consumer, l.producer, l.slabs, l.slab_bytes, l.expiry_us))
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    let mut rng = Rng::new(112);
+    for case in 0..150 {
+        let n = 20 + rng.below(180) as usize;
+        let mut now = 0u64;
+        // Grant ids are monotone, like the real grantor's — an id is
+        // never reissued. Non-grant events target a granted id most of
+        // the time and occasionally an unknown one (a log gap).
+        let mut next_lease = 0u64;
+        let mut log: Vec<(u64, LeaseEvent)> = Vec::with_capacity(n);
+        for _ in 0..n {
+            now += rng.below(400);
+            let lease = if next_lease == 0 || rng.below(10) == 0 {
+                next_lease + 1 + rng.below(5) // unknown / gapped id
+            } else {
+                1 + rng.below(next_lease)
+            };
+            let ev = match rng.below(10) {
+                0..=3 => {
+                    next_lease += 1;
+                    LeaseEvent::Granted {
+                        lease: next_lease,
+                        consumer: 100 + rng.below(6),
+                        producer: 1 + rng.below(4),
+                        slabs: 1 + rng.below(8) as u32,
+                        slab_bytes: 1 << 20,
+                        price_nd_per_slab_hour: rng.below(1_000) as i64,
+                        ttl_us: 200 + rng.below(3_000),
+                    }
+                }
+                4..=5 => LeaseEvent::Renewed { lease, ttl_us: 200 + rng.below(3_000) },
+                6 => LeaseEvent::Released { lease },
+                7 => LeaseEvent::Revoked { lease },
+                8 => LeaseEvent::Expired { lease },
+                _ => {
+                    let producer = 1 + rng.below(4);
+                    if rng.below(2) == 0 {
+                        LeaseEvent::ProducerUp {
+                            producer,
+                            endpoint: format!("127.0.0.1:{}", 7000 + producer),
+                            capacity_gb: 1.0,
+                        }
+                    } else {
+                        LeaseEvent::ProducerDown { producer }
+                    }
+                }
+            };
+            log.push((now, ev));
+        }
+
+        let mut whole = LeaseTable::default();
+        for (t, ev) in &log {
+            whole.apply_event(ev, *t);
+        }
+
+        let split = rng.below(log.len() as u64 + 1) as usize;
+        let mut pieced = LeaseTable::default();
+        for (t, ev) in &log[..split] {
+            pieced.apply_event(ev, *t);
+        }
+        // Everything a live standby does between replication polls.
+        let t_split = log.get(split.saturating_sub(1)).map(|(t, _)| *t).unwrap_or(0);
+        let _ = pieced.sweep_expired(t_split);
+        let _ = pieced.take_ended();
+        for producer in 1..=4 {
+            let _ = pieced.take_ended_unacked(producer);
+        }
+        for (t, ev) in &log[split..] {
+            pieced.apply_event(ev, *t);
+        }
+
+        // Lapse what is overdue on both sides before comparing: the
+        // mid-replay sweep already expired some of `pieced`'s book, and
+        // parity means `whole` expires exactly the same leases when its
+        // own sweep runs.
+        let _ = whole.sweep_expired(now);
+        let _ = pieced.sweep_expired(now);
+
+        assert_eq!(
+            active_snapshot(&whole),
+            active_snapshot(&pieced),
+            "case {case}: split {split}/{} diverged",
+            log.len()
+        );
+        assert_eq!(whole.active_count(), pieced.active_count(), "case {case}");
+        for producer in 1..=4u64 {
+            assert_eq!(
+                whole.producer_target_bytes(producer),
+                pieced.producer_target_bytes(producer),
+                "case {case}: producer {producer} target bytes diverged"
+            );
+        }
+    }
+}
+
+#[test]
 fn prop_wire_codec_round_trip_random() {
     use memtrade::net::wire::{Request, Response};
     let mut rng = Rng::new(110);

@@ -45,7 +45,7 @@ fn start_agent(
 ) -> ProducerAgent {
     ProducerAgent::start(ProducerAgentConfig {
         producer: id,
-        broker: broker.addr().to_string(),
+        brokers: vec![broker.addr().to_string()],
         data_addr: "127.0.0.1:0".to_string(),
         capacity_bytes: capacity,
         heartbeat: Duration::from_millis(50),
@@ -74,7 +74,7 @@ fn stats_query_reports_live_per_producer_telemetry() {
     // traffic reaches both data planes.
     let mut pool = RemotePool::connect(RemotePoolConfig {
         consumer: 9,
-        broker: broker.addr().to_string(),
+        brokers: vec![broker.addr().to_string()],
         target_slabs: 24,
         min_slabs: 1,
         lease_ttl: Duration::from_secs(10),
