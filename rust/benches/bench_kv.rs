@@ -11,6 +11,7 @@
 
 use memtrade::kv::{KvStore, ShardedKvStore};
 use memtrade::metrics::Histogram;
+use memtrade::trace::{self, Op, Role, SpanGuard};
 use memtrade::util::bench::{bench, header, run_for as bench_run_for, smoke};
 use memtrade::util::rng::Rng;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -18,8 +19,15 @@ use std::sync::{Arc, Barrier};
 use std::time::{Duration, Instant};
 
 /// Mixed 90% GET / 10% PUT hammer over a preloaded sharded store.
-/// Returns aggregate ops/sec across `n_threads` worker threads.
-fn hammer_ops_per_sec(n_shards: usize, n_threads: usize, run_for: Duration) -> f64 {
+/// Returns aggregate ops/sec across `n_threads` worker threads. With
+/// `traced`, every op runs under a root span — the tracing-overhead
+/// gate measures this against `trace::set_enabled(false)`.
+fn hammer_ops_per_sec(
+    n_shards: usize,
+    n_threads: usize,
+    run_for: Duration,
+    traced: bool,
+) -> f64 {
     const KEYS: u64 = 20_000;
     let store = Arc::new(ShardedKvStore::new(256 << 20, n_shards, 1));
     let value = vec![0xAB_u8; 1024];
@@ -41,7 +49,11 @@ fn hammer_ops_per_sec(n_shards: usize, n_threads: usize, run_for: Duration) -> f
                 barrier.wait();
                 while !stop.load(Ordering::Relaxed) {
                     let key = format!("user{}", rng.below(KEYS));
-                    if rng.below(10) < 9 {
+                    let get = rng.below(10) < 9;
+                    let _span = traced.then(|| {
+                        SpanGuard::root(Role::Producer, if get { Op::Get } else { Op::Put })
+                    });
+                    if get {
                         std::hint::black_box(store.get_into(key.as_bytes(), &mut buf));
                     } else {
                         std::hint::black_box(store.put(key.as_bytes(), &value));
@@ -160,17 +172,34 @@ fn main() {
         println!("\n(smoke mode: shortened measurement windows)");
     }
     println!("\n== bench: sharded hammer (90/10 GET/PUT, 1KB, {threads} threads) ==");
-    let single = hammer_ops_per_sec(1, threads, run_for);
+    let single = hammer_ops_per_sec(1, threads, run_for, false);
     println!("{:<48} {:>14.0} ops/s", "hammer/1-shard (global mutex baseline)", single);
-    let multi = hammer_ops_per_sec(shards, threads, run_for);
+    let multi = hammer_ops_per_sec(shards, threads, run_for, false);
     println!("{:<48} {:>14.0} ops/s", format!("hammer/{shards}-shards"), multi);
     println!("{:<48} {:>13.2}x", "speedup", multi / single);
+
+    // --- Tracing overhead: the same sharded hammer with a root span
+    // around every op, recording globally disabled vs enabled. CI gates
+    // the delta at ≤ 3% — the cost of always-on tracing must stay in
+    // the noise of the data path it observes.
+    println!("\n== bench: tracing overhead (per-op root span, {shards} shards) ==");
+    trace::set_enabled(false);
+    let untraced = hammer_ops_per_sec(shards, threads, run_for, true);
+    trace::set_enabled(true);
+    let traced = hammer_ops_per_sec(shards, threads, run_for, true);
+    let tracing_overhead_pct = ((untraced - traced) / untraced * 100.0).max(0.0);
+    println!("{:<48} {:>14.0} ops/s", "hammer/tracing-disabled", untraced);
+    println!("{:<48} {:>14.0} ops/s", "hammer/tracing-enabled", traced);
+    println!("{:<48} {:>13.2}%", "tracing overhead", tracing_overhead_pct);
 
     let json = format!(
         "{{\n  \"bench\": \"kv_sharded_hammer\",\n  \"threads\": {threads},\n  \
          \"value_bytes\": 1024,\n  \"get_fraction\": 0.9,\n  \
          \"single_shard_ops_per_sec\": {single:.0},\n  \"shards\": {shards},\n  \
          \"sharded_ops_per_sec\": {multi:.0},\n  \"speedup\": {:.3},\n  \
+         \"untraced_ops_per_sec\": {untraced:.0},\n  \
+         \"traced_ops_per_sec\": {traced:.0},\n  \
+         \"tracing_overhead_pct\": {tracing_overhead_pct:.2},\n  \
          \"get_hit_mean_ns\": {:.1},\n  \"latency\": {{\n    \
          \"source\": \"metrics-histogram\",\n    \"unit\": \"ns\",\n    \
          \"samples\": {},\n    \"get_hit_p50\": {:.1},\n    \

@@ -11,6 +11,7 @@
 use crate::crypto::secure::{Envelope, OpenError, Sealed, SealedValue};
 use crate::metrics::{scoped, Histogram, MetricSet, Observe};
 use crate::net::wire::{Request, Response};
+use crate::trace::{self, Op as TraceOp, Role, SpanGuard, Status};
 use std::collections::{BTreeMap, HashMap};
 use std::time::Instant;
 
@@ -211,6 +212,10 @@ impl SecureKv {
     /// The store is chosen by the transport's [`KvTransport::route_put`]
     /// (default: our round-robin cursor).
     pub fn put<T: KvTransport>(&mut self, t: &mut T, key: &[u8], value: &[u8]) -> bool {
+        // Every public op opens a fresh trace: the root span that the
+        // seal/wire/shard child spans (and the data frames' trace-context
+        // suffix) all chain back to.
+        let mut root = SpanGuard::root(Role::Consumer, TraceOp::Put);
         let t_op = Instant::now();
         self.stats.puts += 1;
         let hint = self.next_producer % self.n_producers;
@@ -234,6 +239,9 @@ impl SecureKv {
                 false
             }
         };
+        if !stored {
+            root.set_status(Status::Error);
+        }
         self.telemetry.op_us.record_elapsed_us(t_op);
         stored
     }
@@ -241,12 +249,14 @@ impl SecureKv {
     /// GET (paper §6.1): local metadata lookup, fetch under K_P, verify
     /// hash, decrypt. A failed verification discards the value (miss).
     pub fn get<T: KvTransport>(&mut self, t: &mut T, key: &[u8]) -> Option<Vec<u8>> {
+        let mut root = SpanGuard::root(Role::Consumer, TraceOp::Get);
         let t_op = Instant::now();
         self.stats.gets += 1;
         let meta = match self.metadata.get(key) {
             Some(m) => m.clone(),
             None => {
                 self.stats.misses += 1;
+                root.set_status(Status::Miss);
                 self.telemetry.op_us.record_elapsed_us(t_op);
                 return None;
             }
@@ -263,10 +273,14 @@ impl SecureKv {
                         Some(v)
                     }
                     Err(OpenError::BadHash) | Err(OpenError::BadCiphertext) => {
-                        // Corrupted by the untrusted producer: discard.
+                        // Corrupted by the untrusted producer: discard,
+                        // and dump the flight recorder — the saved spans
+                        // name the producer that served the bad bytes.
                         self.stats.integrity_failures += 1;
                         self.stats.misses += 1;
                         self.metadata.remove(key);
+                        root.set_status(Status::Error);
+                        trace::dump("consumer", "integrity");
                         None
                     }
                 }
@@ -274,12 +288,14 @@ impl SecureKv {
             Response::Throttled { .. } => {
                 self.stats.throttled += 1;
                 self.stats.misses += 1;
+                root.set_status(Status::Miss);
                 None
             }
             _ => {
                 // Evicted at the producer (or lease gone): drop metadata.
                 self.stats.misses += 1;
                 self.metadata.remove(key);
+                root.set_status(Status::Miss);
                 None
             }
         };
@@ -298,6 +314,7 @@ impl SecureKv {
     /// shares no nonces), and a miss, tamper, or throttle on one key
     /// never fails its siblings.
     pub fn multi_get<T: KvTransport>(&mut self, t: &mut T, keys: &[&[u8]]) -> Vec<Option<Vec<u8>>> {
+        let mut root = SpanGuard::root(Role::Consumer, TraceOp::MultiGet);
         let mut results: Vec<Option<Vec<u8>>> = vec![None; keys.len()];
         self.stats.gets += keys.len() as u64;
         // Group by producer; BTreeMap so the fan-out order is
@@ -333,6 +350,8 @@ impl SecureKv {
                                 self.stats.integrity_failures += 1;
                                 self.stats.misses += 1;
                                 self.metadata.remove(keys[i]);
+                                root.set_status(Status::Error);
+                                trace::dump("consumer", "integrity");
                             }
                         }
                     }
@@ -362,6 +381,7 @@ impl SecureKv {
     /// via [`KvTransport::route_put`] exactly like [`Self::put`], then
     /// grouped per producer into one `call_multi` each.
     pub fn multi_put<T: KvTransport>(&mut self, t: &mut T, items: &[(&[u8], &[u8])]) -> Vec<bool> {
+        let _root = SpanGuard::root(Role::Consumer, TraceOp::MultiPut);
         let mut results = vec![false; items.len()];
         self.stats.puts += items.len() as u64;
         let mut groups: BTreeMap<u32, Vec<(usize, Sealed)>> = BTreeMap::new();
@@ -406,6 +426,7 @@ impl SecureKv {
     /// Batched DELETE: removes local metadata per key, then synchronizes
     /// the producer stores with one grouped `call_multi` per producer.
     pub fn multi_delete<T: KvTransport>(&mut self, t: &mut T, keys: &[&[u8]]) -> Vec<bool> {
+        let _root = SpanGuard::root(Role::Consumer, TraceOp::MultiDelete);
         let mut results = vec![false; keys.len()];
         self.stats.deletes += keys.len() as u64;
         let mut groups: BTreeMap<u32, Vec<(usize, SealedValue)>> = BTreeMap::new();
@@ -433,6 +454,7 @@ impl SecureKv {
     /// DELETE (paper §6.1): remove local metadata, then synchronize the
     /// producer store.
     pub fn delete<T: KvTransport>(&mut self, t: &mut T, key: &[u8]) -> bool {
+        let _root = SpanGuard::root(Role::Consumer, TraceOp::Delete);
         let t_op = Instant::now();
         self.stats.deletes += 1;
         let Some(meta) = self.metadata.remove(key) else {

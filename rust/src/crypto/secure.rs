@@ -28,6 +28,7 @@
 
 use crate::crypto::aes::Aes128;
 use crate::crypto::sha256::sha256;
+use crate::trace::{Op as TraceOp, Role, SpanGuard, Status};
 use crate::util::rng::{os_seed, Rng};
 
 /// Per-KV metadata kept locally by the consumer (paper: 24 bytes with
@@ -110,6 +111,10 @@ impl Envelope {
 
     /// Seal a consumer value for storage at `producer_index`.
     pub fn seal(&mut self, value_c: &[u8], producer_index: u32) -> Sealed {
+        // Child of the ambient trace (no-op outside one, so raw crypto
+        // benchmarks never pay for recording).
+        let mut span = SpanGuard::child(Role::Consumer, TraceOp::Seal);
+        span.set_producer(producer_index as u64);
         let iv = self.fresh_iv();
         let value_p = match &self.aes {
             Some(aes) => {
@@ -136,6 +141,16 @@ impl Envelope {
 
     /// Verify + decrypt a producer-returned value against its metadata.
     pub fn open(&self, value_p: &[u8], meta: &SealedValue) -> Result<Vec<u8>, OpenError> {
+        let mut span = SpanGuard::child(Role::Consumer, TraceOp::Verify);
+        span.set_producer(meta.producer_index as u64);
+        let out = self.open_inner(value_p, meta);
+        if out.is_err() {
+            span.set_status(Status::Error);
+        }
+        out
+    }
+
+    fn open_inner(&self, value_p: &[u8], meta: &SealedValue) -> Result<Vec<u8>, OpenError> {
         if self.integrity {
             let full = sha256(value_p);
             if full[..16] != meta.hash {

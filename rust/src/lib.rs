@@ -12,7 +12,8 @@
 //!   a Redis-like KV store ([`kv`]), a guest-VM memory model with
 //!   cgroup/PFRA/swap semantics ([`mem`]), AES-128-CBC + SHA-256
 //!   ([`crypto`]), data- and control-plane wire protocols with simulated
-//!   and TCP transports ([`net`]), workload/trace generators
+//!   and TCP transports ([`net`]), end-to-end request tracing with a
+//!   crash-dump flight recorder ([`trace`]), workload/trace generators
 //!   ([`workload`]), and a discrete-event cluster simulator ([`sim`]).
 //! * **Layer 2/1 (build-time python)** — the broker's numeric hot paths
 //!   (batched ARIMA-family availability forecasting; MRC-driven market
@@ -36,6 +37,7 @@ pub mod net;
 pub mod producer;
 pub mod runtime;
 pub mod sim;
+pub mod trace;
 pub mod util;
 pub mod workload;
 

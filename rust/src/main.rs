@@ -12,6 +12,7 @@
 //! memtrade replay [--steps N]           run the Google-style replay
 //! memtrade chaos [--seed S] [--mix M]   run seeded fault-injection scenarios
 //! memtrade top --broker <a>             live marketplace telemetry (StatsQuery)
+//! memtrade trace --broker <a>           fetch live span rings (TraceQuery)
 //! memtrade list                         list experiment ids
 //! ```
 //!
@@ -31,6 +32,7 @@ use memtrade::net::control::{CtrlClient, CtrlRequest, CtrlResponse};
 use memtrade::net::tcp::{KvClient, ProducerStoreServer};
 use memtrade::sim::cluster::{ClusterSim, ClusterSimConfig, ConsumerMode};
 use memtrade::sim::replay::{run as replay_run, ReplayConfig};
+use memtrade::trace::Span;
 use memtrade::util::rng::Rng;
 use memtrade::workload::ycsb::{Op, YcsbWorkload};
 use std::process::ExitCode;
@@ -93,9 +95,11 @@ USAGE:
   memtrade sim [--minutes N] [--producers N] [--consumers N] [--remote PCT]
   memtrade replay [--steps N] [--producers N] [--consumers N]
   memtrade chaos [--seed S | --seeds N] [--mix MIX] [--ops N] [--keys N]
+                 [--dump-dir DIR]
                  (MIX: clean|standard, or +-joined fault families:
                   control|data|byzantine|kill|race|failover, e.g. data+kill)
   memtrade top --broker HOST:PORT | --addr HOST:PORT [--interval-ms N] [--once]
+  memtrade trace --broker HOST:PORT | --addr HOST:PORT [--max N] [--trace ID]
   memtrade list
 ";
 
@@ -117,6 +121,7 @@ fn main() -> ExitCode {
         "replay" => cmd_replay(&args),
         "chaos" => cmd_chaos(&args),
         "top" => cmd_top(&args),
+        "trace" => cmd_trace(&args),
         "list" => {
             for id in figures::ALL {
                 println!("{id}");
@@ -500,6 +505,7 @@ fn cmd_chaos(args: &Args) -> ExitCode {
             mix,
             keys: args.flag_u64("keys", 150) as u32,
             fault_ops: args.flag_u64("ops", 400),
+            dump_dir: args.flag("dump-dir").map(std::path::PathBuf::from),
             ..Default::default()
         };
         println!("=== chaos seed {seed} mix {} ===", mix.label());
@@ -513,6 +519,12 @@ fn cmd_chaos(args: &Args) -> ExitCode {
             println!("FAIL (reproduce: memtrade chaos --seed {seed} --mix {})", mix.label());
             for v in &violations {
                 println!("  violation: {v}");
+            }
+        }
+        if !outcome.dump_files.is_empty() {
+            println!("  flight-recorder dumps:");
+            for f in &outcome.dump_files {
+                println!("    {}", f.display());
             }
         }
     }
@@ -625,6 +637,102 @@ fn render_top(uptime_us: u64, m: &MetricSet) -> String {
     }
     out.push_str(&rest.render());
     out
+}
+
+/// Fetch a live span ring over the control plane (`TraceQuery`).
+fn fetch_traces(addr: &str, max: u32) -> std::io::Result<Vec<Span>> {
+    let mut ctrl = CtrlClient::connect_timeout(addr, Duration::from_secs(2))?;
+    match ctrl.call(&CtrlRequest::TraceQuery { max })? {
+        CtrlResponse::Traces { spans } => Ok(spans),
+        other => Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("unexpected trace reply: {other:?}"),
+        )),
+    }
+}
+
+/// Print one span and its children, indented by causal depth. A span
+/// whose parent never made the ring (wrapped, or recorded by a peer
+/// this endpoint can't see) is printed by the caller at top level.
+fn print_span_tree(s: &Span, all: &[&Span], depth: usize) {
+    let mut line = format!(
+        "{:indent$}{} [{}] {}µs {}",
+        "",
+        s.op.as_str(),
+        s.role.as_str(),
+        s.dur_us,
+        s.status.as_str(),
+        indent = 2 + depth * 2
+    );
+    if s.lease_id != 0 {
+        line += &format!(" lease={}", s.lease_id);
+    }
+    if s.producer_id != 0 {
+        line += &format!(" producer={}", s.producer_id);
+    }
+    println!("{line}");
+    for c in all {
+        if c.parent == s.span_id && c.span_id != s.span_id {
+            print_span_tree(c, all, depth + 1);
+        }
+    }
+}
+
+/// Fetch recent spans from a live ring (`memtrade trace`): group them
+/// into per-trace causal trees and print each, oldest trace first.
+/// `--trace ID` (decimal or 0x-hex — exactly what `memtrade top`
+/// prints as `p99ex=`) narrows the output to one causal chain.
+fn cmd_trace(args: &Args) -> ExitCode {
+    let Some(addr) = args.flag("broker").or_else(|| args.flag("addr")) else {
+        eprintln!("trace: --broker HOST:PORT (or --addr for an agent stats endpoint) required");
+        return ExitCode::FAILURE;
+    };
+    let max = args.flag_u64("max", 512).min(4096) as u32;
+    let filter = match args.flag("trace") {
+        Some(s) => {
+            let parsed = match s.strip_prefix("0x") {
+                Some(hex) => u64::from_str_radix(hex, 16).ok(),
+                None => s.parse().ok(),
+            };
+            let Some(id) = parsed else {
+                eprintln!("trace: --trace must be a decimal or 0x-hex id, got {s:?}");
+                return ExitCode::FAILURE;
+            };
+            Some(id)
+        }
+        None => None,
+    };
+    let spans = match fetch_traces(addr, max) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("trace: query failed: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let mut traces: std::collections::BTreeMap<u64, Vec<&Span>> = Default::default();
+    for s in &spans {
+        if filter.is_none() || filter == Some(s.trace_id) {
+            traces.entry(s.trace_id).or_default().push(s);
+        }
+    }
+    if traces.is_empty() {
+        match filter {
+            Some(id) => println!("no spans for trace {id:#018x} in the last {max} recorded"),
+            None => println!("no spans recorded at {addr}"),
+        }
+        return ExitCode::SUCCESS;
+    }
+    for (trace_id, mut list) in traces {
+        list.sort_by_key(|s| (s.t_start_us, s.span_id));
+        println!("trace {trace_id:#018x} ({} span(s))", list.len());
+        let ids: std::collections::HashSet<u64> = list.iter().map(|s| s.span_id).collect();
+        for s in &list {
+            if s.parent == 0 || !ids.contains(&s.parent) {
+                print_span_tree(s, &list, 0);
+            }
+        }
+    }
+    ExitCode::SUCCESS
 }
 
 /// Live marketplace telemetry: poll `StatsQuery` on a broker (or an

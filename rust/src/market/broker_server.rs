@@ -49,6 +49,7 @@ use crate::net::control::{
 };
 use crate::net::faults::{FaultPlan, FaultyStream};
 use crate::net::wire::{read_frame_into_patient, write_frame, CodecError};
+use crate::trace::{self, Op as TraceOp, Role as TraceRole, SpanGuard};
 use std::collections::{HashMap, VecDeque};
 use std::io::{self, BufReader, BufWriter, Write};
 use std::net::{TcpListener, ToSocketAddrs};
@@ -429,6 +430,9 @@ impl State {
     fn promote(&mut self, now_us: u64) {
         self.role = Role::Primary;
         self.telemetry.counter("repl.takeovers").inc();
+        // Takeover is an anomaly worth a flight-recorder dump: the spans
+        // leading up to it show what the replication loop last saw.
+        trace::dump("broker", "takeover");
         for e in self.producers.values_mut() {
             e.last_heartbeat_us = now_us;
         }
@@ -559,11 +563,27 @@ impl State {
 
     fn handle(&mut self, req: CtrlRequest, now_us: u64) -> CtrlResponse {
         let now = SimTime::from_micros(now_us);
+        // Lifecycle verbs carry the caller's trace id (v6): adopt it so
+        // the broker's span lands in the same causal chain the consumer
+        // or producer started. A zero id means the caller wasn't tracing.
+        let (verb_trace, verb_op) = match &req {
+            CtrlRequest::RequestSlabs { trace, .. } => (*trace, Some(TraceOp::Grant)),
+            CtrlRequest::Renew { trace, .. } => (*trace, Some(TraceOp::Renew)),
+            CtrlRequest::Revoke { trace, .. } => (*trace, Some(TraceOp::Revoke)),
+            _ => (0, None),
+        };
+        let _adopt = (verb_trace != 0).then(|| trace::adopt(verb_trace, 0));
+        let _verb_span = verb_op.map(|op| SpanGuard::child(TraceRole::Broker, op));
         // A standby serves observers and replicas only; every market
         // verb is told to try the next endpoint. Granting from two
         // brokers at once is the one thing failover must never do.
         if self.role == Role::Standby
-            && !matches!(req, CtrlRequest::StatsQuery | CtrlRequest::ReplicaPoll { .. })
+            && !matches!(
+                req,
+                CtrlRequest::StatsQuery
+                    | CtrlRequest::ReplicaPoll { .. }
+                    | CtrlRequest::TraceQuery { .. }
+            )
         {
             return Self::refused(
                 RefuseCode::NotPrimary,
@@ -674,7 +694,7 @@ impl State {
                     ended,
                 }
             }
-            CtrlRequest::RequestSlabs { consumer, slabs, min_slabs, ttl_us } => {
+            CtrlRequest::RequestSlabs { consumer, slabs, min_slabs, ttl_us, trace: _ } => {
                 self.telemetry.counter("ctrl.slab_requests").inc();
                 if slabs == 0 {
                     return Self::refused(RefuseCode::Malformed, "zero slabs requested");
@@ -752,7 +772,7 @@ impl State {
                     CtrlResponse::Grants { leases: grants }
                 }
             }
-            CtrlRequest::Renew { consumer, lease } => {
+            CtrlRequest::Renew { consumer, lease, trace: _ } => {
                 self.telemetry.counter("ctrl.renews").inc();
                 if let Some(r) = self.verify_holder(lease, consumer, true) {
                     return r;
@@ -785,7 +805,7 @@ impl State {
                     }
                 }
             }
-            CtrlRequest::Revoke { producer, lease } => {
+            CtrlRequest::Revoke { producer, lease, trace: _ } => {
                 self.telemetry.counter("ctrl.revokes").inc();
                 if let Some(r) = self.verify_holder(lease, producer, false) {
                     return r;
@@ -816,9 +836,19 @@ impl State {
                 self.telemetry.counter("ctrl.stats_queries").inc();
                 CtrlResponse::Stats { uptime_us: now_us, metrics: self.metrics(now_us) }
             }
+            CtrlRequest::TraceQuery { max } => {
+                self.telemetry.counter("ctrl.trace_queries").inc();
+                CtrlResponse::Traces { spans: trace::recent_spans((max as usize).min(4096)) }
+            }
             CtrlRequest::ReplicaPoll { from_seq, max } => {
                 self.telemetry.counter("ctrl.replica_polls").inc();
                 let next_seq = self.repl_base_seq + self.repl_log.len() as u64;
+                // Standby lag as the primary sees it: how far behind the
+                // poller's cursor is right now. Surfaces in `memtrade top`
+                // so a wedged or slow standby is visible before takeover.
+                self.telemetry
+                    .gauge("repl.lag")
+                    .set(next_seq.saturating_sub(from_seq) as i64);
                 // Clamp into the retained window: polling below the
                 // base is the gap case (first_seq > from_seq tells the
                 // standby), polling past the end is just caught-up.
@@ -856,6 +886,9 @@ impl BrokerServer {
         let listener = TcpListener::bind(addr)?;
         let local_addr = listener.local_addr()?;
         listener.set_nonblocking(true)?;
+        if let Some(plan) = cfg.faults.as_ref() {
+            plan.log_banner("broker");
+        }
 
         let slab_frac = broker_cfg.slab_bytes as f64 / GIB as f64;
         let initial_price = cfg
@@ -1228,6 +1261,7 @@ mod tests {
                 slabs: 4,
                 min_slabs: 1,
                 ttl_us: 60_000_000,
+                trace: 0,
             })
             .unwrap();
         let CtrlResponse::Grants { leases } = resp else { panic!("{resp:?}") };
@@ -1235,12 +1269,12 @@ mod tests {
         assert_eq!(server.active_lease_count(), leases.len());
         let id = leases[0].lease;
 
-        let resp = ctrl.call(&CtrlRequest::Renew { consumer: 9, lease: id }).unwrap();
+        let resp = ctrl.call(&CtrlRequest::Renew { consumer: 9, lease: id, trace: 0 }).unwrap();
         assert!(matches!(resp, CtrlResponse::Renewed { lease, .. } if lease == id));
         // Identity is enforced: another participant cannot end the lease.
         let resp = ctrl.call(&CtrlRequest::Release { consumer: 8, lease: id }).unwrap();
         assert!(matches!(resp, CtrlResponse::Refused { .. }), "{resp:?}");
-        let resp = ctrl.call(&CtrlRequest::Revoke { producer: 99, lease: id }).unwrap();
+        let resp = ctrl.call(&CtrlRequest::Revoke { producer: 99, lease: id, trace: 0 }).unwrap();
         assert!(matches!(resp, CtrlResponse::Refused { .. }), "{resp:?}");
         let resp = ctrl.call(&CtrlRequest::Release { consumer: 9, lease: id }).unwrap();
         assert_eq!(resp, CtrlResponse::Released { lease: id });
@@ -1266,6 +1300,7 @@ mod tests {
                 slabs: 2,
                 min_slabs: 1,
                 ttl_us: 250_000,
+                trace: 0,
             })
             .unwrap();
         let CtrlResponse::Grants { leases } = resp else { panic!("{resp:?}") };
@@ -1300,7 +1335,7 @@ mod tests {
         assert!(granted.is_empty());
         assert!(ended.contains(&id), "{ended:?}");
         // Renewing the expired (and gc'd) lease is cleanly refused.
-        let resp = ctrl.call(&CtrlRequest::Renew { consumer: 9, lease: id }).unwrap();
+        let resp = ctrl.call(&CtrlRequest::Renew { consumer: 9, lease: id, trace: 0 }).unwrap();
         assert!(matches!(resp, CtrlResponse::Refused { .. }), "{resp:?}");
         server.stop();
     }
@@ -1357,6 +1392,7 @@ mod tests {
                 slabs: 4,
                 min_slabs: 1,
                 ttl_us: 60_000_000,
+                trace: 0,
             })
             .unwrap();
         let CtrlResponse::Grants { leases } = resp else { panic!("{resp:?}") };
@@ -1400,6 +1436,7 @@ mod tests {
                 slabs: 4,
                 min_slabs: 1,
                 ttl_us: 60_000_000,
+                trace: 0,
             })
             .unwrap();
         let CtrlResponse::Grants { leases } = resp else { panic!("{resp:?}") };
@@ -1407,8 +1444,9 @@ mod tests {
         std::thread::sleep(Duration::from_millis(700));
         assert_eq!(server.producer_count(), 0);
         assert_eq!(server.active_lease_count(), 0);
-        let resp =
-            ctrl.call(&CtrlRequest::Renew { consumer: 9, lease: leases[0].lease }).unwrap();
+        let resp = ctrl
+            .call(&CtrlRequest::Renew { consumer: 9, lease: leases[0].lease, trace: 0 })
+            .unwrap();
         assert!(matches!(resp, CtrlResponse::Refused { .. }), "{resp:?}");
         server.stop();
     }
@@ -1546,6 +1584,7 @@ mod tests {
                 slabs: 4,
                 min_slabs: 1,
                 ttl_us: 60_000_000,
+                trace: 0,
             })
             .unwrap();
         let CtrlResponse::Grants { leases } = resp else { panic!("{resp:?}") };
@@ -1559,6 +1598,7 @@ mod tests {
                 slabs: 1,
                 min_slabs: 1,
                 ttl_us: 1_000_000,
+                trace: 0,
             })
             .unwrap();
         assert!(
@@ -1592,7 +1632,7 @@ mod tests {
         }
         assert!(standby.is_primary(), "standby never promoted");
         // The consumer's lease survives failover: renew succeeds there.
-        let resp = sctrl.call(&CtrlRequest::Renew { consumer: 9, lease: id }).unwrap();
+        let resp = sctrl.call(&CtrlRequest::Renew { consumer: 9, lease: id, trace: 0 }).unwrap();
         assert!(
             matches!(resp, CtrlResponse::Renewed { lease, .. } if lease == id),
             "{resp:?}"
@@ -1604,6 +1644,7 @@ mod tests {
                 slabs: 2,
                 min_slabs: 1,
                 ttl_us: 60_000_000,
+                trace: 0,
             })
             .unwrap();
         let CtrlResponse::Grants { leases: fresh } = resp else { panic!("{resp:?}") };

@@ -49,7 +49,9 @@ use crate::market::{
 };
 use crate::net::control::{CtrlClient, CtrlRequest};
 use crate::net::faults::{ByzantineSpec, FaultPlan, FaultSpec};
+use crate::trace;
 use crate::util::rng::Rng;
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -174,6 +176,10 @@ pub struct ChaosConfig {
     pub value_bytes: usize,
     /// Data operations driven during the fault phase.
     pub fault_ops: u64,
+    /// Flight-recorder dump directory for every role in the scenario
+    /// (all roles share this process, so one dir collects them all).
+    /// `None` leaves the process-global dump dir untouched.
+    pub dump_dir: Option<PathBuf>,
 }
 
 impl Default for ChaosConfig {
@@ -184,6 +190,7 @@ impl Default for ChaosConfig {
             keys: 150,
             value_bytes: 256,
             fault_ops: 400,
+            dump_dir: None,
         }
     }
 }
@@ -216,6 +223,9 @@ pub struct ChaosOutcome {
     /// A `failover` mix must see exactly one.
     pub broker_takeovers: Option<u64>,
     pub pool_stats: PoolStats,
+    /// Flight-recorder dumps found in `dump_dir` after the run (empty
+    /// when no dir was configured or no anomaly fired).
+    pub dump_files: Vec<PathBuf>,
 }
 
 impl ChaosOutcome {
@@ -328,6 +338,15 @@ fn wait_for(timeout: Duration, mut cond: impl FnMut() -> bool) -> bool {
 pub fn run_chaos(cfg: &ChaosConfig) -> ChaosOutcome {
     let mut rng = Rng::new(cfg.seed ^ 0xC4A0_5000);
 
+    // Arm the flight recorder before any role boots, so the first
+    // anomaly of the run already has somewhere to dump. Only set when
+    // configured: the dir is process-global and clearing it here would
+    // race a concurrently running scenario that did configure one.
+    if let Some(dir) = &cfg.dump_dir {
+        let _ = std::fs::create_dir_all(dir);
+        trace::set_dump_dir(Some(dir.as_path()));
+    }
+
     // --- Derive the schedule from the seed.
     let ctrl_plan = cfg
         .mix
@@ -425,6 +444,7 @@ pub fn run_chaos(cfg: &ChaosConfig) -> ChaosOutcome {
             // Chaos scenarios poke the system through faults, not stats
             // polls; skip the extra listener per agent.
             stats_addr: None,
+            slo_p99_us: 0,
         };
         // Registration runs through the (possibly faulty) control
         // plane; retry fresh connections until one schedule lets the
@@ -501,7 +521,8 @@ pub fn run_chaos(cfg: &ChaosConfig) -> ChaosOutcome {
                 }
                 if let Some(c) = ctrl.as_mut() {
                     let producer = 1 + (lease_guess % 2);
-                    let req = CtrlRequest::Revoke { producer, lease: lease_guess };
+                    let req =
+                        CtrlRequest::Revoke { producer, lease: lease_guess, trace: 0 };
                     if c.call(&req).is_err() {
                         ctrl = None;
                     }
@@ -698,6 +719,23 @@ pub fn run_chaos(cfg: &ChaosConfig) -> ChaosOutcome {
     let broker_takeovers = standby
         .as_ref()
         .map(|s| s.metrics().counter("repl.takeovers").unwrap_or(0));
+    // Collect whatever the flight recorder dumped during the run, so
+    // the CLI (and CI, on a red run) can name the evidence files.
+    let dump_files: Vec<PathBuf> = match &cfg.dump_dir {
+        Some(dir) => {
+            let mut v: Vec<PathBuf> = std::fs::read_dir(dir)
+                .map(|rd| {
+                    rd.filter_map(|e| e.ok())
+                        .map(|e| e.path())
+                        .filter(|p| p.extension().is_some_and(|x| x == "jsonl"))
+                        .collect()
+                })
+                .unwrap_or_default();
+            v.sort();
+            v
+        }
+        None => Vec::new(),
+    };
     let outcome = ChaosOutcome {
         seed: cfg.seed,
         schedule,
@@ -714,6 +752,7 @@ pub fn run_chaos(cfg: &ChaosConfig) -> ChaosOutcome {
         held_slabs_after: pool.held_slabs(),
         broker_takeovers,
         pool_stats: pool.stats.clone(),
+        dump_files,
     };
 
     drop(pool);

@@ -34,6 +34,7 @@ use crate::net::control::{CtrlClient, CtrlRequest, CtrlResponse, RefuseCode};
 use crate::net::faults::{ByzantineSpec, FaultPlan};
 use crate::net::tcp::ProducerStoreServer;
 use crate::producer::Harvester;
+use crate::trace::{self, Op as TraceOp, Role as TraceRole, SpanGuard};
 use crate::util::Backoff;
 use crate::workload::apps::{AppKind, AppModel, AppRunner};
 use std::collections::HashMap;
@@ -90,6 +91,10 @@ pub struct ProducerAgentConfig {
     /// ephemeral; `None` = no stats endpoint). `memtrade top` and tests
     /// poll it for this agent's live data-plane telemetry.
     pub stats_addr: Option<String>,
+    /// Data-plane p99 SLO, µs (0 = no SLO). A heartbeat window whose
+    /// observed p99 exceeds this triggers a flight-recorder dump, so
+    /// the spans behind the breach are on disk before the ring wraps.
+    pub slo_p99_us: u64,
 }
 
 impl Default for ProducerAgentConfig {
@@ -112,6 +117,7 @@ impl Default for ProducerAgentConfig {
             data_faults: None,
             byzantine: None,
             stats_addr: Some("127.0.0.1:0".to_string()),
+            slo_p99_us: 0,
         }
     }
 }
@@ -233,6 +239,12 @@ impl ProducerAgent {
             cfg.data_faults.clone(),
             cfg.byzantine.clone(),
         )?;
+        // Stamp the data plane with our market identity so its shard
+        // spans name this producer in cross-role traces.
+        server.set_producer_id(cfg.producer);
+        if let Some(plan) = cfg.ctrl_faults.as_ref() {
+            plan.log_banner("producer-agent ctrl");
+        }
         // Nothing is leased yet: zero budget until the broker says so.
         server.shrink_to(0);
         let data_addr = server.addr();
@@ -571,7 +583,15 @@ fn agent_loop(mut a: AgentLoop) {
             grant_order.pop();
             leased -= bytes;
             a.stats.revokes_sent.inc();
-            let revoke = CtrlRequest::Revoke { producer: a.cfg.producer, lease: victim };
+            // Revocation starts a fresh trace here (the producer is the
+            // causal origin); the broker adopts it via the verb's id.
+            let mut span = SpanGuard::root(TraceRole::Producer, TraceOp::Revoke);
+            span.set_lease(victim);
+            let revoke = CtrlRequest::Revoke {
+                producer: a.cfg.producer,
+                lease: victim,
+                trace: span.trace_id(),
+            };
             if a.conn.as_mut().unwrap().call(&revoke).is_err() {
                 a.stats.control_errors.inc();
                 lost_conn = true;
@@ -601,6 +621,11 @@ fn agent_loop(mut a: AgentLoop) {
         a.stats.data_ops_per_sec.set(observed_ops_per_sec as i64);
         if observed_p99_us > 0 {
             a.stats.data_p99_us.set(observed_p99_us as i64);
+        }
+        // SLO breach: capture the window's spans before the ring wraps.
+        // The dump's own throttle keeps a sustained breach from spamming.
+        if a.cfg.slo_p99_us > 0 && observed_p99_us as u64 > a.cfg.slo_p99_us {
+            trace::dump("producer", "p99-breach");
         }
 
         let hb = CtrlRequest::Heartbeat {

@@ -48,6 +48,7 @@ use crate::net::control::{CtrlClient, CtrlRequest, CtrlResponse, GrantInfo, Refu
 use crate::net::faults::FaultPlan;
 use crate::net::tcp::KvClient;
 use crate::net::wire::{Request, Response};
+use crate::trace::{self, Op as TraceOp, Role, SpanGuard};
 use crate::util::hash::fnv1a_64;
 use crate::util::Backoff;
 use std::io;
@@ -192,6 +193,10 @@ pub struct RemotePool {
     /// Connections dialed so far — the per-connection index of the
     /// fault plans' determinism contract (control and data share it).
     conn_seq: u64,
+    /// Consecutive `NotPrimary` refusals across broker endpoints: a
+    /// streak means the pool is orbiting standbys without finding a
+    /// primary (anomaly → flight-recorder dump).
+    notprimary_streak: u32,
     pub stats: PoolStats,
     /// Data-plane call latency (µs) as *this consumer* observes it —
     /// one sample per routed call or per-producer batch group.
@@ -227,9 +232,16 @@ impl RemotePool {
             broker_idx: 0,
             session,
             conn_seq: 0,
+            notprimary_streak: 0,
             stats: PoolStats::default(),
             data_call_us: Histogram::new(),
         };
+        if let Some(plan) = pool.cfg.ctrl_faults.as_ref() {
+            plan.log_banner("consumer-pool ctrl");
+        }
+        if let Some(plan) = pool.cfg.data_faults.as_ref() {
+            plan.log_banner("consumer-pool data");
+        }
         // Bounded initial dial, trying each endpoint once: a black-holed
         // broker fails over (or fails fast) here instead of hanging the
         // constructor on the OS SYN schedule.
@@ -404,6 +416,17 @@ impl RemotePool {
         }
     }
 
+    /// A broker answered `NotPrimary`. One refusal is normal mid-
+    /// failover; three in a row means the pool is orbiting standbys
+    /// without ever finding a primary — dump the flight recorder so the
+    /// orbit is diagnosable after the fact (reset on any grant/renew).
+    fn note_notprimary(&mut self) {
+        self.notprimary_streak += 1;
+        if self.notprimary_streak == 3 {
+            trace::dump("consumer", "notprimary-storm");
+        }
+    }
+
     /// A control call failed: the connection is desynced, the broker is
     /// wedged, or it answered `NotPrimary`. Drop it, advance to the
     /// next endpoint, and back off, so the data path — which runs
@@ -422,14 +445,20 @@ impl RemotePool {
         }
         let want = self.cfg.target_slabs - self.held_slabs;
         self.stats.rerequests.inc();
+        // Control verbs carry a trace id too: the broker's grant span
+        // joins this trace, tying placement decisions to the consumer
+        // that asked.
+        let span = SpanGuard::root(Role::Consumer, TraceOp::Grant);
         let req = CtrlRequest::RequestSlabs {
             consumer: self.cfg.consumer,
             slabs: want,
             min_slabs: self.cfg.min_slabs.min(want),
             ttl_us: self.cfg.lease_ttl.as_micros() as u64,
+            trace: span.trace_id(),
         };
         match self.ctrl.as_mut().unwrap().call(&req) {
             Ok(CtrlResponse::Grants { leases }) => {
+                self.notprimary_streak = 0;
                 let now = Instant::now();
                 for g in leases {
                     self.add_grant(g, now);
@@ -439,6 +468,7 @@ impl RemotePool {
             // not grant. Advance to the next; waiting here (the
             // NoCapacity treatment) would starve the pool forever.
             Ok(CtrlResponse::Refused { code: RefuseCode::NotPrimary, .. }) => {
+                self.note_notprimary();
                 self.ctrl_failed();
             }
             Ok(CtrlResponse::Refused { .. }) => {} // NoCapacity: retry later
@@ -489,7 +519,12 @@ impl RemotePool {
                 .collect();
             for i in due {
                 let lease = self.slots[i].as_ref().unwrap().lease;
-                let renew = CtrlRequest::Renew { consumer: self.cfg.consumer, lease };
+                let span = SpanGuard::root(Role::Consumer, TraceOp::Renew);
+                let renew = CtrlRequest::Renew {
+                    consumer: self.cfg.consumer,
+                    lease,
+                    trace: span.trace_id(),
+                };
                 match self.ctrl.as_mut().unwrap().call(&renew) {
                     // The ack must name the lease we renewed: a Renewed
                     // for a *different* lease is a shifted (desynced)
@@ -497,6 +532,7 @@ impl RemotePool {
                     // extending this slot on its TTL would keep traffic
                     // flowing to slabs the broker already reclaimed.
                     Ok(CtrlResponse::Renewed { lease: acked, ttl_us }) if acked == lease => {
+                        self.notprimary_streak = 0;
                         self.stats.renewals.inc();
                         if let Some(slot) = self.slots[i].as_mut() {
                             slot.deadline = now + Duration::from_micros(ttl_us);
@@ -507,6 +543,7 @@ impl RemotePool {
                     // the slot would shed healthy capacity at exactly
                     // the moment of failover; move brokers instead.
                     Ok(CtrlResponse::Refused { code: RefuseCode::NotPrimary, .. }) => {
+                        self.note_notprimary();
                         self.ctrl_failed();
                         break;
                     }
@@ -612,15 +649,22 @@ impl KvTransport for RemotePool {
             return Self::miss_response(&req);
         }
         let index = producer_index as usize;
+        // Route span: which slot (lease + producer index) this op landed
+        // on — the parent of the client's wire span. No-op untraced.
+        let mut route = SpanGuard::child(Role::Consumer, TraceOp::Route);
         let t_call = Instant::now();
         let result = match self.slots.get_mut(index).and_then(|s| s.as_mut()) {
-            Some(slot) => slot.client.call(&req),
+            Some(slot) => {
+                route.set_lease(slot.lease);
+                route.set_producer(producer_index as u64);
+                slot.client.call(&req)
+            }
             None => {
                 self.stats.dead_calls.inc();
                 return Self::miss_response(&req);
             }
         };
-        self.data_call_us.record_elapsed_us(t_call);
+        self.data_call_us.record_traced(t_call.elapsed().as_micros() as u64, trace::current().0);
         match result {
             Ok(resp) => resp,
             Err(_) => {
@@ -660,15 +704,20 @@ impl KvTransport for RemotePool {
             return reqs.iter().map(Self::miss_response).collect();
         }
         let index = producer_index as usize;
+        let mut route = SpanGuard::child(Role::Consumer, TraceOp::Route);
         let t_call = Instant::now();
         let result = match self.slots.get_mut(index).and_then(|s| s.as_mut()) {
-            Some(slot) => slot.client.call_batch(&reqs),
+            Some(slot) => {
+                route.set_lease(slot.lease);
+                route.set_producer(producer_index as u64);
+                slot.client.call_batch(&reqs)
+            }
             None => {
                 self.stats.dead_calls.add(reqs.len() as u64);
                 return reqs.iter().map(Self::miss_response).collect();
             }
         };
-        self.data_call_us.record_elapsed_us(t_call);
+        self.data_call_us.record_traced(t_call.elapsed().as_micros() as u64, trace::current().0);
         match result {
             Ok(resps) if resps.len() == reqs.len() => resps,
             Ok(_) | Err(_) => {

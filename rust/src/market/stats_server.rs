@@ -124,9 +124,15 @@ fn serve_stats_conn(
                 uptime_us: start.elapsed().as_micros() as u64,
                 metrics: source(),
             },
+            // The flight recorder is process-global, so this read-only
+            // endpoint can serve the hosting role's recent spans too —
+            // `memtrade trace` points here for producer-side rings.
+            Ok(CtrlRequest::TraceQuery { max }) => CtrlResponse::Traces {
+                spans: crate::trace::recent_spans((max as usize).min(4096)),
+            },
             Ok(_) => CtrlResponse::Refused {
                 code: RefuseCode::Malformed,
-                detail: "stats-only endpoint: only StatsQuery is served here".into(),
+                detail: "read-only endpoint: only StatsQuery/TraceQuery are served here".into(),
             },
             Err(e) => CtrlResponse::Refused {
                 code: RefuseCode::Malformed,

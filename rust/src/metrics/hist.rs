@@ -5,10 +5,12 @@
 //! Design constraints (this sits on the hottest paths in the system):
 //!
 //! * `record(v)` is exactly **one** relaxed atomic add — no allocation,
-//!   no locking, no floating point;
+//!   no locking, no floating point; `record_traced(v, trace)` adds at
+//!   most one relaxed store (the bucket's **exemplar** trace id, so a
+//!   tail bucket can name the trace that landed in it);
 //! * fixed memory: 64 power-of-two buckets (bucket 0 holds zeros,
 //!   bucket *i* holds `[2^(i-1), 2^i)`), so a histogram is 512 bytes of
-//!   `AtomicU64` regardless of traffic;
+//!   `AtomicU64` regardless of traffic (1 KiB with the exemplar slots);
 //! * snapshots are plain `[u64; 64]` copies that support **deltas**
 //!   (windowed rates: the producer agent heartbeats `snapshot - previous
 //!   snapshot` so the broker sees the *last window's* p99, not the
@@ -48,6 +50,11 @@ fn bucket_bounds(i: usize) -> (u64, u64) {
 #[derive(Debug)]
 pub struct Histogram {
     counts: [AtomicU64; HIST_BUCKETS],
+    /// Last trace id that landed in each bucket (0 = none) — the
+    /// exemplar that lets `memtrade top` name a p99 offender. Written
+    /// only by [`Histogram::record_traced`]; plain [`Histogram::record`]
+    /// never touches it.
+    exemplars: [AtomicU64; HIST_BUCKETS],
 }
 
 impl Default for Histogram {
@@ -62,19 +69,39 @@ impl Clone for Histogram {
         for (dst, src) in h.counts.iter().zip(&self.counts) {
             dst.store(src.load(Ordering::Relaxed), Ordering::Relaxed);
         }
+        for (dst, src) in h.exemplars.iter().zip(&self.exemplars) {
+            dst.store(src.load(Ordering::Relaxed), Ordering::Relaxed);
+        }
         h
     }
 }
 
 impl Histogram {
     pub fn new() -> Self {
-        Histogram { counts: std::array::from_fn(|_| AtomicU64::new(0)) }
+        Histogram {
+            counts: std::array::from_fn(|_| AtomicU64::new(0)),
+            exemplars: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
     }
 
     /// Record one sample: a single relaxed atomic add.
     #[inline]
     pub fn record(&self, v: u64) {
         self.counts[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// [`Histogram::record`] plus an exemplar: when `trace_id` is
+    /// nonzero, pin it as the bucket's most recent trace — one extra
+    /// relaxed store, still allocation- and lock-free. Last-writer-wins
+    /// is deliberate: an exemplar is a *sample* of the bucket, and the
+    /// freshest one is the most debuggable.
+    #[inline]
+    pub fn record_traced(&self, v: u64, trace_id: u64) {
+        let i = bucket_index(v);
+        self.counts[i].fetch_add(1, Ordering::Relaxed);
+        if trace_id != 0 {
+            self.exemplars[i].store(trace_id, Ordering::Relaxed);
+        }
     }
 
     /// Convenience for recording a `Duration` in microseconds.
@@ -88,10 +115,17 @@ impl Histogram {
         self.counts.iter().map(|c| c.load(Ordering::Relaxed)).sum()
     }
 
-    /// Fold another histogram's counts into this one.
+    /// Fold another histogram's counts into this one. Exemplars: the
+    /// other's fill buckets this one has no exemplar for.
     pub fn merge(&self, other: &Histogram) {
         for (dst, src) in self.counts.iter().zip(&other.counts) {
             dst.fetch_add(src.load(Ordering::Relaxed), Ordering::Relaxed);
+        }
+        for (dst, src) in self.exemplars.iter().zip(&other.exemplars) {
+            let theirs = src.load(Ordering::Relaxed);
+            if theirs != 0 && dst.load(Ordering::Relaxed) == 0 {
+                dst.store(theirs, Ordering::Relaxed);
+            }
         }
     }
 
@@ -101,6 +135,7 @@ impl Histogram {
     pub fn snapshot(&self) -> HistogramSnapshot {
         HistogramSnapshot {
             counts: std::array::from_fn(|i| self.counts[i].load(Ordering::Relaxed)),
+            exemplars: std::array::from_fn(|i| self.exemplars[i].load(Ordering::Relaxed)),
         }
     }
 }
@@ -110,11 +145,14 @@ impl Histogram {
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct HistogramSnapshot {
     pub counts: [u64; HIST_BUCKETS],
+    /// Per-bucket exemplar trace ids (0 = none), copied from the live
+    /// histogram's pins at snapshot time.
+    pub exemplars: [u64; HIST_BUCKETS],
 }
 
 impl Default for HistogramSnapshot {
     fn default() -> Self {
-        HistogramSnapshot { counts: [0; HIST_BUCKETS] }
+        HistogramSnapshot { counts: [0; HIST_BUCKETS], exemplars: [0; HIST_BUCKETS] }
     }
 }
 
@@ -136,12 +174,21 @@ impl HistogramSnapshot {
             counts: std::array::from_fn(|i| {
                 self.counts[i].saturating_sub(earlier.counts[i])
             }),
+            // The window keeps the *later* snapshot's exemplars: an
+            // exemplar is last-writer-wins, so the freshest pin is the
+            // right sample for the window that ends at `self`.
+            exemplars: self.exemplars,
         }
     }
 
     pub fn merge(&mut self, other: &HistogramSnapshot) {
         for (dst, src) in self.counts.iter_mut().zip(&other.counts) {
             *dst += src;
+        }
+        for (dst, src) in self.exemplars.iter_mut().zip(&other.exemplars) {
+            if *dst == 0 {
+                *dst = *src;
+            }
         }
     }
 
@@ -218,13 +265,62 @@ impl HistogramSnapshot {
     /// panic / silent release wrap in a path hardened against exactly
     /// such frames).
     pub fn from_buckets(buckets: &[(u8, u64)]) -> HistogramSnapshot {
+        Self::from_parts(buckets, &[])
+    }
+
+    /// Nonzero exemplar pins as `(bucket_index, trace_id)` pairs — the
+    /// v6 wire form, alongside [`HistogramSnapshot::nonzero_buckets`].
+    pub fn nonzero_exemplars(&self) -> Vec<(u8, u64)> {
+        self.exemplars
+            .iter()
+            .enumerate()
+            .filter(|(_, &t)| t > 0)
+            .map(|(i, &t)| (i as u8, t))
+            .collect()
+    }
+
+    /// Rebuild from bucket-count pairs plus exemplar pairs (v6 wire
+    /// decode). Same hardening as [`HistogramSnapshot::from_buckets`];
+    /// duplicate exemplar indices are last-writer-wins like the live
+    /// instrument.
+    pub fn from_parts(buckets: &[(u8, u64)], exemplars: &[(u8, u64)]) -> HistogramSnapshot {
         let mut s = HistogramSnapshot::default();
         for &(i, c) in buckets {
             if (i as usize) < HIST_BUCKETS {
                 s.counts[i as usize] = s.counts[i as usize].saturating_add(c);
             }
         }
+        for &(i, t) in exemplars {
+            if (i as usize) < HIST_BUCKETS {
+                s.exemplars[i as usize] = t;
+            }
+        }
         s
+    }
+
+    /// The exemplar trace id nearest the tail: the highest pinned bucket
+    /// at or above the bucket holding the p99 rank. `None` when the
+    /// histogram is empty or nothing at the tail was recorded traced —
+    /// how `memtrade top` and the benches resolve "who was slow".
+    pub fn p99_exemplar(&self) -> Option<u64> {
+        let n = self.count();
+        if n == 0 {
+            return None;
+        }
+        let target = (0.99 * n as f64).ceil().max(1.0) as u64;
+        let mut acc = 0u64;
+        let mut p99_bucket = HIST_BUCKETS - 1;
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                p99_bucket = i;
+                break;
+            }
+        }
+        (p99_bucket..HIST_BUCKETS)
+            .rev()
+            .find(|&i| self.exemplars[i] != 0)
+            .map(|i| self.exemplars[i])
     }
 
     /// JSON object: count, quantiles, mean, and the nonzero buckets.
@@ -247,9 +343,11 @@ impl HistogramSnapshot {
         )
     }
 
-    /// One-line text render for `memtrade top` and log output.
+    /// One-line text render for `memtrade top` and log output. When a
+    /// tail exemplar is pinned, it is appended as `p99ex=<trace id>` so
+    /// the worst offender is nameable straight from the top view.
     pub fn render(&self) -> String {
-        format!(
+        let base = format!(
             "n={} mean={:.1} p50={:.1} p90={:.1} p99={:.1} p999={:.1}",
             self.count(),
             self.mean(),
@@ -257,7 +355,11 @@ impl HistogramSnapshot {
             self.p90(),
             self.p99(),
             self.p999()
-        )
+        );
+        match self.p99_exemplar() {
+            Some(t) => format!("{base} p99ex={t:#018x}"),
+            None => base,
+        }
     }
 }
 
@@ -373,5 +475,43 @@ mod tests {
         let json = s.to_json();
         assert!(json.contains("\"count\":8"), "{json}");
         assert!(s.render().contains("n=8"));
+    }
+
+    #[test]
+    fn exemplars_pin_resolve_and_round_trip() {
+        let h = Histogram::new();
+        for _ in 0..99 {
+            h.record(10); // fast bulk, untraced
+        }
+        h.record_traced(90_000, 0xCAFE); // the tail sample, traced
+        h.record_traced(9, 0); // trace id 0 must pin nothing
+        let s = h.snapshot();
+        assert_eq!(s.count(), 101);
+        assert_eq!(s.p99_exemplar(), Some(0xCAFE), "tail bucket names its trace");
+        assert!(s.render().contains("p99ex=0x000000000000cafe"), "{}", s.render());
+        // Wire round trip carries exemplars; delta keeps the later pins.
+        let rebuilt =
+            HistogramSnapshot::from_parts(&s.nonzero_buckets(), &s.nonzero_exemplars());
+        assert_eq!(rebuilt, s);
+        let d = s.delta(&HistogramSnapshot::default());
+        assert_eq!(d.p99_exemplar(), Some(0xCAFE));
+        // An untraced histogram resolves no exemplar and renders none.
+        let plain = Histogram::new();
+        plain.record(7);
+        assert_eq!(plain.snapshot().p99_exemplar(), None);
+        assert!(!plain.snapshot().render().contains("p99ex"));
+    }
+
+    #[test]
+    fn exemplar_merge_prefers_existing_pins() {
+        let a = Histogram::new();
+        let b = Histogram::new();
+        a.record_traced(100, 5);
+        b.record_traced(100, 6);
+        b.record_traced(1 << 30, 7);
+        a.merge(&b);
+        let s = a.snapshot();
+        assert_eq!(s.exemplars[bucket_index(100)], 5, "a's own pin survives");
+        assert_eq!(s.exemplars[bucket_index(1 << 30)], 7, "b fills a's empty bucket");
     }
 }

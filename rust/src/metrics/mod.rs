@@ -346,6 +346,32 @@ mod tests {
     }
 
     #[test]
+    fn registry_render_is_byte_stable_across_insertion_orders() {
+        // Regression guard: `BENCH_*.json` and `StatsQuery` output must
+        // not churn between runs. Both `Registry` and `MetricSet` sit on
+        // BTreeMaps, so two registries built in opposite orders must
+        // produce byte-identical JSON and text renders. If a future
+        // refactor swaps in a hash map for speed, this test is the trip
+        // wire.
+        let names = ["data.op_us", "repl.lag", "ctrl.heartbeats", "byzantine.tampered"];
+        let forward = Registry::new();
+        let backward = Registry::new();
+        for n in names {
+            forward.counter(n).add(7);
+        }
+        for n in names.iter().rev() {
+            backward.counter(n).add(7);
+        }
+        let (f, b) = (forward.snapshot(), backward.snapshot());
+        assert_eq!(f.to_json(), b.to_json());
+        assert_eq!(f.render(), b.render());
+        let keys: Vec<&str> = f.iter().map(|(n, _)| n).collect();
+        let mut sorted = keys.clone();
+        sorted.sort_unstable();
+        assert_eq!(keys, sorted, "snapshot iteration must be sorted");
+    }
+
+    #[test]
     fn metric_set_prefixing_render_and_json() {
         let r = Registry::new();
         r.counter("hits").add(7);

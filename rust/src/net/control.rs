@@ -26,10 +26,19 @@
 //! version named, never sent a batch frame it would die decoding
 //! mid-stream, and both sides cap outgoing batches at the pairwise
 //! minimum of the advertised limits.
+//!
+//! Trace capability (v6) negotiates the same way: the hello carries a
+//! flags byte whose bit 0 advertises tracing, data frames append a
+//! 16-byte trace context only when *both* hellos advertised it, and a
+//! pre-tracing peer is refused at the version check with its version
+//! named — exactly the batch-cap discipline. Market verbs
+//! (`RequestSlabs`/`Renew`/`Revoke`) carry a trace id inline (0 =
+//! untraced), and `TraceQuery` fetches an endpoint's live span rings.
 
 use crate::market::lease::LeaseEvent;
 use crate::metrics::{HistogramSnapshot, Metric, MetricSet, HIST_BUCKETS};
 use crate::net::faults::{FaultPlan, FaultyStream};
+use crate::trace::{Span, SPAN_WORDS};
 use crate::net::wire::{
     put_bytes, read_frame_into, read_frame_into_patient, take_bytes, take_u32, take_u64,
     write_frame, CodecError,
@@ -70,8 +79,11 @@ pub fn connect_with_timeout(addr: &str, timeout: Duration) -> io::Result<TcpStre
 /// p99/ops-per-sec, and `StatsQuery`/`Stats` expose live metrics), and
 /// by broker failover (v5: `ReplicaPoll`/`ReplicaEvents` replication
 /// frames and the `NotPrimary` refusal a standby answers market verbs
-/// with).
-pub const PROTOCOL_VERSION: u16 = 5;
+/// with), and by end-to-end tracing (v6: hellos carry a tracing flags
+/// byte, negotiated data frames append a trace context, market verbs
+/// carry a trace id, histograms travel with exemplar trace ids, and
+/// `TraceQuery`/`Traces` fetch live span rings).
+pub const PROTOCOL_VERSION: u16 = 6;
 /// Hello magic of the broker control plane.
 pub const CONTROL_MAGIC: [u8; 4] = *b"MTCP";
 /// Hello magic of the producer-store data plane.
@@ -93,16 +105,24 @@ pub struct HelloInfo {
     /// batches at `min(this, own MAX_BATCH_OPS)`, so a frame the peer
     /// cannot decode is never on the wire.
     pub max_batch_ops: u32,
+    /// Peer advertised tracing (v6 flags bit 0). Data frames carry the
+    /// trace-context suffix only when *both* sides advertised it, so a
+    /// run with tracing disabled puts zero extra bytes on the wire.
+    pub tracing: bool,
 }
 
-/// v3 hello: magic (4) + version (2) + max batch ops (4).
-const HELLO_LEN: usize = 10;
+/// Hello flags (v6): bit 0 = this endpoint records + propagates traces.
+const HELLO_FLAG_TRACING: u8 = 1;
+
+/// v6 hello: magic (4) + version (2) + max batch ops (4) + flags (1).
+const HELLO_LEN: usize = 11;
 
 fn hello_payload(magic: [u8; 4]) -> [u8; HELLO_LEN] {
     let v = PROTOCOL_VERSION.to_le_bytes();
     let b = (crate::net::wire::MAX_BATCH_OPS as u32).to_le_bytes();
+    let flags = if crate::trace::enabled() { HELLO_FLAG_TRACING } else { 0 };
     [
-        magic[0], magic[1], magic[2], magic[3], v[0], v[1], b[0], b[1], b[2], b[3],
+        magic[0], magic[1], magic[2], magic[3], v[0], v[1], b[0], b[1], b[2], b[3], flags,
     ]
 }
 
@@ -142,6 +162,7 @@ fn check_hello(payload: &[u8], expected: [u8; 4]) -> Result<HelloInfo, String> {
     }
     Ok(HelloInfo {
         max_batch_ops: u32::from_le_bytes(payload[6..10].try_into().unwrap()),
+        tracing: payload[10] & HELLO_FLAG_TRACING != 0,
     })
 }
 
@@ -285,15 +306,19 @@ pub enum CtrlRequest {
         observed_ops_per_sec: u32,
     },
     /// Consumer asks for capacity; the broker answers with grants.
-    RequestSlabs { consumer: u64, slabs: u32, min_slabs: u32, ttl_us: u64 },
+    /// `trace` (v6) is the caller's trace id — 0 when untraced — so the
+    /// broker's grant handling records into the same causal chain.
+    RequestSlabs { consumer: u64, slabs: u32, min_slabs: u32, ttl_us: u64, trace: u64 },
     /// Consumer extends a lease before it expires. The broker verifies
     /// `consumer` against the lease record — lease ids are guessable.
-    Renew { consumer: u64, lease: u64 },
+    /// `trace` (v6): caller's trace id, 0 when untraced.
+    Renew { consumer: u64, lease: u64, trace: u64 },
     /// Consumer returns a lease early (graceful; identity verified).
     Release { consumer: u64, lease: u64 },
     /// Producer takes leased memory back early (harvester reclaim;
-    /// identity verified).
-    Revoke { producer: u64, lease: u64 },
+    /// identity verified). `trace` (v6): caller's trace id, 0 when
+    /// untraced.
+    Revoke { producer: u64, lease: u64, trace: u64 },
     /// Producer leaves the market; its leases are revoked.
     Deregister { producer: u64 },
     /// Ask this endpoint for its live metrics (v4). Served by the
@@ -305,6 +330,11 @@ pub enum CtrlRequest {
     /// loop request/response like every other verb — no push channel,
     /// no replication-specific connection state.
     ReplicaPoll { from_seq: u64, max: u32 },
+    /// Ask this endpoint for its newest recorded spans (v6), at most
+    /// `max`. Served by the broker (primary *and* standby — a trace
+    /// fetch must work exactly when the market is mid-anomaly) and by
+    /// each producer agent's stats endpoint; `memtrade trace` calls it.
+    TraceQuery { max: u32 },
 }
 
 /// Broker -> participant control responses.
@@ -338,6 +368,9 @@ pub enum CtrlResponse {
     /// standby tolerates the gap (re-registration at takeover repairs
     /// whatever it missed) and resumes from `first_seq`.
     ReplicaEvents { first_seq: u64, events: Vec<LeaseEvent> },
+    /// Newest recorded spans answering a [`CtrlRequest::TraceQuery`]
+    /// (v6), oldest first.
+    Traces { spans: Vec<Span> },
     Refused { code: RefuseCode, detail: String },
 }
 
@@ -350,6 +383,7 @@ const TAG_REVOKE: u8 = 69;
 const TAG_DEREGISTER: u8 = 70;
 const TAG_STATS_QUERY: u8 = 71;
 const TAG_REPLICA_POLL: u8 = 72;
+const TAG_TRACE_QUERY: u8 = 73;
 
 const TAG_REGISTERED: u8 = 80;
 const TAG_HEARTBEAT_ACK: u8 = 81;
@@ -361,6 +395,7 @@ const TAG_DEREGISTERED: u8 = 86;
 const TAG_REFUSED: u8 = 87;
 const TAG_STATS: u8 = 88;
 const TAG_REPLICA_EVENTS: u8 = 89;
+const TAG_TRACES: u8 = 90;
 
 /// Wire kind bytes of one [`Metric`] inside a metric set.
 const METRIC_COUNTER: u8 = 1;
@@ -370,7 +405,9 @@ const METRIC_HISTOGRAM: u8 = 3;
 /// Append a [`MetricSet`]: `u32` entry count, then per entry the name
 /// (length-prefixed bytes), a kind byte, and the kind's payload.
 /// Histograms travel as their nonzero `(bucket, count)` pairs — at most
-/// [`HIST_BUCKETS`], usually a handful.
+/// [`HIST_BUCKETS`], usually a handful — followed (v6) by their nonzero
+/// `(bucket, exemplar trace id)` pairs, so `memtrade top` can name a
+/// trace behind a remote endpoint's tail bucket.
 fn put_metric_set(out: &mut Vec<u8>, m: &MetricSet) {
     out.extend_from_slice(&(m.len() as u32).to_le_bytes());
     for (name, metric) in m.iter() {
@@ -392,6 +429,12 @@ fn put_metric_set(out: &mut Vec<u8>, m: &MetricSet) {
                     out.push(i);
                     out.extend_from_slice(&c.to_le_bytes());
                 }
+                let ex = s.nonzero_exemplars();
+                out.push(ex.len() as u8);
+                for (i, t) in ex {
+                    out.push(i);
+                    out.extend_from_slice(&t.to_le_bytes());
+                }
             }
         }
     }
@@ -399,11 +442,12 @@ fn put_metric_set(out: &mut Vec<u8>, m: &MetricSet) {
 
 /// Decode a [`MetricSet`] with allocation bounded by the frame itself:
 /// a hostile entry count cannot reserve more than the frame could hold,
-/// and histogram bucket lists are bounded by both [`HIST_BUCKETS`] and
-/// the remaining bytes. The per-entry floor is 6 wire bytes — an
-/// empty-named histogram with zero nonzero buckets (4-byte name length
-/// + kind + bucket count) — NOT the 13 bytes of a counter entry; a
-/// tighter bound would refuse legitimately encoded frames.
+/// and histogram bucket/exemplar lists are each bounded by both
+/// [`HIST_BUCKETS`] and the remaining bytes. The per-entry floor stays
+/// 6 wire bytes (an empty histogram entry is 7 since the v6 exemplar
+/// count byte, but a *lower* floor only loosens the bound) — NOT the 13
+/// bytes of a counter entry; a tighter bound would refuse legitimately
+/// encoded frames.
 fn take_metric_set(buf: &[u8], off: &mut usize) -> Result<MetricSet, CodecError> {
     let n = take_u32(buf, off)? as usize;
     if n > buf.len() / 6 {
@@ -428,7 +472,19 @@ fn take_metric_set(buf: &[u8], off: &mut usize) -> Result<MetricSet, CodecError>
                     }
                     buckets.push((idx, take_u64(buf, off)?));
                 }
-                m.set_histogram(name, HistogramSnapshot::from_buckets(&buckets));
+                let e = take_u8(buf, off)? as usize;
+                if e > HIST_BUCKETS || e * 9 > buf.len() - *off {
+                    return Err(CodecError::Truncated);
+                }
+                let mut exemplars = Vec::with_capacity(e);
+                for _ in 0..e {
+                    let idx = take_u8(buf, off)?;
+                    if idx as usize >= HIST_BUCKETS {
+                        return Err(CodecError::Truncated);
+                    }
+                    exemplars.push((idx, take_u64(buf, off)?));
+                }
+                m.set_histogram(name, HistogramSnapshot::from_parts(&buckets, &exemplars));
             }
             t => return Err(CodecError::UnknownTag(t)),
         }
@@ -603,6 +659,25 @@ fn take_lease_event(buf: &[u8], off: &mut usize) -> Result<LeaseEvent, CodecErro
     })
 }
 
+/// Bytes of one [`Span`] on the wire: its [`SPAN_WORDS`] `u64 LE` words.
+const SPAN_WIRE_BYTES: usize = SPAN_WORDS * 8;
+
+fn put_span(out: &mut Vec<u8>, s: &Span) {
+    for w in s.to_words() {
+        out.extend_from_slice(&w.to_le_bytes());
+    }
+}
+
+fn take_span(buf: &[u8], off: &mut usize) -> Result<Span, CodecError> {
+    let mut w = [0u64; SPAN_WORDS];
+    for word in w.iter_mut() {
+        *word = take_u64(buf, off)?;
+    }
+    // An invalid role/op/status is a hostile or corrupt frame; the tag
+    // word's low (role) byte names the offender.
+    Span::from_words(&w).ok_or(CodecError::UnknownTag(w[3] as u8))
+}
+
 impl CtrlRequest {
     /// Append the encoded payload to `out` (does not clear it).
     pub fn encode_into(&self, out: &mut Vec<u8>) {
@@ -632,27 +707,30 @@ impl CtrlRequest {
                 out.extend_from_slice(&observed_p99_us.to_le_bytes());
                 out.extend_from_slice(&observed_ops_per_sec.to_le_bytes());
             }
-            CtrlRequest::RequestSlabs { consumer, slabs, min_slabs, ttl_us } => {
+            CtrlRequest::RequestSlabs { consumer, slabs, min_slabs, ttl_us, trace } => {
                 out.push(TAG_REQUEST_SLABS);
                 out.extend_from_slice(&consumer.to_le_bytes());
                 out.extend_from_slice(&slabs.to_le_bytes());
                 out.extend_from_slice(&min_slabs.to_le_bytes());
                 out.extend_from_slice(&ttl_us.to_le_bytes());
+                out.extend_from_slice(&trace.to_le_bytes());
             }
-            CtrlRequest::Renew { consumer, lease } => {
+            CtrlRequest::Renew { consumer, lease, trace } => {
                 out.push(TAG_RENEW);
                 out.extend_from_slice(&consumer.to_le_bytes());
                 out.extend_from_slice(&lease.to_le_bytes());
+                out.extend_from_slice(&trace.to_le_bytes());
             }
             CtrlRequest::Release { consumer, lease } => {
                 out.push(TAG_RELEASE);
                 out.extend_from_slice(&consumer.to_le_bytes());
                 out.extend_from_slice(&lease.to_le_bytes());
             }
-            CtrlRequest::Revoke { producer, lease } => {
+            CtrlRequest::Revoke { producer, lease, trace } => {
                 out.push(TAG_REVOKE);
                 out.extend_from_slice(&producer.to_le_bytes());
                 out.extend_from_slice(&lease.to_le_bytes());
+                out.extend_from_slice(&trace.to_le_bytes());
             }
             CtrlRequest::Deregister { producer } => {
                 out.push(TAG_DEREGISTER);
@@ -662,6 +740,10 @@ impl CtrlRequest {
             CtrlRequest::ReplicaPoll { from_seq, max } => {
                 out.push(TAG_REPLICA_POLL);
                 out.extend_from_slice(&from_seq.to_le_bytes());
+                out.extend_from_slice(&max.to_le_bytes());
+            }
+            CtrlRequest::TraceQuery { max } => {
+                out.push(TAG_TRACE_QUERY);
                 out.extend_from_slice(&max.to_le_bytes());
             }
         }
@@ -700,10 +782,12 @@ impl CtrlRequest {
                 slabs: take_u32(buf, o)?,
                 min_slabs: take_u32(buf, o)?,
                 ttl_us: take_u64(buf, o)?,
+                trace: take_u64(buf, o)?,
             },
             TAG_RENEW => CtrlRequest::Renew {
                 consumer: take_u64(buf, o)?,
                 lease: take_u64(buf, o)?,
+                trace: take_u64(buf, o)?,
             },
             TAG_RELEASE => CtrlRequest::Release {
                 consumer: take_u64(buf, o)?,
@@ -712,6 +796,7 @@ impl CtrlRequest {
             TAG_REVOKE => CtrlRequest::Revoke {
                 producer: take_u64(buf, o)?,
                 lease: take_u64(buf, o)?,
+                trace: take_u64(buf, o)?,
             },
             TAG_DEREGISTER => CtrlRequest::Deregister { producer: take_u64(buf, o)? },
             TAG_STATS_QUERY => CtrlRequest::StatsQuery,
@@ -719,6 +804,7 @@ impl CtrlRequest {
                 from_seq: take_u64(buf, o)?,
                 max: take_u32(buf, o)?,
             },
+            TAG_TRACE_QUERY => CtrlRequest::TraceQuery { max: take_u32(buf, o)? },
             t => return Err(CodecError::UnknownTag(t)),
         };
         finish(req, buf, off)
@@ -781,6 +867,13 @@ impl CtrlResponse {
                 out.extend_from_slice(&(events.len() as u32).to_le_bytes());
                 for ev in events {
                     put_lease_event(out, ev);
+                }
+            }
+            CtrlResponse::Traces { spans } => {
+                out.push(TAG_TRACES);
+                out.extend_from_slice(&(spans.len() as u32).to_le_bytes());
+                for s in spans {
+                    put_span(out, s);
                 }
             }
             CtrlResponse::Refused { code, detail } => {
@@ -867,6 +960,18 @@ impl CtrlResponse {
                     events.push(take_lease_event(buf, o)?);
                 }
                 CtrlResponse::ReplicaEvents { first_seq, events }
+            }
+            TAG_TRACES => {
+                // Spans are fixed-size, so the count bound is exact.
+                let n = take_u32(buf, o)? as usize;
+                if n > buf.len() / SPAN_WIRE_BYTES {
+                    return Err(CodecError::Truncated);
+                }
+                let mut spans = Vec::with_capacity(n);
+                for _ in 0..n {
+                    spans.push(take_span(buf, o)?);
+                }
+                CtrlResponse::Traces { spans }
             }
             TAG_REFUSED => CtrlResponse::Refused {
                 code: RefuseCode::from_byte(take_u8(buf, o)?)?,
@@ -982,13 +1087,20 @@ mod tests {
                 observed_p99_us: 740,
                 observed_ops_per_sec: 12_500,
             },
-            CtrlRequest::RequestSlabs { consumer: 9, slabs: 16, min_slabs: 1, ttl_us: 1 },
-            CtrlRequest::Renew { consumer: 9, lease: 3 },
+            CtrlRequest::RequestSlabs {
+                consumer: 9,
+                slabs: 16,
+                min_slabs: 1,
+                ttl_us: 1,
+                trace: 0xDEAD_BEEF,
+            },
+            CtrlRequest::Renew { consumer: 9, lease: 3, trace: 0 },
             CtrlRequest::Release { consumer: 9, lease: 4 },
-            CtrlRequest::Revoke { producer: 7, lease: 5 },
+            CtrlRequest::Revoke { producer: 7, lease: 5, trace: 11 },
             CtrlRequest::Deregister { producer: 7 },
             CtrlRequest::StatsQuery,
             CtrlRequest::ReplicaPoll { from_seq: 42, max: 256 },
+            CtrlRequest::TraceQuery { max: 512 },
         ];
         for req in cases {
             let enc = req.encode();
@@ -1032,6 +1144,11 @@ mod tests {
                         h.record(v);
                     }
                     m.set_histogram("data.op_us", h.snapshot());
+                    // Exemplar-pinned samples must survive the wire (v6).
+                    let ht = crate::metrics::Histogram::new();
+                    ht.record_traced(4_096, 0xFACE);
+                    ht.record_traced(12, 0xBEEF);
+                    m.set_histogram("data.call_us", ht.snapshot());
                     m
                 },
             },
@@ -1060,6 +1177,35 @@ mod tests {
                 ],
             },
             CtrlResponse::ReplicaEvents { first_seq: 0, events: vec![] },
+            CtrlResponse::Traces {
+                spans: vec![
+                    Span {
+                        trace_id: 0xABCD,
+                        span_id: 1,
+                        parent: 0,
+                        role: crate::trace::Role::Consumer,
+                        op: crate::trace::Op::MultiGet,
+                        status: crate::trace::Status::Ok,
+                        t_start_us: 10,
+                        dur_us: 900,
+                        lease_id: 0,
+                        producer_id: 0,
+                    },
+                    Span {
+                        trace_id: 0xABCD,
+                        span_id: 2,
+                        parent: 1,
+                        role: crate::trace::Role::Producer,
+                        op: crate::trace::Op::Shard,
+                        status: crate::trace::Status::Miss,
+                        t_start_us: 12,
+                        dur_us: 340,
+                        lease_id: 5,
+                        producer_id: 7,
+                    },
+                ],
+            },
+            CtrlResponse::Traces { spans: vec![] },
             CtrlResponse::Refused { code: RefuseCode::LeaseExpired, detail: "late".into() },
             CtrlResponse::Refused { code: RefuseCode::NotPrimary, detail: "standby".into() },
         ];
@@ -1073,7 +1219,7 @@ mod tests {
     fn rejects_malformed() {
         assert_eq!(CtrlRequest::decode(&[]), Err(CodecError::Truncated));
         assert_eq!(CtrlRequest::decode(&[1]), Err(CodecError::UnknownTag(1)));
-        let mut ok = CtrlRequest::Renew { consumer: 9, lease: 1 }.encode();
+        let mut ok = CtrlRequest::Renew { consumer: 9, lease: 1, trace: 0 }.encode();
         ok.push(0);
         assert_eq!(CtrlRequest::decode(&ok), Err(CodecError::TrailingBytes));
         assert_eq!(CtrlResponse::decode(&[TAG_REFUSED, 99]), Err(CodecError::UnknownTag(99)));
@@ -1116,6 +1262,23 @@ mod tests {
     }
 
     #[test]
+    fn traces_decode_bounds_hostile_counts() {
+        // A tiny frame declaring 2^32-1 spans must be refused before
+        // any span list is reserved.
+        let mut buf = vec![TAG_TRACES];
+        buf.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert_eq!(CtrlResponse::decode(&buf), Err(CodecError::Truncated));
+        // A span whose packed role/op/status word is invalid is an
+        // error, not a silently mangled span.
+        let mut buf = vec![TAG_TRACES];
+        buf.extend_from_slice(&1u32.to_le_bytes());
+        for w in [1u64, 2, 0, 0xFF, 5, 6, 7, 8] {
+            buf.extend_from_slice(&w.to_le_bytes());
+        }
+        assert_eq!(CtrlResponse::decode(&buf), Err(CodecError::UnknownTag(0xFF)));
+    }
+
+    #[test]
     fn replica_events_decode_bounds_hostile_counts() {
         // A tiny frame declaring 2^32-1 events must be refused before
         // any event list is reserved.
@@ -1154,7 +1317,17 @@ mod tests {
         old.extend_from_slice(&2u16.to_le_bytes());
         let err = check_hello(&old, DATA_MAGIC).unwrap_err();
         assert!(err.contains("v2"), "{err}");
-        assert!(err.contains("requires v5"), "{err}");
+        assert!(err.contains("requires v6"), "{err}");
+        // A pre-tracing v5 peer (10-byte hello, no flags byte) is
+        // refused the same way: version named, never sent a trace-
+        // suffixed frame it would reject as trailing bytes.
+        let mut v5 = Vec::new();
+        v5.extend_from_slice(&DATA_MAGIC);
+        v5.extend_from_slice(&5u16.to_le_bytes());
+        v5.extend_from_slice(&1024u32.to_le_bytes());
+        let err = check_hello(&v5, DATA_MAGIC).unwrap_err();
+        assert!(err.contains("v5"), "{err}");
+        assert!(err.contains("requires v6"), "{err}");
         // A current-versioned hello of the wrong shape is named malformed.
         let mut bad = hello_payload(DATA_MAGIC).to_vec();
         bad.push(0);
@@ -1177,12 +1350,14 @@ mod tests {
         .unwrap()
         .expect("handshake must complete");
         assert_eq!(info.max_batch_ops, crate::net::wire::MAX_BATCH_OPS as u32);
+        assert!(info.tracing, "default-enabled tracing must be advertised");
         // The server's answer satisfies the client side and carries the
         // same negotiated batch cap.
         let mut c_out = Vec::new();
         let info =
             client_handshake(&mut std::io::Cursor::new(s_out), &mut c_out, DATA_MAGIC).unwrap();
         assert_eq!(info.max_batch_ops, crate::net::wire::MAX_BATCH_OPS as u32);
+        assert!(info.tracing);
     }
 
     #[test]

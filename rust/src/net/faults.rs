@@ -162,6 +162,18 @@ impl FaultPlan {
         &self.counters
     }
 
+    /// Print the one-line chaos banner every fault-carrying role logs at
+    /// startup: which role is under chaos, the plan seed, and the exact
+    /// command that replays this schedule (the determinism contract
+    /// above is what makes the repro command meaningful).
+    pub fn log_banner(&self, role: &str) {
+        eprintln!(
+            "[chaos] {role}: fault plan armed, seed={} \
+             (reproduce: memtrade chaos --seed {})",
+            self.seed, self.seed
+        );
+    }
+
     /// Derive the deterministic per-connection fault state for the
     /// `conn`-th connection under this plan.
     fn state_for(&self, conn: u64) -> Arc<Mutex<FaultState>> {

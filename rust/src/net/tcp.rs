@@ -30,12 +30,13 @@ use crate::metrics::{Counter, Histogram, MetricSet, Observe, Registry};
 use crate::net::control::{client_handshake, server_handshake_patient, DATA_MAGIC};
 use crate::net::faults::{ByzantineSpec, ByzantineState, FaultPlan, FaultyStream};
 use crate::net::wire::{
-    decode_batch_request, decode_batch_response, encode_batch_response_header,
-    encode_multi_delete_into, encode_multi_get_into, encode_multi_put_into,
-    encode_value_response, is_batch_request, read_frame_into, read_frame_into_patient,
-    write_frame, write_frame_noflush, BatchKind, BatchOpRef, Request, RequestRef, Response,
-    MAX_BATCH_OPS,
+    append_trace_ctx, decode_batch_request, decode_batch_response,
+    encode_batch_response_header, encode_multi_delete_into, encode_multi_get_into,
+    encode_multi_put_into, encode_value_response, is_batch_request, read_frame_into,
+    read_frame_into_patient, split_trace_ctx, write_frame, write_frame_noflush, BatchKind,
+    BatchOpRef, Request, RequestRef, Response, MAX_BATCH_OPS,
 };
+use crate::trace::{self, Op as TraceOp, Role, SpanGuard};
 use crate::util::token_bucket::AtomicTokenBucket;
 use std::io::{self, BufReader, BufWriter, Write};
 use std::net::{TcpListener, TcpStream, ToSocketAddrs};
@@ -77,6 +78,9 @@ pub struct ProducerStoreServer {
     /// broker placement), `ops` (ops served; batches count per op), and
     /// `shard.lock_hold_us` (from the instrumented store).
     telemetry: Arc<Registry>,
+    /// Producer id stamped on this server's shard spans (0 until the
+    /// owning agent calls [`Self::set_producer_id`]).
+    producer_id: Arc<AtomicU64>,
 }
 
 /// Everything one connection thread needs, bundled (the serving loop
@@ -91,6 +95,7 @@ struct ConnShared {
     tampered: Arc<AtomicU64>,
     op_us: Arc<Histogram>,
     ops: Arc<Counter>,
+    producer_id: Arc<AtomicU64>,
 }
 
 impl ProducerStoreServer {
@@ -141,6 +146,9 @@ impl ProducerStoreServer {
         let listener = TcpListener::bind(addr)?;
         let local_addr = listener.local_addr()?;
         listener.set_nonblocking(true)?;
+        if let Some(plan) = faults.as_ref() {
+            plan.log_banner("producer-store");
+        }
         let stop = Arc::new(AtomicBool::new(false));
         let telemetry = Arc::new(Registry::new());
         let store = {
@@ -150,12 +158,14 @@ impl ProducerStoreServer {
         };
         let bucket = rate_bps.map(|bps| Arc::new(AtomicTokenBucket::new(bps, bps / 4)));
         let tampered = Arc::new(AtomicU64::new(0));
+        let producer_id = Arc::new(AtomicU64::new(0));
         let op_us = telemetry.histogram("op_us");
         let ops = telemetry.counter("ops");
 
         let stop2 = stop.clone();
         let store2 = store.clone();
         let tampered2 = tampered.clone();
+        let producer_id2 = producer_id.clone();
         let start_instant = Instant::now();
         let accept_handle = std::thread::spawn(move || {
             let mut conn_handles: Vec<JoinHandle<()>> = Vec::new();
@@ -181,6 +191,7 @@ impl ProducerStoreServer {
                             tampered: tampered2.clone(),
                             op_us: op_us.clone(),
                             ops: ops.clone(),
+                            producer_id: producer_id2.clone(),
                         };
                         conn_handles.push(std::thread::spawn(move || {
                             let _ = serve_conn(stream, shared);
@@ -204,7 +215,15 @@ impl ProducerStoreServer {
             store,
             tampered,
             telemetry,
+            producer_id,
         })
+    }
+
+    /// Stamp this data plane's spans with the marketplace producer id,
+    /// so a consumer-side trace names the offending producer (the agent
+    /// calls this right after start — 0 means "not a market producer").
+    pub fn set_producer_id(&self, id: u64) {
+        self.producer_id.store(id, Ordering::Relaxed);
     }
 
     pub fn addr(&self) -> std::net::SocketAddr {
@@ -272,8 +291,17 @@ impl Drop for ProducerStoreServer {
 }
 
 fn serve_conn(stream: FaultyStream, shared: ConnShared) -> io::Result<()> {
-    let ConnShared { store, stop, bucket, start, mut byz, tampered, op_us, ops: ops_ctr } =
-        shared;
+    let ConnShared {
+        store,
+        stop,
+        bucket,
+        start,
+        mut byz,
+        tampered,
+        op_us,
+        ops: ops_ctr,
+        producer_id,
+    } = shared;
     stream.set_read_timeout(Some(std::time::Duration::from_millis(100)))?;
     let mut reader = BufReader::with_capacity(CONN_BUF_BYTES, stream.try_clone()?);
     let mut writer = BufWriter::with_capacity(CONN_BUF_BYTES, stream);
@@ -281,13 +309,16 @@ fn serve_conn(stream: FaultyStream, shared: ConnShared) -> io::Result<()> {
     // stale, pre-batching) peer gets a clear refusal instead of desynced
     // garbage. The hello also carries the batch cap, so a peer never
     // sends batches we would refuse to decode.
-    if server_handshake_patient(&mut reader, &mut writer, DATA_MAGIC, || {
+    let Some(hello) = server_handshake_patient(&mut reader, &mut writer, DATA_MAGIC, || {
         !stop.load(Ordering::Relaxed)
     })?
-    .is_none()
-    {
+    else {
         return Ok(());
-    }
+    };
+    // Both sides advertised tracing in the hello ⇒ every data frame on
+    // this connection carries a 16-byte trace-context suffix (zeros when
+    // the caller has no live trace).
+    let conn_tracing = hello.tracing && trace::enabled();
     // Reused for every request on this connection: the single-op steady
     // state allocates nothing (batches allocate one bounded op table +
     // lock table per frame, amortized over up to MAX_BATCH_OPS ops).
@@ -315,6 +346,27 @@ fn serve_conn(stream: FaultyStream, shared: ConnShared) -> io::Result<()> {
         // inverting the placement feedback this signal exists for.
         let t_op = Instant::now();
         let mut frame_ops: u64 = 0;
+        // On a tracing connection every frame ends in the trace-context
+        // suffix; peel it off before the codec sees the payload (the
+        // codec's strict trailing-bytes discipline stays intact).
+        let (mut ctx_trace, mut ctx_parent) = (0u64, 0u64);
+        let mut body_ok = true;
+        let body: &[u8] = if conn_tracing {
+            match split_trace_ctx(&frame) {
+                Ok((b, t, p)) => {
+                    ctx_trace = t;
+                    ctx_parent = p;
+                    b
+                }
+                Err(e) => {
+                    body_ok = false;
+                    Response::Error(e.to_string()).encode_into(&mut out);
+                    &[]
+                }
+            }
+        } else {
+            &frame[..]
+        };
         // Rate limiting (paper §4.2): refuse oversized I/O, priced by
         // frame bytes (one draw covers a whole batch). The bucket is
         // lock-free, so throttling accounting never serializes
@@ -330,9 +382,16 @@ fn serve_conn(stream: FaultyStream, shared: ConnShared) -> io::Result<()> {
                 }
             })
         };
-        if is_batch_request(&frame) {
+        // Adopt the caller's trace for the rest of this frame: the shard
+        // span below chains to the consumer's wire span, so one trace id
+        // follows the op across the role boundary. Both guards are no-ops
+        // (nothing recorded) on untraced frames.
+        let _adopt = (ctx_trace != 0).then(|| trace::adopt(ctx_trace, ctx_parent));
+        let mut shard_span = SpanGuard::child(Role::Producer, TraceOp::Shard);
+        shard_span.set_producer(producer_id.load(Ordering::Relaxed));
+        if body_ok && is_batch_request(body) {
             let mut ops: Vec<BatchOpRef<'_>> = Vec::new();
-            match decode_batch_request(&frame, &mut ops) {
+            match decode_batch_request(body, &mut ops) {
                 Err(e) => Response::Error(e.to_string()).encode_into(&mut out),
                 Ok(()) => match throttle(frame.len()) {
                     Some(retry_after_us) => {
@@ -349,8 +408,8 @@ fn serve_conn(stream: FaultyStream, shared: ConnShared) -> io::Result<()> {
                     }
                 },
             }
-        } else {
-            match RequestRef::decode(&frame) {
+        } else if body_ok {
+            match RequestRef::decode(body) {
                 Err(e) => Response::Error(e.to_string()).encode_into(&mut out),
                 Ok(req) => match throttle(frame.len()) {
                     Some(retry_after_us) => {
@@ -394,7 +453,11 @@ fn serve_conn(stream: FaultyStream, shared: ConnShared) -> io::Result<()> {
         }
         write_frame(&mut writer, &out)?;
         if frame_ops > 0 {
-            op_us.record_elapsed_us(t_op);
+            // Traced variant of the one-relaxed-add record: a sample that
+            // lands in a top bucket pins this frame's trace id as the
+            // bucket's exemplar, so `memtrade top` can name a worst
+            // offender by trace (untraced frames pass id 0 = no pin).
+            op_us.record_traced(t_op.elapsed().as_micros() as u64, ctx_trace);
             ops_ctr.add(frame_ops);
         }
         bound_scratch(&mut frame);
@@ -495,6 +558,9 @@ pub struct KvClient {
     max_batch: usize,
     /// In-flight frame window for pipelined paths (1 = one-shot).
     window: usize,
+    /// Both sides advertised tracing in the hello: append the 16-byte
+    /// trace-context suffix to every request frame.
+    trace_wire: bool,
     /// An I/O or protocol error desynced the stream; refuse further use.
     poisoned: bool,
 }
@@ -553,6 +619,7 @@ impl KvClient {
             recv_buf: Vec::new(),
             max_batch: (hello.max_batch_ops as usize).clamp(1, MAX_BATCH_OPS),
             window: 1,
+            trace_wire: hello.tracing && trace::enabled(),
             poisoned: false,
         })
     }
@@ -610,6 +677,10 @@ impl KvClient {
         self.check_live()?;
         self.send_buf.clear();
         req.encode_into(&mut self.send_buf);
+        if self.trace_wire {
+            let (t, p) = trace::current();
+            append_trace_ctx(&mut self.send_buf, t, p);
+        }
         if let Err(e) = write_frame_noflush(&mut self.writer, &self.send_buf) {
             self.poisoned = true;
             return Err(e);
@@ -646,6 +717,10 @@ impl KvClient {
     /// owned `Request` is built per call). Exactly the pipelined path
     /// at window = 1.
     pub fn call_ref(&mut self, req: RequestRef<'_>) -> io::Result<Response> {
+        // Wire span: the on-the-wire window of the ambient trace; the
+        // trace-context suffix sent below names it as the parent of the
+        // producer's shard span. No-op when no trace is live.
+        let _wire = SpanGuard::child(Role::Consumer, TraceOp::Wire);
         self.send_request(req)?;
         self.recv_response()
     }
@@ -659,6 +734,7 @@ impl KvClient {
     /// window refills. `window = 1` degenerates to sequential one-shot
     /// calls.
     pub fn call_many(&mut self, reqs: &[Request], window: usize) -> io::Result<Vec<Response>> {
+        let _wire = SpanGuard::child(Role::Consumer, TraceOp::Wire);
         let window = window.max(1);
         let mut resps = Vec::with_capacity(reqs.len());
         let mut sent = 0usize;
@@ -686,6 +762,7 @@ impl KvClient {
             return Ok(Vec::new());
         }
         self.check_live()?;
+        let _wire = SpanGuard::child(Role::Consumer, TraceOp::Wire);
         let out = self.exchange_batches_inner(total, encode_chunk);
         if out.is_err() {
             self.poisoned = true;
@@ -708,6 +785,10 @@ impl KvClient {
             while sent < n_chunks && sent - recvd < window {
                 self.send_buf.clear();
                 encode_chunk(&mut self.send_buf, chunk_range(sent));
+                if self.trace_wire {
+                    let (t, p) = trace::current();
+                    append_trace_ctx(&mut self.send_buf, t, p);
+                }
                 write_frame_noflush(&mut self.writer, &self.send_buf)?;
                 sent += 1;
             }
@@ -1167,6 +1248,42 @@ mod tests {
         assert!(m.histogram("data.shard.lock_hold_us").unwrap().count() >= 3);
         assert_eq!(m.counter("store.puts"), Some(1));
         assert!(m.gauge("store.used_bytes").unwrap() > 0);
+        server.stop();
+    }
+
+    #[test]
+    fn tcp_propagates_trace_context_to_the_server_shard_span() {
+        let server = ProducerStoreServer::start("127.0.0.1:0", 1 << 20, None, 21).unwrap();
+        server.set_producer_id(77);
+        let mut client = KvClient::connect(server.addr()).unwrap();
+        assert!(client.put(b"k", b"v").unwrap());
+        let trace_id = {
+            let root = SpanGuard::root(Role::Consumer, TraceOp::Get);
+            let id = root.trace_id();
+            assert_eq!(client.get(b"k").unwrap(), Some(b"v".to_vec()));
+            id
+        };
+        // Fence: the server records the traced frame's shard span at the
+        // end of its loop iteration, strictly before answering the next
+        // frame on the same connection — so after this untraced ping
+        // round-trips, the span above is visible.
+        assert_eq!(client.call_ref(RequestRef::Ping).unwrap(), Response::Pong);
+        let spans = trace::recent_spans(4096);
+        let wire = spans
+            .iter()
+            .find(|s| s.trace_id == trace_id && s.op == TraceOp::Wire)
+            .expect("client wire span recorded");
+        let shard = spans
+            .iter()
+            .find(|s| s.trace_id == trace_id && s.op == TraceOp::Shard)
+            .expect("server shard span shares the client's trace id");
+        assert_eq!(shard.role, Role::Producer);
+        assert_eq!(shard.parent, wire.span_id, "shard span chains to the wire span");
+        assert_eq!(shard.producer_id, 77);
+        // The traced frame's latency sample pinned its trace id as the
+        // bucket exemplar in the placement-facing histogram.
+        let h = server.metrics().histogram("data.op_us").unwrap().clone();
+        assert!(h.exemplars.contains(&trace_id), "op_us pins the trace id");
         server.stop();
     }
 

@@ -99,6 +99,39 @@ pub const MAX_FRAME: usize = 16 << 20;
 /// so a hostile count cannot force a huge table allocation.
 pub const MAX_BATCH_OPS: usize = 1024;
 
+/// Bytes of the trace context (v6) a data-plane *request* frame carries
+/// as a fixed suffix when — and only when — both hellos advertised
+/// tracing: `trace_id u64 LE` + `parent_span_id u64 LE`, zeros when the
+/// caller is untraced. The suffix rides *outside* the request payload:
+/// [`RequestRef::decode`] and [`decode_batch_request`] keep their
+/// strict trailing-bytes discipline, and the server splits the context
+/// off with [`split_trace_ctx`] before decoding. Responses never carry
+/// it — the requester already knows its own trace.
+pub const TRACE_CTX_BYTES: usize = 16;
+
+/// Append the (v6) trace-context suffix to an encoded request frame.
+#[inline]
+pub fn append_trace_ctx(out: &mut Vec<u8>, trace_id: u64, parent_span: u64) {
+    out.extend_from_slice(&trace_id.to_le_bytes());
+    out.extend_from_slice(&parent_span.to_le_bytes());
+}
+
+/// Split the (v6) trace-context suffix off a request frame, returning
+/// `(request payload, trace_id, parent_span_id)`. Only called on
+/// connections whose handshake negotiated tracing — there the suffix is
+/// unconditional, so a frame too short to carry it is truncated, not
+/// ambiguous.
+#[inline]
+pub fn split_trace_ctx(frame: &[u8]) -> Result<(&[u8], u64, u64), CodecError> {
+    if frame.len() < TRACE_CTX_BYTES {
+        return Err(CodecError::Truncated);
+    }
+    let at = frame.len() - TRACE_CTX_BYTES;
+    let trace_id = u64::from_le_bytes(frame[at..at + 8].try_into().unwrap());
+    let parent = u64::from_le_bytes(frame[at + 8..].try_into().unwrap());
+    Ok((&frame[..at], trace_id, parent))
+}
+
 pub(crate) fn put_bytes(out: &mut Vec<u8>, b: &[u8]) {
     out.extend_from_slice(&(b.len() as u32).to_le_bytes());
     out.extend_from_slice(b);
@@ -706,6 +739,30 @@ mod tests {
         ok.push(0);
         assert_eq!(Request::decode(&ok), Err(CodecError::TrailingBytes));
         assert_eq!(Response::decode(&[TAG_DELETED]), Err(CodecError::Truncated));
+    }
+
+    #[test]
+    fn trace_ctx_suffix_splits_cleanly() {
+        // The v6 suffix rides outside the payload: append it, split it,
+        // and the remaining body still satisfies the strict
+        // trailing-bytes decode.
+        let mut frame = Request::Get { key: b"k1".to_vec() }.encode();
+        append_trace_ctx(&mut frame, 0xABCD_EF01, 0x42);
+        let (body, trace, parent) = split_trace_ctx(&frame).unwrap();
+        assert_eq!((trace, parent), (0xABCD_EF01, 0x42));
+        assert_eq!(
+            RequestRef::decode(body).unwrap(),
+            RequestRef::Get { key: b"k1" }
+        );
+        // An untraced caller sends zeros — same framing, no ambiguity.
+        let mut frame = Request::Ping.encode();
+        append_trace_ctx(&mut frame, 0, 0);
+        let (body, trace, parent) = split_trace_ctx(&frame).unwrap();
+        assert_eq!((trace, parent), (0, 0));
+        assert_eq!(RequestRef::decode(body).unwrap(), RequestRef::Ping);
+        // On a tracing-negotiated connection a too-short frame is
+        // truncated, never silently treated as suffix-less.
+        assert_eq!(split_trace_ctx(&[0u8; 15]), Err(CodecError::Truncated));
     }
 
     #[test]

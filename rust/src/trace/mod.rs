@@ -1,0 +1,757 @@
+//! End-to-end request tracing (protocol v6) with a crash-dump flight
+//! recorder: the attribution layer the metrics plane cannot provide.
+//!
+//! Histograms (PR 5) prove *that* a tail exists; this module says
+//! *which* consumer call, routed to *which* producer under *which*
+//! lease, produced it. Three pieces:
+//!
+//! * **Span rings** — every thread owns a fixed-capacity lock-free ring
+//!   of [`Span`]s. Recording is one relaxed atomic index bump plus eight
+//!   relaxed word stores: no locks, no allocation, no syscalls on the
+//!   hot path. Old spans are overwritten in place (a flight recorder,
+//!   not a log); a concurrent cold read may observe a torn span, which
+//!   the read path filters by validating the packed role/op/status word.
+//! * **Ambient trace context** — a thread-local `(trace_id,
+//!   parent_span)` pair. [`SpanGuard::root`] opens a new trace,
+//!   [`SpanGuard::child`] nests under whatever is current (a no-op when
+//!   no trace is active, so instrumented layers cost one TLS read when
+//!   called outside a trace), and [`adopt`] installs a context received
+//!   from the wire — how a producer's shard span ends up parented to
+//!   the consumer's wire span. Guards record on drop with the measured
+//!   duration and restore the previous context.
+//! * **Flight recorder** — on anomaly (integrity failure, `NotPrimary`
+//!   storm, broker takeover, p99 SLO breach) a role calls [`dump`]:
+//!   the last [`DUMP_SPANS`] spans across all rings are written as one
+//!   JSONL file to the configured dir (unset = disabled), throttled per
+//!   (role, reason) so an anomaly storm cannot flood the disk. The
+//!   `TraceQuery` control verb serves the same rings remotely.
+//!
+//! Ids are 64-bit, generated from a splitmix-mixed global counter
+//! seeded with wall clock and pid, so two processes in one topology do
+//! not collide. Id 0 is reserved ("no trace"): frames and control verbs
+//! carry 0 when no trace is active, and every consumer treats 0 as
+//! "untraced".
+
+use std::cell::Cell;
+use std::collections::BTreeMap;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::{Duration, Instant};
+
+/// Spans each per-thread ring holds before wrapping.
+pub const RING_SPANS: usize = 1024;
+
+/// Most spans one flight-recorder dump (or `TraceQuery` answer) carries.
+pub const DUMP_SPANS: usize = 512;
+
+/// `u64` words in one packed span (the ring slot / wire encoding unit).
+pub const SPAN_WORDS: usize = 8;
+
+/// Minimum gap between two dumps for the same (role, reason) pair.
+const DUMP_THROTTLE: Duration = Duration::from_millis(250);
+
+/// Which marketplace role recorded a span.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Role {
+    Consumer = 1,
+    Producer = 2,
+    Broker = 3,
+}
+
+impl Role {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Role::Consumer => "consumer",
+            Role::Producer => "producer",
+            Role::Broker => "broker",
+        }
+    }
+
+    fn from_u8(b: u8) -> Option<Role> {
+        Some(match b {
+            1 => Role::Consumer,
+            2 => Role::Producer,
+            3 => Role::Broker,
+            _ => return None,
+        })
+    }
+}
+
+/// What a span measured. The first six mirror the consumer API; the
+/// rest name the causal hops one call fans into: pool route → wire →
+/// producer shard → seal/verify, plus the market verbs a trace id rides
+/// on the control plane.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Op {
+    Get = 1,
+    Put = 2,
+    Delete = 3,
+    MultiGet = 4,
+    MultiPut = 5,
+    MultiDelete = 6,
+    Ping = 7,
+    /// Consumer-pool slot routing for one call.
+    Route = 8,
+    /// One framed exchange on a data-plane connection.
+    Wire = 9,
+    /// Producer-side service of one data frame (shard lock + execute).
+    Shard = 10,
+    /// Envelope seal (encrypt + hash) of one value.
+    Seal = 11,
+    /// Envelope verify (+ decrypt) of one fetched value.
+    Verify = 12,
+    /// `RequestSlabs` handling (consumer side and broker side).
+    Grant = 13,
+    /// Lease renewal.
+    Renew = 14,
+    /// Lease revocation.
+    Revoke = 15,
+}
+
+impl Op {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Op::Get => "get",
+            Op::Put => "put",
+            Op::Delete => "delete",
+            Op::MultiGet => "multi_get",
+            Op::MultiPut => "multi_put",
+            Op::MultiDelete => "multi_delete",
+            Op::Ping => "ping",
+            Op::Route => "route",
+            Op::Wire => "wire",
+            Op::Shard => "shard",
+            Op::Seal => "seal",
+            Op::Verify => "verify",
+            Op::Grant => "grant",
+            Op::Renew => "renew",
+            Op::Revoke => "revoke",
+        }
+    }
+
+    fn from_u8(b: u8) -> Option<Op> {
+        Some(match b {
+            1 => Op::Get,
+            2 => Op::Put,
+            3 => Op::Delete,
+            4 => Op::MultiGet,
+            5 => Op::MultiPut,
+            6 => Op::MultiDelete,
+            7 => Op::Ping,
+            8 => Op::Route,
+            9 => Op::Wire,
+            10 => Op::Shard,
+            11 => Op::Seal,
+            12 => Op::Verify,
+            13 => Op::Grant,
+            14 => Op::Renew,
+            15 => Op::Revoke,
+            _ => return None,
+        })
+    }
+}
+
+/// How the spanned operation ended.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Status {
+    Ok = 0,
+    Miss = 1,
+    Error = 2,
+}
+
+impl Status {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Status::Ok => "ok",
+            Status::Miss => "miss",
+            Status::Error => "error",
+        }
+    }
+
+    fn from_u8(b: u8) -> Option<Status> {
+        Some(match b {
+            0 => Status::Ok,
+            1 => Status::Miss,
+            2 => Status::Error,
+            _ => return None,
+        })
+    }
+}
+
+/// One recorded span. Packs to exactly [`SPAN_WORDS`] `u64` words — the
+/// ring-slot form, the `Traces` wire form, and (rendered) the JSONL
+/// dump form are all this.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Span {
+    pub trace_id: u64,
+    pub span_id: u64,
+    /// Parent span id (0 = trace root).
+    pub parent: u64,
+    pub role: Role,
+    pub op: Op,
+    pub status: Status,
+    /// Start time, µs since this process's trace epoch.
+    pub t_start_us: u64,
+    pub dur_us: u64,
+    /// Lease the op ran under (0 = none/unknown).
+    pub lease_id: u64,
+    /// Producer the op touched (0 = none/unknown).
+    pub producer_id: u64,
+}
+
+impl Span {
+    /// Pack into the 8-word form: `[trace, span, parent, role|op<<8|
+    /// status<<16, t_start_us, dur_us, lease, producer]`.
+    #[inline]
+    pub fn to_words(&self) -> [u64; SPAN_WORDS] {
+        let tags =
+            self.role as u64 | (self.op as u64) << 8 | (self.status as u64) << 16;
+        [
+            self.trace_id,
+            self.span_id,
+            self.parent,
+            tags,
+            self.t_start_us,
+            self.dur_us,
+            self.lease_id,
+            self.producer_id,
+        ]
+    }
+
+    /// Unpack; `None` when the role/op/status byte is invalid or the
+    /// tag word carries extra bits (a torn ring slot or hostile frame).
+    pub fn from_words(w: &[u64; SPAN_WORDS]) -> Option<Span> {
+        if w[3] >> 24 != 0 {
+            return None;
+        }
+        Some(Span {
+            trace_id: w[0],
+            span_id: w[1],
+            parent: w[2],
+            role: Role::from_u8(w[3] as u8)?,
+            op: Op::from_u8((w[3] >> 8) as u8)?,
+            status: Status::from_u8((w[3] >> 16) as u8)?,
+            t_start_us: w[4],
+            dur_us: w[5],
+            lease_id: w[6],
+            producer_id: w[7],
+        })
+    }
+
+    /// One JSONL line, fixed key order (dumps diff cleanly across runs).
+    pub fn to_json_line(&self) -> String {
+        format!(
+            "{{\"trace_id\":{},\"span_id\":{},\"parent\":{},\"role\":\"{}\",\
+             \"op\":\"{}\",\"t_start_us\":{},\"dur_us\":{},\"lease_id\":{},\
+             \"producer_id\":{},\"status\":\"{}\"}}",
+            self.trace_id,
+            self.span_id,
+            self.parent,
+            self.role.as_str(),
+            self.op.as_str(),
+            self.t_start_us,
+            self.dur_us,
+            self.lease_id,
+            self.producer_id,
+            self.status.as_str()
+        )
+    }
+}
+
+/// One thread's span ring: `RING_SPANS` slots of `SPAN_WORDS` relaxed
+/// atomics plus a monotonically increasing write index.
+pub struct SpanRing {
+    slots: Box<[AtomicU64]>,
+    next: AtomicU64,
+}
+
+impl SpanRing {
+    fn new() -> Arc<SpanRing> {
+        Arc::new(SpanRing {
+            slots: (0..RING_SPANS * SPAN_WORDS)
+                .map(|_| AtomicU64::new(0))
+                .collect::<Vec<_>>()
+                .into_boxed_slice(),
+            next: AtomicU64::new(0),
+        })
+    }
+
+    /// Record one packed span: one index bump, eight word stores.
+    #[inline]
+    fn record(&self, w: &[u64; SPAN_WORDS]) {
+        let slot =
+            (self.next.fetch_add(1, Ordering::Relaxed) as usize % RING_SPANS) * SPAN_WORDS;
+        for (k, v) in w.iter().enumerate() {
+            self.slots[slot + k].store(*v, Ordering::Relaxed);
+        }
+    }
+
+    /// Append every currently readable span (invalid/torn slots are
+    /// skipped — the wrap-overwrite race is benign by design).
+    fn read_into(&self, out: &mut Vec<Span>) {
+        let written = self.next.load(Ordering::Relaxed).min(RING_SPANS as u64) as usize;
+        for s in 0..written {
+            let mut w = [0u64; SPAN_WORDS];
+            for (k, word) in w.iter_mut().enumerate() {
+                *word = self.slots[s * SPAN_WORDS + k].load(Ordering::Relaxed);
+            }
+            if let Some(span) = Span::from_words(&w) {
+                if span.span_id != 0 {
+                    out.push(span);
+                }
+            }
+        }
+    }
+}
+
+/// Process-global ring registry: every thread's ring, registered on the
+/// thread's first span. `recent_spans`/`dump` read all of them.
+fn registry() -> &'static Mutex<Vec<Arc<SpanRing>>> {
+    static R: OnceLock<Mutex<Vec<Arc<SpanRing>>>> = OnceLock::new();
+    R.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+thread_local! {
+    /// This thread's ring (registered globally on first use).
+    static RING: Arc<SpanRing> = {
+        let ring = SpanRing::new();
+        registry().lock().unwrap().push(ring.clone());
+        ring
+    };
+    /// Ambient (trace_id, parent_span) context; (0, 0) = no trace.
+    static AMBIENT: Cell<(u64, u64)> = const { Cell::new((0, 0)) };
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(true);
+
+/// Globally enable/disable span recording (the bench harness measures
+/// both states; disabled recording costs one relaxed load).
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// The process's trace epoch: all `t_start_us` values count from here.
+fn epoch() -> Instant {
+    static E: OnceLock<Instant> = OnceLock::new();
+    *E.get_or_init(Instant::now)
+}
+
+/// Microseconds since the trace epoch.
+#[inline]
+pub fn now_us() -> u64 {
+    epoch().elapsed().as_micros() as u64
+}
+
+/// Splitmix64 finalizer — full-period mixing of the id counter.
+#[inline]
+fn mix(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+fn id_seed() -> u64 {
+    static S: OnceLock<u64> = OnceLock::new();
+    *S.get_or_init(|| {
+        let wall = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_nanos() as u64)
+            .unwrap_or(0);
+        wall ^ ((std::process::id() as u64) << 32)
+    })
+}
+
+static NEXT_ID: AtomicU64 = AtomicU64::new(0);
+
+/// A fresh nonzero 64-bit id (trace or span).
+#[inline]
+pub fn new_id() -> u64 {
+    let n = NEXT_ID.fetch_add(1, Ordering::Relaxed);
+    let id = mix(id_seed().wrapping_add(n.wrapping_mul(0x9E37_79B9_7F4A_7C15)));
+    if id == 0 {
+        1
+    } else {
+        id
+    }
+}
+
+/// Record one finished span into this thread's ring (no-op when
+/// disabled). Allocation-free after the thread's first span.
+#[inline]
+pub fn record(span: &Span) {
+    if !enabled() {
+        return;
+    }
+    let w = span.to_words();
+    RING.with(|r| r.record(&w));
+}
+
+/// The ambient `(trace_id, parent_span)` — what an outgoing data frame
+/// or control verb stamps as its trace context. `(0, 0)` = untraced.
+#[inline]
+pub fn current() -> (u64, u64) {
+    AMBIENT.with(Cell::get)
+}
+
+/// Restores the previous ambient context on drop (see [`adopt`]).
+pub struct AdoptGuard {
+    prev: (u64, u64),
+}
+
+impl Drop for AdoptGuard {
+    fn drop(&mut self) {
+        AMBIENT.with(|c| c.set(self.prev));
+    }
+}
+
+/// Install a trace context received from the wire as this thread's
+/// ambient context — the server-side half of propagation: spans opened
+/// while the guard lives parent under `(trace_id, parent_span)`.
+pub fn adopt(trace_id: u64, parent_span: u64) -> AdoptGuard {
+    let prev = current();
+    AMBIENT.with(|c| c.set((trace_id, parent_span)));
+    AdoptGuard { prev }
+}
+
+/// An open span: measures from construction to drop, then records and
+/// restores the previous ambient context. While it lives, the ambient
+/// parent is this span — children nest automatically.
+pub struct SpanGuard {
+    span: Option<Span>,
+    prev: (u64, u64),
+    t0: Instant,
+}
+
+impl SpanGuard {
+    /// Open a new trace: fresh trace id, parent 0. Records even when no
+    /// trace was active (this *starts* the causal chain).
+    pub fn root(role: Role, op: Op) -> SpanGuard {
+        Self::start(role, op, true)
+    }
+
+    /// Open a child of the ambient context. When no trace is active (or
+    /// tracing is disabled) this is a recorded-nothing no-op, so
+    /// instrumented inner layers cost one TLS read outside a trace.
+    pub fn child(role: Role, op: Op) -> SpanGuard {
+        Self::start(role, op, false)
+    }
+
+    fn start(role: Role, op: Op, is_root: bool) -> SpanGuard {
+        let t0 = Instant::now();
+        if !enabled() {
+            return SpanGuard { span: None, prev: (0, 0), t0 };
+        }
+        let (ambient_trace, ambient_parent) = current();
+        let (trace_id, parent) = if is_root {
+            (new_id(), 0)
+        } else if ambient_trace != 0 {
+            (ambient_trace, ambient_parent)
+        } else {
+            return SpanGuard { span: None, prev: (0, 0), t0 };
+        };
+        let span_id = new_id();
+        let prev = (ambient_trace, ambient_parent);
+        AMBIENT.with(|c| c.set((trace_id, span_id)));
+        SpanGuard {
+            span: Some(Span {
+                trace_id,
+                span_id,
+                parent,
+                role,
+                op,
+                status: Status::Ok,
+                t_start_us: now_us(),
+                dur_us: 0,
+                lease_id: 0,
+                producer_id: 0,
+            }),
+            prev,
+            t0,
+        }
+    }
+
+    /// True when this guard will record a span on drop.
+    pub fn is_active(&self) -> bool {
+        self.span.is_some()
+    }
+
+    /// This guard's trace id (0 when inactive) — what control verbs and
+    /// data frames carry.
+    pub fn trace_id(&self) -> u64 {
+        self.span.as_ref().map_or(0, |s| s.trace_id)
+    }
+
+    /// This guard's span id (0 when inactive).
+    pub fn span_id(&self) -> u64 {
+        self.span.as_ref().map_or(0, |s| s.span_id)
+    }
+
+    pub fn set_lease(&mut self, lease_id: u64) {
+        if let Some(s) = self.span.as_mut() {
+            s.lease_id = lease_id;
+        }
+    }
+
+    pub fn set_producer(&mut self, producer_id: u64) {
+        if let Some(s) = self.span.as_mut() {
+            s.producer_id = producer_id;
+        }
+    }
+
+    pub fn set_status(&mut self, status: Status) {
+        if let Some(s) = self.span.as_mut() {
+            s.status = status;
+        }
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if let Some(mut s) = self.span.take() {
+            s.dur_us = self.t0.elapsed().as_micros() as u64;
+            record(&s);
+            AMBIENT.with(|c| c.set(self.prev));
+        }
+    }
+}
+
+/// The newest `max` spans across every thread's ring, sorted by
+/// `(t_start_us, span_id)`. Cold path: allocates and locks the
+/// registry; serves `TraceQuery` and the flight recorder.
+pub fn recent_spans(max: usize) -> Vec<Span> {
+    let rings: Vec<Arc<SpanRing>> = registry().lock().unwrap().clone();
+    let mut out = Vec::new();
+    for ring in rings {
+        ring.read_into(&mut out);
+    }
+    out.sort_by_key(|s| (s.t_start_us, s.span_id));
+    if out.len() > max {
+        out.drain(..out.len() - max);
+    }
+    out
+}
+
+struct DumpState {
+    dir: Option<PathBuf>,
+    last: BTreeMap<String, Instant>,
+}
+
+fn dump_state() -> &'static Mutex<DumpState> {
+    static D: OnceLock<Mutex<DumpState>> = OnceLock::new();
+    D.get_or_init(|| Mutex::new(DumpState { dir: None, last: BTreeMap::new() }))
+}
+
+static DUMP_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Configure (or disable, with `None`) the flight-recorder dump dir.
+/// The dir is created eagerly so a dump at anomaly time only writes.
+pub fn set_dump_dir(dir: Option<&Path>) {
+    if let Some(d) = dir {
+        let _ = std::fs::create_dir_all(d);
+    }
+    dump_state().lock().unwrap().dir = dir.map(Path::to_path_buf);
+}
+
+/// The currently configured dump dir, if any.
+pub fn dump_dir() -> Option<PathBuf> {
+    dump_state().lock().unwrap().dir.clone()
+}
+
+/// Flight-recorder dump: write the last [`DUMP_SPANS`] spans as JSONL
+/// to `{role}-{reason}-{seq}.jsonl` in the configured dir. Returns the
+/// written path, or `None` when no dir is configured, the (role,
+/// reason) pair dumped within [`DUMP_THROTTLE`], or the write failed
+/// (an anomaly handler must never take its role down over a dump).
+pub fn dump(role: &str, reason: &str) -> Option<PathBuf> {
+    let dir = {
+        let mut st = dump_state().lock().unwrap();
+        let dir = st.dir.clone()?;
+        let key = format!("{role}/{reason}");
+        if let Some(t) = st.last.get(&key) {
+            if t.elapsed() < DUMP_THROTTLE {
+                return None;
+            }
+        }
+        st.last.insert(key, Instant::now());
+        dir
+    };
+    let spans = recent_spans(DUMP_SPANS);
+    let seq = DUMP_SEQ.fetch_add(1, Ordering::Relaxed);
+    let path = dir.join(format!("{role}-{reason}-{seq}.jsonl"));
+    let mut f = std::fs::File::create(&path).ok()?;
+    for s in &spans {
+        writeln!(f, "{}", s.to_json_line()).ok()?;
+    }
+    Some(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn span_words_round_trip_and_reject_torn() {
+        let span = Span {
+            trace_id: 7,
+            span_id: 8,
+            parent: 0,
+            role: Role::Producer,
+            op: Op::Shard,
+            status: Status::Miss,
+            t_start_us: 123,
+            dur_us: 45,
+            lease_id: 6,
+            producer_id: 2,
+        };
+        let w = span.to_words();
+        assert_eq!(Span::from_words(&w), Some(span));
+        // Invalid role/op/status bytes and dirty upper tag bits are all
+        // filtered (the torn-slot / hostile-frame defense).
+        let mut bad = w;
+        bad[3] = 0; // role 0
+        assert_eq!(Span::from_words(&bad), None);
+        bad[3] = 1 | (99 << 8); // op 99
+        assert_eq!(Span::from_words(&bad), None);
+        bad[3] = 1 | (1 << 8) | (9 << 16); // status 9
+        assert_eq!(Span::from_words(&bad), None);
+        bad[3] = w[3] | (1 << 40); // extra bits
+        assert_eq!(Span::from_words(&bad), None);
+    }
+
+    #[test]
+    fn json_line_has_fixed_key_order() {
+        let span = Span {
+            trace_id: 1,
+            span_id: 2,
+            parent: 0,
+            role: Role::Consumer,
+            op: Op::MultiGet,
+            status: Status::Ok,
+            t_start_us: 10,
+            dur_us: 3,
+            lease_id: 0,
+            producer_id: 0,
+        };
+        let line = span.to_json_line();
+        assert!(line.starts_with("{\"trace_id\":1,\"span_id\":2,\"parent\":0"), "{line}");
+        assert!(line.contains("\"role\":\"consumer\""), "{line}");
+        assert!(line.contains("\"op\":\"multi_get\""), "{line}");
+        assert!(line.ends_with("\"status\":\"ok\"}"), "{line}");
+    }
+
+    #[test]
+    fn ids_are_nonzero_and_distinct() {
+        let a = new_id();
+        let b = new_id();
+        assert_ne!(a, 0);
+        assert_ne!(b, 0);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn guards_nest_restore_and_dump() {
+        // One sequential test covers recording, nesting, adopt, ring
+        // readback, and the dump path: the module's globals (rings,
+        // ambient context) are exercised without cross-test races.
+        assert_eq!(current(), (0, 0));
+        let (root_trace, root_span, child_span);
+        {
+            let root = SpanGuard::root(Role::Consumer, Op::MultiGet);
+            assert!(root.is_active());
+            root_trace = root.trace_id();
+            root_span = root.span_id();
+            assert_eq!(current(), (root_trace, root_span));
+            {
+                let mut child = SpanGuard::child(Role::Consumer, Op::Wire);
+                child.set_lease(77);
+                child_span = child.span_id();
+                assert_eq!(current(), (root_trace, child_span));
+            }
+            // Child restored the parent context.
+            assert_eq!(current(), (root_trace, root_span));
+        }
+        assert_eq!(current(), (0, 0));
+
+        // An adopted remote context parents a producer-side span.
+        let shard_span;
+        {
+            let _adopted = adopt(root_trace, child_span);
+            let mut g = SpanGuard::child(Role::Producer, Op::Shard);
+            g.set_producer(3);
+            shard_span = g.span_id();
+            assert!(g.is_active());
+        }
+        assert_eq!(current(), (0, 0));
+
+        let spans = recent_spans(DUMP_SPANS);
+        let mine: Vec<&Span> =
+            spans.iter().filter(|s| s.trace_id == root_trace).collect();
+        assert_eq!(mine.len(), 3, "root + wire child + adopted shard");
+        let root = mine.iter().find(|s| s.span_id == root_span).unwrap();
+        assert_eq!(root.parent, 0);
+        let wire = mine.iter().find(|s| s.span_id == child_span).unwrap();
+        assert_eq!(wire.parent, root_span);
+        assert_eq!(wire.lease_id, 77);
+        let shard = mine.iter().find(|s| s.span_id == shard_span).unwrap();
+        assert_eq!(shard.parent, child_span);
+        assert_eq!(shard.producer_id, 3);
+        assert_eq!(shard.role, Role::Producer);
+
+        // A child without any ambient trace records nothing.
+        let idle = SpanGuard::child(Role::Consumer, Op::Seal);
+        assert!(!idle.is_active());
+        assert_eq!(idle.trace_id(), 0);
+        drop(idle);
+
+        // Dump: JSONL to the configured dir, throttled per reason.
+        let dir = std::env::temp_dir().join(format!("memtrade-trace-test-{root_trace:x}"));
+        set_dump_dir(Some(&dir));
+        let path = dump("consumer", "unit-test").expect("first dump must write");
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(
+            text.lines().any(|l| l.contains(&format!("\"trace_id\":{root_trace}"))),
+            "dump must contain the recorded trace"
+        );
+        assert!(
+            dump("consumer", "unit-test").is_none(),
+            "same-reason dump inside the throttle window must be suppressed"
+        );
+        assert!(dump("consumer", "other-reason").is_some());
+        set_dump_dir(None);
+        assert!(dump("consumer", "unit-test-2").is_none(), "no dir = no dump");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn ring_wraps_without_growing() {
+        let ring = SpanRing::new();
+        let span = Span {
+            trace_id: 5,
+            span_id: 6,
+            parent: 0,
+            role: Role::Broker,
+            op: Op::Grant,
+            status: Status::Ok,
+            t_start_us: 1,
+            dur_us: 1,
+            lease_id: 0,
+            producer_id: 0,
+        };
+        for _ in 0..RING_SPANS * 3 {
+            ring.record(&span.to_words());
+        }
+        let mut out = Vec::new();
+        ring.read_into(&mut out);
+        assert_eq!(out.len(), RING_SPANS);
+    }
+}

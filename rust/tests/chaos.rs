@@ -14,6 +14,7 @@ use memtrade::net::faults::{ByzantineSpec, FaultPlan, FaultSpec};
 use memtrade::net::tcp::{KvClient, ProducerStoreServer};
 use memtrade::net::wire::{Request, Response};
 use memtrade::util::rng::Rng;
+use std::collections::HashMap;
 use std::time::Duration;
 
 /// A `KvClient` as a transport that *remembers* I/O death, so faulty-
@@ -55,6 +56,12 @@ fn assert_invariants(o: &ChaosOutcome) {
     );
 }
 
+/// CI sets `MEMTRADE_DUMP_DIR` so every schedule's flight-recorder
+/// dumps land in one workspace dir, uploaded as artifacts on failure.
+fn env_dump_dir() -> Option<std::path::PathBuf> {
+    std::env::var_os("MEMTRADE_DUMP_DIR").map(std::path::PathBuf::from)
+}
+
 fn run_marketplace_schedule(seed: u64, mix: ChaosMix) -> ChaosOutcome {
     println!(
         "chaos schedule: marketplace seed={seed} mix={} (reproduce: memtrade chaos --seed \
@@ -62,7 +69,7 @@ fn run_marketplace_schedule(seed: u64, mix: ChaosMix) -> ChaosOutcome {
         mix.label(),
         mix.label()
     );
-    run_chaos(&ChaosConfig { seed, mix, ..Default::default() })
+    run_chaos(&ChaosConfig { seed, mix, dump_dir: env_dump_dir(), ..Default::default() })
 }
 
 // --- Full-topology schedules (broker + 2 agents + pool over TCP). ---
@@ -94,6 +101,118 @@ fn chaos_marketplace_byzantine_producer() {
         "tampered responses ({}) never reached the envelope",
         o.tampered
     );
+}
+
+/// One span as the flight recorder's fixed-order JSONL dumps it; only
+/// the fields the chain check needs.
+struct DumpSpan {
+    trace_id: u64,
+    span_id: u64,
+    parent: u64,
+    role: String,
+    op: String,
+}
+
+fn json_u64(line: &str, key: &str) -> Option<u64> {
+    let pat = format!("\"{key}\":");
+    let at = line.find(&pat)? + pat.len();
+    let rest = &line[at..];
+    let end = rest.find(&[',', '}'][..])?;
+    rest[..end].parse().ok()
+}
+
+fn json_str(line: &str, key: &str) -> Option<String> {
+    let pat = format!("\"{key}\":\"");
+    let at = line.find(&pat)? + pat.len();
+    line[at..].split('"').next().map(str::to_string)
+}
+
+fn parse_dump_span(line: &str) -> Option<DumpSpan> {
+    Some(DumpSpan {
+        trace_id: json_u64(line, "trace_id")?,
+        span_id: json_u64(line, "span_id")?,
+        parent: json_u64(line, "parent")?,
+        role: json_str(line, "role")?,
+        op: json_str(line, "op")?,
+    })
+}
+
+/// True when the spans hold a cross-role causal chain from one data op:
+/// producer shard → consumer wire → consumer route, one trace id, with
+/// the route pointing at a (possibly still-open) consumer root. The
+/// integrity dump fires *inside* the consumer op, so its root span has
+/// not reached the ring yet — the three closed spans have.
+fn has_cross_role_chain(spans: &[DumpSpan]) -> bool {
+    let by_id: HashMap<u64, &DumpSpan> = spans.iter().map(|s| (s.span_id, s)).collect();
+    spans.iter().any(|shard| {
+        shard.role == "producer"
+            && shard.op == "shard"
+            && by_id.get(&shard.parent).is_some_and(|wire| {
+                wire.trace_id == shard.trace_id
+                    && wire.role == "consumer"
+                    && wire.op == "wire"
+                    && by_id.get(&wire.parent).is_some_and(|route| {
+                        route.trace_id == shard.trace_id
+                            && route.role == "consumer"
+                            && route.op == "route"
+                            && route.parent != 0
+                    })
+            })
+    })
+}
+
+#[test]
+fn chaos_byzantine_tamper_dumps_flight_recorder_span_chain() {
+    // A tampered response must not only die at the envelope — it must
+    // leave evidence: the consumer dumps its recent spans as JSONL, and
+    // the dump holds the causal chain of the poisoned op across roles.
+    let (dir, ephemeral) = match env_dump_dir() {
+        Some(d) => (d, false),
+        None => {
+            let d = std::env::temp_dir()
+                .join(format!("memtrade-chaos-dumps-{}", std::process::id()));
+            let _ = std::fs::remove_dir_all(&d);
+            (d, true)
+        }
+    };
+    println!(
+        "chaos schedule: marketplace seed=901 mix=byzantine (reproduce: memtrade chaos \
+         --seed 901 --mix byzantine --dump-dir {})",
+        dir.display()
+    );
+    let o = run_chaos(&ChaosConfig {
+        seed: 901,
+        mix: ChaosMix::from_name("byzantine").unwrap(),
+        dump_dir: Some(dir.clone()),
+        ..Default::default()
+    });
+    assert_invariants(&o);
+    assert!(o.tampered > 0, "byzantine mode never fired — schedule too short");
+    assert!(o.integrity_failures > 0, "tampering never reached the envelope");
+    assert!(!o.dump_files.is_empty(), "integrity failures produced no flight-recorder dumps");
+
+    let integrity_dumps: Vec<_> = o
+        .dump_files
+        .iter()
+        .filter(|p| {
+            p.file_name()
+                .and_then(|n| n.to_str())
+                .is_some_and(|n| n.starts_with("consumer-integrity-"))
+        })
+        .collect();
+    assert!(!integrity_dumps.is_empty(), "no consumer-integrity dump: {:?}", o.dump_files);
+    let chain_found = integrity_dumps.iter().any(|p| {
+        let text = std::fs::read_to_string(p).unwrap_or_default();
+        let spans: Vec<DumpSpan> = text.lines().filter_map(parse_dump_span).collect();
+        has_cross_role_chain(&spans)
+    });
+    assert!(
+        chain_found,
+        "no consumer→route→wire→shard chain with matching trace ids in any integrity dump"
+    );
+    if ephemeral {
+        let _ = std::fs::remove_dir_all(&dir);
+    }
 }
 
 #[test]

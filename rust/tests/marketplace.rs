@@ -300,6 +300,7 @@ fn lease_renewal_sustains_and_expiry_shrinks_store() {
                     slabs: 4,
                     min_slabs: 4,
                     ttl_us: 500_000,
+                    trace: 0,
                 })
                 .unwrap()
             {
@@ -330,7 +331,7 @@ fn lease_renewal_sustains_and_expiry_shrinks_store() {
     for _ in 0..6 {
         std::thread::sleep(Duration::from_millis(100));
         let resp = ctrl
-            .call(&CtrlRequest::Renew { consumer: 9, lease: lease.lease })
+            .call(&CtrlRequest::Renew { consumer: 9, lease: lease.lease, trace: 0 })
             .unwrap();
         assert!(matches!(resp, CtrlResponse::Renewed { .. }), "{resp:?}");
     }
@@ -348,7 +349,7 @@ fn lease_renewal_sustains_and_expiry_shrinks_store() {
     assert!(!kv.put(b"again", &[4]).unwrap());
     // Renew-after-expiry is a clean refusal.
     let resp = ctrl
-        .call(&CtrlRequest::Renew { consumer: 9, lease: lease.lease })
+        .call(&CtrlRequest::Renew { consumer: 9, lease: lease.lease, trace: 0 })
         .unwrap();
     assert!(matches!(resp, CtrlResponse::Refused { .. }), "{resp:?}");
 

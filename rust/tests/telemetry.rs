@@ -195,6 +195,7 @@ fn observed_latency_shifts_placement_away_from_slow_producer() {
                 slabs: 4,
                 min_slabs: 1,
                 ttl_us: 60_000_000,
+                trace: 0,
             })
             .unwrap();
         let CtrlResponse::Grants { leases } = resp else { panic!("{resp:?}") };

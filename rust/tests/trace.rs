@@ -1,0 +1,233 @@
+//! End-to-end request tracing over real TCP: one consumer `SecureKv`
+//! call yields a causal span chain crossing all three roles — consumer
+//! root → pool route → wire → producer shard — fetchable live through
+//! the `TraceQuery` control verb, with the broker's grant span adopted
+//! from the lease request's trace and `data.op_us` p99 exemplars that
+//! resolve to recorded trace ids. Also pins the hot-path contract:
+//! recording a span allocates nothing once a thread's ring is warm.
+
+use memtrade::consumer::client::SecureKv;
+use memtrade::core::config::BrokerConfig;
+use memtrade::core::SimTime;
+use memtrade::market::{
+    BrokerServer, BrokerServerConfig, ProducerAgent, ProducerAgentConfig,
+    RemotePool, RemotePoolConfig,
+};
+use memtrade::metrics::MetricSet;
+use memtrade::net::control::{CtrlClient, CtrlRequest, CtrlResponse};
+use memtrade::trace::{Op, Role, Span, SpanGuard, Status};
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+use std::collections::{HashMap, HashSet};
+use std::time::{Duration, Instant};
+
+const SLAB: u64 = 1 << 20;
+
+// ---------------------------------------------------------------- alloc probe
+
+/// Counts allocations per thread so the hot-path test can prove span
+/// recording is allocation-free (the system allocator still serves).
+struct CountingAlloc;
+
+thread_local! {
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.with(|c| c.set(c.get() + 1));
+        System.alloc(layout)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static COUNTING: CountingAlloc = CountingAlloc;
+
+#[test]
+fn span_recording_allocates_nothing_after_ring_warm_up() {
+    // A thread's first span allocates its ring and registers it in the
+    // process registry; every span after that is one atomic index bump
+    // plus eight relaxed word stores.
+    for _ in 0..4 {
+        let mut warm = SpanGuard::root(Role::Consumer, Op::Get);
+        warm.set_status(Status::Ok);
+    }
+    let before = ALLOCS.with(|c| c.get());
+    for i in 0..1_000u64 {
+        let mut span = SpanGuard::root(Role::Consumer, Op::Get);
+        span.set_lease(i);
+        span.set_producer(i % 7);
+        span.set_status(if i % 3 == 0 { Status::Miss } else { Status::Ok });
+    }
+    let allocs = ALLOCS.with(|c| c.get()) - before;
+    assert_eq!(allocs, 0, "hot-path span recording allocated {allocs} time(s)");
+}
+
+// --------------------------------------------------------------- e2e tracing
+
+fn broker_cfg() -> BrokerConfig {
+    BrokerConfig {
+        slab_bytes: SLAB,
+        min_lease: SimTime::from_millis(800),
+        ..Default::default()
+    }
+}
+
+fn server_cfg() -> BrokerServerConfig {
+    BrokerServerConfig {
+        tick: Duration::from_millis(20),
+        producer_timeout: Duration::from_secs(30),
+        forecast_min_samples: usize::MAX,
+        ..Default::default()
+    }
+}
+
+fn start_agent(broker: &BrokerServer, id: u64, capacity: u64) -> ProducerAgent {
+    ProducerAgent::start(ProducerAgentConfig {
+        producer: id,
+        brokers: vec![broker.addr().to_string()],
+        data_addr: "127.0.0.1:0".to_string(),
+        capacity_bytes: capacity,
+        heartbeat: Duration::from_millis(50),
+        shards: 2,
+        seed: id,
+        ..Default::default()
+    })
+    .expect("agent start")
+}
+
+fn fetch_spans(addr: std::net::SocketAddr) -> Vec<Span> {
+    let mut ctrl = CtrlClient::connect(addr).expect("trace dial");
+    match ctrl.call(&CtrlRequest::TraceQuery { max: 4096 }).expect("trace call") {
+        CtrlResponse::Traces { spans } => spans,
+        other => panic!("unexpected trace reply: {other:?}"),
+    }
+}
+
+fn query_stats(addr: std::net::SocketAddr) -> MetricSet {
+    let mut ctrl = CtrlClient::connect(addr).expect("stats dial");
+    match ctrl.call(&CtrlRequest::StatsQuery).expect("stats call") {
+        CtrlResponse::Stats { metrics, .. } => metrics,
+        other => panic!("unexpected stats reply: {other:?}"),
+    }
+}
+
+/// Finds a complete cross-role chain: producer shard span whose parent
+/// walk is wire → route → a `MultiGet` consumer root, all four sharing
+/// one trace id. Returns `[root, route, wire, shard]`.
+fn find_chain(spans: &[Span]) -> Option<[Span; 4]> {
+    let by_id: HashMap<u64, &Span> = spans.iter().map(|s| (s.span_id, s)).collect();
+    for shard in spans.iter().filter(|s| s.role == Role::Producer && s.op == Op::Shard) {
+        let Some(wire) = by_id.get(&shard.parent) else { continue };
+        let Some(route) = by_id.get(&wire.parent) else { continue };
+        let Some(root) = by_id.get(&route.parent) else { continue };
+        let same_trace = [wire, route, root].iter().all(|s| s.trace_id == shard.trace_id);
+        if same_trace
+            && wire.role == Role::Consumer
+            && wire.op == Op::Wire
+            && route.op == Op::Route
+            && root.parent == 0
+            && root.role == Role::Consumer
+            && root.op == Op::MultiGet
+        {
+            return Some([**root, **route, **wire, *shard]);
+        }
+    }
+    None
+}
+
+#[test]
+fn trace_query_returns_cross_role_span_chain_with_p99_exemplars() {
+    let broker = BrokerServer::start("127.0.0.1:0", broker_cfg(), server_cfg()).unwrap();
+    let agents = vec![start_agent(&broker, 1, 16 * SLAB), start_agent(&broker, 2, 16 * SLAB)];
+    let mut pool = RemotePool::connect(RemotePoolConfig {
+        consumer: 9,
+        brokers: vec![broker.addr().to_string()],
+        target_slabs: 8,
+        min_slabs: 1,
+        lease_ttl: Duration::from_secs(10),
+        renew_margin: Duration::from_secs(2),
+        maintain_every: Duration::from_millis(20),
+        ..Default::default()
+    })
+    .unwrap();
+
+    // Lease real capacity first so ops actually travel the wire.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while Instant::now() < deadline && pool.held_slabs() == 0 {
+        pool.maintain();
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert!(pool.held_slabs() > 0, "pool never acquired slabs");
+
+    let mut secure = SecureKv::with_iv_seed(Some([7u8; 16]), true, 1, 3);
+    let value = vec![0xCD_u8; 512];
+    for i in 0..32u32 {
+        let key = format!("tkey{i}");
+        let _ = secure.put(&mut pool, key.as_bytes(), &value);
+    }
+    let keys: Vec<String> = (0..8).map(|i| format!("tkey{i}")).collect();
+    let key_refs: Vec<&[u8]> = keys.iter().map(|k| k.as_bytes()).collect();
+    let _ = secure.multi_get(&mut pool, &key_refs);
+
+    // Server-side spans record on conn threads asynchronously; poll the
+    // live rings over the new `TraceQuery` verb until the chain lands.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let (mut spans, mut chain) = (Vec::new(), None);
+    while Instant::now() < deadline && chain.is_none() {
+        spans = fetch_spans(broker.addr());
+        chain = find_chain(&spans);
+        if chain.is_none() {
+            let key_refs: Vec<&[u8]> = keys.iter().map(|k| k.as_bytes()).collect();
+            let _ = secure.multi_get(&mut pool, &key_refs);
+            std::thread::sleep(Duration::from_millis(25));
+        }
+    }
+    let [_root, route, wire, shard] =
+        chain.expect("no consumer→route→wire→shard chain in TraceQuery spans");
+    assert_ne!(route.lease_id, 0, "route span should carry the lease it picked");
+    assert!(
+        shard.producer_id == 1 || shard.producer_id == 2,
+        "shard span names the wrong producer: {shard:?}"
+    );
+    assert!(shard.t_start_us >= wire.t_start_us, "shard started before its wire parent");
+
+    // The broker joined the lease-request trace: a Broker-role grant
+    // span adopted from the pool's `RequestSlabs { trace, .. }`.
+    assert!(
+        spans.iter().any(|s| s.role == Role::Broker && s.op == Op::Grant && s.trace_id != 0),
+        "no broker-side Grant span adopted from the RequestSlabs trace"
+    );
+
+    // `data.op_us` top-bucket exemplars pin trace ids: the slowest
+    // observed op resolves to a trace the rings still hold.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let mut exemplar_hit = false;
+    while Instant::now() < deadline && !exemplar_hit {
+        let ids: HashSet<u64> = fetch_spans(broker.addr()).iter().map(|s| s.trace_id).collect();
+        for a in &agents {
+            let Some(stats) = a.stats_addr() else { continue };
+            let m = query_stats(stats);
+            let Some(h) = m.histogram("data.op_us") else { continue };
+            if let Some(ex) = h.p99_exemplar() {
+                if ex != 0 && ids.contains(&ex) {
+                    exemplar_hit = true;
+                    break;
+                }
+            }
+        }
+        if !exemplar_hit {
+            std::thread::sleep(Duration::from_millis(25));
+        }
+    }
+    assert!(exemplar_hit, "no p99 exemplar resolved to a recorded trace id");
+
+    drop(pool);
+    for a in agents {
+        a.stop();
+    }
+    broker.stop();
+}
