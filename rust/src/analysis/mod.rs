@@ -1,0 +1,355 @@
+//! `memtrade lint`: a zero-dependency static analysis pass over this
+//! repository's own sources, enforcing the invariants the rest of the
+//! crate is built on (see DESIGN.md "Invariants & static analysis").
+//!
+//! The pass is a hand-rolled comment/string-stripping tokenizer
+//! ([`tokens`]) plus a rule engine ([`rules`]) — no syn, no rustc
+//! internals, because the crate is offline and dependency-free by
+//! construction. Six rules run over `src/**` (plus `tests/**` /
+//! `benches/**` where noted):
+//!
+//! 1. **wire-tags** — every `TAG_*`/`METRIC_*`/`EVENT_*` constant in
+//!    `net/wire.rs` + `net/control.rs` must be collision-free within
+//!    its namespace *and* match the committed manifest
+//!    (`src/analysis/wire_tags.txt`), so a protocol bump that reuses a
+//!    tag value fails CI naming both frames.
+//! 2. **decode-bounds** — decode paths may not grow a collection by a
+//!    declared count before bounding it (`MAX_*` cap or remaining
+//!    frame bytes).
+//! 3. **clock** — `Instant::now`/`SystemTime::now` only in allowlisted
+//!    files; lease/replication/codec code takes time as a value.
+//! 4. **lock-order** — no second `lock_shard` while a `ShardGuard` is
+//!    live, outside ascending-index acquisition loops.
+//! 5. **no-alloc** — `// lint: no-alloc` marked hot paths may not
+//!    allocate per call.
+//! 6. **safety** — every `unsafe` needs an adjacent `// SAFETY:`.
+//!
+//! `tests/lint.rs` holds a passing and a failing fixture per rule plus
+//! a self-check that the shipped tree is clean; the CI
+//! `static-analysis` job gates on `memtrade lint`.
+
+pub mod rules;
+pub mod tokens;
+
+use rules::WireTag;
+use std::fmt;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// One finding, printed as `file:line: [rule] message`.
+#[derive(Clone, Debug)]
+pub struct Diagnostic {
+    pub file: String,
+    pub line: u32,
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.msg)
+    }
+}
+
+/// The result of linting a tree: findings plus how much was covered.
+#[derive(Debug, Default)]
+pub struct LintReport {
+    pub diagnostics: Vec<Diagnostic>,
+    pub files: usize,
+}
+
+impl LintReport {
+    pub fn is_clean(&self) -> bool {
+        self.diagnostics.is_empty()
+    }
+}
+
+/// Relative path of the committed wire-tag manifest under the crate
+/// root.
+pub const MANIFEST_PATH: &str = "src/analysis/wire_tags.txt";
+
+// ------------------------------------------------------------ manifest
+
+/// One `namespace name value` manifest line.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ManifestEntry {
+    pub namespace: String,
+    pub name: String,
+    pub value: u64,
+}
+
+/// Parse the manifest text (`#` comments, blank lines allowed). A
+/// malformed line becomes a diagnostic against the manifest itself.
+pub fn parse_manifest(
+    path: &str,
+    text: &str,
+    out: &mut Vec<Diagnostic>,
+) -> Vec<ManifestEntry> {
+    let mut entries = Vec::new();
+    for (idx, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        let (ns, name, val) = (parts.next(), parts.next(), parts.next());
+        let parsed = match (ns, name, val, parts.next()) {
+            (Some(ns), Some(name), Some(val), None) => {
+                tokens::parse_num(val).map(|value| ManifestEntry {
+                    namespace: ns.to_string(),
+                    name: name.to_string(),
+                    value,
+                })
+            }
+            _ => None,
+        };
+        match parsed {
+            Some(e) => entries.push(e),
+            None => out.push(Diagnostic {
+                file: path.to_string(),
+                line: idx as u32 + 1,
+                rule: "wire-tags",
+                msg: format!("malformed manifest line {raw:?} (want `namespace NAME value`)"),
+            }),
+        }
+    }
+    entries
+}
+
+/// Cross-file registry check: tags must be collision-free per namespace
+/// and agree exactly with the manifest. `require_complete` is false for
+/// single-file fixture runs (which cannot see the other protocol file,
+/// so manifest entries may legitimately be missing from the extraction).
+pub fn check_wire_registry(
+    tags: &[WireTag],
+    manifest: &[ManifestEntry],
+    manifest_file: &str,
+    require_complete: bool,
+    out: &mut Vec<Diagnostic>,
+) {
+    // Collisions within a namespace, across both protocol files.
+    for (i, a) in tags.iter().enumerate() {
+        for b in &tags[i + 1..] {
+            if a.namespace == b.namespace && a.value == b.value {
+                out.push(Diagnostic {
+                    file: b.file.clone(),
+                    line: b.line,
+                    rule: "wire-tags",
+                    msg: format!(
+                        "wire-tag collision in namespace `{}`: {} ({}:{}) and {} both \
+                         use value {}",
+                        a.namespace, a.name, a.file, a.line, b.name, a.value
+                    ),
+                });
+            }
+            if a.name == b.name {
+                out.push(Diagnostic {
+                    file: b.file.clone(),
+                    line: b.line,
+                    rule: "wire-tags",
+                    msg: format!("duplicate wire-tag constant {} (also {}:{})", b.name, a.file, a.line),
+                });
+            }
+        }
+    }
+    // Source ↔ manifest agreement.
+    for t in tags {
+        match manifest.iter().find(|m| m.name == t.name && m.namespace == t.namespace) {
+            None => out.push(Diagnostic {
+                file: t.file.clone(),
+                line: t.line,
+                rule: "wire-tags",
+                msg: format!(
+                    "{} = {} is not in the committed registry — add `{} {} {}` to {}",
+                    t.name, t.value, t.namespace, t.name, t.value, MANIFEST_PATH
+                ),
+            }),
+            Some(m) if m.value != t.value => out.push(Diagnostic {
+                file: t.file.clone(),
+                line: t.line,
+                rule: "wire-tags",
+                msg: format!(
+                    "{} = {} disagrees with the registry ({} = {}): tag values are wire \
+                     ABI and may never be renumbered",
+                    t.name, t.value, m.name, m.value
+                ),
+            }),
+            _ => {}
+        }
+    }
+    if require_complete {
+        for m in manifest {
+            if !tags.iter().any(|t| t.name == m.name && t.namespace == m.namespace) {
+                out.push(Diagnostic {
+                    file: manifest_file.to_string(),
+                    line: 0,
+                    rule: "wire-tags",
+                    msg: format!(
+                        "stale registry entry `{} {} {}`: constant no longer in the \
+                         protocol sources",
+                        m.namespace, m.name, m.value
+                    ),
+                });
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------- driving
+
+/// Lint one file's source text. `manifest` (if given, and if `path` is
+/// a protocol file) enables the single-file wire-tag check — this is
+/// the fixture-test entry point; whole-tree runs use [`lint_tree`].
+pub fn lint_source(path: &str, src: &str, manifest: Option<&str>) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    let lexed = tokens::lex(src);
+    run_file_rules(path, &lexed, &mut out);
+    if let Some(m) = manifest {
+        if rules::is_protocol_file(path) {
+            let tags = rules::extract_wire_tags(path, &lexed);
+            let entries = parse_manifest("wire_tags.txt", m, &mut out);
+            check_wire_registry(&tags, &entries, "wire_tags.txt", false, &mut out);
+        }
+    }
+    sort(&mut out);
+    out
+}
+
+fn run_file_rules(path: &str, lexed: &tokens::Lexed, out: &mut Vec<Diagnostic>) {
+    let fns = rules::index_fns(lexed);
+    rules::check_unsafe(path, lexed, out);
+    rules::check_no_alloc(path, lexed, &fns, out);
+    rules::check_lock_order(path, lexed, &fns, out);
+    if !rules::in_test_tree(path) {
+        rules::check_clocks(path, lexed, out);
+        rules::check_decode_bounds(path, lexed, &fns, out);
+    }
+}
+
+/// Walk `root` (a crate root: the directory holding `src/`) and run
+/// every rule, including the registry check against the committed
+/// manifest. Paths in diagnostics are relative to `root`.
+pub fn lint_tree(root: &Path) -> io::Result<LintReport> {
+    let mut files = Vec::new();
+    for sub in ["src", "tests", "benches"] {
+        collect_rs(&root.join(sub), &mut files)?;
+    }
+    files.sort();
+    if files.is_empty() {
+        return Err(io::Error::new(
+            io::ErrorKind::NotFound,
+            format!("no .rs files under {} — not a crate root?", root.display()),
+        ));
+    }
+
+    let mut report = LintReport::default();
+    let mut tags: Vec<WireTag> = Vec::new();
+    for f in &files {
+        let rel = f
+            .strip_prefix(root)
+            .unwrap_or(f)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let src = std::fs::read_to_string(f)?;
+        let lexed = tokens::lex(&src);
+        run_file_rules(&rel, &lexed, &mut report.diagnostics);
+        if rules::is_protocol_file(&rel) {
+            tags.extend(rules::extract_wire_tags(&rel, &lexed));
+        }
+        report.files += 1;
+    }
+
+    let manifest_path = root.join(MANIFEST_PATH);
+    match std::fs::read_to_string(&manifest_path) {
+        Ok(text) => {
+            let entries = parse_manifest(MANIFEST_PATH, &text, &mut report.diagnostics);
+            check_wire_registry(&tags, &entries, MANIFEST_PATH, true, &mut report.diagnostics);
+        }
+        Err(_) => report.diagnostics.push(Diagnostic {
+            file: MANIFEST_PATH.to_string(),
+            line: 0,
+            rule: "wire-tags",
+            msg: "missing wire-tag registry (the committed manifest is part of the \
+                  protocol ABI)"
+                .to_string(),
+        }),
+    }
+
+    sort(&mut report.diagnostics);
+    Ok(report)
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    let Ok(entries) = std::fs::read_dir(dir) else {
+        return Ok(()); // missing subtree (e.g. no benches/) is fine
+    };
+    for e in entries {
+        let e = e?;
+        let p = e.path();
+        if p.is_dir() {
+            collect_rs(&p, out)?;
+        } else if p.extension().is_some_and(|x| x == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+fn sort(diags: &mut [Diagnostic]) {
+    diags.sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MANIFEST: &str = "\
+# comment
+frame TAG_GET 1
+frame TAG_PUT 2
+";
+
+    #[test]
+    fn manifest_parses_and_flags_malformed_lines() {
+        let mut out = Vec::new();
+        let entries = parse_manifest("m", "frame TAG_X 4 # ok\nbogus\n", &mut out);
+        assert_eq!(entries.len(), 1);
+        assert_eq!(entries[0].value, 4);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].line, 2);
+    }
+
+    #[test]
+    fn reused_tag_value_names_both_frames() {
+        let src = "pub const TAG_GET: u8 = 1;\npub const TAG_PUT: u8 = 1;";
+        let diags = lint_source("src/net/wire.rs", src, Some(MANIFEST));
+        let collision = diags
+            .iter()
+            .find(|d| d.msg.contains("collision"))
+            .expect("collision reported");
+        assert!(collision.msg.contains("TAG_GET") && collision.msg.contains("TAG_PUT"));
+        // TAG_PUT = 1 also disagrees with the registry's TAG_PUT = 2.
+        assert!(diags.iter().any(|d| d.msg.contains("never be renumbered")));
+    }
+
+    #[test]
+    fn registered_tags_are_clean_and_new_tags_must_register() {
+        let ok = "pub const TAG_GET: u8 = 1;\npub const TAG_PUT: u8 = 2;";
+        assert!(lint_source("src/net/wire.rs", ok, Some(MANIFEST)).is_empty());
+        let new = "pub const TAG_GET: u8 = 1;\npub const TAG_NEW: u8 = 9;";
+        let diags = lint_source("src/net/wire.rs", new, Some(MANIFEST));
+        assert_eq!(diags.len(), 1);
+        assert!(diags[0].msg.contains("add `frame TAG_NEW 9`"), "{}", diags[0].msg);
+    }
+
+    #[test]
+    fn diagnostics_format_as_file_line_rule() {
+        let d = Diagnostic {
+            file: "src/x.rs".into(),
+            line: 7,
+            rule: "clock",
+            msg: "nope".into(),
+        };
+        assert_eq!(d.to_string(), "src/x.rs:7: [clock] nope");
+    }
+}

@@ -1,0 +1,570 @@
+//! The six invariant rules `memtrade lint` enforces, over the token
+//! stream produced by [`crate::analysis::tokens`]. Each rule is a pure
+//! function from one lexed file to diagnostics; the cross-file wire-tag
+//! registry check lives in [`crate::analysis`] because it needs every
+//! file's extraction plus the committed manifest.
+//!
+//! Rules are deliberately syntactic and conservative: they match the
+//! idioms this codebase actually uses (see DESIGN.md "Invariants &
+//! static analysis") and escape hatches are explicit marker comments,
+//! never silent heuristics.
+
+use super::tokens::{parse_num, Lexed, Tok, TokKind};
+use super::Diagnostic;
+
+/// Files allowed to read the monotonic wall clock (`Instant::now`).
+/// Daemon loops, drivers, and instrumentation own real time; protocol
+/// codecs, the lease state machine, replication events, and placement
+/// logic must have time passed in (that is what makes them replayable
+/// and simulator-drivable). Matched as a `/`-normalized path suffix.
+pub const INSTANT_ALLOWLIST: &[&str] = &[
+    "src/consumer/client.rs",
+    "src/figures/consumer_eval.rs",
+    "src/kv/sharded.rs",
+    "src/main.rs",
+    "src/market/broker_server.rs",
+    "src/market/chaos.rs",
+    "src/market/producer_agent.rs",
+    "src/market/remote_pool.rs",
+    "src/market/stats_server.rs",
+    "src/net/tcp.rs",
+    "src/trace/mod.rs",
+    "src/util/bench.rs",
+    "src/util/clock.rs",
+];
+
+/// Files allowed to read the calendar clock (`SystemTime::now`). Much
+/// tighter than [`INSTANT_ALLOWLIST`]: calendar time only enters the
+/// system through the `util::clock` shims (plus the RNG's seed
+/// fallback), so everything downstream takes it as a value.
+pub const SYSTEMTIME_ALLOWLIST: &[&str] = &["src/util/clock.rs", "src/util/rng.rs"];
+
+/// Identifier/macro calls banned inside `// lint: no-alloc` functions.
+/// `extend_from_slice`/`push` into caller-owned buffers are allowed
+/// (amortized, no fresh allocation per op); anything that creates a new
+/// heap object per call is not.
+const NO_ALLOC_BANNED_CALLS: &[&str] = &[
+    "to_vec",
+    "to_string",
+    "to_owned",
+    "with_capacity",
+    "collect",
+    "clone",
+];
+
+/// `Type::method` pairs banned inside `// lint: no-alloc` functions.
+const NO_ALLOC_BANNED_PATHS: &[(&str, &str)] = &[
+    ("Vec", "new"),
+    ("String", "new"),
+    ("String", "from"),
+    ("Box", "new"),
+];
+
+fn norm(path: &str) -> String {
+    path.replace('\\', "/")
+}
+
+/// Is this file inside the test/bench tree (walked for `unsafe` and
+/// marker rules, exempt from the clock rule)?
+pub fn in_test_tree(path: &str) -> bool {
+    let p = norm(path);
+    p.contains("/tests/") || p.contains("/benches/") || p.starts_with("tests/")
+        || p.starts_with("benches/")
+}
+
+fn allowlisted(path: &str, list: &[&str]) -> bool {
+    let p = norm(path);
+    list.iter().any(|s| p.ends_with(s))
+}
+
+fn is_seq(toks: &[Tok], at: usize, pat: &[&str]) -> bool {
+    pat.iter()
+        .enumerate()
+        .all(|(k, want)| toks.get(at + k).is_some_and(|t| t.text == *want))
+}
+
+/// Is there a `lint: <directive>` marker on `line` or the line above?
+fn marker_on(lexed: &Lexed, line: u32, directive: &str) -> bool {
+    lexed.markers.iter().any(|m| {
+        (m.line == line || m.line + 1 == line) && m.lint_directive() == Some(directive)
+    })
+}
+
+// ------------------------------------------------------------ fn index
+
+/// One `fn` item: its name, declaration line, body token range, and
+/// whether a `// lint: no-alloc` marker is attached to it.
+pub struct FnSpan {
+    pub name: String,
+    pub line: u32,
+    /// Token indices of the body, `{` inclusive to `}` inclusive.
+    pub body: std::ops::Range<usize>,
+    pub no_alloc: bool,
+}
+
+/// Index every `fn` item (including nested ones) in the token stream.
+pub fn index_fns(lexed: &Lexed) -> Vec<FnSpan> {
+    let toks = &lexed.toks;
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < toks.len() {
+        let is_fn = toks[i].kind == TokKind::Ident
+            && toks[i].text == "fn"
+            && toks.get(i + 1).is_some_and(|t| t.kind == TokKind::Ident);
+        if !is_fn {
+            i += 1;
+            continue;
+        }
+        let name = toks[i + 1].text.clone();
+        let line = toks[i].line;
+        // The body is the first `{` at bracket depth 0 after the
+        // signature; a `;` first means a bodyless trait method.
+        let mut j = i + 2;
+        let mut depth = 0i32;
+        let mut open = None;
+        while j < toks.len() {
+            match toks[j].text.as_str() {
+                "(" | "[" => depth += 1,
+                ")" | "]" => depth -= 1,
+                "{" if depth == 0 => {
+                    open = Some(j);
+                    break;
+                }
+                ";" if depth == 0 => break,
+                _ => {}
+            }
+            j += 1;
+        }
+        if let Some(open) = open {
+            let mut braces = 0i32;
+            let mut k = open;
+            while k < toks.len() {
+                match toks[k].text.as_str() {
+                    "{" => braces += 1,
+                    "}" => {
+                        braces -= 1;
+                        if braces == 0 {
+                            break;
+                        }
+                    }
+                    _ => {}
+                }
+                k += 1;
+            }
+            out.push(FnSpan { name, line, body: open..(k + 1).min(toks.len()), no_alloc: false });
+        }
+        i += 2;
+    }
+    for m in &lexed.markers {
+        if m.lint_directive() == Some("no-alloc") {
+            // The marker binds to the nearest fn declared on or just
+            // below it (doc comments and attributes may intervene).
+            if let Some(f) = out
+                .iter_mut()
+                .filter(|f| f.line >= m.line && f.line <= m.line + 8)
+                .min_by_key(|f| f.line)
+            {
+                f.no_alloc = true;
+            }
+        }
+    }
+    out
+}
+
+// -------------------------------------------------------- rule: clock
+
+/// Rule 3: `Instant::now` / `SystemTime::now` outside the allowlists.
+pub fn check_clocks(path: &str, lexed: &Lexed, out: &mut Vec<Diagnostic>) {
+    if in_test_tree(path) {
+        return;
+    }
+    let toks = &lexed.toks;
+    for (clock, list) in [
+        ("Instant", INSTANT_ALLOWLIST),
+        ("SystemTime", SYSTEMTIME_ALLOWLIST),
+    ] {
+        if allowlisted(path, list) {
+            continue;
+        }
+        for i in 0..toks.len() {
+            if is_seq(toks, i, &[clock, ":", ":", "now"])
+                && !marker_on(lexed, toks[i].line, "allow-clock")
+            {
+                out.push(Diagnostic {
+                    file: path.to_string(),
+                    line: toks[i].line,
+                    rule: "clock",
+                    msg: format!(
+                        "{clock}::now outside the clock allowlist — lease/replication/codec \
+                         code must take time as a value (use the util::clock shims from an \
+                         allowlisted daemon, or `// lint: allow-clock` with a justification)"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------- rule: safety
+
+/// Rule 6: every `unsafe` token needs a `// SAFETY:` comment on the
+/// same line or within the three lines above it.
+pub fn check_unsafe(path: &str, lexed: &Lexed, out: &mut Vec<Diagnostic>) {
+    for t in lexed.toks.iter().filter(|t| t.text == "unsafe") {
+        let justified = lexed
+            .markers
+            .iter()
+            .any(|m| m.is_safety() && m.line <= t.line && m.line + 3 >= t.line);
+        if !justified {
+            out.push(Diagnostic {
+                file: path.to_string(),
+                line: t.line,
+                rule: "safety",
+                msg: "`unsafe` without an adjacent `// SAFETY:` justification".to_string(),
+            });
+        }
+    }
+}
+
+// ----------------------------------------------------- rule: no-alloc
+
+/// Rule 5: `// lint: no-alloc` functions may not allocate per call.
+pub fn check_no_alloc(path: &str, lexed: &Lexed, fns: &[FnSpan], out: &mut Vec<Diagnostic>) {
+    let toks = &lexed.toks;
+    for f in fns.iter().filter(|f| f.no_alloc) {
+        for i in f.body.clone() {
+            let t = &toks[i];
+            if t.kind != TokKind::Ident {
+                continue;
+            }
+            let next = toks.get(i + 1).map(|t| t.text.as_str());
+            let hit = if (t.text == "format" || t.text == "vec") && next == Some("!") {
+                Some(format!("{}!", t.text))
+            } else if NO_ALLOC_BANNED_CALLS.contains(&t.text.as_str()) && next == Some("(") {
+                Some(format!("{}()", t.text))
+            } else if NO_ALLOC_BANNED_PATHS
+                .iter()
+                .any(|(ty, m)| *ty == t.text && is_seq(toks, i + 1, &[":", ":", m]))
+            {
+                Some(format!("{}::{}", t.text, toks[i + 3].text))
+            } else {
+                None
+            };
+            if let Some(what) = hit {
+                out.push(Diagnostic {
+                    file: path.to_string(),
+                    line: t.line,
+                    rule: "no-alloc",
+                    msg: format!(
+                        "{what} inside `// lint: no-alloc` fn `{}` — hot paths must reuse \
+                         caller-owned buffers",
+                        f.name
+                    ),
+                });
+            }
+        }
+    }
+}
+
+// --------------------------------------------------- rule: lock-order
+
+/// Rule 4: no second `lock_shard` while a `ShardGuard` may be live,
+/// except ascending-index loops (`(0..n).map(|i| lock_shard(i))`,
+/// `.enumerate().map(...)`) or an explicit
+/// `// lint: ascending-shards` marker.
+pub fn check_lock_order(path: &str, lexed: &Lexed, fns: &[FnSpan], out: &mut Vec<Diagnostic>) {
+    let toks = &lexed.toks;
+    for f in fns {
+        let mut plain_sites: Vec<usize> = Vec::new();
+        for i in f.body.clone() {
+            let is_call = toks[i].text == "lock_shard"
+                && toks.get(i + 1).is_some_and(|t| t.text == "(")
+                && toks.get(i.wrapping_sub(1)).is_none_or(|t| t.text != "fn");
+            if !is_call {
+                continue;
+            }
+            let w0 = i.saturating_sub(40).max(f.body.start);
+            let window = &toks[w0..i];
+            let has_range = window.windows(2).any(|p| p[0].text == "." && p[1].text == ".");
+            let has_map = window.iter().any(|t| t.text == "map");
+            let has_enum = window.iter().any(|t| t.text == "enumerate");
+            let ascending = has_enum || (has_map && has_range);
+            if !ascending && !marker_on(lexed, toks[i].line, "ascending-shards") {
+                plain_sites.push(i);
+            }
+        }
+        for &i in plain_sites.iter().skip(1) {
+            out.push(Diagnostic {
+                file: path.to_string(),
+                line: toks[i].line,
+                rule: "lock-order",
+                msg: format!(
+                    "second lock_shard in fn `{}` while an earlier ShardGuard may be live — \
+                     acquire all shards in one ascending-index pass (or mark the site \
+                     `// lint: ascending-shards` if the order is provably ascending)",
+                    f.name
+                ),
+            });
+        }
+    }
+}
+
+// ------------------------------------------------ rule: decode-bounds
+
+/// Rule 2: in decode paths (`fn *decode*` / `fn take_*`), a collection
+/// may only grow by a count that was bounded first — against a `MAX_*`
+/// style constant or the remaining buffer length.
+pub fn check_decode_bounds(path: &str, lexed: &Lexed, fns: &[FnSpan], out: &mut Vec<Diagnostic>) {
+    let toks = &lexed.toks;
+    for f in fns {
+        if !(f.name.contains("decode") || f.name.starts_with("take_")) {
+            continue;
+        }
+        for i in f.body.clone() {
+            let grower = (toks[i].text == "with_capacity" || toks[i].text == "reserve")
+                && toks.get(i + 1).is_some_and(|t| t.text == "(");
+            if !grower {
+                continue;
+            }
+            // Collect the argument tokens up to the matching `)`.
+            let mut depth = 0i32;
+            let mut args: Vec<&Tok> = Vec::new();
+            let mut j = i + 1;
+            while j < toks.len() {
+                match toks[j].text.as_str() {
+                    "(" => depth += 1,
+                    ")" => {
+                        depth -= 1;
+                        if depth == 0 {
+                            break;
+                        }
+                    }
+                    _ => {}
+                }
+                if depth >= 1 && !(depth == 1 && toks[j].text == "(") {
+                    args.push(&toks[j]);
+                }
+                j += 1;
+            }
+            // Capacities derived from an existing collection's length
+            // are already memory-bounded; uppercase idents are named
+            // constants; pure literals are fine.
+            let count_var = args.iter().find(|t| {
+                t.kind == TokKind::Ident
+                    && t.text.chars().next().is_some_and(|c| c.is_lowercase())
+            });
+            let Some(var) = count_var else { continue };
+            if args.iter().any(|t| t.text == "len") {
+                continue;
+            }
+            if !bounded_before(toks, f.body.start, i, &var.text) {
+                out.push(Diagnostic {
+                    file: path.to_string(),
+                    line: toks[i].line,
+                    rule: "decode-bounds",
+                    msg: format!(
+                        "decode path `{}` grows a collection by unchecked count `{}` — \
+                         compare it against remaining frame bytes or a MAX_* cap first",
+                        f.name, var.text
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// Was `var` compared (`>`/`<`) against a `MAX_*`-style constant or a
+/// `len` expression anywhere in the body before token `at`?
+fn bounded_before(toks: &[Tok], body_start: usize, at: usize, var: &str) -> bool {
+    for k in body_start..at {
+        if toks[k].text != var {
+            continue;
+        }
+        let near = &toks[k.saturating_sub(1)..(k + 4).min(toks.len())];
+        let compared = near.iter().any(|t| t.text == ">" || t.text == "<");
+        if !compared {
+            continue;
+        }
+        let scope = &toks[k.saturating_sub(4)..(k + 18).min(toks.len())];
+        let against_bound = scope.iter().any(|t| {
+            t.text == "len"
+                || (t.kind == TokKind::Ident
+                    && t.text.len() >= 3
+                    && t.text.chars().all(|c| c.is_uppercase() || c == '_' || c.is_numeric()))
+        });
+        if against_bound {
+            return true;
+        }
+    }
+    false
+}
+
+// -------------------------------------------------- wire-tag extraction
+
+/// A `const TAG_*/METRIC_*/EVENT_*: u8 = N;` found in a protocol file.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct WireTag {
+    /// Registry namespace: `frame` (TAG_*, global across both planes),
+    /// `metric`, or `event` (sub-namespaces inside STATS / replication
+    /// payloads).
+    pub namespace: &'static str,
+    pub name: String,
+    pub value: u64,
+    pub file: String,
+    pub line: u32,
+}
+
+/// Is this file part of the wire protocol (tag extraction applies)?
+pub fn is_protocol_file(path: &str) -> bool {
+    let p = norm(path);
+    p.ends_with("src/net/wire.rs") || p.ends_with("src/net/control.rs")
+}
+
+fn tag_namespace(name: &str) -> Option<&'static str> {
+    if name.starts_with("TAG_") {
+        Some("frame")
+    } else if name.starts_with("METRIC_") {
+        Some("metric")
+    } else if name.starts_with("EVENT_") {
+        Some("event")
+    } else {
+        None
+    }
+}
+
+/// Extract every wire-tag constant from a protocol file.
+pub fn extract_wire_tags(path: &str, lexed: &Lexed) -> Vec<WireTag> {
+    let toks = &lexed.toks;
+    let mut out = Vec::new();
+    for i in 0..toks.len() {
+        if toks[i].text != "const" {
+            continue;
+        }
+        let Some(name_tok) = toks.get(i + 1) else { continue };
+        let Some(ns) = tag_namespace(&name_tok.text) else { continue };
+        if !is_seq(toks, i + 2, &[":", "u8", "="]) {
+            continue;
+        }
+        let Some(val_tok) = toks.get(i + 5) else { continue };
+        let Some(value) = parse_num(&val_tok.text) else { continue };
+        out.push(WireTag {
+            namespace: ns,
+            name: name_tok.text.clone(),
+            value,
+            file: path.to_string(),
+            line: name_tok.line,
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::tokens::lex;
+
+    #[test]
+    fn fn_index_finds_bodies_and_markers() {
+        let src = "\
+// lint: no-alloc
+fn hot(x: u64) -> u64 { x + 1 }
+fn cold() { let v = Vec::new(); drop(v); }
+";
+        let lexed = lex(src);
+        let fns = index_fns(&lexed);
+        assert_eq!(fns.len(), 2);
+        assert!(fns[0].no_alloc && fns[0].name == "hot");
+        assert!(!fns[1].no_alloc && fns[1].name == "cold");
+    }
+
+    #[test]
+    fn wire_tags_extracted_with_values() {
+        let src = "pub const TAG_GET: u8 = 1;\nconst METRIC_GAUGE: u8 = 0x02;\nconst OTHER: u8 = 9;\nconst TAG_NOT_U8: u16 = 3;";
+        let tags = extract_wire_tags("src/net/wire.rs", &lex(src));
+        assert_eq!(tags.len(), 2);
+        assert_eq!(tags[0].name, "TAG_GET");
+        assert_eq!(tags[0].value, 1);
+        assert_eq!(tags[1].namespace, "metric");
+        assert_eq!(tags[1].value, 2);
+    }
+
+    #[test]
+    fn ascending_lock_patterns_pass_and_plain_pairs_fail() {
+        let ok = "\
+fn all(&self) { let g: Vec<_> = (0..self.n).map(|i| self.lock_shard(i)).collect(); drop(g); }
+fn one(&self, k: &[u8]) { let g = self.lock_shard(self.index(k)); drop(g); }
+";
+        let lexed = lex(ok);
+        let fns = index_fns(&lexed);
+        let mut out = Vec::new();
+        check_lock_order("src/kv/x.rs", &lexed, &fns, &mut out);
+        assert!(out.is_empty(), "{out:?}");
+
+        let bad = "fn two(&self) { let a = self.lock_shard(3); let b = self.lock_shard(1); drop((a, b)); }";
+        let lexed = lex(bad);
+        let fns = index_fns(&lexed);
+        let mut out = Vec::new();
+        check_lock_order("src/kv/x.rs", &lexed, &fns, &mut out);
+        assert_eq!(out.len(), 1, "{out:?}");
+        assert_eq!(out[0].rule, "lock-order");
+    }
+
+    #[test]
+    fn decode_bounds_requires_a_check() {
+        let bad = "fn decode_list(buf: &[u8]) { let n = read_u32(buf) as usize; let mut v = Vec::with_capacity(n); v.push(0); }";
+        let lexed = lex(bad);
+        let fns = index_fns(&lexed);
+        let mut out = Vec::new();
+        check_decode_bounds("src/net/wire.rs", &lexed, &fns, &mut out);
+        assert_eq!(out.len(), 1, "{out:?}");
+
+        let ok = "fn decode_list(buf: &[u8]) { let n = read_u32(buf) as usize; if n > MAX_OPS || n > buf.len() { return; } let mut v = Vec::with_capacity(n); v.push(0); }";
+        let lexed = lex(ok);
+        let fns = index_fns(&lexed);
+        let mut out = Vec::new();
+        check_decode_bounds("src/net/wire.rs", &lexed, &fns, &mut out);
+        assert!(out.is_empty(), "{out:?}");
+    }
+
+    #[test]
+    fn clock_rule_honors_allowlist_and_marker() {
+        let src = "fn f() { let t = Instant::now(); drop(t); }";
+        let mut out = Vec::new();
+        check_clocks("src/market/lease.rs", &lex(src), &mut out);
+        assert_eq!(out.len(), 1);
+        out.clear();
+        check_clocks("src/net/tcp.rs", &lex(src), &mut out);
+        assert!(out.is_empty());
+        let marked = "fn f() { // lint: allow-clock — explained\n let t = Instant::now(); drop(t); }";
+        out.clear();
+        check_clocks("src/market/lease.rs", &lex(marked), &mut out);
+        assert!(out.is_empty(), "{out:?}");
+    }
+
+    #[test]
+    fn no_alloc_rule_flags_fresh_allocations_only_in_marked_fns() {
+        let src = "\
+// lint: no-alloc
+fn hot(out: &mut Vec<u8>) { out.extend_from_slice(b\"x\"); let s = value.to_vec(); drop(s); }
+fn cold() { let s = value.to_vec(); drop(s); }
+";
+        let lexed = lex(src);
+        let fns = index_fns(&lexed);
+        let mut out = Vec::new();
+        check_no_alloc("src/metrics/hist.rs", &lexed, &fns, &mut out);
+        assert_eq!(out.len(), 1, "{out:?}");
+        assert!(out[0].msg.contains("to_vec"));
+    }
+
+    #[test]
+    fn unsafe_requires_adjacent_safety_comment() {
+        let bad = "fn f() { unsafe { core(); } }";
+        let mut out = Vec::new();
+        check_unsafe("src/x.rs", &lex(bad), &mut out);
+        assert_eq!(out.len(), 1);
+        let ok = "fn f() {\n    // SAFETY: core() has no preconditions here.\n    unsafe { core(); }\n}";
+        out.clear();
+        check_unsafe("src/x.rs", &lex(ok), &mut out);
+        assert!(out.is_empty(), "{out:?}");
+    }
+}

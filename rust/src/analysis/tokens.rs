@@ -1,0 +1,342 @@
+//! A comment/string-stripping Rust tokenizer — just enough lexer for
+//! the invariant rules in [`crate::analysis::rules`].
+//!
+//! This is not a compiler front end: it produces a flat stream of
+//! identifiers, numbers, and single-character punctuation with line
+//! numbers, discarding the *content* of comments, string/char literals,
+//! and raw strings so rule patterns can never match inside them. The
+//! one thing it keeps from the discarded text is the set of structured
+//! marker comments (`// SAFETY: ...`, `// lint: ...`) the rules key on.
+//!
+//! Handled literal forms: `// ...`, nested `/* ... */`, `"..."` with
+//! escapes, `b"..."`, `r"..."` / `r#"..."#` (any hash depth, also
+//! `br`-prefixed), `'c'` / `b'c'` char literals (escape-aware), and
+//! lifetimes (`'a` is *not* a char literal). Numeric literals keep
+//! their spelling (`0x50`, `1_000`) so the wire-tag rule can parse
+//! values.
+
+/// What a token is; rules mostly match on [`Tok::text`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (`fn`, `unsafe`, `lock_shard`, ...).
+    Ident,
+    /// Numeric literal, spelling preserved (`64`, `0x50`, `1_000`).
+    Num,
+    /// One punctuation character (`::` arrives as two `:` tokens).
+    Punct,
+}
+
+/// One lexed token with its 1-based source line.
+#[derive(Clone, Debug)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: u32,
+}
+
+/// A marker comment the rules care about, with the line it starts on.
+/// `text` is the comment body after `//` (or inside `/* */`), trimmed.
+#[derive(Clone, Debug)]
+pub struct Marker {
+    pub line: u32,
+    pub text: String,
+}
+
+impl Marker {
+    /// `// SAFETY: ...` (any leading `//!`/`///` doc sigils included).
+    pub fn is_safety(&self) -> bool {
+        self.text.starts_with("SAFETY:")
+    }
+
+    /// `// lint: <directive>` — returns the directive text.
+    pub fn lint_directive(&self) -> Option<&str> {
+        self.text.strip_prefix("lint:").map(str::trim)
+    }
+}
+
+/// The output of [`lex`]: the token stream plus the marker comments.
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub toks: Vec<Tok>,
+    pub markers: Vec<Marker>,
+}
+
+fn keep_marker(markers: &mut Vec<Marker>, line: u32, body: &str) {
+    // Doc-comment sigils (`/// SAFETY:` etc.) are stripped before the
+    // prefix test so the marker syntax works in any comment flavor.
+    let body = body.trim_start_matches(['/', '!']).trim();
+    if body.starts_with("SAFETY:") || body.starts_with("lint:") {
+        markers.push(Marker { line, text: body.to_string() });
+    }
+}
+
+/// Lex `src` into tokens + markers. Never fails: unterminated literals
+/// simply consume to end-of-file (the real compiler will reject such a
+/// file anyway; the linter only needs to not panic on it).
+pub fn lex(src: &str) -> Lexed {
+    let b = src.as_bytes();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    let mut out = Lexed::default();
+
+    // Count newlines inside the skipped range [from, to).
+    fn lines_in(b: &[u8], from: usize, to: usize) -> u32 {
+        b[from..to.min(b.len())].iter().filter(|&&c| c == b'\n').count() as u32
+    }
+
+    // Skip a quoted run starting at the opening quote; returns the index
+    // just past the closing quote. Escape-aware.
+    fn skip_quoted(b: &[u8], mut i: usize) -> usize {
+        debug_assert_eq!(b[i], b'"');
+        i += 1;
+        while i < b.len() {
+            match b[i] {
+                b'\\' => i += 2,
+                b'"' => return i + 1,
+                _ => i += 1,
+            }
+        }
+        i
+    }
+
+    // Raw string at `i` (pointing at `r`): `r"…"`, `r#"…"#`, any hash
+    // depth. Returns Some(end) or None if this is not a raw string
+    // (e.g. a raw identifier `r#match`).
+    fn skip_raw_string(b: &[u8], i: usize) -> Option<usize> {
+        let mut j = i + 1;
+        let mut hashes = 0usize;
+        while j < b.len() && b[j] == b'#' {
+            hashes += 1;
+            j += 1;
+        }
+        if j >= b.len() || b[j] != b'"' {
+            return None;
+        }
+        j += 1;
+        while j < b.len() {
+            if b[j] == b'"' {
+                let mut k = j + 1;
+                let mut seen = 0usize;
+                while seen < hashes && k < b.len() && b[k] == b'#' {
+                    seen += 1;
+                    k += 1;
+                }
+                if seen == hashes {
+                    return Some(k);
+                }
+            }
+            j += 1;
+        }
+        Some(j)
+    }
+
+    while i < b.len() {
+        let c = b[i];
+        match c {
+            b'\n' => {
+                line += 1;
+                i += 1;
+            }
+            c if c.is_ascii_whitespace() => i += 1,
+            b'/' if i + 1 < b.len() && b[i + 1] == b'/' => {
+                let start = i + 2;
+                let mut j = start;
+                while j < b.len() && b[j] != b'\n' {
+                    j += 1;
+                }
+                keep_marker(&mut out.markers, line, src[start..j].trim());
+                i = j;
+            }
+            b'/' if i + 1 < b.len() && b[i + 1] == b'*' => {
+                // Nested block comments, as in real Rust.
+                let start = i + 2;
+                let mut depth = 1usize;
+                let mut j = start;
+                while j < b.len() && depth > 0 {
+                    if j + 1 < b.len() && b[j] == b'/' && b[j + 1] == b'*' {
+                        depth += 1;
+                        j += 2;
+                    } else if j + 1 < b.len() && b[j] == b'*' && b[j + 1] == b'/' {
+                        depth -= 1;
+                        j += 2;
+                    } else {
+                        j += 1;
+                    }
+                }
+                let body_end = j.saturating_sub(2).max(start);
+                keep_marker(&mut out.markers, line, src[start..body_end].trim());
+                line += lines_in(b, i, j);
+                i = j;
+            }
+            b'"' => {
+                let j = skip_quoted(b, i);
+                line += lines_in(b, i, j);
+                i = j;
+            }
+            b'\'' => {
+                // Char literal vs lifetime. `'\…'` and `'x'` are chars;
+                // `'a` (no closing quote after one char) is a lifetime.
+                if i + 1 < b.len() && b[i + 1] == b'\\' {
+                    let mut j = i + 2;
+                    while j < b.len() && b[j] != b'\'' {
+                        j += if b[j] == b'\\' { 2 } else { 1 };
+                    }
+                    i = (j + 1).min(b.len());
+                } else {
+                    // One UTF-8 scalar after the quote.
+                    let rest = &src[i + 1..];
+                    let w = rest.chars().next().map_or(1, char::len_utf8);
+                    if i + 1 + w < b.len() && b[i + 1 + w] == b'\'' {
+                        i += w + 2; // char literal
+                    } else {
+                        i += 1; // lifetime: drop the quote, lex the ident
+                    }
+                }
+            }
+            c if c.is_ascii_digit() => {
+                let start = i;
+                while i < b.len() && (b[i].is_ascii_alphanumeric() || b[i] == b'_') {
+                    i += 1;
+                }
+                out.toks.push(Tok {
+                    kind: TokKind::Num,
+                    text: src[start..i].to_string(),
+                    line,
+                });
+            }
+            c if c.is_ascii_alphabetic() || c == b'_' => {
+                // Raw-string / byte-literal prefixes first: `r"`, `r#"`,
+                // `b"`, `br"`, `b'`.
+                if c == b'r' || c == b'b' {
+                    let rpos = if c == b'b' && i + 1 < b.len() && b[i + 1] == b'r' {
+                        Some(i + 1)
+                    } else if c == b'r' {
+                        Some(i)
+                    } else {
+                        None
+                    };
+                    if let Some(rp) = rpos {
+                        if let Some(j) = skip_raw_string(b, rp) {
+                            line += lines_in(b, i, j);
+                            i = j;
+                            continue;
+                        }
+                    }
+                    if c == b'b' && i + 1 < b.len() && b[i + 1] == b'"' {
+                        let j = skip_quoted(b, i + 1);
+                        line += lines_in(b, i, j);
+                        i = j;
+                        continue;
+                    }
+                    if c == b'b' && i + 1 < b.len() && b[i + 1] == b'\'' {
+                        let mut j = i + 2;
+                        while j < b.len() && b[j] != b'\'' {
+                            j += if b[j] == b'\\' { 2 } else { 1 };
+                        }
+                        i = (j + 1).min(b.len());
+                        continue;
+                    }
+                }
+                let start = i;
+                while i < b.len() && (b[i].is_ascii_alphanumeric() || b[i] == b'_') {
+                    i += 1;
+                }
+                out.toks.push(Tok {
+                    kind: TokKind::Ident,
+                    text: src[start..i].to_string(),
+                    line,
+                });
+            }
+            _ => {
+                out.toks.push(Tok {
+                    kind: TokKind::Punct,
+                    text: (c as char).to_string(),
+                    line,
+                });
+                i += 1;
+            }
+        }
+    }
+    out
+}
+
+/// Parse a numeric literal spelling (`64`, `0x50`, `1_000`) to u64.
+pub fn parse_num(text: &str) -> Option<u64> {
+    let t: String = text.chars().filter(|&c| c != '_').collect();
+    if let Some(hex) = t.strip_prefix("0x").or_else(|| t.strip_prefix("0X")) {
+        u64::from_str_radix(hex, 16).ok()
+    } else {
+        t.parse().ok()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn texts(src: &str) -> Vec<String> {
+        lex(src).toks.into_iter().map(|t| t.text).collect()
+    }
+
+    #[test]
+    fn strings_and_comments_are_stripped() {
+        let src = r##"
+            // Instant::now in a comment is invisible
+            /* and /* nested */ too: lock_shard */
+            let s = "Instant::now inside a string";
+            let r = r#"raw "with quotes" and lock_shard"#;
+            let by = b"bytes with unsafe";
+            call();
+        "##;
+        let t = texts(src);
+        assert!(!t.contains(&"Instant".to_string()), "{t:?}");
+        assert!(!t.contains(&"lock_shard".to_string()), "{t:?}");
+        assert!(!t.contains(&"unsafe".to_string()), "{t:?}");
+        assert!(t.contains(&"call".to_string()));
+    }
+
+    #[test]
+    fn char_literals_vs_lifetimes() {
+        // 'a' is a char (stripped); 'a in a generic is a lifetime and
+        // the following identifier must still be lexed.
+        let src = "fn f<'a>(x: &'a str) { let c = 'x'; let n = '\\n'; g(x) }";
+        let t = texts(src);
+        assert!(t.contains(&"a".to_string()), "lifetime ident lost: {t:?}");
+        assert!(!t.contains(&"x'".to_string()));
+        assert!(t.contains(&"g".to_string()));
+    }
+
+    #[test]
+    fn markers_are_collected_with_lines() {
+        let src = "\n// SAFETY: delegation only\nunsafe { x() }\n// lint: no-alloc\nfn f() {}\n";
+        let lexed = lex(src);
+        assert_eq!(lexed.markers.len(), 2);
+        assert!(lexed.markers[0].is_safety());
+        assert_eq!(lexed.markers[0].line, 2);
+        assert_eq!(lexed.markers[1].lint_directive(), Some("no-alloc"));
+        assert_eq!(lexed.markers[1].line, 4);
+    }
+
+    #[test]
+    fn numbers_keep_spelling_and_parse() {
+        let lexed = lex("const TAG_X: u8 = 0x50; const Y: u64 = 1_000;");
+        let nums: Vec<&str> = lexed
+            .toks
+            .iter()
+            .filter(|t| t.kind == TokKind::Num)
+            .map(|t| t.text.as_str())
+            .collect();
+        // `u8`/`u64` lex as identifiers, not numbers.
+        assert_eq!(nums, ["0x50", "1_000"]);
+        assert_eq!(parse_num("0x50"), Some(80));
+        assert_eq!(parse_num("1_000"), Some(1000));
+    }
+
+    #[test]
+    fn line_numbers_survive_multiline_literals() {
+        let src = "let a = \"one\ntwo\nthree\";\nmark();";
+        let lexed = lex(src);
+        let mark = lexed.toks.iter().find(|t| t.text == "mark").unwrap();
+        assert_eq!(mark.line, 4);
+    }
+}

@@ -24,6 +24,7 @@
 //! See `DESIGN.md` (repo root) for the paper → module inventory, the
 //! deliberate substitutions, and the experiment index.
 
+pub mod analysis;
 pub mod broker;
 pub mod consumer;
 pub mod core;

@@ -13,6 +13,7 @@
 //! memtrade chaos [--seed S] [--mix M]   run seeded fault-injection scenarios
 //! memtrade top --broker <a>             live marketplace telemetry (StatsQuery)
 //! memtrade trace --broker <a>           fetch live span rings (TraceQuery)
+//! memtrade lint [--root DIR]            check the repo's own invariants
 //! memtrade list                         list experiment ids
 //! ```
 //!
@@ -100,6 +101,7 @@ USAGE:
                   control|data|byzantine|kill|race|failover, e.g. data+kill)
   memtrade top --broker HOST:PORT | --addr HOST:PORT [--interval-ms N] [--once]
   memtrade trace --broker HOST:PORT | --addr HOST:PORT [--max N] [--trace ID]
+  memtrade lint [--root DIR]
   memtrade list
 ";
 
@@ -122,6 +124,7 @@ fn main() -> ExitCode {
         "chaos" => cmd_chaos(&args),
         "top" => cmd_top(&args),
         "trace" => cmd_trace(&args),
+        "lint" => cmd_lint(&args),
         "list" => {
             for id in figures::ALL {
                 println!("{id}");
@@ -765,5 +768,42 @@ fn cmd_top(args: &Args) -> ExitCode {
             return ExitCode::SUCCESS;
         }
         std::thread::sleep(interval);
+    }
+}
+
+fn cmd_lint(args: &Args) -> ExitCode {
+    // Default root: the crate directory when run from inside it (CI's
+    // working-directory is `rust/`), else the `rust/` subdir when run
+    // from the repo root.
+    let root = args
+        .flag("root")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| {
+            if std::path::Path::new("src/lib.rs").exists() {
+                std::path::PathBuf::from(".")
+            } else {
+                std::path::PathBuf::from("rust")
+            }
+        });
+    match memtrade::analysis::lint_tree(&root) {
+        Err(e) => {
+            eprintln!("lint: {e}");
+            ExitCode::FAILURE
+        }
+        Ok(report) if report.is_clean() => {
+            println!("memtrade lint: clean ({} files checked)", report.files);
+            ExitCode::SUCCESS
+        }
+        Ok(report) => {
+            for d in &report.diagnostics {
+                println!("{d}");
+            }
+            eprintln!(
+                "memtrade lint: {} violation(s) across {} files checked",
+                report.diagnostics.len(),
+                report.files
+            );
+            ExitCode::FAILURE
+        }
     }
 }

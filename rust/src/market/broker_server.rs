@@ -1456,10 +1456,7 @@ mod tests {
         let dir = std::env::temp_dir().join(format!(
             "memtrade-history-test-{}-{}",
             std::process::id(),
-            std::time::SystemTime::now()
-                .duration_since(std::time::UNIX_EPOCH)
-                .unwrap()
-                .as_nanos()
+            crate::util::clock::unix_nanos()
         ));
         let (b, mut c) = quick_cfg();
         c.history_dir = Some(dir.clone());
@@ -1501,10 +1498,7 @@ mod tests {
         std::env::temp_dir().join(format!(
             "memtrade-{tag}-{}-{}",
             std::process::id(),
-            std::time::SystemTime::now()
-                .duration_since(std::time::UNIX_EPOCH)
-                .unwrap()
-                .as_nanos()
+            crate::util::clock::unix_nanos()
         ))
     }
 

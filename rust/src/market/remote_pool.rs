@@ -208,10 +208,7 @@ impl RemotePool {
     /// even when no capacity is grantable yet (the pool keeps retrying);
     /// check [`Self::held_slabs`] if initial capacity is required.
     pub fn connect(cfg: RemotePoolConfig) -> io::Result<Self> {
-        let session = std::time::SystemTime::now()
-            .duration_since(std::time::UNIX_EPOCH)
-            .map(|d| d.as_micros() as u64)
-            .unwrap_or(0);
+        let session = crate::util::clock::unix_micros();
         // Seed the reconnect jitter per consumer (and session): at a
         // broker failover the whole fleet notices together, and
         // identically-seeded schedules would retry in lockstep.

@@ -117,6 +117,11 @@ pub struct FaultPlan {
     armed: Arc<AtomicBool>,
     /// Injected-fault counts (shared with clones, like `armed`).
     counters: Arc<FaultCounters>,
+    /// One banner per *plan*: a multi-role chaos run clones one plan
+    /// into several servers/clients, each of which announces itself at
+    /// startup — this latch (shared with clones, like `armed`) lets
+    /// only the first announcement through.
+    banner_logged: Arc<AtomicBool>,
 }
 
 impl Default for FaultPlan {
@@ -127,6 +132,7 @@ impl Default for FaultPlan {
             write: FaultSpec::default(),
             armed: Arc::new(AtomicBool::new(true)),
             counters: Arc::new(FaultCounters::default()),
+            banner_logged: Arc::new(AtomicBool::new(false)),
         }
     }
 }
@@ -162,16 +168,26 @@ impl FaultPlan {
         &self.counters
     }
 
-    /// Print the one-line chaos banner every fault-carrying role logs at
+    /// Print the one-line chaos banner a fault-carrying role logs at
     /// startup: which role is under chaos, the plan seed, and the exact
     /// command that replays this schedule (the determinism contract
     /// above is what makes the repro command meaningful).
-    pub fn log_banner(&self, role: &str) {
+    ///
+    /// Prints at most once per plan — clones share the latch, so a
+    /// multi-role scenario that hands one plan to a broker, two
+    /// agents, and a pool emits one banner (from whichever role starts
+    /// first), not one per constructed role or connection. Returns
+    /// whether this call was the one that printed.
+    pub fn log_banner(&self, role: &str) -> bool {
+        if self.banner_logged.swap(true, Ordering::Relaxed) {
+            return false;
+        }
         eprintln!(
             "[chaos] {role}: fault plan armed, seed={} \
              (reproduce: memtrade chaos --seed {})",
             self.seed, self.seed
         );
+        true
     }
 
     /// Derive the deterministic per-connection fault state for the
@@ -545,6 +561,24 @@ mod tests {
         let mut m = MetricSet::new();
         plan.counters().observe("faults", &mut m);
         assert_eq!(m.counter("faults.drops"), Some(1));
+    }
+
+    #[test]
+    fn banner_prints_once_per_plan_across_roles_and_clones() {
+        // A multi-role chaos run clones one plan into the broker, the
+        // agents, and the consumer pool; each role calls log_banner at
+        // startup. Only the first call across all clones may print.
+        let plan = FaultPlan::symmetric(5, FaultSpec { drop_p: 0.1, ..Default::default() });
+        let broker = plan.clone();
+        let agent = plan.clone();
+        let pool = plan.clone();
+        assert!(broker.log_banner("broker"), "first role must print");
+        assert!(!agent.log_banner("producer-agent"), "second role reprinted the banner");
+        assert!(!pool.log_banner("consumer-pool ctrl"));
+        assert!(!plan.log_banner("consumer-pool data"));
+        // An independent plan (its own seed/latch) still announces.
+        let other = FaultPlan::symmetric(6, FaultSpec::default());
+        assert!(other.log_banner("producer-store"));
     }
 
     #[test]

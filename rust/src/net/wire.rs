@@ -132,6 +132,7 @@ pub fn split_trace_ctx(frame: &[u8]) -> Result<(&[u8], u64, u64), CodecError> {
     Ok((&frame[..at], trace_id, parent))
 }
 
+// lint: no-alloc
 pub(crate) fn put_bytes(out: &mut Vec<u8>, b: &[u8]) {
     out.extend_from_slice(&(b.len() as u32).to_le_bytes());
     out.extend_from_slice(b);
@@ -226,6 +227,7 @@ impl<'a> RequestRef<'a> {
 
     /// Append the encoded payload to `out` (does not clear it). This is
     /// the single encoder: the owned [`Request`] delegates here.
+    // lint: no-alloc
     pub fn encode_into(&self, out: &mut Vec<u8>) {
         match self {
             RequestRef::Get { key } => {
@@ -448,6 +450,7 @@ pub fn decode_batch_response(buf: &[u8]) -> Result<Vec<Response>, CodecError> {
 /// Append a `Response::Value` payload built from a borrowed value slice:
 /// the server's zero-copy GET path encodes straight from the store's
 /// entry into the connection's reusable output buffer.
+// lint: no-alloc
 pub fn encode_value_response(out: &mut Vec<u8>, value: &[u8]) {
     out.push(TAG_VALUE);
     put_bytes(out, value);
@@ -455,6 +458,7 @@ pub fn encode_value_response(out: &mut Vec<u8>, value: &[u8]) {
 
 impl Response {
     /// Append the encoded payload to `out` (does not clear it).
+    // lint: no-alloc
     pub fn encode_into(&self, out: &mut Vec<u8>) {
         match self {
             Response::Value(v) => encode_value_response(out, v),

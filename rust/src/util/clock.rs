@@ -1,0 +1,48 @@
+//! The wall-clock shims — the only place (enforced by `memtrade lint`,
+//! rule `clock`) where calendar time enters the system outside the
+//! RNG's seed fallback.
+//!
+//! Everything downstream of these functions takes time as a *value*:
+//! the lease state machine, replication events, and both wire codecs
+//! are clock-agnostic so they can be driven by the simulator and
+//! replayed deterministically. Daemon loops that need calendar time
+//! (session ids, unique on-disk names) call these shims instead of
+//! `SystemTime::now` directly, which keeps the lint allowlist at two
+//! files and makes every wall-clock read greppable.
+
+use std::time::{SystemTime, UNIX_EPOCH};
+
+/// Microseconds since the Unix epoch (0 if the system clock is set
+/// before 1970 — callers use this for uniqueness, not for ordering
+/// guarantees).
+pub fn unix_micros() -> u64 {
+    SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_micros() as u64)
+        .unwrap_or(0)
+}
+
+/// Nanoseconds since the Unix epoch, truncated to u64 (wraps after
+/// ~584 years; same uniqueness-not-ordering contract as
+/// [`unix_micros`]).
+pub fn unix_nanos() -> u64 {
+    SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_nanos() as u64)
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clocks_are_nonzero_and_consistent() {
+        let us = unix_micros();
+        let ns = unix_nanos();
+        assert!(us > 1_500_000_000_000_000, "clock before ~2017: {us}");
+        // The two reads straddle at most a few seconds.
+        assert!(ns / 1000 >= us);
+        assert!(ns / 1000 - us < 10_000_000, "us={us} ns={ns}");
+    }
+}

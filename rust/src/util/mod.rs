@@ -7,6 +7,7 @@
 pub mod avl;
 pub mod backoff;
 pub mod bench;
+pub mod clock;
 pub mod fmt;
 pub mod hash;
 pub mod rng;

@@ -211,7 +211,7 @@ mod tests {
         let mut admitted = 0u64;
         let mut rng = crate::util::rng::Rng::new(9);
         let mut now = SimTime::ZERO;
-        for _ in 0..10_000 {
+        for _ in 0..if cfg!(miri) { 500 } else { 10_000 } {
             now += SimTime::from_micros(rng.below(2_000));
             let req = rng.below(400) + 1;
             if tb.try_consume(now, req) {
@@ -259,9 +259,12 @@ mod tests {
         // truncate every increment to zero forever.
         let tb = AtomicTokenBucket::new(1, 10);
         assert!(tb.try_consume(0, 10));
+        // Either schedule polls 1 simulated second in sub-byte steps;
+        // Miri takes fewer, coarser polls.
+        let (polls, step_us) = if cfg!(miri) { (1_000u64, 1_000) } else { (10_000, 100) };
         let mut now = 0u64;
-        for _ in 0..10_000 {
-            now += 100;
+        for _ in 0..polls {
+            now += step_us;
             let _ = tb.try_consume(now, 10);
         }
         // 1 second elapsed: exactly 1 byte should have accumulated.
@@ -284,7 +287,7 @@ mod tests {
                 let admitted = admitted.clone();
                 std::thread::spawn(move || {
                     let mut rng = crate::util::rng::Rng::new(200 + t);
-                    for _ in 0..20_000 {
+                    for _ in 0..if cfg!(miri) { 500 } else { 20_000 } {
                         let now = clock.fetch_add(2, Ordering::Relaxed) + 2;
                         let req = 1 + rng.below(400);
                         if tb.try_consume(now, req) {

@@ -1,0 +1,247 @@
+//! Fixture tests for `memtrade lint` — one passing and one failing
+//! example per rule — plus the self-check: the shipped tree must be
+//! lint-clean, which is exactly what the CI `static-analysis` job
+//! gates on via `memtrade lint`.
+//!
+//! Every fixture lives in a raw string, which also exercises the
+//! tokenizer's reason for existing: rule patterns inside string
+//! literals (like these fixtures, when the linter walks *this* file)
+//! must never match.
+
+use memtrade::analysis::{lint_source, lint_tree, Diagnostic};
+use std::path::Path;
+
+fn rules(diags: &[Diagnostic]) -> Vec<&'static str> {
+    diags.iter().map(|d| d.rule).collect()
+}
+
+// ------------------------------------------------------- rule: wire-tags
+
+const MANIFEST: &str = "\
+# test registry
+frame TAG_GET 1
+frame TAG_PUT 2
+metric METRIC_COUNTER 1
+";
+
+#[test]
+fn wire_tags_pass_when_registered_and_unique() {
+    let src = r#"
+pub const TAG_GET: u8 = 1;
+pub const TAG_PUT: u8 = 2;
+const METRIC_COUNTER: u8 = 1; // same value, different namespace: fine
+"#;
+    let diags = lint_source("src/net/wire.rs", src, Some(MANIFEST));
+    assert!(diags.is_empty(), "{diags:?}");
+}
+
+#[test]
+fn wire_tags_fail_on_reuse_with_both_names_printed() {
+    // A "protocol bump" that reuses TAG_GET's value for a new frame.
+    let src = r#"
+pub const TAG_GET: u8 = 1;
+pub const TAG_PUT: u8 = 2;
+pub const TAG_EVICT_HINT: u8 = 1;
+"#;
+    let diags = lint_source("src/net/wire.rs", src, Some(MANIFEST));
+    assert!(rules(&diags).contains(&"wire-tags"), "{diags:?}");
+    let collision = diags.iter().find(|d| d.msg.contains("collision")).unwrap();
+    assert!(
+        collision.msg.contains("TAG_GET") && collision.msg.contains("TAG_EVICT_HINT"),
+        "colliding frame names must be printed: {}",
+        collision.msg
+    );
+    assert_eq!(collision.line, 4, "diagnostic anchors the new (colliding) tag");
+}
+
+// --------------------------------------------------- rule: decode-bounds
+
+#[test]
+fn decode_bounds_pass_when_count_is_checked() {
+    let src = r#"
+fn decode_batch(buf: &[u8], off: usize) -> Vec<Op> {
+    let n = read_u32(buf) as usize;
+    if n > MAX_BATCH_OPS || n > (buf.len() - off) / 4 {
+        return Vec::new();
+    }
+    let mut ops = Vec::with_capacity(n);
+    ops
+}
+"#;
+    let diags = lint_source("src/net/wire.rs", src, None);
+    assert!(diags.is_empty(), "{diags:?}");
+}
+
+#[test]
+fn decode_bounds_fail_on_unchecked_count() {
+    // The classic allocation bomb: attacker-declared count drives
+    // reservation before any byte of the payload exists.
+    let src = r#"
+fn decode_batch(buf: &[u8]) -> Vec<Op> {
+    let n = read_u32(buf) as usize;
+    let mut ops = Vec::with_capacity(n);
+    ops
+}
+"#;
+    let diags = lint_source("src/net/wire.rs", src, None);
+    assert_eq!(rules(&diags), ["decode-bounds"], "{diags:?}");
+    assert_eq!(diags[0].line, 4);
+    assert!(diags[0].msg.contains('n'), "{}", diags[0].msg);
+}
+
+// ------------------------------------------------------------ rule: clock
+
+#[test]
+fn clock_pass_in_allowlisted_daemon_file() {
+    let src = "fn maintain(&mut self) { self.next = Instant::now(); }";
+    let diags = lint_source("src/market/remote_pool.rs", src, None);
+    assert!(diags.is_empty(), "{diags:?}");
+}
+
+#[test]
+fn clock_fail_in_lease_state_machine() {
+    // market/lease.rs is the file the rule exists for: lease expiry
+    // must be driven by the caller's clock (simulator or daemon).
+    let src = "fn expired(&self) -> bool { Instant::now() > self.deadline }";
+    let diags = lint_source("src/market/lease.rs", src, None);
+    assert_eq!(rules(&diags), ["clock"], "{diags:?}");
+    let sys = "fn stamp(&self) -> u64 { let t = SystemTime::now(); to_micros(t) }";
+    let diags = lint_source("src/market/replication.rs", sys, None);
+    assert_eq!(rules(&diags), ["clock"], "{diags:?}");
+}
+
+// ------------------------------------------------------- rule: lock-order
+
+#[test]
+fn lock_order_pass_on_ascending_acquisition() {
+    let src = r#"
+fn shrink_all(&self) {
+    let guards: Vec<_> = (0..self.num_shards()).map(|i| self.lock_shard(i)).collect();
+    drop(guards);
+}
+fn one(&self, key: &[u8]) -> bool {
+    let g = self.lock_shard(self.shard_index(key));
+    g.contains(key)
+}
+"#;
+    let diags = lint_source("src/kv/sharded.rs", src, None);
+    assert!(diags.is_empty(), "{diags:?}");
+}
+
+#[test]
+fn lock_order_fail_on_second_lock_while_guard_live() {
+    // Descending acquisition: deadlocks against the ascending batch
+    // path the moment the two run concurrently.
+    let src = r#"
+fn migrate(&self, from: usize, to: usize) {
+    let src_guard = self.lock_shard(from);
+    let dst_guard = self.lock_shard(to);
+    drop((src_guard, dst_guard));
+}
+"#;
+    let diags = lint_source("src/kv/sharded.rs", src, None);
+    assert_eq!(rules(&diags), ["lock-order"], "{diags:?}");
+    assert_eq!(diags[0].line, 4, "the second acquisition is the violation");
+}
+
+// --------------------------------------------------------- rule: no-alloc
+
+#[test]
+fn no_alloc_pass_for_buffer_reuse() {
+    let src = r#"
+// lint: no-alloc
+fn encode_into(&self, out: &mut Vec<u8>) {
+    out.push(TAG);
+    out.extend_from_slice(&self.key);
+}
+fn unmarked() -> Vec<u8> {
+    self.key.to_vec() // fine: not a marked hot path
+}
+"#;
+    let diags = lint_source("src/net/wire.rs", src, None);
+    assert!(diags.is_empty(), "{diags:?}");
+}
+
+#[test]
+fn no_alloc_fail_on_per_call_allocation() {
+    let src = r#"
+// lint: no-alloc
+fn record(&self, v: u64) {
+    let label = format!("bucket{}", bucket_index(v));
+    self.emit(&label, v.to_string());
+}
+"#;
+    let diags = lint_source("src/metrics/hist.rs", src, None);
+    assert_eq!(rules(&diags), ["no-alloc", "no-alloc"], "{diags:?}");
+    assert!(diags[0].msg.contains("format!"), "{}", diags[0].msg);
+    assert!(diags[1].msg.contains("to_string"), "{}", diags[1].msg);
+}
+
+// ----------------------------------------------------------- rule: safety
+
+#[test]
+fn safety_pass_with_adjacent_justification() {
+    let src = r#"
+fn words(&self) -> u64 {
+    // SAFETY: the slot array is 8-word aligned and `idx` was taken
+    // modulo its length above, so the read cannot go out of bounds.
+    unsafe { *self.slots.get_unchecked(idx) }
+}
+"#;
+    let diags = lint_source("src/trace/mod.rs", src, None);
+    assert!(diags.is_empty(), "{diags:?}");
+}
+
+#[test]
+fn safety_fail_without_justification() {
+    let src = r#"
+fn words(&self) -> u64 {
+    unsafe { *self.slots.get_unchecked(idx) }
+}
+"#;
+    let diags = lint_source("src/trace/mod.rs", src, None);
+    assert_eq!(rules(&diags), ["safety"], "{diags:?}");
+    assert_eq!(diags[0].line, 3);
+}
+
+// ------------------------------------------------- tokenizer adversaria
+
+#[test]
+fn patterns_inside_strings_and_comments_never_match() {
+    let src = r##"
+// Instant::now() in a comment.
+fn doc() -> &'static str {
+    let a = "Instant::now() in a string";
+    let b = r#"unsafe { lock_shard(0) } in a raw string"#;
+    concat(a, b)
+}
+"##;
+    let diags = lint_source("src/market/lease.rs", src, None);
+    assert!(diags.is_empty(), "{diags:?}");
+}
+
+// ------------------------------------------------------------ self-check
+
+/// The shipped tree is lint-clean. This is the same walk the CI
+/// `static-analysis` job performs via `memtrade lint`; keeping it as a
+/// test means `cargo test` alone catches a violation before CI does.
+#[test]
+fn shipped_tree_is_lint_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let report = lint_tree(root).expect("lint walk failed");
+    assert!(
+        report.files >= 80,
+        "suspiciously few files walked: {}",
+        report.files
+    );
+    assert!(
+        report.is_clean(),
+        "shipped tree has lint violations:\n{}",
+        report
+            .diagnostics
+            .iter()
+            .map(|d| d.to_string())
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+}

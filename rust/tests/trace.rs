@@ -33,11 +33,16 @@ thread_local! {
     static ALLOCS: Cell<u64> = const { Cell::new(0) };
 }
 
+// SAFETY: pure delegation to the System allocator; the only extra work
+// is a thread-local counter bump, which cannot allocate or unwind.
 unsafe impl GlobalAlloc for CountingAlloc {
+    // SAFETY: same layout contract as `System.alloc`, forwarded as-is.
     unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
         ALLOCS.with(|c| c.set(c.get() + 1));
         System.alloc(layout)
     }
+    // SAFETY: `ptr`/`layout` come from the paired `alloc` above, which
+    // got them from `System`; forwarding preserves the contract.
     unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
         System.dealloc(ptr, layout)
     }
