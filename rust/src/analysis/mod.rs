@@ -5,7 +5,7 @@
 //! The pass is a hand-rolled comment/string-stripping tokenizer
 //! ([`tokens`]) plus a rule engine ([`rules`]) — no syn, no rustc
 //! internals, because the crate is offline and dependency-free by
-//! construction. Six rules run over `src/**` (plus `tests/**` /
+//! construction. Seven rules run over `src/**` (plus `tests/**` /
 //! `benches/**` where noted):
 //!
 //! 1. **wire-tags** — every `TAG_*`/`METRIC_*`/`EVENT_*` constant in
@@ -23,6 +23,10 @@
 //! 5. **no-alloc** — `// lint: no-alloc` marked hot paths may not
 //!    allocate per call.
 //! 6. **safety** — every `unsafe` needs an adjacent `// SAFETY:`.
+//! 7. **protocol-doc** — `PROTOCOL.md` (the written wire spec at the
+//!    repository root) must document every registry entry: the tag
+//!    name must appear, on a line that also carries its wire value.
+//!    The spec cannot drift from the protocol it describes.
 //!
 //! `tests/lint.rs` holds a passing and a failing fixture per rule plus
 //! a self-check that the shipped tree is clean; the CI
@@ -67,6 +71,10 @@ impl LintReport {
 /// Relative path of the committed wire-tag manifest under the crate
 /// root.
 pub const MANIFEST_PATH: &str = "src/analysis/wire_tags.txt";
+
+/// File name of the written wire spec, kept at the repository root
+/// (one level above the crate root `lint_tree` is pointed at).
+pub const PROTOCOL_DOC: &str = "PROTOCOL.md";
 
 // ------------------------------------------------------------ manifest
 
@@ -147,7 +155,10 @@ pub fn check_wire_registry(
                     file: b.file.clone(),
                     line: b.line,
                     rule: "wire-tags",
-                    msg: format!("duplicate wire-tag constant {} (also {}:{})", b.name, a.file, a.line),
+                    msg: format!(
+                        "duplicate wire-tag constant {} (also {}:{})",
+                        b.name, a.file, a.line
+                    ),
                 });
             }
         }
@@ -193,6 +204,56 @@ pub fn check_wire_registry(
             }
         }
     }
+}
+
+/// Rule 7 (protocol-doc): the written spec must document every registry
+/// entry. For each manifest tag, the first spec line naming it must also
+/// carry its decimal wire value — so renumbering a tag without fixing
+/// the doc (or documenting a tag that was never registered the other
+/// way around via the wire-tags rule) fails the lint. Pure over the doc
+/// text so fixture tests can drive it directly.
+pub fn check_protocol_doc(doc: &str, manifest: &[ManifestEntry], out: &mut Vec<Diagnostic>) {
+    for m in manifest {
+        let named = doc
+            .lines()
+            .enumerate()
+            .find(|(_, line)| doc_words(line).any(|w| w == m.name));
+        match named {
+            None => out.push(Diagnostic {
+                file: PROTOCOL_DOC.to_string(),
+                line: 0,
+                rule: "protocol-doc",
+                msg: format!(
+                    "spec never mentions `{}` (namespace `{}`, value {}) — PROTOCOL.md \
+                     must enumerate every registered tag",
+                    m.name, m.namespace, m.value
+                ),
+            }),
+            Some((idx, line)) => {
+                let value = m.value.to_string();
+                if !doc_words(line).any(|w| w == value) {
+                    out.push(Diagnostic {
+                        file: PROTOCOL_DOC.to_string(),
+                        line: idx as u32 + 1,
+                        rule: "protocol-doc",
+                        msg: format!(
+                            "spec names `{}` without its wire value {} on that line — \
+                             the doc and the registry must agree",
+                            m.name, m.value
+                        ),
+                    });
+                }
+            }
+        }
+    }
+}
+
+/// Identifier-ish words of a spec line (`TAG_GET`, `64`, ...): split on
+/// everything that is not `[A-Za-z0-9_]`, so `| TAG_GET | 1 |` yields
+/// exact tokens and value `1` cannot false-match inside `11`.
+fn doc_words(line: &str) -> impl Iterator<Item = &str> {
+    line.split(|c: char| !(c.is_ascii_alphanumeric() || c == '_'))
+        .filter(|w| !w.is_empty())
 }
 
 // ------------------------------------------------------------- driving
@@ -264,6 +325,24 @@ pub fn lint_tree(root: &Path) -> io::Result<LintReport> {
         Ok(text) => {
             let entries = parse_manifest(MANIFEST_PATH, &text, &mut report.diagnostics);
             check_wire_registry(&tags, &entries, MANIFEST_PATH, true, &mut report.diagnostics);
+            // The human-readable spec lives at the repository root, one
+            // level above the crate root (fall back to the crate root
+            // for relocated trees), and is held to the same registry.
+            let doc_path = match root.parent() {
+                Some(p) if p.join(PROTOCOL_DOC).exists() => p.join(PROTOCOL_DOC),
+                _ => root.join(PROTOCOL_DOC),
+            };
+            match std::fs::read_to_string(&doc_path) {
+                Ok(doc) => check_protocol_doc(&doc, &entries, &mut report.diagnostics),
+                Err(_) => report.diagnostics.push(Diagnostic {
+                    file: PROTOCOL_DOC.to_string(),
+                    line: 0,
+                    rule: "protocol-doc",
+                    msg: "missing PROTOCOL.md — the written wire spec is part of the \
+                          protocol ABI and must ship with the tree"
+                        .to_string(),
+                }),
+            }
         }
         Err(_) => report.diagnostics.push(Diagnostic {
             file: MANIFEST_PATH.to_string(),
@@ -340,6 +419,26 @@ frame TAG_PUT 2
         let diags = lint_source("src/net/wire.rs", new, Some(MANIFEST));
         assert_eq!(diags.len(), 1);
         assert!(diags[0].msg.contains("add `frame TAG_NEW 9`"), "{}", diags[0].msg);
+    }
+
+    #[test]
+    fn protocol_doc_check_requires_name_and_value_together() {
+        let entries =
+            parse_manifest("m", "frame TAG_GET 1\nframe TAG_PUT 2\n", &mut Vec::new());
+        let good = "| `TAG_GET` | 1 | read |\n| `TAG_PUT` | 2 | write |\n";
+        let mut out = Vec::new();
+        check_protocol_doc(good, &entries, &mut out);
+        assert!(out.is_empty(), "{out:?}");
+
+        // One tag never mentioned, one mentioned without its value —
+        // and `11` in prose must not satisfy TAG_GET's value 1.
+        let bad = "`TAG_GET` is documented in section 11, valuelessly.\n";
+        out.clear();
+        check_protocol_doc(bad, &entries, &mut out);
+        assert_eq!(out.len(), 2, "{out:?}");
+        assert!(out.iter().any(|d| d.msg.contains("without its wire value 1")));
+        assert!(out.iter().any(|d| d.msg.contains("never mentions `TAG_PUT`")));
+        assert!(out.iter().all(|d| d.rule == "protocol-doc"));
     }
 
     #[test]

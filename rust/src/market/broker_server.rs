@@ -44,14 +44,15 @@ use crate::core::{ConsumerId, Lease, LeaseId, Money, ProducerId, SimTime, GIB};
 use crate::market::lease::{LeaseError, LeaseEvent, LeaseState, LeaseTable};
 use crate::metrics::{MetricSet, Observe, Registry as MetricsRegistry};
 use crate::net::control::{
-    server_handshake_patient, CtrlClient, CtrlRequest, CtrlResponse, GrantInfo, ProducerGrant,
-    RefuseCode, CONTROL_MAGIC,
+    CtrlClient, CtrlRequest, CtrlResponse, GrantInfo, HelloInfo, ProducerGrant, RefuseCode,
+    CONTROL_MAGIC,
 };
-use crate::net::faults::{FaultPlan, FaultyStream};
-use crate::net::wire::{read_frame_into_patient, write_frame, CodecError};
+use crate::net::event_loop::{spawn_loops, Service};
+use crate::net::faults::FaultPlan;
+use crate::net::wire::CodecError;
 use crate::trace::{self, Op as TraceOp, Role as TraceRole, SpanGuard};
 use std::collections::{HashMap, VecDeque};
-use std::io::{self, BufReader, BufWriter, Write};
+use std::io::{self, Write};
 use std::net::{TcpListener, ToSocketAddrs};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -867,7 +868,7 @@ impl State {
 pub struct BrokerServer {
     local_addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
-    accept_handle: Option<JoinHandle<()>>,
+    serve_handles: Vec<JoinHandle<()>>,
     maint_handle: Option<JoinHandle<()>>,
     history_handle: Option<JoinHandle<()>>,
     repl_handle: Option<JoinHandle<()>>,
@@ -943,40 +944,17 @@ impl BrokerServer {
         }));
         let start = Instant::now();
 
-        let accept_handle = {
-            let stop = stop.clone();
-            let state = state.clone();
-            let faults = cfg.faults.clone();
-            std::thread::spawn(move || {
-                let mut conn_handles: Vec<JoinHandle<()>> = Vec::new();
-                let mut conn_idx: u64 = 0;
-                while !stop.load(Ordering::Relaxed) {
-                    match listener.accept() {
-                        Ok((stream, _)) => {
-                            // The daemon runs forever and peers reconnect
-                            // freely: reap finished connection threads so
-                            // the handle list doesn't grow without bound.
-                            conn_handles.retain(|h| !h.is_finished());
-                            stream.set_nodelay(true).ok();
-                            let stream = FaultyStream::new(stream, faults.as_ref(), conn_idx);
-                            conn_idx += 1;
-                            let state = state.clone();
-                            let stop = stop.clone();
-                            conn_handles.push(std::thread::spawn(move || {
-                                let _ = serve_control_conn(stream, state, stop, start);
-                            }));
-                        }
-                        Err(ref e) if e.kind() == io::ErrorKind::WouldBlock => {
-                            std::thread::sleep(Duration::from_millis(1));
-                        }
-                        Err(_) => break,
-                    }
-                }
-                for h in conn_handles {
-                    let _ = h.join();
-                }
-            })
-        };
+        // One epoll loop thread holds every control connection: agent
+        // heartbeats are tiny request/response frames and all real work
+        // happens under the state lock anyway, so a single loop carries
+        // thousands of agents without a thread per peer.
+        let serve_handles = spawn_loops(
+            listener,
+            stop.clone(),
+            cfg.faults.clone(),
+            ControlPlane { state: state.clone(), start },
+            1,
+        )?;
 
         let maint_handle = {
             let stop = stop.clone();
@@ -1022,7 +1000,7 @@ impl BrokerServer {
         Ok(BrokerServer {
             local_addr,
             stop,
-            accept_handle: Some(accept_handle),
+            serve_handles,
             maint_handle: Some(maint_handle),
             history_handle,
             repl_handle,
@@ -1071,7 +1049,7 @@ impl BrokerServer {
 
     fn shutdown(&mut self) {
         self.stop.store(true, Ordering::Relaxed);
-        if let Some(h) = self.accept_handle.take() {
+        for h in self.serve_handles.drain(..) {
             let _ = h.join();
         }
         if let Some(h) = self.maint_handle.take() {
@@ -1092,33 +1070,33 @@ impl Drop for BrokerServer {
     }
 }
 
-fn serve_control_conn(
-    stream: FaultyStream,
+/// The control plane as an event-loop [`Service`]: decode one control
+/// frame, run the verb against the shared [`State`] under its lock,
+/// encode the response. Connections carry no per-peer state — producer
+/// identity travels in every frame — so `Conn = ()` and a reconnecting
+/// agent resumes mid-conversation for free.
+#[derive(Clone)]
+struct ControlPlane {
     state: Arc<Mutex<State>>,
-    stop: Arc<AtomicBool>,
+    /// The daemon's monotonic epoch; control verbs take `now_us` as a
+    /// value (that is what keeps the lease table replayable).
     start: Instant,
-) -> io::Result<()> {
-    stream.set_read_timeout(Some(Duration::from_millis(100)))?;
-    let mut reader = BufReader::new(stream.try_clone()?);
-    let mut writer = BufWriter::new(stream);
-    let keep_going = || !stop.load(Ordering::Relaxed);
-    if server_handshake_patient(&mut reader, &mut writer, CONTROL_MAGIC, keep_going)?
-        .is_none()
-    {
-        return Ok(());
+}
+
+impl Service for ControlPlane {
+    type Conn = ();
+
+    fn magic(&self) -> [u8; 4] {
+        CONTROL_MAGIC
     }
-    let mut frame: Vec<u8> = Vec::new();
-    let mut out: Vec<u8> = Vec::new();
-    loop {
-        let keep_going = || !stop.load(Ordering::Relaxed);
-        match read_frame_into_patient(&mut reader, &mut frame, keep_going) {
-            Ok(true) => {}
-            Ok(false) | Err(_) => return Ok(()),
-        }
-        let resp = match CtrlRequest::decode(&frame) {
+
+    fn open_conn(&self, _conn: u64, _hello: HelloInfo) {}
+
+    fn on_frame(&self, _conn: &mut (), frame: &[u8], out: &mut Vec<u8>) {
+        let resp = match CtrlRequest::decode(frame) {
             Ok(req) => {
-                let now_us = start.elapsed().as_micros() as u64;
-                state.lock().unwrap().handle(req, now_us)
+                let now_us = self.start.elapsed().as_micros() as u64;
+                self.state.lock().unwrap().handle(req, now_us)
             }
             Err(e @ CodecError::UnknownTag(_)) => CtrlResponse::Refused {
                 code: RefuseCode::Malformed,
@@ -1129,9 +1107,7 @@ fn serve_control_conn(
                 detail: e.to_string(),
             },
         };
-        out.clear();
-        resp.encode_into(&mut out);
-        write_frame(&mut writer, &out)?;
+        resp.encode_into(out);
     }
 }
 

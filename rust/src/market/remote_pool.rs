@@ -172,6 +172,57 @@ struct Slot {
 
 /// The consumer's window onto the marketplace: leased slabs mounted as
 /// remote KV capacity behind the [`KvTransport`] trait.
+///
+/// # Example
+///
+/// One broker, one producer agent, one consumer pool — the full
+/// marketplace control plane on loopback — then a secure PUT/GET
+/// through a leased remote slab:
+///
+/// ```
+/// use memtrade::consumer::client::SecureKv;
+/// use memtrade::market::{
+///     BrokerServer, ProducerAgent, ProducerAgentConfig, RemotePool, RemotePoolConfig,
+/// };
+/// use std::time::{Duration, Instant};
+///
+/// let broker =
+///     BrokerServer::start("127.0.0.1:0", Default::default(), Default::default()).unwrap();
+/// let agent = ProducerAgent::start(ProducerAgentConfig {
+///     producer: 1,
+///     brokers: vec![broker.addr().to_string()],
+///     data_addr: "127.0.0.1:0".to_string(),
+///     capacity_bytes: 64 << 20,
+///     harvest: false,
+///     heartbeat: Duration::from_millis(25),
+///     seed: 1,
+///     ..Default::default()
+/// })
+/// .unwrap();
+/// let mut pool = RemotePool::connect(RemotePoolConfig {
+///     consumer: 9,
+///     brokers: vec![broker.addr().to_string()],
+///     target_slabs: 4,
+///     min_slabs: 1,
+///     maintain_every: Duration::from_millis(10),
+///     ..Default::default()
+/// })
+/// .unwrap();
+///
+/// // Grants are leased and mounted asynchronously: drive the pool
+/// // until the first secure write lands on remote memory.
+/// let mut kv = SecureKv::with_iv_seed(Some([5u8; 16]), true, 1, 7);
+/// let deadline = Instant::now() + Duration::from_secs(10);
+/// while !kv.put(&mut pool, b"key", b"value") {
+///     pool.maintain();
+///     std::thread::sleep(Duration::from_millis(5));
+///     assert!(Instant::now() < deadline, "no remote capacity mounted");
+/// }
+/// assert_eq!(kv.get(&mut pool, b"key"), Some(b"value".to_vec()));
+/// drop(pool);
+/// agent.stop();
+/// broker.stop();
+/// ```
 pub struct RemotePool {
     cfg: RemotePoolConfig,
     ctrl: Option<CtrlClient>,

@@ -117,7 +117,7 @@ const HELLO_FLAG_TRACING: u8 = 1;
 /// v6 hello: magic (4) + version (2) + max batch ops (4) + flags (1).
 const HELLO_LEN: usize = 11;
 
-fn hello_payload(magic: [u8; 4]) -> [u8; HELLO_LEN] {
+pub(crate) fn hello_payload(magic: [u8; 4]) -> [u8; HELLO_LEN] {
     let v = PROTOCOL_VERSION.to_le_bytes();
     let b = (crate::net::wire::MAX_BATCH_OPS as u32).to_le_bytes();
     let flags = if crate::trace::enabled() { HELLO_FLAG_TRACING } else { 0 };
@@ -126,7 +126,7 @@ fn hello_payload(magic: [u8; 4]) -> [u8; HELLO_LEN] {
     ]
 }
 
-fn check_hello(payload: &[u8], expected: [u8; 4]) -> Result<HelloInfo, String> {
+pub(crate) fn check_hello(payload: &[u8], expected: [u8; 4]) -> Result<HelloInfo, String> {
     // Plane and version are judged from the v1-compatible prefix, so an
     // old (shorter-hello) peer gets told its *version* is wrong rather
     // than a generic length complaint.

@@ -253,6 +253,19 @@ impl FaultyStream {
     pub fn set_nodelay(&self, on: bool) -> io::Result<()> {
         self.inner.set_nodelay(on)
     }
+
+    /// Switch the underlying socket to nonblocking mode (the epoll
+    /// event loop drives accepted sockets this way).
+    pub fn set_nonblocking(&self, on: bool) -> io::Result<()> {
+        self.inner.set_nonblocking(on)
+    }
+
+    /// The raw fd of the underlying socket, for epoll registration.
+    /// The stream keeps ownership; the fd is valid until `self` drops.
+    pub fn as_raw_fd(&self) -> std::os::fd::RawFd {
+        use std::os::fd::AsRawFd;
+        self.inner.as_raw_fd()
+    }
 }
 
 fn flip_random_bit(buf: &mut [u8], rng: &mut Rng) {

@@ -1,14 +1,22 @@
 //! Networking substrate: the producer-store wire protocol (from-scratch
-//! binary codec), the marketplace *control-plane* protocol with its
-//! magic-bytes/version handshake, a network *model* for the
-//! discrete-event simulator (VPC-peering latency + NIC bandwidth, paper
-//! §3/§7), a real TCP transport (std::net, threaded) used by the
-//! runnable examples so the request path is exercised over actual
-//! sockets, and the chaos plane ([`faults`]): deterministic seeded
-//! fault injection threaded under both planes, plus the Byzantine
-//! producer mode the §6.1 envelope is tested against.
+//! binary codec, spec in `PROTOCOL.md` at the repo root), the
+//! marketplace *control-plane* protocol with its magic-bytes/version
+//! handshake, a network *model* for the discrete-event simulator
+//! (VPC-peering latency + NIC bandwidth, paper §3/§7), a real TCP
+//! transport over actual sockets, and the chaos plane ([`faults`]):
+//! deterministic seeded fault injection threaded under both planes,
+//! plus the Byzantine producer mode the §6.1 envelope is tested
+//! against.
+//!
+//! Both servers — the producer store ([`tcp::ProducerStoreServer`])
+//! and the broker's control port — serve on the hand-rolled epoll
+//! readiness loop in [`event_loop`], so one daemon holds thousands of
+//! connections on a few threads. The legacy thread-per-connection
+//! path survives as [`tcp::ProducerStoreServer::start_threaded`], the
+//! baseline the `bench_e2e` connection sweep compares against.
 
 pub mod control;
+pub mod event_loop;
 pub mod faults;
 pub mod model;
 pub mod tcp;

@@ -1,18 +1,27 @@
-//! Real TCP transport: a threaded producer-store server exposing one
+//! Real TCP transport: the producer-store server exposing one
 //! [`ShardedKvStore`] per listener, and a blocking client. Used by the
 //! runnable examples and integration tests so the consumer request path
 //! is exercised over real sockets with the real wire codec. (The
 //! cluster-scale experiments run on the in-process simulator instead.)
 //!
+//! The server runs on the epoll readiness loop in
+//! [`crate::net::event_loop`]: a few loop threads multiplex thousands
+//! of nonblocking connections, which is what lets one harvested
+//! producer VM serve the wide consumer fan-out the paper's economics
+//! assume (DESIGN.md "Async data plane"). The frame semantics live in
+//! [`DataPlane::serve_frame`], shared verbatim with the legacy
+//! thread-per-connection path ([`ProducerStoreServer::start_threaded`])
+//! that survives as the benchmark baseline for the `bench_e2e`
+//! connection sweep.
+//!
 //! Request-path discipline (the system's hottest path):
-//! * connection threads hit independently locked store shards, not one
+//! * connections hit independently locked store shards, not one
 //!   global `Mutex<KvStore>`;
 //! * rate limiting is a lock-free [`AtomicTokenBucket`] — no shared
 //!   mutex re-serializing what sharding parallelized;
-//! * each connection owns a `BufReader`/`BufWriter` pair plus two
-//!   reusable scratch buffers, requests decode as borrowed
-//!   [`RequestRef`]s, and GET hits encode straight from the shard into
-//!   the output buffer — a steady-state GET performs zero transient heap
+//! * requests decode as borrowed [`RequestRef`]s into reused scratch
+//!   buffers, and GET hits encode straight from the shard into the
+//!   output buffer — a steady-state GET performs zero transient heap
 //!   allocations server-side;
 //! * batch frames (`MultiGet`/`MultiPut`/`MultiDelete`) execute
 //!   shard-grouped: the ops are bucketed per shard, every involved
@@ -27,7 +36,8 @@
 use crate::consumer::client::KvTransport;
 use crate::kv::{KvStats, ShardGuard, ShardedKvStore};
 use crate::metrics::{Counter, Histogram, MetricSet, Observe, Registry};
-use crate::net::control::{client_handshake, server_handshake_patient, DATA_MAGIC};
+use crate::net::control::{client_handshake, server_handshake_patient, HelloInfo, DATA_MAGIC};
+use crate::net::event_loop::{spawn_loops, Service};
 use crate::net::faults::{ByzantineSpec, ByzantineState, FaultPlan, FaultyStream};
 use crate::net::wire::{
     append_trace_ctx, decode_batch_request, decode_batch_response,
@@ -63,12 +73,13 @@ pub fn default_shards() -> usize {
 }
 
 /// A producer store served over TCP: one sharded KvStore + one lock-free
-/// rate limiter, shared across client connections (one thread per
-/// connection).
+/// rate limiter, shared across client connections (a few epoll loop
+/// threads by default, one thread per connection on the
+/// [`Self::start_threaded`] baseline).
 pub struct ProducerStoreServer {
     local_addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
-    accept_handle: Option<JoinHandle<()>>,
+    serve_handles: Vec<JoinHandle<()>>,
     store: Arc<ShardedKvStore>,
     /// Byzantine-mode responses served tampered (0 unless started via
     /// [`Self::start_chaotic`] with a [`ByzantineSpec`]).
@@ -83,19 +94,78 @@ pub struct ProducerStoreServer {
     producer_id: Arc<AtomicU64>,
 }
 
-/// Everything one connection thread needs, bundled (the serving loop
-/// outlives many reconnecting peers; each accepted connection clones
-/// these shared handles).
-struct ConnShared {
+/// Constructor knobs, bundled so the internal entry point stays one
+/// call regardless of which public constructor was used.
+struct ServeOpts {
+    max_bytes: usize,
+    rate_bps: Option<u64>,
+    seed: u64,
+    n_shards: usize,
+    faults: Option<FaultPlan>,
+    byzantine: Option<ByzantineSpec>,
+    /// Serve thread-per-connection instead of on the epoll loop (the
+    /// benchmark baseline; frame semantics are identical either way).
+    threaded: bool,
+}
+
+/// The data plane as a [`Service`]: everything shared across
+/// connections, cheaply cloned onto each serving thread. The actual
+/// request semantics live in [`Self::serve_frame`], which both the
+/// epoll loop and the threaded baseline call — there is exactly one
+/// implementation of the protocol.
+#[derive(Clone)]
+struct DataPlane {
     store: Arc<ShardedKvStore>,
-    stop: Arc<AtomicBool>,
     bucket: Option<Arc<AtomicTokenBucket>>,
+    /// Epoch for token-bucket time: shared by every serving thread so
+    /// `now_us` is monotonic across the whole server.
     start: Instant,
-    byz: Option<ByzantineState>,
+    byzantine: Option<ByzantineSpec>,
     tampered: Arc<AtomicU64>,
     op_us: Arc<Histogram>,
     ops: Arc<Counter>,
     producer_id: Arc<AtomicU64>,
+}
+
+/// Per-connection data-plane state (what used to live on a connection
+/// thread's stack).
+struct DataConn {
+    /// Both hellos advertised tracing ⇒ every frame carries the
+    /// 16-byte trace-context suffix.
+    tracing: bool,
+    byz: Option<ByzantineState>,
+}
+
+impl Service for DataPlane {
+    type Conn = DataConn;
+
+    fn magic(&self) -> [u8; 4] {
+        DATA_MAGIC
+    }
+
+    fn open_conn(&self, conn: u64, hello: HelloInfo) -> DataConn {
+        DataConn {
+            tracing: hello.tracing && trace::enabled(),
+            // Byzantine state keyed by the same global connection index
+            // the fault plan uses: the tamper schedule stays a pure
+            // function of (seed, conn) on both serving paths.
+            byz: self.byzantine.as_ref().map(|b| b.state_for(conn)),
+        }
+    }
+
+    fn on_frame(&self, conn: &mut DataConn, frame: &[u8], out: &mut Vec<u8>) {
+        // Observed per-op service latency (see `serve_frame` for what
+        // counts): on the epoll path the window closes when the
+        // response is encoded — the socket write happens later, when
+        // the peer is writable, and a slow *peer* must not inflate the
+        // producer's observed latency signal.
+        let t_op = Instant::now();
+        let (frame_ops, ctx_trace) = self.serve_frame(conn, frame, out);
+        if frame_ops > 0 {
+            self.op_us.record_traced(t_op.elapsed().as_micros() as u64, ctx_trace);
+            self.ops.add(frame_ops);
+        }
+    }
 }
 
 impl ProducerStoreServer {
@@ -143,36 +213,114 @@ impl ProducerStoreServer {
         faults: Option<FaultPlan>,
         byzantine: Option<ByzantineSpec>,
     ) -> io::Result<Self> {
+        Self::start_inner(
+            addr,
+            ServeOpts { max_bytes, rate_bps, seed, n_shards, faults, byzantine, threaded: false },
+        )
+    }
+
+    /// [`Self::start`] on the legacy thread-per-connection serving path.
+    ///
+    /// Kept as the baseline the `bench_e2e` connection sweep compares
+    /// the epoll loop against, and as a second, structurally different
+    /// driver of the exact same frame semantics
+    /// ([`DataPlane::serve_frame`] is shared). Not for production use:
+    /// it tops out at a few hundred connections.
+    pub fn start_threaded<A: ToSocketAddrs>(
+        addr: A,
+        max_bytes: usize,
+        rate_bps: Option<u64>,
+        seed: u64,
+    ) -> io::Result<Self> {
+        Self::start_threaded_sharded(addr, max_bytes, rate_bps, seed, default_shards())
+    }
+
+    /// [`Self::start_threaded`] with an explicit shard count.
+    pub fn start_threaded_sharded<A: ToSocketAddrs>(
+        addr: A,
+        max_bytes: usize,
+        rate_bps: Option<u64>,
+        seed: u64,
+        n_shards: usize,
+    ) -> io::Result<Self> {
+        Self::start_inner(
+            addr,
+            ServeOpts {
+                max_bytes,
+                rate_bps,
+                seed,
+                n_shards,
+                faults: None,
+                byzantine: None,
+                threaded: true,
+            },
+        )
+    }
+
+    fn start_inner<A: ToSocketAddrs>(addr: A, opts: ServeOpts) -> io::Result<Self> {
         let listener = TcpListener::bind(addr)?;
         let local_addr = listener.local_addr()?;
         listener.set_nonblocking(true)?;
-        if let Some(plan) = faults.as_ref() {
+        if let Some(plan) = opts.faults.as_ref() {
             plan.log_banner("producer-store");
         }
         let stop = Arc::new(AtomicBool::new(false));
         let telemetry = Arc::new(Registry::new());
         let store = {
-            let mut store = ShardedKvStore::new(max_bytes, n_shards, seed);
+            let mut store = ShardedKvStore::new(opts.max_bytes, opts.n_shards, opts.seed);
             store.instrument_locks(telemetry.histogram("shard.lock_hold_us"));
             Arc::new(store)
         };
-        let bucket = rate_bps.map(|bps| Arc::new(AtomicTokenBucket::new(bps, bps / 4)));
         let tampered = Arc::new(AtomicU64::new(0));
         let producer_id = Arc::new(AtomicU64::new(0));
-        let op_us = telemetry.histogram("op_us");
-        let ops = telemetry.counter("ops");
+        let plane = DataPlane {
+            store: store.clone(),
+            bucket: opts
+                .rate_bps
+                .map(|bps| Arc::new(AtomicTokenBucket::new(bps, bps / 4))),
+            start: Instant::now(),
+            byzantine: opts.byzantine,
+            tampered: tampered.clone(),
+            op_us: telemetry.histogram("op_us"),
+            ops: telemetry.counter("ops"),
+            producer_id: producer_id.clone(),
+        };
 
-        let stop2 = stop.clone();
-        let store2 = store.clone();
-        let tampered2 = tampered.clone();
-        let producer_id2 = producer_id.clone();
-        let start_instant = Instant::now();
-        let accept_handle = std::thread::spawn(move || {
+        let serve_handles = if opts.threaded {
+            vec![Self::spawn_threaded_accept(listener, stop.clone(), opts.faults, plane)]
+        } else {
+            // A handful of loop threads carries thousands of consumers;
+            // shard parallelism is preserved because batch execution
+            // happens on the loop thread that owns the readiness event,
+            // and distinct connections land on distinct loops.
+            let threads = default_shards().min(8);
+            spawn_loops(listener, stop.clone(), opts.faults, plane, threads)?
+        };
+
+        Ok(ProducerStoreServer {
+            local_addr,
+            stop,
+            serve_handles,
+            store,
+            tampered,
+            telemetry,
+            producer_id,
+        })
+    }
+
+    /// The legacy accept loop: one OS thread per accepted connection.
+    fn spawn_threaded_accept(
+        listener: TcpListener,
+        stop: Arc<AtomicBool>,
+        faults: Option<FaultPlan>,
+        plane: DataPlane,
+    ) -> JoinHandle<()> {
+        std::thread::spawn(move || {
             let mut conn_handles: Vec<JoinHandle<()>> = Vec::new();
             // Per-plan connection index: the fault/tamper schedule of
             // connection k is a pure function of (seed, k).
             let mut conn_idx: u64 = 0;
-            while !stop2.load(Ordering::Relaxed) {
+            while !stop.load(Ordering::Relaxed) {
                 match listener.accept() {
                     Ok((stream, _)) => {
                         // Long-lived servers see endless reconnects; reap
@@ -180,21 +328,11 @@ impl ProducerStoreServer {
                         conn_handles.retain(|h| !h.is_finished());
                         stream.set_nodelay(true).ok();
                         let stream = FaultyStream::new(stream, faults.as_ref(), conn_idx);
-                        let byz = byzantine.as_ref().map(|b| b.state_for(conn_idx));
+                        let (plane, stop) = (plane.clone(), stop.clone());
+                        let conn = conn_idx;
                         conn_idx += 1;
-                        let shared = ConnShared {
-                            store: store2.clone(),
-                            stop: stop2.clone(),
-                            bucket: bucket.clone(),
-                            start: start_instant,
-                            byz,
-                            tampered: tampered2.clone(),
-                            op_us: op_us.clone(),
-                            ops: ops.clone(),
-                            producer_id: producer_id2.clone(),
-                        };
                         conn_handles.push(std::thread::spawn(move || {
-                            let _ = serve_conn(stream, shared);
+                            let _ = serve_conn(stream, plane, conn, stop);
                         }));
                     }
                     Err(ref e) if e.kind() == io::ErrorKind::WouldBlock => {
@@ -206,16 +344,6 @@ impl ProducerStoreServer {
             for h in conn_handles {
                 let _ = h.join();
             }
-        });
-
-        Ok(ProducerStoreServer {
-            local_addr,
-            stop,
-            accept_handle: Some(accept_handle),
-            store,
-            tampered,
-            telemetry,
-            producer_id,
         })
     }
 
@@ -278,7 +406,7 @@ impl ProducerStoreServer {
 
     fn shutdown(&mut self) {
         self.stop.store(true, Ordering::Relaxed);
-        if let Some(h) = self.accept_handle.take() {
+        for h in self.serve_handles.drain(..) {
             let _ = h.join();
         }
     }
@@ -290,18 +418,139 @@ impl Drop for ProducerStoreServer {
     }
 }
 
-fn serve_conn(stream: FaultyStream, shared: ConnShared) -> io::Result<()> {
-    let ConnShared {
-        store,
-        stop,
-        bucket,
-        start,
-        mut byz,
-        tampered,
-        op_us,
-        ops: ops_ctr,
-        producer_id,
-    } = shared;
+impl DataPlane {
+    /// Serve one request frame: peel the trace suffix, decode, throttle,
+    /// execute, and append exactly one response payload to `out`.
+    /// Returns `(ops served, trace id)` — `ops == 0` means the frame was
+    /// refused (throttled) or failed to decode.
+    ///
+    /// This is *the* data-plane semantics; the epoll loop and the
+    /// threaded baseline both call it, so the two serving paths cannot
+    /// drift apart.
+    fn serve_frame(&self, c: &mut DataConn, frame: &[u8], out: &mut Vec<u8>) -> (u64, u64) {
+        let mut frame_ops: u64 = 0;
+        // On a tracing connection every frame ends in the trace-context
+        // suffix; peel it off before the codec sees the payload (the
+        // codec's strict trailing-bytes discipline stays intact).
+        let (mut ctx_trace, mut ctx_parent) = (0u64, 0u64);
+        let mut body_ok = true;
+        let body: &[u8] = if c.tracing {
+            match split_trace_ctx(frame) {
+                Ok((b, t, p)) => {
+                    ctx_trace = t;
+                    ctx_parent = p;
+                    b
+                }
+                Err(e) => {
+                    body_ok = false;
+                    Response::Error(e.to_string()).encode_into(out);
+                    &[]
+                }
+            }
+        } else {
+            frame
+        };
+        // Rate limiting (paper §4.2): refuse oversized I/O, priced by
+        // frame bytes (one draw covers a whole batch). The bucket is
+        // lock-free, so throttling accounting never serializes
+        // connections. Tokens are only drawn for frames that decode.
+        let throttle = |frame_len: usize| {
+            self.bucket.as_ref().and_then(|b| {
+                let now_us = self.start.elapsed().as_micros() as u64;
+                let io_bytes = frame_len as u64;
+                if b.try_consume(now_us, io_bytes) {
+                    None
+                } else {
+                    Some(b.time_until_us(now_us, io_bytes).unwrap_or(1_000_000))
+                }
+            })
+        };
+        // Adopt the caller's trace for the rest of this frame: the shard
+        // span below chains to the consumer's wire span, so one trace id
+        // follows the op across the role boundary. Both guards are no-ops
+        // (nothing recorded) on untraced frames, and both release at the
+        // end of this call — on the epoll path many connections share a
+        // loop thread, so per-frame scoping is what keeps traces from
+        // bleeding between connections.
+        let _adopt = (ctx_trace != 0).then(|| trace::adopt(ctx_trace, ctx_parent));
+        let mut shard_span = SpanGuard::child(Role::Producer, TraceOp::Shard);
+        shard_span.set_producer(self.producer_id.load(Ordering::Relaxed));
+        if body_ok && is_batch_request(body) {
+            let mut ops: Vec<BatchOpRef<'_>> = Vec::new();
+            match decode_batch_request(body, &mut ops) {
+                Err(e) => Response::Error(e.to_string()).encode_into(out),
+                Ok(()) => match throttle(frame.len()) {
+                    Some(retry_after_us) => {
+                        // Per-op status even when throttled: the batch
+                        // contract is one status per op, always.
+                        encode_batch_response_header(out, ops.len() as u32);
+                        for _ in &ops {
+                            Response::Throttled { retry_after_us }.encode_into(out);
+                        }
+                    }
+                    None => {
+                        frame_ops = ops.len() as u64;
+                        serve_batch(&self.store, &ops, out, &mut c.byz, &self.tampered);
+                    }
+                },
+            }
+        } else if body_ok {
+            match RequestRef::decode(body) {
+                Err(e) => Response::Error(e.to_string()).encode_into(out),
+                Ok(req) => match throttle(frame.len()) {
+                    Some(retry_after_us) => {
+                        Response::Throttled { retry_after_us }.encode_into(out)
+                    }
+                    None => {
+                        frame_ops = 1;
+                        match req {
+                            RequestRef::Get { key } => {
+                                // Zero-copy hit: the value is encoded
+                                // from the shard entry straight into the
+                                // reused output frame, under the lock.
+                                let hit = self
+                                    .store
+                                    .get_with(key, |v| encode_value_response(out, v));
+                                if hit.is_none() {
+                                    Response::NotFound.encode_into(out);
+                                } else if let Some(b) = c.byz.as_mut() {
+                                    // Byzantine mode: maybe corrupt,
+                                    // replay, or truncate this hit
+                                    // (chaos-only path).
+                                    if b.process_value_response(out) {
+                                        self.tampered.fetch_add(1, Ordering::Relaxed);
+                                    }
+                                }
+                            }
+                            RequestRef::Put { key, value } => {
+                                if self.store.put(key, value) {
+                                    Response::Stored.encode_into(out)
+                                } else {
+                                    Response::Rejected.encode_into(out)
+                                }
+                            }
+                            RequestRef::Delete { key } => {
+                                Response::Deleted(self.store.delete(key)).encode_into(out)
+                            }
+                            RequestRef::Ping => Response::Pong.encode_into(out),
+                        }
+                    }
+                },
+            }
+        }
+        (frame_ops, ctx_trace)
+    }
+}
+
+/// Thread-per-connection driver (the [`ProducerStoreServer::
+/// start_threaded`] baseline): blocking frame reads on an owned thread,
+/// same [`DataPlane::serve_frame`] semantics as the epoll loop.
+fn serve_conn(
+    stream: FaultyStream,
+    plane: DataPlane,
+    conn: u64,
+    stop: Arc<AtomicBool>,
+) -> io::Result<()> {
     stream.set_read_timeout(Some(std::time::Duration::from_millis(100)))?;
     let mut reader = BufReader::with_capacity(CONN_BUF_BYTES, stream.try_clone()?);
     let mut writer = BufWriter::with_capacity(CONN_BUF_BYTES, stream);
@@ -315,10 +564,7 @@ fn serve_conn(stream: FaultyStream, shared: ConnShared) -> io::Result<()> {
     else {
         return Ok(());
     };
-    // Both sides advertised tracing in the hello ⇒ every data frame on
-    // this connection carries a 16-byte trace-context suffix (zeros when
-    // the caller has no live trace).
-    let conn_tracing = hello.tracing && trace::enabled();
+    let mut dc = plane.open_conn(conn, hello);
     // Reused for every request on this connection: the single-op steady
     // state allocates nothing (batches allocate one bounded op table +
     // lock table per frame, amortized over up to MAX_BATCH_OPS ops).
@@ -345,120 +591,15 @@ fn serve_conn(stream: FaultyStream, shared: ConnShared) -> io::Result<()> {
         // would make an overloaded or garbage-fed producer look fast —
         // inverting the placement feedback this signal exists for.
         let t_op = Instant::now();
-        let mut frame_ops: u64 = 0;
-        // On a tracing connection every frame ends in the trace-context
-        // suffix; peel it off before the codec sees the payload (the
-        // codec's strict trailing-bytes discipline stays intact).
-        let (mut ctx_trace, mut ctx_parent) = (0u64, 0u64);
-        let mut body_ok = true;
-        let body: &[u8] = if conn_tracing {
-            match split_trace_ctx(&frame) {
-                Ok((b, t, p)) => {
-                    ctx_trace = t;
-                    ctx_parent = p;
-                    b
-                }
-                Err(e) => {
-                    body_ok = false;
-                    Response::Error(e.to_string()).encode_into(&mut out);
-                    &[]
-                }
-            }
-        } else {
-            &frame[..]
-        };
-        // Rate limiting (paper §4.2): refuse oversized I/O, priced by
-        // frame bytes (one draw covers a whole batch). The bucket is
-        // lock-free, so throttling accounting never serializes
-        // connections. Tokens are only drawn for frames that decode.
-        let throttle = |frame_len: usize| {
-            bucket.as_ref().and_then(|b| {
-                let now_us = start.elapsed().as_micros() as u64;
-                let io_bytes = frame_len as u64;
-                if b.try_consume(now_us, io_bytes) {
-                    None
-                } else {
-                    Some(b.time_until_us(now_us, io_bytes).unwrap_or(1_000_000))
-                }
-            })
-        };
-        // Adopt the caller's trace for the rest of this frame: the shard
-        // span below chains to the consumer's wire span, so one trace id
-        // follows the op across the role boundary. Both guards are no-ops
-        // (nothing recorded) on untraced frames.
-        let _adopt = (ctx_trace != 0).then(|| trace::adopt(ctx_trace, ctx_parent));
-        let mut shard_span = SpanGuard::child(Role::Producer, TraceOp::Shard);
-        shard_span.set_producer(producer_id.load(Ordering::Relaxed));
-        if body_ok && is_batch_request(body) {
-            let mut ops: Vec<BatchOpRef<'_>> = Vec::new();
-            match decode_batch_request(body, &mut ops) {
-                Err(e) => Response::Error(e.to_string()).encode_into(&mut out),
-                Ok(()) => match throttle(frame.len()) {
-                    Some(retry_after_us) => {
-                        // Per-op status even when throttled: the batch
-                        // contract is one status per op, always.
-                        encode_batch_response_header(&mut out, ops.len() as u32);
-                        for _ in &ops {
-                            Response::Throttled { retry_after_us }.encode_into(&mut out);
-                        }
-                    }
-                    None => {
-                        frame_ops = ops.len() as u64;
-                        serve_batch(&store, &ops, &mut out, &mut byz, &tampered);
-                    }
-                },
-            }
-        } else if body_ok {
-            match RequestRef::decode(body) {
-                Err(e) => Response::Error(e.to_string()).encode_into(&mut out),
-                Ok(req) => match throttle(frame.len()) {
-                    Some(retry_after_us) => {
-                        Response::Throttled { retry_after_us }.encode_into(&mut out)
-                    }
-                    None => {
-                        frame_ops = 1;
-                        match req {
-                            RequestRef::Get { key } => {
-                                // Zero-copy hit: the value is encoded
-                                // from the shard entry straight into the
-                                // reused output frame, under the lock.
-                                let hit = store
-                                    .get_with(key, |v| encode_value_response(&mut out, v));
-                                if hit.is_none() {
-                                    Response::NotFound.encode_into(&mut out);
-                                } else if let Some(b) = byz.as_mut() {
-                                    // Byzantine mode: maybe corrupt,
-                                    // replay, or truncate this hit
-                                    // (chaos-only path).
-                                    if b.process_value_response(&mut out) {
-                                        tampered.fetch_add(1, Ordering::Relaxed);
-                                    }
-                                }
-                            }
-                            RequestRef::Put { key, value } => {
-                                if store.put(key, value) {
-                                    Response::Stored.encode_into(&mut out)
-                                } else {
-                                    Response::Rejected.encode_into(&mut out)
-                                }
-                            }
-                            RequestRef::Delete { key } => {
-                                Response::Deleted(store.delete(key)).encode_into(&mut out)
-                            }
-                            RequestRef::Ping => Response::Pong.encode_into(&mut out),
-                        }
-                    }
-                },
-            }
-        }
+        let (frame_ops, ctx_trace) = plane.serve_frame(&mut dc, &frame, &mut out);
         write_frame(&mut writer, &out)?;
         if frame_ops > 0 {
             // Traced variant of the one-relaxed-add record: a sample that
             // lands in a top bucket pins this frame's trace id as the
             // bucket's exemplar, so `memtrade top` can name a worst
             // offender by trace (untraced frames pass id 0 = no pin).
-            op_us.record_traced(t_op.elapsed().as_micros() as u64, ctx_trace);
-            ops_ctr.add(frame_ops);
+            plane.op_us.record_traced(t_op.elapsed().as_micros() as u64, ctx_trace);
+            plane.ops.add(frame_ops);
         }
         bound_scratch(&mut frame);
         bound_scratch(&mut out);
@@ -549,6 +690,24 @@ fn serve_batch(
 /// connection **poisons itself**: every later call fails fast with
 /// `BrokenPipe` instead of reading another request's response as its
 /// own. Reconnect to recover.
+///
+/// # Example
+///
+/// Boot a producer store on an ephemeral port, then talk to it over
+/// the real wire protocol — single ops and a batch frame:
+///
+/// ```
+/// use memtrade::net::tcp::{KvClient, ProducerStoreServer};
+///
+/// let server = ProducerStoreServer::start("127.0.0.1:0", 1 << 20, None, 7).unwrap();
+/// let mut kv = KvClient::connect(server.addr()).unwrap();
+/// assert!(kv.put(b"key", b"value").unwrap());
+/// assert_eq!(kv.get(b"key").unwrap(), Some(b"value".to_vec()));
+/// let keys: [&[u8]; 2] = [b"key", b"missing"];
+/// assert_eq!(kv.multi_get(&keys).unwrap(), vec![Some(b"value".to_vec()), None]);
+/// drop(kv);
+/// server.stop();
+/// ```
 pub struct KvClient {
     reader: BufReader<FaultyStream>,
     writer: BufWriter<FaultyStream>,

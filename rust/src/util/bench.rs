@@ -53,6 +53,48 @@ pub fn run_for(normal_ms: u64) -> Duration {
     }
 }
 
+/// Best-effort raise of this process's open-file soft limit to its
+/// hard limit. The `bench_e2e` connection-count sweep holds both ends
+/// of up to 10k loopback connections in one process (client socket +
+/// accepted socket ≈ 2 fds per simulated consumer), which blows
+/// through the common 1024 default. Returns the soft limit in effect
+/// afterwards; failures fall back to reporting the current limit so
+/// callers can scale the sweep down instead of dying on EMFILE.
+#[cfg(target_os = "linux")]
+pub fn raise_nofile_limit() -> u64 {
+    #[repr(C)]
+    struct Rlimit {
+        cur: u64,
+        max: u64,
+    }
+    const RLIMIT_NOFILE: i32 = 7;
+    extern "C" {
+        fn getrlimit(resource: i32, rlim: *mut Rlimit) -> i32;
+        fn setrlimit(resource: i32, rlim: *const Rlimit) -> i32;
+    }
+    let mut lim = Rlimit { cur: 0, max: 0 };
+    // SAFETY: `lim` is a valid, aligned Rlimit matching the kernel's
+    // 64-bit `struct rlimit` layout; getrlimit fills it or fails.
+    if unsafe { getrlimit(RLIMIT_NOFILE, &mut lim) } != 0 {
+        return 1024;
+    }
+    if lim.cur < lim.max {
+        let want = Rlimit { cur: lim.max, max: lim.max };
+        // SAFETY: setrlimit only reads `want`, which outlives the call.
+        if unsafe { setrlimit(RLIMIT_NOFILE, &want) } == 0 {
+            return want.cur;
+        }
+    }
+    lim.cur
+}
+
+/// Non-Linux fallback: report the conventional default without
+/// touching process limits (the epoll sweep is Linux-only anyway).
+#[cfg(not(target_os = "linux"))]
+pub fn raise_nofile_limit() -> u64 {
+    1024
+}
+
 /// Run `f` repeatedly for ~`target` wall time (after warmup), sampling
 /// per-call latency in batches; prints a criterion-like row.
 pub fn bench<F: FnMut()>(name: &str, mut f: F) -> BenchResult {

@@ -260,7 +260,11 @@ fn chaos_marketplace_failover_under_data_faults() {
 #[test]
 fn chaos_marketplace_standard_mix() {
     // Everything at once: control + data faults, Byzantine producer,
-    // mid-run kill, revocation race.
+    // mid-run kill, revocation race. Every producer store in the
+    // schedule is the epoll readiness-loop server (`start_chaotic`
+    // defaults to it), so this run is the proof that the async rewrite
+    // preserves the 100%-envelope-catch and no-lost-acked-writes
+    // invariants under the standard fault mix.
     let o = run_marketplace_schedule(601, ChaosMix::standard());
     assert_invariants(&o);
 }
@@ -507,6 +511,87 @@ fn chaos_byzantine_batches_caught_at_full_tamper_rate() {
         assert_eq!(server.byzantine_tampered(), N, "seed {seed}");
         server.stop();
     }
+}
+
+// --- Epoll data plane: half-open peers must not pin memory. ----------
+
+/// Resident-set size of this process in bytes, from `/proc/self/statm`
+/// (the epoll server under test is Linux-only, so the probe can be
+/// too).
+#[cfg(target_os = "linux")]
+fn rss_bytes() -> u64 {
+    let statm = std::fs::read_to_string("/proc/self/statm").unwrap();
+    let resident_pages: u64 =
+        statm.split_whitespace().nth(1).unwrap().parse().unwrap();
+    resident_pages * 4096
+}
+
+/// 50 slow-loris peers against the epoll producer store: each one
+/// either (a) connects and goes silent, (b) sends a torn hello length
+/// prefix, or (c) completes the handshake and then sends a frame
+/// header *declaring* an 8 MiB body followed by only 100 real bytes —
+/// then holds the connection half-open. The reassembly state machine
+/// buffers only received bytes, never the declared length, so the
+/// server's steady-state memory must stay flat (an eager-allocation
+/// regression would pin 50 × 8 MiB = 400 MiB here) and a live consumer
+/// sharing the same event loops must keep round-tripping unimpeded.
+#[cfg(target_os = "linux")]
+#[test]
+fn chaos_half_open_connections_pin_no_memory_and_never_stall_live_traffic() {
+    use memtrade::net::control::{client_handshake, DATA_MAGIC};
+    use std::io::Write;
+
+    println!("chaos schedule: 50 half-open slow-loris peers vs epoll data plane");
+    let server =
+        ProducerStoreServer::start_sharded("127.0.0.1:0", 8 << 20, None, 1177, 2).unwrap();
+    let mut live = KvClient::connect(server.addr()).unwrap();
+    let _ = live.set_call_timeout(Some(Duration::from_secs(2)));
+    assert!(live.put(b"canary", &[0x5A; 512]).unwrap());
+
+    let rss_before = rss_bytes();
+    let mut half_open = Vec::new();
+    for i in 0..50u32 {
+        let mut stream = std::net::TcpStream::connect(server.addr()).unwrap();
+        match i % 3 {
+            // Connected, never speaks: parked in the pre-hello state.
+            0 => {}
+            // A torn frame header: 3 of the 4 length-prefix bytes.
+            1 => stream.write_all(&[0xFF, 0xFF, 0x00]).unwrap(),
+            // Fully admitted, then a giant declared frame that never
+            // arrives: 8 MiB announced, 100 bytes sent.
+            _ => {
+                client_handshake(&mut (&stream), &mut (&stream), DATA_MAGIC).unwrap();
+                stream.write_all(&((8u32 << 20).to_le_bytes())).unwrap();
+                stream.write_all(&[0xAB; 100]).unwrap();
+            }
+        }
+        half_open.push(stream);
+    }
+    // Let the loops observe and park every half-open peer.
+    std::thread::sleep(Duration::from_millis(200));
+
+    // Live traffic shares the same event loops as the 50 parked
+    // connections; every round trip must still complete (the 2 s call
+    // timeout turns a stall into a hard failure).
+    for op in 0..200u64 {
+        let key = format!("live{}", op % 20);
+        if op % 4 == 0 {
+            assert!(live.put(key.as_bytes(), &[op as u8; 512]).unwrap());
+        } else {
+            let _ = live.get(key.as_bytes()).unwrap();
+        }
+    }
+    assert_eq!(live.get(b"canary").unwrap(), Some(vec![0x5A; 512]));
+
+    let growth = rss_bytes().saturating_sub(rss_before);
+    assert!(
+        growth < 64 << 20,
+        "50 half-open connections grew RSS by {} MiB — declared-length \
+         allocation is back (must buffer received bytes only)",
+        growth >> 20
+    );
+    drop(half_open);
+    server.stop();
 }
 
 // --- Byzantine producer: the envelope must catch 100%. --------------

@@ -8,7 +8,7 @@
 //! literals (like these fixtures, when the linter walks *this* file)
 //! must never match.
 
-use memtrade::analysis::{lint_source, lint_tree, Diagnostic};
+use memtrade::analysis::{check_protocol_doc, lint_source, lint_tree, parse_manifest, Diagnostic};
 use std::path::Path;
 
 fn rules(diags: &[Diagnostic]) -> Vec<&'static str> {
@@ -202,6 +202,48 @@ fn words(&self) -> u64 {
     let diags = lint_source("src/trace/mod.rs", src, None);
     assert_eq!(rules(&diags), ["safety"], "{diags:?}");
     assert_eq!(diags[0].line, 3);
+}
+
+// ----------------------------------------------------- rule: protocol-doc
+
+#[test]
+fn protocol_doc_pass_when_every_tag_line_carries_its_value() {
+    let mut diags = Vec::new();
+    let manifest = parse_manifest("m", MANIFEST, &mut diags);
+    assert!(diags.is_empty(), "{diags:?}");
+    let doc = "\
+# Wire spec
+| `TAG_GET` | 1 | read one key |
+| `TAG_PUT` | 2 | write one key |
+Metric sets lead with `METRIC_COUNTER` (1).
+";
+    check_protocol_doc(doc, &manifest, &mut diags);
+    assert!(diags.is_empty(), "{diags:?}");
+}
+
+#[test]
+fn protocol_doc_fail_on_missing_tag_and_renumbered_value() {
+    let mut diags = Vec::new();
+    let manifest = parse_manifest("m", MANIFEST, &mut diags);
+    // TAG_PUT is never mentioned; TAG_GET's first naming line says 11,
+    // which must not substring-match the registered value 1.
+    let doc = "\
+| `TAG_GET` | 11 | read one key |
+Metric sets lead with `METRIC_COUNTER` (1).
+";
+    check_protocol_doc(doc, &manifest, &mut diags);
+    assert_eq!(rules(&diags), ["protocol-doc", "protocol-doc"], "{diags:?}");
+    let renumbered = &diags[0];
+    assert!(
+        renumbered.msg.contains("TAG_GET") && renumbered.msg.contains("without its wire value"),
+        "{renumbered:?}"
+    );
+    assert_eq!(renumbered.line, 1, "anchors the line that names the tag");
+    assert!(
+        diags[1].msg.contains("TAG_PUT") && diags[1].msg.contains("never mentions"),
+        "{:?}",
+        diags[1]
+    );
 }
 
 // ------------------------------------------------- tokenizer adversaria
