@@ -19,7 +19,9 @@ use memtrade::net::tcp::{KvClient, ProducerStoreServer};
 use memtrade::net::wire::{append_trace_ctx, read_frame_into, write_frame, Request, Response};
 use memtrade::producer::Manager;
 use memtrade::metrics::Histogram;
-use memtrade::util::bench::{bench, header, raise_nofile_limit, run_for as bench_run_for, smoke};
+use memtrade::util::bench::{
+    bench, ctx_switches, header, raise_nofile_limit, run_for as bench_run_for, smoke,
+};
 use memtrade::util::rng::Rng;
 use memtrade::workload::ycsb::YcsbWorkload;
 use std::net::{SocketAddr, TcpStream};
@@ -492,10 +494,20 @@ fn conn_sweep_bench() -> String {
     let nofile = raise_nofile_limit();
     // Both ends of every connection live in this process (~2 fds per
     // simulated consumer); leave slack for stores and listeners.
+    // `raise_nofile_limit` is best-effort: gate the sweep on the limit
+    // actually achieved, and say loudly what got clamped — a capped
+    // container must report a skip, not a misleading partial sweep.
     let max_conns = (nofile.saturating_sub(256) / 2) as usize;
     let full = [100usize, 1_000, 10_000];
     let short = [100usize, 1_000];
     let counts: &[usize] = if smoke() { &short } else { &full };
+    if counts.iter().any(|&c| c > max_conns) {
+        eprintln!(
+            "conn_sweep: WARNING: nofile soft limit is {nofile} (raise failed or hard \
+             limit is low); counts above ~{max_conns} connections will be SKIPPED, \
+             not measured"
+        );
+    }
     let run = bench_run_for(1500);
     let value = vec![0xAB_u8; 512];
     let preload = |addr: SocketAddr| {
@@ -504,56 +516,96 @@ fn conn_sweep_bench() -> String {
             assert!(c.put(format!("user{i}").as_bytes(), &value).unwrap());
         }
     };
+    // One measured pass against a running server: windowed deltas of
+    // the op histogram, the ops counter, the loop syscall estimate and
+    // process-wide context switches (client driver included — both
+    // ends live here, so the column is the whole loopback exchange).
+    let measure = |server: &ProducerStoreServer, count: usize| {
+        let hist0 = server.telemetry().histogram("op_us").snapshot();
+        let ops0 = server.telemetry().counter("ops").get();
+        let sys0 = server.loop_metrics().map(|m| m.syscalls.get());
+        let cs0 = ctx_switches();
+        let rate = sweep_ops_per_sec(server.addr(), count, KEYS, run);
+        let cs1 = ctx_switches();
+        let ops_done = server.telemetry().counter("ops").get().saturating_sub(ops0);
+        let p99 = server.telemetry().histogram("op_us").snapshot().delta(&hist0).quantile(0.99);
+        let per_op = |delta: u64| {
+            if ops_done > 0 { delta as f64 / ops_done as f64 } else { 0.0 }
+        };
+        let sys_per_op = server
+            .loop_metrics()
+            .zip(sys0)
+            .map(|(m, s0)| per_op(m.syscalls.get().saturating_sub(s0)));
+        let cs_per_op = per_op(cs1.saturating_sub(cs0));
+        (rate, p99, sys_per_op, cs_per_op)
+    };
+    let report = |label: &str, rate: f64, p99: f64, sys: Option<f64>, cs: f64| {
+        let sys_col = sys.map_or("n/a".to_string(), |s| format!("{s:.2}"));
+        println!(
+            "{label:<40} {rate:>14.0} ops/s   p99 {p99:>7.1} µs   \
+             {sys_col:>6} syscalls/op   {cs:>6.2} ctx/op"
+        );
+    };
 
     // Thread-per-connection baseline at 100 connections: same driver,
-    // same store shape — the gate's denominator.
+    // same store shape — the gate's denominator. No loop metrics here
+    // (syscalls/op is owned-call-site counting, which the blocking
+    // path does not instrument), so that column is null.
     let server =
         ProducerStoreServer::start_threaded_sharded("127.0.0.1:0", 1 << 30, None, 51, SHARDS)
             .unwrap();
     preload(server.addr());
-    let before = server.telemetry().histogram("op_us").snapshot();
-    let base_ops = sweep_ops_per_sec(server.addr(), 100, KEYS, run);
-    let base_p99 =
-        server.telemetry().histogram("op_us").snapshot().delta(&before).quantile(0.99);
+    let (base_ops, base_p99, _, base_cs) = measure(&server, 100);
     server.stop();
-    println!(
-        "{:<40} {:>14.0} ops/s   p99 {:>7.1} µs",
-        "conn_sweep/threaded @100 (baseline)", base_ops, base_p99
-    );
+    report("conn_sweep/threaded @100 (baseline)", base_ops, base_p99, None, base_cs);
 
+    // Event-loop modes: level-triggered (one release of fallback, via
+    // the same env toggle CI uses) vs the default edge-triggered +
+    // writev path. Same seed, same store shape, same driver.
     let mut rows = Vec::new();
-    for &count in counts {
-        if count > max_conns {
-            println!(
-                "conn_sweep/epoll @{count}: skipped (nofile limit {nofile} caps the sweep \
-                 at ~{max_conns} connections)"
+    for (mode, env_val) in [("level", Some("level")), ("et_writev", None)] {
+        for &count in counts {
+            if count > max_conns {
+                eprintln!(
+                    "conn_sweep/{mode} @{count}: SKIPPED (nofile limit {nofile} caps \
+                     the sweep at ~{max_conns} connections)"
+                );
+                continue;
+            }
+            if let Some(v) = env_val {
+                std::env::set_var("MEMTRADE_EVENT_MODE", v);
+            }
+            let server =
+                ProducerStoreServer::start_sharded("127.0.0.1:0", 1 << 30, None, 52, SHARDS)
+                    .unwrap();
+            if env_val.is_some() {
+                std::env::remove_var("MEMTRADE_EVENT_MODE");
+            }
+            preload(server.addr());
+            let (ops, p99, sys_per_op, cs_per_op) = measure(&server, count);
+            server.stop();
+            report(
+                &format!("conn_sweep/{mode} @{count}"),
+                ops,
+                p99,
+                sys_per_op,
+                cs_per_op,
             );
-            continue;
+            let sys_json =
+                sys_per_op.map_or("null".to_string(), |s| format!("{s:.3}"));
+            rows.push(format!(
+                "      {{\"mode\": \"{mode}\", \"connections\": {count}, \
+                 \"ops_per_sec\": {ops:.0}, \"op_us_p99\": {p99:.1}, \
+                 \"syscalls_per_op\": {sys_json}, \
+                 \"ctx_switches_per_op\": {cs_per_op:.3}}}"
+            ));
         }
-        let server =
-            ProducerStoreServer::start_sharded("127.0.0.1:0", 1 << 30, None, 52, SHARDS)
-                .unwrap();
-        preload(server.addr());
-        let before = server.telemetry().histogram("op_us").snapshot();
-        let ops = sweep_ops_per_sec(server.addr(), count, KEYS, run);
-        let p99 =
-            server.telemetry().histogram("op_us").snapshot().delta(&before).quantile(0.99);
-        server.stop();
-        println!(
-            "{:<40} {:>14.0} ops/s   p99 {:>7.1} µs",
-            format!("conn_sweep/epoll @{count}"),
-            ops,
-            p99
-        );
-        rows.push(format!(
-            "      {{\"connections\": {count}, \"ops_per_sec\": {ops:.0}, \
-             \"op_us_p99\": {p99:.1}}}"
-        ));
     }
     format!(
         "  \"conn_sweep\": {{\n    \"baseline\": {{\"mode\": \"threaded\", \
          \"connections\": 100, \"ops_per_sec\": {base_ops:.0}, \
-         \"op_us_p99\": {base_p99:.1}}},\n    \"epoll\": [\n{}\n    ]\n  }}",
+         \"op_us_p99\": {base_p99:.1}, \"syscalls_per_op\": null, \
+         \"ctx_switches_per_op\": {base_cs:.3}}},\n    \"epoll\": [\n{}\n    ]\n  }}",
         rows.join(",\n")
     )
 }

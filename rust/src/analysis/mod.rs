@@ -5,7 +5,7 @@
 //! The pass is a hand-rolled comment/string-stripping tokenizer
 //! ([`tokens`]) plus a rule engine ([`rules`]) — no syn, no rustc
 //! internals, because the crate is offline and dependency-free by
-//! construction. Seven rules run over `src/**` (plus `tests/**` /
+//! construction. Eight rules run over `src/**` (plus `tests/**` /
 //! `benches/**` where noted):
 //!
 //! 1. **wire-tags** — every `TAG_*`/`METRIC_*`/`EVENT_*` constant in
@@ -27,6 +27,11 @@
 //!    repository root) must document every registry entry: the tag
 //!    name must appear, on a line that also carries its wire value.
 //!    The spec cannot drift from the protocol it describes.
+//! 8. **syscall-site** — raw `extern "C"` syscall bindings only in
+//!    `net/event_loop.rs`, `util/clock.rs`, `util/bench.rs` (escape
+//!    hatch `// lint: allow-syscall`), so every syscall the data plane
+//!    can make is declared in an auditable place and the loop's
+//!    syscalls-per-op estimate counts all the calls there are.
 //!
 //! `tests/lint.rs` holds a passing and a failing fixture per rule plus
 //! a self-check that the shipped tree is clean; the CI
@@ -279,6 +284,7 @@ pub fn lint_source(path: &str, src: &str, manifest: Option<&str>) -> Vec<Diagnos
 fn run_file_rules(path: &str, lexed: &tokens::Lexed, out: &mut Vec<Diagnostic>) {
     let fns = rules::index_fns(lexed);
     rules::check_unsafe(path, lexed, out);
+    rules::check_syscall_site(path, lexed, out);
     rules::check_no_alloc(path, lexed, &fns, out);
     rules::check_lock_order(path, lexed, &fns, out);
     if !rules::in_test_tree(path) {

@@ -1,4 +1,4 @@
-//! The six invariant rules `memtrade lint` enforces, over the token
+//! The seven invariant rules `memtrade lint` enforces, over the token
 //! stream produced by [`crate::analysis::tokens`]. Each rule is a pure
 //! function from one lexed file to diagnostics; the cross-file wire-tag
 //! registry check lives in [`crate::analysis`] because it needs every
@@ -38,6 +38,16 @@ pub const INSTANT_ALLOWLIST: &[&str] = &[
 /// system through the `util::clock` shims (plus the RNG's seed
 /// fallback), so everything downstream takes it as a value.
 pub const SYSTEMTIME_ALLOWLIST: &[&str] = &["src/util/clock.rs", "src/util/rng.rs"];
+
+/// Files allowed to declare raw `extern "C"` syscall bindings. Keeping
+/// every syscall site in three audited files is what makes the
+/// syscalls-per-op accounting honest: the loop counts the calls it
+/// owns, and this rule is what guarantees it owns all of them.
+pub const SYSCALL_ALLOWLIST: &[&str] = &[
+    "src/net/event_loop.rs",
+    "src/util/bench.rs",
+    "src/util/clock.rs",
+];
 
 /// Identifier/macro calls banned inside `// lint: no-alloc` functions.
 /// `extend_from_slice`/`push` into caller-owned buffers are allowed
@@ -223,6 +233,35 @@ pub fn check_unsafe(path: &str, lexed: &Lexed, out: &mut Vec<Diagnostic>) {
                 msg: "`unsafe` without an adjacent `// SAFETY:` justification".to_string(),
             });
         }
+    }
+}
+
+// ------------------------------------------------- rule: syscall-site
+
+/// Rule 8: raw `extern` blocks (libc/syscall bindings) only in the
+/// audited [`SYSCALL_ALLOWLIST`] files, escape hatch
+/// `// lint: allow-syscall`. The lexer discards string literals, so
+/// `extern "C" { ... }` arrives as a bare `extern` ident token — which
+/// also catches `extern fn` types and `extern crate` (this crate is
+/// zero-dependency; none of those belong outside the allowlist either).
+pub fn check_syscall_site(path: &str, lexed: &Lexed, out: &mut Vec<Diagnostic>) {
+    if allowlisted(path, SYSCALL_ALLOWLIST) {
+        return;
+    }
+    for t in lexed.toks.iter().filter(|t| t.kind == TokKind::Ident && t.text == "extern") {
+        if marker_on(lexed, t.line, "allow-syscall") {
+            continue;
+        }
+        out.push(Diagnostic {
+            file: path.to_string(),
+            line: t.line,
+            rule: "syscall-site",
+            msg: "raw `extern` binding outside the syscall allowlist \
+                  (net/event_loop.rs, util/clock.rs, util/bench.rs) — route the call \
+                  through an audited site, or `// lint: allow-syscall` with a \
+                  justification"
+                .to_string(),
+        });
     }
 }
 
@@ -554,6 +593,25 @@ fn cold() { let s = value.to_vec(); drop(s); }
         check_no_alloc("src/metrics/hist.rs", &lexed, &fns, &mut out);
         assert_eq!(out.len(), 1, "{out:?}");
         assert!(out[0].msg.contains("to_vec"));
+    }
+
+    #[test]
+    fn syscall_sites_confined_to_allowlist() {
+        let src = "fn f() { extern \"C\" { fn getpid() -> i32; } }";
+        let mut out = Vec::new();
+        check_syscall_site("src/market/lease.rs", &lex(src), &mut out);
+        assert_eq!(out.len(), 1, "{out:?}");
+        assert_eq!(out[0].rule, "syscall-site");
+        out.clear();
+        check_syscall_site("src/net/event_loop.rs", &lex(src), &mut out);
+        check_syscall_site("src/util/bench.rs", &lex(src), &mut out);
+        check_syscall_site("src/util/clock.rs", &lex(src), &mut out);
+        assert!(out.is_empty(), "{out:?}");
+        let marked =
+            "// lint: allow-syscall — justified\nextern \"C\" { fn getpid() -> i32; }";
+        out.clear();
+        check_syscall_site("src/figures/x.rs", &lex(marked), &mut out);
+        assert!(out.is_empty(), "{out:?}");
     }
 
     #[test]

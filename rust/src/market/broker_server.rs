@@ -47,7 +47,7 @@ use crate::net::control::{
     CtrlClient, CtrlRequest, CtrlResponse, GrantInfo, HelloInfo, ProducerGrant, RefuseCode,
     CONTROL_MAGIC,
 };
-use crate::net::event_loop::{spawn_loops, Service};
+use crate::net::event_loop::{spawn_loops, EventLoops, Service};
 use crate::net::faults::FaultPlan;
 use crate::net::wire::CodecError;
 use crate::trace::{self, Op as TraceOp, Role as TraceRole, SpanGuard};
@@ -868,7 +868,7 @@ impl State {
 pub struct BrokerServer {
     local_addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
-    serve_handles: Vec<JoinHandle<()>>,
+    loops: Option<EventLoops>,
     maint_handle: Option<JoinHandle<()>>,
     history_handle: Option<JoinHandle<()>>,
     repl_handle: Option<JoinHandle<()>>,
@@ -948,7 +948,7 @@ impl BrokerServer {
         // heartbeats are tiny request/response frames and all real work
         // happens under the state lock anyway, so a single loop carries
         // thousands of agents without a thread per peer.
-        let serve_handles = spawn_loops(
+        let loops = spawn_loops(
             listener,
             stop.clone(),
             cfg.faults.clone(),
@@ -1000,7 +1000,7 @@ impl BrokerServer {
         Ok(BrokerServer {
             local_addr,
             stop,
-            serve_handles,
+            loops: Some(loops),
             maint_handle: Some(maint_handle),
             history_handle,
             repl_handle,
@@ -1049,8 +1049,8 @@ impl BrokerServer {
 
     fn shutdown(&mut self) {
         self.stop.store(true, Ordering::Relaxed);
-        for h in self.serve_handles.drain(..) {
-            let _ = h.join();
+        if let Some(loops) = self.loops.take() {
+            loops.stop_and_join();
         }
         if let Some(h) = self.maint_handle.take() {
             let _ = h.join();

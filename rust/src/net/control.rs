@@ -1020,6 +1020,9 @@ impl CtrlClient {
     }
 
     fn from_stream(stream: FaultyStream, handshake_timeout: Duration) -> io::Result<Self> {
+        // Control RPCs are small request/response frames: without
+        // nodelay, Nagle holds the request tail for the delayed ACK.
+        stream.set_nodelay(true)?;
         // Bounded reads for the connection's whole life: a hello (or any
         // control response) that never arrives is an error, not a hang —
         // a blocked call here would wedge agent/pool maintenance loops.

@@ -10,8 +10,9 @@
 //! sockets through per-connection state machines.
 //!
 //! The loop is deliberately small and zero-dependency — raw
-//! `epoll_create1`/`epoll_ctl`/`epoll_wait` through `extern "C"`
-//! glibc bindings, no reactor framework. Pieces:
+//! `epoll_create1`/`epoll_ctl`/`epoll_wait` (plus `accept4`,
+//! `eventfd`, and `timerfd`) through `extern "C"` glibc bindings, no
+//! reactor framework. Pieces:
 //!
 //! - [`Poller`]: thin RAII wrapper over one epoll file descriptor.
 //! - [`FrameAssembler`]: incremental reassembly of the u32-LE
@@ -20,41 +21,61 @@
 //!   then stalling (slow loris) pins a 4-byte header, not 16 MiB —
 //!   and rejects hostile lengths (`> MAX_FRAME`) as soon as the
 //!   prefix arrives, before any body byte is stored.
+//! - [`WriteQueue`]: the connection's pending responses as a list of
+//!   encoded frames, flushed with one vectored `writev` per syscall
+//!   instead of one `write` per response. The partial-write cursor
+//!   (`head_sent`) and the [`HIGH_WATER`] backpressure contract are
+//!   unchanged from the single-buffer design it replaces.
 //! - [`Conn`]: per-connection state machine. A connection is born in
 //!   the *hello* state (first frame must be the 11-byte handshake,
 //!   answered in kind even on plane/version mismatch so the peer can
 //!   print a useful error), then moves to *serving*, where every
 //!   complete frame is handed to the [`Service`] and the response is
-//!   queued on the connection's write queue. Partial writes park in
-//!   the queue; `EPOLLOUT` interest is registered only while bytes
-//!   are pending. When the queue passes [`HIGH_WATER`] the loop stops
-//!   reading (and decoding) for that connection until the peer drains
-//!   it — backpressure, not buffering.
+//!   queued on the connection's write queue. When the queue passes
+//!   [`HIGH_WATER`] the loop stops reading (and decoding) for that
+//!   connection until the peer drains it — backpressure, not
+//!   buffering.
 //! - [`Service`]: what a plane plugs in — its hello magic, its
-//!   per-connection state, and a frame handler. The data plane's
-//!   handler is the same shard-grouped batch executor the threaded
-//!   path uses; the control plane's is the broker verb dispatch.
+//!   per-connection state, a frame handler, and (optionally) a
+//!   periodic tick for time-based housekeeping such as token-bucket
+//!   refill, delivered by a per-loop `timerfd` in the same epoll set.
+//!
+//! Connection fds are registered **edge-triggered** (`EPOLLET`) by
+//! default: one `epoll_ctl` at accept time, never re-armed, with
+//! drain-until-`WouldBlock` read and write loops and per-connection
+//! `can_read`/`can_write` readiness flags. A hot connection yields
+//! after [`FAIR_FRAMES`] frames and is re-queued on the loop's local
+//! ready-list (no kernel round-trip), so it cannot starve its
+//! siblings. An idle loop parks in `epoll_wait(-1)` with its timer
+//! disarmed — zero syscalls until the kernel has news. Set
+//! `MEMTRADE_EVENT_MODE=level` to fall back to the level-triggered
+//! `EPOLL_CTL_MOD` interest machine (kept for one release as the
+//! bench comparison anchor).
 //!
 //! Chaos parity: accepted sockets are wrapped in
 //! [`FaultyStream`](crate::net::faults::FaultyStream) exactly like
 //! the threaded path, keyed by the same global connection index, so a
-//! fault schedule is still a pure function of `(seed, conn)`. One
-//! caveat is documented rather than hidden: the chaos write paths
-//! (duplicate/truncate) issue short internal writes; under a
-//! nonblocking socket a full send buffer mid-fault could desync the
-//! stream. That can corrupt or drop *unacked* bytes — which the
-//! envelope already allows — but can never fabricate an ack, so the
-//! chaos invariants (100% envelope catch, no lost acked writes) are
-//! unaffected.
+//! fault schedule is still a pure function of `(seed, conn)`. A
+//! would-block inner read or write restores the fault RNG, so edge
+//! retries do not skew the schedule. One caveat is documented rather
+//! than hidden: the chaos write paths (duplicate/truncate) issue
+//! short internal writes; under a nonblocking socket a full send
+//! buffer mid-fault could desync the stream. That can corrupt or
+//! drop *unacked* bytes — which the envelope already allows — but
+//! can never fabricate an ack, so the chaos invariants (100% envelope
+//! catch, no lost acked writes) are unaffected.
 //!
 //! This file stays off the `Instant::now` allowlist on purpose: the
 //! loop itself never reads a clock. Time-dependent behavior (token
-//! buckets, lease expiry) takes time as a value inside the service,
-//! which keeps the loop replayable and the clock lint meaningful.
+//! buckets, lease expiry) takes time as a value inside the service —
+//! the timerfd tick tells the service *that* time passed, the service
+//! decides what that means — which keeps the loop replayable and the
+//! clock lint meaningful.
 
-use std::io::{self, Read, Write};
+use std::collections::VecDeque;
+use std::io::{self, IoSlice, Read, Write};
 use std::net::TcpListener;
-use std::os::fd::{AsRawFd, RawFd};
+use std::os::fd::{AsRawFd, FromRawFd, RawFd};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -62,8 +83,11 @@ use std::thread::JoinHandle;
 use super::control::{check_hello, hello_payload, HelloInfo};
 use super::faults::{FaultPlan, FaultyStream};
 use super::wire::{CodecError, MAX_FRAME};
+use crate::metrics::Counter;
 
-/// epoll wait granularity: how often an idle loop rechecks `stop`.
+/// Level-mode epoll wait granularity: how often an idle level-mode
+/// loop rechecks `stop`. Edge mode blocks indefinitely and is woken by
+/// the stop eventfd instead.
 const WAIT_MS: i32 = 50;
 /// Readiness events drained per `epoll_wait` call.
 const EVENT_BATCH: usize = 256;
@@ -78,16 +102,30 @@ const HIGH_WATER: usize = 1 << 20;
 /// `CONN_BUF_BYTES` on the threaded path) so one large frame does not
 /// pin megabytes for a connection's lifetime.
 const IDLE_BUF_BYTES: usize = 32 << 10;
+/// Fairness budget: frames one connection may consume per scheduling
+/// turn before it must yield to its loop siblings (re-queued on the
+/// loop-local ready-list, not re-armed through the kernel).
+const FAIR_FRAMES: u32 = 32;
+/// Most response frames coalesced into one `writev` call.
+const MAX_IOV: usize = 64;
+/// Recycled response buffers kept per connection.
+const POOL_BUFS: usize = 8;
 /// epoll token reserved for the shared listener.
 const LISTENER_TOKEN: u64 = u64::MAX;
+/// epoll token reserved for the stop-wakeup eventfd.
+const WAKER_TOKEN: u64 = u64::MAX - 1;
+/// epoll token reserved for the per-loop service-tick timerfd.
+const TIMER_TOKEN: u64 = u64::MAX - 2;
 
 // ------------------------------------------------------------- syscalls
 
-/// Raw epoll bindings. `std::net` exposes no readiness API, and the
-/// crate takes no dependencies, so these three syscalls (plus `close`)
-/// come straight from glibc.
+/// Raw bindings for the readiness plane. `std::net` exposes no
+/// readiness API, and the crate takes no dependencies, so epoll,
+/// `accept4`, `eventfd`, and `timerfd` come straight from glibc. This
+/// module and `util/{clock,bench}.rs` are the only files the
+/// `syscall-site` lint rule allows to declare externs.
 mod sys {
-    use std::os::raw::c_int;
+    use std::os::raw::{c_int, c_void};
 
     pub const EPOLL_CLOEXEC: c_int = 0o2000000;
     pub const EPOLL_CTL_ADD: c_int = 1;
@@ -103,6 +141,20 @@ mod sys {
     /// the whole herd. Valid only at ADD time, which is the only way
     /// this module registers the listener.
     pub const EPOLLEXCLUSIVE: u32 = 1 << 28;
+    /// Edge-triggered delivery: one event per readiness *transition*.
+    pub const EPOLLET: u32 = 1 << 31;
+
+    /// `SOCK_NONBLOCK | SOCK_CLOEXEC` for `accept4`: the accepted fd
+    /// is born nonblocking, killing the two-`fcntl` dance per accept.
+    pub const SOCK_NONBLOCK: c_int = 0o4000;
+    pub const SOCK_CLOEXEC: c_int = 0o2000000;
+
+    pub const EFD_CLOEXEC: c_int = 0o2000000;
+    pub const EFD_NONBLOCK: c_int = 0o4000;
+
+    pub const CLOCK_MONOTONIC: c_int = 1;
+    pub const TFD_CLOEXEC: c_int = 0o2000000;
+    pub const TFD_NONBLOCK: c_int = 0o4000;
 
     /// Matches the kernel's `struct epoll_event`, which is packed on
     /// x86-64 (and only there) for historical 32/64-bit compat.
@@ -114,6 +166,23 @@ mod sys {
         pub data: u64,
     }
 
+    /// `struct timespec` as `timerfd_settime` wants it.
+    #[derive(Clone, Copy, Default)]
+    #[repr(C)]
+    pub struct Timespec {
+        pub sec: i64,
+        pub nsec: i64,
+    }
+
+    /// `struct itimerspec`: first expiry (`value`) plus period
+    /// (`interval`); all-zero disarms the timer.
+    #[derive(Clone, Copy, Default)]
+    #[repr(C)]
+    pub struct Itimerspec {
+        pub interval: Timespec,
+        pub value: Timespec,
+    }
+
     extern "C" {
         pub fn epoll_create1(flags: c_int) -> c_int;
         pub fn epoll_ctl(epfd: c_int, op: c_int, fd: c_int, event: *mut EpollEvent) -> c_int;
@@ -123,6 +192,22 @@ mod sys {
             maxevents: c_int,
             timeout_ms: c_int,
         ) -> c_int;
+        pub fn accept4(
+            sockfd: c_int,
+            addr: *mut c_void,
+            addrlen: *mut c_void,
+            flags: c_int,
+        ) -> c_int;
+        pub fn eventfd(initval: u32, flags: c_int) -> c_int;
+        pub fn timerfd_create(clockid: c_int, flags: c_int) -> c_int;
+        pub fn timerfd_settime(
+            fd: c_int,
+            flags: c_int,
+            new_value: *const Itimerspec,
+            old_value: *mut Itimerspec,
+        ) -> c_int;
+        pub fn read(fd: c_int, buf: *mut c_void, count: usize) -> isize;
+        pub fn write(fd: c_int, buf: *const c_void, count: usize) -> isize;
         pub fn close(fd: c_int) -> c_int;
     }
 }
@@ -189,6 +274,134 @@ impl Drop for Poller {
         // owns; no other handle refers to it.
         let _ = unsafe { sys::close(self.epfd) };
     }
+}
+
+// --------------------------------------------------------- waker, timer
+
+/// Stop-wakeup eventfd, registered level-triggered in every loop's
+/// epoll set. Written exactly once, by [`EventLoops::stop_and_join`]:
+/// an idle edge-mode loop parks in `epoll_wait(-1)`, so without this
+/// it would only notice `stop` on the next unrelated event. Because
+/// it is written only at shutdown it costs zero syscalls in steady
+/// state (the loops exit without draining it).
+pub struct LoopWaker {
+    fd: RawFd,
+}
+
+impl LoopWaker {
+    fn new() -> io::Result<LoopWaker> {
+        // SAFETY: plain syscall with no pointer arguments; the result
+        // is checked before use.
+        let fd = unsafe { sys::eventfd(0, sys::EFD_CLOEXEC | sys::EFD_NONBLOCK) };
+        if fd < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(LoopWaker { fd })
+    }
+
+    /// Wake every loop watching this eventfd (level-triggered: one
+    /// write is seen by all pollers).
+    fn wake(&self) {
+        let one: u64 = 1;
+        // SAFETY: `fd` is the open eventfd this struct owns and the
+        // buffer is a live 8-byte value, the size eventfd requires.
+        let _ = unsafe {
+            sys::write(self.fd, (&one as *const u64).cast(), std::mem::size_of::<u64>())
+        };
+    }
+}
+
+impl Drop for LoopWaker {
+    fn drop(&mut self) {
+        // SAFETY: closing the eventfd this struct exclusively owns.
+        let _ = unsafe { sys::close(self.fd) };
+    }
+}
+
+/// Per-loop periodic timer (CLOCK_MONOTONIC timerfd) carrying the
+/// service tick. Created lazily the first time the service asks for
+/// ticks and disarmed whenever it stops asking, so a loop with no
+/// time-based work (or a full token bucket) keeps a dead-silent fd.
+struct TimerFd {
+    fd: RawFd,
+}
+
+impl TimerFd {
+    fn new() -> io::Result<TimerFd> {
+        // SAFETY: plain syscall with no pointer arguments; the result
+        // is checked before use.
+        let fd = unsafe {
+            sys::timerfd_create(sys::CLOCK_MONOTONIC, sys::TFD_CLOEXEC | sys::TFD_NONBLOCK)
+        };
+        if fd < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(TimerFd { fd })
+    }
+
+    /// Arm as a periodic timer firing every `interval_us` (0 disarms).
+    fn set_interval_us(&self, interval_us: u64) -> io::Result<()> {
+        let ts = sys::Timespec {
+            sec: (interval_us / 1_000_000) as i64,
+            nsec: ((interval_us % 1_000_000) * 1_000) as i64,
+        };
+        let spec = sys::Itimerspec { interval: ts, value: ts };
+        // SAFETY: `fd` is the open timerfd this struct owns; `spec` is
+        // a live itimerspec; the old-value out pointer may be null.
+        let rc = unsafe { sys::timerfd_settime(self.fd, 0, &spec, std::ptr::null_mut()) };
+        if rc < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(())
+    }
+
+    /// Expirations since the last read (0 if none — the fd is
+    /// nonblocking, so a spurious wakeup costs one failed read).
+    fn read_ticks(&self) -> u64 {
+        let mut ticks: u64 = 0;
+        // SAFETY: `fd` is the open timerfd this struct owns and the
+        // buffer is a live 8-byte value, the size timerfd requires.
+        let n = unsafe {
+            sys::read(self.fd, (&mut ticks as *mut u64).cast(), std::mem::size_of::<u64>())
+        };
+        if n == std::mem::size_of::<u64>() as isize {
+            ticks
+        } else {
+            0
+        }
+    }
+}
+
+impl Drop for TimerFd {
+    fn drop(&mut self) {
+        // SAFETY: closing the timerfd this struct exclusively owns.
+        let _ = unsafe { sys::close(self.fd) };
+    }
+}
+
+// ------------------------------------------------------------- metrics
+
+/// Loop-plane instrumentation, shared by every loop thread of one
+/// server. `syscalls` counts the calls this module issues at its own
+/// call sites (epoll_wait/ctl, accept4, reads, vectored writes, timer
+/// programming) — an estimate by construction, but a faithful one,
+/// and the numerator of the `net.syscalls_per_op` gauge the data
+/// plane exports.
+#[derive(Default)]
+pub struct LoopMetrics {
+    /// `epoll_wait` returns.
+    pub wakeups: Counter,
+    /// Readiness events delivered across all wakeups.
+    pub events: Counter,
+    /// Syscalls issued at this module's own call sites.
+    pub syscalls: Counter,
+    /// Connections accepted.
+    pub accepts: Counter,
+    /// Fairness-budget exhaustions (a hot connection yielded and was
+    /// re-queued on the loop-local ready-list).
+    pub yields: Counter,
+    /// Frames handed to the service (hello frames included).
+    pub frames: Counter,
 }
 
 // ------------------------------------------------------ frame assembly
@@ -272,6 +485,115 @@ impl FrameAssembler {
     }
 }
 
+// --------------------------------------------------------- write queue
+
+/// Flush outcome: did the socket absorb everything, or block?
+#[derive(PartialEq, Eq, Debug)]
+enum Flush {
+    Drained,
+    Blocked,
+}
+
+/// A connection's pending responses, kept as individual encoded
+/// frames so a flush coalesces up to [`MAX_IOV`] of them into **one**
+/// vectored write instead of one syscall per response (or one big
+/// memcpy into a staging buffer). The head frame's partial-write
+/// cursor (`head_sent`) survives across flushes, so a short `writev`
+/// resumes mid-frame at the exact byte it stopped — the same contract
+/// the single-buffer `sent` cursor used to provide. Fully-sent frame
+/// buffers are recycled through a small pool to keep steady-state
+/// serving allocation-free.
+pub struct WriteQueue {
+    bufs: VecDeque<Vec<u8>>,
+    /// Bytes of the head frame already written to the socket.
+    head_sent: usize,
+    /// Total unsent bytes across all queued frames.
+    pending: usize,
+    pool: Vec<Vec<u8>>,
+}
+
+impl Default for WriteQueue {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl WriteQueue {
+    pub fn new() -> WriteQueue {
+        WriteQueue { bufs: VecDeque::new(), head_sent: 0, pending: 0, pool: Vec::new() }
+    }
+
+    /// Unsent bytes queued (length prefixes included).
+    // lint: no-alloc
+    pub fn pending(&self) -> usize {
+        self.pending
+    }
+
+    /// Queue one length-prefixed frame.
+    pub fn push_frame(&mut self, payload: &[u8]) {
+        let mut buf = self.pool.pop().unwrap_or_default();
+        buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        buf.extend_from_slice(payload);
+        self.pending += buf.len();
+        self.bufs.push_back(buf);
+    }
+
+    /// Write queued frames until drained or the writer would block,
+    /// coalescing up to [`MAX_IOV`] frames per vectored call. Each
+    /// vectored call is counted as one syscall in `metrics`.
+    pub fn flush<W: Write>(&mut self, w: &mut W, metrics: &LoopMetrics) -> io::Result<Flush> {
+        while self.pending > 0 {
+            let res = {
+                let mut iov = [IoSlice::new(&[]); MAX_IOV];
+                let mut n = 0;
+                for (i, b) in self.bufs.iter().enumerate().take(MAX_IOV) {
+                    iov[n] = IoSlice::new(if i == 0 { &b[self.head_sent..] } else { b });
+                    n += 1;
+                }
+                metrics.syscalls.inc();
+                w.write_vectored(&iov[..n])
+            };
+            match res {
+                Ok(0) => return Err(io::ErrorKind::WriteZero.into()),
+                Ok(written) => self.consume(written),
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => return Ok(Flush::Blocked),
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(e),
+            }
+        }
+        Ok(Flush::Drained)
+    }
+
+    /// Advance the partial-write cursor past `written` bytes,
+    /// recycling fully-sent frame buffers.
+    // lint: no-alloc
+    fn consume(&mut self, written: usize) {
+        let mut left = written;
+        while left > 0 {
+            let head_len = match self.bufs.front() {
+                Some(b) => b.len(),
+                None => break,
+            };
+            let rem = head_len - self.head_sent;
+            if left >= rem {
+                left -= rem;
+                self.pending -= rem;
+                self.head_sent = 0;
+                if let Some(mut b) = self.bufs.pop_front() {
+                    b.clear();
+                    if b.capacity() <= IDLE_BUF_BYTES && self.pool.len() < POOL_BUFS {
+                        self.pool.push(b);
+                    }
+                }
+            } else {
+                self.head_sent += left;
+                self.pending -= left;
+                left = 0;
+            }
+        }
+    }
+}
+
 // -------------------------------------------------------- service trait
 
 /// What a plane plugs into the loop: its handshake magic, its
@@ -299,91 +621,162 @@ pub trait Service: Clone + Send + 'static {
     /// Handle one complete request frame, appending exactly one
     /// response payload to `out` (the loop adds the length prefix).
     fn on_frame(&self, conn: &mut Self::Conn, frame: &[u8], out: &mut Vec<u8>);
+
+    /// Ask for a periodic tick every `Some(us)` microseconds, or
+    /// `None` for no tick *right now*. Re-queried after every wakeup
+    /// round: returning `None` disarms the loop's timerfd entirely,
+    /// so a service with nothing time-based to do (or a token bucket
+    /// already at burst) costs an idle process zero syscalls.
+    fn tick_interval_us(&self) -> Option<u64> {
+        None
+    }
+
+    /// Called from a loop thread when its timer fired. `ticks` is the
+    /// number of whole intervals since the last delivery (≥ 1; > 1
+    /// under scheduling delay). The loop never reads a clock — what a
+    /// tick *means* (e.g. token-bucket refill) is the service's call.
+    fn on_tick(&self, _ticks: u64, _interval_us: u64) {}
 }
 
 // --------------------------------------------------- connection machine
 
-/// Per-connection state: socket, reassembly buffer, write queue, and
-/// the hello→serving handshake state.
+/// Per-connection state: socket, reassembly buffer, write queue, the
+/// hello→serving handshake state, and the edge-mode readiness flags.
 struct Conn<C> {
     stream: FaultyStream,
     fd: RawFd,
     token: u64,
     conn_id: u64,
     asm: FrameAssembler,
-    /// Encoded-but-unsent response bytes (length prefixes included).
-    outq: Vec<u8>,
-    /// Prefix of `outq` already written to the socket.
-    sent: usize,
+    wq: WriteQueue,
     /// `None` until the hello frame is accepted.
     state: Option<C>,
     /// Set on handshake refusal: flush the answering hello, then close.
     close_after_flush: bool,
-    /// Interest mask currently registered with the poller.
+    /// Interest mask currently registered with the poller (level mode
+    /// only; edge mode registers once and never modifies).
     interest: u32,
+    /// Edge mode: the socket may have unread bytes (set by
+    /// `EPOLLIN`/HUP events, cleared on `WouldBlock`).
+    can_read: bool,
+    /// Edge mode: the socket may accept writes (set by `EPOLLOUT`,
+    /// cleared on `WouldBlock`).
+    can_write: bool,
+    /// Edge mode: already on the loop's ready-list.
+    queued: bool,
 }
 
 impl<C> Conn<C> {
-    // lint: no-alloc
-    fn pending(&self) -> usize {
-        self.outq.len() - self.sent
-    }
-
-    /// Write queued bytes until the socket would block. On a complete
-    /// drain the queue is reset and its slack capacity released.
-    // lint: no-alloc
-    fn flush_out(&mut self) -> io::Result<()> {
-        while self.sent < self.outq.len() {
-            match self.stream.write(&self.outq[self.sent..]) {
-                Ok(0) => return Err(io::ErrorKind::WriteZero.into()),
-                Ok(n) => self.sent += n,
-                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
-                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
-                Err(e) => return Err(e),
-            }
-        }
-        if self.sent == self.outq.len() {
-            self.outq.clear();
-            self.sent = 0;
-            if self.outq.capacity() > IDLE_BUF_BYTES {
-                self.outq.shrink_to(IDLE_BUF_BYTES);
-            }
-        }
-        Ok(())
-    }
-
     /// Is this connection under write backpressure (reads paused)?
     // lint: no-alloc
     fn backpressured(&self) -> bool {
-        self.pending() > HIGH_WATER
+        self.wq.pending() > HIGH_WATER
     }
 }
 
-/// Append one length-prefixed frame to a connection's write queue.
-// lint: no-alloc
-fn queue_frame(outq: &mut Vec<u8>, payload: &[u8]) {
-    outq.extend_from_slice(&(payload.len() as u32).to_le_bytes());
-    outq.extend_from_slice(payload);
+/// What one scheduling turn decided about a connection.
+#[derive(PartialEq, Eq, Debug)]
+enum Step {
+    /// No runnable work left; the kernel will edge-notify.
+    Idle,
+    /// Fairness budget exhausted with work remaining: re-queue.
+    Again,
+    /// Connection is done (EOF, error, or post-hello refusal).
+    Close,
 }
 
 // ------------------------------------------------------------ the loop
 
+/// Which delivery semantics connection fds use. Edge is the default;
+/// level survives one release behind `MEMTRADE_EVENT_MODE=level` as
+/// the bench comparison anchor.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub(crate) enum EventMode {
+    Edge,
+    Level,
+}
+
+fn event_mode_from_env() -> EventMode {
+    match std::env::var("MEMTRADE_EVENT_MODE") {
+        Ok(v) if v == "level" => EventMode::Level,
+        _ => EventMode::Edge,
+    }
+}
+
+/// Running event-loop threads plus the handle that can wake and join
+/// them. Replaces the bare `Vec<JoinHandle>` return: an idle edge-mode
+/// loop parks in `epoll_wait(-1)` and must be woken through the
+/// eventfd to observe `stop` — [`EventLoops::stop_and_join`] does
+/// both.
+pub struct EventLoops {
+    handles: Vec<JoinHandle<()>>,
+    stop: Arc<AtomicBool>,
+    waker: Arc<LoopWaker>,
+    metrics: Arc<LoopMetrics>,
+}
+
+impl EventLoops {
+    /// Loop-plane counters (shared across this server's loop threads).
+    pub fn metrics(&self) -> &Arc<LoopMetrics> {
+        &self.metrics
+    }
+
+    /// Set the stop flag, wake every loop, and join them.
+    pub fn stop_and_join(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        self.waker.wake();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Everything a loop thread shares read-only (or via interior
+/// mutability) with its siblings.
+struct Ctx<S: Service> {
+    poller: Poller,
+    listener: Arc<TcpListener>,
+    faults: Option<FaultPlan>,
+    conn_seq: Arc<AtomicU64>,
+    service: S,
+    metrics: Arc<LoopMetrics>,
+    mode: EventMode,
+}
+
 /// Spawn `threads` event-loop threads serving `listener` with
-/// `service`. Returns the join handles; the loops exit once `stop` is
-/// set (checked every [`WAIT_MS`]). Each loop owns an epoll instance;
-/// the shared listener is registered `EPOLLEXCLUSIVE` in all of them
-/// so one connection wakes one loop. Accepted sockets are wrapped in
-/// [`FaultyStream`] keyed by a process-wide connection counter.
+/// `service`. Each loop owns an epoll instance; the shared listener is
+/// registered `EPOLLIN | EPOLLEXCLUSIVE` (level-triggered — an
+/// `EMFILE` storm must re-report) in all of them so one connection
+/// wakes one loop. Accepted sockets are wrapped in [`FaultyStream`]
+/// keyed by a process-wide connection counter. The loops exit once
+/// `stop` is set and the returned handle's waker fires (or, in level
+/// mode, within [`WAIT_MS`]).
 pub fn spawn_loops<S: Service>(
     listener: TcpListener,
     stop: Arc<AtomicBool>,
     faults: Option<FaultPlan>,
     service: S,
     threads: usize,
-) -> io::Result<Vec<JoinHandle<()>>> {
+) -> io::Result<EventLoops> {
+    spawn_loops_mode(listener, stop, faults, service, threads, event_mode_from_env())
+}
+
+/// [`spawn_loops`] with the delivery mode pinned, bypassing the
+/// `MEMTRADE_EVENT_MODE` env toggle (tests must not race on process
+/// environment).
+pub(crate) fn spawn_loops_mode<S: Service>(
+    listener: TcpListener,
+    stop: Arc<AtomicBool>,
+    faults: Option<FaultPlan>,
+    service: S,
+    threads: usize,
+    mode: EventMode,
+) -> io::Result<EventLoops> {
     listener.set_nonblocking(true)?;
     let listener = Arc::new(listener);
     let conn_seq = Arc::new(AtomicU64::new(0));
+    let waker = Arc::new(LoopWaker::new()?);
+    let metrics = Arc::new(LoopMetrics::default());
     let threads = threads.max(1);
     let mut handles = Vec::with_capacity(threads);
     for _ in 0..threads {
@@ -395,108 +788,316 @@ pub fn spawn_loops<S: Service>(
             LISTENER_TOKEN,
             sys::EPOLLIN | sys::EPOLLEXCLUSIVE,
         )?;
-        let (listener, stop) = (Arc::clone(&listener), Arc::clone(&stop));
-        let (faults, seq, svc) = (faults.clone(), Arc::clone(&conn_seq), service.clone());
+        poller.add(waker.fd, WAKER_TOKEN, sys::EPOLLIN)?;
+        let ctx = Ctx {
+            poller,
+            listener: Arc::clone(&listener),
+            faults: faults.clone(),
+            conn_seq: Arc::clone(&conn_seq),
+            service: service.clone(),
+            metrics: Arc::clone(&metrics),
+            mode,
+        };
+        let stop = Arc::clone(&stop);
         handles.push(std::thread::spawn(move || {
-            run_loop(poller, listener, stop, faults, seq, svc);
+            run_loop(ctx, stop);
         }));
     }
-    Ok(handles)
+    Ok(EventLoops { handles, stop, waker, metrics })
 }
 
-fn run_loop<S: Service>(
-    poller: Poller,
-    listener: Arc<TcpListener>,
-    stop: Arc<AtomicBool>,
-    faults: Option<FaultPlan>,
-    conn_seq: Arc<AtomicU64>,
-    service: S,
-) {
+fn run_loop<S: Service>(ctx: Ctx<S>, stop: Arc<AtomicBool>) {
     let mut conns: Vec<Option<Conn<S::Conn>>> = Vec::new();
     let mut free: Vec<usize> = Vec::new();
+    let mut ready: VecDeque<usize> = VecDeque::new();
     let mut events = [sys::EpollEvent { events: 0, data: 0 }; EVENT_BATCH];
     let mut chunk = vec![0u8; READ_CHUNK];
     let mut resp: Vec<u8> = Vec::new();
-    while !stop.load(Ordering::Relaxed) {
-        let n = match poller.wait(&mut events, WAIT_MS) {
+    let mut timer: Option<TimerFd> = None;
+    let mut armed_us: Option<u64> = None;
+    loop {
+        arm_tick(&ctx, &mut timer, &mut armed_us);
+        if stop.load(Ordering::Relaxed) {
+            break;
+        }
+        // Edge mode with nothing runnable parks indefinitely (the
+        // stop eventfd and the timerfd are both in the set); with a
+        // nonempty ready-list it only polls the kernel.
+        let timeout = match ctx.mode {
+            EventMode::Edge if ready.is_empty() => -1,
+            EventMode::Edge => 0,
+            EventMode::Level => WAIT_MS,
+        };
+        ctx.metrics.syscalls.inc();
+        let n = match ctx.poller.wait(&mut events, timeout) {
             Ok(n) => n,
             Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
             Err(_) => break,
         };
+        ctx.metrics.wakeups.inc();
+        ctx.metrics.events.add(n as u64);
         for ev in events.iter().take(n) {
             // Copy packed fields out by value; references into a
             // packed struct are unaligned and rejected by rustc.
             let (token, mask) = (ev.data, ev.events);
-            if token == LISTENER_TOKEN {
-                accept_ready(&poller, &listener, faults.as_ref(), &conn_seq, &mut conns, &mut free);
-                continue;
+            match token {
+                LISTENER_TOKEN => {
+                    accept_ready(&ctx, &mut conns, &mut free, &mut ready);
+                }
+                WAKER_TOKEN => {} // stop wake: the loop head re-checks
+                TIMER_TOKEN => {
+                    if let (Some(t), Some(us)) = (&timer, armed_us) {
+                        ctx.metrics.syscalls.inc();
+                        let ticks = t.read_ticks();
+                        if ticks > 0 {
+                            ctx.service.on_tick(ticks, us);
+                        }
+                    }
+                }
+                _ => {
+                    let slot = token as usize;
+                    // The slot may have been vacated earlier in this
+                    // batch.
+                    let Some(conn) = conns.get_mut(slot).and_then(|s| s.as_mut()) else {
+                        continue;
+                    };
+                    match ctx.mode {
+                        EventMode::Edge => {
+                            // EPOLLERR routes through the read path:
+                            // the next read returns the socket error
+                            // and the turn closes the connection.
+                            let readable = sys::EPOLLIN
+                                | sys::EPOLLHUP
+                                | sys::EPOLLRDHUP
+                                | sys::EPOLLERR;
+                            if mask & readable != 0 {
+                                conn.can_read = true;
+                            }
+                            if mask & sys::EPOLLOUT != 0 {
+                                conn.can_write = true;
+                            }
+                            if !conn.queued {
+                                conn.queued = true;
+                                ready.push_back(slot);
+                            }
+                        }
+                        EventMode::Level => {
+                            if !step_level(&ctx, conn, mask, &mut chunk, &mut resp) {
+                                close_conn(&ctx.poller, &mut conns, &mut free, slot);
+                            }
+                        }
+                    }
+                }
             }
-            let slot = token as usize;
-            // The slot may have been vacated earlier in this batch.
-            let Some(conn) = conns.get_mut(slot).and_then(|s| s.as_mut()) else {
-                continue;
-            };
-            if !step_conn(&poller, &service, conn, mask, &mut chunk, &mut resp) {
-                close_conn(&poller, &mut conns, &mut free, slot);
+        }
+        // One scheduling round over the ready-list snapshot: every
+        // queued connection gets one budgeted turn; a turn that
+        // exhausts its budget re-queues *behind* its siblings.
+        if ctx.mode == EventMode::Edge {
+            let turns = ready.len();
+            for _ in 0..turns {
+                let Some(slot) = ready.pop_front() else {
+                    break;
+                };
+                let step = {
+                    let Some(conn) = conns.get_mut(slot).and_then(|s| s.as_mut()) else {
+                        continue;
+                    };
+                    conn.queued = false;
+                    step_edge(&ctx, conn, &mut chunk, &mut resp)
+                };
+                match step {
+                    Step::Close => close_conn(&ctx.poller, &mut conns, &mut free, slot),
+                    Step::Again => {
+                        if let Some(conn) = conns.get_mut(slot).and_then(|s| s.as_mut()) {
+                            conn.queued = true;
+                            ready.push_back(slot);
+                        }
+                    }
+                    Step::Idle => {}
+                }
             }
         }
     }
 }
 
-/// Accept until the listener would block. Setup failures drop the one
-/// socket; accept failures (e.g. EMFILE under a connection storm) end
-/// the pass — level-triggered epoll re-reports readiness next wake-up.
-fn accept_ready<C>(
-    poller: &Poller,
-    listener: &TcpListener,
-    faults: Option<&FaultPlan>,
-    conn_seq: &AtomicU64,
-    conns: &mut Vec<Option<Conn<C>>>,
+/// Reconcile the loop's timerfd with what the service wants right
+/// now: arm on `Some` (creating the fd on first use), disarm on
+/// `None`. Steady states — idle with a disarmed timer, or serving
+/// with an armed one — cost zero `timerfd_settime` calls.
+fn arm_tick<S: Service>(ctx: &Ctx<S>, timer: &mut Option<TimerFd>, armed_us: &mut Option<u64>) {
+    let want = ctx.service.tick_interval_us();
+    if want == *armed_us {
+        return;
+    }
+    if timer.is_none() {
+        if want.is_none() {
+            return;
+        }
+        ctx.metrics.syscalls.add(2); // timerfd_create + epoll_ctl
+        let Ok(t) = TimerFd::new() else {
+            return;
+        };
+        if ctx.poller.add(t.fd, TIMER_TOKEN, sys::EPOLLIN).is_err() {
+            return;
+        }
+        *timer = Some(t);
+    }
+    if let Some(t) = timer {
+        ctx.metrics.syscalls.inc();
+        if t.set_interval_us(want.unwrap_or(0)).is_ok() {
+            *armed_us = want;
+        }
+    }
+}
+
+/// Accept until the listener would block, via `accept4` so the socket
+/// is born nonblocking (no per-accept `fcntl` pair). Setup failures
+/// drop the one socket; accept failures (e.g. EMFILE under a
+/// connection storm) end the pass — the listener is registered
+/// level-triggered, so readiness re-reports next wake-up.
+fn accept_ready<S: Service>(
+    ctx: &Ctx<S>,
+    conns: &mut Vec<Option<Conn<S::Conn>>>,
     free: &mut Vec<usize>,
+    ready: &mut VecDeque<usize>,
 ) {
     loop {
-        let stream = match listener.accept() {
-            Ok((stream, _)) => stream,
-            Err(e) if e.kind() == io::ErrorKind::WouldBlock => return,
-            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
-            Err(_) => return,
+        ctx.metrics.syscalls.inc();
+        // SAFETY: the listener fd is open for the loop's lifetime; the
+        // null addr/addrlen pointers are the documented "don't care"
+        // form of accept4.
+        let fd = unsafe {
+            sys::accept4(
+                ctx.listener.as_raw_fd(),
+                std::ptr::null_mut(),
+                std::ptr::null_mut(),
+                sys::SOCK_NONBLOCK | sys::SOCK_CLOEXEC,
+            )
         };
-        if stream.set_nonblocking(true).is_err() || stream.set_nodelay(true).is_err() {
+        if fd < 0 {
+            let e = io::Error::last_os_error();
+            match e.kind() {
+                io::ErrorKind::WouldBlock => return,
+                io::ErrorKind::Interrupted => continue,
+                _ => return,
+            }
+        }
+        // SAFETY: `fd` was just returned by accept4 and is owned by
+        // nothing else; from_raw_fd transfers that ownership to the
+        // TcpStream exactly once.
+        let stream = unsafe { std::net::TcpStream::from_raw_fd(fd) };
+        ctx.metrics.syscalls.inc(); // TCP_NODELAY setsockopt
+        if stream.set_nodelay(true).is_err() {
             continue;
         }
-        let conn_id = conn_seq.fetch_add(1, Ordering::Relaxed);
-        let stream = FaultyStream::new(stream, faults, conn_id);
+        let conn_id = ctx.conn_seq.fetch_add(1, Ordering::Relaxed);
+        let stream = FaultyStream::new(stream, ctx.faults.as_ref(), conn_id);
         let fd = stream.as_raw_fd();
         let slot = free.pop().unwrap_or_else(|| {
             conns.push(None);
             conns.len() - 1
         });
         let token = slot as u64;
-        let interest = sys::EPOLLIN | sys::EPOLLRDHUP;
-        if poller.add(fd, token, interest).is_err() {
+        // Edge mode registers the full mask once and never touches
+        // epoll_ctl again for this fd; level mode starts read-only and
+        // re-arms through `update_interest`.
+        let interest = match ctx.mode {
+            EventMode::Edge => {
+                sys::EPOLLIN | sys::EPOLLOUT | sys::EPOLLRDHUP | sys::EPOLLET
+            }
+            EventMode::Level => sys::EPOLLIN | sys::EPOLLRDHUP,
+        };
+        ctx.metrics.syscalls.inc();
+        if ctx.poller.add(fd, token, interest).is_err() {
             free.push(slot);
             continue;
         }
+        ctx.metrics.accepts.inc();
         conns[slot] = Some(Conn {
             stream,
             fd,
             token,
             conn_id,
             asm: FrameAssembler::new(),
-            outq: Vec::new(),
-            sent: 0,
+            wq: WriteQueue::new(),
             state: None,
             close_after_flush: false,
             interest,
+            // A fresh socket is writable, and bytes may have raced in
+            // before registration: assume both and let the first turn
+            // discover the truth (a would-block read just clears the
+            // flag). Edge delivery only reports *transitions*, so
+            // assuming not-ready here could lose the race forever.
+            can_read: true,
+            can_write: true,
+            queued: false,
         });
+        if ctx.mode == EventMode::Edge {
+            if let Some(conn) = conns.get_mut(slot).and_then(|s| s.as_mut()) {
+                conn.queued = true;
+                ready.push_back(slot);
+            }
+        }
     }
 }
 
-/// Drive one connection through one readiness event. Returns `false`
-/// when the connection should be closed.
-fn step_conn<S: Service>(
-    poller: &Poller,
-    service: &S,
+/// One budgeted edge-mode scheduling turn: flush what the socket will
+/// take, serve parked frames, read until the socket runs dry or the
+/// budget does, flush again, then report whether the connection still
+/// has runnable work.
+fn step_edge<S: Service>(
+    ctx: &Ctx<S>,
+    conn: &mut Conn<S::Conn>,
+    chunk: &mut [u8],
+    resp: &mut Vec<u8>,
+) -> Step {
+    let mut budget = FAIR_FRAMES;
+    // Write first: readiness to write is what un-backpressures the
+    // read path below.
+    if conn.can_write && conn.wq.pending() > 0 {
+        match conn.wq.flush(&mut conn.stream, &ctx.metrics) {
+            Ok(Flush::Blocked) => conn.can_write = false,
+            Ok(Flush::Drained) => {}
+            Err(_) => return Step::Close,
+        }
+    }
+    // Frames parked by backpressure or a spent budget drain first,
+    // then fresh socket bytes.
+    let served = drain_frames(&ctx.service, conn, resp, &mut budget, &ctx.metrics)
+        .and_then(|()| {
+            if conn.can_read {
+                pump_reads(ctx, conn, chunk, resp, &mut budget)
+            } else {
+                Ok(())
+            }
+        });
+    if served.is_err() {
+        return Step::Close;
+    }
+    if conn.can_write && conn.wq.pending() > 0 {
+        match conn.wq.flush(&mut conn.stream, &ctx.metrics) {
+            Ok(Flush::Blocked) => conn.can_write = false,
+            Ok(Flush::Drained) => {}
+            Err(_) => return Step::Close,
+        }
+    }
+    if conn.close_after_flush && conn.wq.pending() == 0 {
+        return Step::Close;
+    }
+    if budget == 0 {
+        // Work may remain (buffered frames or an undrained socket):
+        // yield the loop to siblings and come back around.
+        ctx.metrics.yields.inc();
+        return Step::Again;
+    }
+    Step::Idle
+}
+
+/// Drive one level-mode connection through one readiness event.
+/// Returns `false` when the connection should be closed.
+fn step_level<S: Service>(
+    ctx: &Ctx<S>,
     conn: &mut Conn<S::Conn>,
     mask: u32,
     chunk: &mut [u8],
@@ -505,46 +1106,60 @@ fn step_conn<S: Service>(
     if mask & sys::EPOLLERR != 0 {
         return false;
     }
-    if mask & sys::EPOLLOUT != 0 && conn.flush_out().is_err() {
+    if mask & sys::EPOLLOUT != 0
+        && conn.wq.flush(&mut conn.stream, &ctx.metrics).is_err()
+    {
         return false;
     }
     // Frames parked by backpressure drain first (write readiness just
-    // made room), then fresh socket bytes.
-    let served = drain_frames(service, conn, resp).and_then(|()| {
-        if mask & (sys::EPOLLIN | sys::EPOLLHUP | sys::EPOLLRDHUP) != 0 {
-            pump_reads(service, conn, chunk, resp)?;
-        }
-        Ok(())
-    });
-    if served.is_err() || conn.flush_out().is_err() {
+    // made room), then fresh socket bytes. Level mode never yields:
+    // the budget is effectively unbounded.
+    let mut budget = u32::MAX;
+    let served = drain_frames(&ctx.service, conn, resp, &mut budget, &ctx.metrics)
+        .and_then(|()| {
+            if mask & (sys::EPOLLIN | sys::EPOLLHUP | sys::EPOLLRDHUP) != 0 {
+                pump_reads(ctx, conn, chunk, resp, &mut budget)?;
+            }
+            Ok(())
+        });
+    if served.is_err() || conn.wq.flush(&mut conn.stream, &ctx.metrics).is_err() {
         return false;
     }
-    if conn.close_after_flush && conn.pending() == 0 {
+    if conn.close_after_flush && conn.wq.pending() == 0 {
         return false;
     }
-    update_interest(poller, conn)
+    update_interest(ctx, conn)
 }
 
-/// Read until the socket would block, handing complete frames to the
-/// service after every chunk so buffered input stays bounded by one
-/// partial frame plus one read chunk.
+/// Read until the socket would block or the budget runs out, handing
+/// complete frames to the service after every chunk so buffered input
+/// stays bounded by one partial frame plus one read chunk. In edge
+/// mode a would-block read clears `can_read` — the kernel owes us an
+/// event before the socket has bytes again.
 fn pump_reads<S: Service>(
-    service: &S,
+    ctx: &Ctx<S>,
     conn: &mut Conn<S::Conn>,
     chunk: &mut [u8],
     resp: &mut Vec<u8>,
+    budget: &mut u32,
 ) -> io::Result<()> {
     loop {
-        if conn.backpressured() || conn.close_after_flush {
+        if *budget == 0 || conn.backpressured() || conn.close_after_flush {
             break;
         }
+        ctx.metrics.syscalls.inc();
         match conn.stream.read(chunk) {
             Ok(0) => return Err(io::ErrorKind::UnexpectedEof.into()),
             Ok(n) => {
                 conn.asm.push(&chunk[..n]);
-                drain_frames(service, conn, resp)?;
+                drain_frames(&ctx.service, conn, resp, budget, &ctx.metrics)?;
             }
-            Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                if ctx.mode == EventMode::Edge {
+                    conn.can_read = false;
+                }
+                break;
+            }
             Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
             Err(e) => return Err(e),
         }
@@ -553,32 +1168,36 @@ fn pump_reads<S: Service>(
     Ok(())
 }
 
-/// Feed every complete buffered frame through the connection's state
+/// Feed buffered complete frames through the connection's state
 /// machine: the first frame is the hello, the rest go to the service.
-/// Stops early under write backpressure.
+/// Stops early under write backpressure or a spent fairness budget.
 fn drain_frames<S: Service>(
     service: &S,
     conn: &mut Conn<S::Conn>,
     resp: &mut Vec<u8>,
+    budget: &mut u32,
+    metrics: &LoopMetrics,
 ) -> io::Result<()> {
     loop {
-        if conn.backpressured() || conn.close_after_flush {
+        if *budget == 0 || conn.backpressured() || conn.close_after_flush {
             return Ok(());
         }
         // Split borrows: `frame` borrows `conn.asm`; the arms below
-        // touch only `conn.state` / `conn.outq`.
+        // touch only `conn.state` / `conn.wq`.
         let c = &mut *conn;
         let frame = match c.asm.next_frame() {
             Ok(Some(frame)) => frame,
             Ok(None) => return Ok(()),
             Err(e) => return Err(io::Error::new(io::ErrorKind::InvalidData, e.to_string())),
         };
+        *budget -= 1;
+        metrics.frames.inc();
         match c.state.as_mut() {
             None => {
                 let magic = service.magic();
                 match check_hello(frame, magic) {
                     Ok(hello) => {
-                        queue_frame(&mut c.outq, &hello_payload(magic));
+                        c.wq.push_frame(&hello_payload(magic));
                         c.state = Some(service.open_conn(c.conn_id, hello));
                     }
                     Err(_) => {
@@ -586,7 +1205,7 @@ fn drain_frames<S: Service>(
                         // answer with our hello even on mismatch so
                         // the peer reports plane/version clearly,
                         // then close once it has flushed.
-                        queue_frame(&mut c.outq, &hello_payload(magic));
+                        c.wq.push_frame(&hello_payload(magic));
                         c.close_after_flush = true;
                     }
                 }
@@ -594,24 +1213,26 @@ fn drain_frames<S: Service>(
             Some(state) => {
                 resp.clear();
                 service.on_frame(state, frame, resp);
-                queue_frame(&mut c.outq, resp);
+                c.wq.push_frame(resp);
             }
         }
     }
 }
 
-/// Re-register the poller interest mask if it changed: `EPOLLOUT` only
-/// while bytes are pending, `EPOLLIN` only while not backpressured.
-fn update_interest<C>(poller: &Poller, conn: &mut Conn<C>) -> bool {
+/// Level mode only: re-register the poller interest mask if it
+/// changed — `EPOLLOUT` only while bytes are pending, `EPOLLIN` only
+/// while not backpressured.
+fn update_interest<S: Service>(ctx: &Ctx<S>, conn: &mut Conn<S::Conn>) -> bool {
     let mut want = sys::EPOLLRDHUP;
-    if conn.pending() > 0 {
+    if conn.wq.pending() > 0 {
         want |= sys::EPOLLOUT;
     }
     if !conn.backpressured() && !conn.close_after_flush {
         want |= sys::EPOLLIN;
     }
     if want != conn.interest {
-        if poller.modify(conn.fd, conn.token, want).is_err() {
+        ctx.metrics.syscalls.inc();
+        if ctx.poller.modify(conn.fd, conn.token, want).is_err() {
             return false;
         }
         conn.interest = want;
@@ -643,12 +1264,19 @@ mod tests {
     use crate::net::wire::{read_frame_into, write_frame};
     use std::io::BufReader;
     use std::net::TcpStream;
-    use std::time::Duration;
+    use std::time::{Duration, Instant};
+
+    fn frame_bytes(payload: &[u8]) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        out.extend_from_slice(payload);
+        out
+    }
 
     fn wire_bytes(frames: &[&[u8]]) -> Vec<u8> {
         let mut out = Vec::new();
         for f in frames {
-            queue_frame(&mut out, f);
+            out.extend_from_slice(&frame_bytes(f));
         }
         out
     }
@@ -661,9 +1289,9 @@ mod tests {
         out
     }
 
-    /// The reassembly property test the ISSUE asks for: any split of
-    /// the byte stream — every single cut point, plus byte-at-a-time —
-    /// yields exactly the original frames in order.
+    /// The reassembly property test: any split of the byte stream —
+    /// every single cut point, plus byte-at-a-time — yields exactly
+    /// the original frames in order.
     #[test]
     fn reassembles_frames_split_at_every_byte_offset() {
         let frames: Vec<&[u8]> = vec![b"", b"a", b"hello world", &[0u8; 300], b"\x00\xff\x7f"];
@@ -737,6 +1365,107 @@ mod tests {
         assert!(asm.capacity() <= IDLE_BUF_BYTES, "capacity {}", asm.capacity());
     }
 
+    /// A writer that accepts exactly `limit` bytes per call — the
+    /// adversarial short-write kernel for the writev resume property.
+    struct LimitedWriter {
+        out: Vec<u8>,
+        limit: usize,
+    }
+
+    impl Write for LimitedWriter {
+        fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+            let n = buf.len().min(self.limit);
+            self.out.extend_from_slice(&buf[..n]);
+            Ok(n)
+        }
+        fn write_vectored(&mut self, bufs: &[IoSlice<'_>]) -> io::Result<usize> {
+            let mut left = self.limit;
+            let before = self.out.len();
+            for b in bufs {
+                if left == 0 {
+                    break;
+                }
+                let n = b.len().min(left);
+                self.out.extend_from_slice(&b[..n]);
+                left -= n;
+            }
+            Ok(self.out.len() - before)
+        }
+        fn flush(&mut self) -> io::Result<()> {
+            Ok(())
+        }
+    }
+
+    /// Writev partial-write resume property: for *every* per-call
+    /// byte limit k — which lands the short-write boundary inside
+    /// every frame and on every iovec edge, across more frames than
+    /// one iovec batch holds — the queue emits exactly the encoded
+    /// frame stream, in order.
+    #[test]
+    fn write_queue_resumes_partial_writes_at_every_boundary() {
+        let payloads: Vec<Vec<u8>> = (0..(MAX_IOV + 9))
+            .map(|i| vec![i as u8; (i * 7) % 23 + 1])
+            .collect();
+        let mut want = Vec::new();
+        for p in &payloads {
+            want.extend_from_slice(&frame_bytes(p));
+        }
+        let metrics = LoopMetrics::default();
+        for k in 1..=want.len() {
+            let mut wq = WriteQueue::new();
+            for p in &payloads {
+                wq.push_frame(p);
+            }
+            assert_eq!(wq.pending(), want.len());
+            let mut w = LimitedWriter { out: Vec::new(), limit: k };
+            while wq.pending() > 0 {
+                assert_eq!(
+                    wq.flush(&mut w, &metrics).expect("flush"),
+                    Flush::Drained,
+                    "limit {k}"
+                );
+            }
+            assert_eq!(w.out, want, "limit {k}");
+        }
+    }
+
+    /// A would-block writer parks the queue without losing the
+    /// cursor; the retry resumes mid-frame.
+    #[test]
+    fn write_queue_survives_would_block_mid_frame() {
+        struct Half {
+            out: Vec<u8>,
+            calls: u32,
+        }
+        impl Write for Half {
+            fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+                self.calls += 1;
+                if self.calls % 2 == 0 {
+                    return Err(io::ErrorKind::WouldBlock.into());
+                }
+                let n = buf.len().min(3);
+                self.out.extend_from_slice(&buf[..n]);
+                Ok(n)
+            }
+            fn flush(&mut self) -> io::Result<()> {
+                Ok(())
+            }
+        }
+        let metrics = LoopMetrics::default();
+        let mut wq = WriteQueue::new();
+        wq.push_frame(b"abcdefgh");
+        let want = frame_bytes(b"abcdefgh");
+        let mut w = Half { out: Vec::new(), calls: 0 };
+        let mut blocked = 0;
+        while wq.pending() > 0 {
+            if wq.flush(&mut w, &metrics).expect("flush") == Flush::Blocked {
+                blocked += 1;
+            }
+        }
+        assert!(blocked > 0, "the writer did block");
+        assert_eq!(w.out, want);
+    }
+
     /// Minimal end-to-end service: the loop handshakes, frames, and
     /// echoes over a real socket, across partial writes and multiple
     /// sequential frames.
@@ -756,12 +1485,11 @@ mod tests {
         }
     }
 
-    #[test]
-    fn echo_service_over_a_real_epoll_loop() {
+    fn echo_round_trips(mode: EventMode) {
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap();
         let stop = Arc::new(AtomicBool::new(false));
-        let handles = spawn_loops(listener, Arc::clone(&stop), None, Echo, 2).unwrap();
+        let loops = spawn_loops_mode(listener, Arc::clone(&stop), None, Echo, 2, mode).unwrap();
 
         let stream = TcpStream::connect(addr).unwrap();
         stream.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
@@ -787,9 +1515,236 @@ mod tests {
             .unwrap_err();
         assert!(err.to_string().contains("plane"), "{err}");
 
-        stop.store(true, Ordering::SeqCst);
-        for h in handles {
-            h.join().unwrap();
+        assert!(loops.metrics().accepts.get() >= 2);
+        loops.stop_and_join();
+    }
+
+    #[test]
+    fn echo_service_over_a_real_epoll_loop() {
+        echo_round_trips(EventMode::Edge);
+    }
+
+    #[test]
+    fn level_triggered_fallback_still_serves() {
+        echo_round_trips(EventMode::Level);
+    }
+
+    /// ET edge case: a frame split across two readiness events (the
+    /// prefix+half, a pause long enough for the first edge to drain to
+    /// WouldBlock, then the rest) reassembles and answers.
+    #[test]
+    fn edge_mode_reassembles_frame_split_across_two_readiness_events() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let stop = Arc::new(AtomicBool::new(false));
+        let loops =
+            spawn_loops_mode(listener, Arc::clone(&stop), None, Echo, 1, EventMode::Edge)
+                .unwrap();
+
+        let stream = TcpStream::connect(addr).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        stream.set_nodelay(true).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut writer = stream;
+        client_handshake(&mut reader, &mut writer, crate::net::control::DATA_MAGIC).unwrap();
+
+        let payload = vec![0xabu8; 1000];
+        let wire = frame_bytes(&payload);
+        writer.write_all(&wire[..500]).unwrap();
+        writer.flush().unwrap();
+        // Long enough that the server's first edge drains to
+        // WouldBlock and parks the connection as Idle.
+        std::thread::sleep(Duration::from_millis(100));
+        writer.write_all(&wire[500..]).unwrap();
+        writer.flush().unwrap();
+
+        let mut buf = Vec::new();
+        read_frame_into(&mut reader, &mut buf).unwrap();
+        assert_eq!(buf, payload);
+        loops.stop_and_join();
+    }
+
+    /// Build a served `Conn` + `Ctx` pair over a real loopback socket
+    /// so a scheduling turn can be driven by hand.
+    fn hand_built_conn() -> (Ctx<Echo>, Conn<u64>, TcpStream) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let peer = TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+        let (accepted, _) = listener.accept().unwrap();
+        accepted.set_nonblocking(true).unwrap();
+        let stream = FaultyStream::new(accepted, None, 0);
+        let fd = stream.as_raw_fd();
+        let ctx = Ctx {
+            poller: Poller::new().unwrap(),
+            listener: Arc::new(listener),
+            faults: None,
+            conn_seq: Arc::new(AtomicU64::new(1)),
+            service: Echo,
+            metrics: Arc::new(LoopMetrics::default()),
+            mode: EventMode::Edge,
+        };
+        let conn = Conn {
+            stream,
+            fd,
+            token: 0,
+            conn_id: 0,
+            asm: FrameAssembler::new(),
+            wq: WriteQueue::new(),
+            state: Some(0),
+            close_after_flush: false,
+            interest: 0,
+            can_read: true,
+            can_write: true,
+            queued: false,
+        };
+        (ctx, conn, peer)
+    }
+
+    /// ET edge case: a spurious wakeup — readiness flags set, socket
+    /// empty — must park the connection as Idle, not close it or
+    /// spin. The would-block read clears `can_read`.
+    #[test]
+    fn spurious_wakeup_with_empty_socket_parks_idle() {
+        let (ctx, mut conn, _peer) = hand_built_conn();
+        let mut chunk = vec![0u8; READ_CHUNK];
+        let mut resp = Vec::new();
+        assert_eq!(step_edge(&ctx, &mut conn, &mut chunk, &mut resp), Step::Idle);
+        assert!(!conn.can_read, "would-block read must clear can_read");
+        // A second spurious turn (can_read already false) is a no-op.
+        let before = ctx.metrics.syscalls.get();
+        assert_eq!(step_edge(&ctx, &mut conn, &mut chunk, &mut resp), Step::Idle);
+        assert_eq!(ctx.metrics.syscalls.get(), before, "no syscalls when nothing is ready");
+    }
+
+    /// ET fairness: one flooding connection must not stall nine
+    /// polite request/response peers sharing its (single) loop
+    /// thread. The budget forces yields, and every polite RTT stays
+    /// bounded.
+    #[test]
+    fn fairness_budget_keeps_polite_connections_responsive() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let stop = Arc::new(AtomicBool::new(false));
+        let loops =
+            spawn_loops_mode(listener, Arc::clone(&stop), None, Echo, 1, EventMode::Edge)
+                .unwrap();
+
+        // The flooder pipelines tiny frames as fast as the socket
+        // takes them and drains responses on a second thread, so it
+        // is permanently hot without ever tripping backpressure.
+        let flood_stop = Arc::new(AtomicBool::new(false));
+        let flooder = {
+            let stop = Arc::clone(&flood_stop);
+            let stream = TcpStream::connect(addr).unwrap();
+            stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+            let mut reader = BufReader::new(stream.try_clone().unwrap());
+            let mut writer = stream;
+            client_handshake(&mut reader, &mut writer, crate::net::control::DATA_MAGIC)
+                .unwrap();
+            let drain = std::thread::spawn(move || {
+                let mut buf = Vec::new();
+                while read_frame_into(&mut reader, &mut buf).is_ok() {}
+            });
+            let write = std::thread::spawn(move || {
+                let frame = frame_bytes(&[9u8; 16]);
+                while !stop.load(Ordering::Relaxed) {
+                    for _ in 0..64 {
+                        if writer.write_all(&frame).is_err() {
+                            return;
+                        }
+                    }
+                    let _ = writer.flush();
+                }
+            });
+            (drain, write)
+        };
+
+        let polite: Vec<_> = (0..9)
+            .map(|_| {
+                std::thread::spawn(move || {
+                    let stream = TcpStream::connect(addr).unwrap();
+                    stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+                    let mut reader = BufReader::new(stream.try_clone().unwrap());
+                    let mut writer = stream;
+                    client_handshake(
+                        &mut reader,
+                        &mut writer,
+                        crate::net::control::DATA_MAGIC,
+                    )
+                    .unwrap();
+                    let mut buf = Vec::new();
+                    let mut rtts_us: Vec<u64> = Vec::new();
+                    for i in 0..50u32 {
+                        let payload = i.to_le_bytes();
+                        // lint: allow-clock — test-harness RTT stopwatch
+                        let t = Instant::now();
+                        write_frame(&mut writer, &payload).unwrap();
+                        read_frame_into(&mut reader, &mut buf).unwrap();
+                        rtts_us.push(t.elapsed().as_micros() as u64);
+                        assert_eq!(buf, payload);
+                    }
+                    rtts_us.sort_unstable();
+                    rtts_us[rtts_us.len() * 99 / 100]
+                })
+            })
+            .collect();
+
+        let p99s: Vec<u64> = polite.into_iter().map(|h| h.join().unwrap()).collect();
+        flood_stop.store(true, Ordering::Relaxed);
+        let (drain, write) = flooder;
+        write.join().unwrap();
+
+        let worst = *p99s.iter().max().unwrap();
+        assert!(
+            worst < 2_000_000,
+            "polite p99 spread {p99s:?} µs — a flooder must not stall siblings"
+        );
+        assert!(
+            loops.metrics().yields.get() > 0,
+            "the flooder never exhausted a fairness budget"
+        );
+        loops.stop_and_join();
+        drain.join().unwrap();
+    }
+
+    /// The service tick rides a per-loop timerfd: it fires while the
+    /// service asks for it and the loop stays otherwise idle.
+    #[derive(Clone)]
+    struct Ticker {
+        ticks: Arc<AtomicU64>,
+    }
+
+    impl Service for Ticker {
+        type Conn = ();
+        fn magic(&self) -> [u8; 4] {
+            crate::net::control::DATA_MAGIC
         }
+        fn open_conn(&self, _conn: u64, _hello: HelloInfo) {}
+        fn on_frame(&self, _conn: &mut (), _frame: &[u8], _out: &mut Vec<u8>) {}
+        fn tick_interval_us(&self) -> Option<u64> {
+            Some(2_000)
+        }
+        fn on_tick(&self, ticks: u64, interval_us: u64) {
+            assert_eq!(interval_us, 2_000);
+            self.ticks.fetch_add(ticks, Ordering::Relaxed);
+        }
+    }
+
+    #[test]
+    fn timerfd_delivers_service_ticks_without_traffic() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let stop = Arc::new(AtomicBool::new(false));
+        let ticks = Arc::new(AtomicU64::new(0));
+        let svc = Ticker { ticks: Arc::clone(&ticks) };
+        let loops =
+            spawn_loops_mode(listener, Arc::clone(&stop), None, svc, 1, EventMode::Edge)
+                .unwrap();
+        // lint: allow-clock — test-harness deadline, not loop logic
+        let deadline = Instant::now() + Duration::from_secs(5);
+        // lint: allow-clock — test-harness deadline, not loop logic
+        while ticks.load(Ordering::Relaxed) < 3 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(ticks.load(Ordering::Relaxed) >= 3, "timer ticks never arrived");
+        loops.stop_and_join();
     }
 }

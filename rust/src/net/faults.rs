@@ -290,6 +290,12 @@ impl Read for FaultyStream {
             return self.inner.read(buf);
         }
         // Decisions drawn in a fixed order per call (see module doc).
+        // Edge-triggered parity: a call whose inner read would block
+        // transfers no bytes, so it must consume no fault draws —
+        // otherwise every spurious wakeup under `EPOLLET` would drift
+        // the schedule away from the threaded path's. Snapshot the RNG
+        // and restore it on `WouldBlock`.
+        let drawn = s.rng.clone();
         if s.rng.chance(s.read.disconnect_p) {
             s.dead = true;
             s.counters.disconnects.inc();
@@ -301,7 +307,15 @@ impl Read for FaultyStream {
             s.counters.delays.inc();
             std::thread::sleep(Duration::from_millis(ms));
         }
-        let n = self.inner.read(buf)?;
+        let n = match self.inner.read(buf) {
+            Ok(n) => n,
+            Err(e) => {
+                if e.kind() == io::ErrorKind::WouldBlock {
+                    s.rng = drawn;
+                }
+                return Err(e);
+            }
+        };
         if n > 0 && s.rng.chance(s.read.bitflip_p) {
             s.counters.bitflips.inc();
             flip_random_bit(&mut buf[..n], &mut s.rng);
@@ -330,6 +344,11 @@ impl Write for FaultyStream {
         if !s.armed.load(Ordering::Relaxed) {
             return self.inner.write(buf);
         }
+        // Same would-block rule as the read side: a blocked clean
+        // write consumes no draws. Fault paths that already pushed
+        // bytes (`write_all` for flip/truncate/duplicate) cannot be
+        // unwound — that is the documented nonblocking-chaos caveat.
+        let drawn = s.rng.clone();
         if s.rng.chance(s.write.disconnect_p) {
             s.dead = true;
             s.counters.disconnects.inc();
@@ -366,7 +385,29 @@ impl Write for FaultyStream {
             self.inner.write_all(buf)?;
             return Ok(buf.len());
         }
-        self.inner.write(buf)
+        match self.inner.write(buf) {
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                s.rng = drawn;
+                Err(e)
+            }
+            other => other,
+        }
+    }
+
+    /// Vectored writes power the event loop's coalesced `writev`
+    /// flush. A clean stream forwards straight to the socket (one real
+    /// `writev` syscall for many frames); a faulty stream routes the
+    /// first non-empty slice through [`FaultyStream::write`] so every
+    /// fault decision still happens per call, in the same draw order
+    /// the threaded path sees.
+    fn write_vectored(&mut self, bufs: &[io::IoSlice<'_>]) -> io::Result<usize> {
+        if self.state.is_none() {
+            return self.inner.write_vectored(bufs);
+        }
+        match bufs.iter().find(|b| !b.is_empty()) {
+            Some(first) => self.write(first),
+            None => Ok(0),
+        }
     }
 
     fn flush(&mut self) -> io::Result<()> {

@@ -95,6 +95,42 @@ pub fn raise_nofile_limit() -> u64 {
     1024
 }
 
+/// Total context switches (voluntary + involuntary) this process has
+/// taken, via `getrusage(RUSAGE_SELF)`. The conn_sweep bench diffs
+/// this across a measurement window: a syscall-lean path shows up as
+/// fewer voluntary switches per op (every blocking `epoll_wait` entry
+/// with nothing ready is one). Best-effort: 0 when the call fails.
+#[cfg(target_os = "linux")]
+pub fn ctx_switches() -> u64 {
+    // glibc's `struct rusage`: two `struct timeval` (ru_utime,
+    // ru_stime = 4 longs) followed by 14 `long` counters; nvcsw and
+    // nivcsw are the last two.
+    #[repr(C)]
+    struct Rusage {
+        times: [i64; 4],
+        slots: [i64; 14],
+    }
+    const RUSAGE_SELF: i32 = 0;
+    extern "C" {
+        fn getrusage(who: i32, usage: *mut Rusage) -> i32;
+    }
+    let mut ru = Rusage { times: [0; 4], slots: [0; 14] };
+    // SAFETY: `ru` is a valid, aligned buffer matching glibc's 64-bit
+    // `struct rusage` layout; getrusage fills it or fails.
+    if unsafe { getrusage(RUSAGE_SELF, &mut ru) } != 0 {
+        return 0;
+    }
+    let nvcsw = ru.slots[12].max(0) as u64;
+    let nivcsw = ru.slots[13].max(0) as u64;
+    nvcsw + nivcsw
+}
+
+/// Non-Linux fallback: no rusage, report 0 (columns become "n/a").
+#[cfg(not(target_os = "linux"))]
+pub fn ctx_switches() -> u64 {
+    0
+}
+
 /// Run `f` repeatedly for ~`target` wall time (after warmup), sampling
 /// per-call latency in batches; prints a criterion-like row.
 pub fn bench<F: FnMut()>(name: &str, mut f: F) -> BenchResult {
@@ -167,5 +203,16 @@ mod tests {
         assert!(r.iters > 0);
         assert!(r.mean_ns >= 0.0);
         assert!(r.p99_ns >= r.p50_ns * 0.5);
+    }
+
+    #[test]
+    #[cfg(target_os = "linux")]
+    fn ctx_switches_counts_and_never_goes_backwards() {
+        let a = ctx_switches();
+        // Sleeping forces at least one voluntary context switch.
+        std::thread::sleep(Duration::from_millis(5));
+        let b = ctx_switches();
+        assert!(b >= a, "rusage counter went backwards: {a} -> {b}");
+        assert!(b > 0, "a process that has slept has switched at least once");
     }
 }

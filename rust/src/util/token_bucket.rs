@@ -103,7 +103,14 @@ impl AtomicTokenBucket {
         }
     }
 
-    fn refill(&self, now_us: u64) {
+    /// Credit tokens for the clock interval [last, `now_us`). The
+    /// event loop's timerfd tick calls this every refill period so the
+    /// per-op admission path never has to read a clock; the threaded
+    /// path calls it inline from `try_consume`. Claiming the interval
+    /// with a CAS makes concurrent callers (several loop threads, or
+    /// tick + inline) safe: the loser forfeits its credit, never
+    /// double-counts it.
+    pub fn refill(&self, now_us: u64) {
         let last = self.last_us.load(Ordering::Acquire);
         if now_us <= last {
             return;
@@ -165,6 +172,53 @@ impl AtomicTokenBucket {
             return None;
         }
         self.refill(now_us);
+        let cur = self.tokens_micro.load(Ordering::Relaxed);
+        if cur >= need {
+            return Some(0);
+        }
+        Some(((need - cur) as u64).div_ceil(self.rate_bps))
+    }
+
+    /// Is the bucket at its burst depth? A full bucket needs no
+    /// refill ticks — the event loop disarms its timer on this, which
+    /// is what makes an idle throttled server zero-syscall.
+    pub fn is_full(&self) -> bool {
+        self.tokens_micro.load(Ordering::Relaxed) >= self.burst_micro
+    }
+
+    /// [`AtomicTokenBucket::try_consume`] minus the inline refill: the
+    /// zero-clock admission path for callers whose refill arrives on a
+    /// timer tick. Worst case it is one tick-interval conservative —
+    /// it refuses what an exact-clock bucket would still admit — and
+    /// it never over-admits.
+    pub fn try_consume_unrefilled(&self, bytes: u64) -> bool {
+        let need = (bytes as i64).saturating_mul(MICRO);
+        let mut cur = self.tokens_micro.load(Ordering::Relaxed);
+        loop {
+            if cur < need {
+                return false;
+            }
+            match self.tokens_micro.compare_exchange_weak(
+                cur,
+                cur - need,
+                Ordering::AcqRel,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return true,
+                Err(c) => cur = c,
+            }
+        }
+    }
+
+    /// [`AtomicTokenBucket::time_until_us`] minus the inline refill,
+    /// for the same tick-refilled callers. The estimate may overshoot
+    /// by up to one tick interval (tokens credited since the last tick
+    /// are not visible yet); retry semantics are unchanged.
+    pub fn time_until_us_unrefilled(&self, bytes: u64) -> Option<u64> {
+        let need = (bytes as i64).saturating_mul(MICRO);
+        if need > self.burst_micro || self.rate_bps == 0 {
+            return None;
+        }
         let cur = self.tokens_micro.load(Ordering::Relaxed);
         if cur >= need {
             return Some(0);
@@ -270,6 +324,28 @@ mod tests {
         // 1 second elapsed: exactly 1 byte should have accumulated.
         assert!(tb.try_consume(now, 1));
         assert!(!tb.try_consume(now, 1));
+    }
+
+    #[test]
+    fn atomic_tick_refill_matches_inline_refill() {
+        // The tick-driven split (explicit refill + unrefilled consume)
+        // admits exactly what the inline path admits when the tick
+        // carries the same clock.
+        let tb = AtomicTokenBucket::new(1000, 500);
+        assert!(tb.is_full());
+        assert!(tb.try_consume_unrefilled(500));
+        assert!(!tb.is_full());
+        assert!(!tb.try_consume_unrefilled(1));
+        // Between ticks the unrefilled path is frozen: no credit yet.
+        assert_eq!(tb.time_until_us_unrefilled(100), Some(100_000));
+        tb.refill(500_000); // the 0.5s tick lands
+        assert!(!tb.try_consume_unrefilled(501));
+        assert!(tb.try_consume_unrefilled(500));
+        // Over-burst requests are refused outright, exactly like
+        // `time_until_us`.
+        assert_eq!(tb.time_until_us_unrefilled(5000), None);
+        tb.refill(10_000_000);
+        assert!(tb.is_full());
     }
 
     #[test]

@@ -246,6 +246,48 @@ Metric sets lead with `METRIC_COUNTER` (1).
     );
 }
 
+// ----------------------------------------------------- rule: syscall-site
+
+#[test]
+fn syscall_site_pass_in_allowlisted_file_and_with_marker() {
+    let src = r#"
+pub fn raise_nofile_limit() -> u64 {
+    extern "C" {
+        fn getrlimit(resource: i32, rlim: *mut Rlimit) -> i32;
+    }
+    0
+}
+"#;
+    let diags = lint_source("src/util/bench.rs", src, None);
+    assert!(diags.is_empty(), "{diags:?}");
+    let marked = r#"
+// lint: allow-syscall — one-off FFI probe, justified in DESIGN.md
+extern "C" {
+    fn getpid() -> i32;
+}
+"#;
+    let diags = lint_source("src/figures/probe.rs", marked, None);
+    assert!(diags.is_empty(), "{diags:?}");
+}
+
+#[test]
+fn syscall_site_fail_outside_the_allowlist() {
+    // A market module sprouting its own libc binding would make the
+    // loop's syscalls-per-op estimate a lie; the rule names the rule.
+    let src = r#"
+fn now_ns() -> u64 {
+    extern "C" {
+        fn clock_gettime(clk: i32, tp: *mut Timespec) -> i32;
+    }
+    0
+}
+"#;
+    let diags = lint_source("src/market/lease.rs", src, None);
+    assert_eq!(rules(&diags), ["syscall-site"], "{diags:?}");
+    assert_eq!(diags[0].line, 3, "anchors the extern declaration");
+    assert!(diags[0].msg.contains("allow-syscall"), "{}", diags[0].msg);
+}
+
 // ------------------------------------------------- tokenizer adversaria
 
 #[test]
