@@ -344,10 +344,15 @@ impl Write for FaultyStream {
         if !s.armed.load(Ordering::Relaxed) {
             return self.inner.write(buf);
         }
-        // Same would-block rule as the read side: a blocked clean
-        // write consumes no draws. Fault paths that already pushed
-        // bytes (`write_all` for flip/truncate/duplicate) cannot be
-        // unwound — that is the documented nonblocking-chaos caveat.
+        // Same would-block rule as the read side: a call that
+        // transfers no bytes consumes no draws. Every fault path
+        // below issues exactly one bounded write (partial-accept
+        // semantics, like the clean path), so a full send buffer
+        // surfaces as an ordinary `WouldBlock` with the RNG restored
+        // — never as a mid-fault `write_all` error that would close
+        // the connection and desync the seeded schedule on a
+        // nonblocking socket. Counters bump only once bytes actually
+        // moved, so a blocked-then-retried fault is counted once.
         let drawn = s.rng.clone();
         if s.rng.chance(s.write.disconnect_p) {
             s.dead = true;
@@ -366,24 +371,59 @@ impl Write for FaultyStream {
             return Ok(buf.len());
         }
         if !buf.is_empty() && s.rng.chance(s.write.bitflip_p) {
-            s.counters.bitflips.inc();
             let mut copy = buf.to_vec();
             flip_random_bit(&mut copy, &mut s.rng);
-            self.inner.write_all(&copy)?;
-            return Ok(buf.len());
+            // Report the true count: the caller resumes from byte `n`
+            // of its own clean buffer, so a short write stays in sync
+            // — the flip lands only if the flipped byte was among the
+            // `n` accepted (at worst the fault fails to stick).
+            return match self.inner.write(&copy) {
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                    s.rng = drawn;
+                    Err(e)
+                }
+                Ok(n) => {
+                    s.counters.bitflips.inc();
+                    Ok(n)
+                }
+                other => other,
+            };
         }
         if buf.len() > 1 && s.rng.chance(s.write.truncate_p) {
-            s.counters.truncates.inc();
             let keep = 1 + s.rng.below(buf.len() as u64 - 1) as usize;
-            self.inner.write_all(&buf[..keep])?;
-            // Report full success: the tail is silently lost.
-            return Ok(buf.len());
+            // Report full success: the dropped tail — plus whatever
+            // part of the kept prefix the socket declined — is
+            // silently lost, which is exactly what this fault means.
+            return match self.inner.write(&buf[..keep]) {
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                    s.rng = drawn;
+                    Err(e)
+                }
+                Ok(_) => {
+                    s.counters.truncates.inc();
+                    Ok(buf.len())
+                }
+                other => other,
+            };
         }
         if !buf.is_empty() && s.rng.chance(s.write.duplicate_p) {
-            s.counters.duplicates.inc();
-            self.inner.write_all(buf)?;
-            self.inner.write_all(buf)?;
-            return Ok(buf.len());
+            // Both copies in one bounded vectored write. Reporting
+            // `min(n, len)` keeps the caller's cursor honest: at most
+            // the whole payload is acknowledged, and any accepted
+            // bytes beyond it are the injected duplicate (possibly a
+            // partial one — a smaller fault, not a desync).
+            let iov = [io::IoSlice::new(buf), io::IoSlice::new(buf)];
+            return match self.inner.write_vectored(&iov) {
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                    s.rng = drawn;
+                    Err(e)
+                }
+                Ok(n) => {
+                    s.counters.duplicates.inc();
+                    Ok(n.min(buf.len()))
+                }
+                other => other,
+            };
         }
         match self.inner.write(buf) {
             Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
@@ -633,6 +673,67 @@ mod tests {
         // An independent plan (its own seed/latch) still announces.
         let other = FaultPlan::symmetric(6, FaultSpec::default());
         assert!(other.log_banner("producer-store"));
+    }
+
+    /// A chaos write fault hitting a full send buffer on a
+    /// nonblocking socket must surface `WouldBlock` with the RNG
+    /// restored and the fault uncounted — not a mid-fault `write_all`
+    /// error that closes the connection and desyncs the seeded
+    /// schedule (the event loop retries blocked writes; it cannot
+    /// retry a dead connection).
+    #[test]
+    fn write_faults_surface_would_block_on_full_send_buffer() {
+        let plan =
+            FaultPlan::symmetric(11, FaultSpec { bitflip_p: 1.0, ..Default::default() });
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let sock = TcpStream::connect(addr).unwrap();
+        let (mut peer, _) = listener.accept().unwrap();
+        sock.set_nonblocking(true).unwrap();
+        peer.set_nonblocking(true).unwrap();
+        let mut fs = FaultyStream::new(sock, Some(&plan), 0);
+        // With bitflip_p = 1 every write is a fault-path write; the
+        // peer is not reading, so the send buffer must fill.
+        let chunk = [0x77u8; 64 << 10];
+        let mut oks = 0u64;
+        loop {
+            match fs.write(&chunk) {
+                Ok(n) => {
+                    assert!(n <= chunk.len());
+                    oks += 1;
+                    assert!(oks < 100_000, "send buffer never filled");
+                }
+                Err(e) => {
+                    assert_eq!(
+                        e.kind(),
+                        io::ErrorKind::WouldBlock,
+                        "fault path turned a full buffer into: {e}"
+                    );
+                    break;
+                }
+            }
+        }
+        // The blocked attempt counted no fault...
+        assert_eq!(plan.counters().bitflips.get(), oks);
+        // ...and did not kill the connection: once the peer drains,
+        // the same stream writes again and the schedule continues.
+        let mut sink = vec![0u8; 256 << 10];
+        let mut recovered = false;
+        for _ in 0..1_000 {
+            while matches!(peer.read(&mut sink), Ok(n) if n > 0) {}
+            match fs.write(&chunk) {
+                Ok(_) => {
+                    recovered = true;
+                    break;
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+                Err(e) => panic!("connection died after a blocked fault: {e}"),
+            }
+        }
+        assert!(recovered, "writer never recovered after the peer drained");
+        assert_eq!(plan.counters().bitflips.get(), oks + 1);
     }
 
     #[test]
